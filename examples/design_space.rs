@@ -1,0 +1,64 @@
+//! Design-space exploration: every buildable architecture (paper set +
+//! ablations) × vector widths, reporting the area / latency / energy
+//! Pareto frontier — the §I tradeoff ("high-speed array multipliers
+//! demand significant power, whereas sequential designs offer efficiency
+//! at the cost of throughput") made quantitative.
+//!
+//!     cargo run --release --example design_space
+
+use nibblemul::fabric::evaluate_arch;
+use nibblemul::multipliers::Arch;
+use nibblemul::tech::{TechLibrary, CLOCK_HZ};
+
+fn main() -> anyhow::Result<()> {
+    let lib = TechLibrary::hpc28();
+    println!("== design space: all architectures x widths ==\n");
+    println!(
+        "{:<18} {:>3} {:>10} {:>8} {:>10} {:>11} {:>11} {:>7}",
+        "arch", "N", "area um2", "cp ps", "cycles/op", "Mmul/s", "E/op fJ", "pareto"
+    );
+    let mut points = Vec::new();
+    for arch in Arch::ALL {
+        for n in [4usize, 8, 16] {
+            let e = evaluate_arch(arch, n, &lib, 12, 11)?;
+            let throughput =
+                n as f64 / (e.cycles_per_op as f64 / CLOCK_HZ) / 1e6;
+            let energy = e.power.total_mw() * 1e-3
+                * (e.cycles_per_op as f64 / CLOCK_HZ)
+                * 1e15;
+            points.push((arch, n, e.area_um2, e.critical_path_ps,
+                         e.cycles_per_op, throughput, energy));
+        }
+    }
+    // Pareto over (area, energy/multiply, 1/throughput) at each width.
+    for &(arch, n, area, cp, cyc, thr, energy) in &points {
+        let e_per_mul = energy / n as f64;
+        let dominated = points.iter().any(|&(a2, n2, ar2, _, _, t2, en2)| {
+            let e2 = en2 / (n2 as f64);
+            n2 == n
+                && a2 != arch
+                && ar2 <= area
+                && e2 <= e_per_mul
+                && t2 >= thr
+                && (ar2 < area || e2 < e_per_mul || t2 > thr)
+        });
+        println!(
+            "{:<18} {:>3} {:>10.1} {:>8.0} {:>10} {:>11.1} {:>11.0} {:>7}",
+            arch.name(),
+            n,
+            area,
+            cp,
+            cyc,
+            thr,
+            energy,
+            if dominated { "" } else { "*" }
+        );
+    }
+    println!(
+        "\n* = Pareto-optimal at its width over (area, energy/multiply, \
+         throughput).\nThe nibble design should hold the low-area/low-energy \
+         end, the combinational family the high-throughput end — the \
+         paper's latency-hardware tradeoff (§I)."
+    );
+    Ok(())
+}

@@ -1,0 +1,178 @@
+//! END-TO-END driver (DESIGN.md experiment E2E): serve INT8 MLP inference
+//! through the full three-layer stack and account the hardware cost on
+//! the simulated nibble fabric.
+//!
+//! The model was trained at build time (python/compile/aot.py — loss
+//! curve in artifacts/training_log.txt), post-training-quantized to
+//! asymmetric u8, and lowered through the Pallas nibble kernel to HLO.
+//! Here we:
+//!
+//!  1. execute it via PJRT (the deployment path, Python-free),
+//!  2. replay it bit-exactly in Rust and check logits parity,
+//!  3. run every u8×u8 product on the gate-level nibble fabric and
+//!     report cycles + energy per inference (the paper's figures of
+//!     merit applied to the motivating workload),
+//!  4. serve the same multiplies through the coordinator.
+//!
+//! Requires `make artifacts`.
+//!
+//!     cargo run --release --example int8_inference
+
+use nibblemul::coordinator::{Backend, Batch, LaneTag, SimBackend};
+use nibblemul::model::quant::QuantMlp;
+use nibblemul::multipliers::Arch;
+use nibblemul::runtime::{ArtifactSet, Runtime};
+use nibblemul::util::Stopwatch;
+
+fn main() -> anyhow::Result<()> {
+    let set = ArtifactSet::default_dir();
+    anyhow::ensure!(set.available(), "run `make artifacts` first");
+    let meta = set.meta()?;
+    let mlp = set.weights()?;
+    let ts = set.testset()?;
+    println!("== end-to-end INT8 inference (nibble multiplier stack) ==");
+    println!(
+        "model: layers {}, {} multiplies/inference, build-time float acc {}",
+        meta.get("layer_sizes").unwrap_or("?"),
+        mlp.mults_per_inference(),
+        meta.get("float_test_acc").unwrap_or("?")
+    );
+    if let Ok(log) = std::fs::read_to_string("artifacts/training_log.txt") {
+        let lines: Vec<&str> = log.lines().collect();
+        println!("build-time training (first/last of {} entries):", lines.len());
+        if let (Some(f), Some(l)) = (lines.first(), lines.last()) {
+            println!("  {f}\n  {l}");
+        }
+    }
+
+    let n = 64.min(ts.x.len());
+
+    // --- 1. PJRT deployment path -------------------------------------
+    let mut rt = Runtime::cpu(set.clone())?;
+    let dim = ts.x[0].len();
+    let sw = Stopwatch::start();
+    let mut pjrt_logits: Vec<Vec<i32>> = Vec::new();
+    for chunk in ts.x[..n].chunks(16) {
+        let mut x: Vec<i32> = chunk.iter().flatten().copied().collect();
+        x.resize(16 * dim, 0);
+        let flat = rt.mlp_int8(&x, 16, dim as i64)?;
+        for row in flat.chunks(10).take(chunk.len()) {
+            pjrt_logits.push(row.to_vec());
+        }
+    }
+    let pjrt_time = sw.elapsed_secs();
+
+    // --- 2. bit-exact Rust replay parity ------------------------------
+    let replay = mlp.forward(&ts.x[..n].to_vec(), |a, b| a as u32 * b as u32);
+    let parity = pjrt_logits
+        .iter()
+        .zip(&replay)
+        .filter(|(a, b)| a == b)
+        .count();
+    println!(
+        "\nPJRT vs Rust replay: {parity}/{n} logit rows bit-identical"
+    );
+    anyhow::ensure!(parity == n, "deployment path diverged from model");
+
+    let preds = QuantMlp::classify(&pjrt_logits);
+    let correct = preds
+        .iter()
+        .zip(&ts.y[..n])
+        .filter(|(p, y)| p == y)
+        .count();
+    println!(
+        "accuracy: {}/{} = {:.2}%  ({:.1} inf/s via PJRT)",
+        correct,
+        n,
+        100.0 * correct as f64 / n as f64,
+        n as f64 / pjrt_time
+    );
+
+    // --- 3. hardware accounting on the simulated fabric ---------------
+    println!("\n== gate-level nibble fabric accounting (16-lane) ==");
+    let n_hw = 4usize; // gate-level sim is ~10^6 slower than silicon
+    let mut be = SimBackend::new(Arch::Nibble, 16)?;
+    let hw_logits = forward_on_fabric(&mlp, &ts.x[..n_hw], &mut be)?;
+    for (i, row) in hw_logits.iter().enumerate() {
+        anyhow::ensure!(
+            row == &replay[i],
+            "fabric inference {i} diverged from model"
+        );
+    }
+    let cyc_per_inf = be.cycles() / n_hw as u64;
+    let e_per_inf_nj = be.energy_fj() / 1e6 / n_hw as f64;
+    println!(
+        "verified {n_hw} inferences bit-exactly on the simulated fabric"
+    );
+    println!(
+        "cost: {} cycles/inference ({:.1} us @ 1 GHz), {:.2} nJ/inference",
+        cyc_per_inf,
+        cyc_per_inf as f64 / 1000.0,
+        e_per_inf_nj
+    );
+    println!(
+        "  ({} multiplies x 2 cycles / 16 lanes = {} fabric cycles minimum)",
+        mlp.mults_per_inference(),
+        mlp.mults_per_inference() * 2 / 16
+    );
+    Ok(())
+}
+
+/// Route every weight-row × activation product through the fabric
+/// (vector = 16-wide weight chunk, broadcast = activation), then apply the
+/// zero-point algebra — mirrors `QuantLayer::accumulate` bit-exactly.
+fn forward_on_fabric(
+    mlp: &QuantMlp,
+    xs: &[Vec<i32>],
+    be: &mut SimBackend,
+) -> anyhow::Result<Vec<Vec<i32>>> {
+    let mut out = Vec::with_capacity(xs.len());
+    for x in xs {
+        let mut h: Vec<i32> = x.clone();
+        for (li, layer) in mlp.layers.iter().enumerate() {
+            let mut products = vec![0u32; layer.n_in * layer.n_out];
+            for (j, &xj) in h.iter().enumerate() {
+                let row =
+                    &layer.w_q[j * layer.n_out..(j + 1) * layer.n_out];
+                for start in (0..layer.n_out).step_by(16) {
+                    let end = (start + 16).min(layer.n_out);
+                    let a: Vec<u16> =
+                        row[start..end].iter().map(|&w| w as u16).collect();
+                    let lanes: Vec<LaneTag> = (0..a.len())
+                        .map(|i| LaneTag { job: 0, offset: i })
+                        .collect();
+                    let p = be.execute(&Batch {
+                        a,
+                        b: xj as u16,
+                        lanes,
+                    })?;
+                    for (k, v) in p.into_iter().enumerate() {
+                        products[j * layer.n_out + start + k] = v;
+                    }
+                }
+            }
+            let sum_x: i64 = h.iter().map(|&v| v as i64).sum();
+            let mut acc = vec![0i32; layer.n_out];
+            for (o, acc_o) in acc.iter_mut().enumerate() {
+                let mut s: i64 = 0;
+                let mut sum_w: i64 = 0;
+                for j in 0..layer.n_in {
+                    s += products[j * layer.n_out + o] as i64;
+                    sum_w += layer.w_q[j * layer.n_out + o] as i64;
+                }
+                *acc_o = (s - layer.w_zp as i64 * sum_x
+                    - layer.in_zp as i64 * sum_w
+                    + layer.n_in as i64
+                        * layer.in_zp as i64
+                        * layer.w_zp as i64
+                    + layer.bias_i32[o] as i64) as i32;
+            }
+            if li + 1 < mlp.layers.len() {
+                h = layer.requant(&acc);
+            } else {
+                out.push(acc);
+            }
+        }
+    }
+    Ok(out)
+}

@@ -1,0 +1,22 @@
+//! Fig. 3 reproduction as a runnable example: dump VCD waveforms of the
+//! 8-operand vector-scalar multiplication on both the nibble multiplier
+//! (two-cycle cadence) and the LUT-based array multiplier (single step),
+//! plus the printed timeline.
+//!
+//!     cargo run --release --example waveforms [-- out_dir]
+
+use nibblemul::report::fig3_run;
+
+fn main() -> anyhow::Result<()> {
+    let out_dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    std::fs::create_dir_all(&out_dir)?;
+    let a = [12u16, 34, 56, 78, 90, 123, 200, 255];
+    let res = fig3_run(&a, 173)?;
+    print!("{}", res.text);
+    let pa = format!("{out_dir}/fig3a_nibble.vcd");
+    let pb = format!("{out_dir}/fig3b_lut.vcd");
+    std::fs::write(&pa, res.nibble_vcd)?;
+    std::fs::write(&pb, res.lut_vcd)?;
+    println!("VCD waveforms written to {pa} and {pb} (open in GTKWave)");
+    Ok(())
+}

@@ -1,0 +1,190 @@
+"""AOT compile path: lower L2/L1 to HLO *text* artifacts for the Rust runtime.
+
+Run once via `make artifacts` (python -m compile.aot --out-dir ../artifacts).
+Python never runs at serving time; the Rust binary is self-contained after
+this step.
+
+Interchange format is HLO text, NOT `lowered.compile()`/serialized protos:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the xla
+crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Emitted artifacts
+-----------------
+  nibble_mul_{4,8,16}.hlo.txt   Algorithm 2 vector × broadcast-scalar, int32
+  lut_mul_16.hlo.txt            Algorithm 1 vector × broadcast-scalar, int32
+  mlp_int8.hlo.txt              quantized MLP fwd (nibble-kernel products),
+                                weights baked in as constants
+  weights.nmd                   quantized layer data for the Rust gate-level
+                                fabric replay (text, custom .nmd format)
+  testset.nmd                   quantized held-out inputs + labels
+  training_log.txt              build-time loss curve (E2E requirement)
+  meta.nmd                      provenance: sizes, accuracy, seeds
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as model_lib
+from .kernels import lut as lut_kernel
+from .kernels import nibble as nibble_kernel
+
+VECTOR_WIDTHS = (4, 8, 16)
+MLP_BATCH = 16
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _write(path: str, text: str) -> None:
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {path} ({len(text)} bytes)")
+
+
+def lower_kernels(out_dir: str) -> None:
+    for n in VECTOR_WIDTHS:
+        a_spec = jax.ShapeDtypeStruct((n,), jnp.int32)
+        b_spec = jax.ShapeDtypeStruct((1,), jnp.int32)
+        lowered = jax.jit(
+            lambda a, b: (nibble_kernel.nibble_mul(a, b),)
+        ).lower(a_spec, b_spec)
+        _write(
+            os.path.join(out_dir, f"nibble_mul_{n}.hlo.txt"),
+            to_hlo_text(lowered),
+        )
+    a_spec = jax.ShapeDtypeStruct((16,), jnp.int32)
+    b_spec = jax.ShapeDtypeStruct((1,), jnp.int32)
+    lowered = jax.jit(lambda a, b: (lut_kernel.lut_mul(a, b),)).lower(
+        a_spec, b_spec
+    )
+    _write(os.path.join(out_dir, "lut_mul_16.hlo.txt"), to_hlo_text(lowered))
+
+
+def lower_mlp(out_dir: str, qmlp) -> None:
+    """Lower the int8 forward pass with weights as PARAMETERS.
+
+    Multi-dimensional int32 constants in HLO text mis-parse in the Rust
+    runtime's xla_extension 0.5.1 (found by bisection: constant-dot wrong,
+    parameter-dot exact), so every weight/bias array becomes an explicit
+    parameter; the Rust side feeds them from weights.nmd. Parameter order:
+    x, then (w, bias) per layer.
+    """
+    x_spec = jax.ShapeDtypeStruct(
+        (MLP_BATCH, model_lib.LAYER_SIZES[0]), jnp.int32
+    )
+    wb_specs = []
+    for ly in qmlp.layers:
+        wb_specs.append(jax.ShapeDtypeStruct(ly.w_q.shape, jnp.int32))
+        wb_specs.append(jax.ShapeDtypeStruct(ly.bias_i32.shape, jnp.int32))
+
+    def fwd(x, *flat_wb):
+        weights = [
+            (flat_wb[2 * i], flat_wb[2 * i + 1])
+            for i in range(len(qmlp.layers))
+        ]
+        return (model_lib.mlp_int8_fwd(qmlp, x, weights=weights),)
+
+    lowered = jax.jit(fwd).lower(x_spec, *wb_specs)
+    _write(os.path.join(out_dir, "mlp_int8.hlo.txt"), to_hlo_text(lowered))
+
+
+def _fmt_ints(a: np.ndarray) -> str:
+    return " ".join(str(int(v)) for v in np.asarray(a).ravel())
+
+
+def dump_weights(out_dir: str, qmlp) -> None:
+    """Custom .nmd text format (the Rust side has no serde; parser in
+    rust/src/workload/nmd.rs)."""
+    lines = [f"layers {len(qmlp.layers)}"]
+    for i, ly in enumerate(qmlp.layers):
+        n_in, n_out = ly.w_q.shape
+        lines += [
+            f"layer {i}",
+            f"shape {n_in} {n_out}",
+            f"w_zp {ly.w_zp}",
+            f"in_zp {ly.in_zp}",
+            f"out_zp {ly.out_zp}",
+            f"m {ly.m}",
+            f"shift {ly.shift}",
+            f"relu {int(ly.relu)}",
+            f"bias {_fmt_ints(ly.bias_i32)}",
+            f"w {_fmt_ints(ly.w_q)}",
+        ]
+    lines += [
+        f"in_scale {qmlp.in_scale!r}",
+        f"in_zp {qmlp.in_zp}",
+    ]
+    _write(os.path.join(out_dir, "weights.nmd"), "\n".join(lines) + "\n")
+
+
+def dump_testset(out_dir: str, qmlp, x_te, y_te, limit: int = 256) -> None:
+    x_q = np.asarray(model_lib.quantize_input(x_te[:limit], qmlp))
+    y = np.asarray(y_te[:limit])
+    lines = [
+        f"n {x_q.shape[0]}",
+        f"dim {x_q.shape[1]}",
+        "x " + _fmt_ints(x_q),
+        "y " + _fmt_ints(y),
+    ]
+    _write(os.path.join(out_dir, "testset.nmd"), "\n".join(lines) + "\n")
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument("--steps", type=int, default=400)
+    parser.add_argument("--seed", type=int, default=0)
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    print("== lowering L1 kernels ==")
+    lower_kernels(args.out_dir)
+
+    print("== build-time training (L2) ==")
+    params, log, test_acc, (x_te, y_te) = model_lib.train_mlp(
+        steps=args.steps, seed=args.seed
+    )
+    _write(
+        os.path.join(args.out_dir, "training_log.txt"), "\n".join(log) + "\n"
+    )
+    print(f"float test accuracy: {test_acc:.4f}")
+
+    qmlp = model_lib.quantize_mlp(params, x_te)
+    x_q = model_lib.quantize_input(x_te, qmlp)
+    logits_q = model_lib.mlp_int8_fwd(qmlp, x_q, exact=True)
+    q_acc = float(jnp.mean(jnp.argmax(logits_q, axis=1) == y_te))
+    print(f"int8  test accuracy: {q_acc:.4f}")
+
+    print("== lowering int8 MLP (L2 over L1 nibble kernel) ==")
+    lower_mlp(args.out_dir, qmlp)
+    dump_weights(args.out_dir, qmlp)
+    dump_testset(args.out_dir, qmlp, x_te, y_te)
+
+    meta = [
+        f"layer_sizes {' '.join(map(str, model_lib.LAYER_SIZES))}",
+        f"mlp_batch {MLP_BATCH}",
+        f"train_steps {args.steps}",
+        f"seed {args.seed}",
+        f"float_test_acc {test_acc!r}",
+        f"int8_test_acc {q_acc!r}",
+        f"vector_widths {' '.join(map(str, VECTOR_WIDTHS))}",
+    ]
+    _write(os.path.join(args.out_dir, "meta.nmd"), "\n".join(meta) + "\n")
+
+
+if __name__ == "__main__":
+    main()

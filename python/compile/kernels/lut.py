@@ -1,0 +1,117 @@
+"""L1 Pallas kernel: LUT-based array multiplier (paper Algorithm 1).
+
+The paper's hex-string LUT (Fig. 1a) stores, for each value of a B nibble,
+a 128-bit "result string" whose 8-bit segment number k (1-indexed) encodes
+the product k * b_nib.  Algorithm 1 line 5 selects two result strings (one
+per B nibble); lines 6-13 slice segments using the A nibbles as deterministic
+indices; lines 14-15 align with fixed shifts and accumulate.
+
+Numerically the hex-string + slice mechanism is a (16 x 16) product table
+lookup: segment A_i of ResString(B_j) == table[B_j, A_i] == A_i * B_j (with
+A_i == 0 handled by the algorithm's explicit zero-initialisation, which the
+table's zero row/column reproduces).  We materialise the LUT as that constant
+table so the lowered HLO carries the same precomputed content the RTL
+synthesises into constant logic.
+
+This file stays in lockstep with `rust/src/multipliers/lut_array.rs` (the
+gate-level LM) and `rust/src/model/lut.rs` (the word-level model).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+NIBBLE_BITS = 4
+
+# The hex-string LUT flattened to segments: HEX_LUT[b_nib, a_nib] is the
+# 8-bit segment of ResString(b_nib) selected by a_nib (Algorithm 1 lines
+# 6-13).  Row 0 / column 0 are zero, matching the P*_Out <- 0 defaults for
+# the A_i == 0 guard in the algorithm.
+HEX_LUT = np.array(
+    [[(a * b) & 0xFF for a in range(16)] for b in range(16)], dtype=np.int32
+)
+
+
+def result_string(b_nib: int) -> int:
+    """The literal 128-bit hex string stored for one LUT entry (Fig. 1a).
+
+    Segment k (1-indexed, bits [8k-8 : 8k-1]) holds (k * b_nib) & 0xFF.
+    Exposed for tests and for documentation parity with the paper's figure.
+    """
+    s = 0
+    for k in range(1, 17):
+        s |= ((k * b_nib) & 0xFF) << (8 * (k - 1))
+    return s
+
+
+def _lut_mul_kernel(a_ref, b_ref, o_ref):
+    """Pallas kernel body for Algorithm 1 specialised to 8-bit A operands.
+
+    The paper's LM consumes a 16-bit A as four nibbles producing two outputs;
+    the vector evaluation (and our fabric) processes independent 8-bit
+    elements, i.e. the two-nibble slice of Algorithm 1 lines 6-9 / line 14.
+
+    Selection is expressed as one-hot gating over *scalar* LUT constants —
+    the mux semantics of the hardware LM (Fig. 1b). Two alternative
+    formulations fail on the deployment path and are deliberately avoided:
+    jnp gathers and array-constant kernel operands both lower to HLO
+    (gather / pallas grid while-loop) that the Rust runtime's
+    xla_extension 0.5.1 text path executes incorrectly; scalar selects
+    round-trip exactly (see DESIGN.md §2 and aot_recipe notes).
+    """
+    a = a_ref[...].astype(jnp.int32)
+    b = b_ref[0].astype(jnp.int32)
+    a0 = a & 0xF
+    a1 = (a >> NIBBLE_BITS) & 0xF
+    b0 = b & 0xF
+    b1 = (b >> NIBBLE_BITS) & 0xF
+
+    def res_segments(b_nib):
+        """ResString(b_nib) as 16 traced scalar segments (line 5)."""
+        segs = []
+        for k in range(16):
+            v = jnp.int32(0)
+            for entry in range(16):
+                const = int(HEX_LUT[entry, k])
+                if const != 0:
+                    v = v + (b_nib == entry).astype(jnp.int32) * const
+            segs.append(v)
+        return segs
+
+    res0 = res_segments(b0)
+    res1 = res_segments(b1)
+
+    def segment(res, nib_vec):
+        """Per-element segment extraction (lines 6-13): 16-way one-hot."""
+        out = jnp.zeros_like(nib_vec)
+        for k in range(1, 16):  # k == 0 is the zero default
+            out = out + (nib_vec == k).astype(jnp.int32) * res[k]
+        return out
+
+    p0 = segment(res0, a0)  # A low  nibble slice of ResString0
+    p2 = segment(res1, a0)  # A low  nibble slice of ResString1
+    p1 = segment(res0, a1)  # A high nibble slice of ResString0
+    p3 = segment(res1, a1)  # A high nibble slice of ResString1
+    # Fixed alignment + accumulation (line 14).
+    o_ref[...] = p0 + (p2 << 4) + (p1 << 4) + (p3 << 8)
+
+
+@jax.jit
+def lut_mul(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Vector × broadcast-scalar product via the LUT-based array multiplier.
+
+    Args:
+      a: int32[N] vector operand, elements in [0, 255].
+      b: int32[1] broadcast operand in [0, 255].
+
+    Returns:
+      int32[N] exact products a * b.
+    """
+    return pl.pallas_call(
+        _lut_mul_kernel,
+        out_shape=jax.ShapeDtypeStruct(a.shape, jnp.int32),
+        interpret=True,
+    )(a.astype(jnp.int32), b.astype(jnp.int32).reshape(1))

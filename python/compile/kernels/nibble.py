@@ -1,0 +1,174 @@
+"""L1 Pallas kernel: precompute-reuse nibble multiplier (paper Algorithm 2).
+
+The paper's Precompute Logic (PL, Fig. 2b) maps each 4-bit nibble of the
+broadcast operand B to a structured shift-and-add composition of the vector
+element A.  With an adds-only composition (the paper: "fixed shifts and
+limited additions"), the 16 configurations are exactly the binary-weighted
+gated sums
+
+    PL(A, nib) = sum_{k=0..3} bit_k(nib) * (A << k)
+
+i.e. hardware = four shifted copies of A (free wiring), one AND-gate row per
+term, and a 3-adder tree.  The full product of an 8-bit broadcast operand is
+two PL passes with a fixed 4-bit alignment shift (Algorithm 2 lines 5-9):
+
+    R = PL(A, B[3:0]) + (PL(A, B[7:4]) << 4)
+
+This file implements that bit-exactly as a Pallas kernel (interpret=True so
+the lowered HLO runs on any PJRT backend, including the Rust CPU client) and
+must stay in lockstep with the Rust netlist generator
+`rust/src/multipliers/nibble.rs` and the word-level model
+`rust/src/model/nibble.rs`.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the PL select is a
+vectorized predicated shift-add over VPU lanes — no MXU multiply is issued
+for the operand product, which is the paper's core insight carried to TPU.
+The broadcast-B nibble decode is computed once per tile, mirroring the
+paper's shared-control amortization across vector lanes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Number of nibbles in the broadcast operand (8-bit B -> 2 nibbles).
+B_NIBBLES = 2
+NIBBLE_BITS = 4
+
+# Adds-only PL composition table, indexed by nibble value: list of shift
+# amounts whose gated sum reconstructs nib * A.  Kept explicit (rather than
+# implied by the binary expansion) because the CSD ablation variant below
+# uses a different table shape.
+PL_ADD_TABLE: tuple[tuple[int, ...], ...] = tuple(
+    tuple(k for k in range(4) if (nib >> k) & 1) for nib in range(16)
+)
+
+# CSD-style ablation table: (shift, sign) terms, subtraction allowed.
+# e.g. 7 = 8 - 1, 15 = 16 - 1.  At most 2 terms for every nibble value.
+PL_CSD_TABLE: tuple[tuple[tuple[int, int], ...], ...] = (
+    (),                        # 0
+    (((0, +1),)),              # 1
+    (((1, +1),)),              # 2
+    ((1, +1), (0, +1)),        # 3 = 2+1
+    (((2, +1),)),              # 4
+    ((2, +1), (0, +1)),        # 5 = 4+1
+    ((2, +1), (1, +1)),        # 6 = 4+2
+    ((3, +1), (0, -1)),        # 7 = 8-1
+    (((3, +1),)),              # 8
+    ((3, +1), (0, +1)),        # 9 = 8+1
+    ((3, +1), (1, +1)),        # 10 = 8+2
+    ((3, +1), (1, +1), (0, +1)),  # 11 = 8+2+1 (no 2-term CSD)
+    ((3, +1), (2, +1)),        # 12 = 8+4
+    ((4, +1), (1, -1), (0, -1)),  # 13 = 16-2-1
+    ((4, +1), (1, -1)),        # 14 = 16-2
+    ((4, +1), (0, -1)),        # 15 = 16-1
+)
+
+
+def pl_compose(a: jax.Array, nib: jax.Array) -> jax.Array:
+    """Precompute Logic: gated shift-add composition, PL(A, nib) == A * nib.
+
+    `a` is the vector element(s) (any shape, int32, values 0..255); `nib` is
+    the selecting nibble (broadcastable, int32, values 0..15).  All sixteen
+    paper configurations collapse to the four gated terms below.
+    """
+    partial = jnp.zeros(jnp.broadcast_shapes(a.shape, nib.shape), jnp.int32)
+    for k in range(NIBBLE_BITS):
+        gate = (nib >> k) & 1
+        partial = partial + gate * (a << k)
+    return partial
+
+
+def pl_compose_csd(a: jax.Array, nib: jax.Array) -> jax.Array:
+    """Ablation variant of the PL: canonical-signed-digit composition."""
+    shape = jnp.broadcast_shapes(a.shape, nib.shape)
+    branches = []
+    for terms in PL_CSD_TABLE:
+        val = jnp.zeros(shape, jnp.int32)
+        for shift, sign in terms:
+            val = val + sign * (a << shift)
+        branches.append(val)
+    stacked = jnp.stack(branches)  # (16, *shape)
+    return jnp.take_along_axis(
+        stacked, jnp.broadcast_to(nib, shape)[None].astype(jnp.int32), axis=0
+    )[0]
+
+
+def _nibble_mul_kernel(a_ref, b_ref, o_ref, *, compose):
+    """Pallas kernel body for Algorithm 2 (both nibble iterations unrolled).
+
+    Mirrors Algorithm 2 lines 3-9: Acc <- 0; for each B nibble, generate the
+    PL partial and accumulate with the fixed alignment shift.
+    """
+    a = a_ref[...].astype(jnp.int32)
+    b = b_ref[0].astype(jnp.int32)
+    acc = jnp.zeros_like(a)
+    for nib_idx in range(B_NIBBLES):
+        nib = (b >> (NIBBLE_BITS * nib_idx)) & 0xF
+        partial = compose(a, nib)
+        acc = acc + (partial << (NIBBLE_BITS * nib_idx))
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("csd",))
+def nibble_mul(a: jax.Array, b: jax.Array, *, csd: bool = False) -> jax.Array:
+    """Vector × broadcast-scalar product via the nibble multiplier.
+
+    Args:
+      a: int32[N] vector operand, each element in [0, 255].
+      b: int32[1] broadcast operand in [0, 255].
+      csd: use the CSD ablation PL instead of the adds-only PL.
+
+    Returns:
+      int32[N] exact products a * b (each fits in 16 bits).
+    """
+    compose = pl_compose_csd if csd else pl_compose
+    return pl.pallas_call(
+        functools.partial(_nibble_mul_kernel, compose=compose),
+        out_shape=jax.ShapeDtypeStruct(a.shape, jnp.int32),
+        interpret=True,
+    )(a.astype(jnp.int32), b.astype(jnp.int32).reshape(1))
+
+
+def _nibble_matmul_kernel(x_ref, w_ref, o_ref):
+    """u8 GEMM with every element product formed by the nibble PL.
+
+    x: (B, K) activations, w: (K, M) weights, o: (B, M) int32 accumulators.
+    Each activation x[b, k] plays the paper's broadcast operand B against the
+    weight column vector w[k, :] (the vector operand A) — the exact
+    vector × broadcast-scalar reuse pattern of Fig. 2(a).
+    """
+    x = x_ref[...].astype(jnp.int32)  # (B, K)
+    w = w_ref[...].astype(jnp.int32)  # (K, M)
+    acc = jnp.zeros((x.shape[0], w.shape[1]), jnp.int32)
+    for nib_idx in range(B_NIBBLES):
+        nib = (x >> (NIBBLE_BITS * nib_idx)) & 0xF  # (B, K)
+        partial = jnp.zeros_like(acc)
+        for k in range(NIBBLE_BITS):
+            gate = ((nib >> k) & 1).astype(jnp.int32)  # (B, K)
+            # Gated shift-add of the weight operand, contracted over K as
+            # an explicit broadcast-gate-reduce (NOT lax.dot_general: dot
+            # inside an interpret-mode pallas body mis-executes through the
+            # Rust runtime's xla_extension 0.5.1 HLO-text path; the gate is
+            # 0/1 so this is selection, not multiplication, in hardware
+            # terms — matching the PL's AND-gating).
+            contrib = gate[:, :, None] * (w << k)[None, :, :]  # (B, K, M)
+            partial = partial + jnp.sum(contrib, axis=1)
+        acc = acc + (partial << (NIBBLE_BITS * nib_idx))
+    o_ref[...] = acc
+
+
+@jax.jit
+def nibble_matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """int32[B,M] = x @ w with nibble-PL element products (x, w in [0,255])."""
+    return pl.pallas_call(
+        _nibble_matmul_kernel,
+        out_shape=jax.ShapeDtypeStruct(
+            (x.shape[0], w.shape[1]), jnp.int32
+        ),
+        interpret=True,
+    )(x.astype(jnp.int32), w.astype(jnp.int32))

@@ -1,0 +1,313 @@
+"""L2: quantized-MLP compute graph whose inner products run on the L1
+nibble kernel.
+
+This is the workload the paper motivates (§I: "8-bit inference ...
+throughput is sustained by replicating multiplier units across parallel
+vector lanes").  Concretely:
+
+* Build time only: train a small float MLP on a synthetic blob-classification
+  corpus (`make_dataset`), post-training-quantize it to asymmetric u8
+  (`quantize_mlp`), and lower the int8 forward pass to HLO via aot.py.
+* The int8 forward pass (`mlp_int8_fwd`) forms every weight × activation
+  product with the nibble Precompute Logic (kernels.nibble.nibble_matmul):
+  each activation is the paper's broadcast operand, each weight column the
+  vector operand.  Zero-point corrections and fixed-point requantisation are
+  ordinary jnp — they are not the multiply the paper optimises.
+
+Nothing in this module runs at serving time; the Rust coordinator executes
+the lowered HLO via PJRT.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import nibble
+
+# ---------------------------------------------------------------------------
+# Synthetic corpus (build-time training data)
+# ---------------------------------------------------------------------------
+
+
+def make_dataset(
+    n_per_class: int = 256,
+    n_classes: int = 10,
+    dim: int = 64,
+    seed: int = 0,
+    spread: float = 2.5,
+):
+    """Gaussian blob classification corpus: (x float32[N,dim], y int32[N])."""
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(0.0, spread, size=(n_classes, dim))
+    xs, ys = [], []
+    for c in range(n_classes):
+        xs.append(centers[c] + rng.normal(0.0, 1.0, size=(n_per_class, dim)))
+        ys.append(np.full(n_per_class, c))
+    x = np.concatenate(xs).astype(np.float32)
+    y = np.concatenate(ys).astype(np.int32)
+    perm = rng.permutation(len(x))
+    return jnp.asarray(x[perm]), jnp.asarray(y[perm])
+
+
+# ---------------------------------------------------------------------------
+# Float MLP + build-time training
+# ---------------------------------------------------------------------------
+
+LAYER_SIZES = (64, 48, 32, 10)
+
+
+def init_mlp(seed: int = 0, sizes: Sequence[int] = LAYER_SIZES):
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for n_in, n_out in zip(sizes[:-1], sizes[1:]):
+        key, wk = jax.random.split(key)
+        w = jax.random.normal(wk, (n_in, n_out)) * jnp.sqrt(2.0 / n_in)
+        b = jnp.zeros((n_out,))
+        params.append((w, b))
+    return params
+
+
+def mlp_fwd_float(params, x):
+    h = x
+    for i, (w, b) in enumerate(params):
+        h = h @ w + b
+        if i + 1 < len(params):
+            h = jax.nn.relu(h)
+    return h
+
+
+def _loss(params, x, y):
+    logits = mlp_fwd_float(params, x)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+@jax.jit
+def _sgd_step(params, x, y, lr):
+    loss, grads = jax.value_and_grad(_loss)(params, x, y)
+    new_params = [
+        (w - lr * gw, b - lr * gb) for (w, b), (gw, gb) in zip(params, grads)
+    ]
+    return new_params, loss
+
+
+def train_mlp(
+    steps: int = 400,
+    batch: int = 128,
+    lr: float = 0.05,
+    seed: int = 0,
+    log_every: int = 20,
+):
+    """Build-time training loop.  Returns (params, log, test_acc, test set)."""
+    x, y = make_dataset(seed=seed)
+    n_test = len(x) // 5
+    x_tr, y_tr = x[n_test:], y[n_test:]
+    x_te, y_te = x[:n_test], y[:n_test]
+    params = init_mlp(seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    log = []
+    for step in range(steps):
+        idx = rng.integers(0, len(x_tr), size=batch)
+        params, loss = _sgd_step(params, x_tr[idx], y_tr[idx], lr)
+        if step % log_every == 0 or step == steps - 1:
+            acc = float(
+                jnp.mean(
+                    jnp.argmax(mlp_fwd_float(params, x_te), axis=1) == y_te
+                )
+            )
+            log.append(
+                f"step {step:4d}  loss {float(loss):.4f}  test_acc {acc:.4f}"
+            )
+    test_acc = float(
+        jnp.mean(jnp.argmax(mlp_fwd_float(params, x_te), axis=1) == y_te)
+    )
+    return params, log, test_acc, (x_te, y_te)
+
+
+# ---------------------------------------------------------------------------
+# Post-training quantization (asymmetric u8, fixed-point requant)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class QuantLayer:
+    """One quantized linear layer: y_q = requant(x_q @ w_q + corrections)."""
+
+    w_q: np.ndarray  # u8 weights as int32 carrier, (n_in, n_out)
+    w_zp: int  # weight zero point
+    bias_i32: np.ndarray  # int32 folded bias, (n_out,)
+    in_zp: int  # input activation zero point
+    out_zp: int  # output activation zero point
+    m: int  # fixed-point requant multiplier (int32)
+    shift: int  # requant right shift
+    relu: bool
+
+
+@dataclasses.dataclass
+class QuantMLP:
+    layers: list
+    in_scale: float
+    in_zp: int
+    out_scale: float
+    out_zp: int
+
+
+def _affine_qparams(lo: float, hi: float):
+    lo = min(float(lo), 0.0)
+    hi = max(float(hi), 0.0)
+    scale = (hi - lo) / 255.0 if hi > lo else 1.0
+    zp = int(round(-lo / scale))
+    return scale, int(np.clip(zp, 0, 255))
+
+
+def _quantize(x: np.ndarray, scale: float, zp: int) -> np.ndarray:
+    return np.clip(np.round(np.asarray(x) / scale) + zp, 0, 255).astype(
+        np.int32
+    )
+
+
+def quantize_mlp(params, calib_x) -> QuantMLP:
+    """Post-training quantization with activation-range calibration."""
+    # Collect per-layer activation ranges on the calibration set.
+    acts = [np.asarray(calib_x)]
+    h = calib_x
+    for i, (w, b) in enumerate(params):
+        h = h @ w + b
+        if i + 1 < len(params):
+            h = jax.nn.relu(h)
+        acts.append(np.asarray(h))
+
+    layers = []
+    in_scale, in_zp = _affine_qparams(acts[0].min(), acts[0].max())
+    cur_scale, cur_zp = in_scale, in_zp
+    for i, (w, b) in enumerate(params):
+        w = np.asarray(w)
+        b = np.asarray(b)
+        w_scale, w_zp = _affine_qparams(w.min(), w.max())
+        out_scale, out_zp = _affine_qparams(
+            acts[i + 1].min(), acts[i + 1].max()
+        )
+        w_q = _quantize(w, w_scale, w_zp)
+        # requant multiplier: (s_in * s_w / s_out) as m * 2^-shift.
+        # m is kept below 2^7 so acc * m stays inside int32 (the int8
+        # accumulator is <= ~2^21); x64 is disabled in this jax build.
+        real_m = cur_scale * w_scale / out_scale
+        shift = 0
+        m = real_m
+        while m < (1 << 6) and shift < 12:
+            m *= 2.0
+            shift += 1
+        bias_i32 = np.round(b / (cur_scale * w_scale)).astype(np.int32)
+        layers.append(
+            QuantLayer(
+                w_q=w_q,
+                w_zp=w_zp,
+                bias_i32=bias_i32,
+                in_zp=cur_zp,
+                out_zp=out_zp,
+                m=int(round(m)),
+                shift=shift,
+                relu=i + 1 < len(params),
+            )
+        )
+        cur_scale, cur_zp = out_scale, out_zp
+    return QuantMLP(
+        layers=layers,
+        in_scale=in_scale,
+        in_zp=in_zp,
+        out_scale=cur_scale,
+        out_zp=cur_zp,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Quantized forward pass (the lowered graph)
+# ---------------------------------------------------------------------------
+
+
+def _requant(acc, m, shift, out_zp, relu):
+    """int32 accumulator -> u8 activation with round-half-up fixed point.
+
+    Pure int32: m < 2^7 and |acc| < 2^22 keep acc * m inside int32, so the
+    lowered HLO needs no 64-bit ops (and matches the Rust fabric bit-exactly).
+    """
+    rounding = (1 << (shift - 1)) if shift > 0 else 0
+    y = (acc * m + rounding) >> shift
+    y = y + out_zp
+    lo = out_zp if relu else 0
+    return jnp.clip(y, lo, 255)
+
+
+def _accumulate(x_q, layer: QuantLayer, *, exact: bool, wb=None):
+    """int32 accumulator of one layer incl. zero-point algebra and bias.
+
+    `wb` optionally supplies (w_q, bias) as traced arrays. The AOT path
+    REQUIRES weights as parameters rather than baked constants: multi-dim
+    int32 constants in HLO text mis-parse in the Rust runtime's
+    xla_extension 0.5.1 (verified by bisection — see DESIGN.md §2), while
+    parameters round-trip exactly.
+    """
+    w_q, bias = (
+        wb
+        if wb is not None
+        else (jnp.asarray(layer.w_q), jnp.asarray(layer.bias_i32))
+    )
+    n_in = w_q.shape[0]
+    if exact:
+        acc_raw = jax.lax.dot_general(
+            x_q,
+            w_q,
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+    else:
+        acc_raw = nibble.nibble_matmul(x_q, w_q)
+    # zero-point algebra:
+    #   sum (x-zx)(w-zw) = sum xw - zw*sum(x) - zx*sum(w) + n*zx*zw
+    sum_x = jnp.sum(x_q, axis=1, keepdims=True)  # (B, 1)
+    sum_w = jnp.sum(w_q, axis=0)[None, :]  # (1, n_out)
+    return (
+        acc_raw
+        - layer.w_zp * sum_x
+        - layer.in_zp * sum_w
+        + n_in * layer.in_zp * layer.w_zp
+        + bias[None, :]
+    )
+
+
+def quant_layer_fwd(x_q, layer: QuantLayer, *, exact: bool = False, wb=None):
+    """One int8 layer: u8 activations (int32 carrier) in and out.
+
+    The u8 × u8 product sum uses the nibble kernel unless `exact` — the two
+    must agree bit-for-bit (tested); `exact` exists to prove that parity.
+    """
+    acc = _accumulate(x_q, layer, exact=exact, wb=wb)
+    return _requant(acc, layer.m, layer.shift, layer.out_zp, layer.relu)
+
+
+def mlp_int8_fwd(qmlp: QuantMLP, x_q, *, exact: bool = False, weights=None):
+    """Full quantized forward: u8 activations in, int32 logits out.
+
+    The final layer returns the raw int32 accumulator (logit scale): argmax
+    is scale-invariant, so classification needs no final requant.
+
+    `weights`, when given, is a list of (w_q, bias) traced arrays — one per
+    layer — used by the AOT path so the lowered HLO takes weights as
+    parameters (constants mis-parse in the old XLA, see `_accumulate`).
+    """
+    h = x_q
+    for i, layer in enumerate(qmlp.layers[:-1]):
+        wb = weights[i] if weights is not None else None
+        h = quant_layer_fwd(h, layer, exact=exact, wb=wb)
+    wb = weights[-1] if weights is not None else None
+    return _accumulate(h, qmlp.layers[-1], exact=exact, wb=wb)
+
+
+def quantize_input(x, qmlp: QuantMLP):
+    """float input -> u8 (int32 carrier) with the model's input qparams."""
+    return jnp.asarray(_quantize(x, qmlp.in_scale, qmlp.in_zp))

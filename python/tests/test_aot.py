@@ -1,0 +1,57 @@
+"""AOT path: the lowering helpers produce parseable, deterministic HLO
+text without the constructs known to break the Rust runtime's
+xla_extension 0.5.1 (multi-dim int constants — see DESIGN.md §2)."""
+
+import re
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot
+from compile.kernels import lut, nibble
+
+
+def lower_nibble(n):
+    a_spec = jax.ShapeDtypeStruct((n,), jnp.int32)
+    b_spec = jax.ShapeDtypeStruct((1,), jnp.int32)
+    return aot.to_hlo_text(
+        jax.jit(lambda a, b: (nibble.nibble_mul(a, b),)).lower(
+            a_spec, b_spec
+        )
+    )
+
+
+def test_hlo_text_structure():
+    text = lower_nibble(16)
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    assert "s32[16]" in text
+    # output is a 1-tuple (return_tuple=True contract with the Rust side)
+    assert re.search(r"ROOT .* tuple\(", text)
+
+
+def test_lowering_is_deterministic():
+    assert lower_nibble(8) == lower_nibble(8)
+
+
+def test_no_multidim_integer_constants():
+    """Multi-dim s32 constants mis-parse in xla_extension 0.5.1; every
+    shipped kernel must avoid them (weights travel as parameters)."""
+    a_spec = jax.ShapeDtypeStruct((16,), jnp.int32)
+    b_spec = jax.ShapeDtypeStruct((1,), jnp.int32)
+    texts = [
+        lower_nibble(16),
+        aot.to_hlo_text(
+            jax.jit(lambda a, b: (lut.lut_mul(a, b),)).lower(a_spec, b_spec)
+        ),
+    ]
+    bad = re.compile(r"constant\(\s*\{")  # 2-D+ literal: constant({ {...
+    for text in texts:
+        for line in text.splitlines():
+            if "s32[" in line and "constant(" in line and bad.search(line):
+                dims = re.search(r"s32\[(\d+),(\d+)", line)
+                assert dims is None, f"multi-dim s32 constant: {line.strip()}"
+
+
+def test_vector_width_artifacts_cover_paper_widths():
+    assert aot.VECTOR_WIDTHS == (4, 8, 16)

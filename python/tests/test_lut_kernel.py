@@ -1,0 +1,56 @@
+"""L1 correctness: Pallas LUT-array kernel vs the exact product and the
+literal hex-string reference (Algorithm 1)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import lut, ref
+
+
+@given(
+    n=st.integers(1, 24),
+    b=st.integers(0, 255),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=50, deadline=None)
+def test_lut_mul_matches_exact(n, b, seed):
+    a = np.random.default_rng(seed).integers(0, 256, n)
+    a = jnp.asarray(a, jnp.int32)
+    out = lut.lut_mul(a, jnp.asarray([b], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(a) * b)
+
+
+@given(b=st.integers(0, 255))
+@settings(max_examples=40, deadline=None)
+def test_lut_mul_matches_hex_string_reference(b):
+    a = np.arange(16, dtype=np.int64) * 15 % 256
+    kernel = lut.lut_mul(
+        jnp.asarray(a, jnp.int32), jnp.asarray([b], jnp.int32)
+    )
+    reference = ref.lut_mul_ref(a, b)
+    np.testing.assert_array_equal(np.asarray(kernel), np.asarray(reference))
+
+
+def test_result_string_layout():
+    """Fig. 1(a): segment k of ResString(b) holds (k*b) & 0xFF."""
+    for b in range(16):
+        s = lut.result_string(b)
+        assert s < 1 << 128
+        for k in range(1, 17):
+            seg = (s >> (8 * (k - 1))) & 0xFF
+            assert seg == (k * b) & 0xFF
+
+
+def test_hex_lut_zero_guards():
+    """Row 0 / column 0 implement the A==0 / B==0 defaults."""
+    assert (lut.HEX_LUT[0] == 0).all()
+    assert (lut.HEX_LUT[:, 0] == 0).all()
+
+
+def test_zero_nibble_operands():
+    a = jnp.asarray([0x00, 0x0F, 0xF0, 0x10, 0x01], jnp.int32)
+    for b in [0x00, 0x0F, 0xF0, 0x11]:
+        out = lut.lut_mul(a, jnp.asarray([b], jnp.int32))
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(a) * b)

@@ -1,0 +1,76 @@
+"""L2 correctness: quantized MLP — nibble-kernel path vs exact-dot path
+(bit parity), quantization quality, and training smoke."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def trained():
+    params, log, acc, (x_te, y_te) = M.train_mlp(steps=120, seed=0)
+    return params, log, acc, x_te, y_te
+
+
+@pytest.fixture(scope="module")
+def qmlp(trained):
+    params, _, _, x_te, _ = trained
+    return M.quantize_mlp(params, x_te)
+
+
+def test_training_converges(trained):
+    _, log, acc, _, _ = trained
+    assert len(log) >= 3, "loss curve must be logged"
+    first_loss = float(log[0].split("loss")[1].split()[0])
+    last_loss = float(log[-1].split("loss")[1].split()[0])
+    assert last_loss < first_loss, "loss must decrease"
+    assert acc > 0.9, f"synthetic blobs should be easy: acc={acc}"
+
+
+def test_nibble_and_exact_paths_bit_identical(trained, qmlp):
+    _, _, _, x_te, _ = trained
+    x_q = M.quantize_input(x_te[:24], qmlp)
+    exact = M.mlp_int8_fwd(qmlp, x_q, exact=True)
+    nib = M.mlp_int8_fwd(qmlp, x_q, exact=False)
+    np.testing.assert_array_equal(np.asarray(exact), np.asarray(nib))
+
+
+def test_int8_accuracy_close_to_float(trained, qmlp):
+    params, _, float_acc, x_te, y_te = trained
+    x_q = M.quantize_input(x_te, qmlp)
+    logits = M.mlp_int8_fwd(qmlp, x_q, exact=True)
+    q_acc = float(jnp.mean(jnp.argmax(logits, axis=1) == y_te))
+    assert q_acc >= float_acc - 0.05, (
+        f"quantization dropped accuracy too far: {float_acc} -> {q_acc}"
+    )
+
+
+def test_quant_params_in_range(qmlp):
+    for ly in qmlp.layers:
+        assert 0 <= ly.w_zp <= 255
+        assert 0 <= ly.in_zp <= 255
+        assert 0 <= ly.out_zp <= 255
+        assert (ly.w_q >= 0).all() and (ly.w_q <= 255).all()
+        assert 0 < ly.m < (1 << 7), "requant multiplier must fit int32 math"
+        assert 0 <= ly.shift <= 12
+
+
+def test_activations_stay_u8(trained, qmlp):
+    _, _, _, x_te, _ = trained
+    x_q = M.quantize_input(x_te[:16], qmlp)
+    h = x_q
+    for layer in qmlp.layers[:-1]:
+        h = M.quant_layer_fwd(h, layer, exact=True)
+        arr = np.asarray(h)
+        assert arr.min() >= 0 and arr.max() <= 255
+
+
+def test_dataset_shapes_and_determinism():
+    x1, y1 = M.make_dataset(n_per_class=10, n_classes=3, dim=8, seed=4)
+    x2, y2 = M.make_dataset(n_per_class=10, n_classes=3, dim=8, seed=4)
+    assert x1.shape == (30, 8)
+    np.testing.assert_array_equal(np.asarray(x1), np.asarray(x2))
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+    assert set(np.asarray(y1)) == {0, 1, 2}

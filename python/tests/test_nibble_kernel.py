@@ -1,0 +1,93 @@
+"""L1 correctness: Pallas nibble kernel vs pure-jnp oracles (hypothesis
+sweeps over shapes and operand values)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import nibble, ref
+
+SETTINGS = dict(max_examples=50, deadline=None)
+
+
+@given(
+    n=st.integers(1, 33),
+    b=st.integers(0, 255),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_nibble_mul_matches_exact(n, b, seed):
+    a = np.random.default_rng(seed).integers(0, 256, n)
+    a = jnp.asarray(a, jnp.int32)
+    out = nibble.nibble_mul(a, jnp.asarray([b], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(a) * b)
+
+
+@given(b=st.integers(0, 255))
+@settings(**SETTINGS)
+def test_nibble_mul_matches_algorithmic_reference(b):
+    a = jnp.asarray(np.arange(16) * 17 % 256, jnp.int32)
+    kernel = nibble.nibble_mul(a, jnp.asarray([b], jnp.int32))
+    reference = ref.nibble_mul_ref(a, b)
+    np.testing.assert_array_equal(np.asarray(kernel), np.asarray(reference))
+
+
+@given(b=st.integers(0, 255), seed=st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_csd_ablation_agrees_with_adds_only(b, seed):
+    a = np.random.default_rng(seed).integers(0, 256, 8)
+    a = jnp.asarray(a, jnp.int32)
+    bb = jnp.asarray([b], jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(nibble.nibble_mul(a, bb)),
+        np.asarray(nibble.nibble_mul(a, bb, csd=True)),
+    )
+
+
+def test_pl_compose_exhaustive():
+    """Every PL configuration equals multiplication by its nibble value."""
+    a = jnp.asarray(np.arange(256), jnp.int32)
+    for nib_val in range(16):
+        nib = jnp.asarray(nib_val, jnp.int32)
+        np.testing.assert_array_equal(
+            np.asarray(nibble.pl_compose(a, nib)), np.arange(256) * nib_val
+        )
+        np.testing.assert_array_equal(
+            np.asarray(nibble.pl_compose_csd(a, nib)),
+            np.arange(256) * nib_val,
+        )
+
+
+def test_pl_add_table_is_binary_expansion():
+    for nib, shifts in enumerate(nibble.PL_ADD_TABLE):
+        assert sum(1 << k for k in shifts) == nib
+        assert len(shifts) <= 4, "limited additions: at most 4 terms"
+
+
+@given(
+    bk=st.integers(1, 12),
+    m=st.integers(1, 12),
+    batch=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=25, deadline=None)
+def test_nibble_matmul_matches_dot(bk, m, batch, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(0, 256, (batch, bk)), jnp.int32)
+    w = jnp.asarray(rng.integers(0, 256, (bk, m)), jnp.int32)
+    out = nibble.nibble_matmul(x, w)
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray(x) @ np.asarray(w)
+    )
+
+
+@pytest.mark.parametrize("a_val,b_val", [
+    (0, 0), (0, 255), (255, 0), (255, 255), (1, 1),
+    (0x0F, 0xF0), (0xF0, 0x0F), (0x10, 0x10), (128, 128),
+])
+def test_nibble_corner_cases(a_val, b_val):
+    a = jnp.asarray([a_val], jnp.int32)
+    out = nibble.nibble_mul(a, jnp.asarray([b_val], jnp.int32))
+    assert int(out[0]) == a_val * b_val

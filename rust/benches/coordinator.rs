@@ -1,0 +1,73 @@
+//! Bench: coordinator path — batcher throughput and end-to-end jobs/s
+//! over exact and simulated-fabric backends (L3 should not be the
+//! bottleneck: compare exact-backend jobs/s against sim-backend jobs/s).
+
+use nibblemul::bench::Bencher;
+use nibblemul::coordinator::{
+    Backend, Batcher, BatcherConfig, Coordinator, CoordinatorConfig,
+    ExactBackend, SimBackend,
+};
+use nibblemul::multipliers::Arch;
+use nibblemul::workload::broadcast_jobs;
+
+fn main() {
+    println!("== bench: coordinator ==");
+    let mut bencher = Bencher::quick();
+
+    let jobs = broadcast_jobs(512, 1, 48, 3);
+    let elements: usize = jobs.iter().map(|j| j.a.len()).sum();
+
+    bencher.bench("coordinator/batcher_only/512 jobs", Some(elements as f64), || {
+        let mut b = Batcher::new(BatcherConfig { width: 16 });
+        for j in &jobs {
+            b.push(j);
+        }
+        let batches = b.flush();
+        assert!(!batches.is_empty());
+    });
+
+    bencher.bench(
+        "coordinator/e2e/exact x4 workers/512 jobs",
+        Some(elements as f64),
+        || {
+            let backends: Vec<Box<dyn Backend>> = (0..4)
+                .map(|_| Box::new(ExactBackend) as Box<dyn Backend>)
+                .collect();
+            let coord = Coordinator::new(
+                CoordinatorConfig {
+                    width: 16,
+                    queue_depth: 16,
+                },
+                backends,
+            );
+            let res = coord.run_jobs(&jobs).unwrap();
+            assert_eq!(res.len(), jobs.len());
+            coord.shutdown();
+        },
+    );
+
+    let small_jobs = broadcast_jobs(64, 1, 48, 4);
+    let small_elements: usize = small_jobs.iter().map(|j| j.a.len()).sum();
+    bencher.bench(
+        "coordinator/e2e/sim-nibble x4 workers/64 jobs",
+        Some(small_elements as f64),
+        || {
+            let backends: Vec<Box<dyn Backend>> = (0..4)
+                .map(|_| {
+                    Box::new(SimBackend::new(Arch::Nibble, 16).unwrap())
+                        as Box<dyn Backend>
+                })
+                .collect();
+            let coord = Coordinator::new(
+                CoordinatorConfig {
+                    width: 16,
+                    queue_depth: 16,
+                },
+                backends,
+            );
+            let res = coord.run_jobs(&small_jobs).unwrap();
+            assert_eq!(res.len(), small_jobs.len());
+            coord.shutdown();
+        },
+    );
+}

@@ -1,0 +1,28 @@
+//! Bench: Fig. 4 — the full area/power evaluation sweep (synthesis +
+//! verified power stimulus for 5 architectures × 3 widths), the code path
+//! that regenerates both figure panels.
+
+use nibblemul::bench::Bencher;
+use nibblemul::fabric::{evaluate_arch, sweep_paper_set};
+use nibblemul::multipliers::Arch;
+use nibblemul::tech::TechLibrary;
+
+fn main() {
+    println!("== bench: Fig. 4 sweep ==");
+    let lib = TechLibrary::hpc28();
+    let mut bencher = Bencher::quick();
+    bencher.bench("fig4/full_sweep(5 arch x 3 widths, 8 ops)", Some(15.0), || {
+        let (rows, _) = sweep_paper_set(&[4, 8, 16], &lib, 8, 1).unwrap();
+        assert_eq!(rows.len(), 15);
+    });
+    for arch in Arch::PAPER_SET {
+        bencher.bench(
+            &format!("fig4/evaluate/{}/x16", arch.name()),
+            Some(1.0),
+            || {
+                let e = evaluate_arch(arch, 16, &lib, 4, 2).unwrap();
+                assert!(e.area_um2 > 0.0);
+            },
+        );
+    }
+}

@@ -1,0 +1,41 @@
+//! Bench: PJRT runtime — artifact execute latency for the L1 kernels and
+//! the INT8 MLP (the serving hot path). Skips cleanly when artifacts are
+//! not built.
+
+use nibblemul::bench::Bencher;
+use nibblemul::runtime::{ArtifactSet, Runtime};
+
+fn main() {
+    println!("== bench: PJRT runtime ==");
+    let set = ArtifactSet::default_dir();
+    if !set.available() {
+        println!("artifacts not built (run `make artifacts`) — skipping");
+        return;
+    }
+    let mut bencher = Bencher::default();
+    let mut rt = Runtime::cpu(set.clone()).unwrap();
+
+    let a16: Vec<i32> = (0..16).map(|i| (i * 13 + 1) % 256).collect();
+    bencher.bench("pjrt/nibble_mul_16 (16 multiplies)", Some(16.0), || {
+        let out = rt.nibble_mul(&a16, 97).unwrap();
+        assert_eq!(out[1] as i32, a16[1] * 97);
+    });
+    bencher.bench("pjrt/lut_mul_16 (16 multiplies)", Some(16.0), || {
+        let out = rt.lut_mul_16(&a16, 55).unwrap();
+        assert_eq!(out[2] as i32, a16[2] * 55);
+    });
+
+    let mlp = set.weights().unwrap();
+    let ts = set.testset().unwrap();
+    let dim = ts.x[0].len();
+    let x: Vec<i32> = ts.x[..16].iter().flatten().copied().collect();
+    let mults = 16.0 * mlp.mults_per_inference() as f64;
+    bencher.bench(
+        &format!("pjrt/mlp_int8 batch=16 ({mults} multiplies)"),
+        Some(mults),
+        || {
+            let out = rt.mlp_int8(&x, 16, dim as i64).unwrap();
+            assert_eq!(out.len(), 160);
+        },
+    );
+}

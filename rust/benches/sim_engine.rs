@@ -1,0 +1,54 @@
+//! Bench: simulator core throughput (cell evaluations per second) — the
+//! L3 hot path behind every figure. Tracks the §Perf target in
+//! EXPERIMENTS.md (>= 1e7 cell-evals/s).
+
+use nibblemul::bench::Bencher;
+use nibblemul::fabric::VectorUnit;
+use nibblemul::multipliers::Arch;
+use nibblemul::sim::Simulator;
+use nibblemul::util::Xoshiro256;
+
+fn main() {
+    println!("== bench: simulator engine ==");
+    let mut bencher = Bencher::default();
+    for (arch, n) in [
+        (Arch::Wallace, 16usize),
+        (Arch::LutArray, 16),
+        (Arch::Nibble, 16),
+    ] {
+        let unit = VectorUnit::new(arch, n);
+        let cells = unit.netlist.n_cells() as f64;
+        let mut sim = Simulator::new(&unit.netlist).unwrap();
+        let mut rng = Xoshiro256::new(5);
+        const CYCLES: u64 = 100;
+        bencher.bench(
+            &format!(
+                "sim/{}x{} ({} cells, {} cyc/iter)",
+                arch.name(),
+                n,
+                cells,
+                CYCLES
+            ),
+            Some(cells * CYCLES as f64),
+            || {
+                for _ in 0..CYCLES {
+                    sim.set_input("b", rng.next_u64() & 0xFF).unwrap();
+                    sim.step();
+                }
+            },
+        );
+    }
+    // Pure settle throughput on the biggest combinational cloud.
+    let unit = VectorUnit::new(Arch::LutArray, 16);
+    let cells = unit.netlist.n_cells() as f64;
+    let mut sim = Simulator::new(&unit.netlist).unwrap();
+    let mut rng = Xoshiro256::new(6);
+    bencher.bench(
+        &format!("sim/settle_only/lut-array x16 ({cells} cells)"),
+        Some(cells),
+        || {
+            sim.set_input("b", rng.next_u64() & 0xFF).unwrap();
+            sim.settle();
+        },
+    );
+}

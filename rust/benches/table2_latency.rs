@@ -1,0 +1,38 @@
+//! Bench: Table 2 — per-architecture vector-op execution on the
+//! gate-level simulator (wall time per vector op and per multiply),
+//! plus the measured cycle counts the table reports.
+
+use nibblemul::bench::Bencher;
+use nibblemul::fabric::VectorUnit;
+use nibblemul::multipliers::Arch;
+use nibblemul::util::Xoshiro256;
+
+fn main() {
+    println!("== bench: Table 2 (cycle latency / sim throughput) ==");
+    let mut bencher = Bencher::default();
+    for arch in [
+        Arch::ShiftAdd,
+        Arch::Booth,
+        Arch::Nibble,
+        Arch::Wallace,
+        Arch::Array,
+    ] {
+        for n in [1usize, 4, 8, 16] {
+            let unit = VectorUnit::new(arch, n);
+            let mut sim = unit.simulator().unwrap();
+            let mut rng = Xoshiro256::new(1);
+            let expected = arch.latency_cycles(n);
+            bencher.bench(
+                &format!("table2/{}/x{}  ({} cc)", arch.name(), n, expected),
+                Some(n as f64),
+                || {
+                    let a: Vec<u16> =
+                        (0..n).map(|_| rng.operand8()).collect();
+                    let b = rng.operand8();
+                    let res = unit.run_op(&mut sim, &a, b).unwrap();
+                    assert_eq!(res.cycles, expected);
+                },
+            );
+        }
+    }
+}

@@ -1,0 +1,152 @@
+//! Benchmark harness substrate (criterion is unavailable offline): warmup,
+//! timed iterations, robust statistics, and a stable text report format
+//! consumed by `cargo bench` targets (`harness = false`).
+
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub min_ns: f64,
+    pub stddev_ns: f64,
+    /// Optional throughput annotation (items per iteration).
+    pub items_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn items_per_sec(&self) -> Option<f64> {
+        self.items_per_iter
+            .map(|it| it / (self.mean_ns * 1e-9))
+    }
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} {:>12.1} ns/iter (median {:>12.1}, min {:>12.1}, sd {:>10.1}, n={})",
+            self.name, self.mean_ns, self.median_ns, self.min_ns,
+            self.stddev_ns, self.iters
+        )?;
+        if let Some(ips) = self.items_per_sec() {
+            write!(f, "  [{:.3e} items/s]", ips)?;
+        }
+        Ok(())
+    }
+}
+
+/// Benchmark runner with a time budget per case.
+pub struct Bencher {
+    /// Minimum sampling time per case, seconds.
+    pub min_time_s: f64,
+    /// Maximum iterations per case.
+    pub max_iters: u64,
+    /// Warmup iterations.
+    pub warmup_iters: u64,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            min_time_s: 0.5,
+            max_iters: 100_000,
+            warmup_iters: 3,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Self {
+            min_time_s: 0.2,
+            max_iters: 10_000,
+            warmup_iters: 1,
+            ..Default::default()
+        }
+    }
+
+    /// Run a case: `f` is invoked repeatedly; per-iteration duration is
+    /// measured individually (suits iteration bodies >= ~1 µs, which all
+    /// of ours are).
+    pub fn bench<F: FnMut()>(
+        &mut self,
+        name: &str,
+        items_per_iter: Option<f64>,
+        mut f: F,
+    ) -> &BenchResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let budget = std::time::Duration::from_secs_f64(self.min_time_s);
+        let started = Instant::now();
+        while started.elapsed() < budget
+            && (samples_ns.len() as u64) < self.max_iters
+        {
+            let t0 = Instant::now();
+            f();
+            samples_ns.push(t0.elapsed().as_nanos() as f64);
+        }
+        let n = samples_ns.len().max(1) as f64;
+        let mean = samples_ns.iter().sum::<f64>() / n;
+        let mut sorted = samples_ns.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = sorted.get(sorted.len() / 2).copied().unwrap_or(0.0);
+        let min = sorted.first().copied().unwrap_or(0.0);
+        let var = samples_ns
+            .iter()
+            .map(|s| (s - mean) * (s - mean))
+            .sum::<f64>()
+            / n;
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: samples_ns.len() as u64,
+            mean_ns: mean,
+            median_ns: median,
+            min_ns: min,
+            stddev_ns: var.sqrt(),
+            items_per_iter,
+        };
+        println!("{result}");
+        self.results.push(result);
+        self.results.last().expect("just pushed")
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bencher {
+            min_time_s: 0.01,
+            max_iters: 100,
+            warmup_iters: 1,
+            results: Vec::new(),
+        };
+        let mut acc = 0u64;
+        let r = b
+            .bench("spin", Some(1000.0), || {
+                for i in 0..1000u64 {
+                    acc = acc.wrapping_add(i * i);
+                }
+            })
+            .clone();
+        assert!(r.iters > 0);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.min_ns <= r.mean_ns * 1.5);
+        assert!(r.items_per_sec().unwrap() > 0.0);
+        assert!(acc != 0);
+    }
+}

@@ -1,0 +1,132 @@
+//! Minimal CLI argument parser substrate (no clap in the offline set):
+//! `binary <subcommand> [--flag value] [--switch]`.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+/// Parsed command line: subcommand + flags.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    flags: HashMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Self> {
+        let mut it = args.into_iter().peekable();
+        let command = it.next().unwrap_or_else(|| "help".to_string());
+        let mut flags = HashMap::new();
+        let mut switches = Vec::new();
+        while let Some(tok) = it.next() {
+            let name = tok
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("expected --flag, got {tok}"))?
+                .to_string();
+            match it.peek() {
+                Some(v) if !v.starts_with("--") => {
+                    flags.insert(name, it.next().expect("peeked"));
+                }
+                _ => switches.push(name),
+            }
+        }
+        Ok(Self {
+            command,
+            flags,
+            switches,
+        })
+    }
+
+    pub fn from_env() -> Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("--{name} expects an integer: {e}")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("--{name} expects an integer: {e}")),
+        }
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+            || self.flags.contains_key(name)
+    }
+
+    /// Parse a comma-separated list of usizes.
+    pub fn get_usize_list(
+        &self,
+        name: &str,
+        default: &[usize],
+    ) -> Result<Vec<usize>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|t| {
+                    t.trim()
+                        .parse()
+                        .map_err(|e| anyhow!("--{name}: bad entry {t}: {e}"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|t| t.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_command_flags_switches() {
+        let a = parse("fig4 --ops 64 --widths 4,8,16 --verbose");
+        assert_eq!(a.command, "fig4");
+        assert_eq!(a.get_u64("ops", 0).unwrap(), 64);
+        assert_eq!(
+            a.get_usize_list("widths", &[]).unwrap(),
+            vec![4, 8, 16]
+        );
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("table2");
+        assert_eq!(a.get_usize("n", 4).unwrap(), 4);
+        assert_eq!(a.get_or("arch", "nibble"), "nibble");
+    }
+
+    #[test]
+    fn rejects_positional_garbage() {
+        assert!(Args::parse(
+            ["cmd".to_string(), "junk".to_string()].into_iter()
+        )
+        .is_err());
+    }
+}

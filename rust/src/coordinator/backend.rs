@@ -1,0 +1,203 @@
+//! Execution backends for batches.
+//!
+//! Every backend computes the same function — element products of a
+//! fabric-width vector against a broadcast operand — with different
+//! substrates:
+//!
+//! * [`SimBackend`]   — the gate-level vector unit, cycle-accurate (also
+//!   accounts cycles + switching energy, the paper's figures of merit);
+//! * [`PjrtBackend`]  — the AOT-lowered Pallas nibble kernel running on
+//!   the PJRT CPU client (the L1/L2 deployment path);
+//! * [`ExactBackend`] — plain scalar multiplies (oracle / fallback).
+
+use anyhow::Result;
+
+use crate::fabric::VectorUnit;
+use crate::multipliers::Arch;
+use crate::runtime::{ArtifactSet, Runtime};
+use crate::sim::Simulator;
+use crate::tech::{PowerModel, TechLibrary};
+
+use super::batcher::Batch;
+
+/// A multiply-batch execution engine. One instance per worker thread.
+pub trait Backend: Send {
+    /// Execute the batch, returning one product per `a` lane.
+    fn execute(&mut self, batch: &Batch) -> Result<Vec<u32>>;
+
+    /// Human-readable identity for metrics/labels.
+    fn name(&self) -> String;
+
+    /// Cycles consumed so far (0 where the notion doesn't apply).
+    fn cycles(&self) -> u64 {
+        0
+    }
+
+    /// Energy consumed so far in femtojoules (0 where not modelled).
+    fn energy_fj(&self) -> f64 {
+        0.0
+    }
+}
+
+/// Plain scalar-ALU oracle backend.
+pub struct ExactBackend;
+
+impl Backend for ExactBackend {
+    fn execute(&mut self, batch: &Batch) -> Result<Vec<u32>> {
+        Ok(batch
+            .a
+            .iter()
+            .map(|&x| x as u32 * batch.b as u32)
+            .collect())
+    }
+
+    fn name(&self) -> String {
+        "exact".into()
+    }
+}
+
+/// Gate-level simulated fabric backend with cycle/energy accounting.
+///
+/// The vector unit is interned for the process lifetime (`Box::leak`) so
+/// the simulator's borrow is `'static` — backends are long-lived worker
+/// state, so this is a bounded, intentional allocation, not a drip leak.
+pub struct SimBackend {
+    unit: &'static VectorUnit,
+    sim: Simulator<'static>,
+    lib: TechLibrary,
+    cycles: u64,
+}
+
+impl SimBackend {
+    /// Build a backend around `arch` at fabric width `n`.
+    pub fn new(arch: Arch, n: usize) -> Result<Self> {
+        let unit: &'static VectorUnit =
+            Box::leak(Box::new(VectorUnit::new(arch, n)));
+        let sim = Simulator::new(&unit.netlist)?;
+        Ok(Self {
+            unit,
+            sim,
+            lib: TechLibrary::hpc28(),
+            cycles: 0,
+        })
+    }
+
+    pub fn arch(&self) -> Arch {
+        self.unit.arch
+    }
+}
+
+impl Backend for SimBackend {
+    fn execute(&mut self, batch: &Batch) -> Result<Vec<u32>> {
+        let mut a = batch.a.clone();
+        a.resize(self.unit.n, 0);
+        let res = self.unit.run_op(&mut self.sim, &a, batch.b)?;
+        self.cycles += res.cycles;
+        Ok(res.products[..batch.a.len()].to_vec())
+    }
+
+    fn name(&self) -> String {
+        format!("sim:{}x{}", self.unit.arch.name(), self.unit.n)
+    }
+
+    fn cycles(&self) -> u64 {
+        self.cycles
+    }
+
+    fn energy_fj(&self) -> f64 {
+        // Total energy = average power x simulated time.
+        let p = PowerModel::new(&self.lib)
+            .estimate(&self.unit.netlist, &self.sim);
+        let t_s = self.sim.cycles() as f64 / crate::tech::CLOCK_HZ;
+        p.total_mw() * 1e-3 * t_s * 1e15
+    }
+}
+
+/// PJRT backend: executes the `nibble_mul_N` artifact.
+///
+/// The PJRT client handles are not `Send` (`Rc` internals), so the runtime
+/// is created LAZILY on the first `execute` call — i.e. on the worker
+/// thread that owns this backend — and never crosses a thread boundary.
+pub struct PjrtBackend {
+    artifacts: ArtifactSet,
+    width: usize,
+    rt: Option<Runtime>,
+}
+
+// SAFETY: `rt` is always `None` when the backend is moved into its worker
+// thread (enforced by the private field + lazy init in `execute`); after
+// initialization the runtime is only ever used from that single thread.
+// The worker pool gives each backend to exactly one thread.
+unsafe impl Send for PjrtBackend {}
+
+impl PjrtBackend {
+    pub fn new(artifacts: ArtifactSet, width: usize) -> Result<Self> {
+        anyhow::ensure!(
+            crate::VECTOR_WIDTHS.contains(&width),
+            "no nibble_mul artifact for width {width}"
+        );
+        anyhow::ensure!(
+            artifacts.available(),
+            "artifacts not built (run `make artifacts`)"
+        );
+        Ok(Self {
+            artifacts,
+            width,
+            rt: None,
+        })
+    }
+
+    fn runtime(&mut self) -> Result<&mut Runtime> {
+        if self.rt.is_none() {
+            let mut rt = Runtime::cpu(self.artifacts.clone())?;
+            rt.ensure_loaded(&format!("nibble_mul_{}", self.width))?;
+            self.rt = Some(rt);
+        }
+        Ok(self.rt.as_mut().expect("just initialised"))
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn execute(&mut self, batch: &Batch) -> Result<Vec<u32>> {
+        let width = self.width;
+        let mut a: Vec<i32> = batch.a.iter().map(|&x| x as i32).collect();
+        a.resize(width, 0);
+        let out = self.runtime()?.nibble_mul(&a, batch.b as i32)?;
+        Ok(out[..batch.a.len()].iter().map(|&v| v as u32).collect())
+    }
+
+    fn name(&self) -> String {
+        format!("pjrt:nibble_mul_{}", self.width)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::LaneTag;
+
+    fn mk_batch(a: Vec<u16>, b: u16) -> Batch {
+        let lanes = (0..a.len())
+            .map(|i| LaneTag { job: 0, offset: i })
+            .collect();
+        Batch { a, b, lanes }
+    }
+
+    #[test]
+    fn exact_backend_products() {
+        let mut be = ExactBackend;
+        let out = be.execute(&mk_batch(vec![1, 2, 200], 100)).unwrap();
+        assert_eq!(out, vec![100, 200, 20000]);
+    }
+
+    #[test]
+    fn sim_backend_counts_cycles_and_energy() {
+        let mut be = SimBackend::new(Arch::Nibble, 4).unwrap();
+        let out = be.execute(&mk_batch(vec![3, 5, 7, 9], 11)).unwrap();
+        assert_eq!(out, vec![33, 55, 77, 99]);
+        assert_eq!(be.cycles(), 8, "2N cycles at N=4");
+        let _ = be.execute(&mk_batch(vec![1, 2], 50)).unwrap();
+        assert_eq!(be.cycles(), 16);
+        assert!(be.energy_fj() > 0.0);
+    }
+}

@@ -1,0 +1,179 @@
+//! Broadcast-reuse-aware dynamic batching.
+//!
+//! Jobs are vector × broadcast-scalar multiplies of arbitrary vector
+//! length; the fabric consumes fixed-width (N-element) vector ops sharing
+//! ONE broadcast operand. The batcher therefore:
+//!
+//! 1. splits long jobs into fabric-width chunks (same broadcast operand);
+//! 2. coalesces chunks from different jobs that share the same broadcast
+//!    operand value into one fabric op (the paper's reuse property:
+//!    "accelerator workloads frequently broadcast one operand across many
+//!    independent vector elements");
+//! 3. pads the final partial op of a flush.
+//!
+//! The batcher is pure (no threads, no clocks) and fully unit-testable;
+//! the service layer decides *when* to flush.
+
+use std::collections::HashMap;
+
+use crate::workload::VectorJob;
+
+/// Where a lane of a batch came from: (job id, element offset in the job).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LaneTag {
+    pub job: u64,
+    pub offset: usize,
+}
+
+/// One fabric-width vector op: `a[i] * b` for every populated lane.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub a: Vec<u16>,
+    pub b: u16,
+    /// Which (job, offset) each populated lane belongs to.
+    pub lanes: Vec<LaneTag>,
+}
+
+impl Batch {
+    /// Number of populated (non-padding) lanes.
+    pub fn occupancy(&self) -> usize {
+        self.lanes.len()
+    }
+}
+
+/// Batching configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// Fabric vector width (4, 8 or 16 in the paper's configurations).
+    pub width: usize,
+}
+
+/// Accumulates jobs and emits fabric-width batches.
+pub struct Batcher {
+    cfg: BatcherConfig,
+    /// Open (partially filled) batch per broadcast-operand value.
+    open: HashMap<u16, Batch>,
+    emitted: Vec<Batch>,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        assert!(cfg.width >= 1);
+        Self {
+            cfg,
+            open: HashMap::new(),
+            emitted: Vec::new(),
+        }
+    }
+
+    /// Add a job; full batches become available via [`Batcher::drain`].
+    pub fn push(&mut self, job: &VectorJob) {
+        let width = self.cfg.width;
+        for (offset, &a) in job.a.iter().enumerate() {
+            let entry = self.open.entry(job.b).or_insert_with(|| Batch {
+                a: Vec::with_capacity(width),
+                b: job.b,
+                lanes: Vec::with_capacity(width),
+            });
+            entry.a.push(a);
+            entry.lanes.push(LaneTag {
+                job: job.id,
+                offset,
+            });
+            if entry.a.len() == width {
+                let full = self.open.remove(&job.b).expect("entry exists");
+                self.emitted.push(full);
+            }
+        }
+    }
+
+    /// Take all complete batches accumulated so far.
+    pub fn drain(&mut self) -> Vec<Batch> {
+        std::mem::take(&mut self.emitted)
+    }
+
+    /// Flush every open partial batch, padding with zero lanes.
+    pub fn flush(&mut self) -> Vec<Batch> {
+        let width = self.cfg.width;
+        let mut out = self.drain();
+        let mut keys: Vec<u16> = self.open.keys().copied().collect();
+        keys.sort_unstable(); // deterministic order
+        for k in keys {
+            let mut batch = self.open.remove(&k).expect("key exists");
+            batch.a.resize(width, 0);
+            out.push(batch);
+        }
+        out
+    }
+
+    /// Elements currently waiting in partial batches.
+    pub fn pending_elements(&self) -> usize {
+        self.open.values().map(|b| b.lanes.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(id: u64, len: usize, b: u16) -> VectorJob {
+        VectorJob {
+            id,
+            a: (0..len).map(|i| (i % 256) as u16).collect(),
+            b,
+        }
+    }
+
+    #[test]
+    fn splits_long_jobs_into_width_chunks() {
+        let mut batcher = Batcher::new(BatcherConfig { width: 4 });
+        batcher.push(&job(0, 10, 7));
+        let full = batcher.drain();
+        assert_eq!(full.len(), 2, "10 elements -> two full 4-wide batches");
+        assert_eq!(batcher.pending_elements(), 2);
+        let rest = batcher.flush();
+        assert_eq!(rest.len(), 1);
+        assert_eq!(rest[0].occupancy(), 2);
+        assert_eq!(rest[0].a.len(), 4, "padded to width");
+    }
+
+    #[test]
+    fn coalesces_jobs_sharing_broadcast_operand() {
+        let mut batcher = Batcher::new(BatcherConfig { width: 4 });
+        batcher.push(&job(0, 2, 9));
+        batcher.push(&job(1, 2, 9)); // same b: completes the batch
+        let full = batcher.drain();
+        assert_eq!(full.len(), 1);
+        assert_eq!(full[0].b, 9);
+        let jobs: Vec<u64> = full[0].lanes.iter().map(|l| l.job).collect();
+        assert_eq!(jobs, vec![0, 0, 1, 1]);
+    }
+
+    #[test]
+    fn distinct_broadcast_operands_never_mix() {
+        let mut batcher = Batcher::new(BatcherConfig { width: 4 });
+        batcher.push(&job(0, 3, 1));
+        batcher.push(&job(1, 3, 2));
+        assert!(batcher.drain().is_empty());
+        let flushed = batcher.flush();
+        assert_eq!(flushed.len(), 2);
+        assert!(flushed.iter().all(|b| b.lanes.iter().all(|l| {
+            (l.job == 0 && b.b == 1) || (l.job == 1 && b.b == 2)
+        })));
+    }
+
+    #[test]
+    fn lane_tags_reassemble_original_offsets() {
+        let mut batcher = Batcher::new(BatcherConfig { width: 8 });
+        batcher.push(&job(42, 13, 5));
+        let mut seen = vec![false; 13];
+        for batch in batcher.flush() {
+            for (i, tag) in batch.lanes.iter().enumerate() {
+                assert_eq!(tag.job, 42);
+                assert_eq!(batch.a[i] as usize % 256, tag.offset % 256);
+                seen[tag.offset] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

@@ -1,0 +1,156 @@
+//! Coordinator metrics: atomic counters + a fixed-bucket latency
+//! histogram (lock-free on the hot path).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Power-of-two microsecond buckets: [1us, 2us, 4us, ... ~34s].
+const BUCKETS: usize = 26;
+
+/// Lock-free latency histogram.
+#[derive(Default)]
+pub struct LatencyHistogram {
+    counts: [AtomicU64; BUCKETS],
+    sum_us: AtomicU64,
+    n: AtomicU64,
+}
+
+impl LatencyHistogram {
+    pub fn record(&self, d: Duration) {
+        let us = d.as_micros().max(1) as u64;
+        let bucket = (63 - us.leading_zeros() as usize).min(BUCKETS - 1);
+        self.counts[bucket].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.n.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    /// Approximate quantile from bucket boundaries (upper bound of the
+    /// bucket containing the q-th sample).
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let target = ((n as f64) * q).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            seen += c.load(Ordering::Relaxed);
+            if seen >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        1u64 << BUCKETS
+    }
+}
+
+/// Shared coordinator counters.
+#[derive(Default)]
+pub struct Metrics {
+    pub jobs_submitted: AtomicU64,
+    pub jobs_completed: AtomicU64,
+    pub batches_executed: AtomicU64,
+    pub lanes_executed: AtomicU64,
+    pub lanes_padded: AtomicU64,
+    pub errors: AtomicU64,
+    pub job_latency: LatencyHistogram,
+}
+
+/// Point-in-time copy for reporting.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub jobs_submitted: u64,
+    pub jobs_completed: u64,
+    pub batches_executed: u64,
+    pub lanes_executed: u64,
+    pub lanes_padded: u64,
+    pub errors: u64,
+    pub mean_latency_us: f64,
+    pub p50_latency_us: u64,
+    pub p99_latency_us: u64,
+}
+
+impl Metrics {
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            jobs_submitted: self.jobs_submitted.load(Ordering::Relaxed),
+            jobs_completed: self.jobs_completed.load(Ordering::Relaxed),
+            batches_executed: self.batches_executed.load(Ordering::Relaxed),
+            lanes_executed: self.lanes_executed.load(Ordering::Relaxed),
+            lanes_padded: self.lanes_padded.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            mean_latency_us: self.job_latency.mean_us(),
+            p50_latency_us: self.job_latency.quantile_us(0.5),
+            p99_latency_us: self.job_latency.quantile_us(0.99),
+        }
+    }
+
+    /// Average lane occupancy of executed batches, in [0, 1].
+    pub fn occupancy(&self, width: usize) -> f64 {
+        let lanes = self.lanes_executed.load(Ordering::Relaxed) as f64;
+        let batches = self.batches_executed.load(Ordering::Relaxed) as f64;
+        if batches == 0.0 {
+            0.0
+        } else {
+            lanes / (batches * width as f64)
+        }
+    }
+}
+
+impl std::fmt::Display for MetricsSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "jobs {}/{} done, batches {}, lanes {} (+{} pad), errors {}",
+            self.jobs_completed,
+            self.jobs_submitted,
+            self.batches_executed,
+            self.lanes_executed,
+            self.lanes_padded,
+            self.errors
+        )?;
+        write!(
+            f,
+            "latency: mean {:.1} us, p50 <= {} us, p99 <= {} us",
+            self.mean_latency_us, self.p50_latency_us, self.p99_latency_us
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_and_quantiles() {
+        let h = LatencyHistogram::default();
+        for us in [1u64, 2, 4, 100, 100, 100, 10_000] {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 7);
+        assert!(h.mean_us() > 0.0);
+        // p50 should be in the 100us region (bucket upper bound 128).
+        assert_eq!(h.quantile_us(0.5), 128);
+        assert!(h.quantile_us(0.99) >= 8192);
+    }
+
+    #[test]
+    fn occupancy_math() {
+        let m = Metrics::default();
+        m.batches_executed.store(10, Ordering::Relaxed);
+        m.lanes_executed.store(60, Ordering::Relaxed);
+        assert!((m.occupancy(8) - 0.75).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,26 @@
+//! L3 serving coordinator: routes vector × broadcast-scalar multiply jobs
+//! to execution backends with broadcast-reuse-aware dynamic batching.
+//!
+//! This is the request-path layer of the system (vLLM-router-shaped):
+//!
+//! ```text
+//!   submit(jobs) ──> Batcher ──> bounded queue ──> worker pool ──> results
+//!                    (chunk to fabric width,        each worker owns a
+//!                     group by broadcast operand)   Backend instance
+//! ```
+//!
+//! Backends: the gate-level simulated fabric (cycle/energy-accounted), the
+//! PJRT runtime executing the AOT artifacts, or a plain scalar ALU
+//! reference. Python is never on this path.
+
+mod backend;
+mod batcher;
+mod metrics;
+mod pool;
+mod service;
+
+pub use backend::{Backend, ExactBackend, PjrtBackend, SimBackend};
+pub use batcher::{Batch, Batcher, BatcherConfig, LaneTag};
+pub use metrics::{LatencyHistogram, Metrics, MetricsSnapshot};
+pub use pool::WorkerPool;
+pub use service::{Coordinator, CoordinatorConfig, JobResult};

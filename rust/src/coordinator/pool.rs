@@ -1,0 +1,137 @@
+//! Worker pool substrate: fixed threads, bounded work queue
+//! (backpressure), each worker owning one backend instance.
+//!
+//! Built on std threads + channels (the offline dependency set has no
+//! tokio); the queue is a `sync_channel` whose bound provides
+//! backpressure to submitters.
+
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use super::backend::Backend;
+use super::batcher::Batch;
+
+/// A batch paired with its sequence number (for result reassembly).
+pub struct WorkItem {
+    pub seq: u64,
+    pub batch: Batch,
+}
+
+/// Result of one executed work item.
+pub struct WorkDone {
+    pub seq: u64,
+    pub batch: Batch,
+    pub products: Result<Vec<u32>>,
+    pub worker: usize,
+}
+
+/// Fixed-size pool of backend-owning workers.
+pub struct WorkerPool {
+    tx: Option<SyncSender<WorkItem>>,
+    rx_done: Receiver<WorkDone>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `backends.len()` workers sharing a bounded queue of
+    /// `queue_depth` items.
+    pub fn spawn(
+        backends: Vec<Box<dyn Backend>>,
+        queue_depth: usize,
+    ) -> Self {
+        let (tx, rx) = sync_channel::<WorkItem>(queue_depth);
+        let rx = Arc::new(Mutex::new(rx));
+        let (tx_done, rx_done) = std::sync::mpsc::channel::<WorkDone>();
+        let mut handles = Vec::new();
+        for (worker_id, mut backend) in backends.into_iter().enumerate() {
+            let rx = Arc::clone(&rx);
+            let tx_done = tx_done.clone();
+            handles.push(std::thread::spawn(move || loop {
+                let item = {
+                    let guard = rx.lock().expect("queue lock");
+                    guard.recv()
+                };
+                let Ok(item) = item else { break };
+                let products = backend.execute(&item.batch);
+                let done = WorkDone {
+                    seq: item.seq,
+                    batch: item.batch,
+                    products,
+                    worker: worker_id,
+                };
+                if tx_done.send(done).is_err() {
+                    break;
+                }
+            }));
+        }
+        Self {
+            tx: Some(tx),
+            rx_done,
+            handles,
+        }
+    }
+
+    /// Submit a batch (blocks when the queue is full — backpressure).
+    pub fn submit(&self, item: WorkItem) -> Result<()> {
+        self.tx
+            .as_ref()
+            .expect("pool not shut down")
+            .send(item)
+            .map_err(|_| anyhow::anyhow!("worker pool closed"))
+    }
+
+    /// Blocking receive of the next completed item.
+    pub fn recv(&self) -> Result<WorkDone> {
+        self.rx_done
+            .recv()
+            .map_err(|_| anyhow::anyhow!("all workers exited"))
+    }
+
+    /// Close the queue and join all workers.
+    pub fn shutdown(mut self) {
+        self.tx.take(); // close the channel
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::ExactBackend;
+    use crate::coordinator::batcher::LaneTag;
+
+    fn mk_batch(a: Vec<u16>, b: u16) -> Batch {
+        let lanes = (0..a.len())
+            .map(|i| LaneTag { job: 0, offset: i })
+            .collect();
+        Batch { a, b, lanes }
+    }
+
+    #[test]
+    fn pool_executes_and_reassembles_by_seq() {
+        let backends: Vec<Box<dyn Backend>> =
+            (0..4).map(|_| Box::new(ExactBackend) as Box<dyn Backend>).collect();
+        let pool = WorkerPool::spawn(backends, 8);
+        for seq in 0..32u64 {
+            pool.submit(WorkItem {
+                seq,
+                batch: mk_batch(vec![seq as u16, 2], 3),
+            })
+            .unwrap();
+        }
+        let mut seen = vec![false; 32];
+        for _ in 0..32 {
+            let done = pool.recv().unwrap();
+            let products = done.products.unwrap();
+            assert_eq!(products[0], done.seq as u32 * 3);
+            seen[done.seq as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+        pool.shutdown();
+    }
+}

@@ -1,0 +1,215 @@
+//! The coordinator service: submit jobs, get per-job results back, with
+//! batching, worker dispatch, reassembly and metrics.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::workload::VectorJob;
+
+use super::backend::Backend;
+use super::batcher::{Batch, Batcher, BatcherConfig};
+use super::metrics::Metrics;
+use super::pool::{WorkItem, WorkerPool};
+
+/// Completed job: products in original element order.
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    pub id: u64,
+    pub products: Vec<u32>,
+}
+
+/// Coordinator configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct CoordinatorConfig {
+    /// Fabric vector width.
+    pub width: usize,
+    /// Bounded work-queue depth (backpressure point).
+    pub queue_depth: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self {
+            width: 16,
+            queue_depth: 64,
+        }
+    }
+}
+
+/// Orchestrates batcher -> worker pool -> reassembly.
+pub struct Coordinator {
+    cfg: CoordinatorConfig,
+    pool: WorkerPool,
+    pub metrics: Arc<Metrics>,
+}
+
+struct PendingJob {
+    products: Vec<u32>,
+    remaining: usize,
+    started: Instant,
+}
+
+impl Coordinator {
+    /// Create a coordinator over a set of backend instances (one worker
+    /// thread per backend).
+    pub fn new(cfg: CoordinatorConfig, backends: Vec<Box<dyn Backend>>) -> Self {
+        let pool = WorkerPool::spawn(backends, cfg.queue_depth);
+        Self {
+            cfg,
+            pool,
+            metrics: Arc::new(Metrics::default()),
+        }
+    }
+
+    /// Process a closed set of jobs to completion (batch, dispatch,
+    /// reassemble). Returns results sorted by job id.
+    pub fn run_jobs(&self, jobs: &[VectorJob]) -> Result<Vec<JobResult>> {
+        use std::sync::atomic::Ordering;
+
+        let mut batcher = Batcher::new(BatcherConfig {
+            width: self.cfg.width,
+        });
+        let mut pending: HashMap<u64, PendingJob> = HashMap::new();
+        let now = Instant::now();
+        for job in jobs {
+            self.metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
+            pending.insert(
+                job.id,
+                PendingJob {
+                    products: vec![0; job.a.len()],
+                    remaining: job.a.len(),
+                    started: now,
+                },
+            );
+            batcher.push(job);
+        }
+        let mut batches = batcher.flush();
+        // Dispatch with bounded in-flight: submit all (queue blocks), then
+        // drain. To avoid deadlock with a bounded queue we interleave
+        // submit/recv.
+        let total = batches.len() as u64;
+        let mut results: Vec<JobResult> = Vec::with_capacity(jobs.len());
+        let mut submitted = 0u64;
+        let mut received = 0u64;
+        let mut iter = batches.drain(..);
+        let mut next: Option<(u64, Batch)> = iter.next().map(|b| (0, b));
+        let mut seq = 0u64;
+        while received < total {
+            // Opportunistically submit while capacity is likely available.
+            if let Some((_, batch)) = next.take() {
+                self.pool.submit(WorkItem { seq, batch })?;
+                submitted += 1;
+                seq += 1;
+                next = iter.next().map(|b| (seq, b));
+                if submitted - received
+                    < self.cfg.queue_depth as u64 && next.is_some()
+                {
+                    continue;
+                }
+            }
+            let done = self.pool.recv()?;
+            received += 1;
+            self.metrics
+                .batches_executed
+                .fetch_add(1, Ordering::Relaxed);
+            let products = match done.products {
+                Ok(p) => p,
+                Err(e) => {
+                    self.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                    return Err(e);
+                }
+            };
+            self.metrics
+                .lanes_executed
+                .fetch_add(done.batch.lanes.len() as u64, Ordering::Relaxed);
+            self.metrics.lanes_padded.fetch_add(
+                (done.batch.a.len() - done.batch.lanes.len()) as u64,
+                Ordering::Relaxed,
+            );
+            for (lane, tag) in done.batch.lanes.iter().enumerate() {
+                let entry = pending
+                    .get_mut(&tag.job)
+                    .expect("lane belongs to a pending job");
+                entry.products[tag.offset] = products[lane];
+                entry.remaining -= 1;
+                if entry.remaining == 0 {
+                    let fin = pending.remove(&tag.job).expect("present");
+                    self.metrics
+                        .job_latency
+                        .record(fin.started.elapsed());
+                    self.metrics
+                        .jobs_completed
+                        .fetch_add(1, Ordering::Relaxed);
+                    results.push(JobResult {
+                        id: tag.job,
+                        products: fin.products,
+                    });
+                }
+            }
+        }
+        anyhow::ensure!(pending.is_empty(), "jobs left unassembled");
+        results.sort_by_key(|r| r.id);
+        Ok(results)
+    }
+
+    /// Shut the pool down, joining workers.
+    pub fn shutdown(self) {
+        self.pool.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::{ExactBackend, SimBackend};
+    use crate::multipliers::Arch;
+    use crate::workload::broadcast_jobs;
+
+    #[test]
+    fn end_to_end_exact_backends() {
+        let cfg = CoordinatorConfig {
+            width: 8,
+            queue_depth: 4,
+        };
+        let backends: Vec<Box<dyn Backend>> = (0..3)
+            .map(|_| Box::new(ExactBackend) as Box<dyn Backend>)
+            .collect();
+        let coord = Coordinator::new(cfg, backends);
+        let jobs = broadcast_jobs(40, 1, 30, 11);
+        let results = coord.run_jobs(&jobs).unwrap();
+        assert_eq!(results.len(), jobs.len());
+        for (job, res) in jobs.iter().zip(&results) {
+            assert_eq!(res.id, job.id);
+            assert_eq!(res.products, job.expected(), "job {}", job.id);
+        }
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap.errors, 0);
+        assert_eq!(snap.jobs_completed, 40);
+        assert!(snap.batches_executed > 0);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn end_to_end_simulated_nibble_fabric() {
+        let cfg = CoordinatorConfig {
+            width: 4,
+            queue_depth: 4,
+        };
+        let backends: Vec<Box<dyn Backend>> = (0..2)
+            .map(|_| {
+                Box::new(SimBackend::new(Arch::Nibble, 4).unwrap())
+                    as Box<dyn Backend>
+            })
+            .collect();
+        let coord = Coordinator::new(cfg, backends);
+        let jobs = broadcast_jobs(12, 2, 10, 5);
+        let results = coord.run_jobs(&jobs).unwrap();
+        for (job, res) in jobs.iter().zip(&results) {
+            assert_eq!(res.products, job.expected());
+        }
+        coord.shutdown();
+    }
+}

@@ -1,0 +1,212 @@
+//! Drive a vector unit through multiply operations, cycle-accurately.
+
+use anyhow::{ensure, Result};
+
+use crate::multipliers::Arch;
+use crate::netlist::Netlist;
+use crate::sim::Simulator;
+use crate::synth::optimize;
+use crate::util::Xoshiro256;
+
+/// A built (and by default synthesis-optimized) vector unit.
+pub struct VectorUnit {
+    pub arch: Arch,
+    pub n: usize,
+    pub netlist: Netlist,
+}
+
+/// Result of one vector × broadcast-scalar operation.
+#[derive(Clone, Debug)]
+pub struct OpResult {
+    pub products: Vec<u32>,
+    /// Clock cycles from operand latch to done (combinational designs: 1).
+    pub cycles: u64,
+}
+
+/// Aggregate statistics of a driven operation stream.
+#[derive(Clone, Debug, Default)]
+pub struct StreamStats {
+    pub ops: u64,
+    pub elements: u64,
+    pub cycles: u64,
+    pub errors: u64,
+}
+
+impl VectorUnit {
+    /// Build + optimize the unit (what area/power are measured on).
+    pub fn new(arch: Arch, n: usize) -> Self {
+        let netlist = optimize(&arch.build(n));
+        Self { arch, n, netlist }
+    }
+
+    /// Build without optimization (keeps internal named signals for VCD).
+    pub fn new_raw(arch: Arch, n: usize) -> Self {
+        Self {
+            arch,
+            n,
+            netlist: arch.build(n),
+        }
+    }
+
+    pub fn simulator(&self) -> Result<Simulator<'_>> {
+        Simulator::new(&self.netlist)
+    }
+
+    /// Pack N 8-bit elements into the `a` port word.
+    pub fn pack_a(&self, a: &[u16]) -> u64 {
+        assert!(self.n <= 8, "pack_a fits at most 8 elements in a u64");
+        a.iter()
+            .enumerate()
+            .fold(0u64, |acc, (i, &e)| acc | ((e as u64 & 0xFF) << (8 * i)))
+    }
+
+    /// Execute one vector op; `a.len()` must equal `n`.
+    pub fn run_op(
+        &self,
+        sim: &mut Simulator<'_>,
+        a: &[u16],
+        b: u16,
+    ) -> Result<OpResult> {
+        ensure!(a.len() == self.n, "operand count != vector width");
+        // Set element inputs bit by bit (the port may exceed 64 bits).
+        let port = self
+            .netlist
+            .input("a")
+            .expect("vector unit has an 'a' port")
+            .clone();
+        self.set_wide(sim, &port, a)?;
+        sim.set_input("b", b as u64)?;
+
+        if self.arch.is_combinational() {
+            sim.set_input("start", 1)?;
+            sim.settle();
+            let products = self.read_products(sim);
+            // Advance one clock so back-to-back ops consume 1 cycle each
+            // (the paper's single-cycle accounting).
+            sim.step();
+            sim.set_input("start", 0)?;
+            return Ok(OpResult {
+                products,
+                cycles: 1,
+            });
+        }
+
+        sim.set_input("start", 1)?;
+        sim.step();
+        sim.set_input("start", 0)?;
+        let mut cycles = 0u64;
+        let max = self.arch.latency_cycles(self.n) + 8;
+        loop {
+            sim.settle();
+            if sim.get_output("done")? == 1 {
+                break;
+            }
+            sim.step();
+            cycles += 1;
+            ensure!(cycles <= max, "unit hung: no done within {max} cycles");
+        }
+        sim.step();
+        cycles += 1;
+        Ok(OpResult {
+            products: self.read_products(sim),
+            cycles,
+        })
+    }
+
+    fn set_wide(
+        &self,
+        sim: &mut Simulator<'_>,
+        port: &crate::netlist::Port,
+        a: &[u16],
+    ) -> Result<()> {
+        // set_input takes u64; for wide `a` ports drive per element chunk
+        // by reusing the port bit list directly.
+        for (i, &e) in a.iter().enumerate() {
+            for bit in 0..8 {
+                let net = port.bits[8 * i + bit];
+                let v = (e >> bit) & 1 != 0;
+                // Route through the public API to keep toggle accounting:
+                // Simulator has no per-net setter, so temporarily emulate
+                // via direct value comparison.
+                sim.poke_net(net, v);
+            }
+        }
+        Ok(())
+    }
+
+    fn read_products(&self, sim: &Simulator<'_>) -> Vec<u32> {
+        let port = self
+            .netlist
+            .output("r")
+            .expect("vector unit has an 'r' port");
+        (0..self.n)
+            .map(|i| {
+                let bits = &port.bits[16 * i..16 * (i + 1)];
+                sim.peek_bits(bits) as u32
+            })
+            .collect()
+    }
+
+    /// Drive `ops` random vector operations back-to-back (the power
+    /// stimulus: "identical stimulus" across architectures — same seed,
+    /// same operand stream) and verify every product. Returns statistics;
+    /// the simulator's activity counters are left loaded for power
+    /// estimation.
+    pub fn run_stream(
+        &self,
+        sim: &mut Simulator<'_>,
+        ops: u64,
+        seed: u64,
+    ) -> Result<StreamStats> {
+        let mut rng = Xoshiro256::new(seed);
+        let mut stats = StreamStats::default();
+        for _ in 0..ops {
+            let a: Vec<u16> = (0..self.n).map(|_| rng.operand8()).collect();
+            let b = rng.operand8();
+            let res = self.run_op(sim, &a, b)?;
+            stats.ops += 1;
+            stats.elements += self.n as u64;
+            stats.cycles += res.cycles;
+            for (x, p) in a.iter().zip(&res.products) {
+                if *p != *x as u32 * b as u32 {
+                    stats.errors += 1;
+                }
+            }
+        }
+        Ok(stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_arch_runs_a_stream_correctly() {
+        for arch in Arch::ALL {
+            let unit = VectorUnit::new(arch, 4);
+            let mut sim = unit.simulator().unwrap();
+            let stats = unit.run_stream(&mut sim, 20, 7).unwrap();
+            assert_eq!(stats.errors, 0, "{arch} produced wrong products");
+            assert_eq!(stats.ops, 20);
+            // Cycle accounting equals the Table 2 model.
+            assert_eq!(
+                stats.cycles,
+                20 * arch.latency_cycles(4),
+                "{arch} cycle count"
+            );
+        }
+    }
+
+    #[test]
+    fn wide_vector_unit_16_elements() {
+        let unit = VectorUnit::new(Arch::Nibble, 16);
+        let mut sim = unit.simulator().unwrap();
+        let a: Vec<u16> = (0..16).map(|i| (i * 17) as u16).collect();
+        let res = unit.run_op(&mut sim, &a, 201).unwrap();
+        assert_eq!(res.cycles, 32);
+        for (i, &x) in a.iter().enumerate() {
+            assert_eq!(res.products[i], x as u32 * 201);
+        }
+    }
+}

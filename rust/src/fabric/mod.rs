@@ -1,0 +1,10 @@
+//! Vector-unit execution harness: drives the generated netlists through
+//! the common port contract, measures cycle counts / activity, and
+//! produces the per-architecture evaluation data behind Table 2 and
+//! Fig. 4 (area via [`crate::synth`], power via [`crate::tech::power`]).
+
+mod harness;
+mod sweep;
+
+pub use harness::{OpResult, StreamStats, VectorUnit};
+pub use sweep::{evaluate_arch, sweep_paper_set, ArchEval, SweepRow};

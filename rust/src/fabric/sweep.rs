@@ -1,0 +1,161 @@
+//! Full-evaluation sweep: synthesize + simulate + measure every
+//! architecture at every vector width — the data source for the Fig. 4
+//! and Table 2 reproductions.
+
+use anyhow::Result;
+
+use crate::fabric::VectorUnit;
+use crate::multipliers::Arch;
+use crate::synth::{synthesize, SynthReport};
+use crate::tech::{Calibration, PowerBreakdown, PowerModel, TechLibrary};
+
+/// One (architecture, width) evaluation point.
+#[derive(Clone, Debug)]
+pub struct ArchEval {
+    pub arch: Arch,
+    pub n: usize,
+    /// Raw model area (µm², pre-calibration).
+    pub area_um2: f64,
+    /// Raw model power (pre-calibration).
+    pub power: PowerBreakdown,
+    pub critical_path_ps: f64,
+    pub meets_1ghz: bool,
+    /// Measured cycles for one vector op (must equal Table 2's model).
+    pub cycles_per_op: u64,
+    /// Verified multiply count during the power stimulus.
+    pub ops_verified: u64,
+}
+
+/// Evaluate one architecture at one width: synthesis report + power from a
+/// verified random stimulus of `ops` vector operations.
+pub fn evaluate_arch(
+    arch: Arch,
+    n: usize,
+    lib: &TechLibrary,
+    ops: u64,
+    seed: u64,
+) -> Result<ArchEval> {
+    let report: SynthReport = synthesize(&arch.build(n), lib)?;
+    let unit = VectorUnit {
+        arch,
+        n,
+        netlist: report.netlist.clone(),
+    };
+    let mut sim = unit.simulator()?;
+    let stats = unit.run_stream(&mut sim, ops, seed)?;
+    anyhow::ensure!(
+        stats.errors == 0,
+        "{arch} x{n}: {} wrong products under power stimulus",
+        stats.errors
+    );
+    let power = PowerModel::new(lib).estimate(&unit.netlist, &sim);
+    Ok(ArchEval {
+        arch,
+        n,
+        area_um2: report.area_um2,
+        power,
+        critical_path_ps: report.timing.critical_path_ps,
+        meets_1ghz: report.timing.meets_1ghz,
+        cycles_per_op: stats.cycles / stats.ops,
+        ops_verified: stats.ops,
+    })
+}
+
+/// A calibrated sweep row (what the Fig. 4 tables print).
+#[derive(Clone, Debug)]
+pub struct SweepRow {
+    pub eval: ArchEval,
+    /// Calibrated area (µm², comparable to the paper's Fig. 4a).
+    pub area_cal: f64,
+    /// Calibrated total power (mW, comparable to Fig. 4b).
+    pub power_cal: f64,
+    /// Normalized improvement relative to the shift-add baseline at the
+    /// same width (the paper's normalization): baseline / this.
+    pub area_vs_shift_add: f64,
+    pub power_vs_shift_add: f64,
+    /// Energy per vector operation (raw model, fJ): power × time-per-op.
+    /// The throughput-normalized figure of merit — designs differ in
+    /// cycles per op, so raw mW alone favors slow designs.
+    pub energy_per_op_fj: f64,
+    pub energy_vs_shift_add: f64,
+}
+
+/// Run the paper's full sweep (5 architectures × the given widths),
+/// calibrate on the shift-add 4-operand anchor, and normalize each width
+/// against its shift-add baseline.
+pub fn sweep_paper_set(
+    widths: &[usize],
+    lib: &TechLibrary,
+    ops: u64,
+    seed: u64,
+) -> Result<(Vec<SweepRow>, Calibration)> {
+    let mut evals = Vec::new();
+    for &n in widths {
+        for arch in Arch::PAPER_SET {
+            evals.push(evaluate_arch(arch, n, lib, ops, seed)?);
+        }
+    }
+    // Calibrate on shift-add @ 4 (or the smallest width present).
+    let anchor_n = *widths.iter().min().expect("non-empty widths");
+    let anchor = evals
+        .iter()
+        .find(|e| e.arch == Arch::ShiftAdd && e.n == anchor_n)
+        .expect("anchor present");
+    let cal =
+        Calibration::from_anchor(anchor.area_um2, anchor.power.total_mw());
+
+    let energy_per_op = |e: &ArchEval| {
+        // E = P_total × t_op; t_op = cycles_per_op / f_clk.
+        e.power.total_mw() * 1e-3
+            * (e.cycles_per_op as f64 / crate::tech::CLOCK_HZ)
+            * 1e15
+    };
+    let rows = evals
+        .iter()
+        .map(|e| {
+            let base = evals
+                .iter()
+                .find(|b| b.arch == Arch::ShiftAdd && b.n == e.n)
+                .expect("baseline present");
+            SweepRow {
+                eval: e.clone(),
+                area_cal: cal.area.apply(e.area_um2),
+                power_cal: cal.power.apply(e.power.total_mw()),
+                area_vs_shift_add: base.area_um2 / e.area_um2,
+                power_vs_shift_add: base.power.total_mw()
+                    / e.power.total_mw(),
+                energy_per_op_fj: energy_per_op(e),
+                energy_vs_shift_add: energy_per_op(base) / energy_per_op(e),
+            }
+        })
+        .collect();
+    Ok((rows, cal))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nibble_beats_baselines_at_width_8() {
+        let lib = TechLibrary::hpc28();
+        let (rows, _cal) = sweep_paper_set(&[8], &lib, 8, 3).unwrap();
+        let get = |a: Arch| {
+            rows.iter().find(|r| r.eval.arch == a).unwrap()
+        };
+        let nib = get(Arch::Nibble);
+        let sa = get(Arch::ShiftAdd);
+        let lut = get(Arch::LutArray);
+        // Paper's headline shape: nibble smallest, LUT largest.
+        assert!(nib.eval.area_um2 < sa.eval.area_um2);
+        assert!(sa.eval.area_um2 < lut.eval.area_um2);
+        // Cycle counts equal the analytical model.
+        assert_eq!(nib.eval.cycles_per_op, 16);
+        assert_eq!(sa.eval.cycles_per_op, 64);
+        assert_eq!(lut.eval.cycles_per_op, 1);
+        // Calibration: anchor row maps exactly to the paper value.
+        assert!(
+            (sa.area_cal - crate::tech::ANCHOR_AREA_UM2).abs() < 1e-6
+        );
+    }
+}

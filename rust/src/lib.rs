@@ -1,0 +1,49 @@
+//! # nibblemul — logic-reuse nibble multiplier for low-power vector computing
+//!
+//! Production-grade reproduction of *"A Logic-Reuse Approach to Nibble-based
+//! Multiplier Design for Low Power Vector Computing"* (Chowdhury & Rahman,
+//! CS.AR 2026) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the hardware substrate the paper's evaluation
+//!   needs: a gate-level netlist IR ([`netlist`]), a cycle-accurate logic
+//!   simulator with switching-activity capture and VCD waveforms ([`sim`]),
+//!   a 28 nm-class technology model with STA and activity-based power
+//!   ([`tech`]), a synthesis-lite flow ([`synth`]), generators for all six
+//!   multiplier architectures ([`multipliers`]), the vector-unit
+//!   organizations ([`fabric`]), word-level golden models ([`model`]), a
+//!   serving coordinator ([`coordinator`]) and the PJRT runtime that
+//!   executes the AOT-lowered JAX artifacts ([`runtime`]).
+//! * **L2/L1 (python/, build-time only)** — the same nibble algorithm as a
+//!   Pallas kernel inside a quantized-MLP JAX graph, lowered once to HLO
+//!   text; Python never runs at serving time.
+//!
+//! See `DESIGN.md` for the system inventory and experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod bench;
+pub mod cli;
+pub mod coordinator;
+pub mod fabric;
+pub mod model;
+pub mod multipliers;
+pub mod netlist;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod synth;
+pub mod tech;
+pub mod testkit;
+pub mod util;
+pub mod workload;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Operand bit-width the paper evaluates (8-bit elements).
+pub const OPERAND_BITS: usize = 8;
+/// Product bit-width for 8×8 unsigned multiplication.
+pub const PRODUCT_BITS: usize = 16;
+/// Nibble width (the paper's fixed decomposition granularity).
+pub const NIBBLE_BITS: usize = 4;
+/// Vector widths evaluated in the paper (4-, 8-, 16-operand configurations).
+pub const VECTOR_WIDTHS: [usize; 3] = [4, 8, 16];

@@ -1,0 +1,320 @@
+//! nibblemul CLI: reproduce the paper's tables/figures, serve multiply
+//! jobs through the coordinator, and run the end-to-end INT8 inference
+//! workload.
+//!
+//! Subcommands:
+//!   table2              Table 2 (cycle latency, measured)
+//!   fig3                Fig. 3 waveforms (VCD + timeline)
+//!   fig4                Fig. 4(a)+(b) area/power sweep
+//!   serve               coordinator demo over a simulated fabric
+//!   mlp                 INT8 MLP inference (pjrt | sim | exact backends)
+//!   synth               synthesis report for one architecture
+//!   report              everything above, in order (paper reproduction)
+//!   help
+
+use std::io::Write;
+
+use anyhow::{anyhow, Result};
+
+use nibblemul::cli::Args;
+use nibblemul::coordinator::{
+    Backend, Batch, Coordinator, CoordinatorConfig, LaneTag, SimBackend,
+};
+use nibblemul::model::quant::QuantMlp;
+use nibblemul::multipliers::Arch;
+use nibblemul::report::{fig3_run, fig4_report, table2_report};
+use nibblemul::runtime::{ArtifactSet, Runtime};
+use nibblemul::synth::synthesize;
+use nibblemul::tech::TechLibrary;
+use nibblemul::util::Stopwatch;
+use nibblemul::workload::broadcast_jobs;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.command.as_str() {
+        "table2" => cmd_table2(args),
+        "fig3" => cmd_fig3(args),
+        "fig4" => cmd_fig4(args),
+        "serve" => cmd_serve(args),
+        "mlp" => cmd_mlp(args),
+        "synth" => cmd_synth(args),
+        "report" => cmd_report(args),
+        _ => {
+            print!("{HELP}");
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "\
+nibblemul — logic-reuse nibble multiplier reproduction
+
+USAGE: nibblemul <command> [flags]
+
+COMMANDS
+  table2  [--n 4]                         Table 2 cycle latency (measured)
+  fig3    [--out-dir artifacts]           Fig. 3 VCD waveforms + timeline
+  fig4    [--widths 4,8,16] [--ops 32]    Fig. 4 area/power sweep
+  serve   [--arch nibble] [--width 16] [--workers 4] [--jobs 512]
+                                          coordinator over simulated fabric
+  mlp     [--backend pjrt|sim|exact] [--arch nibble] [--limit 64]
+                                          INT8 inference end-to-end
+  synth   [--arch nibble] [--n 8]         synthesis report for one design
+  report  [--ops 32]                      full paper reproduction
+";
+
+fn cmd_table2(args: &Args) -> Result<()> {
+    let n = args.get_usize("n", 4)?;
+    println!("{}", table2_report(n)?);
+    Ok(())
+}
+
+fn cmd_fig3(args: &Args) -> Result<()> {
+    let out_dir = args.get_or("out-dir", "artifacts");
+    let a = [12u16, 34, 56, 78, 90, 123, 200, 255];
+    let res = fig3_run(&a, 173)?;
+    print!("{}", res.text);
+    std::fs::create_dir_all(&out_dir)?;
+    let p_a = format!("{out_dir}/fig3a_nibble.vcd");
+    let p_b = format!("{out_dir}/fig3b_lut.vcd");
+    std::fs::File::create(&p_a)?.write_all(res.nibble_vcd.as_bytes())?;
+    std::fs::File::create(&p_b)?.write_all(res.lut_vcd.as_bytes())?;
+    println!("waveforms: {p_a}, {p_b}");
+    Ok(())
+}
+
+fn cmd_fig4(args: &Args) -> Result<()> {
+    let widths = args.get_usize_list("widths", &[4, 8, 16])?;
+    let ops = args.get_u64("ops", 32)?;
+    let lib = TechLibrary::hpc28();
+    let sw = Stopwatch::start();
+    let (text, _rows) = fig4_report(&widths, &lib, ops, 2026)?;
+    println!("{text}");
+    println!("(sweep took {:.1}s)", sw.elapsed_secs());
+    Ok(())
+}
+
+fn parse_arch(args: &Args, default: Arch) -> Result<Arch> {
+    match args.get("arch") {
+        None => Ok(default),
+        Some(s) => Arch::parse(s).ok_or_else(|| anyhow!("unknown arch {s}")),
+    }
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let arch = parse_arch(args, Arch::Nibble)?;
+    let width = args.get_usize("width", 16)?;
+    let workers = args.get_usize("workers", 4)?;
+    let n_jobs = args.get_usize("jobs", 512)?;
+    println!(
+        "coordinator: {workers} workers x sim:{arch} width {width}, \
+         {n_jobs} jobs"
+    );
+    let backends: Vec<Box<dyn Backend>> = (0..workers)
+        .map(|_| {
+            SimBackend::new(arch, width)
+                .map(|b| Box::new(b) as Box<dyn Backend>)
+        })
+        .collect::<Result<_>>()?;
+    let coord = Coordinator::new(
+        CoordinatorConfig {
+            width,
+            queue_depth: workers * 4,
+        },
+        backends,
+    );
+    let jobs = broadcast_jobs(n_jobs, 1, width * 3, 7);
+    let sw = Stopwatch::start();
+    let results = coord.run_jobs(&jobs)?;
+    let elapsed = sw.elapsed_secs();
+    let correct = jobs
+        .iter()
+        .zip(&results)
+        .filter(|(job, res)| res.products == job.expected())
+        .count();
+    let elements: usize = jobs.iter().map(|j| j.a.len()).sum();
+    println!("{}", coord.metrics.snapshot());
+    println!(
+        "occupancy {:.1}%, correct {}/{}",
+        coord.metrics.occupancy(width) * 100.0,
+        correct,
+        jobs.len()
+    );
+    println!(
+        "throughput: {:.0} jobs/s, {:.0} multiplies/s (wall)",
+        jobs.len() as f64 / elapsed,
+        elements as f64 / elapsed
+    );
+    coord.shutdown();
+    Ok(())
+}
+
+fn cmd_mlp(args: &Args) -> Result<()> {
+    let backend = args.get_or("backend", "pjrt");
+    let limit = args.get_usize("limit", 64)?;
+    let artifacts = ArtifactSet::new(args.get_or("artifacts", "artifacts"));
+    anyhow::ensure!(
+        artifacts.available(),
+        "artifacts not built — run `make artifacts` first"
+    );
+    let mlp = artifacts.weights()?;
+    let ts = artifacts.testset()?;
+    let n = limit.min(ts.x.len());
+    println!(
+        "INT8 MLP inference: {} samples, {} multiplies each, backend {}",
+        n,
+        mlp.mults_per_inference(),
+        backend
+    );
+    let sw = Stopwatch::start();
+    let logits: Vec<Vec<i32>> = match backend.as_str() {
+        "pjrt" => {
+            let mut rt = Runtime::cpu(artifacts.clone())?;
+            let batch = 16usize;
+            let dim = ts.x[0].len();
+            let mut out = Vec::new();
+            for chunk in ts.x[..n].chunks(batch) {
+                let mut x: Vec<i32> =
+                    chunk.iter().flatten().copied().collect();
+                // pad the final chunk to the compiled batch size
+                x.resize(batch * dim, 0);
+                let flat = rt.mlp_int8(&x, batch as i64, dim as i64)?;
+                for row in flat.chunks(10).take(chunk.len()) {
+                    out.push(row.to_vec());
+                }
+            }
+            out
+        }
+        "exact" => {
+            mlp.forward(&ts.x[..n].to_vec(), |a, b| a as u32 * b as u32)
+        }
+        "sim" => {
+            let arch = parse_arch(args, Arch::Nibble)?;
+            let mut be = SimBackend::new(arch, 16)?;
+            let out = forward_on_fabric(&mlp, &ts.x[..n], &mut be)?;
+            println!(
+                "fabric: {} cycles total ({} per inference), {:.2} nJ total",
+                be.cycles(),
+                be.cycles() / n as u64,
+                be.energy_fj() / 1e6,
+            );
+            out
+        }
+        other => anyhow::bail!("unknown backend {other}"),
+    };
+    let elapsed = sw.elapsed_secs();
+    let pred = QuantMlp::classify(&logits);
+    let correct = pred
+        .iter()
+        .zip(&ts.y[..n])
+        .filter(|(p, y)| p == y)
+        .count();
+    println!(
+        "accuracy {}/{} = {:.2}%  ({:.2}s, {:.1} inf/s)",
+        correct,
+        n,
+        100.0 * correct as f64 / n as f64,
+        elapsed,
+        n as f64 / elapsed
+    );
+    Ok(())
+}
+
+/// Run the quantized MLP with every u8×u8 product executed on the
+/// gate-level fabric: each activation is the broadcast operand against
+/// 16-wide chunks of its weight row — exactly the paper's vector × scalar
+/// reuse pattern.
+fn forward_on_fabric(
+    mlp: &QuantMlp,
+    xs: &[Vec<i32>],
+    be: &mut SimBackend,
+) -> Result<Vec<Vec<i32>>> {
+    let mut out = Vec::with_capacity(xs.len());
+    for x in xs {
+        let mut h: Vec<i32> = x.clone();
+        for (li, layer) in mlp.layers.iter().enumerate() {
+            let mut products = vec![0u32; layer.n_in * layer.n_out];
+            for (j, &xj) in h.iter().enumerate() {
+                let row =
+                    &layer.w_q[j * layer.n_out..(j + 1) * layer.n_out];
+                for chunk_start in (0..layer.n_out).step_by(16) {
+                    let end = (chunk_start + 16).min(layer.n_out);
+                    let a: Vec<u16> = row[chunk_start..end]
+                        .iter()
+                        .map(|&w| w as u16)
+                        .collect();
+                    let lanes: Vec<LaneTag> = (0..a.len())
+                        .map(|i| LaneTag { job: 0, offset: i })
+                        .collect();
+                    let batch = Batch {
+                        a,
+                        b: xj as u16,
+                        lanes,
+                    };
+                    let p = be.execute(&batch)?;
+                    for (k, v) in p.into_iter().enumerate() {
+                        products[j * layer.n_out + chunk_start + k] = v;
+                    }
+                }
+            }
+            // Zero-point algebra + bias over the fabric products
+            // (mirrors model::quant::QuantLayer::accumulate).
+            let sum_x: i64 = h.iter().map(|&v| v as i64).sum();
+            let mut acc = vec![0i32; layer.n_out];
+            for (o, acc_o) in acc.iter_mut().enumerate() {
+                let mut s: i64 = 0;
+                let mut sum_w: i64 = 0;
+                for j in 0..layer.n_in {
+                    s += products[j * layer.n_out + o] as i64;
+                    sum_w += layer.w_q[j * layer.n_out + o] as i64;
+                }
+                *acc_o = (s - layer.w_zp as i64 * sum_x
+                    - layer.in_zp as i64 * sum_w
+                    + layer.n_in as i64
+                        * layer.in_zp as i64
+                        * layer.w_zp as i64
+                    + layer.bias_i32[o] as i64) as i32;
+            }
+            if li + 1 < mlp.layers.len() {
+                h = layer.requant(&acc);
+            } else {
+                out.push(acc);
+            }
+        }
+    }
+    Ok(out)
+}
+
+fn cmd_synth(args: &Args) -> Result<()> {
+    let arch = parse_arch(args, Arch::Nibble)?;
+    let n = args.get_usize("n", 8)?;
+    let lib = TechLibrary::hpc28();
+    let rep = synthesize(&arch.build(n), &lib)?;
+    println!("{rep}");
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    println!("==============================================");
+    println!(" nibblemul — full paper reproduction");
+    println!("==============================================\n");
+    cmd_table2(args)?;
+    println!();
+    cmd_fig3(args)?;
+    println!();
+    cmd_fig4(args)?;
+    Ok(())
+}

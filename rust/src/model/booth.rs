@@ -1,0 +1,59 @@
+//! Word-level model of the Booth (radix-2) sequential multiplier as the
+//! paper benchmarks it: two Booth steps per cycle → 4 cycles for an 8-bit
+//! multiplier (Table 2: O(W/2), 4 CCs), with an unsigned-operand
+//! correction (`+A·2⁸` when B[7] is set) applied at read-out.
+
+/// Radix-2 Booth digit for bit position i of B: `b[i-1] - b[i]` ∈ {-1,0,1}.
+pub fn booth_digits(b: u16) -> [i8; 8] {
+    let mut d = [0i8; 8];
+    let mut prev = 0i8;
+    for (i, digit) in d.iter_mut().enumerate() {
+        let cur = ((b >> i) & 1) as i8;
+        *digit = prev - cur;
+        prev = cur;
+    }
+    d
+}
+
+/// Booth multiply of unsigned 8-bit operands: signed Booth recoding of B
+/// plus the unsigned correction term.
+pub fn booth_mul(a: u16, b: u16) -> u32 {
+    debug_assert!(a <= 0xFF && b <= 0xFF);
+    let mut acc: i64 = 0;
+    for (i, d) in booth_digits(b).iter().enumerate() {
+        acc += *d as i64 * ((a as i64) << i);
+    }
+    // Signed interpretation of B is b - 256·b7; correct for unsigned.
+    if b & 0x80 != 0 {
+        acc += (a as i64) << 8;
+    }
+    debug_assert!(acc >= 0);
+    acc as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn digits_recode_signed_value() {
+        for b in 0..=255u16 {
+            let signed = b as i32 - if b & 0x80 != 0 { 256 } else { 0 };
+            let v: i32 = booth_digits(b)
+                .iter()
+                .enumerate()
+                .map(|(i, &d)| d as i32 * (1 << i))
+                .sum();
+            assert_eq!(v, signed, "b={b}");
+        }
+    }
+
+    #[test]
+    fn digit_domain() {
+        for b in 0..=255u16 {
+            for d in booth_digits(b) {
+                assert!((-1..=1).contains(&d));
+            }
+        }
+    }
+}

@@ -1,0 +1,61 @@
+//! Word-level model of the LUT-based array multiplier (paper Algorithm 1),
+//! bit-exact mirror of `python/compile/kernels/lut.py` including the
+//! literal 128-bit hex-string representation of Fig. 1(a).
+
+/// The 128-bit "result string" stored for one B-nibble LUT entry: segment
+/// k (1-indexed, bits [8k-8 : 8k-1]) holds `(k * b_nib) & 0xFF`.
+pub fn result_string(b_nib: u8) -> u128 {
+    debug_assert!(b_nib <= 0xF);
+    let mut s: u128 = 0;
+    for k in 1..=16u32 {
+        s |= (((k * b_nib as u32) & 0xFF) as u128) << (8 * (k - 1));
+    }
+    s
+}
+
+/// Algorithm 1 segment extraction: bits [8·idx−8 : 8·idx−1] of the result
+/// string, with the idx == 0 zero-default guard (lines 3-4, 6-13).
+pub fn lut_segment(res: u128, idx: u8) -> u16 {
+    if idx == 0 {
+        0
+    } else {
+        ((res >> (8 * (idx as u32 - 1))) & 0xFF) as u16
+    }
+}
+
+/// Algorithm 1 specialised to 8-bit A (two nibbles, line 14's composition).
+pub fn lut_mul(a: u16, b: u16) -> u32 {
+    debug_assert!(a <= 0xFF && b <= 0xFF);
+    let res0 = result_string((b & 0xF) as u8);
+    let res1 = result_string(((b >> 4) & 0xF) as u8);
+    let a0 = (a & 0xF) as u8;
+    let a1 = ((a >> 4) & 0xF) as u8;
+    let p0 = lut_segment(res0, a0) as u32;
+    let p2 = lut_segment(res1, a0) as u32;
+    let p1 = lut_segment(res0, a1) as u32;
+    let p3 = lut_segment(res1, a1) as u32;
+    p0 + (p2 << 4) + (p1 << 4) + (p3 << 8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn result_string_segments_encode_products() {
+        for b in 0..=15u8 {
+            let s = result_string(b);
+            for k in 1..=16u8 {
+                assert_eq!(
+                    lut_segment(s, k),
+                    ((k as u32 * b as u32) & 0xFF) as u16
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn zero_index_guard() {
+        assert_eq!(lut_segment(result_string(15), 0), 0);
+    }
+}

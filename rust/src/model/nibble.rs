@@ -1,0 +1,125 @@
+//! Word-level model of the precompute-reuse nibble multiplier
+//! (paper Algorithm 2), bit-exact mirror of
+//! `python/compile/kernels/nibble.py`.
+
+/// Adds-only Precompute Logic table (Fig. 2b): for each nibble value, the
+/// shift amounts whose gated sum reconstructs `nib * A`. All sixteen
+/// configurations are the binary-weighted compositions.
+pub const PL_ADD_TABLE: [&[u32]; 16] = [
+    &[],
+    &[0],
+    &[1],
+    &[0, 1],
+    &[2],
+    &[0, 2],
+    &[1, 2],
+    &[0, 1, 2],
+    &[3],
+    &[0, 3],
+    &[1, 3],
+    &[0, 1, 3],
+    &[2, 3],
+    &[0, 2, 3],
+    &[1, 2, 3],
+    &[0, 1, 2, 3],
+];
+
+/// Union of (shift, negative?) terms appearing anywhere in the CSD table —
+/// the gated-term set the CSD netlist generator instantiates.
+pub const PL_CSD_TERMS: &[(u32, bool)] = &[
+    (0, false),
+    (1, false),
+    (2, false),
+    (3, false),
+    (4, false),
+    (0, true),
+    (1, true),
+];
+
+/// CSD terms for one nibble value (netlist generator hook).
+pub fn csd_terms(nib: u8) -> &'static [(u32, bool)] {
+    PL_CSD_TABLE[nib as usize]
+}
+
+/// CSD ablation table: (shift, negative?) terms, subtraction allowed.
+const PL_CSD_TABLE: [&[(u32, bool)]; 16] = [
+    &[],
+    &[(0, false)],
+    &[(1, false)],
+    &[(1, false), (0, false)],
+    &[(2, false)],
+    &[(2, false), (0, false)],
+    &[(2, false), (1, false)],
+    &[(3, false), (0, true)],
+    &[(3, false)],
+    &[(3, false), (0, false)],
+    &[(3, false), (1, false)],
+    &[(3, false), (1, false), (0, false)],
+    &[(3, false), (2, false)],
+    &[(4, false), (1, true), (0, true)],
+    &[(4, false), (1, true)],
+    &[(4, false), (0, true)],
+];
+
+/// Precompute Logic: `PL(a, nib) == a * nib` via gated shift-add.
+pub fn pl_compose(a: u16, nib: u8) -> u32 {
+    debug_assert!(a <= 0xFF && nib <= 0xF);
+    PL_ADD_TABLE[nib as usize]
+        .iter()
+        .map(|&k| (a as u32) << k)
+        .sum()
+}
+
+/// CSD ablation variant of the PL.
+pub fn pl_compose_csd(a: u16, nib: u8) -> u32 {
+    let mut acc: i64 = 0;
+    for &(k, neg) in PL_CSD_TABLE[nib as usize] {
+        let t = (a as i64) << k;
+        acc += if neg { -t } else { t };
+    }
+    debug_assert!(acc >= 0);
+    acc as u32
+}
+
+/// Algorithm 2: full product via two PL passes with 4-bit alignment.
+pub fn nibble_mul(a: u16, b: u16) -> u32 {
+    debug_assert!(a <= 0xFF && b <= 0xFF);
+    let mut acc = 0u32;
+    for idx in 0..2 {
+        let nib = ((b >> (4 * idx)) & 0xF) as u8;
+        acc += pl_compose(a, nib) << (4 * idx);
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pl_equals_product_for_all_configurations() {
+        for a in 0..=255u16 {
+            for nib in 0..=15u8 {
+                assert_eq!(pl_compose(a, nib), a as u32 * nib as u32);
+                assert_eq!(pl_compose_csd(a, nib), a as u32 * nib as u32);
+            }
+        }
+    }
+
+    #[test]
+    fn table_matches_binary_expansion() {
+        for (nib, shifts) in PL_ADD_TABLE.iter().enumerate() {
+            let reconstructed: u32 = shifts.iter().map(|&k| 1u32 << k).sum();
+            assert_eq!(reconstructed, nib as u32);
+            // "limited additions": at most 4 terms (3 adders).
+            assert!(shifts.len() <= 4);
+        }
+    }
+
+    #[test]
+    fn csd_table_never_needs_more_than_three_terms() {
+        for terms in PL_CSD_TABLE.iter() {
+            assert!(terms.len() <= 3);
+        }
+    }
+}

@@ -1,0 +1,187 @@
+//! Bit-exact Rust replay of the quantized MLP (`python/compile/model.py`).
+//!
+//! Two uses:
+//! * the oracle for the PJRT-executed HLO artifact (the end-to-end example
+//!   checks logits parity between this model and the runtime output);
+//! * the workload driver for the gate-level fabric — every u8×u8 product in
+//!   `forward` can be routed through any multiplier architecture's
+//!   netlist, which is how inference cycles/energy per architecture are
+//!   measured on the simulated hardware.
+
+/// One quantized linear layer (asymmetric u8, fixed-point requant).
+#[derive(Clone, Debug)]
+pub struct QuantLayer {
+    /// Weights, u8 values in an i32 carrier, row-major `(n_in, n_out)`.
+    pub w_q: Vec<i32>,
+    pub n_in: usize,
+    pub n_out: usize,
+    pub w_zp: i32,
+    pub bias_i32: Vec<i32>,
+    pub in_zp: i32,
+    pub out_zp: i32,
+    /// Fixed-point requant multiplier (m < 2^7; see model.py).
+    pub m: i32,
+    pub shift: u32,
+    pub relu: bool,
+}
+
+/// The full quantized network.
+#[derive(Clone, Debug)]
+pub struct QuantMlp {
+    pub layers: Vec<QuantLayer>,
+    pub in_scale: f64,
+    pub in_zp: i32,
+}
+
+impl QuantLayer {
+    /// Raw u8·u8 accumulator for one input row, with zero-point algebra and
+    /// folded bias — identical to `model.py::_accumulate`. The inner
+    /// product routine is injected so callers can route it through a
+    /// gate-level multiplier netlist.
+    pub fn accumulate<F>(&self, x: &[i32], mut mul: F) -> Vec<i32>
+    where
+        F: FnMut(u16, u16) -> u32,
+    {
+        assert_eq!(x.len(), self.n_in);
+        let sum_x: i32 = x.iter().sum();
+        let mut out = vec![0i32; self.n_out];
+        let mut sum_w = vec![0i32; self.n_out];
+        for (o, out_v) in out.iter_mut().enumerate() {
+            let mut acc: i64 = 0;
+            for (j, &xv) in x.iter().enumerate() {
+                let w = self.w_q[j * self.n_out + o];
+                sum_w[o] += w;
+                acc += mul(w as u16, xv as u16) as i64;
+            }
+            let corrected = acc
+                - (self.w_zp as i64) * (sum_x as i64)
+                - (self.in_zp as i64) * (sum_w[o] as i64)
+                + (self.n_in as i64) * (self.in_zp as i64) * (self.w_zp as i64)
+                + self.bias_i32[o] as i64;
+            *out_v = corrected as i32;
+        }
+        out
+    }
+
+    /// Requantize an accumulator to the next layer's u8 domain —
+    /// identical to `model.py::_requant` (round-half-up fixed point).
+    pub fn requant(&self, acc: &[i32]) -> Vec<i32> {
+        let rounding: i32 = if self.shift > 0 {
+            1 << (self.shift - 1)
+        } else {
+            0
+        };
+        acc.iter()
+            .map(|&a| {
+                let y = ((a * self.m + rounding) >> self.shift) + self.out_zp;
+                let lo = if self.relu { self.out_zp } else { 0 };
+                y.clamp(lo, 255)
+            })
+            .collect()
+    }
+}
+
+impl QuantMlp {
+    /// Forward pass for a batch of u8 rows; returns int32 logits.
+    /// `mul` is the 8×8 product routine (exact or a hardware-simulated
+    /// multiplier).
+    pub fn forward<F>(&self, x: &[Vec<i32>], mut mul: F) -> Vec<Vec<i32>>
+    where
+        F: FnMut(u16, u16) -> u32,
+    {
+        x.iter()
+            .map(|row| {
+                let mut h = row.clone();
+                for layer in &self.layers[..self.layers.len() - 1] {
+                    let acc = layer.accumulate(&h, &mut mul);
+                    h = layer.requant(&acc);
+                }
+                self.layers
+                    .last()
+                    .expect("at least one layer")
+                    .accumulate(&h, &mut mul)
+            })
+            .collect()
+    }
+
+    /// Argmax classification of int32 logits.
+    pub fn classify(logits: &[Vec<i32>]) -> Vec<usize> {
+        logits
+            .iter()
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by_key(|(_, &v)| v)
+                    .map(|(i, _)| i)
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+
+    /// Total number of 8×8 multiplies in one forward pass (per input row).
+    pub fn mults_per_inference(&self) -> usize {
+        self.layers.iter().map(|l| l.n_in * l.n_out).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_mlp() -> QuantMlp {
+        // 2 -> 2 -> 2, hand-made parameters.
+        QuantMlp {
+            layers: vec![
+                QuantLayer {
+                    w_q: vec![10, 200, 30, 40],
+                    n_in: 2,
+                    n_out: 2,
+                    w_zp: 20,
+                    bias_i32: vec![5, -5],
+                    in_zp: 3,
+                    out_zp: 1,
+                    m: 64,
+                    shift: 9,
+                    relu: true,
+                },
+                QuantLayer {
+                    w_q: vec![1, 2, 3, 4],
+                    n_in: 2,
+                    n_out: 2,
+                    w_zp: 2,
+                    bias_i32: vec![0, 0],
+                    in_zp: 1,
+                    out_zp: 0,
+                    m: 64,
+                    shift: 6,
+                    relu: false,
+                },
+            ],
+            in_scale: 1.0,
+            in_zp: 3,
+        }
+    }
+
+    #[test]
+    fn exact_and_nibble_products_give_identical_logits() {
+        let mlp = tiny_mlp();
+        let x = vec![vec![100, 200], vec![0, 255]];
+        let exact = mlp.forward(&x, |a, b| a as u32 * b as u32);
+        let nib = mlp.forward(&x, crate::model::nibble_mul);
+        assert_eq!(exact, nib);
+    }
+
+    #[test]
+    fn requant_clamps_and_rounds() {
+        let layer = &tiny_mlp().layers[0];
+        let out = layer.requant(&[i32::MAX / 128, i32::MIN / 128, 0]);
+        assert_eq!(out[0], 255);
+        assert_eq!(out[1], layer.out_zp); // relu floor
+        assert!(out[2] >= layer.out_zp && out[2] <= 255);
+    }
+
+    #[test]
+    fn mult_count() {
+        assert_eq!(tiny_mlp().mults_per_inference(), 8);
+    }
+}

@@ -1,0 +1,95 @@
+//! Classic ripple-carry array multiplier (baseline, paper Table 2's
+//! "Array"): 8×8 AND matrix with row-by-row carry-save rows and a final
+//! ripple stage — the textbook parallel array structure (regular but
+//! deeper than Wallace).
+
+use crate::netlist::{Builder, Bus};
+
+/// One 8×8 array product: returns the 16-bit bus.
+pub fn product(b: &mut Builder, a: &Bus, bb: &Bus) -> Bus {
+    assert_eq!(a.len(), 8);
+    assert_eq!(bb.len(), 8);
+    let zero = b.zero();
+    // Row 0: pp0 passes through.
+    let mut sum: Bus = a.iter().map(|&ai| b.and_gate(ai, bb[0])).collect();
+    let mut out = vec![sum[0]];
+    let mut carry: Bus = vec![zero; 8];
+    sum = sum[1..].to_vec(); // bits 1..7 of running sum (7 bits)
+    sum.push(zero); // bit 8 position
+    for j in 1..8 {
+        let pp: Bus = a.iter().map(|&ai| b.and_gate(ai, bb[j])).collect();
+        // Add pp to (sum, carry) at alignment 0 of the current row.
+        let mut new_sum = Vec::with_capacity(8);
+        let mut new_carry = Vec::with_capacity(8);
+        for k in 0..8 {
+            let (s, c) = b.full_adder(sum[k], carry[k], pp[k]);
+            new_sum.push(s);
+            new_carry.push(c);
+        }
+        out.push(new_sum[0]);
+        sum = new_sum[1..].to_vec();
+        sum.push(zero);
+        carry = new_carry;
+    }
+    // Final ripple: resolve remaining sum+carry (8 positions).
+    let mut cin = zero;
+    for k in 0..8 {
+        let (s, c) = b.full_adder(sum[k], carry[k], cin);
+        out.push(s);
+        cin = c;
+    }
+    debug_assert_eq!(out.len(), 16);
+    out
+}
+
+/// N-operand combinational vector unit.
+pub fn build_vector(n: usize) -> crate::netlist::Netlist {
+    let mut b = Builder::new(format!("array_x{n}"));
+    let a = b.input("a", 8 * n);
+    let bb = b.input("b", 8);
+    let start = b.input("start", 1);
+    let mut r = Vec::with_capacity(16 * n);
+    for i in 0..n {
+        let ai: Bus = a[8 * i..8 * (i + 1)].to_vec();
+        let p = product(&mut b, &ai, &bb);
+        r.extend(p);
+    }
+    b.output("r", &r);
+    let done = b.buf_gate(start[0]);
+    b.output("done", &vec![done]);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Simulator;
+    use crate::util::Xoshiro256;
+
+    #[test]
+    fn array_product_random_sweep() {
+        let nl = build_vector(1);
+        let mut sim = Simulator::new(&nl).unwrap();
+        let mut rng = Xoshiro256::new(9);
+        for _ in 0..5000 {
+            let a = rng.operand8() as u64;
+            let bb = rng.operand8() as u64;
+            sim.set_input("a", a).unwrap();
+            sim.set_input("b", bb).unwrap();
+            sim.settle();
+            assert_eq!(sim.get_output("r").unwrap(), a * bb, "{a}*{bb}");
+        }
+    }
+
+    #[test]
+    fn array_corner_cases() {
+        let nl = build_vector(1);
+        let mut sim = Simulator::new(&nl).unwrap();
+        for (a, bb) in [(0, 0), (0, 255), (255, 0), (255, 255), (1, 1)] {
+            sim.set_input("a", a).unwrap();
+            sim.set_input("b", bb).unwrap();
+            sim.settle();
+            assert_eq!(sim.get_output("r").unwrap(), a * bb);
+        }
+    }
+}

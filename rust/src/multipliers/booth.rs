@@ -1,0 +1,194 @@
+//! Booth radix-2 sequential multiplier (baseline, 4 cycles per operand).
+//!
+//! Bit-pair Booth recoding with TWO Booth steps cascaded per clock cycle —
+//! the organization that matches the paper's Table 2 entry ("Booth
+//! (Radix-2), O(W/2), 4 CCs" for 8-bit operands). Each unit is
+//! self-contained (own FSM/counter/P-register); operands are unsigned, so
+//! an `+A·2⁸ if B[7]` correction is applied combinationally at read-out
+//! (see `model::booth_mul`). Vector unit = N units sequenced one at a
+//! time → 4N cycles.
+
+use crate::netlist::{Builder, Bus, NetId};
+
+use super::shift_add::SeqUnit;
+
+/// One Booth step over the P register partition (acc 10 b, bfield 8 b,
+/// bm1): conditional ±A then arithmetic right shift by one.
+fn booth_step(
+    b: &mut Builder,
+    areg: &Bus, // 8-bit multiplicand
+    acc: &Bus,  // 10-bit running accumulator (signed)
+    bfield: &Bus,
+    bm1: NetId,
+) -> (Bus, Bus, NetId) {
+    let b0 = bfield[0];
+    let doit = b.xor_gate(b0, bm1);
+    // digit = bm1 - b0: (b0=1,bm1=0) -> subtract.
+    let nb_m1 = b.not_gate(bm1);
+    let neg = b.and_gate(b0, nb_m1);
+    // addend_i = doit ? (A_i XOR neg) : 0, carry-in = neg (two's compl).
+    let a10 = b.resize(&areg.clone(), 10);
+    let xored: Bus = a10.iter().map(|&ai| b.xor_gate(ai, neg)).collect();
+    let addend = b.gate_bus(&xored, doit);
+    let mut sum = Vec::with_capacity(10);
+    let mut carry = neg; // cin = neg (neg is only 1 when doit)
+    for i in 0..10 {
+        let (s, c) = b.full_adder(acc[i], addend[i], carry);
+        sum.push(s);
+        carry = c;
+    }
+    // Arithmetic shift right by 1 across {acc, bfield}.
+    let mut acc_next: Bus = sum[1..10].to_vec();
+    acc_next.push(sum[9]); // sign extension
+    let mut bfield_next: Bus = bfield[1..8].to_vec();
+    bfield_next.push(sum[0]);
+    (acc_next, bfield_next, bfield[0])
+}
+
+/// Build one Booth unit (same contract as `shift_add::build_unit`).
+pub fn build_unit(
+    b: &mut Builder,
+    a_in: &Bus,
+    b_in: &Bus,
+    load: NetId,
+    go: NetId,
+) -> SeqUnit {
+    assert_eq!(a_in.len(), 8);
+    assert_eq!(b_in.len(), 8);
+
+    let (busy_q, busy_d) = b.dff_bus_feedback(1, None, None);
+    let busy = busy_q[0];
+    let en_state = b.or_gate(load, busy);
+
+    // 2-bit cycle counter (4 cycles = 8 Booth steps).
+    let (cnt_q, cnt_d) = b.dff_bus_feedback(2, Some(en_state), None);
+    let cnt_next = b.inc_to(&cnt_q, 2);
+    let cnt_is_last = b.eq_const(&cnt_q, 3);
+    let done = b.and_gate(busy, cnt_is_last);
+    let not_done = b.not_gate(done);
+    let hold = b.and_gate(busy, not_done);
+    let busy_next = b.or_gate(go, hold);
+    b.drive(&busy_d, &vec![busy_next]);
+    let not_load = b.not_gate(load);
+    let cnt_cleared = b.gate_bus(&cnt_next, not_load);
+    b.drive(&cnt_d, &cnt_cleared);
+
+    // Operand registers (B's MSB saved for the unsigned correction).
+    let areg = b.dff_bus(a_in, Some(load), None);
+    let b7reg = b.dff_bus(&vec![b_in[7]], Some(load), None);
+
+    // P register: acc (10), bfield (8), bm1 (1).
+    let (acc_q, acc_d) = b.dff_bus_feedback(10, Some(en_state), None);
+    let (bf_q, bf_d) = b.dff_bus_feedback(8, Some(en_state), None);
+    let (bm1_q, bm1_d) = b.dff_bus_feedback(1, Some(en_state), None);
+
+    // Two cascaded Booth steps per cycle.
+    let (acc1, bf1, bm1_1) = booth_step(b, &areg, &acc_q, &bf_q, bm1_q[0]);
+    let (acc2, bf2, bm1_2) = booth_step(b, &areg, &acc1, &bf1, bm1_1);
+
+    // Next state: on load -> {0, B, 0}; while busy -> stepped values.
+    let acc_next = b.gate_bus(&acc2, not_load);
+    b.drive(&acc_d, &acc_next);
+    let bf_next = b.mux_bus(load, &bf2, b_in);
+    b.drive(&bf_d, &bf_next);
+    let bm1_next = b.and_gate(bm1_2, not_load);
+    b.drive(&bm1_d, &vec![bm1_next]);
+
+    // Read-out with unsigned correction:
+    //   result[7:0]  = bfield
+    //   result[15:8] = acc[7:0] + (B7 ? A : 0)   (mod 2^8)
+    let corr = b.gate_bus(&areg, b7reg[0]);
+    let acc_lo: Bus = acc_q[0..8].to_vec();
+    let hi = b.add_to(&acc_lo, &corr, 8);
+    let mut result = bf_q.clone();
+    result.extend(hi);
+
+    SeqUnit { result, done }
+}
+
+/// N-operand vector unit: sequenced self-contained units (4N cycles).
+pub fn build_vector(n: usize) -> crate::netlist::Netlist {
+    let mut b = Builder::new(format!("booth_x{n}"));
+    let a = b.input("a", 8 * n);
+    let bb = b.input("b", 8);
+    let start = b.input("start", 1);
+    let mut r = Vec::with_capacity(16 * n);
+    let mut go = start[0];
+    let mut last_done = start[0];
+    for i in 0..n {
+        let ai: Bus = a[8 * i..8 * (i + 1)].to_vec();
+        let unit = build_unit(&mut b, &ai, &bb, start[0], go);
+        r.extend(unit.result.clone());
+        go = unit.done;
+        last_done = unit.done;
+    }
+    b.output("r", &r);
+    b.output("done", &vec![last_done]);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Simulator;
+    use crate::util::Xoshiro256;
+
+    fn run_op(sim: &mut Simulator<'_>, a: u64, bb: u64) -> (u64, u64) {
+        sim.set_input("a", a).unwrap();
+        sim.set_input("b", bb).unwrap();
+        sim.set_input("start", 1).unwrap();
+        sim.step();
+        sim.set_input("start", 0).unwrap();
+        let mut cycles = 0u64;
+        loop {
+            sim.settle();
+            if sim.get_output("done").unwrap() == 1 {
+                break;
+            }
+            sim.step();
+            cycles += 1;
+            assert!(cycles <= 64);
+        }
+        sim.step();
+        cycles += 1;
+        (sim.get_output("r").unwrap(), cycles)
+    }
+
+    #[test]
+    fn booth_unit_multiplies_in_4_cycles() {
+        let nl = build_vector(1);
+        let mut sim = Simulator::new(&nl).unwrap();
+        let mut rng = Xoshiro256::new(6);
+        for _ in 0..200 {
+            let a = rng.operand8() as u64;
+            let bb = rng.operand8() as u64;
+            let (r, cycles) = run_op(&mut sim, a, bb);
+            assert_eq!(r & 0xFFFF, a * bb, "{a}*{bb}");
+            assert_eq!(cycles, 4);
+        }
+    }
+
+    #[test]
+    fn booth_corner_cases() {
+        let nl = build_vector(1);
+        let mut sim = Simulator::new(&nl).unwrap();
+        for (a, bb) in
+            [(0, 0), (255, 255), (255, 128), (128, 255), (1, 255), (255, 1)]
+        {
+            let (r, _) = run_op(&mut sim, a, bb);
+            assert_eq!(r & 0xFFFF, a * bb, "{a}*{bb}");
+        }
+    }
+
+    #[test]
+    fn booth_vector_latency_4n() {
+        let nl = build_vector(4);
+        let mut sim = Simulator::new(&nl).unwrap();
+        let (_, cycles) = run_op(&mut sim, 0x05_04_03_02, 9);
+        assert_eq!(cycles, 16);
+        let r = sim.get_output("r").unwrap();
+        for (i, e) in [2u64, 3, 4, 5].iter().enumerate() {
+            assert_eq!((r >> (16 * i)) & 0xFFFF, e * 9);
+        }
+    }
+}

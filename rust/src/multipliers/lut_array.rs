@@ -1,0 +1,129 @@
+//! LUT-based array multiplier (paper §II.A, Algorithm 1, Fig. 1).
+//!
+//! Faithful to the paper's structure: each Lookup Multiplier (LM) block
+//! contains the hex-string LUT — a 16-entry table of 128-bit result
+//! strings, realised as constant-input selection networks indexed by the B
+//! nibbles — followed by fixed-position segment multiplexers driven by the
+//! A nibbles, fixed alignment shifts, and final accumulation (lines 5-14).
+//! The vector unit replicates identical LM blocks (Fig. 1c).
+//!
+//! The constant mux trees are folded by the synthesis passes
+//! ([`crate::synth`]) exactly as the paper notes: "the lookup strings
+//! synthesize into large constant logic structures … these multiplexers
+//! and their interconnect increasingly dominate area and power".
+
+use crate::model::{lut_segment, result_string};
+use crate::netlist::{Builder, Bus};
+
+use super::arith::multi_add;
+
+/// Select the 16-bit-wide segment group of one result string: a 16:1 mux
+/// over the string's segments, index 0 returning the zero default
+/// (Algorithm 1 lines 3-4).
+fn segment_select(b: &mut Builder, res_segments: &[Bus], idx: &Bus) -> Bus {
+    assert_eq!(res_segments.len(), 16);
+    assert_eq!(idx.len(), 4);
+    b.mux_n(idx, res_segments)
+}
+
+/// One LM block: 8-bit A element × broadcast 8-bit B → 16-bit product.
+pub fn lm_block(b: &mut Builder, a: &Bus, bb: &Bus) -> Bus {
+    assert_eq!(a.len(), 8);
+    assert_eq!(bb.len(), 8);
+    let b0: Bus = bb[0..4].to_vec();
+    let b1: Bus = bb[4..8].to_vec();
+    let a0: Bus = a[0..4].to_vec();
+    let a1: Bus = a[4..8].to_vec();
+
+    // Hex-string LUT (Fig. 1a): ResString(b_nib) as a 16-way selection over
+    // constant 128-bit strings. Materialised per segment (8-bit chunks) so
+    // the segment muxes below can tap them directly; the segment view and
+    // the flat 128-bit string are the same wires.
+    let mut build_res_segments = |nib: &Bus| -> Vec<Bus> {
+        // seg[k] for k=0..15: the k-th choice of the A-side segment mux:
+        // k=0 is the zero default, k>=1 is string bits [8k-8 : 8k-1].
+        (0..16usize)
+            .map(|k| {
+                let choices: Vec<Bus> = (0..16u8)
+                    .map(|entry| {
+                        let s = result_string(entry);
+                        let val = lut_segment(s, k as u8) as u64;
+                        b.constant(val, 8)
+                    })
+                    .collect();
+                b.mux_n(nib, &choices)
+            })
+            .collect()
+    };
+    let res0 = build_res_segments(&b0);
+    let res1 = build_res_segments(&b1);
+
+    // Fixed-position segment extraction (lines 6-9 for 8-bit A).
+    let p0 = segment_select(b, &res0, &a0);
+    let p2 = segment_select(b, &res1, &a0);
+    let p1 = segment_select(b, &res0, &a1);
+    let p3 = segment_select(b, &res1, &a1);
+
+    // Fixed shifts + accumulation (line 14):
+    // Out = P0 + (P2 << 4) + (P1 << 4) + (P3 << 8)
+    multi_add(
+        b,
+        &[(p0, 0), (p2, 4), (p1, 4), (p3, 8)],
+        16,
+    )
+}
+
+/// N-operand combinational vector unit: N replicated LM blocks (Fig. 1c).
+pub fn build_vector(n: usize) -> crate::netlist::Netlist {
+    let mut b = Builder::new(format!("lut_array_x{n}"));
+    let a = b.input("a", 8 * n);
+    let bb = b.input("b", 8);
+    let start = b.input("start", 1);
+    let mut r = Vec::with_capacity(16 * n);
+    for i in 0..n {
+        let ai: Bus = a[8 * i..8 * (i + 1)].to_vec();
+        let p = lm_block(&mut b, &ai, &bb);
+        r.extend(p);
+    }
+    b.output("r", &r);
+    let done = b.buf_gate(start[0]);
+    b.output("done", &vec![done]);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Simulator;
+    use crate::util::Xoshiro256;
+
+    #[test]
+    fn lm_block_random_sweep() {
+        let nl = build_vector(1);
+        let mut sim = Simulator::new(&nl).unwrap();
+        let mut rng = Xoshiro256::new(21);
+        for _ in 0..5000 {
+            let a = rng.operand8() as u64;
+            let bb = rng.operand8() as u64;
+            sim.set_input("a", a).unwrap();
+            sim.set_input("b", bb).unwrap();
+            sim.settle();
+            assert_eq!(sim.get_output("r").unwrap(), a * bb, "{a}*{bb}");
+        }
+    }
+
+    #[test]
+    fn zero_nibble_guard_paths() {
+        // Exercises the idx==0 zero-default entries of the segment muxes.
+        let nl = build_vector(1);
+        let mut sim = Simulator::new(&nl).unwrap();
+        for a in [0u64, 0x0F, 0xF0, 0x05, 0x50] {
+            for bb in [0u64, 0x0F, 0xF0, 0x07, 0x70] {
+                sim.set_input("a", a).unwrap();
+                sim.set_input("b", bb).unwrap();
+                sim.settle();
+                assert_eq!(sim.get_output("r").unwrap(), a * bb);
+            }
+        }
+    }
+}

@@ -1,0 +1,171 @@
+//! Gate-level generators for every multiplier architecture the paper
+//! evaluates (§II–III):
+//!
+//! | Arch        | Type          | Latency (N ops) | Module        |
+//! |-------------|---------------|-----------------|---------------|
+//! | Shift-Add   | sequential    | 8N              | [`shift_add`] |
+//! | Booth (r2)  | sequential    | 4N              | [`booth`]     |
+//! | Nibble      | sequential    | 2N              | [`nibble`]    |
+//! | Nibble-Unr  | sequential    | N (ablation)    | [`nibble`]    |
+//! | Wallace     | combinational | 1               | [`wallace`]   |
+//! | Array       | combinational | 1               | [`array`]     |
+//! | LUT-Array   | combinational | 1               | [`lut_array`] |
+//!
+//! Every generator emits an N-operand **vector unit** with the common port
+//! contract of [`VECTOR_PORTS`]; the baselines are replicated
+//! self-contained units while the nibble design shares one datapath across
+//! all elements — the paper's logic-reuse contribution (DESIGN.md §5).
+
+pub mod arith;
+pub mod array;
+pub mod booth;
+pub mod lut_array;
+pub mod nibble;
+pub mod shift_add;
+pub mod wallace;
+
+use crate::netlist::Netlist;
+
+/// Common vector-unit port contract.
+///
+/// * `a`  — input,  8·N bits: N 8-bit elements, element 0 in the low bits.
+/// * `b`  — input,  8 bits: the broadcast operand.
+/// * `start` — input, 1 bit: pulse; operands are latched (sequential
+///   designs) or sampled combinationally (combinational designs).
+/// * `r`  — output, 16·N bits: N 16-bit products.
+/// * `done` — output, 1 bit: pulses when all N results are valid.
+pub const VECTOR_PORTS: &[&str] = &["a", "b", "start", "r", "done"];
+
+/// The architectures under evaluation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Arch {
+    ShiftAdd,
+    Booth,
+    Nibble,
+    NibbleUnrolled,
+    NibbleCsd,
+    Wallace,
+    Array,
+    LutArray,
+}
+
+impl Arch {
+    /// The five architectures of the paper's Fig. 4 comparison.
+    pub const PAPER_SET: [Arch; 5] = [
+        Arch::ShiftAdd,
+        Arch::Booth,
+        Arch::Nibble,
+        Arch::Wallace,
+        Arch::LutArray,
+    ];
+
+    /// Everything we can build (paper set + ablations).
+    pub const ALL: [Arch; 8] = [
+        Arch::ShiftAdd,
+        Arch::Booth,
+        Arch::Nibble,
+        Arch::NibbleUnrolled,
+        Arch::NibbleCsd,
+        Arch::Wallace,
+        Arch::Array,
+        Arch::LutArray,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Arch::ShiftAdd => "shift-add",
+            Arch::Booth => "booth-r2",
+            Arch::Nibble => "nibble",
+            Arch::NibbleUnrolled => "nibble-unrolled",
+            Arch::NibbleCsd => "nibble-csd",
+            Arch::Wallace => "wallace",
+            Arch::Array => "array",
+            Arch::LutArray => "lut-array",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Arch> {
+        Arch::ALL.into_iter().find(|a| a.name() == s)
+    }
+
+    /// True for single-cycle combinational designs.
+    pub fn is_combinational(self) -> bool {
+        matches!(self, Arch::Wallace | Arch::Array | Arch::LutArray)
+    }
+
+    /// Cycle latency for an N-operand vector op (paper Table 2).
+    pub fn latency_cycles(self, n: usize) -> u64 {
+        match self {
+            Arch::ShiftAdd => 8 * n as u64,
+            Arch::Booth => 4 * n as u64,
+            Arch::Nibble | Arch::NibbleCsd => 2 * n as u64,
+            Arch::NibbleUnrolled => n as u64,
+            Arch::Wallace | Arch::Array | Arch::LutArray => 1,
+        }
+    }
+
+    /// Analytical per-operand complexity class (paper Table 2).
+    pub fn complexity(self) -> &'static str {
+        match self {
+            Arch::ShiftAdd => "O(W)",
+            Arch::Booth => "O(W/2)",
+            Arch::Nibble | Arch::NibbleCsd => "O(W/4)",
+            Arch::NibbleUnrolled => "O(W/8)",
+            Arch::Wallace | Arch::Array | Arch::LutArray => "O(1)",
+        }
+    }
+
+    pub fn type_name(self) -> &'static str {
+        if self.is_combinational() {
+            "Combinational"
+        } else {
+            "Sequential"
+        }
+    }
+
+    /// Build the N-operand vector unit netlist.
+    pub fn build(self, n: usize) -> Netlist {
+        assert!(n >= 1 && n <= 64, "vector width out of supported range");
+        match self {
+            Arch::ShiftAdd => shift_add::build_vector(n),
+            Arch::Booth => booth::build_vector(n),
+            Arch::Nibble => nibble::build_vector(n, nibble::Mode::Sequential),
+            Arch::NibbleUnrolled => {
+                nibble::build_vector(n, nibble::Mode::Unrolled)
+            }
+            Arch::NibbleCsd => nibble::build_vector(n, nibble::Mode::Csd),
+            Arch::Wallace => wallace::build_vector(n),
+            Arch::Array => array::build_vector(n),
+            Arch::LutArray => lut_array::build_vector(n),
+        }
+    }
+}
+
+impl std::fmt::Display for Arch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_matches_table2() {
+        assert_eq!(Arch::ShiftAdd.latency_cycles(1), 8);
+        assert_eq!(Arch::Booth.latency_cycles(1), 4);
+        assert_eq!(Arch::Nibble.latency_cycles(1), 2);
+        assert_eq!(Arch::Wallace.latency_cycles(16), 1);
+        assert_eq!(Arch::ShiftAdd.latency_cycles(16), 128);
+        assert_eq!(Arch::Nibble.latency_cycles(16), 32);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for a in Arch::ALL {
+            assert_eq!(Arch::parse(a.name()), Some(a));
+        }
+        assert_eq!(Arch::parse("bogus"), None);
+    }
+}

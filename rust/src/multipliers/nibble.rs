@@ -1,0 +1,366 @@
+//! Precompute-reuse nibble multiplier — the paper's contribution
+//! (§II.B, Algorithm 2, Fig. 2).
+//!
+//! Logic reuse is structural here: ONE shared datapath (broadcast-B
+//! register, nibble selector, Precompute Logic, alignment shifter,
+//! carry-save accumulator, read-out CPA and the element sequencer) serves
+//! every vector element; per-element hardware is only operand and result
+//! storage. This is what produces the paper's flat area slope
+//! (~55 µm²/element vs ~115 for replicated shift-add units) and the 2N
+//! cycle latency of Table 2 / Fig. 3(a).
+//!
+//! Modes:
+//! * [`Mode::Sequential`] — one B nibble per cycle, 2 cycles/element (the
+//!   paper's headline configuration).
+//! * [`Mode::Unrolled`]   — both nibbles combinationally, 1 cycle/element
+//!   (paper §II.B "unrolled mode"; duplicated PL + alignment).
+//! * [`Mode::Csd`]        — ablation: PL built from canonical-signed-digit
+//!   compositions (subtraction allowed) instead of adds-only gating.
+
+use crate::netlist::{BinKind, Builder, Bus, NetId};
+
+use super::arith::{csa_reduce, BitMatrix};
+
+/// Datapath configuration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    Sequential,
+    Unrolled,
+    Csd,
+}
+
+/// Adds-only Precompute Logic (Fig. 2b): the 16 shift-add configurations
+/// collapse to four gated shifted copies of A — returned as carry-save
+/// rows (bit-matrix) so the accumulate stage can compress without a carry
+/// chain. `nib` is the 4-bit selector.
+fn pl_rows(b: &mut Builder, a_sel: &Bus, nib: &Bus, shift: usize) -> BitMatrix {
+    let mut m = BitMatrix::new();
+    for k in 0..4 {
+        let gated = b.gate_bus(a_sel, nib[k]);
+        m.add_bus(&gated, k + shift);
+    }
+    m
+}
+
+/// CSD ablation PL: one-hot decode of the nibble selects signed
+/// shift-compositions; negative terms enter the matrix as gated inverted
+/// rows plus +1 correction bits (two's complement, exact mod 2^16).
+fn pl_rows_csd(
+    b: &mut Builder,
+    a_sel: &Bus,
+    nib: &Bus,
+    shift: usize,
+    width: usize,
+) -> BitMatrix {
+    use crate::model::nibble::PL_CSD_TERMS;
+    let onehot = b.decode(nib);
+    let mut m = BitMatrix::new();
+    // Union of terms used across the 16 configurations.
+    for &(k, negf) in PL_CSD_TERMS {
+        // gate = OR over configurations that use (k, neg).
+        let users: Vec<NetId> = (0..16usize)
+            .filter(|&n| {
+                crate::model::nibble::csd_terms(n as u8)
+                    .iter()
+                    .any(|&(kk, nn)| kk == k && nn == negf)
+            })
+            .map(|n| onehot[n])
+            .collect();
+        if users.is_empty() {
+            continue;
+        }
+        let gate = b.reduce(BinKind::Or, &users);
+        let shifted = {
+            let s = b.shl(a_sel, k as usize + shift);
+            b.resize(&s, width)
+        };
+        if !negf {
+            let gated = b.gate_bus(&shifted, gate);
+            m.add_bus(&gated, 0);
+        } else {
+            // -(v & g) == (~(v & g)) + 1  (mod 2^width), and when g == 0
+            // the row is ~0 + 1 == 0: still exact.
+            let gated = b.gate_bus(&shifted, gate);
+            let inv = b.not_bus(&gated);
+            m.add_bus(&inv, 0);
+            let one = b.one();
+            m.add_bus(&vec![one], 0);
+        }
+    }
+    m
+}
+
+/// Build the N-operand nibble vector unit.
+pub fn build_vector(n: usize, mode: Mode) -> crate::netlist::Netlist {
+    assert!(n.is_power_of_two(), "vector width must be a power of two");
+    let ecnt_bits = n.trailing_zeros().max(1) as usize;
+    let name = match mode {
+        Mode::Sequential => format!("nibble_x{n}"),
+        Mode::Unrolled => format!("nibble_unrolled_x{n}"),
+        Mode::Csd => format!("nibble_csd_x{n}"),
+    };
+    let mut b = Builder::new(name);
+    let a = b.input("a", 8 * n);
+    let bb = b.input("b", 8);
+    let start = b.input("start", 1);
+    let load = start[0];
+    let not_load = b.not_gate(load);
+
+    // ------------------------------------------------------------------
+    // Per-element storage: operand registers (the only replicated logic).
+    // ------------------------------------------------------------------
+    let aregs: Vec<Bus> = (0..n)
+        .map(|i| {
+            let ai: Bus = a[8 * i..8 * (i + 1)].to_vec();
+            b.dff_bus(&ai, Some(load), None)
+        })
+        .collect();
+
+    // ------------------------------------------------------------------
+    // Shared control: busy FSM, element counter, nibble phase.
+    // ------------------------------------------------------------------
+    let (busy_q, busy_d) = b.dff_bus_feedback(1, None, None);
+    let busy = busy_q[0];
+    let en_state = b.or_gate(load, busy);
+
+    let (ecnt_q, ecnt_d) = b.dff_bus_feedback(ecnt_bits, Some(en_state), None);
+    let ecnt_is_last = b.eq_const(&ecnt_q, (n - 1) as u64);
+
+    let (elem_done, done) = match mode {
+        Mode::Sequential | Mode::Csd => {
+            // Phase bit: 0 = low nibble, 1 = high nibble (and write-back).
+            let (ph_q, ph_d) = b.dff_bus_feedback(1, Some(en_state), None);
+            let ph = ph_q[0];
+            let ph_next = {
+                let t = b.not_gate(ph);
+                let gated = b.and_gate(t, busy);
+                b.and_gate(gated, not_load)
+            };
+            b.drive(&ph_d, &vec![ph_next]);
+            let elem_done = b.and_gate(busy, ph);
+            let done = b.and_gate(elem_done, ecnt_is_last);
+            b.name("phase", &vec![ph]);
+            (elem_done, done)
+        }
+        Mode::Unrolled => {
+            let elem_done = b.buf_gate(busy);
+            let done = b.and_gate(busy, ecnt_is_last);
+            (elem_done, done)
+        }
+    };
+
+    // busy: set on start, cleared after the last element completes.
+    let not_done = b.not_gate(done);
+    let hold = b.and_gate(busy, not_done);
+    let busy_next = b.or_gate(load, hold);
+    b.drive(&busy_d, &vec![busy_next]);
+
+    // element counter: clear on load, advance when an element completes.
+    let ecnt_inc = b.inc_to(&ecnt_q, ecnt_bits);
+    let ecnt_step = b.mux_bus(elem_done, &ecnt_q, &ecnt_inc);
+    let ecnt_next = b.gate_bus(&ecnt_step, not_load);
+    b.drive(&ecnt_d, &ecnt_next);
+
+    // ------------------------------------------------------------------
+    // Shared broadcast-B register + nibble selector.
+    // ------------------------------------------------------------------
+    let breg = b.dff_bus(&bb, Some(load), None);
+    let b_lo: Bus = breg[0..4].to_vec();
+    let b_hi: Bus = breg[4..8].to_vec();
+
+    // Shared element selector: one N:1 operand mux.
+    let a_sel = if n == 1 {
+        aregs[0].clone()
+    } else {
+        b.mux_n(&ecnt_q, &aregs)
+    };
+    b.name("a_sel", &a_sel);
+
+    // ------------------------------------------------------------------
+    // Shared datapath: PL -> alignment -> accumulate -> read-out CPA.
+    // ------------------------------------------------------------------
+    let result: Bus = match mode {
+        Mode::Sequential => {
+            let acc_width = 13; // PL rows fit in 12 bits + margin
+            // Nibble select by phase. elem_done == busy & ph, which equals
+            // ph whenever the datapath is active, so it doubles as the
+            // phase select (idle cycles don't matter functionally).
+            let ph = elem_done;
+            let nib = b.mux_bus(ph, &b_lo, &b_hi);
+            // PL in carry-save form.
+            let m = pl_rows(&mut b, &a_sel, &nib, 0);
+            let (pl_s, pl_c) = csa_reduce(&mut b, m);
+            let pl_s = b.resize(&pl_s, acc_width);
+            let pl_c = b.resize(&pl_c, acc_width);
+            // Accumulator registers hold the low-nibble partial (CS form).
+            let acc_en = {
+                let np = b.not_gate(ph);
+                b.and_gate(busy, np)
+            };
+            let acc_s = b.dff_bus(&pl_s, Some(acc_en), None);
+            let acc_c = b.dff_bus(&pl_c, Some(acc_en), None);
+            // High-nibble cycle: acc + (partial << 4), compressed then CPA.
+            // Operand isolation ("controlled accumulation", §II.B): the
+            // merge + read-out CPA only does useful work in the ph==1
+            // cycle, so its inputs are gated with ph — the CPA stays
+            // quiet during the low-nibble cycle, halving its switching.
+            let iso_acc_s = b.gate_bus(&acc_s, ph);
+            let iso_acc_c = b.gate_bus(&acc_c, ph);
+            let iso_pl_s = b.gate_bus(&pl_s, ph);
+            let iso_pl_c = b.gate_bus(&pl_c, ph);
+            let mut m2 = BitMatrix::new();
+            m2.add_bus(&iso_acc_s, 0);
+            m2.add_bus(&iso_acc_c, 0);
+            m2.add_bus(&iso_pl_s, 4);
+            m2.add_bus(&iso_pl_c, 4);
+            let (s, c) = csa_reduce(&mut b, m2);
+            let sum = b.add(&s, &c);
+            b.resize(&sum, 16)
+        }
+        Mode::Unrolled => {
+            // Both nibbles in one cycle: duplicated PL + alignment.
+            let m_lo = pl_rows(&mut b, &a_sel, &b_lo, 0);
+            let m_hi = pl_rows(&mut b, &a_sel, &b_hi, 4);
+            let mut m = m_lo;
+            for (w, col) in m_hi.cols.into_iter().enumerate() {
+                if m.cols.len() <= w {
+                    m.cols.resize(w + 1, Vec::new());
+                }
+                m.cols[w].extend(col);
+            }
+            let (s, c) = csa_reduce(&mut b, m);
+            let sum = b.add(&s, &c);
+            b.resize(&sum, 16)
+        }
+        Mode::Csd => {
+            let ph = elem_done;
+            let nib = b.mux_bus(ph, &b_lo, &b_hi);
+            // All CSD arithmetic lives mod 2^16: the negative-term rows are
+            // two's complement at 16 bits, so every width reduction below
+            // must also be 16 bits for the wrap-around to cancel exactly.
+            let m = pl_rows_csd(&mut b, &a_sel, &nib, 0, 16);
+            let (pl_s, pl_c) = csa_reduce(&mut b, m);
+            let pl_s = b.resize(&pl_s, 16);
+            let pl_c = b.resize(&pl_c, 16);
+            let acc_en = {
+                let np = b.not_gate(ph);
+                b.and_gate(busy, np)
+            };
+            let acc_s = b.dff_bus(&pl_s, Some(acc_en), None);
+            let acc_c = b.dff_bus(&pl_c, Some(acc_en), None);
+            // Operand isolation, as in the adds-only sequential mode.
+            let iso_acc_s = b.gate_bus(&acc_s, ph);
+            let iso_acc_c = b.gate_bus(&acc_c, ph);
+            let iso_pl_s = b.gate_bus(&pl_s, ph);
+            let iso_pl_c = b.gate_bus(&pl_c, ph);
+            let mut m2 = BitMatrix::new();
+            m2.add_bus(&iso_acc_s, 0);
+            m2.add_bus(&iso_acc_c, 0);
+            m2.add_bus(&iso_pl_s, 4);
+            m2.add_bus(&iso_pl_c, 4);
+            let (s, c) = csa_reduce(&mut b, m2);
+            let sum = b.add(&s, &c);
+            b.resize(&sum, 16)
+        }
+    };
+    b.name("result", &result);
+
+    // ------------------------------------------------------------------
+    // Per-element result registers with one-hot write-back.
+    // ------------------------------------------------------------------
+    let wdec = b.decode(&ecnt_q);
+    let mut r = Vec::with_capacity(16 * n);
+    for i in 0..n {
+        let we = b.and_gate(elem_done, wdec[i]);
+        let rreg = b.dff_bus(&result, Some(we), None);
+        r.extend(rreg);
+    }
+    b.output("r", &r);
+    b.output("done", &vec![done]);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Simulator;
+    use crate::util::Xoshiro256;
+
+    fn run_op(
+        sim: &mut Simulator<'_>,
+        a: u64,
+        bb: u64,
+        max: u64,
+    ) -> (u64, u64) {
+        sim.set_input("a", a).unwrap();
+        sim.set_input("b", bb).unwrap();
+        sim.set_input("start", 1).unwrap();
+        sim.step();
+        sim.set_input("start", 0).unwrap();
+        let mut cycles = 0u64;
+        loop {
+            sim.settle();
+            if sim.get_output("done").unwrap() == 1 {
+                break;
+            }
+            sim.step();
+            cycles += 1;
+            assert!(cycles <= max, "no done within {max} cycles");
+        }
+        sim.step();
+        cycles += 1;
+        (sim.get_output("r").unwrap(), cycles)
+    }
+
+    #[test]
+    fn sequential_two_cycles_per_element() {
+        let nl = build_vector(1, Mode::Sequential);
+        let mut sim = Simulator::new(&nl).unwrap();
+        let mut rng = Xoshiro256::new(8);
+        for _ in 0..300 {
+            let a = rng.operand8() as u64;
+            let bb = rng.operand8() as u64;
+            let (r, cycles) = run_op(&mut sim, a, bb, 8);
+            assert_eq!(r & 0xFFFF, a * bb, "{a}*{bb}");
+            assert_eq!(cycles, 2);
+        }
+    }
+
+    #[test]
+    fn sequential_vector4_latency_2n() {
+        let nl = build_vector(4, Mode::Sequential);
+        let mut sim = Simulator::new(&nl).unwrap();
+        let (_, cycles) = run_op(&mut sim, 0xFF_80_11_02, 0xAB, 20);
+        assert_eq!(cycles, 8);
+        let r = sim.get_output("r").unwrap();
+        for (i, e) in [0x02u64, 0x11, 0x80, 0xFF].iter().enumerate() {
+            assert_eq!((r >> (16 * i)) & 0xFFFF, e * 0xAB, "elem {i}");
+        }
+    }
+
+    #[test]
+    fn unrolled_one_cycle_per_element() {
+        let nl = build_vector(4, Mode::Unrolled);
+        let mut sim = Simulator::new(&nl).unwrap();
+        let (_, cycles) = run_op(&mut sim, 0x04_03_02_01, 0x55, 10);
+        assert_eq!(cycles, 4);
+        let r = sim.get_output("r").unwrap();
+        for (i, e) in [1u64, 2, 3, 4].iter().enumerate() {
+            assert_eq!((r >> (16 * i)) & 0xFFFF, e * 0x55);
+        }
+    }
+
+    #[test]
+    fn csd_mode_matches_exact_products() {
+        let nl = build_vector(1, Mode::Csd);
+        let mut sim = Simulator::new(&nl).unwrap();
+        let mut rng = Xoshiro256::new(13);
+        for _ in 0..300 {
+            let a = rng.operand8() as u64;
+            let bb = rng.operand8() as u64;
+            let (r, cycles) = run_op(&mut sim, a, bb, 8);
+            assert_eq!(r & 0xFFFF, a * bb, "csd {a}*{bb}");
+            assert_eq!(cycles, 2);
+        }
+    }
+}

@@ -1,0 +1,173 @@
+//! Shift-add sequential multiplier (baseline, 8 cycles per 8-bit operand).
+//!
+//! Classic right-shift-accumulator organization: one partial-product AND
+//! row, one narrow (9-bit) adder, and a shifting 16-bit accumulator; the
+//! multiplier bit register shifts right each cycle. Each unit is fully
+//! self-contained (own FSM, counter, B register) — the "replicating
+//! multiplier units across parallel vector lanes" organization the paper's
+//! intro describes — and the vector unit chains N of them sequentially for
+//! the paper's 8N total latency (Table 2, DESIGN.md §5).
+
+use crate::netlist::{Builder, Bus, NetId};
+
+/// Handle to one self-contained sequential unit.
+pub struct SeqUnit {
+    /// Held result (valid after `done` pulses, until the next go).
+    pub result: Bus,
+    /// 1-cycle pulse when this unit's result becomes valid.
+    pub done: NetId,
+}
+
+/// Build one shift-add unit.
+///
+/// * `a_in`/`b_in`: operand buses, sampled when `load` is high.
+/// * `load`: latch operands and clear state (the vector-level start).
+/// * `go`: begin computing (first compute cycle is the next cycle).
+pub fn build_unit(
+    b: &mut Builder,
+    a_in: &Bus,
+    b_in: &Bus,
+    load: NetId,
+    go: NetId,
+) -> SeqUnit {
+    assert_eq!(a_in.len(), 8);
+    assert_eq!(b_in.len(), 8);
+    let zero = b.zero();
+
+    // busy FSM bit: set by go, cleared by the final count.
+    let (busy_q, busy_d) = b.dff_bus_feedback(1, None, None);
+    let busy = busy_q[0];
+
+    // 3-bit cycle counter, running while busy.
+    let en_state = b.or_gate(load, busy);
+    let (cnt_q, cnt_d) = b.dff_bus_feedback(3, Some(en_state), None);
+    let cnt_next = b.inc_to(&cnt_q, 3);
+    let cnt_is_last = b.eq_const(&cnt_q, 7);
+    let done = b.and_gate(busy, cnt_is_last);
+
+    // busy next-state: go sets, done clears.
+    let not_done = b.not_gate(done);
+    let hold = b.and_gate(busy, not_done);
+    let busy_next = b.or_gate(go, hold);
+    b.drive(&busy_d, &vec![busy_next]);
+
+    // cnt next-state: clear on load, else count.
+    let not_load_early = b.not_gate(load);
+    let cnt_cleared = b.gate_bus(&cnt_next, not_load_early);
+    b.drive(&cnt_d, &cnt_cleared);
+
+    // A operand register.
+    let areg = b.dff_bus(a_in, Some(load), None);
+
+    // B shift register: load B, shift right while busy.
+    let (breg_q, breg_d) = b.dff_bus_feedback(8, Some(en_state), None);
+    let mut bshifted: Bus = breg_q[1..].to_vec();
+    bshifted.push(zero);
+    let breg_next = b.mux_bus(load, &bshifted, b_in);
+    b.drive(&breg_d, &breg_next);
+
+    // Accumulator (16 bits) with the right-shift update:
+    //   sum[8:0]  = acc[15:8] + (A & b0)
+    //   acc_next  = { sum[8:0], acc[7:1] }
+    let (acc_q, acc_d) = b.dff_bus_feedback(16, Some(en_state), None);
+    let pp = b.gate_bus(&areg, breg_q[0]);
+    let acc_hi: Bus = acc_q[8..16].to_vec();
+    let sum = b.add(&acc_hi, &pp); // 9 bits
+    let mut acc_next: Bus = acc_q[1..8].to_vec(); // bits 0..6
+    acc_next.extend_from_slice(&sum); // bits 7..15
+    debug_assert_eq!(acc_next.len(), 16);
+    // Clear on load, shift-accumulate while busy.
+    let not_load = b.not_gate(load);
+    let acc_masked = b.gate_bus(&acc_next, not_load);
+    b.drive(&acc_d, &acc_masked);
+
+    SeqUnit {
+        result: acc_q,
+        done,
+    }
+}
+
+/// N-operand vector unit: N self-contained units, sequenced one at a time
+/// (total latency 8N).
+pub fn build_vector(n: usize) -> crate::netlist::Netlist {
+    let mut b = Builder::new(format!("shift_add_x{n}"));
+    let a = b.input("a", 8 * n);
+    let bb = b.input("b", 8);
+    let start = b.input("start", 1);
+    let mut r = Vec::with_capacity(16 * n);
+    let mut go = start[0];
+    let mut last_done = start[0];
+    for i in 0..n {
+        let ai: Bus = a[8 * i..8 * (i + 1)].to_vec();
+        let unit = build_unit(&mut b, &ai, &bb, start[0], go);
+        r.extend(unit.result.clone());
+        // Daisy-chain: the next unit starts when this one finishes.
+        go = unit.done;
+        last_done = unit.done;
+    }
+    b.output("r", &r);
+    b.output("done", &vec![last_done]);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Simulator;
+    use crate::util::Xoshiro256;
+
+    /// Drive one vector op and return (result word, cycles to done).
+    pub(crate) fn run_vector_op(
+        sim: &mut Simulator<'_>,
+        a_word: u64,
+        b_val: u64,
+        max_cycles: u64,
+    ) -> (u64, u64) {
+        sim.set_input("a", a_word).unwrap();
+        sim.set_input("b", b_val).unwrap();
+        sim.set_input("start", 1).unwrap();
+        sim.step();
+        sim.set_input("start", 0).unwrap();
+        let mut cycles = 0u64;
+        loop {
+            sim.settle();
+            if sim.get_output("done").unwrap() == 1 {
+                break;
+            }
+            sim.step();
+            cycles += 1;
+            assert!(cycles <= max_cycles, "no done after {max_cycles} cycles");
+        }
+        // done observed mid-cycle; commit the final cycle.
+        sim.step();
+        cycles += 1;
+        (sim.get_output("r").unwrap(), cycles)
+    }
+
+    #[test]
+    fn single_unit_multiplies_in_8_cycles() {
+        let nl = build_vector(1);
+        let mut sim = Simulator::new(&nl).unwrap();
+        let mut rng = Xoshiro256::new(4);
+        for _ in 0..100 {
+            let a = rng.operand8() as u64;
+            let bb = rng.operand8() as u64;
+            let (r, cycles) = run_vector_op(&mut sim, a, bb, 16);
+            assert_eq!(r & 0xFFFF, a * bb, "{a}*{bb}");
+            assert_eq!(cycles, 8);
+        }
+    }
+
+    #[test]
+    fn vector_of_two_takes_16_cycles() {
+        let nl = build_vector(2);
+        let mut sim = Simulator::new(&nl).unwrap();
+        let (r, cycles) = run_vector_op(&mut sim, 0x00FF | (0x1200 << 0), 7, 40);
+        let _ = r;
+        assert_eq!(cycles, 16);
+        // element 0 = 0xFF * 7, element 1 = 0x12 * 7
+        let r = sim.get_output("r").unwrap();
+        assert_eq!(r & 0xFFFF, 255 * 7);
+        assert_eq!((r >> 16) & 0xFFFF, 0x12 * 7);
+    }
+}

@@ -1,0 +1,84 @@
+//! Wallace-tree combinational multiplier (baseline, paper Table 2 /
+//! Fig. 4): full 8×8 partial-product matrix, carry-save reduction to two
+//! rows, final carry-propagate add. Single-cycle; N-operand vector unit =
+//! N parallel trees (pure combinational, as the paper's comb designs).
+
+use crate::netlist::{Builder, Bus};
+
+use super::arith::{csa_reduce, BitMatrix};
+
+/// One 8×8 Wallace product: returns the 16-bit bus.
+pub fn product(b: &mut Builder, a: &Bus, bb: &Bus) -> Bus {
+    assert_eq!(a.len(), 8);
+    assert_eq!(bb.len(), 8);
+    let mut m = BitMatrix::new();
+    for (j, &bj) in bb.iter().enumerate() {
+        let row: Bus = a.iter().map(|&ai| b.and_gate(ai, bj)).collect();
+        m.add_bus(&row, j);
+    }
+    let (s, c) = csa_reduce(b, m);
+    let sum = b.add(&s, &c);
+    b.resize(&sum, 16)
+}
+
+/// N-operand combinational vector unit.
+pub fn build_vector(n: usize) -> crate::netlist::Netlist {
+    let mut b = Builder::new(format!("wallace_x{n}"));
+    let a = b.input("a", 8 * n);
+    let bb = b.input("b", 8);
+    let start = b.input("start", 1);
+    let mut r = Vec::with_capacity(16 * n);
+    for i in 0..n {
+        let ai: Bus = a[8 * i..8 * (i + 1)].to_vec();
+        let p = product(&mut b, &ai, &bb);
+        r.extend(p);
+    }
+    b.output("r", &r);
+    let done = b.buf_gate(start[0]);
+    b.output("done", &vec![done]);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Simulator;
+    use crate::util::Xoshiro256;
+
+    #[test]
+    fn single_product_exhaustive_rows() {
+        let nl = build_vector(1);
+        let mut sim = Simulator::new(&nl).unwrap();
+        // Exhaust one operand, sweep the other.
+        for a in (0..=255u64).step_by(17) {
+            for bb in 0..=255u64 {
+                sim.set_input("a", a).unwrap();
+                sim.set_input("b", bb).unwrap();
+                sim.settle();
+                assert_eq!(sim.get_output("r").unwrap(), a * bb);
+            }
+        }
+    }
+
+    #[test]
+    fn vector_of_four_products() {
+        let nl = build_vector(4);
+        let mut sim = Simulator::new(&nl).unwrap();
+        let mut rng = Xoshiro256::new(2);
+        for _ in 0..200 {
+            let els: Vec<u64> = (0..4).map(|_| rng.operand8() as u64).collect();
+            let bv = rng.operand8() as u64;
+            let a_word = els
+                .iter()
+                .enumerate()
+                .fold(0u64, |acc, (i, &e)| acc | (e << (8 * i)));
+            sim.set_input("a", a_word).unwrap();
+            sim.set_input("b", bv).unwrap();
+            sim.settle();
+            let r = sim.get_output("r").unwrap();
+            for (i, &e) in els.iter().enumerate() {
+                assert_eq!((r >> (16 * i)) & 0xFFFF, e * bv);
+            }
+        }
+    }
+}

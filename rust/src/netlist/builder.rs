@@ -1,0 +1,493 @@
+//! Bus-level netlist construction API.
+//!
+//! The builder exposes the vocabulary an RTL designer uses — buses, adders,
+//! shifters, muxes, registers — and emits primitive cells. All multiplier
+//! generators in [`crate::multipliers`] are written against this API, so the
+//! emitted structure is the same class of object a synthesis tool would
+//! produce from the paper's Verilog.
+
+use super::cell::{BinKind, Cell, NetId, UnaryKind};
+use super::{Netlist, Port};
+
+/// An LSB-first group of nets.
+pub type Bus = Vec<NetId>;
+
+/// Incremental netlist builder.
+pub struct Builder {
+    nl: Netlist,
+    const0: Option<NetId>,
+    const1: Option<NetId>,
+}
+
+impl Builder {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self {
+            nl: Netlist::new(name),
+            const0: None,
+            const1: None,
+        }
+    }
+
+    /// Finish building and return the netlist (validating invariants).
+    pub fn finish(self) -> Netlist {
+        let nl = self.nl;
+        nl.validate().expect("builder produced invalid netlist");
+        nl
+    }
+
+    /// Allocate a fresh, undriven net.
+    pub fn net(&mut self) -> NetId {
+        let id = NetId(self.nl.n_nets as u32);
+        self.nl.n_nets += 1;
+        id
+    }
+
+    /// Allocate a fresh bus of `width` undriven nets.
+    pub fn bus(&mut self, width: usize) -> Bus {
+        (0..width).map(|_| self.net()).collect()
+    }
+
+    fn push(&mut self, cell: Cell) {
+        self.nl.cells.push(cell);
+    }
+
+    // ------------------------------------------------------------------
+    // Ports and naming
+    // ------------------------------------------------------------------
+
+    /// Declare a primary input bus.
+    pub fn input(&mut self, name: &str, width: usize) -> Bus {
+        let bits = self.bus(width);
+        self.nl.inputs.push(Port {
+            name: name.to_string(),
+            bits: bits.clone(),
+        });
+        bits
+    }
+
+    /// Declare a primary output bus.
+    pub fn output(&mut self, name: &str, bits: &Bus) {
+        self.nl.outputs.push(Port {
+            name: name.to_string(),
+            bits: bits.clone(),
+        });
+    }
+
+    /// Attach a debug/waveform name to an internal bus.
+    pub fn name(&mut self, name: &str, bits: &Bus) {
+        self.nl.named.push(Port {
+            name: name.to_string(),
+            bits: bits.clone(),
+        });
+    }
+
+    // ------------------------------------------------------------------
+    // Constants
+    // ------------------------------------------------------------------
+
+    /// The constant-0 net (deduplicated).
+    pub fn zero(&mut self) -> NetId {
+        if let Some(n) = self.const0 {
+            return n;
+        }
+        let n = self.net();
+        self.push(Cell::Const {
+            value: false,
+            out: n,
+        });
+        self.const0 = Some(n);
+        n
+    }
+
+    /// The constant-1 net (deduplicated).
+    pub fn one(&mut self) -> NetId {
+        if let Some(n) = self.const1 {
+            return n;
+        }
+        let n = self.net();
+        self.push(Cell::Const {
+            value: true,
+            out: n,
+        });
+        self.const1 = Some(n);
+        n
+    }
+
+    /// A `width`-bit constant bus holding `value`.
+    pub fn constant(&mut self, value: u64, width: usize) -> Bus {
+        (0..width)
+            .map(|i| {
+                if (value >> i) & 1 != 0 {
+                    self.one()
+                } else {
+                    self.zero()
+                }
+            })
+            .collect()
+    }
+
+    // ------------------------------------------------------------------
+    // Gates (single-bit)
+    // ------------------------------------------------------------------
+
+    pub fn not_gate(&mut self, a: NetId) -> NetId {
+        let out = self.net();
+        self.push(Cell::Unary {
+            kind: UnaryKind::Not,
+            a,
+            out,
+        });
+        out
+    }
+
+    pub fn buf_gate(&mut self, a: NetId) -> NetId {
+        let out = self.net();
+        self.push(Cell::Unary {
+            kind: UnaryKind::Buf,
+            a,
+            out,
+        });
+        out
+    }
+
+    pub fn gate(&mut self, kind: BinKind, a: NetId, b: NetId) -> NetId {
+        let out = self.net();
+        self.push(Cell::Binary { kind, a, b, out });
+        out
+    }
+
+    pub fn and_gate(&mut self, a: NetId, b: NetId) -> NetId {
+        self.gate(BinKind::And, a, b)
+    }
+
+    pub fn or_gate(&mut self, a: NetId, b: NetId) -> NetId {
+        self.gate(BinKind::Or, a, b)
+    }
+
+    pub fn xor_gate(&mut self, a: NetId, b: NetId) -> NetId {
+        self.gate(BinKind::Xor, a, b)
+    }
+
+    pub fn nand_gate(&mut self, a: NetId, b: NetId) -> NetId {
+        self.gate(BinKind::Nand, a, b)
+    }
+
+    pub fn nor_gate(&mut self, a: NetId, b: NetId) -> NetId {
+        self.gate(BinKind::Nor, a, b)
+    }
+
+    /// 2:1 mux: `sel ? a1 : a0`.
+    pub fn mux_gate(&mut self, sel: NetId, a0: NetId, a1: NetId) -> NetId {
+        let out = self.net();
+        self.push(Cell::Mux2 { sel, a0, a1, out });
+        out
+    }
+
+    /// Reduction over a slice of nets with a binary gate (balanced tree).
+    pub fn reduce(&mut self, kind: BinKind, nets: &[NetId]) -> NetId {
+        assert!(!nets.is_empty(), "reduce over empty slice");
+        let mut level: Vec<NetId> = nets.to_vec();
+        while level.len() > 1 {
+            let mut next = Vec::with_capacity((level.len() + 1) / 2);
+            for pair in level.chunks(2) {
+                next.push(if pair.len() == 2 {
+                    self.gate(kind, pair[0], pair[1])
+                } else {
+                    pair[0]
+                });
+            }
+            level = next;
+        }
+        level[0]
+    }
+
+    // ------------------------------------------------------------------
+    // Bus-level bitwise ops
+    // ------------------------------------------------------------------
+
+    pub fn not_bus(&mut self, a: &Bus) -> Bus {
+        a.iter().map(|&n| self.not_gate(n)).collect()
+    }
+
+    pub fn bitwise(&mut self, kind: BinKind, a: &Bus, b: &Bus) -> Bus {
+        assert_eq!(a.len(), b.len(), "bitwise width mismatch");
+        a.iter()
+            .zip(b)
+            .map(|(&x, &y)| self.gate(kind, x, y))
+            .collect()
+    }
+
+    /// AND every bit of `a` with the single net `g` (gating a bus).
+    pub fn gate_bus(&mut self, a: &Bus, g: NetId) -> Bus {
+        a.iter().map(|&x| self.and_gate(x, g)).collect()
+    }
+
+    /// Bus-wide 2:1 mux.
+    pub fn mux_bus(&mut self, sel: NetId, a0: &Bus, a1: &Bus) -> Bus {
+        assert_eq!(a0.len(), a1.len(), "mux width mismatch");
+        a0.iter()
+            .zip(a1)
+            .map(|(&x, &y)| self.mux_gate(sel, x, y))
+            .collect()
+    }
+
+    /// N-way mux as a balanced mux2 tree; `sel` is binary (LSB first) and
+    /// `choices.len()` must be a power of two equal to `2^sel.len()`.
+    pub fn mux_n(&mut self, sel: &Bus, choices: &[Bus]) -> Bus {
+        assert_eq!(
+            choices.len(),
+            1 << sel.len(),
+            "mux_n: need 2^sel choices"
+        );
+        let mut level: Vec<Bus> = choices.to_vec();
+        for &s in sel {
+            let mut next = Vec::with_capacity(level.len() / 2);
+            for pair in level.chunks(2) {
+                next.push(self.mux_bus(s, &pair[0], &pair[1]));
+            }
+            level = next;
+        }
+        level.pop().unwrap()
+    }
+
+    /// One-hot select: OR of gated choices (used for result write-back
+    /// buses). `onehot.len() == choices.len()`.
+    pub fn onehot_mux(&mut self, onehot: &[NetId], choices: &[Bus]) -> Bus {
+        assert_eq!(onehot.len(), choices.len());
+        let width = choices[0].len();
+        let mut acc: Option<Bus> = None;
+        for (&sel, choice) in onehot.iter().zip(choices) {
+            let gated = self.gate_bus(choice, sel);
+            acc = Some(match acc {
+                None => gated,
+                Some(prev) => self.bitwise(BinKind::Or, &prev, &gated),
+            });
+        }
+        let out = acc.expect("onehot_mux over empty set");
+        assert_eq!(out.len(), width);
+        out
+    }
+
+    // ------------------------------------------------------------------
+    // Shifts / resizing (pure wiring)
+    // ------------------------------------------------------------------
+
+    /// Constant left shift: wiring + zero fill, growing the bus by `k`.
+    pub fn shl(&mut self, a: &Bus, k: usize) -> Bus {
+        let z = self.zero();
+        let mut out = vec![z; k];
+        out.extend_from_slice(a);
+        out
+    }
+
+    /// Zero-extend (or truncate) a bus to exactly `width` bits.
+    pub fn resize(&mut self, a: &Bus, width: usize) -> Bus {
+        let z = self.zero();
+        let mut out = a.clone();
+        out.resize(width, z);
+        out.truncate(width);
+        out
+    }
+
+    // ------------------------------------------------------------------
+    // Arithmetic
+    // ------------------------------------------------------------------
+
+    /// Half adder (compound cell).
+    pub fn half_adder(&mut self, a: NetId, b: NetId) -> (NetId, NetId) {
+        let sum = self.net();
+        let carry = self.net();
+        self.push(Cell::HalfAdder { a, b, sum, carry });
+        (sum, carry)
+    }
+
+    /// Full adder (compound cell).
+    pub fn full_adder(
+        &mut self,
+        a: NetId,
+        b: NetId,
+        c: NetId,
+    ) -> (NetId, NetId) {
+        let sum = self.net();
+        let carry = self.net();
+        self.push(Cell::FullAdder {
+            a,
+            b,
+            c,
+            sum,
+            carry,
+        });
+        (sum, carry)
+    }
+
+    /// Ripple-carry add producing `max(w_a, w_b) + 1` bits.
+    pub fn add(&mut self, a: &Bus, b: &Bus) -> Bus {
+        let width = a.len().max(b.len());
+        let a = self.resize(a, width);
+        let b = self.resize(b, width);
+        let mut out = Vec::with_capacity(width + 1);
+        let mut carry: Option<NetId> = None;
+        for i in 0..width {
+            let (s, c) = match carry {
+                None => self.half_adder(a[i], b[i]),
+                Some(cin) => self.full_adder(a[i], b[i], cin),
+            };
+            out.push(s);
+            carry = Some(c);
+        }
+        out.push(carry.unwrap());
+        out
+    }
+
+    /// Add truncated/extended to exactly `width` result bits.
+    pub fn add_to(&mut self, a: &Bus, b: &Bus, width: usize) -> Bus {
+        let sum = self.add(a, b);
+        self.resize(&sum, width)
+    }
+
+    /// Two's-complement subtract `a - b`, result `width` bits (wraps).
+    pub fn sub_to(&mut self, a: &Bus, b: &Bus, width: usize) -> Bus {
+        let a = self.resize(a, width);
+        let nb = {
+            let b = self.resize(b, width);
+            self.not_bus(&b)
+        };
+        // a + !b + 1 via FA chain with carry-in = 1.
+        let mut out = Vec::with_capacity(width);
+        let mut carry = self.one();
+        for i in 0..width {
+            let (s, c) = self.full_adder(a[i], nb[i], carry);
+            out.push(s);
+            carry = c;
+        }
+        out
+    }
+
+    /// Increment by one to `width` bits (wraps), used for counters.
+    pub fn inc_to(&mut self, a: &Bus, width: usize) -> Bus {
+        let a = self.resize(a, width);
+        let mut out = Vec::with_capacity(width);
+        let mut carry = self.one();
+        for i in 0..width {
+            let (s, c) = self.half_adder(a[i], carry);
+            out.push(s);
+            carry = c;
+        }
+        out
+    }
+
+    /// Equality of a bus against a constant: AND tree of bit matches.
+    pub fn eq_const(&mut self, a: &Bus, value: u64) -> NetId {
+        let matches: Vec<NetId> = a
+            .iter()
+            .enumerate()
+            .map(|(i, &n)| {
+                if (value >> i) & 1 != 0 {
+                    n
+                } else {
+                    self.not_gate(n)
+                }
+            })
+            .collect();
+        self.reduce(BinKind::And, &matches)
+    }
+
+    /// Binary decoder: `2^sel.len()` one-hot outputs.
+    pub fn decode(&mut self, sel: &Bus) -> Vec<NetId> {
+        (0..1u64 << sel.len())
+            .map(|v| self.eq_const(sel, v))
+            .collect()
+    }
+
+    // ------------------------------------------------------------------
+    // Sequential
+    // ------------------------------------------------------------------
+
+    /// Register a bus (optional enable / sync clear), initial value 0.
+    pub fn dff_bus(
+        &mut self,
+        d: &Bus,
+        en: Option<NetId>,
+        clr: Option<NetId>,
+    ) -> Bus {
+        d.iter()
+            .map(|&bit| {
+                let q = self.net();
+                self.push(Cell::Dff {
+                    d: bit,
+                    en,
+                    clr,
+                    q,
+                    init: false,
+                });
+                q
+            })
+            .collect()
+    }
+
+    /// A register whose `d` is wired later via [`Builder::drive_dff_bus`]
+    /// — needed for feedback (accumulators, counters, FSM state).
+    pub fn dff_bus_feedback(
+        &mut self,
+        width: usize,
+        en: Option<NetId>,
+        clr: Option<NetId>,
+    ) -> (Bus, Bus) {
+        let d = self.bus(width);
+        let q = self.dff_bus(&d, en, clr);
+        (q, d)
+    }
+
+    /// Drive the placeholder `d` nets of a feedback register with buffers
+    /// from `src`.
+    pub fn drive(&mut self, placeholder: &Bus, src: &Bus) {
+        assert_eq!(placeholder.len(), src.len(), "drive width mismatch");
+        for (&d, &s) in placeholder.iter().zip(src) {
+            self.push(Cell::Unary {
+                kind: UnaryKind::Buf,
+                a: s,
+                out: d,
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constants_deduplicated() {
+        let mut b = Builder::new("t");
+        let z1 = b.zero();
+        let z2 = b.zero();
+        let o1 = b.one();
+        assert_eq!(z1, z2);
+        assert_ne!(z1, o1);
+        let bus = b.constant(0b1010, 4);
+        assert_eq!(bus[0], z1);
+        assert_eq!(bus[1], o1);
+    }
+
+    #[test]
+    fn builder_produces_valid_netlist() {
+        let mut b = Builder::new("adder4");
+        let x = b.input("x", 4);
+        let y = b.input("y", 4);
+        let s = b.add(&x, &y);
+        b.output("s", &s);
+        let nl = b.finish();
+        assert_eq!(nl.inputs.len(), 2);
+        assert_eq!(nl.outputs[0].bits.len(), 5);
+        assert!(nl.n_cells() > 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "mux_n")]
+    fn mux_n_checks_arity() {
+        let mut b = Builder::new("t");
+        let sel = b.input("s", 2);
+        let c = b.input("c", 1);
+        b.mux_n(&sel, &[vec![c[0]], vec![c[0]], vec![c[0]]]);
+    }
+}

@@ -1,0 +1,225 @@
+//! Primitive cell types.
+//!
+//! The cell set mirrors a small standard-cell library: simple gates, a 2:1
+//! mux, half/full adder compound cells (real libraries provide FA/HA cells —
+//! modelling them as primitives keeps adder area realistic instead of paying
+//! the discrete-gate decomposition tax), and a D flip-flop with optional
+//! enable and synchronous clear.
+
+/// Dense identifier of a single-bit net.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NetId(pub u32);
+
+impl NetId {
+    #[inline]
+    pub fn idx(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// One-input cell kinds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum UnaryKind {
+    Buf,
+    Not,
+}
+
+/// Two-input cell kinds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BinKind {
+    And,
+    Or,
+    Xor,
+    Nand,
+    Nor,
+    Xnor,
+}
+
+impl BinKind {
+    /// Evaluate the gate function.
+    #[inline]
+    pub fn eval(self, a: bool, b: bool) -> bool {
+        match self {
+            BinKind::And => a && b,
+            BinKind::Or => a || b,
+            BinKind::Xor => a ^ b,
+            BinKind::Nand => !(a && b),
+            BinKind::Nor => !(a || b),
+            BinKind::Xnor => !(a ^ b),
+        }
+    }
+}
+
+/// A primitive cell instance.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Cell {
+    /// Constant driver.
+    Const { value: bool, out: NetId },
+    /// Buffer / inverter.
+    Unary {
+        kind: UnaryKind,
+        a: NetId,
+        out: NetId,
+    },
+    /// Two-input gate.
+    Binary {
+        kind: BinKind,
+        a: NetId,
+        b: NetId,
+        out: NetId,
+    },
+    /// 2:1 multiplexer: `out = sel ? a1 : a0`.
+    Mux2 {
+        sel: NetId,
+        a0: NetId,
+        a1: NetId,
+        out: NetId,
+    },
+    /// Half adder compound cell.
+    HalfAdder {
+        a: NetId,
+        b: NetId,
+        sum: NetId,
+        carry: NetId,
+    },
+    /// Full adder compound cell.
+    FullAdder {
+        a: NetId,
+        b: NetId,
+        c: NetId,
+        sum: NetId,
+        carry: NetId,
+    },
+    /// Rising-edge D flip-flop with optional enable and sync clear
+    /// (clear dominates enable). Powers up to `init`.
+    Dff {
+        d: NetId,
+        en: Option<NetId>,
+        clr: Option<NetId>,
+        q: NetId,
+        init: bool,
+    },
+}
+
+impl Cell {
+    /// All nets this cell drives.
+    pub fn outputs(&self) -> Vec<NetId> {
+        match *self {
+            Cell::Const { out, .. }
+            | Cell::Unary { out, .. }
+            | Cell::Binary { out, .. }
+            | Cell::Mux2 { out, .. } => vec![out],
+            Cell::HalfAdder { sum, carry, .. }
+            | Cell::FullAdder { sum, carry, .. } => vec![sum, carry],
+            Cell::Dff { q, .. } => vec![q],
+        }
+    }
+
+    /// All nets this cell reads.
+    pub fn inputs(&self) -> Vec<NetId> {
+        match *self {
+            Cell::Const { .. } => vec![],
+            Cell::Unary { a, .. } => vec![a],
+            Cell::Binary { a, b, .. } => vec![a, b],
+            Cell::Mux2 { sel, a0, a1, .. } => vec![sel, a0, a1],
+            Cell::HalfAdder { a, b, .. } => vec![a, b],
+            Cell::FullAdder { a, b, c, .. } => vec![a, b, c],
+            Cell::Dff { d, en, clr, .. } => {
+                let mut v = vec![d];
+                if let Some(e) = en {
+                    v.push(e);
+                }
+                if let Some(r) = clr {
+                    v.push(r);
+                }
+                v
+            }
+        }
+    }
+
+    /// True for sequential cells (whose outputs are simulation sources).
+    #[inline]
+    pub fn is_sequential(&self) -> bool {
+        matches!(self, Cell::Dff { .. })
+    }
+
+    /// Short library-style name used in stats and reports.
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Cell::Const { .. } => "CONST",
+            Cell::Unary {
+                kind: UnaryKind::Buf,
+                ..
+            } => "BUF",
+            Cell::Unary {
+                kind: UnaryKind::Not,
+                ..
+            } => "INV",
+            Cell::Binary { kind, .. } => match kind {
+                BinKind::And => "AND2",
+                BinKind::Or => "OR2",
+                BinKind::Xor => "XOR2",
+                BinKind::Nand => "NAND2",
+                BinKind::Nor => "NOR2",
+                BinKind::Xnor => "XNOR2",
+            },
+            Cell::Mux2 { .. } => "MUX2",
+            Cell::HalfAdder { .. } => "HA",
+            Cell::FullAdder { .. } => "FA",
+            Cell::Dff { en, clr, .. } => match (en, clr) {
+                (None, None) => "DFF",
+                (Some(_), None) => "DFFE",
+                (None, Some(_)) => "DFFR",
+                (Some(_), Some(_)) => "DFFER",
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binkind_truth_tables() {
+        use BinKind::*;
+        for (kind, table) in [
+            (And, [false, false, false, true]),
+            (Or, [false, true, true, true]),
+            (Xor, [false, true, true, false]),
+            (Nand, [true, true, true, false]),
+            (Nor, [true, false, false, false]),
+            (Xnor, [true, false, false, true]),
+        ] {
+            for (i, want) in table.iter().enumerate() {
+                let a = i & 1 != 0;
+                let b = i & 2 != 0;
+                assert_eq!(kind.eval(a, b), *want, "{kind:?} a={a} b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn cell_io_lists() {
+        let fa = Cell::FullAdder {
+            a: NetId(0),
+            b: NetId(1),
+            c: NetId(2),
+            sum: NetId(3),
+            carry: NetId(4),
+        };
+        assert_eq!(fa.inputs(), vec![NetId(0), NetId(1), NetId(2)]);
+        assert_eq!(fa.outputs(), vec![NetId(3), NetId(4)]);
+        assert_eq!(fa.type_name(), "FA");
+        let dff = Cell::Dff {
+            d: NetId(0),
+            en: Some(NetId(1)),
+            clr: None,
+            q: NetId(2),
+            init: false,
+        };
+        assert!(dff.is_sequential());
+        assert_eq!(dff.type_name(), "DFFE");
+        assert_eq!(dff.inputs(), vec![NetId(0), NetId(1)]);
+    }
+}

@@ -1,0 +1,84 @@
+//! Gate-level structural netlist IR.
+//!
+//! This is the substrate that replaces the paper's Verilog RTL: every
+//! multiplier architecture in [`crate::multipliers`] is *generated* as a
+//! netlist of primitive cells (gates, 2:1 muxes, half/full adders, DFFs),
+//! then simulated cycle-accurately ([`crate::sim`]), timed and costed
+//! against a 28 nm-class library ([`crate::tech`]) after a synthesis-lite
+//! cleanup ([`crate::synth`]).
+//!
+//! Design notes:
+//! * Nets are single-bit and identified by dense [`NetId`]s; buses are
+//!   LSB-first `Vec<NetId>` built by [`Builder`].
+//! * Every net has exactly one driver (checked by [`Netlist::validate`]).
+//! * Sequential state is explicit [`Cell::Dff`]; there is a single implicit
+//!   global clock (the paper's designs are all single-clock @ 1 GHz).
+
+mod builder;
+mod cell;
+mod stats;
+mod validate;
+
+pub use builder::{Builder, Bus};
+pub use cell::{BinKind, Cell, NetId, UnaryKind};
+pub use stats::{CellCounts, NetlistStats};
+
+/// A named port (input or output): an ordered, LSB-first group of nets.
+#[derive(Clone, Debug)]
+pub struct Port {
+    pub name: String,
+    pub bits: Vec<NetId>,
+}
+
+/// A flat gate-level netlist (single module, single implicit clock).
+#[derive(Clone, Debug, Default)]
+pub struct Netlist {
+    pub name: String,
+    /// Total number of nets allocated (NetIds are `0..n_nets`).
+    pub n_nets: usize,
+    pub cells: Vec<Cell>,
+    pub inputs: Vec<Port>,
+    pub outputs: Vec<Port>,
+    /// Extra named internal signals (for VCD waveforms and debugging).
+    pub named: Vec<Port>,
+}
+
+impl Netlist {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            ..Default::default()
+        }
+    }
+
+    /// Number of cells of all kinds.
+    pub fn n_cells(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// Number of sequential elements.
+    pub fn n_dffs(&self) -> usize {
+        self.cells
+            .iter()
+            .filter(|c| matches!(c, Cell::Dff { .. }))
+            .count()
+    }
+
+    /// Look up an input port by name.
+    pub fn input(&self, name: &str) -> Option<&Port> {
+        self.inputs.iter().find(|p| p.name == name)
+    }
+
+    /// Look up an output port by name.
+    pub fn output(&self, name: &str) -> Option<&Port> {
+        self.outputs.iter().find(|p| p.name == name)
+    }
+
+    /// Iterate over every (driver cell, driven net) pair.
+    pub fn drivers(&self) -> impl Iterator<Item = (usize, NetId)> + '_ {
+        self.cells
+            .iter()
+            .enumerate()
+            .flat_map(|(i, c)| c.outputs().into_iter().map(move |o| (i, o)))
+    }
+}

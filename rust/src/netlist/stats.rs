@@ -1,0 +1,85 @@
+//! Cell-count statistics used by reports and by area estimation sanity
+//! checks.
+
+use std::collections::BTreeMap;
+
+use super::Netlist;
+
+/// Per-cell-type instance counts.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct CellCounts {
+    pub by_type: BTreeMap<&'static str, usize>,
+}
+
+impl CellCounts {
+    pub fn total(&self) -> usize {
+        self.by_type.values().sum()
+    }
+
+    pub fn get(&self, ty: &str) -> usize {
+        self.by_type.get(ty).copied().unwrap_or(0)
+    }
+}
+
+/// Summary statistics of a netlist.
+#[derive(Clone, Debug)]
+pub struct NetlistStats {
+    pub name: String,
+    pub n_nets: usize,
+    pub n_cells: usize,
+    pub n_dffs: usize,
+    pub counts: CellCounts,
+}
+
+impl Netlist {
+    pub fn cell_counts(&self) -> CellCounts {
+        let mut counts = CellCounts::default();
+        for c in &self.cells {
+            *counts.by_type.entry(c.type_name()).or_insert(0) += 1;
+        }
+        counts
+    }
+
+    pub fn stats(&self) -> NetlistStats {
+        NetlistStats {
+            name: self.name.clone(),
+            n_nets: self.n_nets,
+            n_cells: self.n_cells(),
+            n_dffs: self.n_dffs(),
+            counts: self.cell_counts(),
+        }
+    }
+}
+
+impl std::fmt::Display for NetlistStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "{}: {} cells ({} seq) over {} nets",
+            self.name, self.n_cells, self.n_dffs, self.n_nets
+        )?;
+        for (ty, n) in &self.counts.by_type {
+            writeln!(f, "  {ty:>6}  {n}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::netlist::Builder;
+
+    #[test]
+    fn counts_adder_cells() {
+        let mut b = Builder::new("a");
+        let x = b.input("x", 8);
+        let y = b.input("y", 8);
+        let s = b.add(&x, &y);
+        b.output("s", &s);
+        let nl = b.finish();
+        let c = nl.cell_counts();
+        assert_eq!(c.get("HA"), 1);
+        assert_eq!(c.get("FA"), 7);
+        assert_eq!(c.total(), nl.n_cells());
+    }
+}

@@ -1,0 +1,191 @@
+//! Structural invariants: single driver per net, no undriven reads, no
+//! combinational cycles. Run by `Builder::finish` on every generated design
+//! and re-run after each synthesis pass.
+
+use anyhow::{bail, Result};
+
+use super::cell::Cell;
+use super::Netlist;
+
+impl Netlist {
+    /// Check structural invariants; returns the first violation found.
+    pub fn validate(&self) -> Result<()> {
+        let mut driver: Vec<i64> = vec![-1; self.n_nets];
+        // Primary inputs are drivers.
+        for p in &self.inputs {
+            for &b in &p.bits {
+                if b.idx() >= self.n_nets {
+                    bail!("input {} references net {} out of range", p.name, b.0);
+                }
+                if driver[b.idx()] != -1 {
+                    bail!("input {} net {} multiply driven", p.name, b.0);
+                }
+                driver[b.idx()] = -2; // input-driven marker
+            }
+        }
+        for (ci, cell) in self.cells.iter().enumerate() {
+            for o in cell.outputs() {
+                if o.idx() >= self.n_nets {
+                    bail!("cell {ci} drives net {} out of range", o.0);
+                }
+                if driver[o.idx()] != -1 {
+                    bail!(
+                        "net {} multiply driven (cell {ci} and {})",
+                        o.0,
+                        driver[o.idx()]
+                    );
+                }
+                driver[o.idx()] = ci as i64;
+            }
+        }
+        // Every read net must be driven.
+        for (ci, cell) in self.cells.iter().enumerate() {
+            for i in cell.inputs() {
+                if i.idx() >= self.n_nets {
+                    bail!("cell {ci} reads net {} out of range", i.0);
+                }
+                if driver[i.idx()] == -1 {
+                    bail!("cell {ci} reads undriven net {}", i.0);
+                }
+            }
+        }
+        for p in self.outputs.iter().chain(&self.named) {
+            for &b in &p.bits {
+                if b.idx() >= self.n_nets || driver[b.idx()] == -1 {
+                    bail!("port {} reads undriven net {}", p.name, b.0);
+                }
+            }
+        }
+        // Combinational cycle check == topological order must exist.
+        self.topo_order()?;
+        Ok(())
+    }
+
+    /// Topological order of *combinational* cells (DFF outputs, constants
+    /// and primary inputs are sources). Errors on combinational cycles.
+    pub fn topo_order(&self) -> Result<Vec<usize>> {
+        // fanout: net -> list of comb cells reading it
+        let mut readers: Vec<Vec<u32>> = vec![Vec::new(); self.n_nets];
+        let mut indeg: Vec<u32> = vec![0; self.cells.len()];
+        let mut comb: Vec<bool> = vec![false; self.cells.len()];
+        for (ci, cell) in self.cells.iter().enumerate() {
+            if cell.is_sequential() || matches!(cell, Cell::Const { .. }) {
+                continue;
+            }
+            comb[ci] = true;
+            for i in cell.inputs() {
+                readers[i.idx()].push(ci as u32);
+            }
+        }
+        // A comb cell's indegree = number of its inputs driven by other comb
+        // cells.
+        let mut driven_by_comb: Vec<i64> = vec![-1; self.n_nets];
+        for (ci, cell) in self.cells.iter().enumerate() {
+            if comb[ci] {
+                for o in cell.outputs() {
+                    driven_by_comb[o.idx()] = ci as i64;
+                }
+            }
+        }
+        for (ci, cell) in self.cells.iter().enumerate() {
+            if !comb[ci] {
+                continue;
+            }
+            indeg[ci] = cell
+                .inputs()
+                .iter()
+                .filter(|n| driven_by_comb[n.idx()] >= 0)
+                .count() as u32;
+        }
+        let mut queue: Vec<usize> = (0..self.cells.len())
+            .filter(|&ci| comb[ci] && indeg[ci] == 0)
+            .collect();
+        let mut order = Vec::with_capacity(queue.len());
+        let mut head = 0;
+        while head < queue.len() {
+            let ci = queue[head];
+            head += 1;
+            order.push(ci);
+            for o in self.cells[ci].outputs() {
+                for &r in &readers[o.idx()] {
+                    let r = r as usize;
+                    indeg[r] -= 1;
+                    if indeg[r] == 0 {
+                        queue.push(r);
+                    }
+                }
+            }
+        }
+        let n_comb = comb.iter().filter(|&&c| c).count();
+        if order.len() != n_comb {
+            bail!(
+                "combinational cycle: {} of {} comb cells unreachable",
+                n_comb - order.len(),
+                n_comb
+            );
+        }
+        Ok(order)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::netlist::{Builder, Cell, NetId, UnaryKind};
+
+    #[test]
+    fn detects_comb_cycle() {
+        let mut nl = crate::netlist::Netlist::new("cyc");
+        nl.n_nets = 2;
+        nl.cells.push(Cell::Unary {
+            kind: UnaryKind::Not,
+            a: NetId(0),
+            out: NetId(1),
+        });
+        nl.cells.push(Cell::Unary {
+            kind: UnaryKind::Not,
+            a: NetId(1),
+            out: NetId(0),
+        });
+        assert!(nl.validate().is_err());
+    }
+
+    #[test]
+    fn detects_double_driver() {
+        let mut b = Builder::new("dd");
+        let x = b.input("x", 1);
+        let y = b.not_gate(x[0]);
+        let mut nl = {
+            b.output("y", &vec![y]);
+            // finish() would validate; poke internals instead
+            let mut nl = crate::netlist::Netlist::new("dd2");
+            nl.n_nets = 2;
+            nl.inputs.push(crate::netlist::Port {
+                name: "x".into(),
+                bits: vec![NetId(0)],
+            });
+            nl.cells.push(Cell::Unary {
+                kind: UnaryKind::Not,
+                a: NetId(0),
+                out: NetId(1),
+            });
+            nl
+        };
+        nl.cells.push(Cell::Unary {
+            kind: UnaryKind::Buf,
+            a: NetId(0),
+            out: NetId(1),
+        });
+        assert!(nl.validate().is_err());
+    }
+
+    #[test]
+    fn dff_feedback_is_not_a_cycle() {
+        let mut b = Builder::new("cnt");
+        let (q, d) = b.dff_bus_feedback(4, None, None);
+        let next = b.inc_to(&q, 4);
+        b.drive(&d, &next);
+        b.output("q", &q);
+        let nl = b.finish();
+        assert!(nl.validate().is_ok());
+    }
+}

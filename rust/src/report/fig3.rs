@@ -1,0 +1,147 @@
+//! Fig. 3 reproduction: functional verification of 8-operand vector-scalar
+//! multiplication — VCD waveforms + a printed cycle timeline for (a) the
+//! nibble multiplier (two-cycle-per-element cadence, broadcast scalar held)
+//! and (b) the LUT-based array multiplier (single combinational step).
+
+use anyhow::Result;
+
+use crate::fabric::VectorUnit;
+use crate::multipliers::Arch;
+use crate::sim::{Simulator, VcdWriter};
+
+/// Outcome of the Fig. 3 run.
+#[derive(Clone, Debug)]
+pub struct Fig3Result {
+    pub text: String,
+    pub nibble_vcd: String,
+    pub lut_vcd: String,
+    pub nibble_cycles: u64,
+    pub lut_cycles: u64,
+}
+
+/// Run the paper's Fig. 3 stimulus (8 operands, broadcast scalar) on both
+/// architectures, dumping VCDs and a human-readable timeline.
+pub fn fig3_run(a: &[u16; 8], b: u16) -> Result<Fig3Result> {
+    let mut text = String::new();
+    text.push_str(&format!(
+        "Fig. 3 — functional verification, 8-operand vector x scalar\n\
+         A = {a:?}\nB = {b} (broadcast, held constant)\n\n"
+    ));
+
+    // (a) nibble multiplier: step cycle by cycle, record r/done.
+    let unit = VectorUnit::new_raw(Arch::Nibble, 8);
+    let mut sim = Simulator::new(&unit.netlist)?;
+    let mut vcd = VcdWriter::for_netlist(&unit.netlist);
+    let a_port = unit.netlist.input("a").expect("a port").clone();
+    for (i, &e) in a.iter().enumerate() {
+        for bit in 0..8 {
+            sim.poke_net(a_port.bits[8 * i + bit], (e >> bit) & 1 != 0);
+        }
+    }
+    sim.set_input("b", b as u64)?;
+    sim.set_input("start", 1)?;
+    sim.settle();
+    vcd.sample(&sim);
+    sim.step();
+    sim.set_input("start", 0)?;
+    text.push_str("(a) precompute-reuse nibble multiplier, sequential:\n");
+    let mut cycles = 0u64;
+    let mut last_r = vec![0u32; 8];
+    loop {
+        sim.settle();
+        let done = sim.get_output("done")? == 1;
+        sim.step();
+        cycles += 1;
+        vcd.sample(&sim);
+        // Note which element results appeared this cycle.
+        let r_port = unit.netlist.output("r").expect("r port");
+        for i in 0..8 {
+            let v =
+                sim.peek_bits(&r_port.bits[16 * i..16 * (i + 1)]) as u32;
+            if v != last_r[i] {
+                text.push_str(&format!(
+                    "  cycle {cycles:>2}: R[{i}] <= {v}  (= {} x {b})\n",
+                    a[i]
+                ));
+                last_r[i] = v;
+            }
+        }
+        if done {
+            break;
+        }
+        anyhow::ensure!(cycles < 64, "nibble unit hung");
+    }
+    text.push_str(&format!(
+        "  done after {cycles} cycles (2 per element, scalar B reused)\n\n"
+    ));
+    let nibble_cycles = cycles;
+    for (i, &e) in a.iter().enumerate() {
+        anyhow::ensure!(
+            last_r[i] == e as u32 * b as u32,
+            "nibble element {i} wrong"
+        );
+    }
+    let nibble_vcd = {
+        let mut w = vcd;
+        w.render()
+    };
+
+    // (b) LUT-based array multiplier: single combinational step.
+    let unit_l = VectorUnit::new_raw(Arch::LutArray, 8);
+    let mut sim_l = Simulator::new(&unit_l.netlist)?;
+    let mut vcd_l = VcdWriter::for_netlist(&unit_l.netlist);
+    let a_port = unit_l.netlist.input("a").expect("a port").clone();
+    vcd_l.sample(&sim_l);
+    for (i, &e) in a.iter().enumerate() {
+        for bit in 0..8 {
+            sim_l.poke_net(a_port.bits[8 * i + bit], (e >> bit) & 1 != 0);
+        }
+    }
+    sim_l.set_input("b", b as u64)?;
+    sim_l.set_input("start", 1)?;
+    sim_l.settle();
+    sim_l.step();
+    vcd_l.sample(&sim_l);
+    text.push_str("(b) LUT-based array multiplier, combinational:\n");
+    let r_port = unit_l.netlist.output("r").expect("r port");
+    for i in 0..8 {
+        let v = sim_l.peek_bits(&r_port.bits[16 * i..16 * (i + 1)]) as u32;
+        anyhow::ensure!(v == a[i] as u32 * b as u32, "lut element {i}");
+        text.push_str(&format!(
+            "  cycle  1: R[{i}] = {v}  (= {} x {b})\n",
+            a[i]
+        ));
+    }
+    text.push_str(
+        "  full vector result in one combinational step\n\n\
+         Both architectures produce identical functional results with \
+         distinct execution profiles (paper Fig. 3).\n",
+    );
+
+    Ok(Fig3Result {
+        text,
+        nibble_vcd,
+        lut_vcd: vcd_l.render(),
+        nibble_cycles,
+        lut_cycles: 1,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_produces_waveforms_and_correct_cadence() {
+        let a = [12u16, 34, 56, 78, 90, 123, 200, 255];
+        let res = fig3_run(&a, 173).unwrap();
+        assert_eq!(res.nibble_cycles, 16, "2 cycles x 8 elements");
+        assert_eq!(res.lut_cycles, 1);
+        assert!(res.nibble_vcd.contains("$enddefinitions"));
+        assert!(res.lut_vcd.contains("$enddefinitions"));
+        // The timeline shows one R write every 2 cycles.
+        assert!(res.text.contains("cycle  2: R[0]"));
+        assert!(res.text.contains("cycle  4: R[1]"));
+        assert!(res.text.contains("cycle 16: R[7]"));
+    }
+}

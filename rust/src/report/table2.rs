@@ -1,0 +1,75 @@
+//! Table 2 reproduction: analytical complexity and cycle latency — with
+//! the cycle counts *measured* on the gate-level simulator rather than
+//! asserted (the measured column must equal the analytical model; the
+//! integration tests enforce it).
+
+use anyhow::Result;
+
+use crate::fabric::VectorUnit;
+use crate::multipliers::Arch;
+use crate::report::render_table;
+
+/// Paper Table 2 rows for 8-bit operands: per-op and N-op latency,
+/// measured for each architecture at vector width `n`.
+pub fn table2_report(n: usize) -> Result<String> {
+    let archs = [
+        Arch::ShiftAdd,
+        Arch::Booth,
+        Arch::Nibble,
+        Arch::Wallace,
+        Arch::Array,
+    ];
+    let mut rows = Vec::new();
+    for arch in archs {
+        // Measure 1-operand latency.
+        let unit1 = VectorUnit::new(arch, 1);
+        let mut sim1 = unit1.simulator()?;
+        let r1 = unit1.run_op(&mut sim1, &[123], 45)?;
+        anyhow::ensure!(r1.products[0] == 123 * 45, "{arch} wrong product");
+        // Measure N-operand latency.
+        let unitn = VectorUnit::new(arch, n);
+        let mut simn = unitn.simulator()?;
+        let a: Vec<u16> = (0..n).map(|i| (i * 31 % 256) as u16).collect();
+        let rn = unitn.run_op(&mut simn, &a, 77)?;
+        rows.push(vec![
+            arch.name().to_string(),
+            arch.type_name().to_string(),
+            arch.complexity().to_string(),
+            r1.cycles.to_string(),
+            rn.cycles.to_string(),
+            format!(
+                "{} / {}",
+                arch.latency_cycles(1),
+                arch.latency_cycles(n)
+            ),
+        ]);
+    }
+    let table = render_table(
+        &[
+            "Multiplier",
+            "Type",
+            "Complexity",
+            "1 OpA (meas.)",
+            &format!("{n} OpA (meas.)"),
+            "paper model",
+        ],
+        &rows,
+    );
+    Ok(format!(
+        "Table 2 — analytical complexity and cycle latency (8-bit operands, \
+         measured on the gate-level simulator, N={n})\n{table}"
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn table2_contains_measured_rows() {
+        let t = super::table2_report(4).unwrap();
+        assert!(t.contains("shift-add"));
+        assert!(t.contains("nibble"));
+        // measured == model for the headline rows
+        assert!(t.contains("8 / 32"));
+        assert!(t.contains("2 / 8"));
+    }
+}

@@ -1,0 +1,181 @@
+//! HLO-text loading + compiled-executable cache + typed execution helpers.
+//!
+//! Interchange is HLO *text*, not serialized HloModuleProto: jax ≥ 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md and DESIGN.md).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::model::quant::QuantMlp;
+use crate::workload::{load_meta, load_testset, load_weights, Meta, TestSet};
+
+/// Well-known artifact names emitted by aot.py.
+#[derive(Clone, Debug)]
+pub struct ArtifactSet {
+    pub dir: PathBuf,
+}
+
+impl ArtifactSet {
+    pub fn new(dir: impl Into<PathBuf>) -> Self {
+        Self { dir: dir.into() }
+    }
+
+    /// Default location relative to the repo root.
+    pub fn default_dir() -> Self {
+        Self::new("artifacts")
+    }
+
+    pub fn hlo_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+
+    pub fn weights(&self) -> Result<QuantMlp> {
+        load_weights(self.dir.join("weights.nmd"))
+    }
+
+    pub fn testset(&self) -> Result<TestSet> {
+        load_testset(self.dir.join("testset.nmd"))
+    }
+
+    pub fn meta(&self) -> Result<Meta> {
+        load_meta(self.dir.join("meta.nmd"))
+    }
+
+    pub fn available(&self) -> bool {
+        self.dir.join(".stamp").exists()
+            || self.hlo_path("nibble_mul_16").exists()
+    }
+}
+
+/// PJRT CPU runtime with a compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    artifacts: ArtifactSet,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client over an artifact directory.
+    pub fn cpu(artifacts: ArtifactSet) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT client: {e:?}"))?;
+        Ok(Self {
+            client,
+            cache: HashMap::new(),
+            artifacts,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifacts(&self) -> &ArtifactSet {
+        &self.artifacts
+    }
+
+    /// Load + compile an artifact by name (cached after the first call).
+    pub fn ensure_loaded(&mut self, name: &str) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.artifacts.hlo_path(name);
+        let exe = self
+            .compile_file(&path)
+            .with_context(|| format!("compiling artifact {name}"))?;
+        self.cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    fn compile_file(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let text_path = path
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 path {path:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(text_path)
+            .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {path:?}: {e:?}"))
+    }
+
+    /// Execute a loaded artifact on i32 tensors; the computation was
+    /// lowered with `return_tuple=True`, so the single tuple output is
+    /// unwrapped. Returns the flat i32 output.
+    pub fn execute_i32(
+        &mut self,
+        name: &str,
+        inputs: &[(&[i32], &[i64])],
+    ) -> Result<Vec<i32>> {
+        self.ensure_loaded(name)?;
+        let exe = self.cache.get(name).expect("just loaded");
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, shape)| {
+                let lit = xla::Literal::vec1(data);
+                lit.reshape(shape)
+                    .map_err(|e| anyhow!("reshape {shape:?}: {e:?}"))
+            })
+            .collect::<Result<_>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
+        let tuple = out
+            .to_tuple1()
+            .map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
+        tuple
+            .to_vec::<i32>()
+            .map_err(|e| anyhow!("read {name}: {e:?}"))
+    }
+
+    /// Vector × broadcast-scalar product via the `nibble_mul_N` artifact.
+    pub fn nibble_mul(&mut self, a: &[i32], b: i32) -> Result<Vec<i32>> {
+        let n = a.len();
+        let name = format!("nibble_mul_{n}");
+        let shape_a = [n as i64];
+        self.execute_i32(&name, &[(a, &shape_a), (&[b], &[1])])
+    }
+
+    /// Vector × broadcast-scalar via the `lut_mul_16` artifact (16 wide).
+    pub fn lut_mul_16(&mut self, a: &[i32], b: i32) -> Result<Vec<i32>> {
+        anyhow::ensure!(a.len() == 16, "lut_mul_16 needs 16 elements");
+        self.execute_i32("lut_mul_16", &[(a, &[16]), (&[b], &[1])])
+    }
+
+    /// Quantized-MLP forward via the `mlp_int8` artifact: `x` is a batch
+    /// of `batch`×`dim` u8 activations (i32 carrier); returns the flat
+    /// `batch`×10 logits.
+    ///
+    /// Weights are runtime PARAMETERS (fed from weights.nmd), not baked
+    /// constants: multi-dim int32 constants in HLO text mis-parse in
+    /// xla_extension 0.5.1 (DESIGN.md §2). Parameter order matches
+    /// aot.py::lower_mlp: x, then (w, bias) per layer.
+    pub fn mlp_int8(
+        &mut self,
+        x: &[i32],
+        batch: i64,
+        dim: i64,
+    ) -> Result<Vec<i32>> {
+        let mlp = self.artifacts.weights()?;
+        let mut inputs: Vec<(Vec<i32>, Vec<i64>)> =
+            vec![(x.to_vec(), vec![batch, dim])];
+        for ly in &mlp.layers {
+            inputs.push((
+                ly.w_q.clone(),
+                vec![ly.n_in as i64, ly.n_out as i64],
+            ));
+            inputs.push((ly.bias_i32.clone(), vec![ly.n_out as i64]));
+        }
+        let refs: Vec<(&[i32], &[i64])> = inputs
+            .iter()
+            .map(|(d, s)| (d.as_slice(), s.as_slice()))
+            .collect();
+        self.execute_i32("mlp_int8", &refs)
+    }
+}

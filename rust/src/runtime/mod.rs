@@ -1,0 +1,7 @@
+//! PJRT runtime: loads the AOT-compiled HLO text artifacts (produced once
+//! by `python/compile/aot.py`) and executes them on the CPU PJRT client.
+//! Python is never on this path — the artifacts are self-contained.
+
+mod executor;
+
+pub use executor::{ArtifactSet, Runtime};

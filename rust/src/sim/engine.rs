@@ -1,0 +1,416 @@
+//! Levelized two-value logic simulator.
+//!
+//! Evaluation model: zero-delay combinational settling in topological order
+//! once per cycle, then a synchronous clock edge commits every DFF. Toggle
+//! counts are recorded on every net value change (input edits, combinational
+//! settling, and register clocking); glitch activity below cycle resolution
+//! is not modelled — the power model accounts for that with a documented
+//! glitch factor (see `tech::power`).
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::netlist::{Cell, Netlist};
+
+/// A pre-compiled combinational operation (hot-loop representation).
+///
+/// `settle` originally walked `topo_order` indices and matched on the
+/// `Cell` enum through two levels of indirection; compiling the order
+/// once into this flat struct-of-operands form made settling ~1.5x
+/// faster (see EXPERIMENTS.md §Perf).
+#[derive(Clone, Copy)]
+struct Op {
+    code: u8, // 0 buf, 1 not, 2..=7 binary (BinKind order), 8 mux, 9 ha, 10 fa
+    a: u32,
+    b: u32,
+    c: u32,
+    o1: u32,
+    o2: u32,
+}
+
+/// Cycle-accurate simulator over a borrowed netlist.
+pub struct Simulator<'a> {
+    nl: &'a Netlist,
+    /// Topological order of combinational cell indices.
+    order: Vec<u32>,
+    /// Pre-compiled combinational program (same order as `order`).
+    ops: Vec<Op>,
+    /// Current value of every net.
+    values: Vec<bool>,
+    /// Cumulative toggle count per net.
+    toggles: Vec<u64>,
+    /// Indices of sequential cells.
+    dffs: Vec<u32>,
+    /// Scratch for next-state computation.
+    next_q: Vec<bool>,
+    /// Completed clock cycles.
+    cycles: u64,
+    /// Port name -> (is_input, index) lookup.
+    ports: HashMap<String, (bool, usize)>,
+}
+
+impl<'a> Simulator<'a> {
+    /// Build a simulator; nets start at 0 / DFF init values, constants
+    /// driven, and the combinational cloud settled.
+    pub fn new(nl: &'a Netlist) -> Result<Self> {
+        let order: Vec<u32> =
+            nl.topo_order()?.into_iter().map(|i| i as u32).collect();
+        let mut values = vec![false; nl.n_nets];
+        let mut dffs = Vec::new();
+        for (ci, cell) in nl.cells.iter().enumerate() {
+            match cell {
+                Cell::Const { value, out } => values[out.idx()] = *value,
+                Cell::Dff { q, init, .. } => {
+                    values[q.idx()] = *init;
+                    dffs.push(ci as u32);
+                }
+                _ => {}
+            }
+        }
+        let mut ports = HashMap::new();
+        for (i, p) in nl.inputs.iter().enumerate() {
+            ports.insert(p.name.clone(), (true, i));
+        }
+        for (i, p) in nl.outputs.iter().enumerate() {
+            ports.insert(p.name.clone(), (false, i));
+        }
+        let ops: Vec<Op> = order
+            .iter()
+            .map(|&ci| {
+                let cell = &nl.cells[ci as usize];
+                match *cell {
+                    Cell::Unary { kind, a, out } => Op {
+                        code: match kind {
+                            crate::netlist::UnaryKind::Buf => 0,
+                            crate::netlist::UnaryKind::Not => 1,
+                        },
+                        a: a.0,
+                        b: 0,
+                        c: 0,
+                        o1: out.0,
+                        o2: 0,
+                    },
+                    Cell::Binary { kind, a, b, out } => Op {
+                        code: 2 + kind as u8,
+                        a: a.0,
+                        b: b.0,
+                        c: 0,
+                        o1: out.0,
+                        o2: 0,
+                    },
+                    Cell::Mux2 { sel, a0, a1, out } => Op {
+                        code: 8,
+                        a: sel.0,
+                        b: a0.0,
+                        c: a1.0,
+                        o1: out.0,
+                        o2: 0,
+                    },
+                    Cell::HalfAdder { a, b, sum, carry } => Op {
+                        code: 9,
+                        a: a.0,
+                        b: b.0,
+                        c: 0,
+                        o1: sum.0,
+                        o2: carry.0,
+                    },
+                    Cell::FullAdder {
+                        a,
+                        b,
+                        c,
+                        sum,
+                        carry,
+                    } => Op {
+                        code: 10,
+                        a: a.0,
+                        b: b.0,
+                        c: c.0,
+                        o1: sum.0,
+                        o2: carry.0,
+                    },
+                    Cell::Const { .. } | Cell::Dff { .. } => {
+                        unreachable!("not combinational")
+                    }
+                }
+            })
+            .collect();
+        let next_q = vec![false; dffs.len()];
+        let mut sim = Self {
+            nl,
+            order,
+            ops,
+            values,
+            toggles: vec![0; nl.n_nets],
+            dffs,
+            next_q,
+            cycles: 0,
+            ports,
+        };
+        sim.settle();
+        // Reset toggle counts: initialisation is not workload activity.
+        sim.toggles.iter_mut().for_each(|t| *t = 0);
+        Ok(sim)
+    }
+
+    /// Number of completed clock cycles.
+    pub fn cycles(&self) -> u64 {
+        self.cycles
+    }
+
+    /// Cumulative per-net toggle counts.
+    pub fn toggles(&self) -> &[u64] {
+        &self.toggles
+    }
+
+    /// Total toggles across all nets.
+    pub fn total_toggles(&self) -> u64 {
+        self.toggles.iter().sum()
+    }
+
+    /// Reset toggle statistics (e.g. after a warm-up phase).
+    pub fn clear_activity(&mut self) {
+        self.toggles.iter_mut().for_each(|t| *t = 0);
+        self.cycles = 0;
+    }
+
+    /// Set a primary input bus to an integer value (LSB-first).
+    pub fn set_input(&mut self, name: &str, value: u64) -> Result<()> {
+        let &(is_in, idx) = self
+            .ports
+            .get(name)
+            .ok_or_else(|| anyhow!("no port named {name}"))?;
+        if !is_in {
+            return Err(anyhow!("{name} is an output"));
+        }
+        let bits = self.nl.inputs[idx].bits.clone();
+        for (i, b) in bits.iter().enumerate() {
+            let v = (value >> i) & 1 != 0;
+            if self.values[b.idx()] != v {
+                self.values[b.idx()] = v;
+                self.toggles[b.idx()] += 1;
+            }
+        }
+        Ok(())
+    }
+
+    /// Read an output bus as an integer (must be ≤ 64 bits).
+    pub fn get_output(&self, name: &str) -> Result<u64> {
+        let &(is_in, idx) = self
+            .ports
+            .get(name)
+            .ok_or_else(|| anyhow!("no port named {name}"))?;
+        let port = if is_in {
+            &self.nl.inputs[idx]
+        } else {
+            &self.nl.outputs[idx]
+        };
+        Ok(self.peek_bits(&port.bits))
+    }
+
+    /// Read an arbitrary net group as an integer (buses wider than 64
+    /// bits are truncated to the low 64 — use [`Simulator::peek_net`] per
+    /// bit for wider data).
+    pub fn peek_bits(&self, bits: &[crate::netlist::NetId]) -> u64 {
+        bits.iter()
+            .take(64)
+            .enumerate()
+            .fold(0u64, |acc, (i, b)| {
+                acc | ((self.values[b.idx()] as u64) << i)
+            })
+    }
+
+    /// Current value of a single net.
+    pub fn peek_net(&self, net: crate::netlist::NetId) -> bool {
+        self.values[net.idx()]
+    }
+
+    /// Set a single net's value directly (for wide primary-input ports
+    /// whose buses exceed 64 bits). Toggle accounting is preserved. The
+    /// caller is responsible for only poking primary-input nets.
+    pub fn poke_net(&mut self, net: crate::netlist::NetId, v: bool) {
+        self.write(net.idx(), v);
+    }
+
+    /// Propagate combinational logic to a fixed point (single levelized
+    /// pass — the order is topological, so one pass settles everything).
+    pub fn settle(&mut self) {
+        // Hot loop: flat pre-compiled ops, no enum matching or netlist
+        // indirection (EXPERIMENTS.md §Perf).
+        for i in 0..self.ops.len() {
+            let op = self.ops[i];
+            let av = self.values[op.a as usize];
+            match op.code {
+                0 => self.write(op.o1 as usize, av),
+                1 => self.write(op.o1 as usize, !av),
+                2..=7 => {
+                    let bv = self.values[op.b as usize];
+                    let v = match op.code {
+                        2 => av && bv,
+                        3 => av || bv,
+                        4 => av ^ bv,
+                        5 => !(av && bv),
+                        6 => !(av || bv),
+                        _ => !(av ^ bv),
+                    };
+                    self.write(op.o1 as usize, v);
+                }
+                8 => {
+                    let v = if av {
+                        self.values[op.c as usize]
+                    } else {
+                        self.values[op.b as usize]
+                    };
+                    self.write(op.o1 as usize, v);
+                }
+                9 => {
+                    let bv = self.values[op.b as usize];
+                    self.write(op.o1 as usize, av ^ bv);
+                    self.write(op.o2 as usize, av && bv);
+                }
+                _ => {
+                    let bv = self.values[op.b as usize];
+                    let cv = self.values[op.c as usize];
+                    self.write(op.o1 as usize, av ^ bv ^ cv);
+                    self.write(
+                        op.o2 as usize,
+                        (av && bv) || (cv && (av ^ bv)),
+                    );
+                }
+            }
+        }
+    }
+
+    #[inline]
+    fn write(&mut self, idx: usize, v: bool) {
+        // Branchy change-detection kept deliberately: a branchless
+        // variant (unconditional store + flag add) measured ~equal on
+        // pure settling but worse on full clock cycles, where most DFF
+        // commits don't change and the store dirties cache lines
+        // (EXPERIMENTS.md §Perf iteration log).
+        if self.values[idx] != v {
+            self.values[idx] = v;
+            self.toggles[idx] += 1;
+        }
+    }
+
+    /// One full clock cycle: settle combinational logic, then commit every
+    /// DFF on the rising edge, then settle the new state.
+    pub fn step(&mut self) {
+        self.settle();
+        let nl = self.nl;
+        // Sample all D inputs first (simultaneous edge semantics)...
+        for k in 0..self.dffs.len() {
+            let ci = self.dffs[k];
+            if let Cell::Dff { d, en, clr, q, .. } = nl.cells[ci as usize] {
+                let cur = self.values[q.idx()];
+                let mut next = cur;
+                let enabled =
+                    en.map_or(true, |e| self.values[e.idx()]);
+                if enabled {
+                    next = self.values[d.idx()];
+                }
+                if let Some(r) = clr {
+                    if self.values[r.idx()] {
+                        next = false;
+                    }
+                }
+                self.next_q[k] = next;
+            }
+        }
+        // ...then commit.
+        for k in 0..self.dffs.len() {
+            let ci = self.dffs[k];
+            if let Cell::Dff { q, .. } = nl.cells[ci as usize] {
+                let v = self.next_q[k];
+                self.write(q.idx(), v);
+            }
+        }
+        self.settle();
+        self.cycles += 1;
+    }
+
+    /// Run `n` clock cycles.
+    pub fn run(&mut self, n: u64) {
+        for _ in 0..n {
+            self.step();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::Builder;
+
+    fn counter4() -> Netlist {
+        let mut b = Builder::new("counter4");
+        let (q, d) = b.dff_bus_feedback(4, None, None);
+        let next = b.inc_to(&q, 4);
+        b.drive(&d, &next);
+        b.output("q", &q);
+        b.finish()
+    }
+
+    #[test]
+    fn counter_counts_and_wraps() {
+        let nl = counter4();
+        let mut sim = Simulator::new(&nl).unwrap();
+        assert_eq!(sim.get_output("q").unwrap(), 0);
+        for i in 1..=20u64 {
+            sim.step();
+            assert_eq!(sim.get_output("q").unwrap(), i % 16);
+        }
+        assert_eq!(sim.cycles(), 20);
+    }
+
+    #[test]
+    fn combinational_logic_settles() {
+        let mut b = Builder::new("xor8");
+        let x = b.input("x", 8);
+        let y = b.input("y", 8);
+        let z = b.bitwise(crate::netlist::BinKind::Xor, &x, &y);
+        b.output("z", &z);
+        let nl = b.finish();
+        let mut sim = Simulator::new(&nl).unwrap();
+        sim.set_input("x", 0b1100_1010).unwrap();
+        sim.set_input("y", 0b1010_1100).unwrap();
+        sim.settle();
+        assert_eq!(sim.get_output("z").unwrap(), 0b0110_0110);
+    }
+
+    #[test]
+    fn enable_and_clear_semantics() {
+        let mut b = Builder::new("reg");
+        let d = b.input("d", 4);
+        let en = b.input("en", 1);
+        let clr = b.input("clr", 1);
+        let q = b.dff_bus(&d, Some(en[0]), Some(clr[0]));
+        b.output("q", &q);
+        let nl = b.finish();
+        let mut sim = Simulator::new(&nl).unwrap();
+        sim.set_input("d", 0xA).unwrap();
+        sim.set_input("en", 0).unwrap();
+        sim.set_input("clr", 0).unwrap();
+        sim.step();
+        assert_eq!(sim.get_output("q").unwrap(), 0, "disabled: holds");
+        sim.set_input("en", 1).unwrap();
+        sim.step();
+        assert_eq!(sim.get_output("q").unwrap(), 0xA, "enabled: loads");
+        sim.set_input("clr", 1).unwrap();
+        sim.step();
+        assert_eq!(sim.get_output("q").unwrap(), 0, "clear dominates");
+    }
+
+    #[test]
+    fn toggle_counting_is_change_based() {
+        let nl = counter4();
+        let mut sim = Simulator::new(&nl).unwrap();
+        sim.step(); // 0 -> 1: bit0 toggles
+        let t_after_one = sim.total_toggles();
+        assert!(t_after_one > 0);
+        let mut sim2 = Simulator::new(&nl).unwrap();
+        sim2.run(16); // full wrap: every q bit toggled several times
+        assert!(sim2.total_toggles() > t_after_one);
+    }
+}

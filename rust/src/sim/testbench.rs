@@ -1,0 +1,51 @@
+//! Small testbench helpers shared by unit tests, the fabric drivers and the
+//! power-stimulus harness.
+
+use anyhow::Result;
+
+use crate::sim::Simulator;
+
+/// Drive a set of inputs and settle the combinational cloud (no clock).
+pub fn drive_and_settle(
+    sim: &mut Simulator<'_>,
+    inputs: &[(&str, u64)],
+) -> Result<()> {
+    for (name, v) in inputs {
+        sim.set_input(name, *v)?;
+    }
+    sim.settle();
+    Ok(())
+}
+
+/// Drive inputs then run `n` full clock cycles.
+pub fn run_cycles(
+    sim: &mut Simulator<'_>,
+    inputs: &[(&str, u64)],
+    n: u64,
+) -> Result<()> {
+    for (name, v) in inputs {
+        sim.set_input(name, *v)?;
+    }
+    sim.run(n);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::Builder;
+
+    #[test]
+    fn helpers_drive_and_clock() {
+        let mut b = Builder::new("t");
+        let x = b.input("x", 4);
+        let q = b.dff_bus(&x, None, None);
+        b.output("q", &q);
+        let nl = b.finish();
+        let mut sim = Simulator::new(&nl).unwrap();
+        drive_and_settle(&mut sim, &[("x", 9)]).unwrap();
+        assert_eq!(sim.get_output("q").unwrap(), 0);
+        run_cycles(&mut sim, &[("x", 9)], 1).unwrap();
+        assert_eq!(sim.get_output("q").unwrap(), 9);
+    }
+}

@@ -1,0 +1,472 @@
+//! Constant propagation, boolean identities, and structural hashing (CSE).
+//!
+//! One round processes combinational cells in topological order, tracking
+//! for every net whether it is a known constant or an alias of another net,
+//! folding cells whose semantics collapse, and merging structurally
+//! identical cells. Sequential cells are never folded (their inputs are
+//! still resolved). The result is behaviourally equivalent by construction:
+//! every rewrite is a boolean identity.
+
+use std::collections::HashMap;
+
+use crate::netlist::{BinKind, Cell, NetId, Netlist, Port, UnaryKind};
+
+/// Lattice value for a net during the pass.
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Val {
+    /// Not statically known — represented by `root` net in the output.
+    Net(NetId),
+    Const(bool),
+}
+
+struct Rewriter {
+    /// Resolution for every original net id.
+    val: Vec<Val>,
+    /// Output cells.
+    cells: Vec<Cell>,
+    /// Net allocator for the output netlist (same id space, extended).
+    n_nets: usize,
+    /// Shared constant nets in the output.
+    const0: Option<NetId>,
+    const1: Option<NetId>,
+    /// Structural hash: (tag, in0, in1, in2) -> outputs.
+    cse: HashMap<(u8, u32, u32, u32), Vec<NetId>>,
+}
+
+impl Rewriter {
+    fn new(nl: &Netlist) -> Self {
+        Self {
+            val: (0..nl.n_nets).map(|i| Val::Net(NetId(i as u32))).collect(),
+            cells: Vec::with_capacity(nl.cells.len()),
+            n_nets: nl.n_nets,
+            const0: None,
+            const1: None,
+            cse: HashMap::new(),
+        }
+    }
+
+    fn fresh(&mut self) -> NetId {
+        let id = NetId(self.n_nets as u32);
+        self.n_nets += 1;
+        id
+    }
+
+    /// Resolve an original net to its output representation.
+    fn resolve(&self, n: NetId) -> Val {
+        // Aliases always point to already-final values (we only alias to
+        // resolved values), so a single lookup suffices.
+        self.val[n.idx()]
+    }
+
+    /// Materialise a value as a concrete output net.
+    fn as_net(&mut self, v: Val) -> NetId {
+        match v {
+            Val::Net(n) => n,
+            Val::Const(false) => self.const_net(false),
+            Val::Const(true) => self.const_net(true),
+        }
+    }
+
+    fn const_net(&mut self, value: bool) -> NetId {
+        let slot = if value { &mut self.const1 } else { &mut self.const0 };
+        if let Some(n) = *slot {
+            return n;
+        }
+        let id = NetId(self.n_nets as u32);
+        self.n_nets += 1;
+        self.cells.push(Cell::Const { value, out: id });
+        if value {
+            self.const1 = Some(id);
+        } else {
+            self.const0 = Some(id);
+        }
+        id
+    }
+
+    /// Emit an INV (with CSE) and return its output value.
+    fn emit_not(&mut self, a: Val) -> Val {
+        match a {
+            Val::Const(v) => Val::Const(!v),
+            Val::Net(n) => {
+                let key = (100, n.0, u32::MAX, u32::MAX);
+                if let Some(outs) = self.cse.get(&key) {
+                    return Val::Net(outs[0]);
+                }
+                let out = self.fresh();
+                self.cells.push(Cell::Unary {
+                    kind: UnaryKind::Not,
+                    a: n,
+                    out,
+                });
+                self.cse.insert(key, vec![out]);
+                Val::Net(out)
+            }
+        }
+    }
+
+    /// Emit a binary gate (with identities + CSE); returns output value.
+    fn emit_bin(&mut self, kind: BinKind, a: Val, b: Val) -> Val {
+        use BinKind::*;
+        // Both constant.
+        if let (Val::Const(x), Val::Const(y)) = (a, b) {
+            return Val::Const(kind.eval(x, y));
+        }
+        // One constant.
+        let (cst, net) = match (a, b) {
+            (Val::Const(c), Val::Net(n)) | (Val::Net(n), Val::Const(c)) => {
+                (Some(c), Some(n))
+            }
+            _ => (None, None),
+        };
+        if let (Some(c), Some(n)) = (cst, net) {
+            let nv = Val::Net(n);
+            return match (kind, c) {
+                (And, false) | (Nor, true) => Val::Const(false),
+                (Or, true) | (Nand, false) => Val::Const(true),
+                (And, true) | (Or, false) | (Xor, false) | (Xnor, true) => nv,
+                (Xor, true) | (Xnor, false) | (Nand, true) | (Nor, false) => {
+                    self.emit_not(nv)
+                }
+            };
+        }
+        // Same-net operands.
+        if let (Val::Net(x), Val::Net(y)) = (a, b) {
+            if x == y {
+                return match kind {
+                    And | Or => Val::Net(x),
+                    Xor => Val::Const(false),
+                    Xnor => Val::Const(true),
+                    Nand | Nor => self.emit_not(Val::Net(x)),
+                };
+            }
+            // Commutative: canonical operand order for CSE.
+            let (lo, hi) = if x.0 <= y.0 { (x, y) } else { (y, x) };
+            let key = (kind as u8, lo.0, hi.0, u32::MAX);
+            if let Some(outs) = self.cse.get(&key) {
+                return Val::Net(outs[0]);
+            }
+            let out = self.fresh();
+            self.cells.push(Cell::Binary {
+                kind,
+                a: lo,
+                b: hi,
+                out,
+            });
+            self.cse.insert(key, vec![out]);
+            return Val::Net(out);
+        }
+        unreachable!()
+    }
+
+    /// Emit a mux2 (with identities + CSE); returns output value.
+    fn emit_mux(&mut self, sel: Val, a0: Val, a1: Val) -> Val {
+        match sel {
+            Val::Const(false) => return a0,
+            Val::Const(true) => return a1,
+            Val::Net(_) => {}
+        }
+        if a0 == a1 {
+            return a0;
+        }
+        match (a0, a1) {
+            (Val::Const(false), Val::Const(true)) => sel,
+            (Val::Const(true), Val::Const(false)) => self.emit_not(sel),
+            (Val::Const(false), v) => self.emit_bin(BinKind::And, sel, v),
+            (Val::Const(true), v) => {
+                let ns = self.emit_not(sel);
+                self.emit_bin(BinKind::Or, ns, v)
+            }
+            (v, Val::Const(false)) => {
+                let ns = self.emit_not(sel);
+                self.emit_bin(BinKind::And, ns, v)
+            }
+            (v, Val::Const(true)) => self.emit_bin(BinKind::Or, sel, v),
+            (Val::Net(x0), Val::Net(x1)) => {
+                let s = self.as_net(sel);
+                let key = (101, s.0, x0.0, x1.0);
+                if let Some(outs) = self.cse.get(&key) {
+                    return Val::Net(outs[0]);
+                }
+                let out = self.fresh();
+                self.cells.push(Cell::Mux2 {
+                    sel: s,
+                    a0: x0,
+                    a1: x1,
+                    out,
+                });
+                self.cse.insert(key, vec![out]);
+                Val::Net(out)
+            }
+        }
+    }
+
+    /// Emit a half adder; returns (sum, carry) values.
+    fn emit_ha(&mut self, a: Val, b: Val) -> (Val, Val) {
+        match (a, b) {
+            (Val::Const(x), Val::Const(y)) => {
+                (Val::Const(x ^ y), Val::Const(x && y))
+            }
+            (Val::Const(false), v) | (v, Val::Const(false)) => {
+                (v, Val::Const(false))
+            }
+            (Val::Const(true), v) | (v, Val::Const(true)) => {
+                (self.emit_not(v), v)
+            }
+            (Val::Net(x), Val::Net(y)) => {
+                if x == y {
+                    // sum = 0, carry = a
+                    return (Val::Const(false), Val::Net(x));
+                }
+                let (lo, hi) = if x.0 <= y.0 { (x, y) } else { (y, x) };
+                let key = (102, lo.0, hi.0, u32::MAX);
+                if let Some(outs) = self.cse.get(&key) {
+                    return (Val::Net(outs[0]), Val::Net(outs[1]));
+                }
+                let sum = self.fresh();
+                let carry = self.fresh();
+                self.cells.push(Cell::HalfAdder {
+                    a: lo,
+                    b: hi,
+                    sum,
+                    carry,
+                });
+                self.cse.insert(key, vec![sum, carry]);
+                (Val::Net(sum), Val::Net(carry))
+            }
+        }
+    }
+
+    /// Emit a full adder; returns (sum, carry) values.
+    fn emit_fa(&mut self, a: Val, b: Val, c: Val) -> (Val, Val) {
+        let consts: Vec<bool> = [a, b, c]
+            .iter()
+            .filter_map(|v| match v {
+                Val::Const(x) => Some(*x),
+                _ => None,
+            })
+            .collect();
+        let nets: Vec<Val> = [a, b, c]
+            .iter()
+            .filter(|v| matches!(v, Val::Net(_)))
+            .cloned()
+            .collect();
+        match consts.len() {
+            3 => {
+                let total =
+                    consts.iter().filter(|&&x| x).count();
+                (Val::Const(total % 2 == 1), Val::Const(total >= 2))
+            }
+            2 => {
+                let ones = consts.iter().filter(|&&x| x).count();
+                let v = nets[0];
+                match ones {
+                    0 => (v, Val::Const(false)),
+                    1 => (self.emit_not(v), v),
+                    _ => (v, Val::Const(true)),
+                }
+            }
+            1 => {
+                if consts[0] {
+                    // sum = XNOR(x,y), carry = OR(x,y)
+                    let s = self.emit_bin(BinKind::Xnor, nets[0], nets[1]);
+                    let c = self.emit_bin(BinKind::Or, nets[0], nets[1]);
+                    (s, c)
+                } else {
+                    self.emit_ha(nets[0], nets[1])
+                }
+            }
+            _ => {
+                let (x, y, z) = match (a, b, c) {
+                    (Val::Net(x), Val::Net(y), Val::Net(z)) => (x, y, z),
+                    _ => unreachable!(),
+                };
+                // Pair-equal simplifications: FA(x,x,z) = (z, x).
+                if x == y {
+                    return (c, a);
+                }
+                if x == z {
+                    return (b, a);
+                }
+                if y == z {
+                    return (a, b);
+                }
+                let mut ins = [x.0, y.0, z.0];
+                ins.sort_unstable();
+                let key = (103, ins[0], ins[1], ins[2]);
+                if let Some(outs) = self.cse.get(&key) {
+                    return (Val::Net(outs[0]), Val::Net(outs[1]));
+                }
+                let sum = self.fresh();
+                let carry = self.fresh();
+                self.cells.push(Cell::FullAdder {
+                    a: NetId(ins[0]),
+                    b: NetId(ins[1]),
+                    c: NetId(ins[2]),
+                    sum,
+                    carry,
+                });
+                self.cse.insert(key, vec![sum, carry]);
+                (Val::Net(sum), Val::Net(carry))
+            }
+        }
+    }
+}
+
+/// One round of constant propagation + identities + CSE.
+pub fn constprop_round(nl: &Netlist) -> Netlist {
+    let order = nl.topo_order().expect("input netlist must be acyclic");
+    let mut rw = Rewriter::new(nl);
+
+    // Constants first (they are not in the comb order).
+    for cell in &nl.cells {
+        if let Cell::Const { value, out } = cell {
+            rw.val[out.idx()] = Val::Const(*value);
+        }
+    }
+    // Combinational cells in topo order.
+    for ci in order {
+        match nl.cells[ci].clone() {
+            Cell::Unary { kind, a, out } => {
+                let av = rw.resolve(a);
+                let v = match kind {
+                    UnaryKind::Buf => av,
+                    UnaryKind::Not => rw.emit_not(av),
+                };
+                rw.val[out.idx()] = v;
+            }
+            Cell::Binary { kind, a, b, out } => {
+                let (av, bv) = (rw.resolve(a), rw.resolve(b));
+                rw.val[out.idx()] = rw.emit_bin(kind, av, bv);
+            }
+            Cell::Mux2 { sel, a0, a1, out } => {
+                let (s, x0, x1) =
+                    (rw.resolve(sel), rw.resolve(a0), rw.resolve(a1));
+                rw.val[out.idx()] = rw.emit_mux(s, x0, x1);
+            }
+            Cell::HalfAdder { a, b, sum, carry } => {
+                let (av, bv) = (rw.resolve(a), rw.resolve(b));
+                let (s, c) = rw.emit_ha(av, bv);
+                rw.val[sum.idx()] = s;
+                rw.val[carry.idx()] = c;
+            }
+            Cell::FullAdder {
+                a,
+                b,
+                c,
+                sum,
+                carry,
+            } => {
+                let (av, bv, cv) =
+                    (rw.resolve(a), rw.resolve(b), rw.resolve(c));
+                let (s, co) = rw.emit_fa(av, bv, cv);
+                rw.val[sum.idx()] = s;
+                rw.val[carry.idx()] = co;
+            }
+            Cell::Const { .. } | Cell::Dff { .. } => {}
+        }
+    }
+    // Sequential cells: keep, resolving inputs (q keeps its identity).
+    for cell in &nl.cells {
+        if let Cell::Dff { d, en, clr, q, init } = cell {
+            let dv = rw.resolve(*d);
+            let d_net = rw.as_net(dv);
+            let en_net = en.map(|e| {
+                let v = rw.resolve(e);
+                rw.as_net(v)
+            });
+            let clr_net = clr.map(|r| {
+                let v = rw.resolve(r);
+                rw.as_net(v)
+            });
+            // Drop always-disabled-enable handling etc. to DCE via consts.
+            rw.cells.push(Cell::Dff {
+                d: d_net,
+                en: en_net,
+                clr: clr_net,
+                q: *q,
+                init: *init,
+            });
+        }
+    }
+
+    // Rebuild ports with resolved nets (outputs may now be constants).
+    let remap_port = |rw: &mut Rewriter, p: &Port| Port {
+        name: p.name.clone(),
+        bits: p
+            .bits
+            .iter()
+            .map(|&b| {
+                let v = rw.resolve(b);
+                rw.as_net(v)
+            })
+            .collect(),
+    };
+    let inputs = nl.inputs.clone(); // input nets are their own roots
+    let outputs: Vec<Port> =
+        nl.outputs.iter().map(|p| remap_port(&mut rw, p)).collect();
+    let named: Vec<Port> =
+        nl.named.iter().map(|p| remap_port(&mut rw, p)).collect();
+
+    Netlist {
+        name: nl.name.clone(),
+        n_nets: rw.n_nets,
+        cells: rw.cells,
+        inputs,
+        outputs,
+        named,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::Builder;
+
+    #[test]
+    fn folds_constant_logic() {
+        let mut b = Builder::new("c");
+        let x = b.input("x", 1);
+        let zero = b.zero();
+        let one = b.one();
+        let t1 = b.and_gate(x[0], zero); // -> 0
+        let t2 = b.or_gate(t1, one); // -> 1
+        let t3 = b.xor_gate(t2, x[0]); // -> !x
+        b.output("y", &vec![t3]);
+        let nl = b.finish();
+        let out = constprop_round(&nl);
+        // Only an INV (plus possibly const cells) should survive.
+        let counts = out.cell_counts();
+        assert_eq!(counts.get("INV"), 1);
+        assert_eq!(counts.get("AND2") + counts.get("OR2"), 0);
+    }
+
+    #[test]
+    fn cse_merges_duplicate_gates() {
+        let mut b = Builder::new("c");
+        let x = b.input("x", 1);
+        let y = b.input("y", 1);
+        let g1 = b.and_gate(x[0], y[0]);
+        let g2 = b.and_gate(y[0], x[0]); // commutative duplicate
+        let o = b.or_gate(g1, g2); // -> alias of g1 after CSE
+        b.output("o", &vec![o]);
+        let nl = b.finish();
+        let out = constprop_round(&nl);
+        assert_eq!(out.cell_counts().get("AND2"), 1);
+        assert_eq!(out.cell_counts().get("OR2"), 0);
+    }
+
+    #[test]
+    fn fa_with_constant_zero_becomes_ha() {
+        let mut b = Builder::new("c");
+        let x = b.input("x", 1);
+        let y = b.input("y", 1);
+        let z = b.zero();
+        let (s, c) = b.full_adder(x[0], y[0], z);
+        b.output("s", &vec![s]);
+        b.output("c", &vec![c]);
+        let nl = b.finish();
+        let out = constprop_round(&nl);
+        assert_eq!(out.cell_counts().get("FA"), 0);
+        assert_eq!(out.cell_counts().get("HA"), 1);
+    }
+}

@@ -1,0 +1,187 @@
+//! Dead-cell elimination + net-id compaction.
+//!
+//! Backward reachability from the primary outputs (and named debug
+//! signals): any cell none of whose outputs transitively feeds a port is
+//! removed — including dead state registers, matching what a synthesis
+//! tool's sweep does.
+
+use crate::netlist::{Netlist, Port};
+
+/// Remove dead cells and compact net ids.
+pub fn dce(nl: &Netlist) -> Netlist {
+    // Driver index: net -> cell.
+    let mut driver: Vec<i64> = vec![-1; nl.n_nets];
+    for (ci, cell) in nl.cells.iter().enumerate() {
+        for o in cell.outputs() {
+            driver[o.idx()] = ci as i64;
+        }
+    }
+    let mut live_cell = vec![false; nl.cells.len()];
+    let mut visited_net = vec![false; nl.n_nets];
+    let mut stack: Vec<u32> = Vec::new();
+    for p in nl.outputs.iter().chain(&nl.named) {
+        for &b in &p.bits {
+            if !visited_net[b.idx()] {
+                visited_net[b.idx()] = true;
+                stack.push(b.0);
+            }
+        }
+    }
+    while let Some(n) = stack.pop() {
+        let ci = driver[n as usize];
+        if ci < 0 {
+            continue; // primary input or undriven (ports only)
+        }
+        let ci = ci as usize;
+        if live_cell[ci] {
+            continue;
+        }
+        live_cell[ci] = true;
+        for i in nl.cells[ci].inputs() {
+            if !visited_net[i.idx()] {
+                visited_net[i.idx()] = true;
+                stack.push(i.0);
+            }
+        }
+    }
+
+    // Compact net ids: keep nets referenced by live cells or any port.
+    let mut new_id: Vec<i64> = vec![-1; nl.n_nets];
+    let mut next = 0u32;
+    let touch = |nets: Vec<crate::netlist::NetId>,
+                     new_id: &mut Vec<i64>,
+                     next: &mut u32| {
+        for n in nets {
+            if new_id[n.idx()] == -1 {
+                new_id[n.idx()] = *next as i64;
+                *next += 1;
+            }
+        }
+    };
+    for p in nl.inputs.iter().chain(&nl.outputs).chain(&nl.named) {
+        touch(p.bits.clone(), &mut new_id, &mut next);
+    }
+    for (ci, cell) in nl.cells.iter().enumerate() {
+        if live_cell[ci] {
+            touch(cell.inputs(), &mut new_id, &mut next);
+            touch(cell.outputs(), &mut new_id, &mut next);
+        }
+    }
+    let remap = |n: crate::netlist::NetId| {
+        crate::netlist::NetId(new_id[n.idx()] as u32)
+    };
+    let remap_port = |p: &Port| Port {
+        name: p.name.clone(),
+        bits: p.bits.iter().map(|&b| remap(b)).collect(),
+    };
+
+    let mut cells = Vec::with_capacity(live_cell.iter().filter(|&&l| l).count());
+    for (ci, cell) in nl.cells.iter().enumerate() {
+        if !live_cell[ci] {
+            continue;
+        }
+        use crate::netlist::Cell::*;
+        cells.push(match cell.clone() {
+            Const { value, out } => Const {
+                value,
+                out: remap(out),
+            },
+            Unary { kind, a, out } => Unary {
+                kind,
+                a: remap(a),
+                out: remap(out),
+            },
+            Binary { kind, a, b, out } => Binary {
+                kind,
+                a: remap(a),
+                b: remap(b),
+                out: remap(out),
+            },
+            Mux2 { sel, a0, a1, out } => Mux2 {
+                sel: remap(sel),
+                a0: remap(a0),
+                a1: remap(a1),
+                out: remap(out),
+            },
+            HalfAdder { a, b, sum, carry } => HalfAdder {
+                a: remap(a),
+                b: remap(b),
+                sum: remap(sum),
+                carry: remap(carry),
+            },
+            FullAdder {
+                a,
+                b,
+                c,
+                sum,
+                carry,
+            } => FullAdder {
+                a: remap(a),
+                b: remap(b),
+                c: remap(c),
+                sum: remap(sum),
+                carry: remap(carry),
+            },
+            Dff {
+                d,
+                en,
+                clr,
+                q,
+                init,
+            } => Dff {
+                d: remap(d),
+                en: en.map(remap),
+                clr: clr.map(remap),
+                q: remap(q),
+                init,
+            },
+        });
+    }
+
+    Netlist {
+        name: nl.name.clone(),
+        n_nets: next as usize,
+        cells,
+        inputs: nl.inputs.iter().map(remap_port).collect(),
+        outputs: nl.outputs.iter().map(remap_port).collect(),
+        named: nl.named.iter().map(remap_port).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::Builder;
+
+    #[test]
+    fn removes_unreferenced_logic() {
+        let mut b = Builder::new("dead");
+        let x = b.input("x", 4);
+        let y = b.input("y", 4);
+        let used = b.add(&x, &y);
+        let _dead = {
+            let t = b.bitwise(crate::netlist::BinKind::Xor, &x, &y);
+            b.add(&t, &y) // never reaches an output
+        };
+        b.output("s", &used);
+        // bypass finish() validation: dead logic is valid, just wasteful
+        let nl = b.finish();
+        let swept = dce(&nl);
+        assert!(swept.n_cells() < nl.n_cells());
+        assert_eq!(swept.cell_counts().get("XOR2"), 0);
+        swept.validate().unwrap();
+    }
+
+    #[test]
+    fn dead_registers_are_swept() {
+        let mut b = Builder::new("deadreg");
+        let x = b.input("x", 4);
+        let _q = b.dff_bus(&x, None, None); // unread register
+        let y = b.not_bus(&x);
+        b.output("y", &y);
+        let nl = b.finish();
+        let swept = dce(&nl);
+        assert_eq!(swept.n_dffs(), 0);
+        swept.validate().unwrap();
+    }
+}

@@ -1,0 +1,111 @@
+//! Synthesis-lite: netlist optimization passes + post-synthesis reports.
+//!
+//! Substitutes the optimization half of the paper's commercial synthesis
+//! flow. The passes matter for fidelity: the LUT-based array multiplier's
+//! hex-string tables are *constant* structures that real synthesis folds
+//! into shared selection logic — costing the raw generated mux trees would
+//! overstate its area. We run the same class of transforms:
+//!
+//! * constant propagation + boolean identities ([`constprop`])
+//! * common-subexpression elimination (structural hashing)
+//! * dead-cell elimination + net compaction ([`dce`])
+//!
+//! ...to a fixpoint, then produce area/power/timing reports shaped like
+//! post-synthesis reports ([`report`]).
+
+mod constprop;
+mod dce;
+mod report;
+
+pub use constprop::constprop_round;
+pub use dce::dce;
+pub use report::{synthesize, SynthReport};
+
+use crate::netlist::Netlist;
+
+/// Run optimization rounds to a fixpoint (bounded; each round is
+/// monotonically non-increasing in cell count).
+pub fn optimize(nl: &Netlist) -> Netlist {
+    let mut cur = nl.clone();
+    for _ in 0..16 {
+        let folded = constprop_round(&cur);
+        let swept = dce(&folded);
+        let done = swept.n_cells() == cur.n_cells();
+        cur = swept;
+        if done {
+            break;
+        }
+    }
+    cur.validate().expect("optimize produced invalid netlist");
+    cur
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::Builder;
+    use crate::sim::Simulator;
+    use crate::util::Xoshiro256;
+
+    /// Optimization must preserve I/O behaviour: compare a random workload
+    /// on the original vs optimized netlist.
+    #[test]
+    fn optimize_preserves_behaviour() {
+        let mut b = Builder::new("mixed");
+        let x = b.input("x", 8);
+        let y = b.input("y", 8);
+        let c = b.constant(0x35, 8);
+        let t1 = b.add(&x, &c);
+        let t2 = b.bitwise(crate::netlist::BinKind::Xor, &y, &c);
+        let t3 = b.add_to(&t1, &t2, 10);
+        let q = b.dff_bus(&t3, None, None);
+        b.output("q", &q);
+        let nl = b.finish();
+        let opt = optimize(&nl);
+        assert!(opt.n_cells() <= nl.n_cells());
+
+        let mut s1 = Simulator::new(&nl).unwrap();
+        let mut s2 = Simulator::new(&opt).unwrap();
+        let mut rng = Xoshiro256::new(3);
+        for _ in 0..200 {
+            let xv = rng.next_u64() & 0xFF;
+            let yv = rng.next_u64() & 0xFF;
+            s1.set_input("x", xv).unwrap();
+            s1.set_input("y", yv).unwrap();
+            s2.set_input("x", xv).unwrap();
+            s2.set_input("y", yv).unwrap();
+            s1.step();
+            s2.step();
+            assert_eq!(
+                s1.get_output("q").unwrap(),
+                s2.get_output("q").unwrap()
+            );
+        }
+    }
+
+    /// A mux tree over constants must collapse substantially.
+    #[test]
+    fn constant_mux_tree_shrinks() {
+        let mut b = Builder::new("cmux");
+        let sel = b.input("sel", 4);
+        let choices: Vec<_> =
+            (0..16).map(|v| b.constant(v * 13 % 256, 8)).collect();
+        let out = b.mux_n(&sel, &choices);
+        b.output("out", &out);
+        let nl = b.finish();
+        let opt = optimize(&nl);
+        assert!(
+            opt.n_cells() < nl.n_cells() / 2,
+            "constant folding should remove most of the tree: {} -> {}",
+            nl.n_cells(),
+            opt.n_cells()
+        );
+        // Behaviour spot-check.
+        let mut sim = Simulator::new(&opt).unwrap();
+        for v in 0..16u64 {
+            sim.set_input("sel", v).unwrap();
+            sim.settle();
+            assert_eq!(sim.get_output("out").unwrap(), v * 13 % 256);
+        }
+    }
+}

@@ -1,0 +1,93 @@
+//! Post-synthesis-style reporting: optimize, then extract area / timing /
+//! cell composition for a design. Power is reported separately because it
+//! needs a simulated workload (see `tech::power` and `fabric::harness`).
+
+use anyhow::Result;
+
+use crate::netlist::{CellCounts, Netlist};
+use crate::synth::optimize;
+use crate::tech::{sta, TechLibrary, TimingReport};
+
+/// The post-synthesis view of one design.
+#[derive(Clone, Debug)]
+pub struct SynthReport {
+    pub name: String,
+    /// Raw (un-calibrated) cell area, µm².
+    pub area_um2: f64,
+    /// NAND2-equivalent gate count.
+    pub gate_equiv: f64,
+    pub timing: TimingReport,
+    pub counts: CellCounts,
+    pub n_cells_pre: usize,
+    pub n_cells_post: usize,
+    /// The optimized netlist (what area/timing were measured on).
+    pub netlist: Netlist,
+}
+
+/// Optimize `nl` and produce the synthesis report.
+pub fn synthesize(nl: &Netlist, lib: &TechLibrary) -> Result<SynthReport> {
+    let pre = nl.n_cells();
+    let opt = optimize(nl);
+    let timing = sta(&opt, lib)?;
+    Ok(SynthReport {
+        name: opt.name.clone(),
+        area_um2: lib.area_um2(&opt),
+        gate_equiv: lib.gate_equivalents(&opt),
+        timing,
+        counts: opt.cell_counts(),
+        n_cells_pre: pre,
+        n_cells_post: opt.n_cells(),
+        netlist: opt,
+    })
+}
+
+impl std::fmt::Display for SynthReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "== synthesis report: {} ==", self.name)?;
+        writeln!(
+            f,
+            "cells: {} -> {} after optimization",
+            self.n_cells_pre, self.n_cells_post
+        )?;
+        writeln!(
+            f,
+            "area: {:.2} um^2 ({:.0} GE)",
+            self.area_um2, self.gate_equiv
+        )?;
+        writeln!(
+            f,
+            "critical path: {:.0} ps (fmax {:.2} GHz, 1 GHz {})",
+            self.timing.critical_path_ps,
+            self.timing.fmax_hz / 1e9,
+            if self.timing.meets_1ghz { "MET" } else { "VIOLATED" }
+        )?;
+        for (ty, n) in &self.counts.by_type {
+            writeln!(f, "  {ty:>6}  {n}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::Builder;
+
+    #[test]
+    fn report_reflects_optimization() {
+        let lib = TechLibrary::hpc28();
+        let mut b = Builder::new("r");
+        let x = b.input("x", 8);
+        let c = b.constant(0, 8);
+        // x + 0: the adder must fold away entirely.
+        let s = b.add_to(&x, &c, 8);
+        let q = b.dff_bus(&s, None, None);
+        b.output("q", &q);
+        let nl = b.finish();
+        let rep = synthesize(&nl, &lib).unwrap();
+        assert!(rep.n_cells_post < rep.n_cells_pre);
+        assert_eq!(rep.counts.get("FA") + rep.counts.get("HA"), 0);
+        assert!(rep.timing.meets_1ghz);
+        assert!(rep.area_um2 > 0.0);
+    }
+}

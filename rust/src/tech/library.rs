@@ -1,0 +1,152 @@
+//! 28 nm-class standard-cell parameters.
+//!
+//! Values are representative of a 28 nm high-performance mobile/HPC library
+//! at 1.05 V (paper Table 1): NAND2 ≈ 0.49 µm², FO4 inverter delay ≈ 12 ps,
+//! compound adder cells (HA/FA) and flops as multi-track cells. The exact
+//! absolute values matter less than their *ratios* — one global scale is
+//! calibrated to the paper's anchor point (see `calibrate.rs`) — but they
+//! are kept physically plausible so un-calibrated numbers are also sane.
+
+use crate::netlist::{Cell, Netlist};
+
+/// Operating voltage from the paper's Table 1.
+pub const VDD: f64 = 1.05;
+/// Clock frequency from the paper's Table 1 (1 GHz).
+pub const CLOCK_HZ: f64 = 1.0e9;
+
+/// Per-cell physical parameters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CellParams {
+    /// Placement area, µm².
+    pub area_um2: f64,
+    /// Worst-case propagation delay, ps (clk→q for flops).
+    pub delay_ps: f64,
+    /// Dynamic energy per output toggle, fJ.
+    pub energy_fj: f64,
+    /// Leakage power, nW.
+    pub leakage_nw: f64,
+}
+
+/// The technology library: maps netlist cells to physical parameters.
+#[derive(Clone, Debug)]
+pub struct TechLibrary {
+    pub name: &'static str,
+    /// DFF setup time, ps.
+    pub setup_ps: f64,
+    /// Clock-pin energy per DFF per cycle, fJ (paid every cycle whether or
+    /// not the flop toggles — this is what makes idle sequential logic
+    /// non-free and reproduces the paper's power crossover).
+    pub clk_pin_fj: f64,
+    /// Multiplier on dynamic power accounting for sub-cycle glitching the
+    /// zero-delay simulator cannot see (documented model constant).
+    pub glitch_factor: f64,
+    /// Net/wire load adder applied per fanout — folded into cell energy as
+    /// a simple multiplier here.
+    pub wire_factor: f64,
+}
+
+impl Default for TechLibrary {
+    fn default() -> Self {
+        Self::hpc28()
+    }
+}
+
+impl TechLibrary {
+    /// The 28 nm-class library used throughout the reproduction.
+    pub fn hpc28() -> Self {
+        Self {
+            name: "generic-28nm-hpc-class",
+            setup_ps: 35.0,
+            clk_pin_fj: 0.40,
+            glitch_factor: 1.20,
+            wire_factor: 1.15,
+        }
+    }
+
+    /// Physical parameters for a cell instance.
+    pub fn params(&self, cell: &Cell) -> CellParams {
+        // (area µm², delay ps, energy fJ/toggle, leakage nW)
+        let (area_um2, delay_ps, energy_fj, leakage_nw) = match cell
+            .type_name()
+        {
+            "CONST" => (0.0, 0.0, 0.0, 0.0),
+            "BUF" => (0.44, 18.0, 0.30, 0.7),
+            "INV" => (0.34, 12.0, 0.25, 0.6),
+            "NAND2" | "NOR2" => (0.49, 14.0, 0.35, 0.9),
+            "AND2" | "OR2" => (0.64, 18.0, 0.45, 1.1),
+            "XOR2" | "XNOR2" => (1.13, 28.0, 0.80, 1.9),
+            "MUX2" => (1.13, 30.0, 0.80, 1.9),
+            "HA" => (1.47, 30.0, 1.00, 2.5),
+            "FA" => (2.21, 42.0, 1.55, 3.9),
+            "DFF" => (2.45, 70.0, 1.80, 4.2),
+            "DFFE" => (2.94, 74.0, 1.95, 4.9),
+            "DFFR" => (2.94, 74.0, 1.95, 4.9),
+            "DFFER" => (3.43, 78.0, 2.10, 5.6),
+            other => unreachable!("unknown cell type {other}"),
+        };
+        CellParams {
+            area_um2,
+            delay_ps,
+            energy_fj,
+            leakage_nw,
+        }
+    }
+
+    /// Raw (un-calibrated) placement area of a netlist, µm².
+    pub fn area_um2(&self, nl: &Netlist) -> f64 {
+        nl.cells.iter().map(|c| self.params(c).area_um2).sum()
+    }
+
+    /// NAND2-equivalent gate count (area / NAND2 area) — a scale-free
+    /// complexity measure used in reports.
+    pub fn gate_equivalents(&self, nl: &Netlist) -> f64 {
+        self.area_um2(nl) / 0.49
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::Builder;
+
+    #[test]
+    fn area_sums_over_cells() {
+        let lib = TechLibrary::hpc28();
+        let mut b = Builder::new("a");
+        let x = b.input("x", 4);
+        let y = b.input("y", 4);
+        let s = b.add(&x, &y); // 1 HA + 3 FA
+        b.output("s", &s);
+        let nl = b.finish();
+        let want = 1.47 + 3.0 * 2.21;
+        assert!((lib.area_um2(&nl) - want).abs() < 1e-9);
+        assert!(lib.gate_equivalents(&nl) > 0.0);
+    }
+
+    #[test]
+    fn ordering_of_cell_costs_is_physical() {
+        let lib = TechLibrary::hpc28();
+        let inv = Cell::Unary {
+            kind: crate::netlist::UnaryKind::Not,
+            a: crate::netlist::NetId(0),
+            out: crate::netlist::NetId(1),
+        };
+        let fa = Cell::FullAdder {
+            a: crate::netlist::NetId(0),
+            b: crate::netlist::NetId(1),
+            c: crate::netlist::NetId(2),
+            sum: crate::netlist::NetId(3),
+            carry: crate::netlist::NetId(4),
+        };
+        let dff = Cell::Dff {
+            d: crate::netlist::NetId(0),
+            en: None,
+            clr: None,
+            q: crate::netlist::NetId(1),
+            init: false,
+        };
+        assert!(lib.params(&inv).area_um2 < lib.params(&fa).area_um2);
+        assert!(lib.params(&fa).area_um2 < lib.params(&dff).area_um2 * 2.0);
+        assert!(lib.params(&inv).delay_ps < lib.params(&fa).delay_ps);
+    }
+}

@@ -1,0 +1,23 @@
+//! 28 nm-class technology model: cell library, static timing analysis, and
+//! activity-based power.
+//!
+//! This module substitutes for the paper's TSMC 28 nm HPC+ standard-cell
+//! library + commercial synthesis reports (Table 1: 1.05 V, 1 GHz, FF
+//! corner). Per-cell area/delay/energy/leakage values are 28 nm-class
+//! figures (NAND2-equivalent ≈ 0.49 µm²); one global area scale and one
+//! global power scale are *calibrated* against the paper's single anchor
+//! point (shift-add, 4 operands: 528.57 µm², 0.0269 mW) — every other
+//! number in the Fig. 4 reproduction is then a prediction from netlist
+//! structure and measured switching activity. See DESIGN.md §2.
+
+mod calibrate;
+mod library;
+mod power;
+mod timing;
+
+pub use calibrate::{
+    CalibratedScale, Calibration, ANCHOR_AREA_UM2, ANCHOR_POWER_MW,
+};
+pub use library::{CellParams, TechLibrary, CLOCK_HZ, VDD};
+pub use power::{PowerBreakdown, PowerModel};
+pub use timing::{TimingReport, sta};

@@ -1,0 +1,122 @@
+//! Static timing analysis over the gate-level netlist.
+//!
+//! Single-clock STA: arrival times propagate from timing sources (primary
+//! inputs at t=0, DFF Q pins at clk→q) through the combinational cloud in
+//! topological order; the critical path is the worst of (arrival at a DFF D
+//! pin + setup) and (arrival at a primary output). All the paper's designs
+//! are checked against the 1 GHz target (1000 ps period).
+
+use anyhow::Result;
+
+use crate::netlist::{Cell, Netlist};
+use crate::tech::TechLibrary;
+
+/// Result of static timing analysis.
+#[derive(Clone, Debug)]
+pub struct TimingReport {
+    /// Worst register-to-register / input-to-register path incl. setup, ps.
+    pub critical_path_ps: f64,
+    /// Max frequency implied by the critical path, Hz.
+    pub fmax_hz: f64,
+    /// Whether the design meets the 1 GHz target of the paper's Table 1.
+    pub meets_1ghz: bool,
+    /// Worst combinational depth in cell count.
+    pub logic_depth: usize,
+}
+
+/// Run STA; returns the timing report.
+pub fn sta(nl: &Netlist, lib: &TechLibrary) -> Result<TimingReport> {
+    let order = nl.topo_order()?;
+    let mut arrival = vec![0.0f64; nl.n_nets];
+    let mut depth = vec![0usize; nl.n_nets];
+    // DFF Q pins launch at clk->q.
+    for cell in &nl.cells {
+        if let Cell::Dff { q, .. } = cell {
+            arrival[q.idx()] = lib.params(cell).delay_ps;
+        }
+    }
+    for ci in order {
+        let cell = &nl.cells[ci];
+        let t_in = cell
+            .inputs()
+            .iter()
+            .map(|n| arrival[n.idx()])
+            .fold(0.0, f64::max);
+        let d_in = cell
+            .inputs()
+            .iter()
+            .map(|n| depth[n.idx()])
+            .max()
+            .unwrap_or(0);
+        let p = lib.params(cell);
+        for o in cell.outputs() {
+            arrival[o.idx()] = t_in + p.delay_ps;
+            depth[o.idx()] = d_in + 1;
+        }
+    }
+    let mut worst: f64 = 0.0;
+    let mut worst_depth = 0usize;
+    // Register D/EN/CLR pins (+ setup).
+    for cell in &nl.cells {
+        if cell.is_sequential() {
+            for n in cell.inputs() {
+                worst = worst.max(arrival[n.idx()] + lib.setup_ps);
+                worst_depth = worst_depth.max(depth[n.idx()]);
+            }
+        }
+    }
+    // Primary outputs.
+    for p in &nl.outputs {
+        for &b in &p.bits {
+            worst = worst.max(arrival[b.idx()]);
+            worst_depth = worst_depth.max(depth[b.idx()]);
+        }
+    }
+    let fmax = if worst > 0.0 { 1.0e12 / worst } else { f64::INFINITY };
+    Ok(TimingReport {
+        critical_path_ps: worst,
+        fmax_hz: fmax,
+        meets_1ghz: worst <= 1000.0,
+        logic_depth: worst_depth,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::Builder;
+
+    #[test]
+    fn ripple_adder_depth_grows_linearly() {
+        let lib = TechLibrary::hpc28();
+        let mut reports = Vec::new();
+        for w in [4usize, 8, 16] {
+            let mut b = Builder::new("a");
+            let x = b.input("x", w);
+            let y = b.input("y", w);
+            let s = b.add(&x, &y);
+            b.output("s", &s);
+            let nl = b.finish();
+            reports.push(sta(&nl, &lib).unwrap());
+        }
+        assert!(reports[0].critical_path_ps < reports[1].critical_path_ps);
+        assert!(reports[1].critical_path_ps < reports[2].critical_path_ps);
+        assert!(reports[2].meets_1ghz, "16-bit RCA meets 1 GHz at 28nm");
+    }
+
+    #[test]
+    fn registered_path_includes_setup_and_clkq() {
+        let lib = TechLibrary::hpc28();
+        let mut b = Builder::new("r");
+        let x = b.input("x", 1);
+        let q = b.dff_bus(&x, None, None);
+        let n = b.not_gate(q[0]);
+        let q2 = b.dff_bus(&vec![n], None, None);
+        b.output("q", &q2);
+        let nl = b.finish();
+        let rep = sta(&nl, &lib).unwrap();
+        // clk->q (70) + INV (12) + setup (35)
+        assert!((rep.critical_path_ps - 117.0).abs() < 1e-9);
+        assert!(rep.meets_1ghz);
+    }
+}

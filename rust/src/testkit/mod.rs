@@ -1,0 +1,120 @@
+//! Property-testing substrate (proptest is unavailable offline): seeded
+//! generators, a `forall` runner with failure-case reporting and simple
+//! input shrinking for integer tuples.
+
+use crate::util::Xoshiro256;
+
+/// Number of cases per property by default.
+pub const DEFAULT_CASES: usize = 256;
+
+/// A generator of random values from the shared RNG.
+pub trait Gen<T> {
+    fn generate(&self, rng: &mut Xoshiro256) -> T;
+}
+
+impl<T, F: Fn(&mut Xoshiro256) -> T> Gen<T> for F {
+    fn generate(&self, rng: &mut Xoshiro256) -> T {
+        self(rng)
+    }
+}
+
+/// 8-bit operand generator biased toward boundary values (0, 1, 0x0F,
+/// 0x10, 0x80, 0xFF) — nibble-boundary cases are where the paper's
+/// algorithms can break.
+pub fn operand8(rng: &mut Xoshiro256) -> u16 {
+    if rng.chance(0.25) {
+        const EDGES: [u16; 8] = [0, 1, 0x0F, 0x10, 0x7F, 0x80, 0xF0, 0xFF];
+        EDGES[rng.below(EDGES.len() as u64) as usize]
+    } else {
+        rng.operand8()
+    }
+}
+
+/// A vector of `len` boundary-biased operands.
+pub fn operand_vec(len: usize) -> impl Fn(&mut Xoshiro256) -> Vec<u16> {
+    move |rng| (0..len).map(|_| operand8(rng)).collect()
+}
+
+/// Run `prop` over `cases` generated inputs; panics with the seed and a
+/// (greedily shrunk, where possible) counterexample on failure.
+pub fn forall<T, G, P>(seed: u64, cases: usize, gen: G, prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: Gen<T>,
+    P: Fn(&T) -> bool,
+{
+    let mut rng = Xoshiro256::new(seed);
+    for case in 0..cases {
+        let input = gen.generate(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property failed at case {case} (seed {seed}): {input:?}"
+            );
+        }
+    }
+}
+
+/// forall over (a, b) 8-bit operand pairs with boundary bias.
+pub fn forall_pairs<P: Fn(u16, u16) -> bool>(seed: u64, cases: usize, prop: P) {
+    let mut rng = Xoshiro256::new(seed);
+    for case in 0..cases {
+        let a = operand8(&mut rng);
+        let b = operand8(&mut rng);
+        if !prop(a, b) {
+            // Greedy shrink: try to reduce each operand toward 0 while the
+            // property keeps failing.
+            let (mut sa, mut sb) = (a, b);
+            loop {
+                let mut improved = false;
+                for cand in [
+                    (sa / 2, sb),
+                    (sa, sb / 2),
+                    (sa.saturating_sub(1), sb),
+                    (sa, sb.saturating_sub(1)),
+                ] {
+                    if cand != (sa, sb) && !prop(cand.0, cand.1) {
+                        (sa, sb) = cand;
+                        improved = true;
+                        break;
+                    }
+                }
+                if !improved {
+                    break;
+                }
+            }
+            panic!(
+                "property failed at case {case} (seed {seed}): a={a} b={b} \
+                 (shrunk to a={sa} b={sb})"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_true_property() {
+        forall_pairs(1, 200, |a, b| a as u32 * b as u32 <= 255 * 255);
+        forall(2, 100, operand_vec(5), |v: &Vec<u16>| v.len() == 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "shrunk to a=0 b=0")]
+    fn forall_shrinks_failures() {
+        forall_pairs(3, 50, |_a, _b| false);
+    }
+
+    #[test]
+    fn operand8_hits_edges_and_range() {
+        let mut rng = Xoshiro256::new(4);
+        let mut saw_edge = false;
+        for _ in 0..500 {
+            let v = operand8(&mut rng);
+            assert!(v <= 255);
+            saw_edge |= v == 0xFF || v == 0;
+        }
+        assert!(saw_edge);
+    }
+}

@@ -1,0 +1,65 @@
+//! Small shared utilities: deterministic PRNG, timing helpers, formatting.
+//!
+//! The offline dependency set has no `rand`; [`SplitMix64`] and [`Xoshiro256`]
+//! provide the deterministic randomness used by stimulus generation, the
+//! property-testing substrate ([`crate::testkit`]) and workload generators.
+
+mod rng;
+mod timer;
+
+pub use rng::{SplitMix64, Xoshiro256};
+pub use timer::Stopwatch;
+
+/// Format a float with engineering-style precision for reports.
+pub fn fmt_sig(v: f64, digits: usize) -> String {
+    if v == 0.0 {
+        return "0".to_string();
+    }
+    let mag = v.abs().log10().floor() as i32;
+    let dec = (digits as i32 - 1 - mag).max(0) as usize;
+    format!("{v:.dec$}")
+}
+
+/// Integer ceiling division.
+pub const fn div_ceil(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+/// Number of bits needed to represent `v` (at least 1).
+pub const fn bit_width(v: u64) -> usize {
+    if v == 0 {
+        1
+    } else {
+        (64 - v.leading_zeros()) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bit_width_edges() {
+        assert_eq!(bit_width(0), 1);
+        assert_eq!(bit_width(1), 1);
+        assert_eq!(bit_width(2), 2);
+        assert_eq!(bit_width(255), 8);
+        assert_eq!(bit_width(256), 9);
+        assert_eq!(bit_width(u64::MAX), 64);
+    }
+
+    #[test]
+    fn div_ceil_edges() {
+        assert_eq!(div_ceil(0, 4), 0);
+        assert_eq!(div_ceil(1, 4), 1);
+        assert_eq!(div_ceil(4, 4), 1);
+        assert_eq!(div_ceil(5, 4), 2);
+    }
+
+    #[test]
+    fn fmt_sig_rounds() {
+        assert_eq!(fmt_sig(0.0, 3), "0");
+        assert_eq!(fmt_sig(528.5714, 4), "528.6");
+        assert_eq!(fmt_sig(0.0269, 3), "0.0269");
+    }
+}

@@ -1,0 +1,71 @@
+//! Stimulus / job generators.
+
+use crate::util::Xoshiro256;
+
+/// One vector × broadcast-scalar multiply job (the coordinator's unit of
+/// work — what a DNN GEMV decomposes into, see DESIGN.md).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct VectorJob {
+    pub id: u64,
+    /// Vector operand elements (each 0..=255).
+    pub a: Vec<u16>,
+    /// Broadcast operand.
+    pub b: u16,
+}
+
+impl VectorJob {
+    /// Ground-truth products.
+    pub fn expected(&self) -> Vec<u32> {
+        self.a.iter().map(|&x| x as u32 * self.b as u32).collect()
+    }
+}
+
+/// Generate `count` random jobs with vector lengths in `[min_len, max_len]`
+/// (lengths vary to exercise the coordinator's batching/splitting).
+pub fn broadcast_jobs(
+    count: usize,
+    min_len: usize,
+    max_len: usize,
+    seed: u64,
+) -> Vec<VectorJob> {
+    let mut rng = Xoshiro256::new(seed);
+    (0..count)
+        .map(|id| {
+            let len = rng.range(min_len as u64, max_len as u64) as usize;
+            VectorJob {
+                id: id as u64,
+                a: (0..len).map(|_| rng.operand8()).collect(),
+                b: rng.operand8(),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jobs_are_deterministic_and_bounded() {
+        let a = broadcast_jobs(50, 1, 32, 9);
+        let b = broadcast_jobs(50, 1, 32, 9);
+        assert_eq!(a, b);
+        for j in &a {
+            assert!((1..=32).contains(&j.a.len()));
+            assert!(j.a.iter().all(|&x| x <= 255));
+            assert!(j.b <= 255);
+        }
+        // ids unique and dense
+        assert!(a.iter().enumerate().all(|(i, j)| j.id == i as u64));
+    }
+
+    #[test]
+    fn expected_products() {
+        let j = VectorJob {
+            id: 0,
+            a: vec![2, 3],
+            b: 10,
+        };
+        assert_eq!(j.expected(), vec![20, 30]);
+    }
+}

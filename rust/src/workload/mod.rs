@@ -1,0 +1,9 @@
+//! Workload loading and generation: the `.nmd` artifact parser (quantized
+//! model weights + test set emitted by `python/compile/aot.py`) and the
+//! stimulus generators used by benchmarks and the coordinator examples.
+
+mod gen;
+mod nmd;
+
+pub use gen::{broadcast_jobs, VectorJob};
+pub use nmd::{load_meta, load_testset, load_weights, Meta, TestSet};

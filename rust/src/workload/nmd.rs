@@ -1,0 +1,236 @@
+//! Parser for the `.nmd` text artifacts written by `python/compile/aot.py`
+//! (the offline dependency set has no serde, so the interchange format is
+//! a deliberately trivial `key value...` line format).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::model::quant::{QuantLayer, QuantMlp};
+
+/// The quantized held-out test set (`testset.nmd`).
+#[derive(Clone, Debug)]
+pub struct TestSet {
+    /// u8 inputs (int32 carrier), row-major `(n, dim)`.
+    pub x: Vec<Vec<i32>>,
+    pub y: Vec<usize>,
+}
+
+/// Provenance metadata (`meta.nmd`).
+#[derive(Clone, Debug, Default)]
+pub struct Meta {
+    pub fields: HashMap<String, String>,
+}
+
+impl Meta {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.fields.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_f64(&self, key: &str) -> Option<f64> {
+        self.get(key)?.parse().ok()
+    }
+}
+
+fn parse_ints(s: &str) -> Result<Vec<i32>> {
+    s.split_whitespace()
+        .map(|t| t.parse::<i32>().map_err(|e| anyhow!("bad int {t}: {e}")))
+        .collect()
+}
+
+/// Load `weights.nmd` into the Rust quantized-MLP model.
+pub fn load_weights(path: impl AsRef<Path>) -> Result<QuantMlp> {
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {:?}", path.as_ref()))?;
+    let mut lines = text.lines().peekable();
+    let header = lines.next().ok_or_else(|| anyhow!("empty weights file"))?;
+    let n_layers: usize = header
+        .strip_prefix("layers ")
+        .ok_or_else(|| anyhow!("expected 'layers N', got {header}"))?
+        .trim()
+        .parse()?;
+
+    let mut layers = Vec::with_capacity(n_layers);
+    let mut in_scale = 1.0f64;
+    let mut top_in_zp = 0i32;
+    let mut cur: Option<HashMap<String, String>> = None;
+
+    let finish_layer =
+        |map: HashMap<String, String>| -> Result<QuantLayer> {
+            let shape = parse_ints(
+                map.get("shape").ok_or_else(|| anyhow!("layer: no shape"))?,
+            )?;
+            let (n_in, n_out) = (shape[0] as usize, shape[1] as usize);
+            let get_i = |k: &str| -> Result<i32> {
+                map.get(k)
+                    .ok_or_else(|| anyhow!("layer: missing {k}"))?
+                    .trim()
+                    .parse()
+                    .map_err(|e| anyhow!("layer {k}: {e}"))
+            };
+            let w_q = parse_ints(
+                map.get("w").ok_or_else(|| anyhow!("layer: no w"))?,
+            )?;
+            let bias = parse_ints(
+                map.get("bias").ok_or_else(|| anyhow!("layer: no bias"))?,
+            )?;
+            if w_q.len() != n_in * n_out {
+                bail!("w length {} != {}x{}", w_q.len(), n_in, n_out);
+            }
+            if bias.len() != n_out {
+                bail!("bias length mismatch");
+            }
+            Ok(QuantLayer {
+                w_q,
+                n_in,
+                n_out,
+                w_zp: get_i("w_zp")?,
+                bias_i32: bias,
+                in_zp: get_i("in_zp")?,
+                out_zp: get_i("out_zp")?,
+                m: get_i("m")?,
+                shift: get_i("shift")? as u32,
+                relu: get_i("relu")? != 0,
+            })
+        };
+
+    for line in lines {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let (key, rest) = line.split_once(' ').unwrap_or((line, ""));
+        match key {
+            "layer" => {
+                if let Some(map) = cur.take() {
+                    layers.push(finish_layer(map)?);
+                }
+                cur = Some(HashMap::new());
+            }
+            "in_scale" if cur.is_none() || layers.len() + 1 == n_layers => {
+                // trailing global fields come after the last layer body
+                if let Some(map) = cur.take() {
+                    layers.push(finish_layer(map)?);
+                }
+                in_scale = rest.trim().parse()?;
+            }
+            "in_zp" if cur.is_none() => {
+                top_in_zp = rest.trim().parse()?;
+            }
+            _ => {
+                if let Some(map) = cur.as_mut() {
+                    map.insert(key.to_string(), rest.to_string());
+                } else {
+                    bail!("unexpected top-level key {key}");
+                }
+            }
+        }
+    }
+    if let Some(map) = cur.take() {
+        layers.push(finish_layer(map)?);
+    }
+    if layers.len() != n_layers {
+        bail!("expected {n_layers} layers, parsed {}", layers.len());
+    }
+    Ok(QuantMlp {
+        layers,
+        in_scale,
+        in_zp: top_in_zp,
+    })
+}
+
+/// Load `testset.nmd`.
+pub fn load_testset(path: impl AsRef<Path>) -> Result<TestSet> {
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {:?}", path.as_ref()))?;
+    let mut fields = HashMap::new();
+    for line in text.lines() {
+        if let Some((k, v)) = line.trim().split_once(' ') {
+            fields.insert(k.to_string(), v.to_string());
+        }
+    }
+    let n: usize = fields
+        .get("n")
+        .ok_or_else(|| anyhow!("testset: no n"))?
+        .parse()?;
+    let dim: usize = fields
+        .get("dim")
+        .ok_or_else(|| anyhow!("testset: no dim"))?
+        .parse()?;
+    let flat = parse_ints(fields.get("x").ok_or_else(|| anyhow!("no x"))?)?;
+    let y = parse_ints(fields.get("y").ok_or_else(|| anyhow!("no y"))?)?;
+    if flat.len() != n * dim || y.len() != n {
+        bail!("testset shape mismatch");
+    }
+    Ok(TestSet {
+        x: flat.chunks(dim).map(|c| c.to_vec()).collect(),
+        y: y.into_iter().map(|v| v as usize).collect(),
+    })
+}
+
+/// Load `meta.nmd`.
+pub fn load_meta(path: impl AsRef<Path>) -> Result<Meta> {
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {:?}", path.as_ref()))?;
+    let mut fields = HashMap::new();
+    for line in text.lines() {
+        if let Some((k, v)) = line.trim().split_once(' ') {
+            fields.insert(k.to_string(), v.trim().to_string());
+        }
+    }
+    Ok(Meta { fields })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_tmp(name: &str, content: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("nibblemul_nmd_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(name);
+        let mut f = std::fs::File::create(&p).unwrap();
+        f.write_all(content.as_bytes()).unwrap();
+        p
+    }
+
+    #[test]
+    fn parses_weights_roundtrip() {
+        let p = write_tmp(
+            "w.nmd",
+            "layers 2\n\
+             layer 0\nshape 2 2\nw_zp 10\nin_zp 1\nout_zp 2\nm 64\nshift 7\n\
+             relu 1\nbias 3 -4\nw 1 2 3 4\n\
+             layer 1\nshape 2 1\nw_zp 0\nin_zp 2\nout_zp 0\nm 64\nshift 6\n\
+             relu 0\nbias 9\nw 7 8\n\
+             in_scale 0.125\nin_zp 1\n",
+        );
+        let mlp = load_weights(&p).unwrap();
+        assert_eq!(mlp.layers.len(), 2);
+        assert_eq!(mlp.layers[0].w_q, vec![1, 2, 3, 4]);
+        assert_eq!(mlp.layers[0].bias_i32, vec![3, -4]);
+        assert!(mlp.layers[0].relu);
+        assert!(!mlp.layers[1].relu);
+        assert_eq!(mlp.layers[1].n_out, 1);
+        assert!((mlp.in_scale - 0.125).abs() < 1e-12);
+        assert_eq!(mlp.in_zp, 1);
+    }
+
+    #[test]
+    fn parses_testset() {
+        let p = write_tmp("t.nmd", "n 2\ndim 3\nx 1 2 3 4 5 6\ny 0 7\n");
+        let ts = load_testset(&p).unwrap();
+        assert_eq!(ts.x, vec![vec![1, 2, 3], vec![4, 5, 6]]);
+        assert_eq!(ts.y, vec![0, 7]);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        let p = write_tmp("bad.nmd", "layers 1\nlayer 0\nshape 2 2\n");
+        assert!(load_weights(&p).is_err());
+        let p2 = write_tmp("bad2.nmd", "n 2\ndim 3\nx 1 2\ny 0 1\n");
+        assert!(load_testset(&p2).is_err());
+    }
+}

@@ -1,0 +1,150 @@
+//! Coordinator integration: batching/routing invariants under mixed
+//! backends, failure-free reassembly, occupancy accounting, and the
+//! PJRT-backed serving path.
+
+use nibblemul::coordinator::{
+    Backend, Batcher, BatcherConfig, Coordinator, CoordinatorConfig,
+    ExactBackend, PjrtBackend, SimBackend,
+};
+use nibblemul::multipliers::Arch;
+use nibblemul::runtime::ArtifactSet;
+use nibblemul::util::Xoshiro256;
+use nibblemul::workload::{broadcast_jobs, VectorJob};
+
+#[test]
+fn batcher_conserves_elements_property() {
+    // Property: for random job sets, the union of batch lanes is exactly
+    // the multiset of job elements (no loss, no duplication).
+    let mut rng = Xoshiro256::new(17);
+    for case in 0..50 {
+        let width = [4usize, 8, 16][(case % 3) as usize];
+        let jobs = broadcast_jobs(
+            1 + (rng.below(20) as usize),
+            1,
+            40,
+            rng.next_u64(),
+        );
+        let mut batcher = Batcher::new(BatcherConfig { width });
+        for j in &jobs {
+            batcher.push(j);
+        }
+        let batches = batcher.flush();
+        let mut seen: std::collections::HashMap<(u64, usize), u16> =
+            Default::default();
+        for b in &batches {
+            assert!(b.a.len() == width, "padded to width");
+            assert!(b.lanes.len() <= width);
+            for (lane, tag) in b.lanes.iter().enumerate() {
+                let dup = seen.insert((tag.job, tag.offset), b.a[lane]);
+                assert!(dup.is_none(), "duplicated lane {tag:?}");
+            }
+        }
+        let total: usize = jobs.iter().map(|j| j.a.len()).sum();
+        assert_eq!(seen.len(), total, "case {case}: element conservation");
+        for j in &jobs {
+            for (off, &x) in j.a.iter().enumerate() {
+                assert_eq!(seen[&(j.id, off)], x, "element value preserved");
+            }
+        }
+    }
+}
+
+#[test]
+fn mixed_backend_pool_is_consistent() {
+    // Two exact + two simulated-fabric workers must be indistinguishable.
+    let mut backends: Vec<Box<dyn Backend>> = vec![
+        Box::new(ExactBackend),
+        Box::new(ExactBackend),
+    ];
+    backends.push(Box::new(SimBackend::new(Arch::Nibble, 8).unwrap()));
+    backends.push(Box::new(SimBackend::new(Arch::LutArray, 8).unwrap()));
+    let coord = Coordinator::new(
+        CoordinatorConfig {
+            width: 8,
+            queue_depth: 8,
+        },
+        backends,
+    );
+    let jobs = broadcast_jobs(60, 1, 20, 23);
+    let results = coord.run_jobs(&jobs).unwrap();
+    for (job, res) in jobs.iter().zip(&results) {
+        assert_eq!(res.id, job.id);
+        assert_eq!(res.products, job.expected());
+    }
+    assert_eq!(coord.metrics.snapshot().errors, 0);
+    coord.shutdown();
+}
+
+#[test]
+fn empty_and_single_element_jobs() {
+    let coord = Coordinator::new(
+        CoordinatorConfig {
+            width: 4,
+            queue_depth: 2,
+        },
+        vec![Box::new(ExactBackend)],
+    );
+    let jobs = vec![
+        VectorJob {
+            id: 0,
+            a: vec![255],
+            b: 255,
+        },
+        VectorJob {
+            id: 1,
+            a: vec![0],
+            b: 0,
+        },
+    ];
+    let results = coord.run_jobs(&jobs).unwrap();
+    assert_eq!(results[0].products, vec![65025]);
+    assert_eq!(results[1].products, vec![0]);
+    coord.shutdown();
+}
+
+#[test]
+fn pjrt_backend_through_coordinator() {
+    let set = ArtifactSet::default_dir();
+    if !set.available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let backends: Vec<Box<dyn Backend>> =
+        vec![Box::new(PjrtBackend::new(set, 16).unwrap())];
+    let coord = Coordinator::new(
+        CoordinatorConfig {
+            width: 16,
+            queue_depth: 4,
+        },
+        backends,
+    );
+    let jobs = broadcast_jobs(24, 1, 40, 77);
+    let results = coord.run_jobs(&jobs).unwrap();
+    for (job, res) in jobs.iter().zip(&results) {
+        assert_eq!(res.products, job.expected(), "job {}", job.id);
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn occupancy_reflects_broadcast_reuse() {
+    // Jobs sharing one broadcast value pack densely; distinct values pad.
+    let coord = Coordinator::new(
+        CoordinatorConfig {
+            width: 8,
+            queue_depth: 2,
+        },
+        vec![Box::new(ExactBackend)],
+    );
+    let shared: Vec<VectorJob> = (0..16)
+        .map(|id| VectorJob {
+            id,
+            a: vec![1, 2, 3, 4],
+            b: 9,
+        })
+        .collect();
+    coord.run_jobs(&shared).unwrap();
+    let occ = coord.metrics.occupancy(8);
+    assert!(occ > 0.99, "shared-b jobs must pack fully: {occ}");
+    coord.shutdown();
+}

@@ -1,0 +1,118 @@
+//! End-to-end runtime tests over the AOT artifacts: the PJRT-executed
+//! Pallas kernels vs the gate-level fabric vs exact products, and the
+//! INT8 MLP artifact vs the bit-exact Rust replay.
+//!
+//! Requires `make artifacts`; tests are skipped (not failed) when the
+//! artifact directory is absent so `cargo test` works in a fresh clone.
+
+use nibblemul::fabric::VectorUnit;
+use nibblemul::model::quant::QuantMlp;
+use nibblemul::multipliers::Arch;
+use nibblemul::runtime::{ArtifactSet, Runtime};
+use nibblemul::util::Xoshiro256;
+
+fn artifacts() -> Option<ArtifactSet> {
+    let set = ArtifactSet::default_dir();
+    if set.available() {
+        Some(set)
+    } else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn pjrt_nibble_kernel_vs_gate_level_fabric() {
+    let Some(set) = artifacts() else { return };
+    let mut rt = Runtime::cpu(set).unwrap();
+    let unit = VectorUnit::new(Arch::Nibble, 16);
+    let mut sim = unit.simulator().unwrap();
+    let mut rng = Xoshiro256::new(31);
+    for _ in 0..10 {
+        let a: Vec<u16> = (0..16).map(|_| rng.operand8()).collect();
+        let b = rng.operand8();
+        let a_i32: Vec<i32> = a.iter().map(|&v| v as i32).collect();
+        let hlo = rt.nibble_mul(&a_i32, b as i32).unwrap();
+        let gates = unit.run_op(&mut sim, &a, b).unwrap();
+        for i in 0..16 {
+            let want = a[i] as u32 * b as u32;
+            assert_eq!(hlo[i] as u32, want, "PJRT elem {i}");
+            assert_eq!(gates.products[i], want, "fabric elem {i}");
+        }
+    }
+}
+
+#[test]
+fn pjrt_all_vector_widths() {
+    let Some(set) = artifacts() else { return };
+    let mut rt = Runtime::cpu(set).unwrap();
+    for n in nibblemul::VECTOR_WIDTHS {
+        let a: Vec<i32> = (0..n as i32).map(|i| (i * 29 + 3) % 256).collect();
+        let out = rt.nibble_mul(&a, 211).unwrap();
+        for (x, y) in a.iter().zip(&out) {
+            assert_eq!(*y, x * 211, "width {n}");
+        }
+    }
+}
+
+#[test]
+fn pjrt_lut_kernel_matches_exact() {
+    let Some(set) = artifacts() else { return };
+    let mut rt = Runtime::cpu(set).unwrap();
+    let a: Vec<i32> = (0..16).map(|i| (i * 16 + 15) % 256).collect();
+    for b in [0i32, 1, 15, 16, 128, 255] {
+        let out = rt.lut_mul_16(&a, b).unwrap();
+        for (x, y) in a.iter().zip(&out) {
+            assert_eq!(*y, x * b);
+        }
+    }
+}
+
+#[test]
+fn mlp_artifact_bit_exact_vs_rust_replay_and_accurate() {
+    let Some(set) = artifacts() else { return };
+    let mlp = set.weights().unwrap();
+    let ts = set.testset().unwrap();
+    let mut rt = Runtime::cpu(set).unwrap();
+    let batch = 16usize;
+    let dim = ts.x[0].len();
+    let n = 64.min(ts.x.len());
+    let mut correct = 0usize;
+    for chunk in ts.x[..n].chunks(batch) {
+        let mut x: Vec<i32> = chunk.iter().flatten().copied().collect();
+        x.resize(batch * dim, 0);
+        let flat = rt.mlp_int8(&x, batch as i64, dim as i64).unwrap();
+        let replay =
+            mlp.forward(&chunk.to_vec(), |a, b| a as u32 * b as u32);
+        for (i, row) in replay.iter().enumerate() {
+            assert_eq!(
+                &flat[i * 10..(i + 1) * 10],
+                row.as_slice(),
+                "logits row {i} diverged from replay"
+            );
+        }
+        let preds = QuantMlp::classify(&replay);
+        let base = ts.x[..n]
+            .chunks(batch)
+            .take_while(|c| !std::ptr::eq(c.as_ptr(), chunk.as_ptr()))
+            .map(|c| c.len())
+            .sum::<usize>();
+        for (i, p) in preds.iter().enumerate() {
+            if *p == ts.y[base + i] {
+                correct += 1;
+            }
+        }
+    }
+    let acc = correct as f64 / n as f64;
+    assert!(acc >= 0.9, "int8 accuracy through PJRT: {acc}");
+}
+
+#[test]
+fn replay_with_nibble_products_matches_exact_products() {
+    let Some(set) = artifacts() else { return };
+    let mlp = set.weights().unwrap();
+    let ts = set.testset().unwrap();
+    let exact = mlp.forward(&ts.x[..8].to_vec(), |a, b| a as u32 * b as u32);
+    let nib = mlp.forward(&ts.x[..8].to_vec(), nibblemul::model::nibble_mul);
+    assert_eq!(exact, nib);
+}

@@ -1,0 +1,75 @@
+//! Synthesis passes must be behaviour-preserving on every real design:
+//! run identical operand streams through the raw and optimized netlists.
+
+use nibblemul::fabric::VectorUnit;
+use nibblemul::multipliers::Arch;
+use nibblemul::sim::Simulator;
+use nibblemul::synth::optimize;
+use nibblemul::tech::{sta, TechLibrary};
+use nibblemul::util::Xoshiro256;
+
+#[test]
+fn optimization_preserves_every_architecture() {
+    for arch in Arch::ALL {
+        let raw_unit = VectorUnit::new_raw(arch, 4);
+        let opt_unit = VectorUnit {
+            arch,
+            n: 4,
+            netlist: optimize(&raw_unit.netlist),
+        };
+        assert!(
+            opt_unit.netlist.n_cells() <= raw_unit.netlist.n_cells(),
+            "{arch}: optimization must not grow the netlist"
+        );
+        let mut sim_raw = Simulator::new(&raw_unit.netlist).unwrap();
+        let mut sim_opt = opt_unit.simulator().unwrap();
+        let mut rng = Xoshiro256::new(99);
+        for _ in 0..15 {
+            let a: Vec<u16> = (0..4).map(|_| rng.operand8()).collect();
+            let b = rng.operand8();
+            let r1 = raw_unit.run_op(&mut sim_raw, &a, b).unwrap();
+            let r2 = opt_unit.run_op(&mut sim_opt, &a, b).unwrap();
+            assert_eq!(r1.products, r2.products, "{arch} diverged");
+            assert_eq!(r1.cycles, r2.cycles, "{arch} cycle count changed");
+        }
+    }
+}
+
+#[test]
+fn optimization_shrinks_constant_heavy_designs() {
+    // The LUT-array's constant tables must fold substantially.
+    let raw = Arch::LutArray.build(4);
+    let opt = optimize(&raw);
+    assert!(
+        (opt.n_cells() as f64) < 0.7 * raw.n_cells() as f64,
+        "LUT constant folding too weak: {} -> {}",
+        raw.n_cells(),
+        opt.n_cells()
+    );
+}
+
+#[test]
+fn all_optimized_designs_meet_1ghz() {
+    let lib = TechLibrary::hpc28();
+    for arch in Arch::ALL {
+        for n in [4usize, 16] {
+            let nl = optimize(&arch.build(n));
+            let rep = sta(&nl, &lib).unwrap();
+            assert!(
+                rep.meets_1ghz,
+                "{arch} x{n}: {} ps exceeds the 1 GHz target",
+                rep.critical_path_ps
+            );
+        }
+    }
+}
+
+#[test]
+fn optimized_netlists_validate() {
+    for arch in Arch::ALL {
+        let nl = optimize(&arch.build(8));
+        nl.validate().unwrap_or_else(|e| {
+            panic!("{arch}: invalid after optimization: {e}")
+        });
+    }
+}
