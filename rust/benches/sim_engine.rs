@@ -1,6 +1,7 @@
 //! Bench: simulator core throughput (cell evaluations per second) — the
-//! L3 hot path behind every figure. Tracks the §Perf target in
-//! EXPERIMENTS.md (>= 1e7 cell-evals/s).
+//! L3 hot path behind every figure. Tracks the §Perf targets in
+//! EXPERIMENTS.md (>= 1e7 scalar cell-evals/s; packed engine >= 8x the
+//! scalar engine in vector ops/s on activity estimation).
 
 use nibblemul::bench::Bencher;
 use nibblemul::fabric::VectorUnit;
@@ -51,4 +52,45 @@ fn main() {
             sim.settle();
         },
     );
+
+    // Scalar vs 64-lane packed engine on the Monte-Carlo activity
+    // workload (the Fig. 4 / tech::power stimulus). Both cases run the
+    // same number of verified vector ops per iteration; the headline is
+    // the vectors/sec ratio (acceptance floor: >= 8x).
+    const ROUNDS: u64 = 2; // packed rounds per iter; scalar runs 64x ops
+    for (arch, n) in [(Arch::Nibble, 8usize), (Arch::LutArray, 8)] {
+        let unit = VectorUnit::new(arch, n);
+        let vec_ops = ROUNDS * 64;
+        let mut sim = unit.simulator().unwrap();
+        bencher.bench(
+            &format!("sim/scalar/{}x{} activity ({vec_ops} vec-ops)",
+                arch.name(), n),
+            Some(vec_ops as f64),
+            || {
+                let stats = unit.run_stream(&mut sim, vec_ops, 11).unwrap();
+                assert_eq!(stats.errors, 0);
+            },
+        );
+        let mut sim64 = unit.simulator64().unwrap();
+        bencher.bench(
+            &format!("sim/packed64/{}x{} activity ({vec_ops} vec-ops)",
+                arch.name(), n),
+            Some(vec_ops as f64),
+            || {
+                let stats =
+                    unit.run_stream64(&mut sim64, ROUNDS, 11).unwrap();
+                assert_eq!(stats.errors, 0);
+            },
+        );
+    }
+
+    // Machine-readable dump for perf tracking across PRs — same object
+    // schema as `nibblemul bench-sim` (consumers read `.results`).
+    let json = format!(
+        "{{\n  \"bench\": \"sim_engine\",\n  \"results\": {}\n}}\n",
+        bencher.json_report().trim_end()
+    );
+    if std::fs::write("BENCH_sim.json", &json).is_ok() {
+        println!("wrote BENCH_sim.json");
+    }
 }

@@ -22,6 +22,46 @@ impl BenchResult {
         self.items_per_iter
             .map(|it| it / (self.mean_ns * 1e-9))
     }
+
+    /// Machine-readable JSON object (no serde in the offline set; the
+    /// fields are the stable contract consumed by perf tracking:
+    /// `name`, `iters`, `mean_ns`, `median_ns`, `min_ns`, `stddev_ns`,
+    /// `items_per_s` — null when no throughput annotation was given).
+    pub fn to_json(&self) -> String {
+        let ips = self
+            .items_per_sec()
+            .map_or("null".to_string(), |v| format!("{v:.3}"));
+        format!(
+            "{{\"name\":\"{}\",\"iters\":{},\"mean_ns\":{:.1},\
+             \"median_ns\":{:.1},\"min_ns\":{:.1},\"stddev_ns\":{:.1},\
+             \"items_per_s\":{}}}",
+            json_escape(&self.name),
+            self.iters,
+            self.mean_ns,
+            self.median_ns,
+            self.min_ns,
+            self.stddev_ns,
+            ips
+        )
+    }
+}
+
+/// Escape a string for inclusion in a JSON string literal.
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32))
+            }
+            c => out.push(c),
+        }
+    }
+    out
 }
 
 impl std::fmt::Display for BenchResult {
@@ -121,6 +161,14 @@ impl Bencher {
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }
+
+    /// All results as a JSON array (one object per case, see
+    /// [`BenchResult::to_json`]).
+    pub fn json_report(&self) -> String {
+        let rows: Vec<String> =
+            self.results.iter().map(|r| r.to_json()).collect();
+        format!("[\n  {}\n]\n", rows.join(",\n  "))
+    }
 }
 
 #[cfg(test)]
@@ -148,5 +196,25 @@ mod tests {
         assert!(r.min_ns <= r.mean_ns * 1.5);
         assert!(r.items_per_sec().unwrap() > 0.0);
         assert!(acc != 0);
+        let json = b.json_report();
+        assert!(json.starts_with("[\n"));
+        assert!(json.contains("\"name\":\"spin\""));
+        assert!(json.contains("\"items_per_s\":"));
+    }
+
+    #[test]
+    fn json_escaping_and_null_throughput() {
+        let r = BenchResult {
+            name: "weird \"name\"\\x".into(),
+            iters: 1,
+            mean_ns: 10.0,
+            median_ns: 10.0,
+            min_ns: 10.0,
+            stddev_ns: 0.0,
+            items_per_iter: None,
+        };
+        let j = r.to_json();
+        assert!(j.contains("weird \\\"name\\\"\\\\x"), "{j}");
+        assert!(j.contains("\"items_per_s\":null"));
     }
 }

@@ -62,6 +62,10 @@ pub struct Metrics {
     pub jobs_submitted: AtomicU64,
     pub jobs_completed: AtomicU64,
     pub batches_executed: AtomicU64,
+    /// Backend execution passes. Group-capable backends (the 64-lane
+    /// packed fabric) execute many batches per pass, so
+    /// `batches_executed / exec_passes` is the measured group occupancy.
+    pub exec_passes: AtomicU64,
     pub lanes_executed: AtomicU64,
     pub lanes_padded: AtomicU64,
     pub errors: AtomicU64,
@@ -74,6 +78,7 @@ pub struct MetricsSnapshot {
     pub jobs_submitted: u64,
     pub jobs_completed: u64,
     pub batches_executed: u64,
+    pub exec_passes: u64,
     pub lanes_executed: u64,
     pub lanes_padded: u64,
     pub errors: u64,
@@ -82,12 +87,25 @@ pub struct MetricsSnapshot {
     pub p99_latency_us: u64,
 }
 
+impl MetricsSnapshot {
+    /// Mean batches per backend execution pass (1.0 for ungrouped
+    /// backends, up to 64 for the packed fabric).
+    pub fn batches_per_pass(&self) -> f64 {
+        if self.exec_passes == 0 {
+            0.0
+        } else {
+            self.batches_executed as f64 / self.exec_passes as f64
+        }
+    }
+}
+
 impl Metrics {
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
             jobs_submitted: self.jobs_submitted.load(Ordering::Relaxed),
             jobs_completed: self.jobs_completed.load(Ordering::Relaxed),
             batches_executed: self.batches_executed.load(Ordering::Relaxed),
+            exec_passes: self.exec_passes.load(Ordering::Relaxed),
             lanes_executed: self.lanes_executed.load(Ordering::Relaxed),
             lanes_padded: self.lanes_padded.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
@@ -113,10 +131,13 @@ impl std::fmt::Display for MetricsSnapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         writeln!(
             f,
-            "jobs {}/{} done, batches {}, lanes {} (+{} pad), errors {}",
+            "jobs {}/{} done, batches {} ({} passes, {:.1} batches/pass), \
+             lanes {} (+{} pad), errors {}",
             self.jobs_completed,
             self.jobs_submitted,
             self.batches_executed,
+            self.exec_passes,
+            self.batches_per_pass(),
             self.lanes_executed,
             self.lanes_padded,
             self.errors

@@ -19,7 +19,7 @@ mod metrics;
 mod pool;
 mod service;
 
-pub use backend::{Backend, ExactBackend, PjrtBackend, SimBackend};
+pub use backend::{Backend, ExactBackend, PjrtBackend, Sim64Backend, SimBackend};
 pub use batcher::{Batch, Batcher, BatcherConfig, LaneTag};
 pub use metrics::{LatencyHistogram, Metrics, MetricsSnapshot};
 pub use pool::WorkerPool;

@@ -26,6 +26,9 @@ pub struct WorkDone {
     pub batch: Batch,
     pub products: Result<Vec<u32>>,
     pub worker: usize,
+    /// Set on the first item of each executed group to the group size
+    /// (for pass/grouping metrics); `None` on the rest of the group.
+    pub group: Option<usize>,
 }
 
 /// Fixed-size pool of backend-owning workers.
@@ -49,20 +52,70 @@ impl WorkerPool {
         for (worker_id, mut backend) in backends.into_iter().enumerate() {
             let rx = Arc::clone(&rx);
             let tx_done = tx_done.clone();
+            let group_cap = backend.preferred_group().max(1);
             handles.push(std::thread::spawn(move || loop {
-                let item = {
+                // Pull one item (blocking), then opportunistically drain
+                // whatever else is already queued — up to the backend's
+                // group capacity — so group-capable backends (e.g. the
+                // 64-lane fabric) execute whole groups per pass.
+                let mut items: Vec<WorkItem> = Vec::new();
+                {
                     let guard = rx.lock().expect("queue lock");
-                    guard.recv()
-                };
-                let Ok(item) = item else { break };
-                let products = backend.execute(&item.batch);
-                let done = WorkDone {
-                    seq: item.seq,
-                    batch: item.batch,
-                    products,
-                    worker: worker_id,
-                };
-                if tx_done.send(done).is_err() {
+                    match guard.recv() {
+                        Ok(item) => items.push(item),
+                        Err(_) => break,
+                    }
+                    while items.len() < group_cap {
+                        match guard.try_recv() {
+                            Ok(item) => items.push(item),
+                            Err(_) => break,
+                        }
+                    }
+                }
+                let batches: Vec<&Batch> =
+                    items.iter().map(|i| &i.batch).collect();
+                let group = items.len();
+                let mut disconnected = false;
+                let result = backend.execute_group(&batches);
+                drop(batches);
+                match result {
+                    Ok(products) => {
+                        for (k, (item, p)) in
+                            items.into_iter().zip(products).enumerate()
+                        {
+                            let done = WorkDone {
+                                seq: item.seq,
+                                batch: item.batch,
+                                products: Ok(p),
+                                worker: worker_id,
+                                group: (k == 0).then_some(group),
+                            };
+                            if tx_done.send(done).is_err() {
+                                disconnected = true;
+                                break;
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        // One error fails the whole group; the message is
+                        // replicated per item (anyhow errors don't clone).
+                        let msg = format!("{e:#}");
+                        for (k, item) in items.into_iter().enumerate() {
+                            let done = WorkDone {
+                                seq: item.seq,
+                                batch: item.batch,
+                                products: Err(anyhow::anyhow!("{}", msg)),
+                                worker: worker_id,
+                                group: (k == 0).then_some(group),
+                            };
+                            if tx_done.send(done).is_err() {
+                                disconnected = true;
+                                break;
+                            }
+                        }
+                    }
+                }
+                if disconnected {
                     break;
                 }
             }));
@@ -132,6 +185,51 @@ mod tests {
             seen[done.seq as usize] = true;
         }
         assert!(seen.iter().all(|&s| s));
+        pool.shutdown();
+    }
+
+    /// Exact backend that advertises a group capacity (grouping probe).
+    struct GroupingExact(usize);
+
+    impl Backend for GroupingExact {
+        fn execute(&mut self, batch: &Batch) -> Result<Vec<u32>> {
+            ExactBackend.execute(batch)
+        }
+
+        fn preferred_group(&self) -> usize {
+            self.0
+        }
+
+        fn name(&self) -> String {
+            format!("grouping-exact:{}", self.0)
+        }
+    }
+
+    #[test]
+    fn group_capable_backend_receives_groups() {
+        let backends: Vec<Box<dyn Backend>> =
+            vec![Box::new(GroupingExact(4))];
+        let pool = WorkerPool::spawn(backends, 16);
+        for seq in 0..10u64 {
+            pool.submit(WorkItem {
+                seq,
+                batch: mk_batch(vec![seq as u16], 2),
+            })
+            .unwrap();
+        }
+        let mut group_sum = 0usize;
+        let mut items = 0usize;
+        for _ in 0..10 {
+            let done = pool.recv().unwrap();
+            assert_eq!(done.products.unwrap()[0], done.seq as u32 * 2);
+            items += 1;
+            if let Some(g) = done.group {
+                assert!(g >= 1 && g <= 4, "group size within capacity");
+                group_sum += g;
+            }
+        }
+        assert_eq!(items, 10);
+        assert_eq!(group_sum, 10, "group sizes partition the items");
         pool.shutdown();
     }
 }

@@ -115,6 +115,9 @@ impl Coordinator {
             self.metrics
                 .batches_executed
                 .fetch_add(1, Ordering::Relaxed);
+            if done.group.is_some() {
+                self.metrics.exec_passes.fetch_add(1, Ordering::Relaxed);
+            }
             let products = match done.products {
                 Ok(p) => p,
                 Err(e) => {
@@ -164,7 +167,7 @@ impl Coordinator {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::backend::{ExactBackend, SimBackend};
+    use crate::coordinator::backend::{ExactBackend, Sim64Backend, SimBackend};
     use crate::multipliers::Arch;
     use crate::workload::broadcast_jobs;
 
@@ -210,6 +213,31 @@ mod tests {
         for (job, res) in jobs.iter().zip(&results) {
             assert_eq!(res.products, job.expected());
         }
+        coord.shutdown();
+    }
+
+    #[test]
+    fn end_to_end_packed_fabric_groups_batches() {
+        let cfg = CoordinatorConfig {
+            width: 4,
+            queue_depth: 64,
+        };
+        let backends: Vec<Box<dyn Backend>> =
+            vec![Box::new(Sim64Backend::new(Arch::Nibble, 4).unwrap())];
+        let coord = Coordinator::new(cfg, backends);
+        let jobs = broadcast_jobs(48, 2, 10, 6);
+        let results = coord.run_jobs(&jobs).unwrap();
+        for (job, res) in jobs.iter().zip(&results) {
+            assert_eq!(res.products, job.expected(), "job {}", job.id);
+        }
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap.errors, 0);
+        assert_eq!(snap.jobs_completed, 48);
+        assert!(snap.exec_passes >= 1);
+        assert!(
+            snap.exec_passes <= snap.batches_executed,
+            "passes never exceed batches"
+        );
         coord.shutdown();
     }
 }

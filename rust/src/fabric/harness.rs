@@ -1,18 +1,61 @@
 //! Drive a vector unit through multiply operations, cycle-accurately.
+//!
+//! Two drive paths share the port contract of
+//! [`crate::multipliers::VECTOR_PORTS`]:
+//!
+//! * [`VectorUnit::run_op`] / [`VectorUnit::run_stream`] — scalar, one
+//!   vector op per settle (debugging, VCD, unit tests);
+//! * [`VectorUnit::run_op64`] / [`VectorUnit::run_stream64`] — packed, 64
+//!   independent vector ops per settle on a [`Simulator64`] (the
+//!   Monte-Carlo power stimulus and batched serving hot path).
+//!
+//! Port nets are resolved once at construction ([`UnitIo`]) so the hot
+//! loops never do string-keyed port lookups.
 
 use anyhow::{ensure, Result};
 
 use crate::multipliers::Arch;
-use crate::netlist::Netlist;
-use crate::sim::Simulator;
+use crate::netlist::{NetId, Netlist};
+use crate::sim::{lane_seeds, Simulator, Simulator64, LANES};
 use crate::synth::optimize;
 use crate::util::Xoshiro256;
+
+/// Port nets of a vector unit, resolved once (no per-op string lookups).
+#[derive(Clone, Debug)]
+struct UnitIo {
+    a: Vec<NetId>,
+    b: Vec<NetId>,
+    start: NetId,
+    r: Vec<NetId>,
+    done: NetId,
+}
+
+impl UnitIo {
+    fn resolve(nl: &Netlist) -> Self {
+        let bits = |name: &str, input: bool| -> Vec<NetId> {
+            let port = if input { nl.input(name) } else { nl.output(name) };
+            port.unwrap_or_else(|| {
+                panic!("vector unit is missing the '{name}' port")
+            })
+            .bits
+            .clone()
+        };
+        Self {
+            a: bits("a", true),
+            b: bits("b", true),
+            start: bits("start", true)[0],
+            r: bits("r", false),
+            done: bits("done", false)[0],
+        }
+    }
+}
 
 /// A built (and by default synthesis-optimized) vector unit.
 pub struct VectorUnit {
     pub arch: Arch,
     pub n: usize,
     pub netlist: Netlist,
+    io: UnitIo,
 }
 
 /// Result of one vector × broadcast-scalar operation.
@@ -20,6 +63,17 @@ pub struct VectorUnit {
 pub struct OpResult {
     pub products: Vec<u32>,
     /// Clock cycles from operand latch to done (combinational designs: 1).
+    pub cycles: u64,
+}
+
+/// Result of one packed operation: 64 independent vector ops, one per
+/// lane, executed in lockstep.
+#[derive(Clone, Debug)]
+pub struct OpResult64 {
+    /// `products[lane][element]`.
+    pub products: Vec<Vec<u32>>,
+    /// Clock cycles per lane (identical across lanes — the FSM is
+    /// data-independent).
     pub cycles: u64,
 }
 
@@ -35,21 +89,35 @@ pub struct StreamStats {
 impl VectorUnit {
     /// Build + optimize the unit (what area/power are measured on).
     pub fn new(arch: Arch, n: usize) -> Self {
-        let netlist = optimize(&arch.build(n));
-        Self { arch, n, netlist }
+        Self::from_netlist(arch, n, optimize(&arch.build(n)))
     }
 
     /// Build without optimization (keeps internal named signals for VCD).
     pub fn new_raw(arch: Arch, n: usize) -> Self {
+        Self::from_netlist(arch, n, arch.build(n))
+    }
+
+    /// Wrap an existing netlist (e.g. a synthesized one) as a vector
+    /// unit. The netlist must carry the standard vector-unit ports.
+    pub fn from_netlist(arch: Arch, n: usize, netlist: Netlist) -> Self {
+        let io = UnitIo::resolve(&netlist);
+        assert_eq!(io.a.len(), 8 * n, "'a' port width != 8N");
+        assert_eq!(io.r.len(), 16 * n, "'r' port width != 16N");
         Self {
             arch,
             n,
-            netlist: arch.build(n),
+            netlist,
+            io,
         }
     }
 
     pub fn simulator(&self) -> Result<Simulator<'_>> {
         Simulator::new(&self.netlist)
+    }
+
+    /// A 64-lane packed simulator over the same netlist.
+    pub fn simulator64(&self) -> Result<Simulator64<'_>> {
+        Simulator64::new(&self.netlist)
     }
 
     /// Pack N 8-bit elements into the `a` port word.
@@ -60,6 +128,18 @@ impl VectorUnit {
             .fold(0u64, |acc, (i, &e)| acc | ((e as u64 & 0xFF) << (8 * i)))
     }
 
+    /// Drive the operand ports (`a` element-major LSB-first, then `b`).
+    fn drive_operands(&self, sim: &mut Simulator<'_>, a: &[u16], b: u16) {
+        for (i, &e) in a.iter().enumerate() {
+            for bit in 0..8 {
+                sim.poke_net(self.io.a[8 * i + bit], (e >> bit) & 1 != 0);
+            }
+        }
+        for (bit, &net) in self.io.b.iter().enumerate() {
+            sim.poke_net(net, (b >> bit) & 1 != 0);
+        }
+    }
+
     /// Execute one vector op; `a.len()` must equal `n`.
     pub fn run_op(
         &self,
@@ -68,37 +148,30 @@ impl VectorUnit {
         b: u16,
     ) -> Result<OpResult> {
         ensure!(a.len() == self.n, "operand count != vector width");
-        // Set element inputs bit by bit (the port may exceed 64 bits).
-        let port = self
-            .netlist
-            .input("a")
-            .expect("vector unit has an 'a' port")
-            .clone();
-        self.set_wide(sim, &port, a)?;
-        sim.set_input("b", b as u64)?;
+        self.drive_operands(sim, a, b);
 
         if self.arch.is_combinational() {
-            sim.set_input("start", 1)?;
+            sim.poke_net(self.io.start, true);
             sim.settle();
             let products = self.read_products(sim);
             // Advance one clock so back-to-back ops consume 1 cycle each
             // (the paper's single-cycle accounting).
             sim.step();
-            sim.set_input("start", 0)?;
+            sim.poke_net(self.io.start, false);
             return Ok(OpResult {
                 products,
                 cycles: 1,
             });
         }
 
-        sim.set_input("start", 1)?;
+        sim.poke_net(self.io.start, true);
         sim.step();
-        sim.set_input("start", 0)?;
+        sim.poke_net(self.io.start, false);
         let mut cycles = 0u64;
         let max = self.arch.latency_cycles(self.n) + 8;
         loop {
             sim.settle();
-            if sim.get_output("done")? == 1 {
+            if sim.peek_net(self.io.done) {
                 break;
             }
             sim.step();
@@ -113,36 +186,113 @@ impl VectorUnit {
         })
     }
 
-    fn set_wide(
-        &self,
-        sim: &mut Simulator<'_>,
-        port: &crate::netlist::Port,
-        a: &[u16],
-    ) -> Result<()> {
-        // set_input takes u64; for wide `a` ports drive per element chunk
-        // by reusing the port bit list directly.
-        for (i, &e) in a.iter().enumerate() {
-            for bit in 0..8 {
-                let net = port.bits[8 * i + bit];
-                let v = (e >> bit) & 1 != 0;
-                // Route through the public API to keep toggle accounting:
-                // Simulator has no per-net setter, so temporarily emulate
-                // via direct value comparison.
-                sim.poke_net(net, v);
-            }
-        }
-        Ok(())
-    }
-
     fn read_products(&self, sim: &Simulator<'_>) -> Vec<u32> {
-        let port = self
-            .netlist
-            .output("r")
-            .expect("vector unit has an 'r' port");
         (0..self.n)
             .map(|i| {
-                let bits = &port.bits[16 * i..16 * (i + 1)];
-                sim.peek_bits(bits) as u32
+                sim.peek_bits(&self.io.r[16 * i..16 * (i + 1)]) as u32
+            })
+            .collect()
+    }
+
+    /// Drive the packed operand ports: `a[lane]` is lane `lane`'s element
+    /// vector, `b[lane]` its broadcast operand. Write order mirrors the
+    /// scalar [`VectorUnit::run_op`] exactly so toggle accounting matches
+    /// 64 scalar runs bit-for-bit.
+    fn drive_operands64(
+        &self,
+        sim: &mut Simulator64<'_>,
+        a: &[Vec<u16>],
+        b: &[u16],
+    ) {
+        for i in 0..self.n {
+            for bit in 0..8 {
+                let mut plane = 0u64;
+                for (l, lane_a) in a.iter().enumerate() {
+                    plane |= (((lane_a[i] >> bit) & 1) as u64) << l;
+                }
+                sim.poke_net_mask(self.io.a[8 * i + bit], plane);
+            }
+        }
+        for (bit, &net) in self.io.b.iter().enumerate() {
+            let mut plane = 0u64;
+            for (l, &lane_b) in b.iter().enumerate() {
+                plane |= (((lane_b >> bit) & 1) as u64) << l;
+            }
+            sim.poke_net_mask(net, plane);
+        }
+    }
+
+    /// Execute 64 independent vector ops in one packed pass: lane `l`
+    /// computes `a[l] × b[l]`. Requires exactly [`LANES`] lane operands,
+    /// each of length `n`.
+    pub fn run_op64(
+        &self,
+        sim: &mut Simulator64<'_>,
+        a: &[Vec<u16>],
+        b: &[u16],
+    ) -> Result<OpResult64> {
+        ensure!(a.len() == LANES, "need {LANES} lane operand vectors");
+        ensure!(b.len() == LANES, "need {LANES} lane broadcast operands");
+        for (l, lane_a) in a.iter().enumerate() {
+            ensure!(
+                lane_a.len() == self.n,
+                "lane {l}: operand count != vector width"
+            );
+        }
+        self.drive_operands64(sim, a, b);
+
+        if self.arch.is_combinational() {
+            sim.poke_net_mask(self.io.start, u64::MAX);
+            sim.settle();
+            let products = self.read_products64(sim);
+            sim.step();
+            sim.poke_net_mask(self.io.start, 0);
+            return Ok(OpResult64 {
+                products,
+                cycles: 1,
+            });
+        }
+
+        sim.poke_net_mask(self.io.start, u64::MAX);
+        sim.step();
+        sim.poke_net_mask(self.io.start, 0);
+        let mut cycles = 0u64;
+        let max = self.arch.latency_cycles(self.n) + 8;
+        loop {
+            sim.settle();
+            let done = sim.peek_net_mask(self.io.done);
+            if done == u64::MAX {
+                break;
+            }
+            // The control FSM is operand-independent, so lanes started
+            // together finish together; anything else is an engine bug.
+            ensure!(
+                done == 0,
+                "lanes diverged: done mask {done:#018x} after {cycles} cycles"
+            );
+            sim.step();
+            cycles += 1;
+            ensure!(cycles <= max, "unit hung: no done within {max} cycles");
+        }
+        sim.step();
+        cycles += 1;
+        Ok(OpResult64 {
+            products: self.read_products64(sim),
+            cycles,
+        })
+    }
+
+    fn read_products64(&self, sim: &Simulator64<'_>) -> Vec<Vec<u32>> {
+        (0..LANES)
+            .map(|l| {
+                (0..self.n)
+                    .map(|i| {
+                        sim.peek_bits_lane(
+                            &self.io.r[16 * i..16 * (i + 1)],
+                            l,
+                        ) as u32
+                    })
+                    .collect()
             })
             .collect()
     }
@@ -170,6 +320,49 @@ impl VectorUnit {
             for (x, p) in a.iter().zip(&res.products) {
                 if *p != *x as u32 * b as u32 {
                     stats.errors += 1;
+                }
+            }
+        }
+        Ok(stats)
+    }
+
+    /// 64-wide Monte-Carlo stream: `ops` rounds of 64 packed vector ops,
+    /// all verified. Lane `l`'s operand stream equals a scalar
+    /// [`VectorUnit::run_stream`] seeded with `lane_seeds(seed)[l]`, so a
+    /// packed stream is exactly 64 scalar streams run in lockstep —
+    /// including aggregate toggle counts.
+    ///
+    /// Statistics are lane-accounted: `ops`/`elements` count every lane's
+    /// work and `cycles` counts lane-cycles, so derived figures
+    /// (cycles/op, power over simulated time) are comparable with scalar
+    /// streams.
+    pub fn run_stream64(
+        &self,
+        sim: &mut Simulator64<'_>,
+        ops: u64,
+        seed: u64,
+    ) -> Result<StreamStats> {
+        let mut rngs: Vec<Xoshiro256> = lane_seeds(seed)
+            .iter()
+            .map(|&s| Xoshiro256::new(s))
+            .collect();
+        let mut stats = StreamStats::default();
+        for _ in 0..ops {
+            let a: Vec<Vec<u16>> = rngs
+                .iter_mut()
+                .map(|rng| (0..self.n).map(|_| rng.operand8()).collect())
+                .collect();
+            let b: Vec<u16> =
+                rngs.iter_mut().map(|rng| rng.operand8()).collect();
+            let res = self.run_op64(sim, &a, &b)?;
+            stats.ops += LANES as u64;
+            stats.elements += (LANES * self.n) as u64;
+            stats.cycles += res.cycles * LANES as u64;
+            for l in 0..LANES {
+                for (x, p) in a[l].iter().zip(&res.products[l]) {
+                    if *p != *x as u32 * b[l] as u32 {
+                        stats.errors += 1;
+                    }
                 }
             }
         }
@@ -207,6 +400,39 @@ mod tests {
         assert_eq!(res.cycles, 32);
         for (i, &x) in a.iter().enumerate() {
             assert_eq!(res.products[i], x as u32 * 201);
+        }
+    }
+
+    #[test]
+    fn every_arch_runs_a_packed_stream_correctly() {
+        for arch in Arch::ALL {
+            let unit = VectorUnit::new(arch, 4);
+            let mut sim = unit.simulator64().unwrap();
+            let stats = unit.run_stream64(&mut sim, 2, 7).unwrap();
+            assert_eq!(stats.errors, 0, "{arch} produced wrong products");
+            assert_eq!(stats.ops, 2 * LANES as u64);
+            assert_eq!(
+                stats.cycles,
+                2 * LANES as u64 * arch.latency_cycles(4),
+                "{arch} lane-cycle count"
+            );
+        }
+    }
+
+    #[test]
+    fn packed_op_matches_scalar_ops() {
+        let unit = VectorUnit::new(Arch::Nibble, 4);
+        let mut sim64 = unit.simulator64().unwrap();
+        let a: Vec<Vec<u16>> = (0..LANES)
+            .map(|l| (0..4).map(|i| ((l * 7 + i * 31) % 256) as u16).collect())
+            .collect();
+        let b: Vec<u16> = (0..LANES).map(|l| ((l * 13 + 5) % 256) as u16).collect();
+        let packed = unit.run_op64(&mut sim64, &a, &b).unwrap();
+        assert_eq!(packed.cycles, Arch::Nibble.latency_cycles(4));
+        let mut sim = unit.simulator().unwrap();
+        for l in 0..LANES {
+            let scalar = unit.run_op(&mut sim, &a[l], b[l]).unwrap();
+            assert_eq!(packed.products[l], scalar.products, "lane {l}");
         }
     }
 }

@@ -6,5 +6,5 @@
 mod harness;
 mod sweep;
 
-pub use harness::{OpResult, StreamStats, VectorUnit};
+pub use harness::{OpResult, OpResult64, StreamStats, VectorUnit};
 pub use sweep::{evaluate_arch, sweep_paper_set, ArchEval, SweepRow};

@@ -22,12 +22,17 @@ pub struct ArchEval {
     pub meets_1ghz: bool,
     /// Measured cycles for one vector op (must equal Table 2's model).
     pub cycles_per_op: u64,
-    /// Verified multiply count during the power stimulus.
+    /// Verified vector-op count during the power stimulus (64 lanes ×
+    /// stimulus rounds — every lane's products are checked).
     pub ops_verified: u64,
 }
 
-/// Evaluate one architecture at one width: synthesis report + power from a
-/// verified random stimulus of `ops` vector operations.
+/// Evaluate one architecture at one width: synthesis report + power from
+/// a verified random stimulus of `ops` rounds of 64-lane packed vector
+/// operations (the word-parallel engine evaluates 64 independent
+/// Monte-Carlo streams per settle — see `sim::Simulator64` — so the
+/// activity statistics come from `64 × ops` verified vector ops for
+/// roughly the wall cost of `ops` scalar ones).
 pub fn evaluate_arch(
     arch: Arch,
     n: usize,
@@ -36,19 +41,15 @@ pub fn evaluate_arch(
     seed: u64,
 ) -> Result<ArchEval> {
     let report: SynthReport = synthesize(&arch.build(n), lib)?;
-    let unit = VectorUnit {
-        arch,
-        n,
-        netlist: report.netlist.clone(),
-    };
-    let mut sim = unit.simulator()?;
-    let stats = unit.run_stream(&mut sim, ops, seed)?;
+    let unit = VectorUnit::from_netlist(arch, n, report.netlist.clone());
+    let mut sim = unit.simulator64()?;
+    let stats = unit.run_stream64(&mut sim, ops, seed)?;
     anyhow::ensure!(
         stats.errors == 0,
         "{arch} x{n}: {} wrong products under power stimulus",
         stats.errors
     );
-    let power = PowerModel::new(lib).estimate(&unit.netlist, &sim);
+    let power = PowerModel::new(lib).estimate64(&unit.netlist, &sim);
     Ok(ArchEval {
         arch,
         n,
@@ -82,7 +83,8 @@ pub struct SweepRow {
 
 /// Run the paper's full sweep (5 architectures × the given widths),
 /// calibrate on the shift-add 4-operand anchor, and normalize each width
-/// against its shift-add baseline.
+/// against its shift-add baseline. `ops` is the per-lane stimulus depth;
+/// each design point is verified over `64 × ops` vector operations.
 pub fn sweep_paper_set(
     widths: &[usize],
     lib: &TechLibrary,

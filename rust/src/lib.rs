@@ -5,8 +5,9 @@
 //! CS.AR 2026) as a three-layer Rust + JAX + Pallas stack:
 //!
 //! * **L3 (this crate)** — the hardware substrate the paper's evaluation
-//!   needs: a gate-level netlist IR ([`netlist`]), a cycle-accurate logic
-//!   simulator with switching-activity capture and VCD waveforms ([`sim`]),
+//!   needs: a gate-level netlist IR ([`netlist`]), cycle-accurate logic
+//!   simulation with switching-activity capture and VCD waveforms — both
+//!   scalar and 64-lane word-parallel engines ([`sim`]) —,
 //!   a 28 nm-class technology model with STA and activity-based power
 //!   ([`tech`]), a synthesis-lite flow ([`synth`]), generators for all six
 //!   multiplier architectures ([`multipliers`]), the vector-unit

@@ -9,6 +9,8 @@
 //!   serve               coordinator demo over a simulated fabric
 //!   mlp                 INT8 MLP inference (pjrt | sim | exact backends)
 //!   synth               synthesis report for one architecture
+//!   bench-sim           scalar vs 64-lane packed simulator throughput
+//!                       (machine-readable BENCH_sim.json)
 //!   report              everything above, in order (paper reproduction)
 //!   help
 
@@ -16,10 +18,13 @@ use std::io::Write;
 
 use anyhow::{anyhow, Result};
 
+use nibblemul::bench::Bencher;
 use nibblemul::cli::Args;
 use nibblemul::coordinator::{
-    Backend, Batch, Coordinator, CoordinatorConfig, LaneTag, SimBackend,
+    Backend, Batch, Coordinator, CoordinatorConfig, LaneTag, Sim64Backend,
+    SimBackend,
 };
+use nibblemul::fabric::VectorUnit;
 use nibblemul::model::quant::QuantMlp;
 use nibblemul::multipliers::Arch;
 use nibblemul::report::{fig3_run, fig4_report, table2_report};
@@ -51,6 +56,7 @@ fn run(args: &Args) -> Result<()> {
         "serve" => cmd_serve(args),
         "mlp" => cmd_mlp(args),
         "synth" => cmd_synth(args),
+        "bench-sim" => cmd_bench_sim(args),
         "report" => cmd_report(args),
         _ => {
             print!("{HELP}");
@@ -68,11 +74,16 @@ COMMANDS
   table2  [--n 4]                         Table 2 cycle latency (measured)
   fig3    [--out-dir artifacts]           Fig. 3 VCD waveforms + timeline
   fig4    [--widths 4,8,16] [--ops 32]    Fig. 4 area/power sweep
-  serve   [--arch nibble] [--width 16] [--workers 4] [--jobs 512]
+  serve   [--arch nibble] [--width 16] [--workers 4] [--jobs 512] [--batched]
                                           coordinator over simulated fabric
+                                          (--batched: 64-lane packed workers)
   mlp     [--backend pjrt|sim|exact] [--arch nibble] [--limit 64]
                                           INT8 inference end-to-end
   synth   [--arch nibble] [--n 8]         synthesis report for one design
+  bench-sim [--arch nibble] [--n 8] [--rounds 4] [--out BENCH_sim.json] [--check]
+                                          scalar vs 64-lane packed simulator
+                                          throughput; writes machine-readable
+                                          JSON (--check: fail below 8x)
   report  [--ops 32]                      full paper reproduction
 ";
 
@@ -119,14 +130,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let width = args.get_usize("width", 16)?;
     let workers = args.get_usize("workers", 4)?;
     let n_jobs = args.get_usize("jobs", 512)?;
+    let batched = args.has("batched");
     println!(
-        "coordinator: {workers} workers x sim:{arch} width {width}, \
-         {n_jobs} jobs"
+        "coordinator: {workers} workers x {}:{arch} width {width}, \
+         {n_jobs} jobs",
+        if batched { "sim64" } else { "sim" }
     );
     let backends: Vec<Box<dyn Backend>> = (0..workers)
         .map(|_| {
-            SimBackend::new(arch, width)
-                .map(|b| Box::new(b) as Box<dyn Backend>)
+            if batched {
+                Sim64Backend::new(arch, width)
+                    .map(|b| Box::new(b) as Box<dyn Backend>)
+            } else {
+                SimBackend::new(arch, width)
+                    .map(|b| Box::new(b) as Box<dyn Backend>)
+            }
         })
         .collect::<Result<_>>()?;
     let coord = Coordinator::new(
@@ -296,6 +314,70 @@ fn forward_on_fabric(
         }
     }
     Ok(out)
+}
+
+/// Scalar vs 64-lane packed simulator throughput on the Monte-Carlo
+/// activity-estimation workload, written as machine-readable JSON so
+/// future PRs can track the perf trajectory.
+fn cmd_bench_sim(args: &Args) -> Result<()> {
+    let arch = parse_arch(args, Arch::Nibble)?;
+    let n = args.get_usize("n", 8)?;
+    let rounds = args.get_u64("rounds", 4)?;
+    let out = args.get_or("out", "BENCH_sim.json");
+    let vec_ops = rounds * 64;
+    println!(
+        "bench-sim: {arch} x{n} activity estimation, \
+         {vec_ops} vector ops per iteration (scalar vs 64-lane packed)"
+    );
+
+    let unit = VectorUnit::new(arch, n);
+    let mut bencher = Bencher::quick();
+
+    let mut sim = unit.simulator()?;
+    let scalar = bencher
+        .bench(
+            &format!("sim/scalar/{arch}x{n} ({vec_ops} vec-ops)"),
+            Some(vec_ops as f64),
+            || {
+                let stats = unit.run_stream(&mut sim, vec_ops, 11).unwrap();
+                assert_eq!(stats.errors, 0);
+            },
+        )
+        .clone();
+
+    let mut sim64 = unit.simulator64()?;
+    let packed = bencher
+        .bench(
+            &format!("sim/packed64/{arch}x{n} ({vec_ops} vec-ops)"),
+            Some(vec_ops as f64),
+            || {
+                let stats =
+                    unit.run_stream64(&mut sim64, rounds, 11).unwrap();
+                assert_eq!(stats.errors, 0);
+            },
+        )
+        .clone();
+
+    let speedup = packed.items_per_sec().unwrap_or(0.0)
+        / scalar.items_per_sec().unwrap_or(f64::INFINITY);
+    println!("packed/scalar speedup: {speedup:.1}x (vector ops/sec)");
+    let json = format!(
+        "{{\n  \"bench\": \"sim_engine\",\n  \"workload\": \
+         \"{arch} x{n} activity estimation\",\n  \"results\": {},  \
+         \"speedup_packed_vs_scalar\": {speedup:.3}\n}}\n",
+        bencher.json_report().trim_end()
+    );
+    std::fs::write(&out, json)?;
+    println!("wrote {out}");
+    if args.has("check") {
+        anyhow::ensure!(
+            speedup >= 8.0,
+            "packed engine speedup {speedup:.1}x is below the 8x \
+             acceptance floor"
+        );
+        println!("check passed: speedup >= 8x");
+    }
+    Ok(())
 }
 
 fn cmd_synth(args: &Args) -> Result<()> {

@@ -4,10 +4,15 @@
 //! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
 //! parser reassigns ids (see /opt/xla-example/README.md and DESIGN.md).
 
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
+#[cfg(feature = "pjrt")]
+use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::{anyhow, Context};
+use anyhow::Result;
 
 use crate::model::quant::QuantMlp;
 use crate::workload::{load_meta, load_testset, load_weights, Meta, TestSet};
@@ -51,12 +56,14 @@ impl ArtifactSet {
 }
 
 /// PJRT CPU runtime with a compiled-executable cache.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     client: xla::PjRtClient,
     cache: HashMap<String, xla::PjRtLoadedExecutable>,
     artifacts: ArtifactSet,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Create a CPU PJRT client over an artifact directory.
     pub fn cpu(artifacts: ArtifactSet) -> Result<Self> {
@@ -177,5 +184,69 @@ impl Runtime {
             .map(|(d, s)| (d.as_slice(), s.as_slice()))
             .collect();
         self.execute_i32("mlp_int8", &refs)
+    }
+}
+
+/// Stub runtime used when the crate is built without the `pjrt` feature
+/// (the offline dependency set has no `xla` bindings). Construction
+/// fails with a clear message; every other entry point is unreachable in
+/// practice but kept API-compatible so callers compile unchanged.
+#[cfg(not(feature = "pjrt"))]
+pub struct Runtime {
+    _artifacts: ArtifactSet,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    fn unavailable<T>() -> Result<T> {
+        Err(anyhow::anyhow!(
+            "PJRT runtime unavailable: nibblemul was built without the \
+             `pjrt` feature (the xla bindings are not in the offline \
+             dependency set). Rebuild with `--features pjrt` in an \
+             environment that provides the `xla` crate."
+        ))
+    }
+
+    /// Always errors in a non-`pjrt` build.
+    pub fn cpu(artifacts: ArtifactSet) -> Result<Self> {
+        let _ = artifacts;
+        Self::unavailable()
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable (built without pjrt)".to_string()
+    }
+
+    pub fn artifacts(&self) -> &ArtifactSet {
+        &self._artifacts
+    }
+
+    pub fn ensure_loaded(&mut self, _name: &str) -> Result<()> {
+        Self::unavailable()
+    }
+
+    pub fn execute_i32(
+        &mut self,
+        _name: &str,
+        _inputs: &[(&[i32], &[i64])],
+    ) -> Result<Vec<i32>> {
+        Self::unavailable()
+    }
+
+    pub fn nibble_mul(&mut self, _a: &[i32], _b: i32) -> Result<Vec<i32>> {
+        Self::unavailable()
+    }
+
+    pub fn lut_mul_16(&mut self, _a: &[i32], _b: i32) -> Result<Vec<i32>> {
+        Self::unavailable()
+    }
+
+    pub fn mlp_int8(
+        &mut self,
+        _x: &[i32],
+        _batch: i64,
+        _dim: i64,
+    ) -> Result<Vec<i32>> {
+        Self::unavailable()
     }
 }

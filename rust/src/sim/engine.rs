@@ -6,146 +6,61 @@
 //! settling, and register clocking); glitch activity below cycle resolution
 //! is not modelled — the power model accounts for that with a documented
 //! glitch factor (see `tech::power`).
+//!
+//! This is the one-vector-at-a-time engine; [`super::Simulator64`] runs 64
+//! independent stimulus vectors per pass over the same compiled program
+//! (see `sim/batch.rs`). Both compile the netlist through `sim/ops.rs`, so
+//! they execute bit-identical programs.
 
 use std::collections::HashMap;
 
 use anyhow::{anyhow, Result};
 
-use crate::netlist::{Cell, Netlist};
+use crate::netlist::Netlist;
 
-/// A pre-compiled combinational operation (hot-loop representation).
-///
-/// `settle` originally walked `topo_order` indices and matched on the
-/// `Cell` enum through two levels of indirection; compiling the order
-/// once into this flat struct-of-operands form made settling ~1.5x
-/// faster (see EXPERIMENTS.md §Perf).
-#[derive(Clone, Copy)]
-struct Op {
-    code: u8, // 0 buf, 1 not, 2..=7 binary (BinKind order), 8 mux, 9 ha, 10 fa
-    a: u32,
-    b: u32,
-    c: u32,
-    o1: u32,
-    o2: u32,
-}
+use super::ops::{self, DffOp, Op, PortHandle};
 
 /// Cycle-accurate simulator over a borrowed netlist.
 pub struct Simulator<'a> {
     nl: &'a Netlist,
-    /// Topological order of combinational cell indices.
-    order: Vec<u32>,
-    /// Pre-compiled combinational program (same order as `order`).
+    /// Pre-compiled combinational program (topological order).
     ops: Vec<Op>,
     /// Current value of every net.
     values: Vec<bool>,
     /// Cumulative toggle count per net.
     toggles: Vec<u64>,
-    /// Indices of sequential cells.
-    dffs: Vec<u32>,
+    /// Pre-compiled sequential cells.
+    dffs: Vec<DffOp>,
     /// Scratch for next-state computation.
     next_q: Vec<bool>,
     /// Completed clock cycles.
     cycles: u64,
-    /// Port name -> (is_input, index) lookup.
-    ports: HashMap<String, (bool, usize)>,
+    /// Port name -> handle lookup (cold path; hot loops use handles).
+    ports: HashMap<String, PortHandle>,
 }
 
 impl<'a> Simulator<'a> {
     /// Build a simulator; nets start at 0 / DFF init values, constants
     /// driven, and the combinational cloud settled.
     pub fn new(nl: &'a Netlist) -> Result<Self> {
-        let order: Vec<u32> =
-            nl.topo_order()?.into_iter().map(|i| i as u32).collect();
+        let compiled = ops::compile(nl)?;
         let mut values = vec![false; nl.n_nets];
-        let mut dffs = Vec::new();
-        for (ci, cell) in nl.cells.iter().enumerate() {
-            match cell {
-                Cell::Const { value, out } => values[out.idx()] = *value,
-                Cell::Dff { q, init, .. } => {
-                    values[q.idx()] = *init;
-                    dffs.push(ci as u32);
-                }
-                _ => {}
-            }
+        for &(net, v) in &compiled.consts {
+            values[net as usize] = v;
         }
-        let mut ports = HashMap::new();
-        for (i, p) in nl.inputs.iter().enumerate() {
-            ports.insert(p.name.clone(), (true, i));
+        for dff in &compiled.dffs {
+            values[dff.q as usize] = dff.init;
         }
-        for (i, p) in nl.outputs.iter().enumerate() {
-            ports.insert(p.name.clone(), (false, i));
-        }
-        let ops: Vec<Op> = order
-            .iter()
-            .map(|&ci| {
-                let cell = &nl.cells[ci as usize];
-                match *cell {
-                    Cell::Unary { kind, a, out } => Op {
-                        code: match kind {
-                            crate::netlist::UnaryKind::Buf => 0,
-                            crate::netlist::UnaryKind::Not => 1,
-                        },
-                        a: a.0,
-                        b: 0,
-                        c: 0,
-                        o1: out.0,
-                        o2: 0,
-                    },
-                    Cell::Binary { kind, a, b, out } => Op {
-                        code: 2 + kind as u8,
-                        a: a.0,
-                        b: b.0,
-                        c: 0,
-                        o1: out.0,
-                        o2: 0,
-                    },
-                    Cell::Mux2 { sel, a0, a1, out } => Op {
-                        code: 8,
-                        a: sel.0,
-                        b: a0.0,
-                        c: a1.0,
-                        o1: out.0,
-                        o2: 0,
-                    },
-                    Cell::HalfAdder { a, b, sum, carry } => Op {
-                        code: 9,
-                        a: a.0,
-                        b: b.0,
-                        c: 0,
-                        o1: sum.0,
-                        o2: carry.0,
-                    },
-                    Cell::FullAdder {
-                        a,
-                        b,
-                        c,
-                        sum,
-                        carry,
-                    } => Op {
-                        code: 10,
-                        a: a.0,
-                        b: b.0,
-                        c: c.0,
-                        o1: sum.0,
-                        o2: carry.0,
-                    },
-                    Cell::Const { .. } | Cell::Dff { .. } => {
-                        unreachable!("not combinational")
-                    }
-                }
-            })
-            .collect();
-        let next_q = vec![false; dffs.len()];
+        let next_q = vec![false; compiled.dffs.len()];
         let mut sim = Self {
             nl,
-            order,
-            ops,
+            ops: compiled.ops,
             values,
             toggles: vec![0; nl.n_nets],
-            dffs,
+            dffs: compiled.dffs,
             next_q,
             cycles: 0,
-            ports,
+            ports: ops::port_map(nl),
         };
         sim.settle();
         // Reset toggle counts: initialisation is not workload activity.
@@ -174,50 +89,87 @@ impl<'a> Simulator<'a> {
         self.cycles = 0;
     }
 
+    /// Resolve an input port to a reusable handle (hot loops: resolve once,
+    /// then call [`Simulator::set_input_h`]).
+    pub fn input_handle(&self, name: &str) -> Result<PortHandle> {
+        ops::resolve_input(&self.ports, name)
+    }
+
+    /// Resolve an output (or input — reads work on both) port handle.
+    pub fn output_handle(&self, name: &str) -> Result<PortHandle> {
+        ops::resolve_port(&self.ports, name)
+    }
+
     /// Set a primary input bus to an integer value (LSB-first).
     pub fn set_input(&mut self, name: &str, value: u64) -> Result<()> {
-        let &(is_in, idx) = self
-            .ports
-            .get(name)
-            .ok_or_else(|| anyhow!("no port named {name}"))?;
-        if !is_in {
-            return Err(anyhow!("{name} is an output"));
-        }
-        let bits = self.nl.inputs[idx].bits.clone();
-        for (i, b) in bits.iter().enumerate() {
-            let v = (value >> i) & 1 != 0;
-            if self.values[b.idx()] != v {
-                self.values[b.idx()] = v;
-                self.toggles[b.idx()] += 1;
-            }
-        }
+        let h = ops::resolve_input(&self.ports, name)?;
+        self.set_input_h(h, value);
         Ok(())
     }
 
-    /// Read an output bus as an integer (must be ≤ 64 bits).
+    /// Handle-based variant of [`Simulator::set_input`] — no name lookup,
+    /// no allocation.
+    pub fn set_input_h(&mut self, h: PortHandle, value: u64) {
+        debug_assert!(h.input, "set_input_h needs an input handle");
+        let nl = self.nl;
+        for (i, b) in nl.inputs[h.index].bits.iter().enumerate() {
+            self.write(b.idx(), (value >> i) & 1 != 0);
+        }
+    }
+
+    /// Read an output bus as an integer. Buses wider than 64 bits are an
+    /// error — use [`Simulator::peek_bits_wide`] for those.
     pub fn get_output(&self, name: &str) -> Result<u64> {
-        let &(is_in, idx) = self
-            .ports
-            .get(name)
-            .ok_or_else(|| anyhow!("no port named {name}"))?;
-        let port = if is_in {
-            &self.nl.inputs[idx]
+        let h = ops::resolve_port(&self.ports, name)?;
+        let port = if h.input {
+            &self.nl.inputs[h.index]
         } else {
-            &self.nl.outputs[idx]
+            &self.nl.outputs[h.index]
         };
+        if port.bits.len() > 64 {
+            return Err(anyhow!(
+                "port {name} is {} bits wide (> 64): read it with \
+                 peek_bits_wide or per-element peek_bits slices",
+                port.bits.len()
+            ));
+        }
         Ok(self.peek_bits(&port.bits))
     }
 
-    /// Read an arbitrary net group as an integer (buses wider than 64
-    /// bits are truncated to the low 64 — use [`Simulator::peek_net`] per
-    /// bit for wider data).
+    /// Handle-based variant of [`Simulator::get_output`] (same ≤ 64-bit
+    /// contract, checked in debug builds).
+    pub fn get_output_h(&self, h: PortHandle) -> u64 {
+        let port = if h.input {
+            &self.nl.inputs[h.index]
+        } else {
+            &self.nl.outputs[h.index]
+        };
+        self.peek_bits(&port.bits)
+    }
+
+    /// Read a net group as an integer. The group must be at most 64 bits
+    /// (checked in debug builds; release builds read the low 64).
     pub fn peek_bits(&self, bits: &[crate::netlist::NetId]) -> u64 {
+        debug_assert!(
+            bits.len() <= 64,
+            "peek_bits on a {}-bit group: use peek_bits_wide",
+            bits.len()
+        );
         bits.iter()
             .take(64)
             .enumerate()
             .fold(0u64, |acc, (i, b)| {
                 acc | ((self.values[b.idx()] as u64) << i)
             })
+    }
+
+    /// Read a net group of any width as LSB-first 64-bit limbs (the wide
+    /// counterpart of [`Simulator::peek_bits`], for ports over 64 bits).
+    pub fn peek_bits_wide(
+        &self,
+        bits: &[crate::netlist::NetId],
+    ) -> Vec<u64> {
+        bits.chunks(64).map(|c| self.peek_bits(c)).collect()
     }
 
     /// Current value of a single net.
@@ -298,33 +250,28 @@ impl<'a> Simulator<'a> {
     /// DFF on the rising edge, then settle the new state.
     pub fn step(&mut self) {
         self.settle();
-        let nl = self.nl;
         // Sample all D inputs first (simultaneous edge semantics)...
         for k in 0..self.dffs.len() {
-            let ci = self.dffs[k];
-            if let Cell::Dff { d, en, clr, q, .. } = nl.cells[ci as usize] {
-                let cur = self.values[q.idx()];
-                let mut next = cur;
-                let enabled =
-                    en.map_or(true, |e| self.values[e.idx()]);
-                if enabled {
-                    next = self.values[d.idx()];
+            let f = self.dffs[k];
+            let cur = self.values[f.q as usize];
+            let enabled = f.en.map_or(true, |e| self.values[e as usize]);
+            let mut next = if enabled {
+                self.values[f.d as usize]
+            } else {
+                cur
+            };
+            if let Some(r) = f.clr {
+                if self.values[r as usize] {
+                    next = false;
                 }
-                if let Some(r) = clr {
-                    if self.values[r.idx()] {
-                        next = false;
-                    }
-                }
-                self.next_q[k] = next;
             }
+            self.next_q[k] = next;
         }
         // ...then commit.
         for k in 0..self.dffs.len() {
-            let ci = self.dffs[k];
-            if let Cell::Dff { q, .. } = nl.cells[ci as usize] {
-                let v = self.next_q[k];
-                self.write(q.idx(), v);
-            }
+            let q = self.dffs[k].q as usize;
+            let v = self.next_q[k];
+            self.write(q, v);
         }
         self.settle();
         self.cycles += 1;
@@ -412,5 +359,45 @@ mod tests {
         let mut sim2 = Simulator::new(&nl).unwrap();
         sim2.run(16); // full wrap: every q bit toggled several times
         assert!(sim2.total_toggles() > t_after_one);
+    }
+
+    #[test]
+    fn handles_match_string_lookups() {
+        let mut b = Builder::new("h");
+        let x = b.input("x", 8);
+        let y = b.bitwise(
+            crate::netlist::BinKind::Xor,
+            &x,
+            &x.clone(),
+        );
+        b.output("y", &y);
+        let nl = b.finish();
+        let mut sim = Simulator::new(&nl).unwrap();
+        let hx = sim.input_handle("x").unwrap();
+        let hy = sim.output_handle("y").unwrap();
+        sim.set_input_h(hx, 0x5A);
+        sim.settle();
+        assert_eq!(sim.get_output_h(hy), sim.get_output("y").unwrap());
+        assert!(sim.input_handle("y").is_err(), "y is an output");
+        assert!(sim.input_handle("nope").is_err());
+    }
+
+    #[test]
+    fn wide_reads_use_limbs() {
+        let mut b = Builder::new("wide");
+        let x = b.input("x", 80);
+        b.output("y", &x.clone());
+        let nl = b.finish();
+        let mut sim = Simulator::new(&nl).unwrap();
+        // Drive bit 3 and bit 70 via poke_net (set_input is 64-bit).
+        sim.poke_net(x[3], true);
+        sim.poke_net(x[70], true);
+        sim.settle();
+        assert!(sim.get_output("y").is_err(), "80-bit read must error");
+        let port = nl.output("y").unwrap();
+        let limbs = sim.peek_bits_wide(&port.bits);
+        assert_eq!(limbs.len(), 2);
+        assert_eq!(limbs[0], 1 << 3);
+        assert_eq!(limbs[1], 1 << 6, "bit 70 lands at limb1 bit 6");
     }
 }

@@ -5,11 +5,32 @@
 //! evaluation), records per-net toggle counts (the input to the
 //! activity-based power model in [`crate::tech::power`]) and can dump VCD
 //! waveforms for the Fig. 3 functional-verification reproduction.
+//!
+//! Two engines share one compiled program form (`sim/ops.rs`):
+//!
+//! * [`Simulator`] — scalar, one stimulus vector at a time. Drives the
+//!   interactive paths (VCD waveforms, single-op debugging, unit tests).
+//! * [`Simulator64`] — word-parallel: 64 independent stimulus vectors
+//!   packed one-per-bit into a `u64` per net, evaluated with bitwise ops
+//!   (up to 64 simulations for the cost of one pass). Drives the bulk
+//!   Monte-Carlo paths: activity/power estimation, sweep stimulus,
+//!   differential fuzzing and batched serving. Aggregate toggle counts
+//!   are exactly equal to the sum of 64 scalar runs on the same per-lane
+//!   stimulus (asserted by `tests/sim64_equivalence.rs`), so power
+//!   numbers are bit-identical, not approximate.
+//!
+//! Hot loops should resolve ports once via `input_handle`/`output_handle`
+//! and use the `*_h` accessors; the string-keyed entry points are
+//! conveniences for cold paths and tests.
 
+mod batch;
 mod engine;
+mod ops;
 mod testbench;
 mod vcd;
 
+pub use batch::{lane_seeds, Simulator64, LANES};
 pub use engine::Simulator;
+pub use ops::PortHandle;
 pub use testbench::{drive_and_settle, run_cycles};
 pub use vcd::VcdWriter;

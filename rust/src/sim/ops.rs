@@ -1,0 +1,196 @@
+//! Shared pre-compiled program representation for the simulation engines.
+//!
+//! Both the scalar [`super::Simulator`] and the 64-lane word-parallel
+//! [`super::Simulator64`] evaluate the same flat struct-of-operands form:
+//! the topological cell order is compiled once into [`Op`] records (no
+//! enum matching or netlist indirection in the hot loop — EXPERIMENTS.md
+//! §Perf), and the sequential cells into [`DffOp`] records. Keeping one
+//! compiler guarantees the two engines execute bit-identical programs,
+//! which the packed-vs-scalar equivalence tests rely on.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::netlist::{Cell, Netlist};
+
+/// A pre-compiled combinational operation (hot-loop representation).
+///
+/// `code`: 0 buf, 1 not, 2..=7 binary (`BinKind` order: and, or, xor,
+/// nand, nor, xnor), 8 mux (`a`=sel, `b`=a0, `c`=a1), 9 half adder,
+/// 10 full adder.
+#[derive(Clone, Copy)]
+pub(crate) struct Op {
+    pub code: u8,
+    pub a: u32,
+    pub b: u32,
+    pub c: u32,
+    pub o1: u32,
+    pub o2: u32,
+}
+
+/// A pre-compiled sequential (DFF) cell.
+#[derive(Clone, Copy)]
+pub(crate) struct DffOp {
+    pub d: u32,
+    pub en: Option<u32>,
+    pub clr: Option<u32>,
+    pub q: u32,
+    pub init: bool,
+}
+
+/// The full compiled program of a netlist.
+pub(crate) struct Compiled {
+    /// Combinational ops in topological order.
+    pub ops: Vec<Op>,
+    /// Sequential cells, in netlist order.
+    pub dffs: Vec<DffOp>,
+    /// Constant-driven nets: (net index, value).
+    pub consts: Vec<(u32, bool)>,
+}
+
+/// Compile `nl` into the flat program form (errors on combinational
+/// cycles, via `topo_order`).
+pub(crate) fn compile(nl: &Netlist) -> Result<Compiled> {
+    let order = nl.topo_order()?;
+    let mut dffs = Vec::new();
+    let mut consts = Vec::new();
+    for cell in &nl.cells {
+        match *cell {
+            Cell::Const { value, out } => consts.push((out.0, value)),
+            Cell::Dff { d, en, clr, q, init } => dffs.push(DffOp {
+                d: d.0,
+                en: en.map(|n| n.0),
+                clr: clr.map(|n| n.0),
+                q: q.0,
+                init,
+            }),
+            _ => {}
+        }
+    }
+    let ops = order
+        .into_iter()
+        .map(|ci| {
+            let cell = &nl.cells[ci];
+            match *cell {
+                Cell::Unary { kind, a, out } => Op {
+                    code: match kind {
+                        crate::netlist::UnaryKind::Buf => 0,
+                        crate::netlist::UnaryKind::Not => 1,
+                    },
+                    a: a.0,
+                    b: 0,
+                    c: 0,
+                    o1: out.0,
+                    o2: 0,
+                },
+                Cell::Binary { kind, a, b, out } => Op {
+                    code: 2 + kind as u8,
+                    a: a.0,
+                    b: b.0,
+                    c: 0,
+                    o1: out.0,
+                    o2: 0,
+                },
+                Cell::Mux2 { sel, a0, a1, out } => Op {
+                    code: 8,
+                    a: sel.0,
+                    b: a0.0,
+                    c: a1.0,
+                    o1: out.0,
+                    o2: 0,
+                },
+                Cell::HalfAdder { a, b, sum, carry } => Op {
+                    code: 9,
+                    a: a.0,
+                    b: b.0,
+                    c: 0,
+                    o1: sum.0,
+                    o2: carry.0,
+                },
+                Cell::FullAdder {
+                    a,
+                    b,
+                    c,
+                    sum,
+                    carry,
+                } => Op {
+                    code: 10,
+                    a: a.0,
+                    b: b.0,
+                    c: c.0,
+                    o1: sum.0,
+                    o2: carry.0,
+                },
+                Cell::Const { .. } | Cell::Dff { .. } => {
+                    unreachable!("not combinational")
+                }
+            }
+        })
+        .collect();
+    Ok(Compiled { ops, dffs, consts })
+}
+
+/// A resolved handle to a named port: look the name up once, then use the
+/// `*_h` simulator methods in hot loops (no per-call `String` hashing).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PortHandle {
+    pub(crate) input: bool,
+    pub(crate) index: usize,
+}
+
+impl PortHandle {
+    /// True if this handle names a primary input.
+    pub fn is_input(self) -> bool {
+        self.input
+    }
+}
+
+/// Port name -> handle lookup table shared by both engines.
+pub(crate) fn port_map(nl: &Netlist) -> HashMap<String, PortHandle> {
+    let mut ports = HashMap::new();
+    for (i, p) in nl.inputs.iter().enumerate() {
+        ports.insert(
+            p.name.clone(),
+            PortHandle {
+                input: true,
+                index: i,
+            },
+        );
+    }
+    for (i, p) in nl.outputs.iter().enumerate() {
+        ports.insert(
+            p.name.clone(),
+            PortHandle {
+                input: false,
+                index: i,
+            },
+        );
+    }
+    ports
+}
+
+/// Resolve `name` to an input-port handle.
+pub(crate) fn resolve_input(
+    ports: &HashMap<String, PortHandle>,
+    name: &str,
+) -> Result<PortHandle> {
+    let h = *ports
+        .get(name)
+        .ok_or_else(|| anyhow!("no port named {name}"))?;
+    if !h.input {
+        return Err(anyhow!("{name} is an output"));
+    }
+    Ok(h)
+}
+
+/// Resolve `name` to a port handle (input or output — reads work on both).
+pub(crate) fn resolve_port(
+    ports: &HashMap<String, PortHandle>,
+    name: &str,
+) -> Result<PortHandle> {
+    ports
+        .get(name)
+        .copied()
+        .ok_or_else(|| anyhow!("no port named {name}"))
+}

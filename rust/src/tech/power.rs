@@ -17,7 +17,7 @@
 //! unaffected).
 
 use crate::netlist::{Cell, Netlist};
-use crate::sim::Simulator;
+use crate::sim::{Simulator, Simulator64};
 use crate::tech::{TechLibrary, CLOCK_HZ};
 
 /// Power decomposition in milliwatts.
@@ -47,9 +47,31 @@ impl<'l> PowerModel<'l> {
     /// Estimate power for `nl` given a simulator that has executed the
     /// workload (its toggle counters and cycle count are read here).
     pub fn estimate(&self, nl: &Netlist, sim: &Simulator<'_>) -> PowerBreakdown {
-        let cycles = sim.cycles().max(1) as f64;
+        self.estimate_activity(nl, sim.toggles(), sim.cycles())
+    }
+
+    /// Estimate power from a word-parallel run: toggles are aggregated
+    /// over all 64 lanes, so the time denominator is the aggregate
+    /// lane-cycles — the result is the exact mean of the 64 per-lane
+    /// scalar estimates.
+    pub fn estimate64(
+        &self,
+        nl: &Netlist,
+        sim: &Simulator64<'_>,
+    ) -> PowerBreakdown {
+        self.estimate_activity(nl, sim.toggles(), sim.lane_cycles())
+    }
+
+    /// Core estimator over raw activity statistics: per-net toggle counts
+    /// and the number of simulated cycles they were collected over.
+    pub fn estimate_activity(
+        &self,
+        nl: &Netlist,
+        toggles: &[u64],
+        cycles: u64,
+    ) -> PowerBreakdown {
+        let cycles = cycles.max(1) as f64;
         let sim_time_s = cycles / CLOCK_HZ;
-        let toggles = sim.toggles();
 
         let mut dyn_fj = 0.0f64;
         let mut n_dff = 0usize;

@@ -1,0 +1,104 @@
+//! Word-parallel engine equivalence: a packed [`Simulator64`] run must be
+//! EXACTLY 64 scalar [`Simulator`] runs in lockstep — same products, same
+//! per-net aggregate toggle counts, same cycle counts, and therefore the
+//! same power numbers. Checked for every multiplier architecture at
+//! n ∈ {1, 4, 8} over the same seeded per-lane stimulus streams
+//! (`lane_seeds` is the shared contract between `run_stream64` and the
+//! scalar replay here).
+
+use nibblemul::fabric::VectorUnit;
+use nibblemul::multipliers::Arch;
+use nibblemul::sim::{lane_seeds, LANES};
+use nibblemul::tech::{PowerModel, TechLibrary};
+use nibblemul::testkit;
+
+const OPS: u64 = 2; // stimulus rounds (per lane)
+
+#[test]
+fn packed_equals_64_scalar_runs_all_archs() {
+    for arch in Arch::ALL {
+        for n in [1usize, 4, 8] {
+            let seed = 0xC0FFEE ^ (n as u64) << 8 ^ arch as u64;
+            let unit = VectorUnit::new(arch, n);
+
+            // Packed run: OPS rounds of 64 verified vector ops.
+            let mut sim64 = unit.simulator64().unwrap();
+            let stats64 = unit.run_stream64(&mut sim64, OPS, seed).unwrap();
+            assert_eq!(stats64.errors, 0, "{arch} x{n}: packed products");
+            assert_eq!(stats64.ops, OPS * LANES as u64);
+
+            // 64 scalar runs on the same per-lane streams.
+            let seeds = lane_seeds(seed);
+            let mut toggles_sum = vec![0u64; unit.netlist.n_nets];
+            let mut scalar_cycles_total = 0u64;
+            for &lane_seed in &seeds {
+                let mut sim = unit.simulator().unwrap();
+                let stats =
+                    unit.run_stream(&mut sim, OPS, lane_seed).unwrap();
+                assert_eq!(stats.errors, 0, "{arch} x{n}: scalar products");
+                assert_eq!(sim.cycles(), sim64.cycles(), "{arch} x{n}");
+                scalar_cycles_total += stats.cycles;
+                for (acc, &t) in toggles_sum.iter_mut().zip(sim.toggles())
+                {
+                    *acc += t;
+                }
+            }
+
+            // Aggregate lane-cycles and per-net toggles match exactly.
+            assert_eq!(stats64.cycles, scalar_cycles_total, "{arch} x{n}");
+            assert_eq!(
+                sim64.toggles(),
+                &toggles_sum[..],
+                "{arch} x{n}: per-net aggregate toggle counts must be \
+                 bit-identical to 64 scalar runs"
+            );
+        }
+    }
+}
+
+#[test]
+fn packed_power_equals_mean_of_scalar_power() {
+    let lib = TechLibrary::hpc28();
+    let arch = Arch::Nibble;
+    let n = 4usize;
+    let seed = 77u64;
+    let unit = VectorUnit::new(arch, n);
+
+    let mut sim64 = unit.simulator64().unwrap();
+    unit.run_stream64(&mut sim64, 3, seed).unwrap();
+    let packed = PowerModel::new(&lib).estimate64(&unit.netlist, &sim64);
+
+    let seeds = lane_seeds(seed);
+    let mut mean_dynamic = 0.0f64;
+    for &lane_seed in &seeds {
+        let mut sim = unit.simulator().unwrap();
+        unit.run_stream(&mut sim, 3, lane_seed).unwrap();
+        let p = PowerModel::new(&lib).estimate(&unit.netlist, &sim);
+        mean_dynamic += p.dynamic_mw;
+        // Clock + leakage are workload-independent: identical per lane.
+        assert!((p.clock_mw - packed.clock_mw).abs() < 1e-12);
+        assert!((p.leakage_mw - packed.leakage_mw).abs() < 1e-12);
+    }
+    mean_dynamic /= LANES as f64;
+    let rel = (packed.dynamic_mw - mean_dynamic).abs()
+        / mean_dynamic.max(1e-30);
+    assert!(
+        rel < 1e-9,
+        "packed dynamic power {} vs scalar mean {} (rel err {rel:e})",
+        packed.dynamic_mw,
+        mean_dynamic
+    );
+}
+
+#[test]
+fn fuzz_mul64_all_archs_boundary_biased() {
+    // 64-way differential fuzz (boundary-biased operands) across every
+    // architecture at the issue's width set.
+    for arch in Arch::ALL {
+        for n in [1usize, 4] {
+            let checked =
+                testkit::fuzz_mul64(arch, n, 1, 0xF00D + n as u64).unwrap();
+            assert_eq!(checked, 64 * n as u64, "{arch} x{n}");
+        }
+    }
+}

@@ -12,11 +12,8 @@ use nibblemul::util::Xoshiro256;
 fn optimization_preserves_every_architecture() {
     for arch in Arch::ALL {
         let raw_unit = VectorUnit::new_raw(arch, 4);
-        let opt_unit = VectorUnit {
-            arch,
-            n: 4,
-            netlist: optimize(&raw_unit.netlist),
-        };
+        let opt_unit =
+            VectorUnit::from_netlist(arch, 4, optimize(&raw_unit.netlist));
         assert!(
             opt_unit.netlist.n_cells() <= raw_unit.netlist.n_cells(),
             "{arch}: optimization must not grow the netlist"
