@@ -6,6 +6,7 @@
 //!
 //!     cargo run --release --example design_space
 
+use nibblemul::design::DesignStore;
 use nibblemul::fabric::evaluate_arch;
 use nibblemul::multipliers::Arch;
 use nibblemul::tech::{TechLibrary, CLOCK_HZ};
@@ -59,6 +60,10 @@ fn main() -> anyhow::Result<()> {
          throughput).\nThe nibble design should hold the low-area/low-energy \
          end, the combinational family the high-throughput end — the \
          paper's latency-hardware tradeoff (§I)."
+    );
+    println!(
+        "({} compiled designs built once and cached in the shared store)",
+        DesignStore::global().builds()
     );
     Ok(())
 }

@@ -1,4 +1,4 @@
-//! END-TO-END driver (DESIGN.md experiment E2E): serve INT8 MLP inference
+//! END-TO-END driver: serve INT8 MLP inference
 //! through the full three-layer stack and account the hardware cost on
 //! the simulated nibble fabric.
 //!

@@ -1,23 +1,26 @@
-//! Quickstart: build the precompute-reuse nibble multiplier, run a
-//! vector × broadcast-scalar multiply cycle-accurately, and print the
-//! post-synthesis summary.
+//! Quickstart: fetch the precompute-reuse nibble multiplier from the
+//! shared compiled-design store, run a vector × broadcast-scalar multiply
+//! cycle-accurately, and print the post-synthesis summary.
 //!
 //!     cargo run --release --example quickstart
 
+use nibblemul::design::DesignStore;
 use nibblemul::fabric::VectorUnit;
 use nibblemul::multipliers::Arch;
-use nibblemul::synth::synthesize;
-use nibblemul::tech::TechLibrary;
 
 fn main() -> anyhow::Result<()> {
-    // 1. Generate the 8-operand nibble vector unit (paper §II.B) and
-    //    synthesize it against the 28 nm-class library.
-    let lib = TechLibrary::hpc28();
-    let report = synthesize(&Arch::Nibble.build(8), &lib)?;
+    // 1. Fetch the 8-operand nibble vector unit (paper §II.B) from the
+    //    process-wide design store: built + synthesized + compiled once,
+    //    then shared by every consumer (sweep, serving, benches — and
+    //    both uses below).
+    let design = DesignStore::global().get(Arch::Nibble, 8)?;
+    let report = design.report.as_ref().expect("synthesized artifact");
     println!("{report}");
 
-    // 2. Multiply a vector by a broadcast scalar, cycle-accurately.
-    let unit = VectorUnit::new(Arch::Nibble, 8);
+    // 2. Multiply a vector by a broadcast scalar, cycle-accurately. The
+    //    unit reuses the artifact we just printed — no rebuild.
+    let unit = VectorUnit::try_new(Arch::Nibble, 8)?;
+    assert!(std::sync::Arc::ptr_eq(unit.design(), &design));
     let mut sim = unit.simulator()?;
     let a = [3u16, 14, 15, 92, 65, 35, 89, 255];
     let b = 173u16;

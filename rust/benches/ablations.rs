@@ -1,4 +1,4 @@
-//! Bench: design-choice ablations called out in DESIGN.md §5b —
+//! Bench: design-choice ablations of the nibble multiplier —
 //! adds-only vs CSD precompute logic, sequential vs unrolled nibble
 //! datapath, and classical array vs Wallace vs LUT-array. Reports area,
 //! critical path and energy/op for each variant.

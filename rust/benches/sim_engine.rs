@@ -6,7 +6,6 @@
 use nibblemul::bench::Bencher;
 use nibblemul::fabric::VectorUnit;
 use nibblemul::multipliers::Arch;
-use nibblemul::sim::Simulator;
 use nibblemul::util::Xoshiro256;
 
 fn main() {
@@ -18,8 +17,8 @@ fn main() {
         (Arch::Nibble, 16),
     ] {
         let unit = VectorUnit::new(arch, n);
-        let cells = unit.netlist.n_cells() as f64;
-        let mut sim = Simulator::new(&unit.netlist).unwrap();
+        let cells = unit.netlist().n_cells() as f64;
+        let mut sim = unit.simulator().unwrap();
         let mut rng = Xoshiro256::new(5);
         const CYCLES: u64 = 100;
         bencher.bench(
@@ -41,8 +40,8 @@ fn main() {
     }
     // Pure settle throughput on the biggest combinational cloud.
     let unit = VectorUnit::new(Arch::LutArray, 16);
-    let cells = unit.netlist.n_cells() as f64;
-    let mut sim = Simulator::new(&unit.netlist).unwrap();
+    let cells = unit.netlist().n_cells() as f64;
+    let mut sim = unit.simulator().unwrap();
     let mut rng = Xoshiro256::new(6);
     bencher.bench(
         &format!("sim/settle_only/lut-array x16 ({cells} cells)"),

@@ -74,12 +74,15 @@ impl Backend for ExactBackend {
 
 /// Gate-level simulated fabric backend with cycle/energy accounting.
 ///
-/// The vector unit is interned for the process lifetime (`Box::leak`) so
-/// the simulator's borrow is `'static` — backends are long-lived worker
-/// state, so this is a bounded, intentional allocation, not a drip leak.
+/// The vector unit drives the shared `design::DesignStore` artifact for
+/// `(arch, n)`: workers created for the same design reuse one optimized
+/// netlist and compiled program instead of each building their own (the
+/// seed leaked a private `VectorUnit` per worker for `'static` borrows —
+/// the owned-`Arc` simulator makes both the leak and the rebuild
+/// unnecessary). Out-of-range widths surface here as errors.
 pub struct SimBackend {
-    unit: &'static VectorUnit,
-    sim: Simulator<'static>,
+    unit: VectorUnit,
+    sim: Simulator,
     lib: TechLibrary,
     cycles: u64,
 }
@@ -87,9 +90,8 @@ pub struct SimBackend {
 impl SimBackend {
     /// Build a backend around `arch` at fabric width `n`.
     pub fn new(arch: Arch, n: usize) -> Result<Self> {
-        let unit: &'static VectorUnit =
-            Box::leak(Box::new(VectorUnit::new(arch, n)));
-        let sim = Simulator::new(&unit.netlist)?;
+        let unit = VectorUnit::try_new(arch, n)?;
+        let sim = unit.simulator()?;
         Ok(Self {
             unit,
             sim,
@@ -123,7 +125,7 @@ impl Backend for SimBackend {
     fn energy_fj(&self) -> f64 {
         // Total energy = average power x simulated time.
         let p = PowerModel::new(&self.lib)
-            .estimate(&self.unit.netlist, &self.sim);
+            .estimate(self.unit.netlist(), &self.sim);
         let t_s = self.sim.cycles() as f64 / crate::tech::CLOCK_HZ;
         p.total_mw() * 1e-3 * t_s * 1e15
     }
@@ -138,17 +140,17 @@ impl Backend for SimBackend {
 /// costs one op latency, not `k`), which is the serving-throughput story;
 /// energy integrates switching across every driven lane.
 pub struct Sim64Backend {
-    unit: &'static VectorUnit,
-    sim: Simulator64<'static>,
+    unit: VectorUnit,
+    sim: Simulator64,
     lib: TechLibrary,
     cycles: u64,
 }
 
 impl Sim64Backend {
-    /// Build a backend around `arch` at fabric width `n`.
+    /// Build a backend around `arch` at fabric width `n` (sharing the
+    /// process-wide compiled artifact, like [`SimBackend::new`]).
     pub fn new(arch: Arch, n: usize) -> Result<Self> {
-        let unit: &'static VectorUnit =
-            Box::leak(Box::new(VectorUnit::new(arch, n)));
+        let unit = VectorUnit::try_new(arch, n)?;
         let sim = unit.simulator64()?;
         Ok(Self {
             unit,
@@ -214,7 +216,7 @@ impl Backend for Sim64Backend {
         // with the fabric-cycle accounting of `cycles()` — that's where
         // batching wins: 64 batches share one fabric's static power.
         let p = PowerModel::new(&self.lib)
-            .estimate64(&self.unit.netlist, &self.sim);
+            .estimate64(self.unit.netlist(), &self.sim);
         let lane_t = self.sim.lane_cycles() as f64 / crate::tech::CLOCK_HZ;
         let wall_t = self.sim.cycles() as f64 / crate::tech::CLOCK_HZ;
         (p.dynamic_mw * lane_t + (p.clock_mw + p.leakage_mw) * wall_t)
@@ -291,6 +293,22 @@ mod tests {
             .map(|i| LaneTag { job: 0, offset: i })
             .collect();
         Batch { a, b, lanes }
+    }
+
+    #[test]
+    fn backends_share_one_compiled_artifact() {
+        let b1 = SimBackend::new(Arch::Nibble, 4).unwrap();
+        let b2 = Sim64Backend::new(Arch::Nibble, 4).unwrap();
+        assert!(
+            std::sync::Arc::ptr_eq(b1.unit.design(), b2.unit.design()),
+            "scalar and packed workers drive the same artifact"
+        );
+    }
+
+    #[test]
+    fn bad_width_is_an_error_not_a_crash() {
+        assert!(SimBackend::new(Arch::Nibble, 0).is_err());
+        assert!(Sim64Backend::new(Arch::Nibble, 100).is_err());
     }
 
     #[test]

@@ -22,5 +22,5 @@ mod service;
 pub use backend::{Backend, ExactBackend, PjrtBackend, Sim64Backend, SimBackend};
 pub use batcher::{Batch, Batcher, BatcherConfig, LaneTag};
 pub use metrics::{LatencyHistogram, Metrics, MetricsSnapshot};
-pub use pool::WorkerPool;
+pub use pool::{Pool, PoolDone, PoolWorker, WorkerPool};
 pub use service::{Coordinator, CoordinatorConfig, JobResult};

@@ -1,9 +1,22 @@
-//! Worker pool substrate: fixed threads, bounded work queue
-//! (backpressure), each worker owning one backend instance.
+//! Worker-pool substrate: fixed threads, bounded work queue
+//! (backpressure), each worker owning its per-thread state.
 //!
 //! Built on std threads + channels (the offline dependency set has no
 //! tokio); the queue is a `sync_channel` whose bound provides
 //! backpressure to submitters.
+//!
+//! The substrate is generic ([`Pool`] over a [`PoolWorker`]): items are
+//! sequence-tagged on submit, drained opportunistically into groups up to
+//! the worker's capacity, and returned per item with the worker id and
+//! group size. Two workers ride on it:
+//!
+//! * [`WorkerPool`] — the serving path: each worker owns a
+//!   `Box<dyn Backend>` and executes multiply [`Batch`]es (group-capable
+//!   backends like the 64-lane fabric get whole groups per pass);
+//! * `fabric::sweep`'s evaluation worker — the Fig. 3/4 sweep dispatches
+//!   its (architecture × width) design points over the same pool, one
+//!   `evaluate_arch` per item, reassembled deterministically by sequence
+//!   number.
 
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::{Arc, Mutex};
@@ -13,6 +26,164 @@ use anyhow::Result;
 
 use super::backend::Backend;
 use super::batcher::Batch;
+
+/// Per-thread worker state: drains sequence-tagged items from the shared
+/// queue and executes them in groups.
+pub trait PoolWorker: Send + 'static {
+    type Item: Send + 'static;
+    type Out: Send + 'static;
+
+    /// Largest group of queued items to drain into one
+    /// [`PoolWorker::run_group`] call.
+    fn group_cap(&self) -> usize {
+        1
+    }
+
+    /// Execute a group; must return exactly one output per item.
+    fn run_group(&mut self, items: &[Self::Item]) -> Vec<Self::Out>;
+}
+
+/// One completed item, with its submission sequence number (for
+/// deterministic reassembly), the item itself (ownership returned), the
+/// executing worker, and — on the first item of each executed group —
+/// the group size (for pass/grouping metrics).
+pub struct PoolDone<T, R> {
+    pub seq: u64,
+    pub item: T,
+    pub out: R,
+    pub worker: usize,
+    pub group: Option<usize>,
+}
+
+/// Internal result-channel message: a completed item, or a worker-death
+/// notice (panic inside `run_group`, or a broken output contract). The
+/// notice is what keeps [`Pool::recv`] from blocking forever on results
+/// a dead worker will never produce.
+enum Delivery<T, R> {
+    Done(PoolDone<T, R>),
+    Died { worker: usize, seq: u64 },
+}
+
+/// Fixed-size pool of state-owning workers over a bounded queue.
+pub struct Pool<W: PoolWorker> {
+    tx: Option<SyncSender<(u64, W::Item)>>,
+    rx_done: Receiver<Delivery<W::Item, W::Out>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl<W: PoolWorker> Pool<W> {
+    /// Spawn `workers.len()` threads sharing a bounded queue of
+    /// `queue_depth` items.
+    pub fn spawn(workers: Vec<W>, queue_depth: usize) -> Self {
+        let (tx, rx) = sync_channel::<(u64, W::Item)>(queue_depth);
+        let rx = Arc::new(Mutex::new(rx));
+        let (tx_done, rx_done) =
+            std::sync::mpsc::channel::<Delivery<W::Item, W::Out>>();
+        let mut handles = Vec::new();
+        for (worker_id, mut worker) in workers.into_iter().enumerate() {
+            let rx = Arc::clone(&rx);
+            let tx_done = tx_done.clone();
+            let group_cap = worker.group_cap().max(1);
+            handles.push(std::thread::spawn(move || loop {
+                // Pull one item (blocking), then opportunistically drain
+                // whatever else is already queued — up to the worker's
+                // group capacity — so group-capable workers (e.g. the
+                // 64-lane fabric backend) execute whole groups per pass.
+                let mut batch: Vec<(u64, W::Item)> = Vec::new();
+                {
+                    let guard = rx.lock().expect("queue lock");
+                    match guard.recv() {
+                        Ok(item) => batch.push(item),
+                        Err(_) => break,
+                    }
+                    while batch.len() < group_cap {
+                        match guard.try_recv() {
+                            Ok(item) => batch.push(item),
+                            Err(_) => break,
+                        }
+                    }
+                }
+                let group = batch.len();
+                let (seqs, items): (Vec<u64>, Vec<W::Item>) =
+                    batch.into_iter().unzip();
+                // A panicking worker must not strand its drained items:
+                // catch the unwind and deliver a death notice so recv()
+                // errors out instead of waiting forever (the worker's
+                // state may be inconsistent afterwards, so it exits).
+                let outs = std::panic::catch_unwind(
+                    std::panic::AssertUnwindSafe(|| {
+                        worker.run_group(&items)
+                    }),
+                );
+                let outs = match outs {
+                    Ok(outs) if outs.len() == items.len() => outs,
+                    _ => {
+                        let _ = tx_done.send(Delivery::Died {
+                            worker: worker_id,
+                            seq: seqs[0],
+                        });
+                        break;
+                    }
+                };
+                let mut disconnected = false;
+                for (k, ((seq, item), out)) in
+                    seqs.into_iter().zip(items).zip(outs).enumerate()
+                {
+                    let done = PoolDone {
+                        seq,
+                        item,
+                        out,
+                        worker: worker_id,
+                        group: (k == 0).then_some(group),
+                    };
+                    if tx_done.send(Delivery::Done(done)).is_err() {
+                        disconnected = true;
+                        break;
+                    }
+                }
+                if disconnected {
+                    break;
+                }
+            }));
+        }
+        Self {
+            tx: Some(tx),
+            rx_done,
+            handles,
+        }
+    }
+
+    /// Submit an item (blocks when the queue is full — backpressure).
+    pub fn submit(&self, seq: u64, item: W::Item) -> Result<()> {
+        self.tx
+            .as_ref()
+            .expect("pool not shut down")
+            .send((seq, item))
+            .map_err(|_| anyhow::anyhow!("worker pool closed"))
+    }
+
+    /// Blocking receive of the next completed item. Errors if a worker
+    /// died mid-group (its remaining results will never arrive) or if
+    /// every worker has exited.
+    pub fn recv(&self) -> Result<PoolDone<W::Item, W::Out>> {
+        match self.rx_done.recv() {
+            Ok(Delivery::Done(done)) => Ok(done),
+            Ok(Delivery::Died { worker, seq }) => Err(anyhow::anyhow!(
+                "pool worker {worker} panicked while executing item \
+                 seq {seq}; its group is lost"
+            )),
+            Err(_) => Err(anyhow::anyhow!("all workers exited")),
+        }
+    }
+
+    /// Close the queue and join all workers.
+    pub fn shutdown(mut self) {
+        self.tx.take(); // close the channel
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
 
 /// A batch paired with its sequence number (for result reassembly).
 pub struct WorkItem {
@@ -31,11 +202,38 @@ pub struct WorkDone {
     pub group: Option<usize>,
 }
 
-/// Fixed-size pool of backend-owning workers.
+/// [`PoolWorker`] adapter over a serving [`Backend`].
+struct BackendWorker(Box<dyn Backend>);
+
+impl PoolWorker for BackendWorker {
+    type Item = Batch;
+    type Out = Result<Vec<u32>>;
+
+    fn group_cap(&self) -> usize {
+        self.0.preferred_group()
+    }
+
+    fn run_group(&mut self, items: &[Batch]) -> Vec<Result<Vec<u32>>> {
+        let refs: Vec<&Batch> = items.iter().collect();
+        match self.0.execute_group(&refs) {
+            Ok(products) => products.into_iter().map(Ok).collect(),
+            Err(e) => {
+                // One error fails the whole group; the message is
+                // replicated per item (anyhow errors don't clone).
+                let msg = format!("{e:#}");
+                items
+                    .iter()
+                    .map(|_| Err(anyhow::anyhow!("{}", msg)))
+                    .collect()
+            }
+        }
+    }
+}
+
+/// Fixed-size pool of backend-owning workers (the serving path's view of
+/// [`Pool`], preserved API-compatibly).
 pub struct WorkerPool {
-    tx: Option<SyncSender<WorkItem>>,
-    rx_done: Receiver<WorkDone>,
-    handles: Vec<JoinHandle<()>>,
+    inner: Pool<BackendWorker>,
 }
 
 impl WorkerPool {
@@ -45,110 +243,34 @@ impl WorkerPool {
         backends: Vec<Box<dyn Backend>>,
         queue_depth: usize,
     ) -> Self {
-        let (tx, rx) = sync_channel::<WorkItem>(queue_depth);
-        let rx = Arc::new(Mutex::new(rx));
-        let (tx_done, rx_done) = std::sync::mpsc::channel::<WorkDone>();
-        let mut handles = Vec::new();
-        for (worker_id, mut backend) in backends.into_iter().enumerate() {
-            let rx = Arc::clone(&rx);
-            let tx_done = tx_done.clone();
-            let group_cap = backend.preferred_group().max(1);
-            handles.push(std::thread::spawn(move || loop {
-                // Pull one item (blocking), then opportunistically drain
-                // whatever else is already queued — up to the backend's
-                // group capacity — so group-capable backends (e.g. the
-                // 64-lane fabric) execute whole groups per pass.
-                let mut items: Vec<WorkItem> = Vec::new();
-                {
-                    let guard = rx.lock().expect("queue lock");
-                    match guard.recv() {
-                        Ok(item) => items.push(item),
-                        Err(_) => break,
-                    }
-                    while items.len() < group_cap {
-                        match guard.try_recv() {
-                            Ok(item) => items.push(item),
-                            Err(_) => break,
-                        }
-                    }
-                }
-                let batches: Vec<&Batch> =
-                    items.iter().map(|i| &i.batch).collect();
-                let group = items.len();
-                let mut disconnected = false;
-                let result = backend.execute_group(&batches);
-                drop(batches);
-                match result {
-                    Ok(products) => {
-                        for (k, (item, p)) in
-                            items.into_iter().zip(products).enumerate()
-                        {
-                            let done = WorkDone {
-                                seq: item.seq,
-                                batch: item.batch,
-                                products: Ok(p),
-                                worker: worker_id,
-                                group: (k == 0).then_some(group),
-                            };
-                            if tx_done.send(done).is_err() {
-                                disconnected = true;
-                                break;
-                            }
-                        }
-                    }
-                    Err(e) => {
-                        // One error fails the whole group; the message is
-                        // replicated per item (anyhow errors don't clone).
-                        let msg = format!("{e:#}");
-                        for (k, item) in items.into_iter().enumerate() {
-                            let done = WorkDone {
-                                seq: item.seq,
-                                batch: item.batch,
-                                products: Err(anyhow::anyhow!("{}", msg)),
-                                worker: worker_id,
-                                group: (k == 0).then_some(group),
-                            };
-                            if tx_done.send(done).is_err() {
-                                disconnected = true;
-                                break;
-                            }
-                        }
-                    }
-                }
-                if disconnected {
-                    break;
-                }
-            }));
-        }
         Self {
-            tx: Some(tx),
-            rx_done,
-            handles,
+            inner: Pool::spawn(
+                backends.into_iter().map(BackendWorker).collect(),
+                queue_depth,
+            ),
         }
     }
 
     /// Submit a batch (blocks when the queue is full — backpressure).
     pub fn submit(&self, item: WorkItem) -> Result<()> {
-        self.tx
-            .as_ref()
-            .expect("pool not shut down")
-            .send(item)
-            .map_err(|_| anyhow::anyhow!("worker pool closed"))
+        self.inner.submit(item.seq, item.batch)
     }
 
     /// Blocking receive of the next completed item.
     pub fn recv(&self) -> Result<WorkDone> {
-        self.rx_done
-            .recv()
-            .map_err(|_| anyhow::anyhow!("all workers exited"))
+        let done = self.inner.recv()?;
+        Ok(WorkDone {
+            seq: done.seq,
+            batch: done.item,
+            products: done.out,
+            worker: done.worker,
+            group: done.group,
+        })
     }
 
     /// Close the queue and join all workers.
-    pub fn shutdown(mut self) {
-        self.tx.take(); // close the channel
-        for h in self.handles.drain(..) {
-            let _ = h.join();
-        }
+    pub fn shutdown(self) {
+        self.inner.shutdown();
     }
 }
 
@@ -230,6 +352,77 @@ mod tests {
         }
         assert_eq!(items, 10);
         assert_eq!(group_sum, 10, "group sizes partition the items");
+        pool.shutdown();
+    }
+
+    /// The generic pool directly: per-worker owned state, no backends.
+    struct Doubler;
+
+    impl PoolWorker for Doubler {
+        type Item = u64;
+        type Out = u64;
+
+        fn run_group(&mut self, items: &[u64]) -> Vec<u64> {
+            items.iter().map(|&x| x * 2).collect()
+        }
+    }
+
+    /// Worker that panics on a poison item (panic-path probe).
+    struct Panicker;
+
+    impl PoolWorker for Panicker {
+        type Item = u64;
+        type Out = u64;
+
+        fn run_group(&mut self, items: &[u64]) -> Vec<u64> {
+            if items.contains(&3) {
+                panic!("poison item");
+            }
+            items.iter().map(|&x| x + 1).collect()
+        }
+    }
+
+    #[test]
+    fn worker_panic_surfaces_as_recv_error_not_a_hang() {
+        let pool = Pool::spawn(vec![Panicker], 16);
+        for seq in 0..4u64 {
+            pool.submit(seq, seq).unwrap();
+        }
+        let mut oks = 0;
+        let mut died = false;
+        for _ in 0..4 {
+            match pool.recv() {
+                Ok(done) => {
+                    oks += 1;
+                    assert_eq!(done.out, done.item + 1);
+                }
+                Err(e) => {
+                    died = true;
+                    assert!(format!("{e}").contains("panicked"), "{e}");
+                    break;
+                }
+            }
+        }
+        assert!(died, "the poison item must fail recv, not hang it");
+        assert!(oks <= 3);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn generic_pool_runs_plain_tasks() {
+        let pool = Pool::spawn(vec![Doubler, Doubler], 32);
+        for seq in 0..20u64 {
+            pool.submit(seq, seq + 100).unwrap();
+        }
+        let mut out = vec![0u64; 20];
+        for _ in 0..20 {
+            let done = pool.recv().unwrap();
+            out[done.seq as usize] = done.out;
+            assert_eq!(done.out, done.item * 2);
+        }
+        for (seq, &v) in out.iter().enumerate() {
+            assert_eq!(v, (seq as u64 + 100) * 2);
+        }
         pool.shutdown();
     }
 }

@@ -1,0 +1,262 @@
+//! Compiled-design artifacts: build → synthesize → compile **once**,
+//! share everywhere.
+//!
+//! Every consumer of a multiplier design — the Fig. 3/4 sweep, the
+//! serving coordinator's workers, the vector-unit harness, the benches,
+//! the CLI — needs the same three things for a given `(Arch, n)` point:
+//! the optimized netlist, its synthesis statistics, and a compiled
+//! simulator program. The seed recomputed all three at every use site
+//! (the dominant cost of a sweep point and of worker start-up). This
+//! module turns them into a content-keyed, process-wide artifact:
+//!
+//! ```text
+//!   DesignKey (Arch, n) ──▶ DesignStore ──▶ Arc<CompiledDesign>
+//!                                             ├─ optimized Netlist
+//!                                             ├─ Arc<sim::Program>
+//!                                             └─ SynthReport stats
+//! ```
+//!
+//! [`DesignStore::get`] builds each key **exactly once per process**
+//! (per-key [`OnceLock`], so concurrent requesters — e.g. pooled sweep
+//! workers — block on the one in-flight build instead of duplicating
+//! it) and hands out `Arc` clones. Out-of-range widths surface as
+//! `anyhow` errors rather than panics, which is what the CLI and
+//! coordinator paths report to the user.
+//!
+//! Reports are computed against the default 28 nm library
+//! ([`TechLibrary::hpc28`]) — the only library in the model; callers
+//! needing stats under a different library can run
+//! [`crate::synth::report_for`] on the cached netlist (cheap: a linear
+//! STA + area scan, no re-optimization).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use anyhow::{anyhow, Result};
+
+use crate::multipliers::Arch;
+use crate::netlist::Netlist;
+use crate::sim::{Program, Simulator, Simulator64};
+use crate::synth::{optimize_in_place, report_for, OptStats, SynthReport};
+use crate::tech::TechLibrary;
+
+/// Content key of a compiled design: architecture × vector width.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct DesignKey {
+    pub arch: Arch,
+    pub n: usize,
+}
+
+impl std::fmt::Display for DesignKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}x{}", self.arch, self.n)
+    }
+}
+
+/// The shared build artifact of one design point.
+pub struct CompiledDesign {
+    pub key: DesignKey,
+    /// The optimized netlist (what area/power/timing are measured on).
+    pub netlist: Netlist,
+    /// Pre-compiled simulator program — instantiate simulators with
+    /// [`CompiledDesign::simulator`] / [`CompiledDesign::simulator64`]
+    /// without recompiling.
+    pub program: Arc<Program>,
+    /// Synthesis statistics (default `hpc28` library). `None` for raw
+    /// (unoptimized) bundles, which exist only for waveform debugging.
+    pub report: Option<SynthReport>,
+}
+
+impl CompiledDesign {
+    /// Build + optimize + compile one design point (the store calls this
+    /// exactly once per key; call it directly only for uncached
+    /// experiments).
+    pub fn build(arch: Arch, n: usize, lib: &TechLibrary) -> Result<Self> {
+        let mut netlist = arch.try_build(n)?;
+        let stats: OptStats = optimize_in_place(&mut netlist);
+        let report = report_for(&netlist, lib, stats)?;
+        let program = Arc::new(Program::compile(&netlist)?);
+        Ok(Self {
+            key: DesignKey { arch, n },
+            netlist,
+            program,
+            report: Some(report),
+        })
+    }
+
+    /// Compile a design point **without** optimization (keeps internal
+    /// named signals — the Fig. 3 VCD path). Never cached.
+    pub fn raw(arch: Arch, n: usize) -> Result<Self> {
+        let netlist = arch.try_build(n)?;
+        Self::wrap(arch, n, netlist)
+    }
+
+    /// Wrap an externally produced netlist (it must carry the standard
+    /// vector-unit ports) as an uncached artifact.
+    pub fn wrap(arch: Arch, n: usize, netlist: Netlist) -> Result<Self> {
+        let program = Arc::new(Program::compile(&netlist)?);
+        Ok(Self {
+            key: DesignKey { arch, n },
+            netlist,
+            program,
+            report: None,
+        })
+    }
+
+    /// A scalar simulator instance over the shared compiled program.
+    pub fn simulator(&self) -> Simulator {
+        Simulator::from_program(Arc::clone(&self.program))
+    }
+
+    /// A 64-lane packed simulator instance over the shared program.
+    pub fn simulator64(&self) -> Simulator64 {
+        Simulator64::from_program(Arc::clone(&self.program))
+    }
+}
+
+/// Per-key build slot: a `OnceLock` so exactly one thread builds while
+/// concurrent requesters wait for the result.
+type Slot = Arc<OnceLock<std::result::Result<Arc<CompiledDesign>, String>>>;
+
+/// Process-wide cache of compiled designs.
+pub struct DesignStore {
+    slots: Mutex<HashMap<DesignKey, Slot>>,
+    lib: TechLibrary,
+    builds: AtomicU64,
+}
+
+impl DesignStore {
+    /// An empty store over the default library. Prefer
+    /// [`DesignStore::global`] so all subsystems share one cache.
+    pub fn new() -> Self {
+        Self::with_library(TechLibrary::hpc28())
+    }
+
+    /// An empty store whose reports use `lib`.
+    pub fn with_library(lib: TechLibrary) -> Self {
+        Self {
+            slots: Mutex::new(HashMap::new()),
+            lib,
+            builds: AtomicU64::new(0),
+        }
+    }
+
+    /// The process-wide store shared by sweep, harness, coordinator,
+    /// bench and CLI.
+    pub fn global() -> &'static DesignStore {
+        static GLOBAL: OnceLock<DesignStore> = OnceLock::new();
+        GLOBAL.get_or_init(DesignStore::new)
+    }
+
+    /// Fetch the compiled artifact for `(arch, n)`, building it if this
+    /// is the first request. Width validation errors (outside `1..=64`)
+    /// are reported here as `anyhow` errors.
+    pub fn get(&self, arch: Arch, n: usize) -> Result<Arc<CompiledDesign>> {
+        let key = DesignKey { arch, n };
+        let slot: Slot = {
+            let mut slots = self.slots.lock().expect("design store lock");
+            Arc::clone(slots.entry(key).or_default())
+        };
+        // Build outside the map lock: distinct keys build in parallel
+        // (the pooled sweep relies on this); same-key requesters block on
+        // the OnceLock until the single build completes.
+        let result = slot.get_or_init(|| {
+            self.builds.fetch_add(1, Ordering::Relaxed);
+            CompiledDesign::build(arch, n, &self.lib)
+                .map(Arc::new)
+                .map_err(|e| format!("{e:#}"))
+        });
+        match result {
+            Ok(design) => Ok(Arc::clone(design)),
+            Err(msg) => Err(anyhow!("building design {key}: {msg}")),
+        }
+    }
+
+    /// Number of designs built so far (not merely requested) — the
+    /// build-exactly-once acceptance probe.
+    pub fn builds(&self) -> u64 {
+        self.builds.load(Ordering::Relaxed)
+    }
+
+    /// Number of cached (or in-flight) design keys.
+    pub fn len(&self) -> usize {
+        self.slots.lock().expect("design store lock").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Default for DesignStore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn store_builds_each_key_exactly_once() {
+        let store = DesignStore::new();
+        let d1 = store.get(Arch::Nibble, 4).unwrap();
+        let d2 = store.get(Arch::Nibble, 4).unwrap();
+        assert!(Arc::ptr_eq(&d1, &d2), "same Arc, not a rebuild");
+        assert_eq!(store.builds(), 1);
+        let d3 = store.get(Arch::Nibble, 8).unwrap();
+        assert!(!Arc::ptr_eq(&d1, &d3));
+        assert_eq!(store.builds(), 2);
+        assert_eq!(store.len(), 2);
+    }
+
+    #[test]
+    fn concurrent_gets_share_one_build() {
+        let store = Arc::new(DesignStore::new());
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let store = Arc::clone(&store);
+            handles.push(std::thread::spawn(move || {
+                store.get(Arch::ShiftAdd, 4).unwrap()
+            }));
+        }
+        let designs: Vec<_> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(store.builds(), 1, "one build under contention");
+        for d in &designs[1..] {
+            assert!(Arc::ptr_eq(&designs[0], d));
+        }
+    }
+
+    #[test]
+    fn out_of_range_width_is_an_error_not_a_panic() {
+        let store = DesignStore::new();
+        for bad in [0usize, 65, 1000] {
+            let err = store.get(Arch::Nibble, bad).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(
+                msg.contains("out of supported range"),
+                "width {bad}: {msg}"
+            );
+        }
+        assert_eq!(store.builds(), 3, "failed builds are still attempts");
+        // The error is cached too: no repeated build work.
+        let _ = store.get(Arch::Nibble, 0).unwrap_err();
+        assert_eq!(store.builds(), 3);
+    }
+
+    #[test]
+    fn compiled_design_bundle_is_complete() {
+        let d = DesignStore::new().get(Arch::Nibble, 4).unwrap();
+        let rep = d.report.as_ref().expect("store designs carry stats");
+        assert_eq!(rep.n_cells_post, d.netlist.n_cells());
+        assert!(rep.rewrites > 0, "generators emit foldable logic");
+        assert_eq!(d.program.n_nets(), d.netlist.n_nets);
+        // Instantiate-many: two sims over the same program.
+        let s1 = d.simulator();
+        let _s2 = d.simulator64();
+        assert!(Arc::ptr_eq(s1.program(), &d.program));
+    }
+}

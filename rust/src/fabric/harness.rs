@@ -1,23 +1,29 @@
 //! Drive a vector unit through multiply operations, cycle-accurately.
 //!
-//! Two drive paths share the port contract of
-//! [`crate::multipliers::VECTOR_PORTS`]:
+//! A [`VectorUnit`] is a thin driver over a shared
+//! [`crate::design::CompiledDesign`] artifact: construction fetches the
+//! optimized-netlist + compiled-program bundle from the process-wide
+//! [`DesignStore`] (built once per `(Arch, n)`, `Arc`-shared with the
+//! sweep, the coordinator workers and the benches) and resolves the port
+//! contract of [`crate::multipliers::VECTOR_PORTS`] once ([`UnitIo`]) so
+//! the hot loops never do string-keyed lookups.
+//!
+//! Two drive paths share that contract:
 //!
 //! * [`VectorUnit::run_op`] / [`VectorUnit::run_stream`] — scalar, one
 //!   vector op per settle (debugging, VCD, unit tests);
 //! * [`VectorUnit::run_op64`] / [`VectorUnit::run_stream64`] — packed, 64
 //!   independent vector ops per settle on a [`Simulator64`] (the
 //!   Monte-Carlo power stimulus and batched serving hot path).
-//!
-//! Port nets are resolved once at construction ([`UnitIo`]) so the hot
-//! loops never do string-keyed port lookups.
+
+use std::sync::Arc;
 
 use anyhow::{ensure, Result};
 
+use crate::design::{CompiledDesign, DesignStore};
 use crate::multipliers::Arch;
 use crate::netlist::{NetId, Netlist};
 use crate::sim::{lane_seeds, Simulator, Simulator64, LANES};
-use crate::synth::optimize;
 use crate::util::Xoshiro256;
 
 /// Port nets of a vector unit, resolved once (no per-op string lookups).
@@ -50,11 +56,12 @@ impl UnitIo {
     }
 }
 
-/// A built (and by default synthesis-optimized) vector unit.
+/// A driver over a (by default shared, synthesis-optimized) compiled
+/// vector-unit design.
 pub struct VectorUnit {
     pub arch: Arch,
     pub n: usize,
-    pub netlist: Netlist,
+    design: Arc<CompiledDesign>,
     io: UnitIo,
 }
 
@@ -78,7 +85,7 @@ pub struct OpResult64 {
 }
 
 /// Aggregate statistics of a driven operation stream.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct StreamStats {
     pub ops: u64,
     pub elements: u64,
@@ -87,37 +94,68 @@ pub struct StreamStats {
 }
 
 impl VectorUnit {
-    /// Build + optimize the unit (what area/power are measured on).
+    /// Fetch (or build-once) the shared optimized artifact for
+    /// `(arch, n)` from the global [`DesignStore`]. Errors on widths
+    /// outside `1..=64` — the CLI/coordinator-facing constructor.
+    pub fn try_new(arch: Arch, n: usize) -> Result<Self> {
+        Ok(Self::from_design(DesignStore::global().get(arch, n)?))
+    }
+
+    /// [`VectorUnit::try_new`], panicking on invalid widths (test/bench
+    /// convenience).
     pub fn new(arch: Arch, n: usize) -> Self {
-        Self::from_netlist(arch, n, optimize(&arch.build(n)))
+        Self::try_new(arch, n).unwrap_or_else(|e| panic!("{e:#}"))
     }
 
     /// Build without optimization (keeps internal named signals for VCD).
+    /// Uncached — raw netlists exist only for waveform debugging.
     pub fn new_raw(arch: Arch, n: usize) -> Self {
-        Self::from_netlist(arch, n, arch.build(n))
+        let design = CompiledDesign::raw(arch, n)
+            .unwrap_or_else(|e| panic!("{e:#}"));
+        Self::from_design(Arc::new(design))
     }
 
-    /// Wrap an existing netlist (e.g. a synthesized one) as a vector
-    /// unit. The netlist must carry the standard vector-unit ports.
-    pub fn from_netlist(arch: Arch, n: usize, netlist: Netlist) -> Self {
-        let io = UnitIo::resolve(&netlist);
+    /// Wrap a shared compiled design as a drivable unit.
+    pub fn from_design(design: Arc<CompiledDesign>) -> Self {
+        let io = UnitIo::resolve(&design.netlist);
+        let (arch, n) = (design.key.arch, design.key.n);
         assert_eq!(io.a.len(), 8 * n, "'a' port width != 8N");
         assert_eq!(io.r.len(), 16 * n, "'r' port width != 16N");
         Self {
             arch,
             n,
-            netlist,
+            design,
             io,
         }
     }
 
-    pub fn simulator(&self) -> Result<Simulator<'_>> {
-        Simulator::new(&self.netlist)
+    /// Wrap an existing netlist (e.g. an experimental synthesis output)
+    /// as a vector unit. The netlist must carry the standard vector-unit
+    /// ports. Uncached.
+    pub fn from_netlist(arch: Arch, n: usize, netlist: Netlist) -> Self {
+        let design = CompiledDesign::wrap(arch, n, netlist)
+            .unwrap_or_else(|e| panic!("{e:#}"));
+        Self::from_design(Arc::new(design))
     }
 
-    /// A 64-lane packed simulator over the same netlist.
-    pub fn simulator64(&self) -> Result<Simulator64<'_>> {
-        Simulator64::new(&self.netlist)
+    /// The shared compiled artifact this unit drives.
+    pub fn design(&self) -> &Arc<CompiledDesign> {
+        &self.design
+    }
+
+    /// The (optimized) netlist of the underlying design.
+    pub fn netlist(&self) -> &Netlist {
+        &self.design.netlist
+    }
+
+    /// A scalar simulator instance over the shared compiled program.
+    pub fn simulator(&self) -> Result<Simulator> {
+        Ok(self.design.simulator())
+    }
+
+    /// A 64-lane packed simulator over the shared compiled program.
+    pub fn simulator64(&self) -> Result<Simulator64> {
+        Ok(self.design.simulator64())
     }
 
     /// Pack N 8-bit elements into the `a` port word.
@@ -129,7 +167,7 @@ impl VectorUnit {
     }
 
     /// Drive the operand ports (`a` element-major LSB-first, then `b`).
-    fn drive_operands(&self, sim: &mut Simulator<'_>, a: &[u16], b: u16) {
+    fn drive_operands(&self, sim: &mut Simulator, a: &[u16], b: u16) {
         for (i, &e) in a.iter().enumerate() {
             for bit in 0..8 {
                 sim.poke_net(self.io.a[8 * i + bit], (e >> bit) & 1 != 0);
@@ -143,7 +181,7 @@ impl VectorUnit {
     /// Execute one vector op; `a.len()` must equal `n`.
     pub fn run_op(
         &self,
-        sim: &mut Simulator<'_>,
+        sim: &mut Simulator,
         a: &[u16],
         b: u16,
     ) -> Result<OpResult> {
@@ -186,7 +224,7 @@ impl VectorUnit {
         })
     }
 
-    fn read_products(&self, sim: &Simulator<'_>) -> Vec<u32> {
+    fn read_products(&self, sim: &Simulator) -> Vec<u32> {
         (0..self.n)
             .map(|i| {
                 sim.peek_bits(&self.io.r[16 * i..16 * (i + 1)]) as u32
@@ -200,7 +238,7 @@ impl VectorUnit {
     /// 64 scalar runs bit-for-bit.
     fn drive_operands64(
         &self,
-        sim: &mut Simulator64<'_>,
+        sim: &mut Simulator64,
         a: &[Vec<u16>],
         b: &[u16],
     ) {
@@ -227,7 +265,7 @@ impl VectorUnit {
     /// each of length `n`.
     pub fn run_op64(
         &self,
-        sim: &mut Simulator64<'_>,
+        sim: &mut Simulator64,
         a: &[Vec<u16>],
         b: &[u16],
     ) -> Result<OpResult64> {
@@ -282,7 +320,7 @@ impl VectorUnit {
         })
     }
 
-    fn read_products64(&self, sim: &Simulator64<'_>) -> Vec<Vec<u32>> {
+    fn read_products64(&self, sim: &Simulator64) -> Vec<Vec<u32>> {
         (0..LANES)
             .map(|l| {
                 (0..self.n)
@@ -304,7 +342,7 @@ impl VectorUnit {
     /// estimation.
     pub fn run_stream(
         &self,
-        sim: &mut Simulator<'_>,
+        sim: &mut Simulator,
         ops: u64,
         seed: u64,
     ) -> Result<StreamStats> {
@@ -338,7 +376,7 @@ impl VectorUnit {
     /// streams.
     pub fn run_stream64(
         &self,
-        sim: &mut Simulator64<'_>,
+        sim: &mut Simulator64,
         ops: u64,
         seed: u64,
     ) -> Result<StreamStats> {
@@ -434,5 +472,21 @@ mod tests {
             let scalar = unit.run_op(&mut sim, &a[l], b[l]).unwrap();
             assert_eq!(packed.products[l], scalar.products, "lane {l}");
         }
+    }
+
+    #[test]
+    fn units_share_the_global_artifact() {
+        let u1 = VectorUnit::new(Arch::Booth, 4);
+        let u2 = VectorUnit::try_new(Arch::Booth, 4).unwrap();
+        assert!(
+            Arc::ptr_eq(u1.design(), u2.design()),
+            "both units drive the same compiled artifact"
+        );
+    }
+
+    #[test]
+    fn bad_width_surfaces_as_error() {
+        let err = VectorUnit::try_new(Arch::Nibble, 65).unwrap_err();
+        assert!(format!("{err:#}").contains("out of supported range"));
     }
 }

@@ -10,7 +10,8 @@
 //!   scalar and 64-lane word-parallel engines ([`sim`]) —,
 //!   a 28 nm-class technology model with STA and activity-based power
 //!   ([`tech`]), a synthesis-lite flow ([`synth`]), generators for all six
-//!   multiplier architectures ([`multipliers`]), the vector-unit
+//!   multiplier architectures ([`multipliers`]), a process-wide cache of
+//!   compiled design artifacts ([`design`]), the vector-unit
 //!   organizations ([`fabric`]), word-level golden models ([`model`]), a
 //!   serving coordinator ([`coordinator`]) and the PJRT runtime that
 //!   executes the AOT-lowered JAX artifacts ([`runtime`]).
@@ -18,12 +19,13 @@
 //!   Pallas kernel inside a quantized-MLP JAX graph, lowered once to HLO
 //!   text; Python never runs at serving time.
 //!
-//! See `DESIGN.md` for the system inventory and experiment index, and
+//! See `ROADMAP.md` for the system direction and open items, and
 //! `EXPERIMENTS.md` for paper-vs-measured results.
 
 pub mod bench;
 pub mod cli;
 pub mod coordinator;
+pub mod design;
 pub mod fabric;
 pub mod model;
 pub mod multipliers;

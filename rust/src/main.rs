@@ -8,9 +8,12 @@
 //!   fig4                Fig. 4(a)+(b) area/power sweep
 //!   serve               coordinator demo over a simulated fabric
 //!   mlp                 INT8 MLP inference (pjrt | sim | exact backends)
-//!   synth               synthesis report for one architecture
+//!   synth               synthesis report for one architecture (from the
+//!                       shared compiled-design store)
 //!   bench-sim           scalar vs 64-lane packed simulator throughput
 //!                       (machine-readable BENCH_sim.json)
+//!   bench-synth         in-place worklist vs clone-per-round optimizer +
+//!                       pooled vs sequential sweep (BENCH_synth.json)
 //!   report              everything above, in order (paper reproduction)
 //!   help
 
@@ -24,12 +27,13 @@ use nibblemul::coordinator::{
     Backend, Batch, Coordinator, CoordinatorConfig, LaneTag, Sim64Backend,
     SimBackend,
 };
-use nibblemul::fabric::VectorUnit;
+use nibblemul::design::DesignStore;
+use nibblemul::fabric::{sweep_paper_set, sweep_paper_set_seq, VectorUnit};
 use nibblemul::model::quant::QuantMlp;
 use nibblemul::multipliers::Arch;
 use nibblemul::report::{fig3_run, fig4_report, table2_report};
 use nibblemul::runtime::{ArtifactSet, Runtime};
-use nibblemul::synth::synthesize;
+use nibblemul::synth::{optimize, optimize_rounds};
 use nibblemul::tech::TechLibrary;
 use nibblemul::util::Stopwatch;
 use nibblemul::workload::broadcast_jobs;
@@ -57,6 +61,7 @@ fn run(args: &Args) -> Result<()> {
         "mlp" => cmd_mlp(args),
         "synth" => cmd_synth(args),
         "bench-sim" => cmd_bench_sim(args),
+        "bench-synth" => cmd_bench_synth(args),
         "report" => cmd_report(args),
         _ => {
             print!("{HELP}");
@@ -80,10 +85,17 @@ COMMANDS
   mlp     [--backend pjrt|sim|exact] [--arch nibble] [--limit 64]
                                           INT8 inference end-to-end
   synth   [--arch nibble] [--n 8]         synthesis report for one design
+                                          (served from the shared design store)
   bench-sim [--arch nibble] [--n 8] [--rounds 4] [--out BENCH_sim.json] [--check]
                                           scalar vs 64-lane packed simulator
                                           throughput; writes machine-readable
                                           JSON (--check: fail below 8x)
+  bench-synth [--arch nibble] [--n 16] [--widths 4,8] [--ops 4] [--out BENCH_synth.json] [--check]
+                                          in-place worklist optimizer vs the
+                                          clone-per-round pipeline, per-arch
+                                          synth wall time, and pooled vs
+                                          sequential sweep points/sec
+                                          (--check: fail if in-place is slower)
   report  [--ops 32]                      full paper reproduction
 ";
 
@@ -383,9 +395,109 @@ fn cmd_bench_sim(args: &Args) -> Result<()> {
 fn cmd_synth(args: &Args) -> Result<()> {
     let arch = parse_arch(args, Arch::Nibble)?;
     let n = args.get_usize("n", 8)?;
-    let lib = TechLibrary::hpc28();
-    let rep = synthesize(&arch.build(n), &lib)?;
+    // Shared artifact path: the same compiled design every other consumer
+    // (sweep, serve, bench) sees; bad --n values error instead of panic.
+    let design = DesignStore::global().get(arch, n)?;
+    let rep = design
+        .report
+        .as_ref()
+        .expect("store-built designs carry synthesis stats");
     println!("{rep}");
+    Ok(())
+}
+
+/// In-place worklist optimizer vs the legacy clone-per-round pipeline,
+/// per-architecture synthesis wall time, and sequential vs pooled sweep
+/// throughput — written as machine-readable JSON (BENCH_synth.json) so
+/// the perf trajectory is trackable (`--check` enforces that the
+/// in-place optimizer is at least as fast as the clone-per-round one).
+fn cmd_bench_synth(args: &Args) -> Result<()> {
+    let arch = parse_arch(args, Arch::Nibble)?;
+    let n = args.get_usize("n", 16)?;
+    let widths = args.get_usize_list("widths", &[4, 8])?;
+    let ops = args.get_u64("ops", 4)?;
+    let out = args.get_or("out", "BENCH_synth.json");
+    println!(
+        "bench-synth: {arch} x{n} optimizer comparison + sweep throughput"
+    );
+    let mut bencher = Bencher::quick();
+
+    // (1) Optimizer: clone-per-round vs in-place worklist on one design.
+    let raw = arch.try_build(n)?;
+    let clone_rounds = bencher
+        .bench(
+            &format!("synth/clone-rounds/{arch}x{n}"),
+            Some(1.0),
+            || {
+                let opt = optimize_rounds(&raw);
+                assert!(opt.n_cells() <= raw.n_cells());
+            },
+        )
+        .clone();
+    let inplace = bencher
+        .bench(&format!("synth/inplace/{arch}x{n}"), Some(1.0), || {
+            let opt = optimize(&raw);
+            assert!(opt.n_cells() <= raw.n_cells());
+        })
+        .clone();
+    let speedup_inplace = clone_rounds.mean_ns / inplace.mean_ns;
+    println!("in-place vs clone-per-round: {speedup_inplace:.2}x");
+
+    // (2) Per-arch synthesis wall time (fresh store per case so each
+    // build is really measured, not served from the global cache).
+    for a in Arch::PAPER_SET {
+        bencher.bench(&format!("synth/build/{a}x{n}"), Some(1.0), || {
+            let store = nibblemul::design::DesignStore::new();
+            let d = store.get(a, n).unwrap();
+            assert!(d.netlist.n_cells() > 0);
+        });
+    }
+
+    // (3) Sweep throughput: sequential vs pooled over the same design
+    // points. One warm-up sweep populates the shared design store so
+    // both timed paths measure evaluation (the steady-state cost), not
+    // first-build synthesis.
+    let lib = TechLibrary::hpc28();
+    let points = (widths.len() * Arch::PAPER_SET.len()) as f64;
+    sweep_paper_set_seq(&widths, &lib, 1, 7)?;
+    let sw = Stopwatch::start();
+    let (rows_seq, _) = sweep_paper_set_seq(&widths, &lib, ops, 7)?;
+    let t_seq = sw.elapsed_secs();
+    let sw = Stopwatch::start();
+    let (rows_pool, _) = sweep_paper_set(&widths, &lib, ops, 7)?;
+    let t_pool = sw.elapsed_secs();
+    anyhow::ensure!(
+        rows_pool == rows_seq,
+        "pooled sweep rows diverged from the sequential path"
+    );
+    let pts_seq = points / t_seq;
+    let pts_pool = points / t_pool;
+    let speedup_pool = pts_pool / pts_seq;
+    println!(
+        "sweep: {pts_seq:.2} points/s sequential, {pts_pool:.2} points/s \
+         pooled ({speedup_pool:.2}x, rows bit-identical)"
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"synth\",\n  \"workload\": \"{arch} x{n} \
+         optimize + paper sweep {widths:?} x{ops} ops\",\n  \
+         \"results\": {},  \
+         \"speedup_inplace_vs_clone\": {speedup_inplace:.3},\n  \
+         \"sweep_points_per_s_seq\": {pts_seq:.3},\n  \
+         \"sweep_points_per_s_pooled\": {pts_pool:.3},\n  \
+         \"speedup_pooled_vs_seq\": {speedup_pool:.3}\n}}\n",
+        bencher.json_report().trim_end()
+    );
+    std::fs::write(&out, json)?;
+    println!("wrote {out}");
+    if args.has("check") {
+        anyhow::ensure!(
+            speedup_inplace >= 1.0,
+            "in-place optimizer speedup {speedup_inplace:.2}x is below \
+             the 1.0x acceptance floor (must beat clone-per-round)"
+        );
+        println!("check passed: in-place optimizer >= clone-per-round");
+    }
     Ok(())
 }
 

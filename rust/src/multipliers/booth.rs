@@ -133,7 +133,7 @@ mod tests {
     use crate::sim::Simulator;
     use crate::util::Xoshiro256;
 
-    fn run_op(sim: &mut Simulator<'_>, a: u64, bb: u64) -> (u64, u64) {
+    fn run_op(sim: &mut Simulator, a: u64, bb: u64) -> (u64, u64) {
         sim.set_input("a", a).unwrap();
         sim.set_input("b", bb).unwrap();
         sim.set_input("start", 1).unwrap();

@@ -14,7 +14,8 @@
 //! Every generator emits an N-operand **vector unit** with the common port
 //! contract of [`VECTOR_PORTS`]; the baselines are replicated
 //! self-contained units while the nibble design shares one datapath across
-//! all elements — the paper's logic-reuse contribution (DESIGN.md §5).
+//! all elements — the paper's logic-reuse contribution (paper §II.B; the
+//! generator itself is documented in [`nibble`]).
 
 pub mod arith;
 pub mod array;
@@ -123,9 +124,31 @@ impl Arch {
         }
     }
 
-    /// Build the N-operand vector unit netlist.
+    /// Supported vector widths (inclusive); the packed simulator and the
+    /// port word layout cap a unit at 64 operands.
+    pub const MAX_WIDTH: usize = 64;
+
+    /// Build the N-operand vector unit netlist, or error on a width
+    /// outside `1..=64`. The CLI and coordinator paths go through this
+    /// (via `design::DesignStore`) so a bad `--width` is a reported
+    /// error, not a process abort.
+    pub fn try_build(self, n: usize) -> anyhow::Result<Netlist> {
+        anyhow::ensure!(
+            (1..=Self::MAX_WIDTH).contains(&n),
+            "{self}: vector width {n} out of supported range 1..={}",
+            Self::MAX_WIDTH
+        );
+        Ok(self.build_unchecked(n))
+    }
+
+    /// Build the N-operand vector unit netlist (panics on widths outside
+    /// `1..=64` — use [`Arch::try_build`] on user-facing paths).
     pub fn build(self, n: usize) -> Netlist {
-        assert!(n >= 1 && n <= 64, "vector width out of supported range");
+        self.try_build(n)
+            .unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    fn build_unchecked(self, n: usize) -> Netlist {
         match self {
             Arch::ShiftAdd => shift_add::build_vector(n),
             Arch::Booth => booth::build_vector(n),

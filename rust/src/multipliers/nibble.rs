@@ -287,7 +287,7 @@ mod tests {
     use crate::util::Xoshiro256;
 
     fn run_op(
-        sim: &mut Simulator<'_>,
+        sim: &mut Simulator,
         a: u64,
         bb: u64,
         max: u64,

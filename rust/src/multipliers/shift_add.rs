@@ -6,7 +6,7 @@
 //! self-contained (own FSM, counter, B register) — the "replicating
 //! multiplier units across parallel vector lanes" organization the paper's
 //! intro describes — and the vector unit chains N of them sequentially for
-//! the paper's 8N total latency (Table 2, DESIGN.md §5).
+//! the paper's 8N total latency (Table 2).
 
 use crate::netlist::{Builder, Bus, NetId};
 
@@ -118,7 +118,7 @@ mod tests {
 
     /// Drive one vector op and return (result word, cycles to done).
     pub(crate) fn run_vector_op(
-        sim: &mut Simulator<'_>,
+        sim: &mut Simulator,
         a_word: u64,
         b_val: u64,
         max_cycles: u64,

@@ -24,14 +24,16 @@ pub use cell::{BinKind, Cell, NetId, UnaryKind};
 pub use stats::{CellCounts, NetlistStats};
 
 /// A named port (input or output): an ordered, LSB-first group of nets.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Port {
     pub name: String,
     pub bits: Vec<NetId>,
 }
 
 /// A flat gate-level netlist (single module, single implicit clock).
-#[derive(Clone, Debug, Default)]
+/// Equality is structural (same cells, nets and ports in the same order)
+/// — what the synthesis fixpoint and idempotence checks compare.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct Netlist {
     pub name: String,
     /// Total number of nets allocated (NetIds are `0..n_nets`).

@@ -7,7 +7,7 @@ use anyhow::Result;
 
 use crate::fabric::VectorUnit;
 use crate::multipliers::Arch;
-use crate::sim::{Simulator, VcdWriter};
+use crate::sim::VcdWriter;
 
 /// Outcome of the Fig. 3 run.
 #[derive(Clone, Debug)]
@@ -30,9 +30,9 @@ pub fn fig3_run(a: &[u16; 8], b: u16) -> Result<Fig3Result> {
 
     // (a) nibble multiplier: step cycle by cycle, record r/done.
     let unit = VectorUnit::new_raw(Arch::Nibble, 8);
-    let mut sim = Simulator::new(&unit.netlist)?;
-    let mut vcd = VcdWriter::for_netlist(&unit.netlist);
-    let a_port = unit.netlist.input("a").expect("a port").clone();
+    let mut sim = unit.simulator()?;
+    let mut vcd = VcdWriter::for_netlist(unit.netlist());
+    let a_port = unit.netlist().input("a").expect("a port").clone();
     for (i, &e) in a.iter().enumerate() {
         for bit in 0..8 {
             sim.poke_net(a_port.bits[8 * i + bit], (e >> bit) & 1 != 0);
@@ -54,7 +54,7 @@ pub fn fig3_run(a: &[u16; 8], b: u16) -> Result<Fig3Result> {
         cycles += 1;
         vcd.sample(&sim);
         // Note which element results appeared this cycle.
-        let r_port = unit.netlist.output("r").expect("r port");
+        let r_port = unit.netlist().output("r").expect("r port");
         for i in 0..8 {
             let v =
                 sim.peek_bits(&r_port.bits[16 * i..16 * (i + 1)]) as u32;
@@ -88,9 +88,9 @@ pub fn fig3_run(a: &[u16; 8], b: u16) -> Result<Fig3Result> {
 
     // (b) LUT-based array multiplier: single combinational step.
     let unit_l = VectorUnit::new_raw(Arch::LutArray, 8);
-    let mut sim_l = Simulator::new(&unit_l.netlist)?;
-    let mut vcd_l = VcdWriter::for_netlist(&unit_l.netlist);
-    let a_port = unit_l.netlist.input("a").expect("a port").clone();
+    let mut sim_l = unit_l.simulator()?;
+    let mut vcd_l = VcdWriter::for_netlist(unit_l.netlist());
+    let a_port = unit_l.netlist().input("a").expect("a port").clone();
     vcd_l.sample(&sim_l);
     for (i, &e) in a.iter().enumerate() {
         for bit in 0..8 {
@@ -103,7 +103,7 @@ pub fn fig3_run(a: &[u16; 8], b: u16) -> Result<Fig3Result> {
     sim_l.step();
     vcd_l.sample(&sim_l);
     text.push_str("(b) LUT-based array multiplier, combinational:\n");
-    let r_port = unit_l.netlist.output("r").expect("r port");
+    let r_port = unit_l.netlist().output("r").expect("r port");
     for i in 0..8 {
         let v = sim_l.peek_bits(&r_port.bits[16 * i..16 * (i + 1)]) as u32;
         anyhow::ensure!(v == a[i] as u32 * b as u32, "lut element {i}");

@@ -2,7 +2,7 @@
 //!
 //! Interchange is HLO *text*, not serialized HloModuleProto: jax ≥ 0.5
 //! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
-//! parser reassigns ids (see /opt/xla-example/README.md and DESIGN.md).
+//! parser reassigns ids (see /opt/xla-example/README.md).
 
 #[cfg(feature = "pjrt")]
 use std::collections::HashMap;
@@ -161,7 +161,7 @@ impl Runtime {
     ///
     /// Weights are runtime PARAMETERS (fed from weights.nmd), not baked
     /// constants: multi-dim int32 constants in HLO text mis-parse in
-    /// xla_extension 0.5.1 (DESIGN.md §2). Parameter order matches
+    /// xla_extension 0.5.1. Parameter order matches
     /// aot.py::lower_mlp: x, then (w, bias) per layer.
     pub fn mlp_int8(
         &mut self,

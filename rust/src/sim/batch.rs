@@ -10,20 +10,20 @@
 //!
 //! Per-net activity is counted as `popcount(old ^ new)` on every write,
 //! so aggregate toggle counts are **exactly** equal to the sum of 64
-//! scalar [`super::Simulator`] runs fed the same per-lane stimulus (the
-//! engines share one compiled program — see `sim/ops.rs` — and the
-//! equivalence is asserted by `tests/sim64_equivalence.rs`). Power
-//! numbers derived from them are therefore bit-identical in aggregate,
-//! not approximations.
+//! scalar [`super::Simulator`] runs fed the same per-lane stimulus (both
+//! engines instantiate from one shared compiled [`Program`] — see
+//! `sim/ops.rs` — and the equivalence is asserted by
+//! `tests/sim64_equivalence.rs`). Power numbers derived from them are
+//! therefore bit-identical in aggregate, not approximations.
 
-use std::collections::HashMap;
+use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
 use crate::netlist::Netlist;
 use crate::util::SplitMix64;
 
-use super::ops::{self, DffOp, Op, PortHandle};
+use super::ops::{self, PortHandle, Program};
 
 /// Number of packed stimulus lanes (one per bit of the carrier word).
 pub const LANES: usize = 64;
@@ -49,53 +49,59 @@ fn bcast(v: bool) -> u64 {
     }
 }
 
-/// 64-lane cycle-accurate simulator over a borrowed netlist.
+/// 64-lane cycle-accurate simulator over a shared compiled [`Program`].
 ///
 /// The API mirrors [`super::Simulator`] with lane-aware accessors: values
 /// are `u64` lane masks, inputs are driven per lane (or broadcast), and
 /// toggle counters aggregate across lanes.
-pub struct Simulator64<'a> {
-    nl: &'a Netlist,
-    ops: Vec<Op>,
+pub struct Simulator64 {
+    prog: Arc<Program>,
     /// Lane mask per net: bit `l` = lane `l`'s value.
     values: Vec<u64>,
     /// Cumulative toggle count per net, summed over all 64 lanes.
     toggles: Vec<u64>,
-    dffs: Vec<DffOp>,
     next_q: Vec<u64>,
     /// Completed clock cycles (per lane — lanes step in lockstep).
     cycles: u64,
-    ports: HashMap<String, PortHandle>,
 }
 
-impl<'a> Simulator64<'a> {
-    /// Build a packed simulator; every lane starts from the same reset
-    /// state (constants driven, DFFs at init, combinational cloud
-    /// settled), exactly like 64 fresh scalar simulators.
-    pub fn new(nl: &'a Netlist) -> Result<Self> {
-        let compiled = ops::compile(nl)?;
-        let mut values = vec![0u64; nl.n_nets];
-        for &(net, v) in &compiled.consts {
+impl Simulator64 {
+    /// Compile `nl` and build a packed simulator over it. For repeated
+    /// instantiation of the same design, compile once and use
+    /// [`Simulator64::from_program`].
+    pub fn new(nl: &Netlist) -> Result<Self> {
+        Ok(Self::from_program(Arc::new(Program::compile(nl)?)))
+    }
+
+    /// Instantiate from a pre-compiled program; every lane starts from the
+    /// same reset state (constants driven, DFFs at init, combinational
+    /// cloud settled), exactly like 64 fresh scalar simulators.
+    pub fn from_program(prog: Arc<Program>) -> Self {
+        let mut values = vec![0u64; prog.n_nets];
+        for &(net, v) in &prog.consts {
             values[net as usize] = bcast(v);
         }
-        for dff in &compiled.dffs {
+        for dff in &prog.dffs {
             values[dff.q as usize] = bcast(dff.init);
         }
-        let next_q = vec![0u64; compiled.dffs.len()];
+        let next_q = vec![0u64; prog.dffs.len()];
+        let toggles = vec![0; prog.n_nets];
         let mut sim = Self {
-            nl,
-            ops: compiled.ops,
+            prog,
             values,
-            toggles: vec![0; nl.n_nets],
-            dffs: compiled.dffs,
+            toggles,
             next_q,
             cycles: 0,
-            ports: ops::port_map(nl),
         };
         sim.settle();
         // Initialisation is not workload activity (matches Simulator::new).
         sim.toggles.iter_mut().for_each(|t| *t = 0);
-        Ok(sim)
+        sim
+    }
+
+    /// The shared compiled program this simulator executes.
+    pub fn program(&self) -> &Arc<Program> {
+        &self.prog
     }
 
     /// Completed clock cycles per lane (lanes run in lockstep).
@@ -128,18 +134,18 @@ impl<'a> Simulator64<'a> {
 
     /// Resolve an input port to a reusable handle.
     pub fn input_handle(&self, name: &str) -> Result<PortHandle> {
-        ops::resolve_input(&self.ports, name)
+        ops::resolve_input(&self.prog.ports, name)
     }
 
     /// Resolve an output (or input) port handle.
     pub fn output_handle(&self, name: &str) -> Result<PortHandle> {
-        ops::resolve_port(&self.ports, name)
+        ops::resolve_port(&self.prog.ports, name)
     }
 
     /// Drive an input bus with one integer value per lane (LSB-first bus,
     /// `vals.len()` must be [`LANES`]).
     pub fn set_input_lanes(&mut self, name: &str, vals: &[u64]) -> Result<()> {
-        let h = ops::resolve_input(&self.ports, name)?;
+        let h = ops::resolve_input(&self.prog.ports, name)?;
         self.set_input_lanes_h(h, vals);
         Ok(())
     }
@@ -148,23 +154,24 @@ impl<'a> Simulator64<'a> {
     pub fn set_input_lanes_h(&mut self, h: PortHandle, vals: &[u64]) {
         debug_assert!(h.input, "set_input_lanes_h needs an input handle");
         assert_eq!(vals.len(), LANES, "one value per lane");
-        let nl = self.nl;
         debug_assert!(
-            nl.inputs[h.index].bits.len() <= 64,
+            self.prog.inputs[h.index].bits.len() <= 64,
             "set_input_lanes on a wide port: drive nets via poke_net_mask"
         );
-        for (i, b) in nl.inputs[h.index].bits.iter().enumerate() {
+        let n_bits = self.prog.inputs[h.index].bits.len();
+        for i in 0..n_bits {
+            let idx = self.prog.inputs[h.index].bits[i].idx();
             let mut plane = 0u64;
             for (l, &v) in vals.iter().enumerate() {
                 plane |= ((v >> i) & 1) << l;
             }
-            self.write(b.idx(), plane);
+            self.write(idx, plane);
         }
     }
 
     /// Drive an input bus with the same integer value on every lane.
     pub fn set_input_broadcast(&mut self, name: &str, value: u64) -> Result<()> {
-        let h = ops::resolve_input(&self.ports, name)?;
+        let h = ops::resolve_input(&self.prog.ports, name)?;
         self.set_input_broadcast_h(h, value);
         Ok(())
     }
@@ -172,20 +179,21 @@ impl<'a> Simulator64<'a> {
     /// Handle-based variant of [`Simulator64::set_input_broadcast`].
     pub fn set_input_broadcast_h(&mut self, h: PortHandle, value: u64) {
         debug_assert!(h.input, "set_input_broadcast_h needs an input handle");
-        let nl = self.nl;
-        for (i, b) in nl.inputs[h.index].bits.iter().enumerate() {
-            self.write(b.idx(), bcast((value >> i) & 1 != 0));
+        let n_bits = self.prog.inputs[h.index].bits.len();
+        for i in 0..n_bits {
+            let idx = self.prog.inputs[h.index].bits[i].idx();
+            self.write(idx, bcast((value >> i) & 1 != 0));
         }
     }
 
     /// Read one lane of an output bus as an integer (bus ≤ 64 bits, as in
     /// [`super::Simulator::get_output`]).
     pub fn get_output_lane(&self, name: &str, lane: usize) -> Result<u64> {
-        let h = ops::resolve_port(&self.ports, name)?;
+        let h = ops::resolve_port(&self.prog.ports, name)?;
         let port = if h.input {
-            &self.nl.inputs[h.index]
+            &self.prog.inputs[h.index]
         } else {
-            &self.nl.outputs[h.index]
+            &self.prog.outputs[h.index]
         };
         if port.bits.len() > 64 {
             return Err(anyhow!(
@@ -225,8 +233,8 @@ impl<'a> Simulator64<'a> {
     /// Propagate combinational logic to a fixed point — one levelized
     /// pass over the compiled program, evaluating all 64 lanes per op.
     pub fn settle(&mut self) {
-        for i in 0..self.ops.len() {
-            let op = self.ops[i];
+        for i in 0..self.prog.ops.len() {
+            let op = self.prog.ops[i];
             let av = self.values[op.a as usize];
             match op.code {
                 0 => self.write(op.o1 as usize, av),
@@ -282,8 +290,8 @@ impl<'a> Simulator64<'a> {
     pub fn step(&mut self) {
         self.settle();
         // Sample all D inputs first (simultaneous edge semantics)...
-        for k in 0..self.dffs.len() {
-            let f = self.dffs[k];
+        for k in 0..self.prog.dffs.len() {
+            let f = self.prog.dffs[k];
             let cur = self.values[f.q as usize];
             let en = f.en.map_or(u64::MAX, |e| self.values[e as usize]);
             let mut next = (cur & !en) | (self.values[f.d as usize] & en);
@@ -293,8 +301,8 @@ impl<'a> Simulator64<'a> {
             self.next_q[k] = next;
         }
         // ...then commit.
-        for k in 0..self.dffs.len() {
-            let q = self.dffs[k].q as usize;
+        for k in 0..self.prog.dffs.len() {
+            let q = self.prog.dffs[k].q as usize;
             let v = self.next_q[k];
             self.write(q, v);
         }
@@ -371,7 +379,9 @@ mod tests {
     #[test]
     fn per_lane_toggles_sum_scalar_toggles() {
         let nl = xor_adder();
-        let mut packed = Simulator64::new(&nl).unwrap();
+        // Both engines share one compiled program (the design-store path).
+        let prog = Arc::new(Program::compile(&nl).unwrap());
+        let mut packed = Simulator64::from_program(Arc::clone(&prog));
         let seeds = lane_seeds(99);
         // Per-lane random stimulus, 5 cycles.
         let mut lane_inputs: Vec<Vec<(u64, u64)>> = Vec::new();
@@ -394,7 +404,7 @@ mod tests {
         }
         let mut summed = vec![0u64; nl.n_nets];
         for l in 0..LANES {
-            let mut scalar = Simulator::new(&nl).unwrap();
+            let mut scalar = Simulator::from_program(Arc::clone(&prog));
             for t in 0..5 {
                 scalar.set_input("x", lane_inputs[l][t].0).unwrap();
                 scalar.set_input("y", lane_inputs[l][t].1).unwrap();

@@ -9,63 +9,69 @@
 //!
 //! This is the one-vector-at-a-time engine; [`super::Simulator64`] runs 64
 //! independent stimulus vectors per pass over the same compiled program
-//! (see `sim/batch.rs`). Both compile the netlist through `sim/ops.rs`, so
-//! they execute bit-identical programs.
+//! (see `sim/ops.rs`). Both instantiate from a shared [`super::Program`]
+//! (`Arc`'d, compile-once / instantiate-many), so they execute
+//! bit-identical programs.
 
-use std::collections::HashMap;
+use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
 use crate::netlist::Netlist;
 
-use super::ops::{self, DffOp, Op, PortHandle};
+use super::ops::{self, PortHandle, Program};
 
-/// Cycle-accurate simulator over a borrowed netlist.
-pub struct Simulator<'a> {
-    nl: &'a Netlist,
-    /// Pre-compiled combinational program (topological order).
-    ops: Vec<Op>,
+/// Cycle-accurate simulator over a shared compiled [`Program`].
+pub struct Simulator {
+    /// Pre-compiled program (shared: `Arc`'d via `design::DesignStore`).
+    prog: Arc<Program>,
     /// Current value of every net.
     values: Vec<bool>,
     /// Cumulative toggle count per net.
     toggles: Vec<u64>,
-    /// Pre-compiled sequential cells.
-    dffs: Vec<DffOp>,
     /// Scratch for next-state computation.
     next_q: Vec<bool>,
     /// Completed clock cycles.
     cycles: u64,
-    /// Port name -> handle lookup (cold path; hot loops use handles).
-    ports: HashMap<String, PortHandle>,
 }
 
-impl<'a> Simulator<'a> {
-    /// Build a simulator; nets start at 0 / DFF init values, constants
-    /// driven, and the combinational cloud settled.
-    pub fn new(nl: &'a Netlist) -> Result<Self> {
-        let compiled = ops::compile(nl)?;
-        let mut values = vec![false; nl.n_nets];
-        for &(net, v) in &compiled.consts {
+impl Simulator {
+    /// Compile `nl` and build a simulator over it. For repeated
+    /// instantiation of the same design, compile once and use
+    /// [`Simulator::from_program`] (what `fabric::VectorUnit` does via the
+    /// design store).
+    pub fn new(nl: &Netlist) -> Result<Self> {
+        Ok(Self::from_program(Arc::new(Program::compile(nl)?)))
+    }
+
+    /// Instantiate from a pre-compiled program: nets start at 0 / DFF init
+    /// values, constants driven, and the combinational cloud settled.
+    pub fn from_program(prog: Arc<Program>) -> Self {
+        let mut values = vec![false; prog.n_nets];
+        for &(net, v) in &prog.consts {
             values[net as usize] = v;
         }
-        for dff in &compiled.dffs {
+        for dff in &prog.dffs {
             values[dff.q as usize] = dff.init;
         }
-        let next_q = vec![false; compiled.dffs.len()];
+        let next_q = vec![false; prog.dffs.len()];
+        let toggles = vec![0; prog.n_nets];
         let mut sim = Self {
-            nl,
-            ops: compiled.ops,
+            prog,
             values,
-            toggles: vec![0; nl.n_nets],
-            dffs: compiled.dffs,
+            toggles,
             next_q,
             cycles: 0,
-            ports: ops::port_map(nl),
         };
         sim.settle();
         // Reset toggle counts: initialisation is not workload activity.
         sim.toggles.iter_mut().for_each(|t| *t = 0);
-        Ok(sim)
+        sim
+    }
+
+    /// The shared compiled program this simulator executes.
+    pub fn program(&self) -> &Arc<Program> {
+        &self.prog
     }
 
     /// Number of completed clock cycles.
@@ -92,17 +98,17 @@ impl<'a> Simulator<'a> {
     /// Resolve an input port to a reusable handle (hot loops: resolve once,
     /// then call [`Simulator::set_input_h`]).
     pub fn input_handle(&self, name: &str) -> Result<PortHandle> {
-        ops::resolve_input(&self.ports, name)
+        ops::resolve_input(&self.prog.ports, name)
     }
 
     /// Resolve an output (or input — reads work on both) port handle.
     pub fn output_handle(&self, name: &str) -> Result<PortHandle> {
-        ops::resolve_port(&self.ports, name)
+        ops::resolve_port(&self.prog.ports, name)
     }
 
     /// Set a primary input bus to an integer value (LSB-first).
     pub fn set_input(&mut self, name: &str, value: u64) -> Result<()> {
-        let h = ops::resolve_input(&self.ports, name)?;
+        let h = ops::resolve_input(&self.prog.ports, name)?;
         self.set_input_h(h, value);
         Ok(())
     }
@@ -111,20 +117,21 @@ impl<'a> Simulator<'a> {
     /// no allocation.
     pub fn set_input_h(&mut self, h: PortHandle, value: u64) {
         debug_assert!(h.input, "set_input_h needs an input handle");
-        let nl = self.nl;
-        for (i, b) in nl.inputs[h.index].bits.iter().enumerate() {
-            self.write(b.idx(), (value >> i) & 1 != 0);
+        let n_bits = self.prog.inputs[h.index].bits.len();
+        for i in 0..n_bits {
+            let idx = self.prog.inputs[h.index].bits[i].idx();
+            self.write(idx, (value >> i) & 1 != 0);
         }
     }
 
     /// Read an output bus as an integer. Buses wider than 64 bits are an
     /// error — use [`Simulator::peek_bits_wide`] for those.
     pub fn get_output(&self, name: &str) -> Result<u64> {
-        let h = ops::resolve_port(&self.ports, name)?;
+        let h = ops::resolve_port(&self.prog.ports, name)?;
         let port = if h.input {
-            &self.nl.inputs[h.index]
+            &self.prog.inputs[h.index]
         } else {
-            &self.nl.outputs[h.index]
+            &self.prog.outputs[h.index]
         };
         if port.bits.len() > 64 {
             return Err(anyhow!(
@@ -140,9 +147,9 @@ impl<'a> Simulator<'a> {
     /// contract, checked in debug builds).
     pub fn get_output_h(&self, h: PortHandle) -> u64 {
         let port = if h.input {
-            &self.nl.inputs[h.index]
+            &self.prog.inputs[h.index]
         } else {
-            &self.nl.outputs[h.index]
+            &self.prog.outputs[h.index]
         };
         self.peek_bits(&port.bits)
     }
@@ -189,8 +196,8 @@ impl<'a> Simulator<'a> {
     pub fn settle(&mut self) {
         // Hot loop: flat pre-compiled ops, no enum matching or netlist
         // indirection (EXPERIMENTS.md §Perf).
-        for i in 0..self.ops.len() {
-            let op = self.ops[i];
+        for i in 0..self.prog.ops.len() {
+            let op = self.prog.ops[i];
             let av = self.values[op.a as usize];
             match op.code {
                 0 => self.write(op.o1 as usize, av),
@@ -251,8 +258,8 @@ impl<'a> Simulator<'a> {
     pub fn step(&mut self) {
         self.settle();
         // Sample all D inputs first (simultaneous edge semantics)...
-        for k in 0..self.dffs.len() {
-            let f = self.dffs[k];
+        for k in 0..self.prog.dffs.len() {
+            let f = self.prog.dffs[k];
             let cur = self.values[f.q as usize];
             let enabled = f.en.map_or(true, |e| self.values[e as usize]);
             let mut next = if enabled {
@@ -268,8 +275,8 @@ impl<'a> Simulator<'a> {
             self.next_q[k] = next;
         }
         // ...then commit.
-        for k in 0..self.dffs.len() {
-            let q = self.dffs[k].q as usize;
+        for k in 0..self.prog.dffs.len() {
+            let q = self.prog.dffs[k].q as usize;
             let v = self.next_q[k];
             self.write(q, v);
         }
@@ -399,5 +406,19 @@ mod tests {
         assert_eq!(limbs.len(), 2);
         assert_eq!(limbs[0], 1 << 3);
         assert_eq!(limbs[1], 1 << 6, "bit 70 lands at limb1 bit 6");
+    }
+
+    #[test]
+    fn shared_program_instantiates_many_independent_sims() {
+        let nl = counter4();
+        let prog = Arc::new(Program::compile(&nl).unwrap());
+        let mut s1 = Simulator::from_program(Arc::clone(&prog));
+        let mut s2 = Simulator::from_program(Arc::clone(&prog));
+        s1.run(5);
+        s2.run(9);
+        assert_eq!(s1.get_output("q").unwrap(), 5);
+        assert_eq!(s2.get_output("q").unwrap(), 9);
+        assert_eq!(prog.n_dffs(), 4);
+        assert_eq!(prog.n_nets(), nl.n_nets);
     }
 }

@@ -6,7 +6,15 @@
 //! activity-based power model in [`crate::tech::power`]) and can dump VCD
 //! waveforms for the Fig. 3 functional-verification reproduction.
 //!
-//! Two engines share one compiled program form (`sim/ops.rs`):
+//! The pipeline is compile-once / instantiate-many: a netlist is compiled
+//! once into a [`Program`] (flat op records in topological order + port
+//! tables, `sim/ops.rs`), and any number of simulator instances are
+//! stamped out from the shared `Arc<Program>`. The
+//! [`crate::design::DesignStore`] caches one program per `(Arch, n)` for
+//! the whole process, so the sweep, the serving coordinator, the harness
+//! and the benches all execute the same compiled artifact.
+//!
+//! Two engines share that program form:
 //!
 //! * [`Simulator`] — scalar, one stimulus vector at a time. Drives the
 //!   interactive paths (VCD waveforms, single-op debugging, unit tests).
@@ -31,6 +39,6 @@ mod vcd;
 
 pub use batch::{lane_seeds, Simulator64, LANES};
 pub use engine::Simulator;
-pub use ops::PortHandle;
+pub use ops::{PortHandle, Program};
 pub use testbench::{drive_and_settle, run_cycles};
 pub use vcd::VcdWriter;

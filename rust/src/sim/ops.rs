@@ -1,18 +1,22 @@
 //! Shared pre-compiled program representation for the simulation engines.
 //!
-//! Both the scalar [`super::Simulator`] and the 64-lane word-parallel
-//! [`super::Simulator64`] evaluate the same flat struct-of-operands form:
-//! the topological cell order is compiled once into [`Op`] records (no
-//! enum matching or netlist indirection in the hot loop — EXPERIMENTS.md
-//! §Perf), and the sequential cells into [`DffOp`] records. Keeping one
-//! compiler guarantees the two engines execute bit-identical programs,
-//! which the packed-vs-scalar equivalence tests rely on.
+//! A [`Program`] is the compile-once artifact of a netlist: the
+//! topological cell order flattened into [`Op`] records (no enum matching
+//! or netlist indirection in the hot loop — EXPERIMENTS.md §Perf), the
+//! sequential cells into [`DffOp`] records, plus the port tables needed to
+//! drive and observe the design. Both the scalar [`super::Simulator`] and
+//! the 64-lane word-parallel [`super::Simulator64`] instantiate from the
+//! same `Arc<Program>` — compile once, instantiate many (the
+//! `design::DesignStore` caches one program per `(Arch, n)` for the whole
+//! process). Keeping one compiler guarantees the two engines execute
+//! bit-identical programs, which the packed-vs-scalar equivalence tests
+//! rely on.
 
 use std::collections::HashMap;
 
 use anyhow::{anyhow, Result};
 
-use crate::netlist::{Cell, Netlist};
+use crate::netlist::{Cell, Netlist, Port};
 
 /// A pre-compiled combinational operation (hot-loop representation).
 ///
@@ -39,96 +43,131 @@ pub(crate) struct DffOp {
     pub init: bool,
 }
 
-/// The full compiled program of a netlist.
-pub(crate) struct Compiled {
+/// The full compiled program of a netlist: everything a simulator needs,
+/// detached from the `Netlist` it was compiled from, so one `Arc<Program>`
+/// can back any number of simulator instances without borrowing.
+pub struct Program {
     /// Combinational ops in topological order.
-    pub ops: Vec<Op>,
+    pub(crate) ops: Vec<Op>,
     /// Sequential cells, in netlist order.
-    pub dffs: Vec<DffOp>,
+    pub(crate) dffs: Vec<DffOp>,
     /// Constant-driven nets: (net index, value).
-    pub consts: Vec<(u32, bool)>,
+    pub(crate) consts: Vec<(u32, bool)>,
+    /// Net-state vector length.
+    pub(crate) n_nets: usize,
+    /// Primary input ports (name + LSB-first net ids).
+    pub(crate) inputs: Vec<Port>,
+    /// Primary output ports.
+    pub(crate) outputs: Vec<Port>,
+    /// Port name -> handle lookup (cold path; hot loops use handles).
+    pub(crate) ports: HashMap<String, PortHandle>,
 }
 
-/// Compile `nl` into the flat program form (errors on combinational
-/// cycles, via `topo_order`).
-pub(crate) fn compile(nl: &Netlist) -> Result<Compiled> {
-    let order = nl.topo_order()?;
-    let mut dffs = Vec::new();
-    let mut consts = Vec::new();
-    for cell in &nl.cells {
-        match *cell {
-            Cell::Const { value, out } => consts.push((out.0, value)),
-            Cell::Dff { d, en, clr, q, init } => dffs.push(DffOp {
-                d: d.0,
-                en: en.map(|n| n.0),
-                clr: clr.map(|n| n.0),
-                q: q.0,
-                init,
-            }),
-            _ => {}
-        }
-    }
-    let ops = order
-        .into_iter()
-        .map(|ci| {
-            let cell = &nl.cells[ci];
+impl Program {
+    /// Compile `nl` into the flat program form (errors on combinational
+    /// cycles, via `topo_order`).
+    pub fn compile(nl: &Netlist) -> Result<Self> {
+        let order = nl.topo_order()?;
+        let mut dffs = Vec::new();
+        let mut consts = Vec::new();
+        for cell in &nl.cells {
             match *cell {
-                Cell::Unary { kind, a, out } => Op {
-                    code: match kind {
-                        crate::netlist::UnaryKind::Buf => 0,
-                        crate::netlist::UnaryKind::Not => 1,
-                    },
-                    a: a.0,
-                    b: 0,
-                    c: 0,
-                    o1: out.0,
-                    o2: 0,
-                },
-                Cell::Binary { kind, a, b, out } => Op {
-                    code: 2 + kind as u8,
-                    a: a.0,
-                    b: b.0,
-                    c: 0,
-                    o1: out.0,
-                    o2: 0,
-                },
-                Cell::Mux2 { sel, a0, a1, out } => Op {
-                    code: 8,
-                    a: sel.0,
-                    b: a0.0,
-                    c: a1.0,
-                    o1: out.0,
-                    o2: 0,
-                },
-                Cell::HalfAdder { a, b, sum, carry } => Op {
-                    code: 9,
-                    a: a.0,
-                    b: b.0,
-                    c: 0,
-                    o1: sum.0,
-                    o2: carry.0,
-                },
-                Cell::FullAdder {
-                    a,
-                    b,
-                    c,
-                    sum,
-                    carry,
-                } => Op {
-                    code: 10,
-                    a: a.0,
-                    b: b.0,
-                    c: c.0,
-                    o1: sum.0,
-                    o2: carry.0,
-                },
-                Cell::Const { .. } | Cell::Dff { .. } => {
-                    unreachable!("not combinational")
-                }
+                Cell::Const { value, out } => consts.push((out.0, value)),
+                Cell::Dff { d, en, clr, q, init } => dffs.push(DffOp {
+                    d: d.0,
+                    en: en.map(|n| n.0),
+                    clr: clr.map(|n| n.0),
+                    q: q.0,
+                    init,
+                }),
+                _ => {}
             }
+        }
+        let ops = order
+            .into_iter()
+            .map(|ci| {
+                let cell = &nl.cells[ci];
+                match *cell {
+                    Cell::Unary { kind, a, out } => Op {
+                        code: match kind {
+                            crate::netlist::UnaryKind::Buf => 0,
+                            crate::netlist::UnaryKind::Not => 1,
+                        },
+                        a: a.0,
+                        b: 0,
+                        c: 0,
+                        o1: out.0,
+                        o2: 0,
+                    },
+                    Cell::Binary { kind, a, b, out } => Op {
+                        code: 2 + kind as u8,
+                        a: a.0,
+                        b: b.0,
+                        c: 0,
+                        o1: out.0,
+                        o2: 0,
+                    },
+                    Cell::Mux2 { sel, a0, a1, out } => Op {
+                        code: 8,
+                        a: sel.0,
+                        b: a0.0,
+                        c: a1.0,
+                        o1: out.0,
+                        o2: 0,
+                    },
+                    Cell::HalfAdder { a, b, sum, carry } => Op {
+                        code: 9,
+                        a: a.0,
+                        b: b.0,
+                        c: 0,
+                        o1: sum.0,
+                        o2: carry.0,
+                    },
+                    Cell::FullAdder {
+                        a,
+                        b,
+                        c,
+                        sum,
+                        carry,
+                    } => Op {
+                        code: 10,
+                        a: a.0,
+                        b: b.0,
+                        c: c.0,
+                        o1: sum.0,
+                        o2: carry.0,
+                    },
+                    Cell::Const { .. } | Cell::Dff { .. } => {
+                        unreachable!("not combinational")
+                    }
+                }
+            })
+            .collect();
+        Ok(Self {
+            ops,
+            dffs,
+            consts,
+            n_nets: nl.n_nets,
+            inputs: nl.inputs.clone(),
+            outputs: nl.outputs.clone(),
+            ports: port_map(nl),
         })
-        .collect();
-    Ok(Compiled { ops, dffs, consts })
+    }
+
+    /// Net-state vector length the program was compiled for.
+    pub fn n_nets(&self) -> usize {
+        self.n_nets
+    }
+
+    /// Number of combinational operations per settle pass.
+    pub fn n_ops(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// Number of sequential cells.
+    pub fn n_dffs(&self) -> usize {
+        self.dffs.len()
+    }
 }
 
 /// A resolved handle to a named port: look the name up once, then use the

@@ -7,7 +7,7 @@ use crate::sim::Simulator;
 
 /// Drive a set of inputs and settle the combinational cloud (no clock).
 pub fn drive_and_settle(
-    sim: &mut Simulator<'_>,
+    sim: &mut Simulator,
     inputs: &[(&str, u64)],
 ) -> Result<()> {
     for (name, v) in inputs {
@@ -19,7 +19,7 @@ pub fn drive_and_settle(
 
 /// Drive inputs then run `n` full clock cycles.
 pub fn run_cycles(
-    sim: &mut Simulator<'_>,
+    sim: &mut Simulator,
     inputs: &[(&str, u64)],
     n: u64,
 ) -> Result<()> {

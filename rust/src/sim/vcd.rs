@@ -61,7 +61,7 @@ impl VcdWriter {
 
     /// Record the current simulator state as one timestep (call once per
     /// cycle, after `step`).
-    pub fn sample(&mut self, sim: &Simulator<'_>) {
+    pub fn sample(&mut self, sim: &Simulator) {
         let mut changes = String::new();
         for (k, (_, bits, id)) in self.signals.iter().enumerate() {
             // Render MSB-first per bit (handles buses of any width).

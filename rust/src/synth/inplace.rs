@@ -1,0 +1,982 @@
+//! In-place, worklist-driven netlist optimization.
+//!
+//! One pass over a mutable netlist fuses the three clone-per-round passes
+//! of the legacy pipeline (constant propagation / boolean identities /
+//! structural-hash CSE) into a single fixpoint computation whose cost is
+//! proportional to the rewrites applied, not `rounds × cells`:
+//!
+//! * every net carries a resolution ([`Val`]): itself (root), an alias of
+//!   another net, or a known constant — a union-find with path
+//!   compression, so a net is *bound* (aliased or constant-folded) at
+//!   most once;
+//! * a worklist seeded in topological order visits cells; folding a cell
+//!   binds its outputs and wakes exactly the reader cells registered on
+//!   the changed nets (dirty-set propagation), so already-canonical logic
+//!   is never re-scanned;
+//! * structurally identical cells merge through a hash over *resolved*
+//!   operand roots; strength reductions (`FA`+const → `HA`/`XNOR`+`OR`,
+//!   `MUX` with constant arm → `AND`/`OR`/`INV`, …) rewrite the cell slot
+//!   in place instead of emitting into a fresh netlist.
+//!
+//! The fixpoint criterion is the explicit rewrite count — not cell-count
+//! equality, which can declare convergence while a rewrite changed
+//! structure without changing the number of cells (the legacy
+//! `optimize_rounds` bug). After the worklist drains, one final
+//! dead-cell elimination + net compaction ([`super::dce`]) produces the
+//! canonical output. Every rewrite is a boolean identity, mirroring the
+//! legacy `constprop_round` semantics exactly; the differential harness
+//! in `tests/synth_inplace.rs` asserts behavioural equivalence against
+//! the clone-per-round pipeline for every architecture.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::netlist::{BinKind, Cell, NetId, Netlist, Port, UnaryKind};
+
+use super::dce;
+
+/// Statistics of one in-place optimization run.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct OptStats {
+    /// Rewrites applied (folds, aliases, merges, strength reductions).
+    /// `0` means the input was already at the optimizer's fixpoint — the
+    /// explicit termination signal that replaces cell-count equality.
+    pub rewrites: u64,
+    pub cells_pre: usize,
+    pub cells_post: usize,
+}
+
+/// Resolution of a net during the pass.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Val {
+    /// Alias chain entry; a root points to itself.
+    Net(u32),
+    Const(bool),
+}
+
+const NONE: u32 = u32::MAX;
+
+/// CSE tags (binary gates use `BinKind as u8`, 0..=5).
+const TAG_NOT: u8 = 100;
+const TAG_MUX: u8 = 101;
+const TAG_HA: u8 = 102;
+const TAG_FA: u8 = 103;
+
+type CseKey = (u8, u32, u32, u32);
+
+struct Opt {
+    cells: Vec<Cell>,
+    dead: Vec<bool>,
+    /// Per-net resolution (union-find with path compression).
+    repr: Vec<Val>,
+    /// Root net -> cells registered to be woken when it is bound.
+    readers: Vec<Vec<u32>>,
+    /// Structural hash over resolved operand roots -> canonical outputs.
+    cse: HashMap<CseKey, [u32; 2]>,
+    queue: VecDeque<u32>,
+    inq: Vec<bool>,
+    n_nets: usize,
+    rewrites: u64,
+}
+
+impl Opt {
+    fn new(nl: &mut Netlist) -> Self {
+        let cells = std::mem::take(&mut nl.cells);
+        let n = cells.len();
+        let mut o = Self {
+            dead: vec![false; n],
+            repr: (0..nl.n_nets).map(|i| Val::Net(i as u32)).collect(),
+            readers: vec![Vec::new(); nl.n_nets],
+            cse: HashMap::new(),
+            queue: VecDeque::with_capacity(n),
+            inq: vec![false; n],
+            n_nets: nl.n_nets,
+            rewrites: 0,
+            cells,
+        };
+        // Constants resolve immediately; their cells are re-materialized
+        // on demand for whatever still needs a driven net at the end.
+        for (ci, cell) in o.cells.iter().enumerate() {
+            if let Cell::Const { value, out } = *cell {
+                o.repr[out.idx()] = Val::Const(value);
+                o.dead[ci] = true;
+            }
+        }
+        o
+    }
+
+    /// Resolve a net to its root or constant, compressing the path.
+    fn resolve(&mut self, start: u32) -> Val {
+        let mut n = start;
+        let root = loop {
+            match self.repr[n as usize] {
+                Val::Const(c) => break Val::Const(c),
+                Val::Net(m) if m == n => break Val::Net(n),
+                Val::Net(m) => n = m,
+            }
+        };
+        let mut n = start;
+        loop {
+            match self.repr[n as usize] {
+                Val::Net(m) if m != n => {
+                    self.repr[n as usize] = root;
+                    n = m;
+                }
+                _ => break,
+            }
+        }
+        root
+    }
+
+    fn fresh(&mut self) -> u32 {
+        let id = self.n_nets as u32;
+        self.n_nets += 1;
+        self.repr.push(Val::Net(id));
+        self.readers.push(Vec::new());
+        id
+    }
+
+    fn enqueue(&mut self, ci: u32) {
+        let i = ci as usize;
+        if !self.dead[i] && !self.inq[i] {
+            self.inq[i] = true;
+            self.queue.push_back(ci);
+        }
+    }
+
+    /// Register `ci` to be woken when root `n` is bound. Duplicates are
+    /// allowed (no O(fanout) scan): `bind` drains the list once and
+    /// `enqueue` dedups via `inq`, and a cell re-registers only after a
+    /// wake, which each happens at most once per bound root.
+    fn note_reader(&mut self, n: u32, ci: u32) {
+        self.readers[n as usize].push(ci);
+    }
+
+    /// Bind a root net to an alias or constant, waking its readers.
+    /// Each net is bound at most once — the monotonic descent that makes
+    /// the worklist terminate.
+    fn bind(&mut self, out: u32, v: Val) {
+        debug_assert!(
+            matches!(self.repr[out as usize], Val::Net(m) if m == out),
+            "bind target must be an unbound root"
+        );
+        debug_assert_ne!(v, Val::Net(out), "self-alias");
+        self.repr[out as usize] = v;
+        self.rewrites += 1;
+        let woken = std::mem::take(&mut self.readers[out as usize]);
+        for ci in woken {
+            self.enqueue(ci);
+        }
+    }
+
+    fn kill(&mut self, ci: usize) {
+        self.dead[ci] = true;
+    }
+
+    /// Rewrite the cell slot in place (a strength reduction).
+    fn replace(&mut self, ci: usize, cell: Cell) {
+        self.cells[ci] = cell;
+        self.rewrites += 1;
+    }
+
+    /// The cell stays in its current form: merge it into an existing
+    /// structurally identical cell, or register it as the canonical
+    /// instance and subscribe it to its input roots.
+    fn survive(
+        &mut self,
+        ci: usize,
+        key: CseKey,
+        outs: [u32; 2],
+        input_roots: &[u32],
+    ) {
+        if let Some(&ex) = self.cse.get(&key) {
+            if ex[0] != outs[0] {
+                self.kill(ci);
+                for k in 0..2 {
+                    if outs[k] != NONE {
+                        let t = self.resolve(ex[k]);
+                        self.bind(outs[k], t);
+                    }
+                }
+                return;
+            }
+        } else {
+            self.cse.insert(key, outs);
+        }
+        for &n in input_roots {
+            self.note_reader(n, ci as u32);
+        }
+    }
+
+    /// Reduce the cell to `INV(n) -> out` (or merge with an existing INV).
+    fn reduce_to_not(&mut self, ci: usize, n: u32, out: u32) {
+        let key = (TAG_NOT, n, NONE, NONE);
+        if let Some(&ex) = self.cse.get(&key) {
+            if ex[0] != out {
+                self.kill(ci);
+                let t = self.resolve(ex[0]);
+                self.bind(out, t);
+            } else {
+                self.note_reader(n, ci as u32);
+            }
+            return;
+        }
+        self.replace(
+            ci,
+            Cell::Unary {
+                kind: UnaryKind::Not,
+                a: NetId(n),
+                out: NetId(out),
+            },
+        );
+        self.cse.insert(key, [out, NONE]);
+        self.note_reader(n, ci as u32);
+    }
+
+    /// Reduce the cell to a binary gate `kind(x, y) -> out`.
+    fn reduce_to_bin(
+        &mut self,
+        ci: usize,
+        kind: BinKind,
+        x: u32,
+        y: u32,
+        out: u32,
+    ) {
+        if x == y {
+            match kind {
+                BinKind::And | BinKind::Or => {
+                    self.kill(ci);
+                    self.bind(out, Val::Net(x));
+                }
+                BinKind::Xor => {
+                    self.kill(ci);
+                    self.bind(out, Val::Const(false));
+                }
+                BinKind::Xnor => {
+                    self.kill(ci);
+                    self.bind(out, Val::Const(true));
+                }
+                BinKind::Nand | BinKind::Nor => {
+                    self.reduce_to_not(ci, x, out)
+                }
+            }
+            return;
+        }
+        let (lo, hi) = if x <= y { (x, y) } else { (y, x) };
+        let key = (kind as u8, lo, hi, NONE);
+        if let Some(&ex) = self.cse.get(&key) {
+            if ex[0] != out {
+                self.kill(ci);
+                let t = self.resolve(ex[0]);
+                self.bind(out, t);
+            } else {
+                self.note_reader(x, ci as u32);
+                self.note_reader(y, ci as u32);
+            }
+            return;
+        }
+        self.replace(
+            ci,
+            Cell::Binary {
+                kind,
+                a: NetId(x),
+                b: NetId(y),
+                out: NetId(out),
+            },
+        );
+        self.cse.insert(key, [out, NONE]);
+        self.note_reader(x, ci as u32);
+        self.note_reader(y, ci as u32);
+    }
+
+    /// Find-or-create `INV(n)`; returns its output root. Used when a
+    /// rewrite needs an inverted operand (mux arms with constant sides).
+    fn helper_not(&mut self, n: u32) -> u32 {
+        let key = (TAG_NOT, n, NONE, NONE);
+        if let Some(&ex) = self.cse.get(&key) {
+            if let Val::Net(r) = self.resolve(ex[0]) {
+                return r;
+            }
+        }
+        let out = self.fresh();
+        let ci = self.cells.len() as u32;
+        self.cells.push(Cell::Unary {
+            kind: UnaryKind::Not,
+            a: NetId(n),
+            out: NetId(out),
+        });
+        self.dead.push(false);
+        self.inq.push(false);
+        self.cse.insert(key, [out, NONE]);
+        self.note_reader(n, ci);
+        out
+    }
+
+    fn run(&mut self, seed_order: &[usize]) {
+        for &ci in seed_order {
+            self.enqueue(ci as u32);
+        }
+        while let Some(ci) = self.queue.pop_front() {
+            self.inq[ci as usize] = false;
+            self.process(ci as usize);
+        }
+    }
+
+    fn process(&mut self, ci: usize) {
+        if self.dead[ci] {
+            return;
+        }
+        match self.cells[ci].clone() {
+            Cell::Const { .. } | Cell::Dff { .. } => {}
+            Cell::Unary { kind, a, out } => {
+                let av = self.resolve(a.0);
+                match kind {
+                    UnaryKind::Buf => {
+                        self.kill(ci);
+                        self.bind(out.0, av);
+                    }
+                    UnaryKind::Not => match av {
+                        Val::Const(c) => {
+                            self.kill(ci);
+                            self.bind(out.0, Val::Const(!c));
+                        }
+                        Val::Net(n) => self.process_not(ci, n, out.0),
+                    },
+                }
+            }
+            Cell::Binary { kind, a, b, out } => {
+                self.process_bin(ci, kind, a, b, out)
+            }
+            Cell::Mux2 { sel, a0, a1, out } => {
+                self.process_mux(ci, sel, a0, a1, out)
+            }
+            Cell::HalfAdder { a, b, sum, carry } => {
+                let (av, bv) = (self.resolve(a.0), self.resolve(b.0));
+                self.process_ha(ci, av, bv, sum.0, carry.0);
+            }
+            Cell::FullAdder {
+                a,
+                b,
+                c,
+                sum,
+                carry,
+            } => self.process_fa(ci, a, b, c, sum, carry),
+        }
+    }
+
+    /// An INV that stays an INV: CSE only (the canonical instance keeps
+    /// its slot; duplicates merge into it).
+    fn process_not(&mut self, ci: usize, n: u32, out: u32) {
+        let key = (TAG_NOT, n, NONE, NONE);
+        self.survive(ci, key, [out, NONE], &[n]);
+    }
+
+    fn process_bin(
+        &mut self,
+        ci: usize,
+        kind: BinKind,
+        a: NetId,
+        b: NetId,
+        out: NetId,
+    ) {
+        use BinKind::*;
+        let (av, bv) = (self.resolve(a.0), self.resolve(b.0));
+        match (av, bv) {
+            (Val::Const(x), Val::Const(y)) => {
+                self.kill(ci);
+                self.bind(out.0, Val::Const(kind.eval(x, y)));
+            }
+            (Val::Const(c), Val::Net(n)) | (Val::Net(n), Val::Const(c)) => {
+                match (kind, c) {
+                    (And, false) | (Nor, true) => {
+                        self.kill(ci);
+                        self.bind(out.0, Val::Const(false));
+                    }
+                    (Or, true) | (Nand, false) => {
+                        self.kill(ci);
+                        self.bind(out.0, Val::Const(true));
+                    }
+                    (And, true) | (Or, false) | (Xor, false)
+                    | (Xnor, true) => {
+                        self.kill(ci);
+                        self.bind(out.0, Val::Net(n));
+                    }
+                    (Xor, true) | (Xnor, false) | (Nand, true)
+                    | (Nor, false) => self.reduce_to_not(ci, n, out.0),
+                }
+            }
+            (Val::Net(x), Val::Net(y)) if x == y => match kind {
+                And | Or => {
+                    self.kill(ci);
+                    self.bind(out.0, Val::Net(x));
+                }
+                Xor => {
+                    self.kill(ci);
+                    self.bind(out.0, Val::Const(false));
+                }
+                Xnor => {
+                    self.kill(ci);
+                    self.bind(out.0, Val::Const(true));
+                }
+                Nand | Nor => self.reduce_to_not(ci, x, out.0),
+            },
+            (Val::Net(x), Val::Net(y)) => {
+                let (lo, hi) = if x <= y { (x, y) } else { (y, x) };
+                let key = (kind as u8, lo, hi, NONE);
+                self.survive(ci, key, [out.0, NONE], &[x, y]);
+            }
+        }
+    }
+
+    fn process_mux(
+        &mut self,
+        ci: usize,
+        sel: NetId,
+        a0: NetId,
+        a1: NetId,
+        out: NetId,
+    ) {
+        let sv = self.resolve(sel.0);
+        let v0 = self.resolve(a0.0);
+        let v1 = self.resolve(a1.0);
+        let s = match sv {
+            Val::Const(false) => {
+                self.kill(ci);
+                self.bind(out.0, v0);
+                return;
+            }
+            Val::Const(true) => {
+                self.kill(ci);
+                self.bind(out.0, v1);
+                return;
+            }
+            Val::Net(s) => s,
+        };
+        if v0 == v1 {
+            self.kill(ci);
+            self.bind(out.0, v0);
+            return;
+        }
+        match (v0, v1) {
+            (Val::Const(false), Val::Const(true)) => {
+                self.kill(ci);
+                self.bind(out.0, Val::Net(s));
+            }
+            (Val::Const(true), Val::Const(false)) => {
+                self.reduce_to_not(ci, s, out.0)
+            }
+            (Val::Const(false), Val::Net(n)) => {
+                self.reduce_to_bin(ci, BinKind::And, s, n, out.0)
+            }
+            (Val::Const(true), Val::Net(n)) => {
+                let ns = self.helper_not(s);
+                self.reduce_to_bin(ci, BinKind::Or, ns, n, out.0)
+            }
+            (Val::Net(n), Val::Const(false)) => {
+                let ns = self.helper_not(s);
+                self.reduce_to_bin(ci, BinKind::And, ns, n, out.0)
+            }
+            (Val::Net(n), Val::Const(true)) => {
+                self.reduce_to_bin(ci, BinKind::Or, s, n, out.0)
+            }
+            (Val::Net(n0), Val::Net(n1)) => {
+                let key = (TAG_MUX, s, n0, n1);
+                self.survive(ci, key, [out.0, NONE], &[s, n0, n1]);
+            }
+            (Val::Const(_), Val::Const(_)) => {
+                unreachable!("equal constants folded by the v0 == v1 arm")
+            }
+        }
+    }
+
+    fn process_ha(
+        &mut self,
+        ci: usize,
+        av: Val,
+        bv: Val,
+        sum: u32,
+        carry: u32,
+    ) {
+        match (av, bv) {
+            (Val::Const(x), Val::Const(y)) => {
+                self.kill(ci);
+                self.bind(sum, Val::Const(x ^ y));
+                self.bind(carry, Val::Const(x && y));
+            }
+            (Val::Const(false), Val::Net(n))
+            | (Val::Net(n), Val::Const(false)) => {
+                self.kill(ci);
+                self.bind(sum, Val::Net(n));
+                self.bind(carry, Val::Const(false));
+            }
+            (Val::Const(true), Val::Net(n))
+            | (Val::Net(n), Val::Const(true)) => {
+                // sum = !n, carry = n; the slot becomes the inverter.
+                self.bind(carry, Val::Net(n));
+                self.reduce_to_not(ci, n, sum);
+            }
+            (Val::Net(x), Val::Net(y)) if x == y => {
+                self.kill(ci);
+                self.bind(sum, Val::Const(false));
+                self.bind(carry, Val::Net(x));
+            }
+            (Val::Net(x), Val::Net(y)) => {
+                let (lo, hi) = if x <= y { (x, y) } else { (y, x) };
+                let key = (TAG_HA, lo, hi, NONE);
+                self.survive(ci, key, [sum, carry], &[x, y]);
+            }
+        }
+    }
+
+    fn process_fa(
+        &mut self,
+        ci: usize,
+        a: NetId,
+        b: NetId,
+        c: NetId,
+        sum: NetId,
+        carry: NetId,
+    ) {
+        let vals = [self.resolve(a.0), self.resolve(b.0), self.resolve(c.0)];
+        let consts: Vec<bool> = vals
+            .iter()
+            .filter_map(|v| match v {
+                Val::Const(x) => Some(*x),
+                _ => None,
+            })
+            .collect();
+        let nets: Vec<u32> = vals
+            .iter()
+            .filter_map(|v| match v {
+                Val::Net(n) => Some(*n),
+                _ => None,
+            })
+            .collect();
+        let (sum, carry) = (sum.0, carry.0);
+        match consts.len() {
+            3 => {
+                let total = consts.iter().filter(|&&x| x).count();
+                self.kill(ci);
+                self.bind(sum, Val::Const(total % 2 == 1));
+                self.bind(carry, Val::Const(total >= 2));
+            }
+            2 => {
+                let ones = consts.iter().filter(|&&x| x).count();
+                let n = nets[0];
+                match ones {
+                    0 => {
+                        self.kill(ci);
+                        self.bind(sum, Val::Net(n));
+                        self.bind(carry, Val::Const(false));
+                    }
+                    1 => {
+                        self.bind(carry, Val::Net(n));
+                        self.reduce_to_not(ci, n, sum);
+                    }
+                    _ => {
+                        self.kill(ci);
+                        self.bind(sum, Val::Net(n));
+                        self.bind(carry, Val::Const(true));
+                    }
+                }
+            }
+            1 => {
+                let (x, y) = (nets[0], nets[1]);
+                if consts[0] {
+                    // carry-in 1: sum = XNOR(x,y), carry = OR(x,y).
+                    self.fa_split(ci, x, y, sum, carry);
+                } else {
+                    // carry-in 0: degrade to a half adder.
+                    if x == y {
+                        self.kill(ci);
+                        self.bind(sum, Val::Const(false));
+                        self.bind(carry, Val::Net(x));
+                        return;
+                    }
+                    let (lo, hi) = if x <= y { (x, y) } else { (y, x) };
+                    let key = (TAG_HA, lo, hi, NONE);
+                    if let Some(&ex) = self.cse.get(&key) {
+                        self.kill(ci);
+                        let ts = self.resolve(ex[0]);
+                        let tc = self.resolve(ex[1]);
+                        self.bind(sum, ts);
+                        self.bind(carry, tc);
+                        return;
+                    }
+                    self.replace(
+                        ci,
+                        Cell::HalfAdder {
+                            a: NetId(x),
+                            b: NetId(y),
+                            sum: NetId(sum),
+                            carry: NetId(carry),
+                        },
+                    );
+                    self.cse.insert(key, [sum, carry]);
+                    self.note_reader(x, ci as u32);
+                    self.note_reader(y, ci as u32);
+                }
+            }
+            _ => {
+                let (x, y, z) = (nets[0], nets[1], nets[2]);
+                // Pair-equal simplifications: FA(x,x,z) = (z, x).
+                if x == y {
+                    self.kill(ci);
+                    self.bind(sum, Val::Net(z));
+                    self.bind(carry, Val::Net(x));
+                    return;
+                }
+                if x == z {
+                    self.kill(ci);
+                    self.bind(sum, Val::Net(y));
+                    self.bind(carry, Val::Net(x));
+                    return;
+                }
+                if y == z {
+                    self.kill(ci);
+                    self.bind(sum, Val::Net(x));
+                    self.bind(carry, Val::Net(y));
+                    return;
+                }
+                let mut ins = [x, y, z];
+                ins.sort_unstable();
+                let key = (TAG_FA, ins[0], ins[1], ins[2]);
+                self.survive(ci, key, [sum, carry], &[x, y, z]);
+            }
+        }
+    }
+
+    /// FA with constant carry-in 1 splits into `sum = XNOR`, `carry = OR`
+    /// (sharing existing gates where the hash already has them).
+    fn fa_split(&mut self, ci: usize, x: u32, y: u32, sum: u32, carry: u32) {
+        if x == y {
+            // FA(x, x, 1): sum = x^x^1 = 1, carry = majority(x, x, 1) = x.
+            self.kill(ci);
+            self.bind(sum, Val::Const(true));
+            self.bind(carry, Val::Net(x));
+            return;
+        }
+        let (lo, hi) = if x <= y { (x, y) } else { (y, x) };
+        let xnor_key = (BinKind::Xnor as u8, lo, hi, NONE);
+        let or_key = (BinKind::Or as u8, lo, hi, NONE);
+        let xnor_hit = self.cse.get(&xnor_key).copied();
+        let or_hit = self.cse.get(&or_key).copied();
+        match (xnor_hit, or_hit) {
+            (Some(xe), Some(oe)) => {
+                self.kill(ci);
+                let ts = self.resolve(xe[0]);
+                let tc = self.resolve(oe[0]);
+                self.bind(sum, ts);
+                self.bind(carry, tc);
+            }
+            (Some(xe), None) => {
+                let ts = self.resolve(xe[0]);
+                self.bind(sum, ts);
+                self.replace(
+                    ci,
+                    Cell::Binary {
+                        kind: BinKind::Or,
+                        a: NetId(x),
+                        b: NetId(y),
+                        out: NetId(carry),
+                    },
+                );
+                self.cse.insert(or_key, [carry, NONE]);
+                self.note_reader(x, ci as u32);
+                self.note_reader(y, ci as u32);
+            }
+            (None, Some(oe)) => {
+                let tc = self.resolve(oe[0]);
+                self.bind(carry, tc);
+                self.replace(
+                    ci,
+                    Cell::Binary {
+                        kind: BinKind::Xnor,
+                        a: NetId(x),
+                        b: NetId(y),
+                        out: NetId(sum),
+                    },
+                );
+                self.cse.insert(xnor_key, [sum, NONE]);
+                self.note_reader(x, ci as u32);
+                self.note_reader(y, ci as u32);
+            }
+            (None, None) => {
+                self.replace(
+                    ci,
+                    Cell::Binary {
+                        kind: BinKind::Xnor,
+                        a: NetId(x),
+                        b: NetId(y),
+                        out: NetId(sum),
+                    },
+                );
+                let helper = self.cells.len() as u32;
+                self.cells.push(Cell::Binary {
+                    kind: BinKind::Or,
+                    a: NetId(x),
+                    b: NetId(y),
+                    out: NetId(carry),
+                });
+                self.dead.push(false);
+                self.inq.push(false);
+                self.cse.insert(xnor_key, [sum, NONE]);
+                self.cse.insert(or_key, [carry, NONE]);
+                self.note_reader(x, ci as u32);
+                self.note_reader(y, ci as u32);
+                self.note_reader(x, helper);
+                self.note_reader(y, helper);
+            }
+        }
+    }
+
+    /// Materialize a value as a driven net. Constant nets are allocated
+    /// on first need and shared; their `CONST` cells are appended by
+    /// `rebuild` in fixed polarity order (0 then 1), so the output cell
+    /// order is independent of which consumer needed them first — the
+    /// property the idempotence guarantee rests on.
+    fn as_net(&mut self, v: Val, consts: &mut [Option<u32>; 2]) -> NetId {
+        match v {
+            Val::Net(n) => NetId(n),
+            Val::Const(c) => {
+                let slot = &mut consts[c as usize];
+                if let Some(n) = *slot {
+                    return NetId(n);
+                }
+                let id = self.fresh();
+                *slot = Some(id);
+                NetId(id)
+            }
+        }
+    }
+
+    /// Assemble the optimized netlist: surviving cells with resolved
+    /// operands, re-materialized constants, resolved ports — then one
+    /// final DCE + net compaction.
+    fn rebuild(mut self, nl: &mut Netlist) {
+        let mut consts: [Option<u32>; 2] = [None, None];
+        let mut out_cells: Vec<Cell> = Vec::with_capacity(
+            self.dead.iter().filter(|&&d| !d).count(),
+        );
+        let cells = std::mem::take(&mut self.cells);
+        for (ci, cell) in cells.into_iter().enumerate() {
+            if self.dead[ci] {
+                continue;
+            }
+            let rn = |o: &mut Self,
+                      n: NetId,
+                      consts: &mut [Option<u32>; 2]| {
+                let v = o.resolve(n.0);
+                o.as_net(v, consts)
+            };
+            out_cells.push(match cell {
+                Cell::Const { .. } => unreachable!("consts are re-made"),
+                Cell::Unary { kind, a, out } => Cell::Unary {
+                    kind,
+                    a: rn(&mut self, a, &mut consts),
+                    out,
+                },
+                Cell::Binary { kind, a, b, out } => Cell::Binary {
+                    kind,
+                    a: rn(&mut self, a, &mut consts),
+                    b: rn(&mut self, b, &mut consts),
+                    out,
+                },
+                Cell::Mux2 { sel, a0, a1, out } => Cell::Mux2 {
+                    sel: rn(&mut self, sel, &mut consts),
+                    a0: rn(&mut self, a0, &mut consts),
+                    a1: rn(&mut self, a1, &mut consts),
+                    out,
+                },
+                Cell::HalfAdder { a, b, sum, carry } => Cell::HalfAdder {
+                    a: rn(&mut self, a, &mut consts),
+                    b: rn(&mut self, b, &mut consts),
+                    sum,
+                    carry,
+                },
+                Cell::FullAdder {
+                    a,
+                    b,
+                    c,
+                    sum,
+                    carry,
+                } => Cell::FullAdder {
+                    a: rn(&mut self, a, &mut consts),
+                    b: rn(&mut self, b, &mut consts),
+                    c: rn(&mut self, c, &mut consts),
+                    sum,
+                    carry,
+                },
+                Cell::Dff {
+                    d,
+                    en,
+                    clr,
+                    q,
+                    init,
+                } => Cell::Dff {
+                    d: rn(&mut self, d, &mut consts),
+                    en: en.map(|e| rn(&mut self, e, &mut consts)),
+                    clr: clr.map(|r| rn(&mut self, r, &mut consts)),
+                    q,
+                    init,
+                },
+            });
+        }
+
+        let remap_port = |o: &mut Self,
+                          p: &Port,
+                          consts: &mut [Option<u32>; 2]| Port {
+            name: p.name.clone(),
+            bits: p
+                .bits
+                .iter()
+                .map(|&b| {
+                    let v = o.resolve(b.0);
+                    o.as_net(v, consts)
+                })
+                .collect(),
+        };
+        let outputs: Vec<Port> = nl
+            .outputs
+            .iter()
+            .map(|p| remap_port(&mut self, p, &mut consts))
+            .collect();
+        let named: Vec<Port> = nl
+            .named
+            .iter()
+            .map(|p| remap_port(&mut self, p, &mut consts))
+            .collect();
+        // Needed constants last, in fixed polarity order — independent of
+        // which consumer materialized them first (idempotence).
+        for (idx, slot) in consts.iter().enumerate() {
+            if let Some(n) = *slot {
+                out_cells.push(Cell::Const {
+                    value: idx == 1,
+                    out: NetId(n),
+                });
+            }
+        }
+
+        let interim = Netlist {
+            name: nl.name.clone(),
+            n_nets: self.n_nets,
+            cells: out_cells,
+            inputs: nl.inputs.clone(), // input nets are always roots
+            outputs,
+            named,
+        };
+        *nl = dce(&interim);
+    }
+}
+
+/// Optimize a netlist in place; returns the applied-rewrite statistics.
+/// `stats.rewrites == 0` means the input was already at fixpoint and the
+/// netlist is unchanged up to net-id compaction.
+pub fn optimize_in_place(nl: &mut Netlist) -> OptStats {
+    let cells_pre = nl.n_cells();
+    let order = nl
+        .topo_order()
+        .expect("optimize requires an acyclic netlist");
+    let mut opt = Opt::new(nl);
+    opt.run(&order);
+    let rewrites = opt.rewrites;
+    opt.rebuild(nl);
+    nl.validate().expect("optimize produced invalid netlist");
+    OptStats {
+        rewrites,
+        cells_pre,
+        cells_post: nl.n_cells(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::Builder;
+    use crate::sim::Simulator;
+
+    #[test]
+    fn folds_constant_logic_in_place() {
+        let mut b = Builder::new("c");
+        let x = b.input("x", 1);
+        let zero = b.zero();
+        let one = b.one();
+        let t1 = b.and_gate(x[0], zero); // -> 0
+        let t2 = b.or_gate(t1, one); // -> 1
+        let t3 = b.xor_gate(t2, x[0]); // -> !x
+        b.output("y", &vec![t3]);
+        let mut nl = b.finish();
+        let stats = optimize_in_place(&mut nl);
+        assert!(stats.rewrites > 0);
+        let counts = nl.cell_counts();
+        assert_eq!(counts.get("INV"), 1);
+        assert_eq!(counts.get("AND2") + counts.get("OR2"), 0);
+    }
+
+    #[test]
+    fn cse_merges_across_wakes() {
+        // g2 only becomes a duplicate of g1 after the buffer aliases away:
+        // the dirty-set propagation must revisit and merge it.
+        let mut b = Builder::new("c");
+        let x = b.input("x", 1);
+        let y = b.input("y", 1);
+        let xb = b.buf_gate(x[0]);
+        let g1 = b.and_gate(x[0], y[0]);
+        let g2 = b.and_gate(xb, y[0]);
+        let o = b.or_gate(g1, g2);
+        b.output("o", &vec![o]);
+        let mut nl = b.finish();
+        optimize_in_place(&mut nl);
+        assert_eq!(nl.cell_counts().get("AND2"), 1, "duplicates merged");
+        assert_eq!(nl.cell_counts().get("OR2"), 0, "or(x,x) aliased");
+        assert_eq!(nl.cell_counts().get("BUF"), 0);
+    }
+
+    #[test]
+    fn fixpoint_reports_zero_rewrites() {
+        let mut b = Builder::new("fp");
+        let x = b.input("x", 4);
+        let y = b.input("y", 4);
+        let s = b.add(&x, &y);
+        b.output("s", &s);
+        let mut nl = b.finish();
+        optimize_in_place(&mut nl);
+        let snapshot = nl.clone();
+        let stats = optimize_in_place(&mut nl);
+        assert_eq!(stats.rewrites, 0, "already at fixpoint");
+        assert_eq!(nl, snapshot, "fixpoint run must be a no-op");
+    }
+
+    #[test]
+    fn behaviour_preserved_on_sequential_mix() {
+        let mut b = Builder::new("mixed");
+        let x = b.input("x", 8);
+        let y = b.input("y", 8);
+        let c = b.constant(0x35, 8);
+        let t1 = b.add(&x, &c);
+        let t2 = b.bitwise(crate::netlist::BinKind::Xor, &y, &c);
+        let t3 = b.add_to(&t1, &t2, 10);
+        let q = b.dff_bus(&t3, None, None);
+        b.output("q", &q);
+        let nl = b.finish();
+        let mut opt = nl.clone();
+        optimize_in_place(&mut opt);
+        assert!(opt.n_cells() < nl.n_cells());
+        let mut s1 = Simulator::new(&nl).unwrap();
+        let mut s2 = Simulator::new(&opt).unwrap();
+        let mut rng = crate::util::Xoshiro256::new(3);
+        for _ in 0..200 {
+            let xv = rng.next_u64() & 0xFF;
+            let yv = rng.next_u64() & 0xFF;
+            s1.set_input("x", xv).unwrap();
+            s1.set_input("y", yv).unwrap();
+            s2.set_input("x", xv).unwrap();
+            s2.set_input("y", yv).unwrap();
+            s1.step();
+            s2.step();
+            assert_eq!(
+                s1.get_output("q").unwrap(),
+                s2.get_output("q").unwrap()
+            );
+        }
+    }
+}

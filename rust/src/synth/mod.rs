@@ -6,37 +6,63 @@
 //! into shared selection logic — costing the raw generated mux trees would
 //! overstate its area. We run the same class of transforms:
 //!
-//! * constant propagation + boolean identities ([`constprop`])
+//! * constant propagation + boolean identities
 //! * common-subexpression elimination (structural hashing)
 //! * dead-cell elimination + net compaction ([`dce`])
 //!
-//! ...to a fixpoint, then produce area/power/timing reports shaped like
-//! post-synthesis reports ([`report`]).
+//! The production path is the **in-place worklist optimizer**
+//! ([`optimize`] / [`optimize_in_place`], see [`inplace`]): a single
+//! fixpoint computation with dirty-set propagation whose cost is
+//! proportional to the rewrites applied, terminated by an explicit
+//! applied-rewrites count. The original clone-per-round pipeline
+//! ([`optimize_rounds`] over [`constprop_round`] + [`dce`]) is kept as
+//! the reference implementation for the differential equivalence tests
+//! and the `bench-synth` old-vs-new comparison.
+//!
+//! Optimized designs are cached process-wide as compiled artifacts by
+//! [`crate::design::DesignStore`] — consumers should fetch from there
+//! instead of re-running `optimize` per use.
 
 mod constprop;
 mod dce;
+mod inplace;
 mod report;
 
 pub use constprop::constprop_round;
 pub use dce::dce;
-pub use report::{synthesize, SynthReport};
+pub use inplace::{optimize_in_place, OptStats};
+pub use report::{report_for, synthesize, SynthReport};
 
 use crate::netlist::Netlist;
 
-/// Run optimization rounds to a fixpoint (bounded; each round is
-/// monotonically non-increasing in cell count).
+/// Optimize a netlist (in-place worklist engine; see [`optimize_in_place`]
+/// for the variant that mutates its argument and reports statistics).
 pub fn optimize(nl: &Netlist) -> Netlist {
-    let mut cur = nl.clone();
+    let mut out = nl.clone();
+    optimize_in_place(&mut out);
+    out
+}
+
+/// Legacy clone-per-round pipeline: run [`constprop_round`] + [`dce`] to
+/// a fixpoint, allocating a fresh netlist per pass. Kept as the reference
+/// baseline for differential tests and `bench-synth`; new code should use
+/// [`optimize`].
+///
+/// The fixpoint check compares netlists *structurally* — the seed
+/// terminated on `n_cells()` equality, which can declare convergence
+/// while a round rewrote structure without changing the cell count.
+pub fn optimize_rounds(nl: &Netlist) -> Netlist {
+    let mut cur = dce(&constprop_round(nl));
     for _ in 0..16 {
-        let folded = constprop_round(&cur);
-        let swept = dce(&folded);
-        let done = swept.n_cells() == cur.n_cells();
-        cur = swept;
+        let next = dce(&constprop_round(&cur));
+        let done = next == cur;
+        cur = next;
         if done {
             break;
         }
     }
-    cur.validate().expect("optimize produced invalid netlist");
+    cur.validate()
+        .expect("optimize_rounds produced invalid netlist");
     cur
 }
 
@@ -106,6 +132,56 @@ mod tests {
             sim.set_input("sel", v).unwrap();
             sim.settle();
             assert_eq!(sim.get_output("out").unwrap(), v * 13 % 256);
+        }
+    }
+
+    /// Regression for the legacy fixpoint bug: a rewrite can change
+    /// structure while keeping the cell count constant (here MUX2 with a
+    /// constant-0 arm becomes INV + AND — two cells replacing mux +
+    /// const). Termination must be driven by the applied-rewrites signal,
+    /// and the result must be a true fixpoint.
+    #[test]
+    fn fixpoint_is_rewrite_driven_not_count_driven() {
+        let mut b = Builder::new("cc");
+        let s = b.input("s", 1);
+        let x = b.input("x", 1);
+        let zero = b.zero();
+        let m = b.mux_gate(s[0], x[0], zero); // s ? 0 : x
+        b.output("m", &vec![m]);
+        let nl = b.finish();
+        assert_eq!(nl.n_cells(), 2, "mux + const cell");
+        let mut opt = nl.clone();
+        let stats = optimize_in_place(&mut opt);
+        assert!(stats.rewrites > 0, "structure changed");
+        assert_eq!(
+            opt.n_cells(),
+            2,
+            "cell count unchanged (INV + AND) — the signal the legacy \
+             n_cells() check could not see"
+        );
+        // True fixpoint: a second run applies nothing and changes nothing.
+        let snapshot = opt.clone();
+        let stats2 = optimize_in_place(&mut opt);
+        assert_eq!(stats2.rewrites, 0);
+        assert_eq!(opt, snapshot);
+        // And the legacy pipeline (with the structural-equality fix)
+        // agrees behaviourally.
+        let legacy = optimize_rounds(&nl);
+        let mut s1 = Simulator::new(&opt).unwrap();
+        let mut s2 = Simulator::new(&legacy).unwrap();
+        for sv in [0u64, 1] {
+            for xv in [0u64, 1] {
+                s1.set_input("s", sv).unwrap();
+                s1.set_input("x", xv).unwrap();
+                s2.set_input("s", sv).unwrap();
+                s2.set_input("x", xv).unwrap();
+                s1.settle();
+                s2.settle();
+                assert_eq!(
+                    s1.get_output("m").unwrap(),
+                    s2.get_output("m").unwrap()
+                );
+            }
         }
     }
 }

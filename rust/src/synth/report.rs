@@ -1,14 +1,19 @@
-//! Post-synthesis-style reporting: optimize, then extract area / timing /
-//! cell composition for a design. Power is reported separately because it
-//! needs a simulated workload (see `tech::power` and `fabric::harness`).
+//! Post-synthesis-style reporting: area / timing / cell composition for
+//! an optimized design. Power is reported separately because it needs a
+//! simulated workload (see `tech::power` and `fabric::harness`).
+//!
+//! The optimized netlist itself is no longer carried inside
+//! [`SynthReport`] — it lives in the shared
+//! [`crate::design::CompiledDesign`] artifact next to these stats.
 
 use anyhow::Result;
 
 use crate::netlist::{CellCounts, Netlist};
-use crate::synth::optimize;
+use crate::synth::{optimize_in_place, OptStats};
 use crate::tech::{sta, TechLibrary, TimingReport};
 
-/// The post-synthesis view of one design.
+/// The post-synthesis view of one design (statistics only; the optimized
+/// netlist is owned by the design artifact it was measured on).
 #[derive(Clone, Debug)]
 pub struct SynthReport {
     pub name: String,
@@ -20,25 +25,38 @@ pub struct SynthReport {
     pub counts: CellCounts,
     pub n_cells_pre: usize,
     pub n_cells_post: usize,
-    /// The optimized netlist (what area/timing were measured on).
-    pub netlist: Netlist,
+    /// Rewrites the worklist optimizer applied to reach fixpoint.
+    pub rewrites: u64,
 }
 
-/// Optimize `nl` and produce the synthesis report.
-pub fn synthesize(nl: &Netlist, lib: &TechLibrary) -> Result<SynthReport> {
-    let pre = nl.n_cells();
-    let opt = optimize(nl);
-    let timing = sta(&opt, lib)?;
+/// Report on an **already optimized** netlist (no re-optimization) —
+/// what [`crate::design::DesignStore`] calls after its single in-place
+/// optimization pass.
+pub fn report_for(
+    opt: &Netlist,
+    lib: &TechLibrary,
+    stats: OptStats,
+) -> Result<SynthReport> {
+    let timing = sta(opt, lib)?;
     Ok(SynthReport {
         name: opt.name.clone(),
-        area_um2: lib.area_um2(&opt),
-        gate_equiv: lib.gate_equivalents(&opt),
+        area_um2: lib.area_um2(opt),
+        gate_equiv: lib.gate_equivalents(opt),
         timing,
         counts: opt.cell_counts(),
-        n_cells_pre: pre,
-        n_cells_post: opt.n_cells(),
-        netlist: opt,
+        n_cells_pre: stats.cells_pre,
+        n_cells_post: stats.cells_post,
+        rewrites: stats.rewrites,
     })
+}
+
+/// Optimize `nl` and produce the synthesis report. Convenience for tests
+/// and one-off reporting; pipeline consumers should fetch the shared
+/// artifact from [`crate::design::DesignStore`] instead.
+pub fn synthesize(nl: &Netlist, lib: &TechLibrary) -> Result<SynthReport> {
+    let mut opt = nl.clone();
+    let stats = optimize_in_place(&mut opt);
+    report_for(&opt, lib, stats)
 }
 
 impl std::fmt::Display for SynthReport {
@@ -46,8 +64,8 @@ impl std::fmt::Display for SynthReport {
         writeln!(f, "== synthesis report: {} ==", self.name)?;
         writeln!(
             f,
-            "cells: {} -> {} after optimization",
-            self.n_cells_pre, self.n_cells_post
+            "cells: {} -> {} after optimization ({} rewrites)",
+            self.n_cells_pre, self.n_cells_post, self.rewrites
         )?;
         writeln!(
             f,
@@ -86,6 +104,7 @@ mod tests {
         let nl = b.finish();
         let rep = synthesize(&nl, &lib).unwrap();
         assert!(rep.n_cells_post < rep.n_cells_pre);
+        assert!(rep.rewrites > 0);
         assert_eq!(rep.counts.get("FA") + rep.counts.get("HA"), 0);
         assert!(rep.timing.meets_1ghz);
         assert!(rep.area_um2 > 0.0);

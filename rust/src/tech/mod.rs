@@ -8,7 +8,7 @@
 //! global power scale are *calibrated* against the paper's single anchor
 //! point (shift-add, 4 operands: 528.57 µm², 0.0269 mW) — every other
 //! number in the Fig. 4 reproduction is then a prediction from netlist
-//! structure and measured switching activity. See DESIGN.md §2.
+//! structure and measured switching activity. See `calibrate`.
 
 mod calibrate;
 mod library;

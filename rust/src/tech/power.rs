@@ -21,7 +21,7 @@ use crate::sim::{Simulator, Simulator64};
 use crate::tech::{TechLibrary, CLOCK_HZ};
 
 /// Power decomposition in milliwatts.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct PowerBreakdown {
     pub dynamic_mw: f64,
     pub clock_mw: f64,
@@ -46,7 +46,7 @@ impl<'l> PowerModel<'l> {
 
     /// Estimate power for `nl` given a simulator that has executed the
     /// workload (its toggle counters and cycle count are read here).
-    pub fn estimate(&self, nl: &Netlist, sim: &Simulator<'_>) -> PowerBreakdown {
+    pub fn estimate(&self, nl: &Netlist, sim: &Simulator) -> PowerBreakdown {
         self.estimate_activity(nl, sim.toggles(), sim.cycles())
     }
 
@@ -57,7 +57,7 @@ impl<'l> PowerModel<'l> {
     pub fn estimate64(
         &self,
         nl: &Netlist,
-        sim: &Simulator64<'_>,
+        sim: &Simulator64,
     ) -> PowerBreakdown {
         self.estimate_activity(nl, sim.toggles(), sim.lane_cycles())
     }

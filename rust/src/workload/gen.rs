@@ -3,7 +3,7 @@
 use crate::util::Xoshiro256;
 
 /// One vector × broadcast-scalar multiply job (the coordinator's unit of
-/// work — what a DNN GEMV decomposes into, see DESIGN.md).
+/// work — what a DNN GEMV decomposes into).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct VectorJob {
     pub id: u64,

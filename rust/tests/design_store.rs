@@ -1,0 +1,87 @@
+//! The compiled-design artifact layer end to end: one `CompiledDesign`
+//! per `(Arch, n)` built exactly once per process and shared by the
+//! sweep, the harness, the coordinator backends and the benches — plus
+//! proper error (not panic) on out-of-range widths through the
+//! user-facing paths.
+
+use std::sync::Arc;
+
+use nibblemul::coordinator::{Sim64Backend, SimBackend};
+use nibblemul::design::{CompiledDesign, DesignStore};
+use nibblemul::fabric::{evaluate_arch, VectorUnit};
+use nibblemul::multipliers::Arch;
+use nibblemul::tech::TechLibrary;
+
+#[test]
+fn all_consumers_share_one_artifact_per_design_point() {
+    let store = DesignStore::global();
+    let arch = Arch::Nibble;
+    let n = 4usize;
+
+    // Harness, coordinator (scalar + packed) and a sweep evaluation all
+    // touch the same design point...
+    let unit = VectorUnit::try_new(arch, n).unwrap();
+    let _sim_backend = SimBackend::new(arch, n).unwrap();
+    let _sim64_backend = Sim64Backend::new(arch, n).unwrap();
+    let lib = TechLibrary::hpc28();
+    let eval = evaluate_arch(arch, n, &lib, 2, 9).unwrap();
+    assert_eq!(eval.cycles_per_op, arch.latency_cycles(n));
+
+    // ...and all of them resolved to the single cached artifact.
+    let direct = store.get(arch, n).unwrap();
+    assert!(Arc::ptr_eq(unit.design(), &direct));
+    let report = direct.report.as_ref().expect("synthesized stats");
+    assert_eq!(report.n_cells_post, direct.netlist.n_cells());
+    assert!(report.rewrites > 0);
+}
+
+#[test]
+fn evaluate_arch_reuses_the_artifact_across_calls() {
+    let store = DesignStore::global();
+    let lib = TechLibrary::hpc28();
+    let e1 = evaluate_arch(Arch::Wallace, 4, &lib, 2, 5).unwrap();
+    let d1 = store.get(Arch::Wallace, 4).unwrap();
+    let e2 = evaluate_arch(Arch::Wallace, 4, &lib, 2, 5).unwrap();
+    let d2 = store.get(Arch::Wallace, 4).unwrap();
+    assert!(
+        Arc::ptr_eq(&d1, &d2),
+        "second evaluation must not rebuild the design"
+    );
+    // Same seed + same compiled program => identical measurements.
+    assert_eq!(e1, e2);
+}
+
+#[test]
+fn fresh_simulators_from_one_program_are_independent() {
+    let design = DesignStore::global().get(Arch::ShiftAdd, 2).unwrap();
+    let unit = VectorUnit::from_design(Arc::clone(&design));
+    let mut s1 = unit.simulator().unwrap();
+    let mut s2 = unit.simulator().unwrap();
+    let r1 = unit.run_op(&mut s1, &[7, 9], 31).unwrap();
+    assert_eq!(r1.products, vec![7 * 31, 9 * 31]);
+    // s2 was untouched by s1's run.
+    assert_eq!(s2.total_toggles(), 0);
+    let r2 = unit.run_op(&mut s2, &[1, 2], 3).unwrap();
+    assert_eq!(r2.products, vec![3, 6]);
+}
+
+#[test]
+fn out_of_range_widths_error_through_every_user_path() {
+    for bad in [0usize, 65] {
+        assert!(Arch::Nibble.try_build(bad).is_err(), "try_build({bad})");
+        assert!(DesignStore::global().get(Arch::Nibble, bad).is_err());
+        assert!(VectorUnit::try_new(Arch::Nibble, bad).is_err());
+        assert!(SimBackend::new(Arch::Nibble, bad).is_err());
+        assert!(Sim64Backend::new(Arch::Nibble, bad).is_err());
+    }
+}
+
+#[test]
+fn raw_designs_are_uncached_and_reportless() {
+    let raw = CompiledDesign::raw(Arch::Nibble, 2).unwrap();
+    assert!(raw.report.is_none());
+    // Raw bundles never enter the store: fetching the same point from the
+    // store yields the *optimized* artifact, which is smaller.
+    let opt = DesignStore::global().get(Arch::Nibble, 2).unwrap();
+    assert!(opt.netlist.n_cells() < raw.netlist.n_cells());
+}

@@ -86,7 +86,7 @@ fn results_hold_after_done_until_next_start() {
     let first = res.products.clone();
     // Idle clocks must not disturb held results.
     sim.run(10);
-    let r_port = unit.netlist.output("r").unwrap();
+    let r_port = unit.netlist().output("r").unwrap();
     for i in 0..4 {
         let v = sim.peek_bits(&r_port.bits[16 * i..16 * (i + 1)]) as u32;
         assert_eq!(v, first[i], "result reg {i} drifted while idle");

@@ -109,7 +109,7 @@ fn calibration_hits_anchor_exactly() {
 
 #[test]
 fn nibble_area_slope_is_storage_dominated() {
-    // DESIGN.md §5: per-element cost of the nibble unit is ~operand +
+    // Paper §II.B: per-element cost of the nibble unit is ~operand +
     // result storage; shift-add replicates whole units. The measured
     // slopes must differ by at least 1.8x.
     let rows = sweep();

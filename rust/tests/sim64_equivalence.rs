@@ -29,7 +29,7 @@ fn packed_equals_64_scalar_runs_all_archs() {
 
             // 64 scalar runs on the same per-lane streams.
             let seeds = lane_seeds(seed);
-            let mut toggles_sum = vec![0u64; unit.netlist.n_nets];
+            let mut toggles_sum = vec![0u64; unit.netlist().n_nets];
             let mut scalar_cycles_total = 0u64;
             for &lane_seed in &seeds {
                 let mut sim = unit.simulator().unwrap();
@@ -66,14 +66,14 @@ fn packed_power_equals_mean_of_scalar_power() {
 
     let mut sim64 = unit.simulator64().unwrap();
     unit.run_stream64(&mut sim64, 3, seed).unwrap();
-    let packed = PowerModel::new(&lib).estimate64(&unit.netlist, &sim64);
+    let packed = PowerModel::new(&lib).estimate64(unit.netlist(), &sim64);
 
     let seeds = lane_seeds(seed);
     let mut mean_dynamic = 0.0f64;
     for &lane_seed in &seeds {
         let mut sim = unit.simulator().unwrap();
         unit.run_stream(&mut sim, 3, lane_seed).unwrap();
-        let p = PowerModel::new(&lib).estimate(&unit.netlist, &sim);
+        let p = PowerModel::new(&lib).estimate(unit.netlist(), &sim);
         mean_dynamic += p.dynamic_mw;
         // Clock + leakage are workload-independent: identical per lane.
         assert!((p.clock_mw - packed.clock_mw).abs() < 1e-12);

@@ -3,7 +3,6 @@
 
 use nibblemul::fabric::VectorUnit;
 use nibblemul::multipliers::Arch;
-use nibblemul::sim::Simulator;
 use nibblemul::synth::optimize;
 use nibblemul::tech::{sta, TechLibrary};
 use nibblemul::util::Xoshiro256;
@@ -13,12 +12,12 @@ fn optimization_preserves_every_architecture() {
     for arch in Arch::ALL {
         let raw_unit = VectorUnit::new_raw(arch, 4);
         let opt_unit =
-            VectorUnit::from_netlist(arch, 4, optimize(&raw_unit.netlist));
+            VectorUnit::from_netlist(arch, 4, optimize(raw_unit.netlist()));
         assert!(
-            opt_unit.netlist.n_cells() <= raw_unit.netlist.n_cells(),
+            opt_unit.netlist().n_cells() <= raw_unit.netlist().n_cells(),
             "{arch}: optimization must not grow the netlist"
         );
-        let mut sim_raw = Simulator::new(&raw_unit.netlist).unwrap();
+        let mut sim_raw = raw_unit.simulator().unwrap();
         let mut sim_opt = opt_unit.simulator().unwrap();
         let mut rng = Xoshiro256::new(99);
         for _ in 0..15 {
