@@ -9,16 +9,22 @@
 //!
 //!  1. execute it via PJRT (the deployment path, Python-free),
 //!  2. replay it bit-exactly in Rust and check logits parity,
-//!  3. run every u8×u8 product on the gate-level nibble fabric and
-//!     report cycles + energy per inference (the paper's figures of
-//!     merit applied to the motivating workload),
-//!  4. serve the same multiplies through the coordinator.
+//!  3. run every u8×u8 product on the gate-level nibble fabric via the
+//!     batched whole-layer GEMM path (`QuantMlp::forward_batched` over
+//!     `kernels::FabricExec`) and report cycles + energy per inference
+//!     (the paper's figures of merit applied to the motivating workload),
+//!  4. serve the same batched job streams through the coordinator — the
+//!     one execution path the MLP and CNN (`int8_conv`) scenarios share.
 //!
 //! Requires `make artifacts`.
 //!
 //!     cargo run --release --example int8_inference
 
-use nibblemul::coordinator::{Backend, Batch, LaneTag, SimBackend};
+use nibblemul::coordinator::{
+    Backend, BatcherConfig, Coordinator, CoordinatorConfig, Sim64Backend,
+    SimBackend,
+};
+use nibblemul::kernels::{CoordinatorExec, FabricExec};
 use nibblemul::model::quant::QuantMlp;
 use nibblemul::multipliers::Arch;
 use nibblemul::runtime::{ArtifactSet, Runtime};
@@ -89,18 +95,24 @@ fn main() -> anyhow::Result<()> {
     );
 
     // --- 3. hardware accounting on the simulated fabric ---------------
+    // Whole-layer batched GEMM job streams (weight-stationary) instead
+    // of the old per-element closure: one shared lowering path.
     println!("\n== gate-level nibble fabric accounting (16-lane) ==");
     let n_hw = 4usize; // gate-level sim is ~10^6 slower than silicon
-    let mut be = SimBackend::new(Arch::Nibble, 16)?;
-    let hw_logits = forward_on_fabric(&mlp, &ts.x[..n_hw], &mut be)?;
+    let mut exec = FabricExec::new(
+        Box::new(SimBackend::new(Arch::Nibble, 16)?),
+        BatcherConfig::unbounded(16),
+    );
+    let hw_logits = mlp.forward_batched(&ts.x[..n_hw].to_vec(), &mut exec)?;
     for (i, row) in hw_logits.iter().enumerate() {
         anyhow::ensure!(
             row == &replay[i],
             "fabric inference {i} diverged from model"
         );
     }
-    let cyc_per_inf = be.cycles() / n_hw as u64;
-    let e_per_inf_nj = be.energy_fj() / 1e6 / n_hw as f64;
+    let cyc_per_inf = exec.backend().cycles() / n_hw as u64;
+    let e_per_inf_nj = exec.backend().energy_fj() / 1e6 / n_hw as f64;
+    let stats = exec.stats();
     println!(
         "verified {n_hw} inferences bit-exactly on the simulated fabric"
     );
@@ -111,68 +123,42 @@ fn main() -> anyhow::Result<()> {
         e_per_inf_nj
     );
     println!(
-        "  ({} multiplies x 2 cycles / 16 lanes = {} fabric cycles minimum)",
-        mlp.mults_per_inference(),
-        mlp.mults_per_inference() * 2 / 16
+        "fabric ops: {} for {} multiplies ({} saved by broadcast \
+         coalescing, {:.1}% hit rate)",
+        stats.batches,
+        mlp.mults_per_inference() * n_hw,
+        stats.ops_saved(),
+        stats.hit_rate() * 100.0
     );
-    Ok(())
-}
 
-/// Route every weight-row × activation product through the fabric
-/// (vector = 16-wide weight chunk, broadcast = activation), then apply the
-/// zero-point algebra — mirrors `QuantLayer::accumulate` bit-exactly.
-fn forward_on_fabric(
-    mlp: &QuantMlp,
-    xs: &[Vec<i32>],
-    be: &mut SimBackend,
-) -> anyhow::Result<Vec<Vec<i32>>> {
-    let mut out = Vec::with_capacity(xs.len());
-    for x in xs {
-        let mut h: Vec<i32> = x.clone();
-        for (li, layer) in mlp.layers.iter().enumerate() {
-            let mut products = vec![0u32; layer.n_in * layer.n_out];
-            for (j, &xj) in h.iter().enumerate() {
-                let row =
-                    &layer.w_q[j * layer.n_out..(j + 1) * layer.n_out];
-                for start in (0..layer.n_out).step_by(16) {
-                    let end = (start + 16).min(layer.n_out);
-                    let a: Vec<u16> =
-                        row[start..end].iter().map(|&w| w as u16).collect();
-                    let lanes: Vec<LaneTag> = (0..a.len())
-                        .map(|i| LaneTag { job: 0, offset: i })
-                        .collect();
-                    let p = be.execute(&Batch {
-                        a,
-                        b: xj as u16,
-                        lanes,
-                    })?;
-                    for (k, v) in p.into_iter().enumerate() {
-                        products[j * layer.n_out + start + k] = v;
-                    }
-                }
-            }
-            let sum_x: i64 = h.iter().map(|&v| v as i64).sum();
-            let mut acc = vec![0i32; layer.n_out];
-            for (o, acc_o) in acc.iter_mut().enumerate() {
-                let mut s: i64 = 0;
-                let mut sum_w: i64 = 0;
-                for j in 0..layer.n_in {
-                    s += products[j * layer.n_out + o] as i64;
-                    sum_w += layer.w_q[j * layer.n_out + o] as i64;
-                }
-                *acc_o = (s - layer.w_zp as i64 * sum_x
-                    - layer.in_zp as i64 * sum_w
-                    + layer.n_in as i64
-                        * layer.in_zp as i64
-                        * layer.w_zp as i64
-                    + layer.bias_i32[o] as i64) as i32;
-            }
-            if li + 1 < mlp.layers.len() {
-                h = layer.requant(&acc);
-            } else {
-                out.push(acc);
-            }
-        }
-    }
-    Ok(out)
+    // --- 4. the serving path: same job streams via the coordinator ----
+    let width = 16;
+    let workers = 2;
+    let backends: Vec<Box<dyn Backend>> = (0..workers)
+        .map(|_| {
+            Sim64Backend::new(Arch::Nibble, width)
+                .map(|b| Box::new(b) as Box<dyn Backend>)
+        })
+        .collect::<anyhow::Result<_>>()?;
+    let coord = Coordinator::new(
+        CoordinatorConfig {
+            width,
+            queue_depth: workers * 4,
+            max_open: None,
+        },
+        backends,
+    );
+    let served = mlp
+        .forward_batched(&ts.x[..n_hw].to_vec(), &mut CoordinatorExec::new(&coord))?;
+    anyhow::ensure!(
+        served == hw_logits,
+        "coordinator-served inference diverged from the in-process fabric"
+    );
+    println!(
+        "\nserved the same {n_hw} inferences through the coordinator \
+         ({workers} workers x sim64:nibble x{width}): bit-exact"
+    );
+    println!("{}", coord.metrics.snapshot());
+    coord.shutdown();
+    Ok(())
 }

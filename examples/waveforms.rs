@@ -3,6 +3,10 @@
 //! (two-cycle cadence) and the LUT-based array multiplier (single step),
 //! plus the printed timeline.
 //!
+//! The netlists come from the raw flavor of the process-wide
+//! `design::DesignStore` (named internal signals preserved for the VCD),
+//! shared with the `fig3` CLI path — nothing is built privately.
+//!
 //!     cargo run --release --example waveforms [-- out_dir]
 
 use nibblemul::report::fig3_run;

@@ -18,7 +18,7 @@ fn main() {
     let elements: usize = jobs.iter().map(|j| j.a.len()).sum();
 
     bencher.bench("coordinator/batcher_only/512 jobs", Some(elements as f64), || {
-        let mut b = Batcher::new(BatcherConfig { width: 16 });
+        let mut b = Batcher::new(BatcherConfig::unbounded(16));
         for j in &jobs {
             b.push(j);
         }
@@ -37,6 +37,7 @@ fn main() {
                 CoordinatorConfig {
                     width: 16,
                     queue_depth: 16,
+                    max_open: None,
                 },
                 backends,
             );
@@ -62,6 +63,7 @@ fn main() {
                 CoordinatorConfig {
                     width: 16,
                     queue_depth: 16,
+                    max_open: None,
                 },
                 backends,
             );

@@ -11,6 +11,20 @@
 //!    independent vector elements");
 //! 3. pads the final partial op of a flush.
 //!
+//! The open-batch set can be **bounded** ([`BatcherConfig::max_open`]),
+//! modelling a physical coalescing buffer with a fixed number of entries:
+//! when an element carrying a new broadcast value arrives while the
+//! buffer is full, the least-recently-touched open batch is force-flushed
+//! (padded). This is what makes *job order* matter — a weight-stationary
+//! schedule (all work for one broadcast value contiguous,
+//! `kernels::schedule`) coalesces to the provably minimal fabric-op count
+//! even with a single buffer entry, while value-interleaved order thrashes
+//! the buffer into padded partial ops.
+//!
+//! Coalescing effectiveness is accounted in [`CoalesceStats`]: `chunks`
+//! is what the same jobs would cost with no cross-job coalescing, so
+//! `chunks - batches` is fabric ops saved by reuse.
+//!
 //! The batcher is pure (no threads, no clocks) and fully unit-testable;
 //! the service layer decides *when* to flush.
 
@@ -46,45 +60,167 @@ impl Batch {
 pub struct BatcherConfig {
     /// Fabric vector width (4, 8 or 16 in the paper's configurations).
     pub width: usize,
+    /// Maximum number of open (partially filled) batches — the size of
+    /// the modelled coalescing buffer. `None` is unbounded (a batch per
+    /// distinct broadcast value can stay open until flush).
+    pub max_open: Option<usize>,
+}
+
+impl BatcherConfig {
+    /// Unbounded coalescing buffer (the pre-PR-3 behaviour).
+    pub fn unbounded(width: usize) -> Self {
+        Self {
+            width,
+            max_open: None,
+        }
+    }
+
+    /// Coalescing buffer with `max_open` entries.
+    pub fn bounded(width: usize, max_open: usize) -> Self {
+        assert!(max_open >= 1, "coalescing buffer needs >= 1 entry");
+        Self {
+            width,
+            max_open: Some(max_open),
+        }
+    }
+}
+
+/// Coalescing effectiveness counters for one batcher lifetime.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CoalesceStats {
+    /// Fabric ops the pushed jobs would cost with NO cross-job
+    /// coalescing: `Σ_jobs ceil(len / width)` (each job padded alone).
+    pub chunks: u64,
+    /// Fabric ops actually emitted (full batches + padded partials).
+    pub batches: u64,
+    /// Partial batches force-flushed because the open buffer was full.
+    pub forced_flushes: u64,
+    /// Padding lanes emitted across all partial batches.
+    pub padded_lanes: u64,
+}
+
+impl CoalesceStats {
+    /// Fabric ops eliminated by cross-job broadcast coalescing. Never
+    /// negative: a job's elements enter the buffer contiguously, so a
+    /// broadcast value fragments at most once per job that carries it.
+    pub fn ops_saved(&self) -> u64 {
+        self.chunks.saturating_sub(self.batches)
+    }
+
+    /// Fraction of pre-coalescing fabric ops eliminated, in [0, 1].
+    pub fn hit_rate(&self) -> f64 {
+        if self.chunks == 0 {
+            0.0
+        } else {
+            self.ops_saved() as f64 / self.chunks as f64
+        }
+    }
+
+    /// Accumulate another batcher's counters (e.g. per-window batchers).
+    pub fn merge(&mut self, other: &CoalesceStats) {
+        self.chunks += other.chunks;
+        self.batches += other.batches;
+        self.forced_flushes += other.forced_flushes;
+        self.padded_lanes += other.padded_lanes;
+    }
+}
+
+/// An open batch plus the logical time it last received an element (the
+/// eviction key of the bounded buffer).
+struct OpenBatch {
+    batch: Batch,
+    touched: u64,
 }
 
 /// Accumulates jobs and emits fabric-width batches.
 pub struct Batcher {
     cfg: BatcherConfig,
     /// Open (partially filled) batch per broadcast-operand value.
-    open: HashMap<u16, Batch>,
+    open: HashMap<u16, OpenBatch>,
     emitted: Vec<Batch>,
+    /// Logical clock for LRU eviction (increments per appended element).
+    tick: u64,
+    stats: CoalesceStats,
 }
 
 impl Batcher {
     pub fn new(cfg: BatcherConfig) -> Self {
         assert!(cfg.width >= 1);
+        if let Some(cap) = cfg.max_open {
+            assert!(cap >= 1, "coalescing buffer needs >= 1 entry");
+        }
         Self {
             cfg,
             open: HashMap::new(),
             emitted: Vec::new(),
+            tick: 0,
+            stats: CoalesceStats::default(),
         }
     }
 
     /// Add a job; full batches become available via [`Batcher::drain`].
     pub fn push(&mut self, job: &VectorJob) {
         let width = self.cfg.width;
+        self.stats.chunks +=
+            (job.a.len() as u64 + width as u64 - 1) / width as u64;
         for (offset, &a) in job.a.iter().enumerate() {
-            let entry = self.open.entry(job.b).or_insert_with(|| Batch {
-                a: Vec::with_capacity(width),
-                b: job.b,
-                lanes: Vec::with_capacity(width),
-            });
-            entry.a.push(a);
-            entry.lanes.push(LaneTag {
+            if !self.open.contains_key(&job.b) {
+                if let Some(cap) = self.cfg.max_open {
+                    if self.open.len() >= cap {
+                        self.evict_lru();
+                    }
+                }
+                self.open.insert(
+                    job.b,
+                    OpenBatch {
+                        batch: Batch {
+                            a: Vec::with_capacity(width),
+                            b: job.b,
+                            lanes: Vec::with_capacity(width),
+                        },
+                        touched: self.tick,
+                    },
+                );
+            }
+            let entry = self.open.get_mut(&job.b).expect("just ensured");
+            entry.batch.a.push(a);
+            entry.batch.lanes.push(LaneTag {
                 job: job.id,
                 offset,
             });
-            if entry.a.len() == width {
-                let full = self.open.remove(&job.b).expect("entry exists");
+            entry.touched = self.tick;
+            self.tick += 1;
+            if entry.batch.a.len() == width {
+                let full =
+                    self.open.remove(&job.b).expect("entry exists").batch;
+                self.stats.batches += 1;
                 self.emitted.push(full);
             }
         }
+    }
+
+    /// Force-flush the least-recently-touched open batch (padded). Ticks
+    /// are unique per element, so the victim is deterministic.
+    fn evict_lru(&mut self) {
+        let victim = self
+            .open
+            .iter()
+            .min_by_key(|(_, o)| o.touched)
+            .map(|(&b, _)| b);
+        if let Some(b) = victim {
+            let open = self.open.remove(&b).expect("victim exists");
+            self.stats.forced_flushes += 1;
+            self.emit_padded(open.batch);
+        }
+    }
+
+    /// Pad a partial batch to fabric width and emit it.
+    fn emit_padded(&mut self, mut batch: Batch) {
+        self.stats.padded_lanes +=
+            (self.cfg.width - batch.a.len()) as u64;
+        batch.a.resize(self.cfg.width, 0);
+        self.stats.batches += 1;
+        self.emitted.push(batch);
     }
 
     /// Take all complete batches accumulated so far.
@@ -94,21 +230,29 @@ impl Batcher {
 
     /// Flush every open partial batch, padding with zero lanes.
     pub fn flush(&mut self) -> Vec<Batch> {
-        let width = self.cfg.width;
-        let mut out = self.drain();
         let mut keys: Vec<u16> = self.open.keys().copied().collect();
         keys.sort_unstable(); // deterministic order
         for k in keys {
-            let mut batch = self.open.remove(&k).expect("key exists");
-            batch.a.resize(width, 0);
-            out.push(batch);
+            let open = self.open.remove(&k).expect("key exists");
+            self.emit_padded(open.batch);
         }
-        out
+        self.drain()
     }
 
     /// Elements currently waiting in partial batches.
     pub fn pending_elements(&self) -> usize {
-        self.open.values().map(|b| b.lanes.len()).sum()
+        self.open.values().map(|o| o.batch.lanes.len()).sum()
+    }
+
+    /// Open partial batches currently held (≤ `max_open` when bounded).
+    pub fn open_batches(&self) -> usize {
+        self.open.len()
+    }
+
+    /// Coalescing counters accumulated so far. `batches` is final only
+    /// after [`Batcher::flush`].
+    pub fn stats(&self) -> CoalesceStats {
+        self.stats
     }
 }
 
@@ -126,7 +270,7 @@ mod tests {
 
     #[test]
     fn splits_long_jobs_into_width_chunks() {
-        let mut batcher = Batcher::new(BatcherConfig { width: 4 });
+        let mut batcher = Batcher::new(BatcherConfig::unbounded(4));
         batcher.push(&job(0, 10, 7));
         let full = batcher.drain();
         assert_eq!(full.len(), 2, "10 elements -> two full 4-wide batches");
@@ -135,11 +279,17 @@ mod tests {
         assert_eq!(rest.len(), 1);
         assert_eq!(rest[0].occupancy(), 2);
         assert_eq!(rest[0].a.len(), 4, "padded to width");
+        let stats = batcher.stats();
+        assert_eq!(stats.chunks, 3);
+        assert_eq!(stats.batches, 3);
+        assert_eq!(stats.ops_saved(), 0, "one job: nothing to coalesce");
+        assert_eq!(stats.padded_lanes, 2);
+        assert_eq!(stats.forced_flushes, 0);
     }
 
     #[test]
     fn coalesces_jobs_sharing_broadcast_operand() {
-        let mut batcher = Batcher::new(BatcherConfig { width: 4 });
+        let mut batcher = Batcher::new(BatcherConfig::unbounded(4));
         batcher.push(&job(0, 2, 9));
         batcher.push(&job(1, 2, 9)); // same b: completes the batch
         let full = batcher.drain();
@@ -147,14 +297,20 @@ mod tests {
         assert_eq!(full[0].b, 9);
         let jobs: Vec<u64> = full[0].lanes.iter().map(|l| l.job).collect();
         assert_eq!(jobs, vec![0, 0, 1, 1]);
+        let stats = batcher.stats();
+        assert_eq!(stats.chunks, 2, "each job alone would cost one op");
+        assert_eq!(stats.batches, 1);
+        assert_eq!(stats.ops_saved(), 1);
+        assert!((stats.hit_rate() - 0.5).abs() < 1e-12);
     }
 
     #[test]
     fn distinct_broadcast_operands_never_mix() {
-        let mut batcher = Batcher::new(BatcherConfig { width: 4 });
+        let mut batcher = Batcher::new(BatcherConfig::unbounded(4));
         batcher.push(&job(0, 3, 1));
         batcher.push(&job(1, 3, 2));
         assert!(batcher.drain().is_empty());
+        assert_eq!(batcher.open_batches(), 2);
         let flushed = batcher.flush();
         assert_eq!(flushed.len(), 2);
         assert!(flushed.iter().all(|b| b.lanes.iter().all(|l| {
@@ -164,7 +320,7 @@ mod tests {
 
     #[test]
     fn lane_tags_reassemble_original_offsets() {
-        let mut batcher = Batcher::new(BatcherConfig { width: 8 });
+        let mut batcher = Batcher::new(BatcherConfig::unbounded(8));
         batcher.push(&job(42, 13, 5));
         let mut seen = vec![false; 13];
         for batch in batcher.flush() {
@@ -175,5 +331,95 @@ mod tests {
             }
         }
         assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn bounded_buffer_evicts_least_recently_touched() {
+        // Buffer of 2; three distinct values. Pushing value 3 must evict
+        // value 1 (touched before value 2), padded, counted as forced.
+        let mut batcher = Batcher::new(BatcherConfig::bounded(4, 2));
+        batcher.push(&job(0, 2, 1));
+        batcher.push(&job(1, 2, 2));
+        assert!(batcher.drain().is_empty());
+        batcher.push(&job(2, 1, 3));
+        let forced = batcher.drain();
+        assert_eq!(forced.len(), 1, "value 1 evicted");
+        assert_eq!(forced[0].b, 1);
+        assert_eq!(forced[0].occupancy(), 2);
+        assert_eq!(forced[0].a.len(), 4, "evicted batch is padded");
+        assert_eq!(batcher.open_batches(), 2);
+        let stats = batcher.stats();
+        assert_eq!(stats.forced_flushes, 1);
+        let rest = batcher.flush();
+        assert_eq!(rest.len(), 2);
+        let total = batcher.stats();
+        assert_eq!(total.chunks, 3);
+        assert_eq!(total.batches, 3);
+    }
+
+    #[test]
+    fn bounded_buffer_never_exceeds_capacity() {
+        let mut batcher = Batcher::new(BatcherConfig::bounded(8, 3));
+        for id in 0..40u64 {
+            batcher.push(&job(id, 1 + (id as usize % 5), (id % 17) as u16));
+            assert!(batcher.open_batches() <= 3);
+        }
+        let _ = batcher.flush();
+        assert_eq!(batcher.open_batches(), 0);
+    }
+
+    #[test]
+    fn value_sorted_stream_is_immune_to_a_tiny_buffer() {
+        // The weight-stationary property: jobs grouped by broadcast value
+        // coalesce identically with a 1-entry buffer and an unbounded one.
+        let jobs: Vec<VectorJob> = vec![
+            job(0, 3, 5),
+            job(1, 6, 5),
+            job(2, 2, 9),
+            job(3, 7, 9),
+            job(4, 1, 11),
+        ];
+        let mut bounded = Batcher::new(BatcherConfig::bounded(4, 1));
+        let mut unbounded = Batcher::new(BatcherConfig::unbounded(4));
+        for j in &jobs {
+            bounded.push(j);
+            unbounded.push(j);
+        }
+        let nb = bounded.flush().len();
+        let nu = unbounded.flush().len();
+        assert_eq!(nb, nu, "sorted stream: buffer bound costs nothing");
+        // ceil(9/4) + ceil(9/4) + ceil(1/4) = 3 + 3 + 1
+        assert_eq!(nb, 7, "provably minimal op count");
+        assert_eq!(bounded.stats().batches, unbounded.stats().batches);
+    }
+
+    #[test]
+    fn element_conservation_under_forced_flushes() {
+        // Interleaved values thrash a 1-entry buffer; every element must
+        // still come out exactly once with its lane tag intact.
+        let jobs: Vec<VectorJob> =
+            (0..12).map(|id| job(id, 3, (id % 4) as u16)).collect();
+        let mut batcher = Batcher::new(BatcherConfig::bounded(4, 1));
+        for j in &jobs {
+            batcher.push(j);
+        }
+        let batches = batcher.flush();
+        let mut seen: std::collections::HashMap<(u64, usize), u16> =
+            Default::default();
+        for b in &batches {
+            for (lane, tag) in b.lanes.iter().enumerate() {
+                let dup = seen.insert((tag.job, tag.offset), b.a[lane]);
+                assert!(dup.is_none(), "duplicated lane {tag:?}");
+            }
+        }
+        assert_eq!(seen.len(), 12 * 3, "element conservation");
+        let stats = batcher.stats();
+        assert_eq!(stats.batches, batches.len() as u64);
+        assert!(stats.forced_flushes > 0, "interleaving must thrash");
+        // Worst case: every value-switch fragments, so no coalescing at
+        // all — but never MORE ops than the no-coalescing chunk count.
+        assert_eq!(stats.batches, stats.chunks);
+        assert_eq!(stats.ops_saved(), 0);
+        assert_eq!(stats.hit_rate(), 0.0);
     }
 }

@@ -68,6 +68,15 @@ pub struct Metrics {
     pub exec_passes: AtomicU64,
     pub lanes_executed: AtomicU64,
     pub lanes_padded: AtomicU64,
+    /// Fabric ops the submitted jobs would have cost with NO cross-job
+    /// broadcast coalescing (per-job chunk count — see
+    /// [`super::CoalesceStats`]).
+    pub coalesce_chunks: AtomicU64,
+    /// Fabric ops eliminated by broadcast coalescing
+    /// (`coalesce_chunks - batches emitted`).
+    pub coalesce_saved: AtomicU64,
+    /// Partial batches force-flushed by the bounded coalescing buffer.
+    pub coalesce_forced: AtomicU64,
     pub errors: AtomicU64,
     pub job_latency: LatencyHistogram,
 }
@@ -81,6 +90,9 @@ pub struct MetricsSnapshot {
     pub exec_passes: u64,
     pub lanes_executed: u64,
     pub lanes_padded: u64,
+    pub coalesce_chunks: u64,
+    pub coalesce_saved: u64,
+    pub coalesce_forced: u64,
     pub errors: u64,
     pub mean_latency_us: f64,
     pub p50_latency_us: u64,
@@ -97,6 +109,16 @@ impl MetricsSnapshot {
             self.batches_executed as f64 / self.exec_passes as f64
         }
     }
+
+    /// Fraction of pre-coalescing fabric ops eliminated by broadcast
+    /// reuse, in [0, 1] (the paper's coalescing win, measured).
+    pub fn coalesce_hit_rate(&self) -> f64 {
+        if self.coalesce_chunks == 0 {
+            0.0
+        } else {
+            self.coalesce_saved as f64 / self.coalesce_chunks as f64
+        }
+    }
 }
 
 impl Metrics {
@@ -108,6 +130,9 @@ impl Metrics {
             exec_passes: self.exec_passes.load(Ordering::Relaxed),
             lanes_executed: self.lanes_executed.load(Ordering::Relaxed),
             lanes_padded: self.lanes_padded.load(Ordering::Relaxed),
+            coalesce_chunks: self.coalesce_chunks.load(Ordering::Relaxed),
+            coalesce_saved: self.coalesce_saved.load(Ordering::Relaxed),
+            coalesce_forced: self.coalesce_forced.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
             mean_latency_us: self.job_latency.mean_us(),
             p50_latency_us: self.job_latency.quantile_us(0.5),
@@ -142,6 +167,16 @@ impl std::fmt::Display for MetricsSnapshot {
             self.lanes_padded,
             self.errors
         )?;
+        writeln!(
+            f,
+            "coalesce: {} chunks -> {} fabric ops ({} saved, {:.1}% hit \
+             rate, {} forced flushes)",
+            self.coalesce_chunks,
+            self.coalesce_chunks - self.coalesce_saved,
+            self.coalesce_saved,
+            self.coalesce_hit_rate() * 100.0,
+            self.coalesce_forced
+        )?;
         write!(
             f,
             "latency: mean {:.1} us, p50 <= {} us, p99 <= {} us",
@@ -173,5 +208,21 @@ mod tests {
         m.batches_executed.store(10, Ordering::Relaxed);
         m.lanes_executed.store(60, Ordering::Relaxed);
         assert!((m.occupancy(8) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn coalesce_hit_rate_math() {
+        let m = Metrics::default();
+        let snap = m.snapshot();
+        assert_eq!(snap.coalesce_hit_rate(), 0.0, "empty: defined as 0");
+        m.coalesce_chunks.store(40, Ordering::Relaxed);
+        m.coalesce_saved.store(10, Ordering::Relaxed);
+        m.coalesce_forced.store(3, Ordering::Relaxed);
+        let snap = m.snapshot();
+        assert!((snap.coalesce_hit_rate() - 0.25).abs() < 1e-12);
+        let text = format!("{snap}");
+        assert!(text.contains("coalesce: 40 chunks -> 30 fabric ops"));
+        assert!(text.contains("25.0% hit rate"));
+        assert!(text.contains("3 forced flushes"));
     }
 }

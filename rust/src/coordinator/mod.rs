@@ -20,7 +20,7 @@ mod pool;
 mod service;
 
 pub use backend::{Backend, ExactBackend, PjrtBackend, Sim64Backend, SimBackend};
-pub use batcher::{Batch, Batcher, BatcherConfig, LaneTag};
+pub use batcher::{Batch, Batcher, BatcherConfig, CoalesceStats, LaneTag};
 pub use metrics::{LatencyHistogram, Metrics, MetricsSnapshot};
 pub use pool::{Pool, PoolDone, PoolWorker, WorkerPool};
 pub use service::{Coordinator, CoordinatorConfig, JobResult};

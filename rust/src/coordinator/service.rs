@@ -28,6 +28,10 @@ pub struct CoordinatorConfig {
     pub width: usize,
     /// Bounded work-queue depth (backpressure point).
     pub queue_depth: usize,
+    /// Coalescing-buffer entries (open partial batches) the batcher may
+    /// hold; `None` is unbounded. A finite buffer makes job *order*
+    /// matter — see `kernels::schedule`.
+    pub max_open: Option<usize>,
 }
 
 impl Default for CoordinatorConfig {
@@ -35,6 +39,7 @@ impl Default for CoordinatorConfig {
         Self {
             width: 16,
             queue_depth: 64,
+            max_open: None,
         }
     }
 }
@@ -71,6 +76,7 @@ impl Coordinator {
 
         let mut batcher = Batcher::new(BatcherConfig {
             width: self.cfg.width,
+            max_open: self.cfg.max_open,
         });
         let mut pending: HashMap<u64, PendingJob> = HashMap::new();
         let now = Instant::now();
@@ -87,6 +93,16 @@ impl Coordinator {
             batcher.push(job);
         }
         let mut batches = batcher.flush();
+        let cstats = batcher.stats();
+        self.metrics
+            .coalesce_chunks
+            .fetch_add(cstats.chunks, Ordering::Relaxed);
+        self.metrics
+            .coalesce_saved
+            .fetch_add(cstats.ops_saved(), Ordering::Relaxed);
+        self.metrics
+            .coalesce_forced
+            .fetch_add(cstats.forced_flushes, Ordering::Relaxed);
         // Dispatch with bounded in-flight: submit all (queue blocks), then
         // drain. To avoid deadlock with a bounded queue we interleave
         // submit/recv.
@@ -176,6 +192,7 @@ mod tests {
         let cfg = CoordinatorConfig {
             width: 8,
             queue_depth: 4,
+            max_open: None,
         };
         let backends: Vec<Box<dyn Backend>> = (0..3)
             .map(|_| Box::new(ExactBackend) as Box<dyn Backend>)
@@ -200,6 +217,7 @@ mod tests {
         let cfg = CoordinatorConfig {
             width: 4,
             queue_depth: 4,
+            max_open: None,
         };
         let backends: Vec<Box<dyn Backend>> = (0..2)
             .map(|_| {
@@ -221,6 +239,7 @@ mod tests {
         let cfg = CoordinatorConfig {
             width: 4,
             queue_depth: 64,
+            max_open: None,
         };
         let backends: Vec<Box<dyn Backend>> =
             vec![Box::new(Sim64Backend::new(Arch::Nibble, 4).unwrap())];

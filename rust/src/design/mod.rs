@@ -86,7 +86,9 @@ impl CompiledDesign {
     }
 
     /// Compile a design point **without** optimization (keeps internal
-    /// named signals — the Fig. 3 VCD path). Never cached.
+    /// named signals — the Fig. 3 VCD path). Prefer
+    /// [`DesignStore::get_raw`], which caches these bundles; call this
+    /// directly only for uncached experiments.
     pub fn raw(arch: Arch, n: usize) -> Result<Self> {
         let netlist = arch.try_build(n)?;
         Self::wrap(arch, n, netlist)
@@ -120,10 +122,19 @@ impl CompiledDesign {
 type Slot = Arc<OnceLock<std::result::Result<Arc<CompiledDesign>, String>>>;
 
 /// Process-wide cache of compiled designs.
+///
+/// Two flavors share the store: **optimized** bundles ([`DesignStore::get`],
+/// what every evaluation/serving path drives) and **raw** bundles
+/// ([`DesignStore::get_raw`], unoptimized netlists that keep internal
+/// named signals for VCD waveform debugging — the Fig. 3 path). The
+/// flavors are cached independently: a raw request never pays for
+/// synthesis and an optimized request never loses its folding.
 pub struct DesignStore {
     slots: Mutex<HashMap<DesignKey, Slot>>,
+    raw_slots: Mutex<HashMap<DesignKey, Slot>>,
     lib: TechLibrary,
     builds: AtomicU64,
+    raw_builds: AtomicU64,
 }
 
 impl DesignStore {
@@ -137,8 +148,10 @@ impl DesignStore {
     pub fn with_library(lib: TechLibrary) -> Self {
         Self {
             slots: Mutex::new(HashMap::new()),
+            raw_slots: Mutex::new(HashMap::new()),
             lib,
             builds: AtomicU64::new(0),
+            raw_builds: AtomicU64::new(0),
         }
     }
 
@@ -149,28 +162,50 @@ impl DesignStore {
         GLOBAL.get_or_init(DesignStore::new)
     }
 
+    /// Shared slot-fetch: one build per key per flavor map, built outside
+    /// the map lock so distinct keys build in parallel (the pooled sweep
+    /// relies on this); same-key requesters block on the per-key
+    /// `OnceLock` until the single build completes.
+    fn fetch(
+        &self,
+        slots: &Mutex<HashMap<DesignKey, Slot>>,
+        builds: &AtomicU64,
+        key: DesignKey,
+        flavor: &str,
+        build: impl FnOnce() -> Result<CompiledDesign>,
+    ) -> Result<Arc<CompiledDesign>> {
+        let slot: Slot = {
+            let mut slots = slots.lock().expect("design store lock");
+            Arc::clone(slots.entry(key).or_default())
+        };
+        let result = slot.get_or_init(|| {
+            builds.fetch_add(1, Ordering::Relaxed);
+            build().map(Arc::new).map_err(|e| format!("{e:#}"))
+        });
+        match result {
+            Ok(design) => Ok(Arc::clone(design)),
+            Err(msg) => Err(anyhow!("building {flavor}design {key}: {msg}")),
+        }
+    }
+
     /// Fetch the compiled artifact for `(arch, n)`, building it if this
     /// is the first request. Width validation errors (outside `1..=64`)
     /// are reported here as `anyhow` errors.
     pub fn get(&self, arch: Arch, n: usize) -> Result<Arc<CompiledDesign>> {
         let key = DesignKey { arch, n };
-        let slot: Slot = {
-            let mut slots = self.slots.lock().expect("design store lock");
-            Arc::clone(slots.entry(key).or_default())
-        };
-        // Build outside the map lock: distinct keys build in parallel
-        // (the pooled sweep relies on this); same-key requesters block on
-        // the OnceLock until the single build completes.
-        let result = slot.get_or_init(|| {
-            self.builds.fetch_add(1, Ordering::Relaxed);
+        self.fetch(&self.slots, &self.builds, key, "", || {
             CompiledDesign::build(arch, n, &self.lib)
-                .map(Arc::new)
-                .map_err(|e| format!("{e:#}"))
-        });
-        match result {
-            Ok(design) => Ok(Arc::clone(design)),
-            Err(msg) => Err(anyhow!("building design {key}: {msg}")),
-        }
+        })
+    }
+
+    /// Fetch the **raw** (unoptimized, named-signal-preserving) compiled
+    /// artifact for `(arch, n)`, building it once per process — the VCD
+    /// waveform path ([`crate::report::fig3_run`], `examples/waveforms`).
+    pub fn get_raw(&self, arch: Arch, n: usize) -> Result<Arc<CompiledDesign>> {
+        let key = DesignKey { arch, n };
+        self.fetch(&self.raw_slots, &self.raw_builds, key, "raw ", || {
+            CompiledDesign::raw(arch, n)
+        })
     }
 
     /// Number of designs built so far (not merely requested) — the
@@ -179,9 +214,15 @@ impl DesignStore {
         self.builds.load(Ordering::Relaxed)
     }
 
-    /// Number of cached (or in-flight) design keys.
+    /// Number of raw (waveform-flavor) designs built so far.
+    pub fn raw_builds(&self) -> u64 {
+        self.raw_builds.load(Ordering::Relaxed)
+    }
+
+    /// Number of cached (or in-flight) design keys, both flavors.
     pub fn len(&self) -> usize {
         self.slots.lock().expect("design store lock").len()
+            + self.raw_slots.lock().expect("raw design store lock").len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -245,6 +286,26 @@ mod tests {
         // The error is cached too: no repeated build work.
         let _ = store.get(Arch::Nibble, 0).unwrap_err();
         assert_eq!(store.builds(), 3);
+    }
+
+    #[test]
+    fn raw_flavor_is_cached_independently() {
+        let store = DesignStore::new();
+        let r1 = store.get_raw(Arch::Nibble, 4).unwrap();
+        let r2 = store.get_raw(Arch::Nibble, 4).unwrap();
+        assert!(Arc::ptr_eq(&r1, &r2), "raw bundle built once");
+        assert_eq!(store.raw_builds(), 1);
+        assert_eq!(store.builds(), 0, "no synthesis paid for waveforms");
+        // Raw keeps the named internal signals synthesis would fold.
+        assert!(r1.report.is_none());
+        let o1 = store.get_raw(Arch::Nibble, 8).unwrap();
+        assert!(!Arc::ptr_eq(&r1, &o1));
+        let opt = store.get(Arch::Nibble, 4).unwrap();
+        assert!(
+            !Arc::ptr_eq(&r1, &opt),
+            "flavors never alias: raw has more cells"
+        );
+        assert!(opt.netlist.n_cells() <= r1.netlist.n_cells());
     }
 
     #[test]

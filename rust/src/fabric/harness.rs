@@ -107,12 +107,15 @@ impl VectorUnit {
         Self::try_new(arch, n).unwrap_or_else(|e| panic!("{e:#}"))
     }
 
-    /// Build without optimization (keeps internal named signals for VCD).
-    /// Uncached — raw netlists exist only for waveform debugging.
+    /// Build without optimization (keeps internal named signals for VCD
+    /// waveform debugging). Served from the global [`DesignStore`]'s raw
+    /// flavor — repeated waveform runs (Fig. 3, the `waveforms` example)
+    /// share one compiled bundle instead of rebuilding privately.
     pub fn new_raw(arch: Arch, n: usize) -> Self {
-        let design = CompiledDesign::raw(arch, n)
+        let design = DesignStore::global()
+            .get_raw(arch, n)
             .unwrap_or_else(|e| panic!("{e:#}"));
-        Self::from_design(Arc::new(design))
+        Self::from_design(design)
     }
 
     /// Wrap a shared compiled design as a drivable unit.

@@ -1,0 +1,317 @@
+//! Conv2d lowering: im2col patch extraction turns an int8 convolution
+//! into the GEMM of [`super::gemm`], which then lowers onto the
+//! broadcast-reuse fabric.
+//!
+//! Layouts (all row-major):
+//! * input   — `(c_in, h, w)` channel-major image;
+//! * weights — `(c_out, c_in, kh, kw)` (OIHW);
+//! * im2col  — `A (m × k)` with `m = out_h·out_w` output positions
+//!   (row-major over `(oy, ox)`) and `k = c_in·kh·kw` patch taps
+//!   (row-major over `(c, ky, kx)`);
+//! * GEMM B  — `(k × c_out)`: `B[tap, o] = W[o, tap]`;
+//! * output  — GEMM `C (m × c_out)` is position-major; [`to_chw`]
+//!   transposes to the conventional `(c_out, out_h, out_w)`.
+//!
+//! Out-of-image taps read `pad_value` — for quantized inputs that is the
+//! input zero point (quantized zero), which keeps the zero-point algebra
+//! of `model::quant::QuantConv2d` exact.
+
+use anyhow::{ensure, Result};
+
+use super::gemm::GemmSpec;
+
+/// Geometry of one conv2d layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Conv2dSpec {
+    pub c_in: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c_out: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl Conv2dSpec {
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            self.c_in >= 1
+                && self.h >= 1
+                && self.w >= 1
+                && self.c_out >= 1
+                && self.kh >= 1
+                && self.kw >= 1,
+            "degenerate conv2d shape: {self:?}"
+        );
+        ensure!(self.stride >= 1, "stride must be >= 1");
+        ensure!(
+            self.h + 2 * self.pad >= self.kh
+                && self.w + 2 * self.pad >= self.kw,
+            "kernel larger than padded input: {self:?}"
+        );
+        Ok(())
+    }
+
+    pub fn out_h(&self) -> usize {
+        (self.h + 2 * self.pad - self.kh) / self.stride + 1
+    }
+
+    pub fn out_w(&self) -> usize {
+        (self.w + 2 * self.pad - self.kw) / self.stride + 1
+    }
+
+    /// Patch length: the GEMM reduction depth.
+    pub fn patch_len(&self) -> usize {
+        self.c_in * self.kh * self.kw
+    }
+
+    /// The GEMM this convolution lowers to.
+    pub fn gemm(&self) -> GemmSpec {
+        GemmSpec::new(self.out_h() * self.out_w(), self.patch_len(), self.c_out)
+    }
+
+    /// Total u8×u8 products.
+    pub fn products(&self) -> u64 {
+        self.gemm().products()
+    }
+}
+
+impl std::fmt::Display for Conv2dSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}x{}x{} -> {}c {}x{} s{} p{}",
+            self.c_in, self.h, self.w, self.c_out, self.kh, self.kw,
+            self.stride, self.pad
+        )
+    }
+}
+
+/// Extract the im2col patch matrix `A (m × k)`; out-of-image taps read
+/// `pad_value`.
+pub fn im2col(
+    spec: &Conv2dSpec,
+    input: &[u16],
+    pad_value: u16,
+) -> Result<Vec<u16>> {
+    spec.validate()?;
+    ensure!(
+        input.len() == spec.c_in * spec.h * spec.w,
+        "input must be c_in*h*w = {} elements",
+        spec.c_in * spec.h * spec.w
+    );
+    let (oh, ow, k) = (spec.out_h(), spec.out_w(), spec.patch_len());
+    let mut a = vec![0u16; oh * ow * k];
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let row = (oy * ow + ox) * k;
+            let mut tap = 0;
+            for c in 0..spec.c_in {
+                for ky in 0..spec.kh {
+                    for kx in 0..spec.kw {
+                        let iy = (oy * spec.stride + ky) as isize
+                            - spec.pad as isize;
+                        let ix = (ox * spec.stride + kx) as isize
+                            - spec.pad as isize;
+                        a[row + tap] = if iy >= 0
+                            && ix >= 0
+                            && (iy as usize) < spec.h
+                            && (ix as usize) < spec.w
+                        {
+                            input[(c * spec.h + iy as usize) * spec.w
+                                + ix as usize]
+                        } else {
+                            pad_value
+                        };
+                        tap += 1;
+                    }
+                }
+            }
+        }
+    }
+    Ok(a)
+}
+
+/// Reshape OIHW weights into the GEMM stationary operand `B (k × c_out)`.
+pub fn weights_to_gemm(spec: &Conv2dSpec, w: &[u16]) -> Result<Vec<u16>> {
+    spec.validate()?;
+    let k = spec.patch_len();
+    ensure!(
+        w.len() == spec.c_out * k,
+        "weights must be c_out*c_in*kh*kw = {} elements",
+        spec.c_out * k
+    );
+    let mut b = vec![0u16; k * spec.c_out];
+    for o in 0..spec.c_out {
+        for tap in 0..k {
+            b[tap * spec.c_out + o] = w[o * k + tap];
+        }
+    }
+    Ok(b)
+}
+
+/// Transpose the position-major GEMM output `C (m × c_out)` into the
+/// conventional channel-major `(c_out, out_h, out_w)` layout.
+pub fn to_chw<T: Copy>(spec: &Conv2dSpec, c: &[T]) -> Vec<T> {
+    let (m, n) = (spec.out_h() * spec.out_w(), spec.c_out);
+    assert_eq!(c.len(), m * n, "GEMM output shape");
+    let mut out = Vec::with_capacity(m * n);
+    for o in 0..n {
+        for pos in 0..m {
+            out.push(c[pos * n + o]);
+        }
+    }
+    out
+}
+
+/// Direct-loop i32 conv2d oracle, `(c_out, out_h, out_w)` layout,
+/// out-of-image taps reading `pad_value` — the reference the im2col+GEMM
+/// path must match bit-exactly.
+pub fn conv2d_i32(
+    spec: &Conv2dSpec,
+    input: &[u16],
+    w: &[u16],
+    pad_value: u16,
+) -> Result<Vec<i32>> {
+    spec.validate()?;
+    ensure!(input.len() == spec.c_in * spec.h * spec.w, "input shape");
+    ensure!(w.len() == spec.c_out * spec.patch_len(), "weight shape");
+    let (oh, ow) = (spec.out_h(), spec.out_w());
+    let mut out = vec![0i32; spec.c_out * oh * ow];
+    for o in 0..spec.c_out {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut acc = 0i64;
+                for c in 0..spec.c_in {
+                    for ky in 0..spec.kh {
+                        for kx in 0..spec.kw {
+                            let iy = (oy * spec.stride + ky) as isize
+                                - spec.pad as isize;
+                            let ix = (ox * spec.stride + kx) as isize
+                                - spec.pad as isize;
+                            let x = if iy >= 0
+                                && ix >= 0
+                                && (iy as usize) < spec.h
+                                && (ix as usize) < spec.w
+                            {
+                                input[(c * spec.h + iy as usize) * spec.w
+                                    + ix as usize]
+                            } else {
+                                pad_value
+                            };
+                            let wt = w[((o * spec.c_in + c) * spec.kh
+                                + ky)
+                                * spec.kw
+                                + kx];
+                            acc += x as i64 * wt as i64;
+                        }
+                    }
+                }
+                out[(o * oh + oy) * ow + ox] = i32::try_from(acc)
+                    .expect("oracle accumulator overflow");
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometry() {
+        let spec = Conv2dSpec {
+            c_in: 3,
+            h: 8,
+            w: 10,
+            c_out: 4,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            pad: 1,
+        };
+        spec.validate().unwrap();
+        assert_eq!((spec.out_h(), spec.out_w()), (8, 10));
+        assert_eq!(spec.patch_len(), 27);
+        assert_eq!(spec.gemm(), GemmSpec::new(80, 27, 4));
+        let strided = Conv2dSpec {
+            stride: 2,
+            pad: 0,
+            ..spec
+        };
+        assert_eq!((strided.out_h(), strided.out_w()), (3, 4));
+    }
+
+    #[test]
+    fn im2col_identity_kernel_is_the_image() {
+        // 1x1 kernel, stride 1, no pad: A is the image, position-major.
+        let spec = Conv2dSpec {
+            c_in: 1,
+            h: 2,
+            w: 3,
+            c_out: 1,
+            kh: 1,
+            kw: 1,
+            stride: 1,
+            pad: 0,
+        };
+        let img: Vec<u16> = vec![1, 2, 3, 4, 5, 6];
+        let a = im2col(&spec, &img, 99).unwrap();
+        assert_eq!(a, img);
+    }
+
+    #[test]
+    fn im2col_pads_with_the_given_value() {
+        let spec = Conv2dSpec {
+            c_in: 1,
+            h: 2,
+            w: 2,
+            c_out: 1,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            pad: 1,
+        };
+        let img: Vec<u16> = vec![1, 2, 3, 4];
+        let a = im2col(&spec, &img, 7).unwrap();
+        assert_eq!(a.len(), 4 * 9);
+        // Top-left output position: the 3x3 patch centred on (0,0).
+        assert_eq!(&a[..9], &[7, 7, 7, 7, 1, 2, 7, 3, 4]);
+        // Padded taps never leak the default 0.
+        assert!(a.iter().all(|&x| x != 0));
+    }
+
+    #[test]
+    fn to_chw_transposes() {
+        let spec = Conv2dSpec {
+            c_in: 1,
+            h: 2,
+            w: 1,
+            c_out: 2,
+            kh: 1,
+            kw: 1,
+            stride: 1,
+            pad: 0,
+        };
+        // m=2 positions, n=2 channels: [[p0c0, p0c1], [p1c0, p1c1]]
+        let chw = to_chw(&spec, &[10, 20, 30, 40]);
+        assert_eq!(chw, vec![10, 30, 20, 40]);
+    }
+
+    #[test]
+    fn bad_geometry_errors() {
+        let spec = Conv2dSpec {
+            c_in: 1,
+            h: 2,
+            w: 2,
+            c_out: 1,
+            kh: 5,
+            kw: 5,
+            stride: 1,
+            pad: 0,
+        };
+        assert!(spec.validate().is_err(), "kernel larger than image");
+    }
+}

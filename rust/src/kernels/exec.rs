@@ -1,0 +1,265 @@
+//! Executors for lowered job streams: one trait, three substrates.
+//!
+//! A lowering ([`super::GemmPlan`]) produces a stream of [`VectorJob`]s
+//! with dense ids; an executor turns the stream into per-job products.
+//! All three substrates compute the same function, so the MLP and CNN
+//! scenarios share one execution path and swap substrates freely:
+//!
+//! * [`ClosureExec`] — a scalar multiply closure (`mul_exact`, a golden
+//!   model, or a fault-injected variant). The oracle path in tests.
+//! * [`FabricExec`]  — in-process gate-level execution: jobs go through a
+//!   [`Batcher`] (optionally with a bounded coalescing buffer) and the
+//!   batches run on one [`Backend`] (scalar or 64-lane packed fabric).
+//!   Deterministic and single-threaded, so its fabric-op counts are what
+//!   `bench-gemm` reports; exposes [`CoalesceStats`] and the backend for
+//!   cycle/energy introspection.
+//! * [`CoordinatorExec`] — the serving path: jobs submitted to a running
+//!   [`Coordinator`] (batching, bounded queue, worker pool, metrics).
+
+use anyhow::{ensure, Result};
+
+use crate::coordinator::{
+    Backend, Batch, Batcher, BatcherConfig, CoalesceStats, Coordinator,
+    JobResult,
+};
+use crate::workload::VectorJob;
+
+/// A job-stream execution engine.
+pub trait JobExecutor {
+    /// Execute `jobs` (ids must be dense `0..jobs.len()`), returning one
+    /// result per job, sorted by id, products in element order.
+    fn run(&mut self, jobs: &[VectorJob]) -> Result<Vec<JobResult>>;
+
+    /// Human-readable identity for logs and bench labels.
+    fn name(&self) -> String;
+}
+
+fn ensure_dense_ids(jobs: &[VectorJob]) -> Result<()> {
+    for (i, job) in jobs.iter().enumerate() {
+        ensure!(
+            job.id == i as u64,
+            "job ids must be dense 0..len (job {i} has id {})",
+            job.id
+        );
+    }
+    Ok(())
+}
+
+/// Scalar-closure executor (the oracle substrate).
+pub struct ClosureExec<F: FnMut(u16, u16) -> u32> {
+    label: String,
+    mul: F,
+}
+
+impl<F: FnMut(u16, u16) -> u32> ClosureExec<F> {
+    pub fn new(label: impl Into<String>, mul: F) -> Self {
+        Self {
+            label: label.into(),
+            mul,
+        }
+    }
+}
+
+/// The exact-product closure executor.
+pub fn exact_exec() -> ClosureExec<fn(u16, u16) -> u32> {
+    ClosureExec::new("closure:exact", |a, b| a as u32 * b as u32)
+}
+
+impl<F: FnMut(u16, u16) -> u32> JobExecutor for ClosureExec<F> {
+    fn run(&mut self, jobs: &[VectorJob]) -> Result<Vec<JobResult>> {
+        ensure_dense_ids(jobs)?;
+        Ok(jobs
+            .iter()
+            .map(|job| JobResult {
+                id: job.id,
+                products: job
+                    .a
+                    .iter()
+                    .map(|&x| (self.mul)(x, job.b))
+                    .collect(),
+            })
+            .collect())
+    }
+
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+}
+
+/// In-process gate-level executor: batcher + one backend, deterministic
+/// fabric-op accounting.
+pub struct FabricExec {
+    backend: Box<dyn Backend>,
+    cfg: BatcherConfig,
+    stats: CoalesceStats,
+    batches_executed: u64,
+}
+
+impl FabricExec {
+    pub fn new(backend: Box<dyn Backend>, cfg: BatcherConfig) -> Self {
+        Self {
+            backend,
+            cfg,
+            stats: CoalesceStats::default(),
+            batches_executed: 0,
+        }
+    }
+
+    /// Coalescing counters accumulated across every [`JobExecutor::run`].
+    pub fn stats(&self) -> CoalesceStats {
+        self.stats
+    }
+
+    /// Fabric ops executed so far (equals `stats().batches`).
+    pub fn batches_executed(&self) -> u64 {
+        self.batches_executed
+    }
+
+    /// The owned backend, for cycle/energy introspection.
+    pub fn backend(&self) -> &dyn Backend {
+        self.backend.as_ref()
+    }
+
+    fn exec_batches(
+        &mut self,
+        batches: &[Batch],
+        out: &mut [Vec<u32>],
+    ) -> Result<()> {
+        // Group-capable backends (the 64-lane packed fabric) settle whole
+        // groups per pass, exactly like the worker pool's dispatch.
+        let cap = self.backend.preferred_group().max(1);
+        for chunk in batches.chunks(cap) {
+            let refs: Vec<&Batch> = chunk.iter().collect();
+            let products = self.backend.execute_group(&refs)?;
+            self.batches_executed += chunk.len() as u64;
+            for (batch, p) in chunk.iter().zip(products) {
+                for (lane, tag) in batch.lanes.iter().enumerate() {
+                    out[tag.job as usize][tag.offset] = p[lane];
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl JobExecutor for FabricExec {
+    fn run(&mut self, jobs: &[VectorJob]) -> Result<Vec<JobResult>> {
+        ensure_dense_ids(jobs)?;
+        let mut batcher = Batcher::new(self.cfg);
+        let mut out: Vec<Vec<u32>> =
+            jobs.iter().map(|j| vec![0; j.a.len()]).collect();
+        for job in jobs {
+            batcher.push(job);
+        }
+        let batches = batcher.flush();
+        self.stats.merge(&batcher.stats());
+        self.exec_batches(&batches, &mut out)?;
+        Ok(out
+            .into_iter()
+            .enumerate()
+            .map(|(id, products)| JobResult {
+                id: id as u64,
+                products,
+            })
+            .collect())
+    }
+
+    fn name(&self) -> String {
+        format!("fabric:{}", self.backend.name())
+    }
+}
+
+/// Serving-path executor over a running coordinator.
+pub struct CoordinatorExec<'a> {
+    pub coord: &'a Coordinator,
+}
+
+impl<'a> CoordinatorExec<'a> {
+    pub fn new(coord: &'a Coordinator) -> Self {
+        Self { coord }
+    }
+}
+
+impl JobExecutor for CoordinatorExec<'_> {
+    fn run(&mut self, jobs: &[VectorJob]) -> Result<Vec<JobResult>> {
+        ensure_dense_ids(jobs)?;
+        let results = self.coord.run_jobs(jobs)?;
+        ensure!(
+            results.len() == jobs.len(),
+            "coordinator returned {} results for {} jobs",
+            results.len(),
+            jobs.len()
+        );
+        Ok(results)
+    }
+
+    fn name(&self) -> String {
+        "coordinator".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::ExactBackend;
+
+    fn jobs() -> Vec<VectorJob> {
+        vec![
+            VectorJob {
+                id: 0,
+                a: vec![1, 2, 3, 4, 5],
+                b: 7,
+            },
+            VectorJob {
+                id: 1,
+                a: vec![250],
+                b: 250,
+            },
+            VectorJob {
+                id: 2,
+                a: vec![0, 255],
+                b: 7,
+            },
+        ]
+    }
+
+    #[test]
+    fn closure_and_fabric_execs_agree() {
+        let jobs = jobs();
+        let want: Vec<Vec<u32>> =
+            jobs.iter().map(|j| j.expected()).collect();
+        let mut closure = exact_exec();
+        let mut fabric = FabricExec::new(
+            Box::new(ExactBackend),
+            BatcherConfig::unbounded(4),
+        );
+        for exec in [
+            &mut closure as &mut dyn JobExecutor,
+            &mut fabric as &mut dyn JobExecutor,
+        ] {
+            let results = exec.run(&jobs).unwrap();
+            assert_eq!(results.len(), jobs.len());
+            for (res, want) in results.iter().zip(&want) {
+                assert_eq!(&res.products, want, "{}", exec.name());
+            }
+        }
+        // Jobs 0 and 2 share b=7: 7 elements coalesce into 2 ops instead
+        // of the 3 per-job chunks.
+        let stats = fabric.stats();
+        assert_eq!(stats.chunks, 4);
+        assert_eq!(stats.batches, 3);
+        assert_eq!(fabric.batches_executed(), 3);
+        assert_eq!(stats.ops_saved(), 1);
+    }
+
+    #[test]
+    fn non_dense_ids_are_rejected() {
+        let mut exec = exact_exec();
+        let bad = vec![VectorJob {
+            id: 5,
+            a: vec![1],
+            b: 1,
+        }];
+        assert!(exec.run(&bad).is_err());
+    }
+}

@@ -1,0 +1,297 @@
+//! GEMM lowering: turn `C[m×n] = A[m×k] · B[k×n]` over u8 operands into a
+//! broadcast-reuse vector-job stream.
+//!
+//! The decomposition is **weight-stationary**: every element of the
+//! stationary operand `B` (the "weights") becomes the broadcast scalar of
+//! one [`VectorJob`] whose vector is an m-tile of `A`'s matching column —
+//! the paper's vector × broadcast-scalar primitive, applied `k·n` times
+//! per m-tile:
+//!
+//! ```text
+//!   for row0 in 0..m step tile_m:            (m-tiles)
+//!     for kk in 0..k:                        (reduction index)
+//!       for j in 0..n:                       (output column)
+//!         job: a = A[row0 .. row0+rows, kk]  (tile of column kk)
+//!              b = B[kk, j]                  (broadcast weight)
+//!         products[e] accumulate into C[row0 + e, j]
+//! ```
+//!
+//! Every u8×u8 product of the matmul appears in exactly one job element,
+//! so scatter-accumulating job products reproduces the plain i32 matmul
+//! **bit-exactly** regardless of job order — order only changes how well
+//! the batcher coalesces (see [`super::schedule`]).
+
+use anyhow::{ensure, Result};
+
+use crate::coordinator::JobResult;
+use crate::workload::VectorJob;
+
+use super::exec::JobExecutor;
+use super::schedule::{assign_ids, order_jobs, Order};
+
+/// Dimensions of one GEMM: `C[m×n] = A[m×k] · B[k×n]`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GemmSpec {
+    /// Rows of `A` / `C` (the moving operand, e.g. activations).
+    pub m: usize,
+    /// Reduction depth (columns of `A`, rows of `B`).
+    pub k: usize,
+    /// Columns of `B` / `C` (the stationary operand, e.g. weights).
+    pub n: usize,
+}
+
+impl GemmSpec {
+    pub fn new(m: usize, k: usize, n: usize) -> Self {
+        assert!(m >= 1 && k >= 1 && n >= 1, "degenerate GEMM shape");
+        Self { m, k, n }
+    }
+
+    /// Total u8×u8 products (the paper's "computational load").
+    pub fn products(&self) -> u64 {
+        (self.m * self.k * self.n) as u64
+    }
+}
+
+impl std::fmt::Display for GemmSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}x{}x{}", self.m, self.k, self.n)
+    }
+}
+
+/// Plain i32 matmul oracle over u8 operands (i64 internally so the
+/// overflow check is explicit, not wrapping).
+pub fn matmul_i32(a: &[u16], b: &[u16], spec: GemmSpec) -> Vec<i32> {
+    assert_eq!(a.len(), spec.m * spec.k, "A shape");
+    assert_eq!(b.len(), spec.k * spec.n, "B shape");
+    let mut c = vec![0i32; spec.m * spec.n];
+    for i in 0..spec.m {
+        for j in 0..spec.n {
+            let mut acc = 0i64;
+            for kk in 0..spec.k {
+                acc += a[i * spec.k + kk] as i64 * b[kk * spec.n + j] as i64;
+            }
+            c[i * spec.n + j] =
+                i32::try_from(acc).expect("oracle accumulator overflow");
+        }
+    }
+    c
+}
+
+/// Where one job's products land in `C`: element `e` of the job
+/// accumulates into `C[row0 + e, col]`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct JobTarget {
+    /// First output row the job's tile covers.
+    pub row0: usize,
+    /// Rows in the tile (the job's vector length).
+    pub rows: usize,
+    /// Output column.
+    pub col: usize,
+    /// Reduction index the job's products belong to (debug/tracing).
+    pub kk: usize,
+}
+
+/// A lowered, ordered GEMM: job generation + scatter-accumulation.
+#[derive(Clone, Copy, Debug)]
+pub struct GemmPlan {
+    pub spec: GemmSpec,
+    /// Rows per m-tile — the job vector length (the final tile may be
+    /// shorter). Bounds per-job latency; the batcher re-chunks to fabric
+    /// width anyway, so this does not change the op-count lower bound.
+    pub tile_m: usize,
+    pub order: Order,
+}
+
+impl GemmPlan {
+    /// Plan with the default tile (whole-m tiles capped at 64 rows —
+    /// matches the widest fabric, keeps job latency bounded).
+    pub fn new(spec: GemmSpec, order: Order) -> Self {
+        Self::with_tile(spec, spec.m.min(64), order)
+    }
+
+    pub fn with_tile(spec: GemmSpec, tile_m: usize, order: Order) -> Self {
+        assert!(tile_m >= 1, "tile must cover at least one row");
+        Self {
+            spec,
+            tile_m,
+            order,
+        }
+    }
+
+    /// Number of jobs the plan emits.
+    pub fn n_jobs(&self) -> usize {
+        let tiles = (self.spec.m + self.tile_m - 1) / self.tile_m;
+        tiles * self.spec.k * self.spec.n
+    }
+
+    /// Lower `A` (m×k) and `B` (k×n) into an ordered job stream with
+    /// dense ids, plus the scatter target of each job (aligned by index
+    /// AND by job id).
+    pub fn jobs(
+        &self,
+        a: &[u16],
+        b: &[u16],
+    ) -> Result<(Vec<VectorJob>, Vec<JobTarget>)> {
+        let GemmSpec { m, k, n } = self.spec;
+        ensure!(a.len() == m * k, "A must be m*k = {} elements", m * k);
+        ensure!(b.len() == k * n, "B must be k*n = {} elements", k * n);
+        ensure!(
+            a.iter().chain(b.iter()).all(|&x| x <= 0xFF),
+            "operands must be u8 values"
+        );
+        let mut pairs: Vec<(VectorJob, JobTarget)> =
+            Vec::with_capacity(self.n_jobs());
+        for row0 in (0..m).step_by(self.tile_m) {
+            let rows = self.tile_m.min(m - row0);
+            for kk in 0..k {
+                for j in 0..n {
+                    let vec: Vec<u16> = (0..rows)
+                        .map(|e| a[(row0 + e) * k + kk])
+                        .collect();
+                    pairs.push((
+                        VectorJob {
+                            id: 0, // assigned after ordering
+                            a: vec,
+                            b: b[kk * n + j],
+                        },
+                        JobTarget {
+                            row0,
+                            rows,
+                            col: j,
+                            kk,
+                        },
+                    ));
+                }
+            }
+        }
+        order_jobs(&mut pairs, self.order);
+        assign_ids(&mut pairs);
+        Ok(pairs.into_iter().unzip())
+    }
+
+    /// Scatter-accumulate per-job products into the i64 accumulator
+    /// matrix `C` (m×n). `results` must be sorted by dense job id (what
+    /// every [`JobExecutor`] returns).
+    pub fn accumulate(
+        &self,
+        results: &[JobResult],
+        targets: &[JobTarget],
+    ) -> Result<Vec<i64>> {
+        let GemmSpec { m, n, .. } = self.spec;
+        ensure!(
+            results.len() == targets.len(),
+            "{} results for {} jobs",
+            results.len(),
+            targets.len()
+        );
+        let mut c = vec![0i64; m * n];
+        for (idx, (res, tgt)) in results.iter().zip(targets).enumerate() {
+            ensure!(
+                res.id == idx as u64,
+                "results not sorted by dense id at {idx}"
+            );
+            ensure!(
+                res.products.len() == tgt.rows,
+                "job {idx}: {} products for a {}-row tile",
+                res.products.len(),
+                tgt.rows
+            );
+            for (e, &p) in res.products.iter().enumerate() {
+                c[(tgt.row0 + e) * n + tgt.col] += p as i64;
+            }
+        }
+        Ok(c)
+    }
+
+    /// Lower, execute and accumulate in one call. The i64 accumulator is
+    /// exact for any shape; compare against [`matmul_i32`] (or cast) when
+    /// the i32 range is known to suffice.
+    pub fn execute(
+        &self,
+        a: &[u16],
+        b: &[u16],
+        exec: &mut dyn JobExecutor,
+    ) -> Result<Vec<i64>> {
+        let (jobs, targets) = self.jobs(a, b)?;
+        let results = exec.run(&jobs)?;
+        self.accumulate(&results, &targets)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::exec::exact_exec;
+    use crate::util::Xoshiro256;
+
+    fn rand_mat(rng: &mut Xoshiro256, len: usize) -> Vec<u16> {
+        (0..len).map(|_| rng.operand8()).collect()
+    }
+
+    #[test]
+    fn lowering_covers_every_product_exactly_once() {
+        let spec = GemmSpec::new(5, 3, 4);
+        let plan = GemmPlan::with_tile(spec, 2, Order::WeightStationary);
+        let a: Vec<u16> = (0..15).map(|i| i as u16).collect();
+        let b: Vec<u16> = (0..12).map(|i| (i * 7) as u16).collect();
+        let (jobs, targets) = plan.jobs(&a, &b).unwrap();
+        assert_eq!(jobs.len(), plan.n_jobs());
+        assert_eq!(jobs.len(), 3 * 3 * 4, "3 tiles x k x n");
+        // Each (i, kk, j) product appears in exactly one job element.
+        let mut seen =
+            std::collections::HashSet::<(usize, usize, usize)>::new();
+        for (job, tgt) in jobs.iter().zip(&targets) {
+            assert_eq!(job.a.len(), tgt.rows);
+            assert_eq!(job.b, b[tgt.kk * 4 + tgt.col]);
+            for (e, &x) in job.a.iter().enumerate() {
+                assert_eq!(x, a[(tgt.row0 + e) * 3 + tgt.kk]);
+                assert!(seen.insert((tgt.row0 + e, tgt.kk, tgt.col)));
+            }
+        }
+        assert_eq!(seen.len(), 5 * 3 * 4);
+    }
+
+    #[test]
+    fn both_orders_match_the_oracle() {
+        let mut rng = Xoshiro256::new(11);
+        let spec = GemmSpec::new(7, 4, 5);
+        let a = rand_mat(&mut rng, 28);
+        let b = rand_mat(&mut rng, 20);
+        let want = matmul_i32(&a, &b, spec);
+        for order in [Order::RowMajor, Order::WeightStationary] {
+            for tile in [1, 3, 7] {
+                let plan = GemmPlan::with_tile(spec, tile, order);
+                let c = plan
+                    .execute(&a, &b, &mut exact_exec())
+                    .unwrap();
+                let c32: Vec<i32> =
+                    c.iter().map(|&v| v as i32).collect();
+                assert_eq!(c32, want, "{order} tile {tile}");
+            }
+        }
+    }
+
+    #[test]
+    fn weight_stationary_stream_is_value_sorted() {
+        let mut rng = Xoshiro256::new(3);
+        let spec = GemmSpec::new(4, 6, 6);
+        let a = rand_mat(&mut rng, 24);
+        let b = rand_mat(&mut rng, 36);
+        let plan = GemmPlan::new(spec, Order::WeightStationary);
+        let (jobs, _) = plan.jobs(&a, &b).unwrap();
+        assert!(
+            jobs.windows(2).all(|w| w[0].b <= w[1].b),
+            "consecutive jobs share or ascend the broadcast operand"
+        );
+    }
+
+    #[test]
+    fn bad_shapes_and_ranges_error() {
+        let spec = GemmSpec::new(2, 2, 2);
+        let plan = GemmPlan::new(spec, Order::RowMajor);
+        assert!(plan.jobs(&[1, 2, 3], &[1, 2, 3, 4]).is_err());
+        assert!(plan
+            .jobs(&[1, 2, 3, 300], &[1, 2, 3, 4])
+            .is_err(), "non-u8 operand");
+    }
+}

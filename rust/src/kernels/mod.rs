@@ -1,0 +1,46 @@
+//! Matrix-workload lowering: conv2d / GEMM → broadcast-reuse vector jobs.
+//!
+//! The paper motivates the multiplier with convolution inner products
+//! ("responsible for over 85% of computational load in convolution
+//! tasks"); this subsystem is the missing bridge between that workload
+//! and the fabric. It turns int8 matrix math into the one primitive the
+//! hardware serves — vector × broadcast-scalar multiplication — and
+//! orders the stream so the batcher realizes the paper's reuse property:
+//!
+//! ```text
+//!   conv2d ──im2col──▶ GEMM ──tiled weight-stationary──▶ VectorJobs
+//!     (conv.rs)        (gemm.rs)      (schedule.rs)          │
+//!                                                            ▼
+//!    ClosureExec | FabricExec (DesignStore fabric) | CoordinatorExec
+//!                         (exec.rs)
+//! ```
+//!
+//! Layer semantics (quantization zero points, bias, requant) stay in
+//! [`crate::model::quant`] (`QuantGemm`, `QuantConv2d`,
+//! `QuantMlp::forward_batched`); this module is pure index math +
+//! scheduling + execution plumbing, bit-exact against the plain i32
+//! oracles ([`matmul_i32`], [`conv2d_i32`]) for every order, tile shape
+//! and substrate.
+//!
+//! Scheduling is the part the paper cares about: under a bounded
+//! coalescing buffer ([`crate::coordinator::BatcherConfig::max_open`]),
+//! the weight-stationary order ([`Order::WeightStationary`]) coalesces to
+//! the provably minimal fabric-op count ([`min_fabric_ops`]), while naive
+//! row-major order degrades to the uncoalesced chunk count
+//! ([`chunk_count`]). `nibblemul bench-gemm` measures the gap.
+
+mod conv;
+mod exec;
+mod gemm;
+mod schedule;
+
+pub use conv::{
+    conv2d_i32, im2col, to_chw, weights_to_gemm, Conv2dSpec,
+};
+pub use exec::{
+    exact_exec, ClosureExec, CoordinatorExec, FabricExec, JobExecutor,
+};
+pub use gemm::{matmul_i32, GemmPlan, GemmSpec, JobTarget};
+pub use schedule::{
+    assign_ids, chunk_count, min_fabric_ops, order_jobs, Order,
+};

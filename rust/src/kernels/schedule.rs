@@ -1,0 +1,176 @@
+//! Job-stream scheduling: the order in which a lowered matrix workload's
+//! [`VectorJob`]s reach the batcher.
+//!
+//! The fabric coalesces jobs that share one broadcast operand *value*
+//! into common vector ops, but a physical coalescing buffer holds only a
+//! few open partial batches ([`BatcherConfig::max_open`]). Order
+//! therefore decides how much of the paper's reuse property is realized:
+//!
+//! * [`Order::RowMajor`] — the loop-nest emission order (m-tile → k → n).
+//!   Consecutive jobs almost never share a broadcast value, so every
+//!   value switch can evict a partial batch: worst-case zero coalescing.
+//! * [`Order::WeightStationary`] — jobs stable-sorted by broadcast value
+//!   so each value's work is contiguous. Every value's elements then flow
+//!   through a single open-batch lineage, which coalesces to the
+//!   **provably minimal** fabric-op count ([`min_fabric_ops`]) with as
+//!   little as a one-entry buffer:
+//!
+//!   - lower bound: batches are single-valued, so value `v` with `E_v`
+//!     elements needs at least `ceil(E_v / width)` ops;
+//!   - achieved: a sorted stream only opens a new value after the
+//!     previous one is finished, so evictions only ever hit batches that
+//!     will receive no more elements — each value emits exactly
+//!     `floor(E_v / width)` full ops plus at most one padded partial.
+//!
+//! (`tests/kernels_gemm.rs` asserts both bounds property-style over
+//! random job sets and buffer capacities.)
+//!
+//! [`BatcherConfig::max_open`]: crate::coordinator::BatcherConfig
+
+use std::collections::HashMap;
+
+use crate::workload::VectorJob;
+
+/// Job-stream orders for a lowered matrix workload.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Order {
+    /// Emission (loop-nest) order — the naive baseline.
+    RowMajor,
+    /// Broadcast-value-grouped order — the weight-stationary schedule.
+    WeightStationary,
+}
+
+impl Order {
+    pub fn name(self) -> &'static str {
+        match self {
+            Order::RowMajor => "row-major",
+            Order::WeightStationary => "weight-stationary",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Order> {
+        match s {
+            "row-major" | "naive" => Some(Order::RowMajor),
+            "weight-stationary" | "ws" => Some(Order::WeightStationary),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Order {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Apply `order` to a job list carrying per-job payloads (the lowering's
+/// scatter targets ride along so job ↔ target stays aligned). The sort is
+/// stable: jobs sharing a broadcast value keep their emission order.
+pub fn order_jobs<T>(pairs: &mut [(VectorJob, T)], order: Order) {
+    match order {
+        Order::RowMajor => {}
+        Order::WeightStationary => {
+            pairs.sort_by_key(|(job, _)| job.b);
+        }
+    }
+}
+
+/// Re-number job ids densely (`0..len`) in the current order. Executors
+/// and scatter-accumulation index results by id, so ids must be assigned
+/// AFTER ordering.
+pub fn assign_ids<T>(pairs: &mut [(VectorJob, T)]) {
+    for (id, (job, _)) in pairs.iter_mut().enumerate() {
+        job.id = id as u64;
+    }
+}
+
+/// Fabric ops any execution of `jobs` needs at least: batches hold one
+/// broadcast value, so value `v` with `E_v` total elements costs at least
+/// `ceil(E_v / width)` ops. A weight-stationary stream achieves this.
+pub fn min_fabric_ops(jobs: &[VectorJob], width: usize) -> u64 {
+    assert!(width >= 1);
+    let mut elements: HashMap<u16, u64> = HashMap::new();
+    for job in jobs {
+        *elements.entry(job.b).or_default() += job.a.len() as u64;
+    }
+    elements
+        .values()
+        .map(|&e| (e + width as u64 - 1) / width as u64)
+        .sum()
+}
+
+/// Fabric ops with NO cross-job coalescing (each job padded alone):
+/// `Σ ceil(len / width)` — the upper bound any order stays under.
+pub fn chunk_count(jobs: &[VectorJob], width: usize) -> u64 {
+    assert!(width >= 1);
+    jobs.iter()
+        .map(|j| (j.a.len() as u64 + width as u64 - 1) / width as u64)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(id: u64, len: usize, b: u16) -> VectorJob {
+        VectorJob {
+            id,
+            a: vec![1; len],
+            b,
+        }
+    }
+
+    #[test]
+    fn ordering_groups_by_broadcast_value_stably() {
+        let mut pairs: Vec<(VectorJob, usize)> = vec![
+            (job(0, 2, 9), 100),
+            (job(1, 3, 5), 101),
+            (job(2, 1, 9), 102),
+            (job(3, 4, 5), 103),
+        ];
+        order_jobs(&mut pairs, Order::WeightStationary);
+        let bs: Vec<u16> = pairs.iter().map(|(j, _)| j.b).collect();
+        assert_eq!(bs, vec![5, 5, 9, 9]);
+        // stable: payloads keep emission order within a value
+        let payloads: Vec<usize> = pairs.iter().map(|(_, t)| *t).collect();
+        assert_eq!(payloads, vec![101, 103, 100, 102]);
+        assign_ids(&mut pairs);
+        let ids: Vec<u64> = pairs.iter().map(|(j, _)| j.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn row_major_is_identity() {
+        let mut pairs: Vec<(VectorJob, ())> =
+            vec![(job(0, 2, 9), ()), (job(1, 3, 5), ())];
+        order_jobs(&mut pairs, Order::RowMajor);
+        assert_eq!(pairs[0].0.b, 9);
+        assert_eq!(pairs[1].0.b, 5);
+    }
+
+    #[test]
+    fn op_count_bounds() {
+        let jobs = vec![job(0, 3, 5), job(1, 6, 5), job(2, 2, 9)];
+        // value 5: 9 elements -> ceil(9/4)=3; value 9: ceil(2/4)=1.
+        assert_eq!(min_fabric_ops(&jobs, 4), 4);
+        // per job: 1 + 2 + 1
+        assert_eq!(chunk_count(&jobs, 4), 4);
+        // width 8: min 2+1, chunks 1+1+1
+        assert_eq!(min_fabric_ops(&jobs, 8), 3);
+        assert_eq!(chunk_count(&jobs, 8), 3);
+        // coalescing wins appear when partial tails share a value
+        let tails = vec![job(0, 5, 7), job(1, 5, 7), job(2, 5, 7)];
+        assert_eq!(min_fabric_ops(&tails, 4), 4, "ceil(15/4)");
+        assert_eq!(chunk_count(&tails, 4), 6, "3 x ceil(5/4)");
+    }
+
+    #[test]
+    fn order_parse_roundtrip() {
+        for o in [Order::RowMajor, Order::WeightStationary] {
+            assert_eq!(Order::parse(o.name()), Some(o));
+        }
+        assert_eq!(Order::parse("ws"), Some(Order::WeightStationary));
+        assert_eq!(Order::parse("naive"), Some(Order::RowMajor));
+        assert_eq!(Order::parse("bogus"), None);
+    }
+}

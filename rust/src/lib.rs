@@ -12,9 +12,11 @@
 //!   ([`tech`]), a synthesis-lite flow ([`synth`]), generators for all six
 //!   multiplier architectures ([`multipliers`]), a process-wide cache of
 //!   compiled design artifacts ([`design`]), the vector-unit
-//!   organizations ([`fabric`]), word-level golden models ([`model`]), a
-//!   serving coordinator ([`coordinator`]) and the PJRT runtime that
-//!   executes the AOT-lowered JAX artifacts ([`runtime`]).
+//!   organizations ([`fabric`]), a conv2d/GEMM lowering engine that turns
+//!   matrix workloads into broadcast-reuse vector jobs ([`kernels`]),
+//!   word-level golden models ([`model`]), a serving coordinator
+//!   ([`coordinator`]) and the PJRT runtime that executes the AOT-lowered
+//!   JAX artifacts ([`runtime`]).
 //! * **L2/L1 (python/, build-time only)** — the same nibble algorithm as a
 //!   Pallas kernel inside a quantized-MLP JAX graph, lowered once to HLO
 //!   text; Python never runs at serving time.
@@ -27,6 +29,7 @@ pub mod cli;
 pub mod coordinator;
 pub mod design;
 pub mod fabric;
+pub mod kernels;
 pub mod model;
 pub mod multipliers;
 pub mod netlist;

@@ -8,13 +8,21 @@
 //!   fig4                Fig. 4(a)+(b) area/power sweep
 //!   serve               coordinator demo over a simulated fabric
 //!   mlp                 INT8 MLP inference (pjrt | sim | exact backends)
+//!   gemm                int8 GEMM lowered onto the fabric through the
+//!                       coordinator (kernels::GemmPlan)
+//!   conv                int8 conv2d via im2col + GEMM lowering
 //!   synth               synthesis report for one architecture (from the
 //!                       shared compiled-design store)
 //!   bench-sim           scalar vs 64-lane packed simulator throughput
 //!                       (machine-readable BENCH_sim.json)
 //!   bench-synth         in-place worklist vs clone-per-round optimizer +
 //!                       pooled vs sequential sweep (BENCH_synth.json)
-//!   report              everything above, in order (paper reproduction)
+//!   bench-gemm          weight-stationary vs row-major GEMM scheduling:
+//!                       fabric ops, coalescing hit rate, lane occupancy,
+//!                       scalar vs packed wall time (BENCH_gemm.json)
+//!   bench-all           every bench above + merged BENCH_all.json with
+//!                       one --check gate
+//!   report              the paper figures, in order (paper reproduction)
 //!   help
 
 use std::io::Write;
@@ -24,11 +32,16 @@ use anyhow::{anyhow, Result};
 use nibblemul::bench::Bencher;
 use nibblemul::cli::Args;
 use nibblemul::coordinator::{
-    Backend, Batch, Coordinator, CoordinatorConfig, LaneTag, Sim64Backend,
+    Backend, BatcherConfig, Coordinator, CoordinatorConfig, Sim64Backend,
     SimBackend,
 };
 use nibblemul::design::DesignStore;
 use nibblemul::fabric::{sweep_paper_set, sweep_paper_set_seq, VectorUnit};
+use nibblemul::kernels::{
+    conv2d_i32, im2col, matmul_i32, min_fabric_ops, to_chw,
+    weights_to_gemm, Conv2dSpec, CoordinatorExec, FabricExec, GemmPlan,
+    GemmSpec, Order,
+};
 use nibblemul::model::quant::QuantMlp;
 use nibblemul::multipliers::Arch;
 use nibblemul::report::{fig3_run, fig4_report, table2_report};
@@ -36,7 +49,9 @@ use nibblemul::runtime::{ArtifactSet, Runtime};
 use nibblemul::synth::{optimize, optimize_rounds};
 use nibblemul::tech::TechLibrary;
 use nibblemul::util::Stopwatch;
-use nibblemul::workload::broadcast_jobs;
+use nibblemul::workload::{
+    broadcast_jobs, gemm_operands, operand_stream, palette_stream,
+};
 
 fn main() {
     let args = match Args::from_env() {
@@ -59,9 +74,13 @@ fn run(args: &Args) -> Result<()> {
         "fig4" => cmd_fig4(args),
         "serve" => cmd_serve(args),
         "mlp" => cmd_mlp(args),
+        "gemm" => cmd_gemm(args),
+        "conv" => cmd_conv(args),
         "synth" => cmd_synth(args),
         "bench-sim" => cmd_bench_sim(args),
         "bench-synth" => cmd_bench_synth(args),
+        "bench-gemm" => cmd_bench_gemm(args),
+        "bench-all" => cmd_bench_all(args),
         "report" => cmd_report(args),
         _ => {
             print!("{HELP}");
@@ -80,10 +99,23 @@ COMMANDS
   fig3    [--out-dir artifacts]           Fig. 3 VCD waveforms + timeline
   fig4    [--widths 4,8,16] [--ops 32]    Fig. 4 area/power sweep
   serve   [--arch nibble] [--width 16] [--workers 4] [--jobs 512] [--batched]
-                                          coordinator over simulated fabric
-                                          (--batched: 64-lane packed workers)
+          [--max-open K]                  coordinator over simulated fabric
+                                          (--batched: 64-lane packed workers;
+                                          --max-open: bounded coalescing buffer)
   mlp     [--backend pjrt|sim|exact] [--arch nibble] [--limit 64]
-                                          INT8 inference end-to-end
+                                          INT8 inference end-to-end (sim
+                                          backend runs batched whole-layer
+                                          GEMM job streams on the fabric)
+  gemm    [--m 25] [--k 12] [--n 12] [--arch nibble] [--width 8] [--workers 2]
+          [--order ws|naive] [--max-open K] [--values 32] [--batched] [--seed 7]
+                                          int8 GEMM lowered to broadcast-reuse
+                                          jobs, served by the coordinator,
+                                          verified against the i32 oracle
+  conv    [--cin 3] [--h 12] [--w 12] [--cout 8] [--ksize 3] [--stride 1]
+          [--pad 1] [--arch nibble] [--width 8] [--workers 2] [--order ws|naive]
+          [--max-open K] [--values 32] [--seed 7] [--batched]
+                                          int8 conv2d via im2col + GEMM
+                                          lowering, verified vs direct conv
   synth   [--arch nibble] [--n 8]         synthesis report for one design
                                           (served from the shared design store)
   bench-sim [--arch nibble] [--n 8] [--rounds 4] [--out BENCH_sim.json] [--check]
@@ -96,6 +128,20 @@ COMMANDS
                                           synth wall time, and pooled vs
                                           sequential sweep points/sec
                                           (--check: fail if in-place is slower)
+  bench-gemm [--arch nibble] [--width 8] [--m 25] [--k 12] [--n 12]
+          [--values 32] [--max-open 4] [--workers 2] [--out BENCH_gemm.json] [--check]
+                                          weight-stationary vs row-major GEMM
+                                          job order through the coordinator:
+                                          fabric ops, coalescing hit rate, lane
+                                          occupancy, scalar vs packed wall time.
+                                          Always fails if the scheduled order
+                                          misses the provable op minimum;
+                                          --check additionally enforces the
+                                          >= 1.0x fewer-ops-than-naive floor
+  bench-all [--out BENCH_all.json] [--check]
+                                          run bench-sim, bench-synth and
+                                          bench-gemm, merge their JSON into one
+                                          report; --check gates on every floor
   report  [--ops 32]                      full paper reproduction
 ";
 
@@ -137,18 +183,63 @@ fn parse_arch(args: &Args, default: Arch) -> Result<Arch> {
     }
 }
 
-fn cmd_serve(args: &Args) -> Result<()> {
-    let arch = parse_arch(args, Arch::Nibble)?;
-    let width = args.get_usize("width", 16)?;
-    let workers = args.get_usize("workers", 4)?;
-    let n_jobs = args.get_usize("jobs", 512)?;
-    let batched = args.has("batched");
-    println!(
-        "coordinator: {workers} workers x {}:{arch} width {width}, \
-         {n_jobs} jobs",
-        if batched { "sim64" } else { "sim" }
+/// Parse the optional `--max-open K` coalescing-buffer bound.
+fn parse_max_open(args: &Args) -> Result<Option<usize>> {
+    match args.get("max-open") {
+        None => Ok(None),
+        Some(v) => {
+            let k: usize = v
+                .parse()
+                .map_err(|e| anyhow!("--max-open expects an integer: {e}"))?;
+            anyhow::ensure!(k >= 1, "--max-open must be >= 1");
+            Ok(Some(k))
+        }
+    }
+}
+
+fn parse_order(args: &Args) -> Result<Order> {
+    match args.get("order") {
+        None => Ok(Order::WeightStationary),
+        Some(s) => Order::parse(s)
+            .ok_or_else(|| anyhow!("unknown order {s} (ws | naive)")),
+    }
+}
+
+/// Validate the `--values` weight-palette size as an error, not a panic
+/// (the `palette_stream` assert is for internal callers).
+fn check_values_flag(values: usize) -> Result<()> {
+    anyhow::ensure!(
+        (1..=256).contains(&values),
+        "--values must be 1..=256 (got {values})"
     );
-    let backends: Vec<Box<dyn Backend>> = (0..workers)
+    Ok(())
+}
+
+/// Validate CLI-reachable GEMM dimensions and the weight palette size
+/// (the `GemmSpec` assert is for internal callers).
+fn check_gemm_flags(
+    m: usize,
+    k: usize,
+    n: usize,
+    values: usize,
+) -> Result<()> {
+    anyhow::ensure!(
+        m >= 1 && k >= 1 && n >= 1,
+        "--m/--k/--n must all be >= 1 (got {m}x{k}x{n})"
+    );
+    check_values_flag(values)
+}
+
+/// Build `workers` simulated-fabric backends (`--batched` selects the
+/// 64-lane packed engine).
+fn fabric_backends(
+    arch: Arch,
+    width: usize,
+    workers: usize,
+    batched: bool,
+) -> Result<Vec<Box<dyn Backend>>> {
+    anyhow::ensure!(workers >= 1, "--workers must be >= 1");
+    (0..workers)
         .map(|_| {
             if batched {
                 Sim64Backend::new(arch, width)
@@ -158,11 +249,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     .map(|b| Box::new(b) as Box<dyn Backend>)
             }
         })
-        .collect::<Result<_>>()?;
+        .collect()
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let arch = parse_arch(args, Arch::Nibble)?;
+    let width = args.get_usize("width", 16)?;
+    let workers = args.get_usize("workers", 4)?;
+    let n_jobs = args.get_usize("jobs", 512)?;
+    let max_open = parse_max_open(args)?;
+    let batched = args.has("batched");
+    println!(
+        "coordinator: {workers} workers x {}:{arch} width {width}, \
+         {n_jobs} jobs",
+        if batched { "sim64" } else { "sim" }
+    );
+    let backends = fabric_backends(arch, width, workers, batched)?;
     let coord = Coordinator::new(
         CoordinatorConfig {
             width,
             queue_depth: workers * 4,
+            max_open,
         },
         backends,
     );
@@ -232,14 +339,29 @@ fn cmd_mlp(args: &Args) -> Result<()> {
             mlp.forward(&ts.x[..n].to_vec(), |a, b| a as u32 * b as u32)
         }
         "sim" => {
+            // Batched path: every layer of the whole sample batch is ONE
+            // weight-stationary GEMM job stream on the fabric (shared
+            // with the gemm/conv scenarios), not a per-element closure.
             let arch = parse_arch(args, Arch::Nibble)?;
-            let mut be = SimBackend::new(arch, 16)?;
-            let out = forward_on_fabric(&mlp, &ts.x[..n], &mut be)?;
+            let mut exec = FabricExec::new(
+                Box::new(SimBackend::new(arch, 16)?),
+                BatcherConfig::unbounded(16),
+            );
+            let out = mlp.forward_batched(&ts.x[..n].to_vec(), &mut exec)?;
+            let stats = exec.stats();
             println!(
-                "fabric: {} cycles total ({} per inference), {:.2} nJ total",
-                be.cycles(),
-                be.cycles() / n as u64,
-                be.energy_fj() / 1e6,
+                "fabric: {} cycles total ({} per inference), {:.2} nJ \
+                 total",
+                exec.backend().cycles(),
+                exec.backend().cycles() / n as u64,
+                exec.backend().energy_fj() / 1e6,
+            );
+            println!(
+                "fabric ops: {} ({} saved by broadcast coalescing, \
+                 {:.1}% hit rate)",
+                stats.batches,
+                stats.ops_saved(),
+                stats.hit_rate() * 100.0
             );
             out
         }
@@ -263,69 +385,129 @@ fn cmd_mlp(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Run the quantized MLP with every u8×u8 product executed on the
-/// gate-level fabric: each activation is the broadcast operand against
-/// 16-wide chunks of its weight row — exactly the paper's vector × scalar
-/// reuse pattern.
-fn forward_on_fabric(
-    mlp: &QuantMlp,
-    xs: &[Vec<i32>],
-    be: &mut SimBackend,
-) -> Result<Vec<Vec<i32>>> {
-    let mut out = Vec::with_capacity(xs.len());
-    for x in xs {
-        let mut h: Vec<i32> = x.clone();
-        for (li, layer) in mlp.layers.iter().enumerate() {
-            let mut products = vec![0u32; layer.n_in * layer.n_out];
-            for (j, &xj) in h.iter().enumerate() {
-                let row =
-                    &layer.w_q[j * layer.n_out..(j + 1) * layer.n_out];
-                for chunk_start in (0..layer.n_out).step_by(16) {
-                    let end = (chunk_start + 16).min(layer.n_out);
-                    let a: Vec<u16> = row[chunk_start..end]
-                        .iter()
-                        .map(|&w| w as u16)
-                        .collect();
-                    let lanes: Vec<LaneTag> = (0..a.len())
-                        .map(|i| LaneTag { job: 0, offset: i })
-                        .collect();
-                    let batch = Batch {
-                        a,
-                        b: xj as u16,
-                        lanes,
-                    };
-                    let p = be.execute(&batch)?;
-                    for (k, v) in p.into_iter().enumerate() {
-                        products[j * layer.n_out + chunk_start + k] = v;
-                    }
-                }
-            }
-            // Zero-point algebra + bias over the fabric products
-            // (mirrors model::quant::QuantLayer::accumulate).
-            let sum_x: i64 = h.iter().map(|&v| v as i64).sum();
-            let mut acc = vec![0i32; layer.n_out];
-            for (o, acc_o) in acc.iter_mut().enumerate() {
-                let mut s: i64 = 0;
-                let mut sum_w: i64 = 0;
-                for j in 0..layer.n_in {
-                    s += products[j * layer.n_out + o] as i64;
-                    sum_w += layer.w_q[j * layer.n_out + o] as i64;
-                }
-                *acc_o = (s - layer.w_zp as i64 * sum_x
-                    - layer.in_zp as i64 * sum_w
-                    + layer.n_in as i64
-                        * layer.in_zp as i64
-                        * layer.w_zp as i64
-                    + layer.bias_i32[o] as i64) as i32;
-            }
-            if li + 1 < mlp.layers.len() {
-                h = layer.requant(&acc);
-            } else {
-                out.push(acc);
-            }
-        }
-    }
-    Ok(out)
+/// Run an int8 GEMM through the full serving stack: lower with
+/// [`GemmPlan`], submit the ordered job stream to a coordinator over
+/// simulated-fabric workers, verify against the plain i32 oracle, report
+/// the coalescing/occupancy metrics.
+fn cmd_gemm(args: &Args) -> Result<()> {
+    let arch = parse_arch(args, Arch::Nibble)?;
+    let m = args.get_usize("m", 25)?;
+    let k = args.get_usize("k", 12)?;
+    let n = args.get_usize("n", 12)?;
+    let width = args.get_usize("width", 8)?;
+    let workers = args.get_usize("workers", 2)?;
+    let values = args.get_usize("values", 32)?;
+    let seed = args.get_u64("seed", 7)?;
+    let order = parse_order(args)?;
+    let max_open = parse_max_open(args)?;
+    let batched = args.has("batched");
+    check_gemm_flags(m, k, n, values)?;
+
+    let spec = GemmSpec::new(m, k, n);
+    println!(
+        "gemm: C[{m}x{n}] = A[{m}x{k}] x B[{k}x{n}] ({} products), \
+         {order} order, {} workers x {}:{arch} width {width}",
+        spec.products(),
+        workers,
+        if batched { "sim64" } else { "sim" },
+    );
+    let (a, b) = gemm_operands(m, k, n, values, seed);
+    let want = matmul_i32(&a, &b, spec);
+
+    let coord = Coordinator::new(
+        CoordinatorConfig {
+            width,
+            queue_depth: workers * 4,
+            max_open,
+        },
+        fabric_backends(arch, width, workers, batched)?,
+    );
+    let plan = GemmPlan::new(spec, order);
+    let sw = Stopwatch::start();
+    let c = plan.execute(&a, &b, &mut CoordinatorExec::new(&coord))?;
+    let elapsed = sw.elapsed_secs();
+    let exact = c.iter().zip(&want).all(|(&g, &w)| g == w as i64);
+    anyhow::ensure!(exact, "GEMM diverged from the i32 oracle");
+    println!("verified bit-exact against the plain i32 matmul oracle");
+    println!("{}", coord.metrics.snapshot());
+    println!(
+        "occupancy {:.1}%, {:.0} products/s (wall)",
+        coord.metrics.occupancy(width) * 100.0,
+        spec.products() as f64 / elapsed
+    );
+    coord.shutdown();
+    Ok(())
+}
+
+/// Run an int8 conv2d through im2col + GEMM lowering on the serving
+/// stack, verified against the direct-loop conv oracle.
+fn cmd_conv(args: &Args) -> Result<()> {
+    let arch = parse_arch(args, Arch::Nibble)?;
+    let ksize = args.get_usize("ksize", 3)?;
+    let spec = Conv2dSpec {
+        c_in: args.get_usize("cin", 3)?,
+        h: args.get_usize("h", 12)?,
+        w: args.get_usize("w", 12)?,
+        c_out: args.get_usize("cout", 8)?,
+        kh: args.get_usize("kh", ksize)?,
+        kw: args.get_usize("kw", ksize)?,
+        stride: args.get_usize("stride", 1)?,
+        pad: args.get_usize("pad", 1)?,
+    };
+    spec.validate()?;
+    let width = args.get_usize("width", 8)?;
+    let workers = args.get_usize("workers", 2)?;
+    let seed = args.get_u64("seed", 7)?;
+    let order = parse_order(args)?;
+    let max_open = parse_max_open(args)?;
+    let batched = args.has("batched");
+
+    let gemm = spec.gemm();
+    println!(
+        "conv2d: {spec} -> {}x{} out, lowered to GEMM {gemm} \
+         ({} products), {order} order",
+        spec.out_h(),
+        spec.out_w(),
+        gemm.products()
+    );
+    // Random image + weights (weights from a clustered codebook, like
+    // real quantized models).
+    let values = args.get_usize("values", 32)?;
+    check_values_flag(values)?;
+    let img = operand_stream(spec.c_in * spec.h * spec.w, seed);
+    let wts = palette_stream(
+        spec.c_out * spec.patch_len(),
+        values,
+        seed ^ 0xc0117,
+    );
+    let want = conv2d_i32(&spec, &img, &wts, 0)?;
+
+    let a = im2col(&spec, &img, 0)?;
+    let b = weights_to_gemm(&spec, &wts)?;
+    let coord = Coordinator::new(
+        CoordinatorConfig {
+            width,
+            queue_depth: workers * 4,
+            max_open,
+        },
+        fabric_backends(arch, width, workers, batched)?,
+    );
+    let plan = GemmPlan::new(gemm, order);
+    let sw = Stopwatch::start();
+    let c = plan.execute(&a, &b, &mut CoordinatorExec::new(&coord))?;
+    let elapsed = sw.elapsed_secs();
+    let chw = to_chw(&spec, &c);
+    let exact = chw.iter().zip(&want).all(|(&g, &w)| g == w as i64);
+    anyhow::ensure!(exact, "conv2d diverged from the direct-loop oracle");
+    println!("verified bit-exact against the direct conv2d oracle");
+    println!("{}", coord.metrics.snapshot());
+    println!(
+        "occupancy {:.1}%, {:.0} products/s (wall)",
+        coord.metrics.occupancy(width) * 100.0,
+        gemm.products() as f64 / elapsed
+    );
+    coord.shutdown();
+    Ok(())
 }
 
 /// Scalar vs 64-lane packed simulator throughput on the Monte-Carlo
@@ -497,6 +679,231 @@ fn cmd_bench_synth(args: &Args) -> Result<()> {
              the 1.0x acceptance floor (must beat clone-per-round)"
         );
         println!("check passed: in-place optimizer >= clone-per-round");
+    }
+    Ok(())
+}
+
+/// Weight-stationary vs row-major GEMM job order through the real
+/// coordinator (fabric ops, coalescing hit rate, lane occupancy from
+/// `coordinator::metrics`) plus scalar vs 64-lane packed wall time —
+/// machine-readable BENCH_gemm.json. Every run hard-fails if the
+/// scheduled order misses the provable fabric-op minimum (that is an
+/// implementation invariant, not a perf floor); `--check` additionally
+/// enforces the >= 1.0x fewer-ops-than-naive floor.
+fn cmd_bench_gemm(args: &Args) -> Result<()> {
+    let arch = parse_arch(args, Arch::Nibble)?;
+    let width = args.get_usize("width", 8)?;
+    let m = args.get_usize("m", 25)?;
+    let k = args.get_usize("k", 12)?;
+    let n = args.get_usize("n", 12)?;
+    let values = args.get_usize("values", 32)?;
+    let max_open = args.get_usize("max-open", 4)?;
+    let workers = args.get_usize("workers", 2)?;
+    let seed = args.get_u64("seed", 7)?;
+    let out = args.get_or("out", "BENCH_gemm.json");
+    check_gemm_flags(m, k, n, values)?;
+    anyhow::ensure!(max_open >= 1, "--max-open must be >= 1");
+
+    let spec = GemmSpec::new(m, k, n);
+    println!(
+        "bench-gemm: {arch} x{width} gemm {spec} ({} products), weight \
+         palette {values}, coalescing buffer {max_open}",
+        spec.products()
+    );
+    let (a, b) = gemm_operands(m, k, n, values, seed);
+    let want = matmul_i32(&a, &b, spec);
+
+    // (1) Fabric-op accounting per order, through the coordinator (the
+    // batcher decides op counts, so they are deterministic even with a
+    // threaded pool). A fresh coordinator per order keeps metrics clean.
+    struct OrderRun {
+        fabric_ops: u64,
+        hit_rate: f64,
+        occupancy: f64,
+    }
+    let mut runs: Vec<(Order, OrderRun)> = Vec::new();
+    for order in [Order::RowMajor, Order::WeightStationary] {
+        let coord = Coordinator::new(
+            CoordinatorConfig {
+                width,
+                queue_depth: workers * 4,
+                max_open: Some(max_open),
+            },
+            fabric_backends(arch, width, workers, true)?,
+        );
+        let plan = GemmPlan::new(spec, order);
+        let c =
+            plan.execute(&a, &b, &mut CoordinatorExec::new(&coord))?;
+        anyhow::ensure!(
+            c.iter().zip(&want).all(|(&g, &w)| g == w as i64),
+            "{order} order diverged from the i32 oracle"
+        );
+        let snap = coord.metrics.snapshot();
+        let run = OrderRun {
+            fabric_ops: snap.batches_executed,
+            hit_rate: snap.coalesce_hit_rate(),
+            occupancy: coord.metrics.occupancy(width),
+        };
+        println!(
+            "  {:>17}: {} fabric ops, {:.1}% coalesce hit rate, \
+             {:.1}% occupancy",
+            order.name(),
+            run.fabric_ops,
+            run.hit_rate * 100.0,
+            run.occupancy * 100.0
+        );
+        coord.shutdown();
+        runs.push((order, run));
+    }
+    let naive = &runs[0].1;
+    let sched = &runs[1].1;
+    let speedup_ops = naive.fabric_ops as f64 / sched.fabric_ops as f64;
+
+    // The scheduled stream must hit the provable op-count minimum.
+    let plan_ws = GemmPlan::new(spec, Order::WeightStationary);
+    let (jobs_ws, _) = plan_ws.jobs(&a, &b)?;
+    let minimal = min_fabric_ops(&jobs_ws, width);
+    anyhow::ensure!(
+        sched.fabric_ops == minimal,
+        "weight-stationary executed {} fabric ops, provable minimum is \
+         {minimal}",
+        sched.fabric_ops
+    );
+    println!(
+        "scheduled vs naive: {speedup_ops:.2}x fewer fabric ops \
+         (scheduled hits the provable minimum of {minimal})"
+    );
+
+    // (2) Wall throughput on the scheduled stream: scalar vs 64-lane
+    // packed fabric, in-process (deterministic, single-threaded).
+    let mut bencher = Bencher::quick();
+    let scalar = bencher
+        .bench(
+            &format!("gemm/sim-scalar/{arch}x{width} {spec}"),
+            Some(spec.products() as f64),
+            || {
+                let mut exec = FabricExec::new(
+                    Box::new(SimBackend::new(arch, width).unwrap()),
+                    BatcherConfig::bounded(width, max_open),
+                );
+                let c = plan_ws.execute(&a, &b, &mut exec).unwrap();
+                assert_eq!(c.len(), spec.m * spec.n);
+            },
+        )
+        .clone();
+    let packed = bencher
+        .bench(
+            &format!("gemm/sim-packed64/{arch}x{width} {spec}"),
+            Some(spec.products() as f64),
+            || {
+                let mut exec = FabricExec::new(
+                    Box::new(Sim64Backend::new(arch, width).unwrap()),
+                    BatcherConfig::bounded(width, max_open),
+                );
+                let c = plan_ws.execute(&a, &b, &mut exec).unwrap();
+                assert_eq!(c.len(), spec.m * spec.n);
+            },
+        )
+        .clone();
+    let speedup_packed = packed.items_per_sec().unwrap_or(0.0)
+        / scalar.items_per_sec().unwrap_or(f64::INFINITY);
+    println!("packed/scalar wall speedup: {speedup_packed:.1}x");
+
+    let json = format!(
+        "{{\n  \"bench\": \"gemm\",\n  \"workload\": \"{arch} x{width} \
+         gemm {spec}, weight palette {values}, coalesce buffer \
+         {max_open}\",\n  \"results\": {},  \
+         \"fabric_ops_minimal\": {minimal},\n  \
+         \"fabric_ops_scheduled\": {},\n  \
+         \"fabric_ops_naive\": {},\n  \
+         \"coalesce_hit_rate_scheduled\": {:.4},\n  \
+         \"coalesce_hit_rate_naive\": {:.4},\n  \
+         \"lane_occupancy_scheduled\": {:.4},\n  \
+         \"lane_occupancy_naive\": {:.4},\n  \
+         \"speedup_scheduled_vs_naive_ops\": {speedup_ops:.3},\n  \
+         \"speedup_packed_vs_scalar\": {speedup_packed:.3}\n}}\n",
+        bencher.json_report().trim_end(),
+        sched.fabric_ops,
+        naive.fabric_ops,
+        sched.hit_rate,
+        naive.hit_rate,
+        sched.occupancy,
+        naive.occupancy,
+    );
+    std::fs::write(&out, json)?;
+    println!("wrote {out}");
+    if args.has("check") {
+        anyhow::ensure!(
+            speedup_ops >= 1.0,
+            "scheduled order used MORE fabric ops than naive \
+             ({speedup_ops:.2}x < 1.0x floor)"
+        );
+        println!(
+            "check passed: weight-stationary >= 1.0x fewer fabric ops \
+             than naive ({speedup_ops:.2}x)"
+        );
+    }
+    Ok(())
+}
+
+/// Run every bench (`bench-sim`, `bench-synth`, `bench-gemm`), merge
+/// their JSON artifacts into one BENCH_all.json report, and gate on all
+/// floors at once — one command for a toolchain host to validate the
+/// perf trajectory.
+fn cmd_bench_all(args: &Args) -> Result<()> {
+    let out = args.get_or("out", "BENCH_all.json");
+    let check = args.has("check");
+    let benches: [(&str, &str); 3] = [
+        ("bench-sim", "BENCH_sim.json"),
+        ("bench-synth", "BENCH_synth.json"),
+        ("bench-gemm", "BENCH_gemm.json"),
+    ];
+    let mut failures: Vec<String> = Vec::new();
+    let mut succeeded = [false; 3];
+    for (i, (cmd, _)) in benches.iter().enumerate() {
+        println!("\n==== bench-all: {cmd} ====");
+        let mut argv = vec![cmd.to_string()];
+        if check {
+            argv.push("--check".to_string());
+        }
+        match run(&Args::parse(argv)?) {
+            Ok(()) => succeeded[i] = true,
+            Err(e) => {
+                eprintln!("{cmd} FAILED: {e:#}");
+                failures.push(format!("{cmd}: {e:#}"));
+            }
+        }
+    }
+    // Merge the per-bench artifacts. A failed bench embeds as null even
+    // if an older BENCH_*.json is on disk — the merged report must never
+    // present stale numbers as current.
+    let mut json = String::from("{\n  \"bench\": \"all\",\n");
+    json.push_str(&format!("  \"floors_enforced\": {check},\n"));
+    json.push_str("  \"components\": {\n");
+    for (i, (cmd, file)) in benches.iter().enumerate() {
+        let key = cmd.trim_start_matches("bench-");
+        let body = if succeeded[i] {
+            std::fs::read_to_string(file)
+                .map(|s| s.trim_end().to_string())
+                .unwrap_or_else(|_| "null".to_string())
+        } else {
+            "null".to_string()
+        };
+        let body = body.replace('\n', "\n    ");
+        let comma = if i + 1 < benches.len() { "," } else { "" };
+        json.push_str(&format!("    \"{key}\": {body}{comma}\n"));
+    }
+    json.push_str("  }\n}\n");
+    std::fs::write(&out, json)?;
+    println!("\nwrote {out}");
+    anyhow::ensure!(
+        failures.is_empty(),
+        "bench suite failed{}:\n  {}",
+        if check { " (floors enforced)" } else { "" },
+        failures.join("\n  ")
+    );
+    if check {
+        println!("check passed: every bench floor holds");
     }
     Ok(())
 }

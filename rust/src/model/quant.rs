@@ -1,12 +1,56 @@
-//! Bit-exact Rust replay of the quantized MLP (`python/compile/model.py`).
+//! Bit-exact Rust replay of the quantized MLP (`python/compile/model.py`),
+//! plus the quantized GEMM/conv2d layer types that lower onto the fabric
+//! through [`crate::kernels`].
 //!
-//! Two uses:
+//! Uses:
 //! * the oracle for the PJRT-executed HLO artifact (the end-to-end example
 //!   checks logits parity between this model and the runtime output);
-//! * the workload driver for the gate-level fabric — every u8×u8 product in
-//!   `forward` can be routed through any multiplier architecture's
-//!   netlist, which is how inference cycles/energy per architecture are
-//!   measured on the simulated hardware.
+//! * the workload driver for the gate-level fabric — the scalar
+//!   [`QuantMlp::forward`] routes every u8×u8 product through an injected
+//!   closure, and the batched [`QuantMlp::forward_batched`] /
+//!   [`QuantGemm`] / [`QuantConv2d`] paths lower whole layers into
+//!   weight-stationary [`crate::workload::VectorJob`] streams executed by
+//!   any [`JobExecutor`] (closure, in-process fabric, or the coordinator
+//!   service) — how inference cycles/energy per architecture are measured
+//!   on the simulated hardware.
+
+use anyhow::{ensure, Result};
+
+use crate::kernels::{
+    im2col, to_chw, weights_to_gemm, Conv2dSpec, GemmPlan, GemmSpec,
+    JobExecutor, Order,
+};
+
+/// Fixed-point requantization parameters (round-half-up, saturating to
+/// the u8 domain) — identical to `model.py::_requant`. Factored out of
+/// [`QuantLayer`] so the GEMM/conv layer types share one implementation.
+#[derive(Clone, Copy, Debug)]
+pub struct Requant {
+    /// Fixed-point multiplier (m < 2^7; see model.py).
+    pub m: i32,
+    pub shift: u32,
+    /// Output zero point (also the ReLU floor).
+    pub zp: i32,
+    pub relu: bool,
+}
+
+impl Requant {
+    /// Requantize one i32 accumulator to the u8 domain.
+    pub fn apply_one(&self, a: i32) -> i32 {
+        let rounding: i32 = if self.shift > 0 {
+            1 << (self.shift - 1)
+        } else {
+            0
+        };
+        let y = ((a * self.m + rounding) >> self.shift) + self.zp;
+        let lo = if self.relu { self.zp } else { 0 };
+        y.clamp(lo, 255)
+    }
+
+    pub fn apply(&self, acc: &[i32]) -> Vec<i32> {
+        acc.iter().map(|&a| self.apply_one(a)).collect()
+    }
+}
 
 /// One quantized linear layer (asymmetric u8, fixed-point requant).
 #[derive(Clone, Debug)]
@@ -63,21 +107,234 @@ impl QuantLayer {
         out
     }
 
+    /// This layer's requantization parameters.
+    pub fn requant_params(&self) -> Requant {
+        Requant {
+            m: self.m,
+            shift: self.shift,
+            zp: self.out_zp,
+            relu: self.relu,
+        }
+    }
+
     /// Requantize an accumulator to the next layer's u8 domain —
     /// identical to `model.py::_requant` (round-half-up fixed point).
     pub fn requant(&self, acc: &[i32]) -> Vec<i32> {
-        let rounding: i32 = if self.shift > 0 {
-            1 << (self.shift - 1)
-        } else {
-            0
-        };
-        acc.iter()
-            .map(|&a| {
-                let y = ((a * self.m + rounding) >> self.shift) + self.out_zp;
-                let lo = if self.relu { self.out_zp } else { 0 };
-                y.clamp(lo, 255)
+        self.requant_params().apply(acc)
+    }
+}
+
+/// Flatten a batch of u8-carrier rows into the u16 operand matrix the
+/// kernels consume, validating range and a uniform row length.
+fn rows_to_u16(x: &[Vec<i32>], len: usize) -> Result<Vec<u16>> {
+    let mut out = Vec::with_capacity(x.len() * len);
+    for (i, row) in x.iter().enumerate() {
+        ensure!(row.len() == len, "row {i}: {} != {len}", row.len());
+        for &v in row {
+            ensure!((0..=255).contains(&v), "row {i}: {v} not a u8 value");
+            out.push(v as u16);
+        }
+    }
+    Ok(out)
+}
+
+fn carrier_to_u16(w: &[i32]) -> Result<Vec<u16>> {
+    w.iter()
+        .map(|&v| {
+            ensure!((0..=255).contains(&v), "weight {v} not a u8 value");
+            Ok(v as u16)
+        })
+        .collect()
+}
+
+/// A quantized GEMM layer: `Y = requant(X·W + zero-point algebra + bias)`
+/// with `X (batch × k)` activations and `W (k × n)` weights, lowered onto
+/// the fabric as a weight-stationary job stream.
+///
+/// With `requant: None` the corrected i32 accumulators are returned raw
+/// (the logits layer). The math mirrors [`QuantLayer::accumulate`] +
+/// [`QuantLayer::requant`] bit-exactly — integer sums are order-free, so
+/// batched fabric execution and the scalar closure path agree exactly.
+#[derive(Clone, Debug)]
+pub struct QuantGemm {
+    /// Weights, u8 values in an i32 carrier, row-major `(k, n)`.
+    pub w_q: Vec<i32>,
+    pub k: usize,
+    pub n: usize,
+    pub w_zp: i32,
+    pub in_zp: i32,
+    pub bias_i32: Vec<i32>,
+    pub requant: Option<Requant>,
+}
+
+impl QuantGemm {
+    /// A hidden MLP layer as a batched GEMM (requantized output).
+    pub fn from_layer(layer: &QuantLayer) -> Self {
+        Self {
+            w_q: layer.w_q.clone(),
+            k: layer.n_in,
+            n: layer.n_out,
+            w_zp: layer.w_zp,
+            in_zp: layer.in_zp,
+            bias_i32: layer.bias_i32.clone(),
+            requant: Some(layer.requant_params()),
+        }
+    }
+
+    /// The final MLP layer as a batched GEMM (raw i32 logits).
+    pub fn logits_layer(layer: &QuantLayer) -> Self {
+        Self {
+            requant: None,
+            ..Self::from_layer(layer)
+        }
+    }
+
+    /// Batched forward: `x` is a batch of u8 rows (i32 carrier); returns
+    /// one output row per input row (requantized u8 carrier, or raw i32
+    /// accumulators when `requant` is `None`).
+    pub fn forward(
+        &self,
+        x: &[Vec<i32>],
+        exec: &mut dyn JobExecutor,
+    ) -> Result<Vec<Vec<i32>>> {
+        self.forward_ordered(x, Order::WeightStationary, exec)
+    }
+
+    /// [`QuantGemm::forward`] with an explicit job order (the scheduling
+    /// ablation hook — results are identical, fabric-op counts are not).
+    pub fn forward_ordered(
+        &self,
+        x: &[Vec<i32>],
+        order: Order,
+        exec: &mut dyn JobExecutor,
+    ) -> Result<Vec<Vec<i32>>> {
+        ensure!(!x.is_empty(), "empty batch");
+        let a = rows_to_u16(x, self.k)?;
+        self.forward_flat(&a, x.len(), order, exec)
+    }
+
+    /// Core batched forward over a flat, already-u8-range activation
+    /// matrix `a (m × k)` — the row API above and the conv path
+    /// ([`QuantConv2d`], which feeds the im2col matrix directly) share
+    /// this one implementation of the zero-point algebra + requant.
+    pub fn forward_flat(
+        &self,
+        a: &[u16],
+        m: usize,
+        order: Order,
+        exec: &mut dyn JobExecutor,
+    ) -> Result<Vec<Vec<i32>>> {
+        ensure!(self.w_q.len() == self.k * self.n, "weight shape");
+        ensure!(self.bias_i32.len() == self.n, "bias shape");
+        let spec = GemmSpec::new(m, self.k, self.n);
+        ensure!(a.len() == m * self.k, "activation shape");
+        let b = carrier_to_u16(&self.w_q)?;
+        let raw = GemmPlan::new(spec, order).execute(a, &b, exec)?;
+        // Zero-point algebra over the raw u8·u8 accumulators — mirrors
+        // `QuantLayer::accumulate` (and therefore `model.py`).
+        let sum_w: Vec<i64> = (0..self.n)
+            .map(|o| {
+                (0..self.k)
+                    .map(|kk| self.w_q[kk * self.n + o] as i64)
+                    .sum()
             })
-            .collect()
+            .collect();
+        let mut out = Vec::with_capacity(m);
+        for i in 0..m {
+            let sum_x: i64 = a[i * self.k..(i + 1) * self.k]
+                .iter()
+                .map(|&v| v as i64)
+                .sum();
+            let acc: Vec<i32> = (0..self.n)
+                .map(|o| {
+                    (raw[i * self.n + o]
+                        - self.w_zp as i64 * sum_x
+                        - self.in_zp as i64 * sum_w[o]
+                        + self.k as i64
+                            * self.in_zp as i64
+                            * self.w_zp as i64
+                        + self.bias_i32[o] as i64) as i32
+                })
+                .collect();
+            out.push(match &self.requant {
+                Some(r) => r.apply(&acc),
+                None => acc,
+            });
+        }
+        Ok(out)
+    }
+}
+
+/// A quantized conv2d layer, lowered im2col → GEMM → weight-stationary
+/// job stream. Input/output are u8 values in i32 carriers, channel-major
+/// (`(c_in, h, w)` in, `(c_out, out_h, out_w)` out); padding taps read
+/// the input zero point (quantized zero), which keeps the zero-point
+/// algebra exact.
+#[derive(Clone, Debug)]
+pub struct QuantConv2d {
+    pub spec: Conv2dSpec,
+    /// Weights, u8 values in an i32 carrier, OIHW `(c_out, c_in, kh, kw)`.
+    pub w_q: Vec<i32>,
+    pub w_zp: i32,
+    pub in_zp: i32,
+    /// Per-output-channel bias.
+    pub bias_i32: Vec<i32>,
+    pub requant: Requant,
+}
+
+impl QuantConv2d {
+    /// Total u8×u8 products per image.
+    pub fn mults_per_image(&self) -> u64 {
+        self.spec.products()
+    }
+
+    /// Forward one image through the fabric.
+    pub fn forward(
+        &self,
+        input: &[i32],
+        exec: &mut dyn JobExecutor,
+    ) -> Result<Vec<i32>> {
+        self.forward_ordered(input, Order::WeightStationary, exec)
+    }
+
+    /// [`QuantConv2d::forward`] with an explicit job order.
+    ///
+    /// im2col turns the convolution into exactly a [`QuantGemm`] whose
+    /// rows are the patches (padding taps already carry `in_zp`, so the
+    /// zero-point algebra is the GEMM one, unchanged) — a single shared
+    /// implementation of the correction + requant math.
+    pub fn forward_ordered(
+        &self,
+        input: &[i32],
+        order: Order,
+        exec: &mut dyn JobExecutor,
+    ) -> Result<Vec<i32>> {
+        let gemm = self.spec.gemm();
+        ensure!(
+            self.w_q.len() == gemm.k * gemm.n,
+            "weights must be c_out*c_in*kh*kw"
+        );
+        ensure!(
+            (0..=255).contains(&self.in_zp),
+            "input zero point must be a u8 value"
+        );
+        let img = carrier_to_u16(input)?;
+        let a = im2col(&self.spec, &img, self.in_zp as u16)?;
+        let weights = QuantGemm {
+            w_q: weights_to_gemm(&self.spec, &carrier_to_u16(&self.w_q)?)?
+                .into_iter()
+                .map(|v| v as i32)
+                .collect(),
+            k: gemm.k,
+            n: gemm.n,
+            w_zp: self.w_zp,
+            in_zp: self.in_zp,
+            bias_i32: self.bias_i32.clone(),
+            requant: Some(self.requant),
+        };
+        let rows = weights.forward_flat(&a, gemm.m, order, exec)?;
+        let flat: Vec<i32> = rows.into_iter().flatten().collect();
+        Ok(to_chw(&self.spec, &flat))
     }
 }
 
@@ -102,6 +359,29 @@ impl QuantMlp {
                     .accumulate(&h, &mut mul)
             })
             .collect()
+    }
+
+    /// Batched forward pass: each layer runs as ONE whole-batch GEMM
+    /// lowered into a weight-stationary [`crate::workload::VectorJob`]
+    /// stream on `exec` — the coordinator-servable path the MLP and CNN
+    /// scenarios share. Logits are bit-exact with [`QuantMlp::forward`]
+    /// under an exact multiply (integer sums are order-free).
+    pub fn forward_batched(
+        &self,
+        x: &[Vec<i32>],
+        exec: &mut dyn JobExecutor,
+    ) -> Result<Vec<Vec<i32>>> {
+        ensure!(!self.layers.is_empty(), "model has no layers");
+        let mut h: Vec<Vec<i32>> = x.to_vec();
+        for (li, layer) in self.layers.iter().enumerate() {
+            let gemm = if li + 1 == self.layers.len() {
+                QuantGemm::logits_layer(layer)
+            } else {
+                QuantGemm::from_layer(layer)
+            };
+            h = gemm.forward(&h, exec)?;
+        }
+        Ok(h)
     }
 
     /// Argmax classification of int32 logits.
@@ -183,5 +463,167 @@ mod tests {
     #[test]
     fn mult_count() {
         assert_eq!(tiny_mlp().mults_per_inference(), 8);
+    }
+
+    #[test]
+    fn requant_struct_matches_layer_requant() {
+        let layer = &tiny_mlp().layers[0];
+        let acc = [i32::MAX / 128, i32::MIN / 128, 0, 513, -77];
+        assert_eq!(layer.requant(&acc), layer.requant_params().apply(&acc));
+    }
+
+    #[test]
+    fn forward_batched_is_bit_exact_with_forward() {
+        let mlp = tiny_mlp();
+        let x = vec![
+            vec![100, 200],
+            vec![0, 255],
+            vec![255, 0],
+            vec![13, 13],
+            vec![7, 250],
+        ];
+        let want = mlp.forward(&x, |a, b| a as u32 * b as u32);
+        let mut exec = crate::kernels::exact_exec();
+        let got = mlp.forward_batched(&x, &mut exec).unwrap();
+        assert_eq!(got, want);
+        // And through a fabric executor with a bounded coalescing buffer
+        // (forced flushes must never change results, only op counts).
+        let mut fabric = crate::kernels::FabricExec::new(
+            Box::new(crate::coordinator::ExactBackend),
+            crate::coordinator::BatcherConfig::bounded(4, 1),
+        );
+        assert_eq!(mlp.forward_batched(&x, &mut fabric).unwrap(), want);
+    }
+
+    #[test]
+    fn quant_gemm_orders_agree() {
+        let mlp = tiny_mlp();
+        let gemm = QuantGemm::from_layer(&mlp.layers[0]);
+        let x = vec![vec![9, 250], vec![88, 0], vec![1, 1]];
+        let mut exec = crate::kernels::exact_exec();
+        let ws = gemm
+            .forward_ordered(&x, Order::WeightStationary, &mut exec)
+            .unwrap();
+        let rm = gemm
+            .forward_ordered(&x, Order::RowMajor, &mut exec)
+            .unwrap();
+        assert_eq!(ws, rm, "order changes op counts, never results");
+    }
+
+    #[test]
+    fn quant_conv2d_matches_hand_reference() {
+        // 1 input channel 3x3, one 2x2 kernel, stride 1, pad 0.
+        let conv = QuantConv2d {
+            spec: Conv2dSpec {
+                c_in: 1,
+                h: 3,
+                w: 3,
+                c_out: 1,
+                kh: 2,
+                kw: 2,
+                stride: 1,
+                pad: 0,
+            },
+            w_q: vec![1, 2, 3, 4],
+            w_zp: 1,
+            in_zp: 2,
+            bias_i32: vec![5],
+            requant: Requant {
+                m: 64,
+                shift: 6,
+                zp: 0,
+                relu: false,
+            },
+        };
+        let img = vec![10, 20, 30, 40, 50, 60, 70, 80, 90];
+        let mut exec = crate::kernels::exact_exec();
+        let out = conv.forward(&img, &mut exec).unwrap();
+        // Reference: y = requant(Σ (x - in_zp)(w - w_zp) + bias).
+        let wz: Vec<i32> = conv.w_q.iter().map(|&w| w - 1).collect();
+        let mut want = Vec::new();
+        for oy in 0..2 {
+            for ox in 0..2 {
+                let xs = [
+                    img[oy * 3 + ox],
+                    img[oy * 3 + ox + 1],
+                    img[(oy + 1) * 3 + ox],
+                    img[(oy + 1) * 3 + ox + 1],
+                ];
+                let acc: i32 = xs
+                    .iter()
+                    .zip(&wz)
+                    .map(|(&x, &w)| (x - 2) * w)
+                    .sum::<i32>()
+                    + 5;
+                want.push(conv.requant.apply_one(acc));
+            }
+        }
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn quant_conv2d_padding_taps_are_quantized_zero() {
+        // A conv whose padded border multiplies only quantized zeros must
+        // equal the same conv computed with explicit (x - zp) algebra.
+        let conv = QuantConv2d {
+            spec: Conv2dSpec {
+                c_in: 2,
+                h: 4,
+                w: 4,
+                c_out: 3,
+                kh: 3,
+                kw: 3,
+                stride: 1,
+                pad: 1,
+            },
+            w_q: (0..54).map(|i| (i * 11) % 256).collect(),
+            w_zp: 7,
+            in_zp: 9,
+            bias_i32: vec![100, -100, 0],
+            requant: Requant {
+                m: 32,
+                shift: 8,
+                zp: 3,
+                relu: true,
+            },
+        };
+        let img: Vec<i32> = (0..32).map(|i| (i * 13) % 256).collect();
+        let mut exec = crate::kernels::exact_exec();
+        let out = conv.forward(&img, &mut exec).unwrap();
+        assert_eq!(out.len(), 3 * 4 * 4);
+        // Direct (x - zp)(w - zp) reference over the padded image.
+        let mut want = Vec::new();
+        for o in 0..3 {
+            for oy in 0..4i32 {
+                for ox in 0..4i32 {
+                    let mut acc = 0i32;
+                    for c in 0..2 {
+                        for ky in 0..3i32 {
+                            for kx in 0..3i32 {
+                                let iy = oy + ky - 1;
+                                let ix = ox + kx - 1;
+                                let x = if (0..4).contains(&iy)
+                                    && (0..4).contains(&ix)
+                                {
+                                    img[(c * 4 + iy as usize) * 4
+                                        + ix as usize]
+                                } else {
+                                    conv.in_zp // padding IS quantized zero
+                                };
+                                let w = conv.w_q[((o * 2 + c) * 3
+                                    + ky as usize)
+                                    * 3
+                                    + kx as usize];
+                                acc += (x - conv.in_zp) * (w - conv.w_zp);
+                            }
+                        }
+                    }
+                    want.push(
+                        conv.requant.apply_one(acc + conv.bias_i32[o]),
+                    );
+                }
+            }
+        }
+        assert_eq!(out, want);
     }
 }

@@ -2,6 +2,13 @@
 //! multiplication — VCD waveforms + a printed cycle timeline for (a) the
 //! nibble multiplier (two-cycle-per-element cadence, broadcast scalar held)
 //! and (b) the LUT-based array multiplier (single combinational step).
+//!
+//! The units drive the **raw flavor** of the shared
+//! [`crate::design::DesignStore`] artifact cache (via
+//! [`VectorUnit::new_raw`]): unoptimized netlists keep the internal named
+//! signals the VCD needs, and repeated runs (CLI `fig3`, the `waveforms`
+//! example, `report`) reuse one compiled bundle instead of privately
+//! rebuilding — the last consumer off the PR 2 artifact layer.
 
 use anyhow::Result;
 

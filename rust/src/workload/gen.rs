@@ -41,6 +41,40 @@ pub fn broadcast_jobs(
         .collect()
 }
 
+/// `len` uniform full-range u8 operands (activation-like stimulus).
+pub fn operand_stream(len: usize, seed: u64) -> Vec<u16> {
+    let mut rng = Xoshiro256::new(seed);
+    (0..len).map(|_| rng.operand8()).collect()
+}
+
+/// `len` u8 operands drawn from a `palette`-value codebook — quantized
+/// weights cluster heavily in practice, and the palette size is the knob
+/// for how much broadcast-value reuse a schedule can coalesce.
+pub fn palette_stream(len: usize, palette: usize, seed: u64) -> Vec<u16> {
+    assert!((1..=256).contains(&palette), "palette must be 1..=256");
+    let mut rng = Xoshiro256::new(seed);
+    let codebook: Vec<u16> =
+        (0..palette).map(|_| rng.operand8()).collect();
+    (0..len)
+        .map(|_| codebook[rng.below(palette as u64) as usize])
+        .collect()
+}
+
+/// Random GEMM operands for `C[m×n] = A[m×k]·B[k×n]`: full-range u8
+/// activations `A` and codebook weights `B`.
+pub fn gemm_operands(
+    m: usize,
+    k: usize,
+    n: usize,
+    palette: usize,
+    seed: u64,
+) -> (Vec<u16>, Vec<u16>) {
+    (
+        operand_stream(m * k, seed),
+        palette_stream(k * n, palette, seed ^ 0x9e3779b97f4a7c15),
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -57,6 +91,19 @@ mod tests {
         }
         // ids unique and dense
         assert!(a.iter().enumerate().all(|(i, j)| j.id == i as u64));
+    }
+
+    #[test]
+    fn gemm_operands_respect_shape_and_palette() {
+        let (a, b) = gemm_operands(5, 3, 4, 8, 42);
+        assert_eq!(a.len(), 15);
+        assert_eq!(b.len(), 12);
+        assert!(a.iter().all(|&x| x <= 255));
+        let distinct: std::collections::HashSet<u16> =
+            b.iter().copied().collect();
+        assert!(distinct.len() <= 8, "weights come from the codebook");
+        let (a2, b2) = gemm_operands(5, 3, 4, 8, 42);
+        assert_eq!((a, b), (a2, b2), "deterministic");
     }
 
     #[test]

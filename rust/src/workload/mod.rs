@@ -5,5 +5,8 @@
 mod gen;
 mod nmd;
 
-pub use gen::{broadcast_jobs, VectorJob};
+pub use gen::{
+    broadcast_jobs, gemm_operands, operand_stream, palette_stream,
+    VectorJob,
+};
 pub use nmd::{load_meta, load_testset, load_weights, Meta, TestSet};

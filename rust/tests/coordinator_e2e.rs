@@ -24,7 +24,7 @@ fn batcher_conserves_elements_property() {
             40,
             rng.next_u64(),
         );
-        let mut batcher = Batcher::new(BatcherConfig { width });
+        let mut batcher = Batcher::new(BatcherConfig::unbounded(width));
         for j in &jobs {
             batcher.push(j);
         }
@@ -62,6 +62,7 @@ fn mixed_backend_pool_is_consistent() {
         CoordinatorConfig {
             width: 8,
             queue_depth: 8,
+            max_open: None,
         },
         backends,
     );
@@ -81,6 +82,7 @@ fn empty_and_single_element_jobs() {
         CoordinatorConfig {
             width: 4,
             queue_depth: 2,
+            max_open: None,
         },
         vec![Box::new(ExactBackend)],
     );
@@ -115,6 +117,7 @@ fn pjrt_backend_through_coordinator() {
         CoordinatorConfig {
             width: 16,
             queue_depth: 4,
+            max_open: None,
         },
         backends,
     );
@@ -133,6 +136,7 @@ fn occupancy_reflects_broadcast_reuse() {
         CoordinatorConfig {
             width: 8,
             queue_depth: 2,
+            max_open: None,
         },
         vec![Box::new(ExactBackend)],
     );

@@ -1,0 +1,378 @@
+//! `kernels` subsystem integration: GEMM/conv2d lowering must be
+//! bit-exact against plain i32 oracles for every order, tile shape and
+//! execution substrate; scheduled (weight-stationary) job streams must
+//! coalesce to the provably minimal fabric-op count under any coalescing
+//! buffer bound; padded partial tiles must stay bit-exact vs `mul_exact`.
+
+use nibblemul::coordinator::{
+    Backend, Batcher, BatcherConfig, Coordinator, CoordinatorConfig,
+    ExactBackend, Sim64Backend, SimBackend,
+};
+use nibblemul::kernels::{
+    chunk_count, conv2d_i32, exact_exec, im2col, matmul_i32,
+    min_fabric_ops, to_chw, weights_to_gemm, Conv2dSpec, CoordinatorExec,
+    FabricExec, GemmPlan, GemmSpec, Order,
+};
+use nibblemul::model::{mul_exact, nibble_mul};
+use nibblemul::multipliers::Arch;
+use nibblemul::util::Xoshiro256;
+use nibblemul::workload::{gemm_operands, VectorJob};
+
+// ---------------------------------------------------------------- GEMM
+
+#[test]
+fn gemm_exhaustive_small_shapes_match_the_i32_oracle() {
+    // Every shape in 1..=4^3, both orders, several tiles: bit-exact.
+    let mut rng = Xoshiro256::new(5);
+    for m in 1..=4usize {
+        for k in 1..=4usize {
+            for n in 1..=4usize {
+                let spec = GemmSpec::new(m, k, n);
+                let a: Vec<u16> =
+                    (0..m * k).map(|_| rng.operand8()).collect();
+                let b: Vec<u16> =
+                    (0..k * n).map(|_| rng.operand8()).collect();
+                let want = matmul_i32(&a, &b, spec);
+                for order in [Order::RowMajor, Order::WeightStationary] {
+                    for tile in [1usize, 2, m] {
+                        let plan = GemmPlan::with_tile(spec, tile, order);
+                        let c = plan
+                            .execute(&a, &b, &mut exact_exec())
+                            .unwrap();
+                        assert!(
+                            c.iter()
+                                .zip(&want)
+                                .all(|(&g, &w)| g == w as i64),
+                            "{spec} {order} tile {tile}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn gemm_boundary_values_match_the_i32_oracle() {
+    // All-zeros, all-255s and mixed extremes (the padding value 0 must
+    // never contaminate real products).
+    for (a_val, b_val) in [(0u16, 0u16), (255, 255), (0, 255), (255, 0)] {
+        let spec = GemmSpec::new(5, 3, 2);
+        let a = vec![a_val; 15];
+        let b = vec![b_val; 6];
+        let want = matmul_i32(&a, &b, spec);
+        let plan = GemmPlan::new(spec, Order::WeightStationary);
+        let c = plan.execute(&a, &b, &mut exact_exec()).unwrap();
+        assert!(c.iter().zip(&want).all(|(&g, &w)| g == w as i64));
+    }
+}
+
+#[test]
+fn gemm_randomized_large_shapes_match_the_i32_oracle() {
+    for (seed, (m, k, n)) in
+        [(1u64, (25, 12, 7)), (2, (33, 5, 16)), (3, (8, 40, 3))]
+            .into_iter()
+    {
+        let spec = GemmSpec::new(m, k, n);
+        let (a, b) = gemm_operands(m, k, n, 16, seed);
+        let want = matmul_i32(&a, &b, spec);
+        for order in [Order::RowMajor, Order::WeightStationary] {
+            let plan = GemmPlan::new(spec, order);
+            let c = plan
+                .execute(
+                    &a,
+                    &b,
+                    &mut nibblemul::kernels::ClosureExec::new(
+                        "nibble-model",
+                        nibble_mul,
+                    ),
+                )
+                .unwrap();
+            assert!(
+                c.iter().zip(&want).all(|(&g, &w)| g == w as i64),
+                "{spec} {order}"
+            );
+        }
+    }
+}
+
+#[test]
+fn gemm_on_the_gate_level_fabric_matches_the_oracle() {
+    // m=9 against width 4: every job ends in a padded partial tile; the
+    // padded lanes must never corrupt real products (bit-exact).
+    let spec = GemmSpec::new(9, 4, 5);
+    let (a, b) = gemm_operands(9, 4, 5, 8, 11);
+    let want = matmul_i32(&a, &b, spec);
+    for order in [Order::RowMajor, Order::WeightStationary] {
+        for max_open in [Some(1), Some(2), None] {
+            let cfg = BatcherConfig {
+                width: 4,
+                max_open,
+            };
+            let mut exec = FabricExec::new(
+                Box::new(Sim64Backend::new(Arch::Nibble, 4).unwrap()),
+                cfg,
+            );
+            let plan = GemmPlan::new(spec, order);
+            let c = plan.execute(&a, &b, &mut exec).unwrap();
+            assert!(
+                c.iter().zip(&want).all(|(&g, &w)| g == w as i64),
+                "{order} max_open {max_open:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn gemm_through_the_coordinator_service_matches_the_oracle() {
+    let spec = GemmSpec::new(13, 6, 6);
+    let (a, b) = gemm_operands(13, 6, 6, 8, 23);
+    let want = matmul_i32(&a, &b, spec);
+    let mut fabric_ops = Vec::new();
+    for order in [Order::RowMajor, Order::WeightStationary] {
+        let backends: Vec<Box<dyn Backend>> = vec![
+            Box::new(Sim64Backend::new(Arch::Nibble, 4).unwrap()),
+            Box::new(SimBackend::new(Arch::Nibble, 4).unwrap()),
+        ];
+        let coord = Coordinator::new(
+            CoordinatorConfig {
+                width: 4,
+                queue_depth: 8,
+                max_open: Some(2),
+            },
+            backends,
+        );
+        let plan = GemmPlan::new(spec, order);
+        let c = plan
+            .execute(&a, &b, &mut CoordinatorExec::new(&coord))
+            .unwrap();
+        assert!(
+            c.iter().zip(&want).all(|(&g, &w)| g == w as i64),
+            "{order} through coordinator"
+        );
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap.errors, 0);
+        assert!(snap.coalesce_chunks > 0, "counters are populated");
+        fabric_ops.push(snap.batches_executed);
+        coord.shutdown();
+    }
+    assert!(
+        fabric_ops[1] <= fabric_ops[0],
+        "weight-stationary ({}) must never need more fabric ops than \
+         row-major ({})",
+        fabric_ops[1],
+        fabric_ops[0]
+    );
+}
+
+// ------------------------------------------------------------- conv2d
+
+#[test]
+fn conv2d_im2col_gemm_matches_the_direct_oracle() {
+    let cases = [
+        // (c_in, h, w, c_out, kh, kw, stride, pad)
+        (1usize, 5usize, 5usize, 1usize, 3usize, 3usize, 1usize, 0usize),
+        (2, 6, 6, 3, 3, 3, 1, 1),
+        (3, 8, 7, 2, 2, 4, 2, 0),
+        (1, 4, 4, 4, 1, 1, 1, 0),
+        (2, 5, 5, 2, 3, 3, 2, 2),
+    ];
+    for (i, &(c_in, h, w, c_out, kh, kw, stride, pad)) in
+        cases.iter().enumerate()
+    {
+        let spec = Conv2dSpec {
+            c_in,
+            h,
+            w,
+            c_out,
+            kh,
+            kw,
+            stride,
+            pad,
+        };
+        let mut rng = Xoshiro256::new(100 + i as u64);
+        let img: Vec<u16> =
+            (0..c_in * h * w).map(|_| rng.operand8()).collect();
+        let wts: Vec<u16> = (0..c_out * spec.patch_len())
+            .map(|_| rng.operand8())
+            .collect();
+        for pad_value in [0u16, 9] {
+            let want = conv2d_i32(&spec, &img, &wts, pad_value).unwrap();
+            let a = im2col(&spec, &img, pad_value).unwrap();
+            let b = weights_to_gemm(&spec, &wts).unwrap();
+            for order in [Order::RowMajor, Order::WeightStationary] {
+                let plan = GemmPlan::new(spec.gemm(), order);
+                let c =
+                    plan.execute(&a, &b, &mut exact_exec()).unwrap();
+                let chw = to_chw(&spec, &c);
+                assert!(
+                    chw.iter().zip(&want).all(|(&g, &w)| g == w as i64),
+                    "case {i} pad_value {pad_value} {order}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn conv2d_on_the_fabric_matches_the_direct_oracle() {
+    let spec = Conv2dSpec {
+        c_in: 2,
+        h: 5,
+        w: 5,
+        c_out: 3,
+        kh: 3,
+        kw: 3,
+        stride: 1,
+        pad: 1,
+    };
+    let mut rng = Xoshiro256::new(9);
+    let img: Vec<u16> = (0..50).map(|_| rng.operand8()).collect();
+    let wts: Vec<u16> =
+        (0..3 * spec.patch_len()).map(|_| rng.operand8()).collect();
+    let want = conv2d_i32(&spec, &img, &wts, 3).unwrap();
+    let a = im2col(&spec, &img, 3).unwrap();
+    let b = weights_to_gemm(&spec, &wts).unwrap();
+    let mut exec = FabricExec::new(
+        Box::new(Sim64Backend::new(Arch::Nibble, 8).unwrap()),
+        BatcherConfig::bounded(8, 4),
+    );
+    let plan = GemmPlan::new(spec.gemm(), Order::WeightStationary);
+    let c = plan.execute(&a, &b, &mut exec).unwrap();
+    let chw = to_chw(&spec, &c);
+    assert!(chw.iter().zip(&want).all(|(&g, &w)| g == w as i64));
+}
+
+// ------------------------- scheduler-shaped traffic batcher properties
+
+fn random_jobs(rng: &mut Xoshiro256, count: usize, palette: u64) -> Vec<VectorJob> {
+    (0..count)
+        .map(|id| VectorJob {
+            id: id as u64,
+            a: (0..rng.range(1, 19) as usize)
+                .map(|_| rng.operand8())
+                .collect(),
+            b: (rng.below(palette)) as u16,
+        })
+        .collect()
+}
+
+/// Push jobs (re-id'd densely) through a batcher and return (fabric ops,
+/// per-(job,offset) products from executing every batch exactly).
+fn run_batcher(
+    jobs: &[VectorJob],
+    cfg: BatcherConfig,
+) -> (u64, std::collections::HashMap<(u64, usize), u32>) {
+    let mut batcher = Batcher::new(cfg);
+    for job in jobs {
+        batcher.push(job);
+    }
+    let batches = batcher.flush();
+    let mut products = std::collections::HashMap::new();
+    for batch in &batches {
+        assert_eq!(batch.a.len(), cfg.width, "all batches padded");
+        for (lane, tag) in batch.lanes.iter().enumerate() {
+            let p = batch.a[lane] as u32 * batch.b as u32;
+            let dup = products.insert((tag.job, tag.offset), p);
+            assert!(dup.is_none(), "element duplicated");
+        }
+    }
+    assert_eq!(batcher.stats().batches, batches.len() as u64);
+    (batches.len() as u64, products)
+}
+
+#[test]
+fn scheduled_streams_coalesce_to_provably_minimal_fabric_ops() {
+    // Property: for random job sets sorted by broadcast value, the
+    // batcher emits EXACTLY min_fabric_ops batches under every buffer
+    // bound — and all products (incl. padded partial tiles) are
+    // bit-exact vs mul_exact.
+    let mut rng = Xoshiro256::new(77);
+    for case in 0..40 {
+        let width = [4usize, 8, 16][case % 3];
+        let mut jobs =
+            random_jobs(&mut rng, 5 + (case % 25), 1 + (case as u64 % 13));
+        jobs.sort_by_key(|j| j.b); // the weight-stationary schedule
+        for (id, job) in jobs.iter_mut().enumerate() {
+            job.id = id as u64;
+        }
+        let minimal = min_fabric_ops(&jobs, width);
+        for max_open in [Some(1), Some(2), Some(5), None] {
+            let (ops, products) = run_batcher(
+                &jobs,
+                BatcherConfig { width, max_open },
+            );
+            assert_eq!(
+                ops, minimal,
+                "case {case} width {width} max_open {max_open:?}: \
+                 scheduled stream must hit the minimum"
+            );
+            for job in &jobs {
+                for (off, &x) in job.a.iter().enumerate() {
+                    assert_eq!(
+                        products[&(job.id, off)],
+                        mul_exact(x, job.b),
+                        "padded/partial tiles must stay bit-exact"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn any_order_stays_between_minimal_and_chunk_count() {
+    // Property: arbitrary (unsorted) streams never beat the minimum and
+    // never exceed the no-coalescing chunk count, under any bound.
+    let mut rng = Xoshiro256::new(123);
+    for case in 0..40 {
+        let width = [4usize, 8][case % 2];
+        let jobs = random_jobs(&mut rng, 4 + (case % 30), 6);
+        let minimal = min_fabric_ops(&jobs, width);
+        let chunks = chunk_count(&jobs, width);
+        for max_open in [Some(1), Some(3), None] {
+            let (ops, _) =
+                run_batcher(&jobs, BatcherConfig { width, max_open });
+            assert!(
+                ops >= minimal && ops <= chunks,
+                "case {case}: {minimal} <= {ops} <= {chunks} violated \
+                 (width {width}, max_open {max_open:?})"
+            );
+        }
+        // Unbounded buffers always coalesce maximally, in any order.
+        let (ops_unbounded, _) =
+            run_batcher(&jobs, BatcherConfig::unbounded(width));
+        assert_eq!(ops_unbounded, minimal);
+    }
+}
+
+#[test]
+fn scheduled_gemm_beats_naive_under_a_bounded_buffer() {
+    // The acceptance scenario: clustered weights, partial job tails, a
+    // small coalescing buffer. Weight-stationary must need strictly
+    // fewer fabric ops than row-major here (and exactly the minimum).
+    let spec = GemmSpec::new(25, 12, 12);
+    let (a, b) = gemm_operands(25, 12, 12, 32, 7);
+    let width = 8;
+    let cfg = BatcherConfig::bounded(width, 4);
+    let mut ops = Vec::new();
+    for order in [Order::RowMajor, Order::WeightStationary] {
+        let mut exec =
+            FabricExec::new(Box::new(ExactBackend), cfg);
+        let plan = GemmPlan::new(spec, order);
+        let c = plan.execute(&a, &b, &mut exec).unwrap();
+        let want = matmul_i32(&a, &b, spec);
+        assert!(c.iter().zip(&want).all(|(&g, &w)| g == w as i64));
+        ops.push(exec.batches_executed());
+    }
+    let plan = GemmPlan::new(spec, Order::WeightStationary);
+    let (jobs, _) = plan.jobs(&a, &b).unwrap();
+    let minimal = min_fabric_ops(&jobs, width);
+    assert_eq!(ops[1], minimal, "scheduled hits the provable minimum");
+    assert!(
+        ops[1] < ops[0],
+        "scheduled ({}) must strictly beat naive ({}) on this workload",
+        ops[1],
+        ops[0]
+    );
+}
