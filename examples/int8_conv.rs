@@ -18,7 +18,7 @@
 
 use nibblemul::coordinator::{
     BatcherConfig, Coordinator, CoordinatorConfig, ExactBackend,
-    Sim64Backend,
+    SessionConfig, Sim64Backend,
 };
 use nibblemul::kernels::{
     exact_exec, Conv2dSpec, CoordinatorExec, FabricExec, Order,
@@ -116,13 +116,21 @@ fn main() -> anyhow::Result<()> {
             .collect::<anyhow::Result<_>>()?,
     );
     let sw = Stopwatch::start();
-    let served =
-        conv.forward(&img, &mut CoordinatorExec::new(&coord))?;
+    // Streaming-session mode: a size/age flush window on top of the
+    // bounded coalescing buffer (results never change, only op counts
+    // and per-job latency do).
+    let served = conv.forward(
+        &img,
+        &mut CoordinatorExec::streaming(
+            &coord,
+            SessionConfig::windowed(width * 4, (width * 16) as u64),
+        ),
+    )?;
     let elapsed = sw.elapsed_secs();
     anyhow::ensure!(served == want, "served conv diverged from oracle");
     println!(
-        "\nserved through the coordinator ({} workers x sim64:nibble \
-         x{width}): bit-exact",
+        "\nserved through a streaming coordinator session ({} workers x \
+         sim64:nibble x{width}): bit-exact",
         workers
     );
     println!("{}", coord.metrics.snapshot());

@@ -21,8 +21,8 @@
 //!     cargo run --release --example int8_inference
 
 use nibblemul::coordinator::{
-    Backend, BatcherConfig, Coordinator, CoordinatorConfig, Sim64Backend,
-    SimBackend,
+    Backend, BatcherConfig, Coordinator, CoordinatorConfig, SessionConfig,
+    Sim64Backend, SimBackend,
 };
 use nibblemul::kernels::{CoordinatorExec, FabricExec};
 use nibblemul::model::quant::QuantMlp;
@@ -148,15 +148,23 @@ fn main() -> anyhow::Result<()> {
         },
         backends,
     );
-    let served = mlp
-        .forward_batched(&ts.x[..n_hw].to_vec(), &mut CoordinatorExec::new(&coord))?;
+    // Streaming-session serving mode: windowed flushing bounds per-job
+    // latency; results must stay bit-exact with the in-process fabric.
+    let served = mlp.forward_batched(
+        &ts.x[..n_hw].to_vec(),
+        &mut CoordinatorExec::streaming(
+            &coord,
+            SessionConfig::windowed(width * 4, (width * 16) as u64),
+        ),
+    )?;
     anyhow::ensure!(
         served == hw_logits,
         "coordinator-served inference diverged from the in-process fabric"
     );
     println!(
-        "\nserved the same {n_hw} inferences through the coordinator \
-         ({workers} workers x sim64:nibble x{width}): bit-exact"
+        "\nserved the same {n_hw} inferences through a streaming \
+         coordinator session ({workers} workers x sim64:nibble x{width}): \
+         bit-exact"
     );
     println!("{}", coord.metrics.snapshot());
     coord.shutdown();

@@ -1,0 +1,286 @@
+#!/usr/bin/env python3
+"""Differential validation of the streaming-session assembly algorithm.
+
+Line-by-line Python port of `rust/src/coordinator/batcher.rs` (push /
+LRU-evict / window-flush) and the single-threaded core of
+`rust/src/coordinator/service.rs` (Session: submit, windows, dispatch,
+per-lane settlement, per-job error containment, drain), checked against
+a brute-force oracle over randomized stream schedules.
+
+The port abstracts the worker pool as an immediate per-batch executor
+(the pool only reorders completions; lane settlement is commutative, so
+assembly results are order-independent — the Rust test suite covers the
+threaded paths). No Rust toolchain ships in this container; this is the
+PR's algorithmic evidence, mirroring the PR-2/PR-3 methodology.
+
+Checked properties, per random schedule:
+  1. streamed results == closed-set (windowless) results == oracle,
+     products bit-exact, for every job;
+  2. per-job error containment: exactly the jobs whose broadcast value
+     is poisoned fail; everyone else completes;
+  3. empty jobs complete immediately with empty products;
+  4. duplicate ids are rejected without corrupting the stream;
+  5. window invariants after every submit: open-elements < size window,
+     no open batch older than the age window, open batches <= max_open;
+  6. element conservation (each (job, offset) emitted exactly once);
+  7. metrics consistency: batches_ok + batches_err == batches emitted,
+     completed + failed == accepted jobs, chunks/batches/saved algebra.
+
+Run: python3 python/validate_session.py [n_cases]
+"""
+
+import random
+import sys
+
+
+class Batcher:
+    """Port of coordinator::Batcher."""
+
+    def __init__(self, width, max_open=None):
+        assert width >= 1
+        assert max_open is None or max_open >= 1
+        self.width = width
+        self.max_open = max_open
+        self.open = {}  # b -> [a_list, lanes, touched]
+        self.emitted = []
+        self.tick = 0
+        self.chunks = 0
+        self.batches = 0
+        self.forced = 0
+        self.padded = 0
+
+    def push(self, job_id, a, b):
+        w = self.width
+        self.chunks += (len(a) + w - 1) // w
+        for offset, x in enumerate(a):
+            if b not in self.open:
+                if self.max_open is not None and len(self.open) >= self.max_open:
+                    self.evict_lru()
+                self.open[b] = [[], [], self.tick]
+            entry = self.open[b]
+            entry[0].append(x)
+            entry[1].append((job_id, offset))
+            entry[2] = self.tick
+            self.tick += 1
+            if len(entry[0]) == w:
+                del self.open[b]
+                self.batches += 1
+                self.emitted.append((entry[0], b, entry[1]))
+
+    def evict_lru(self):
+        victim = min(self.open.items(), key=lambda kv: kv[1][2])[0]
+        entry = self.open.pop(victim)
+        self.forced += 1
+        self.emit_padded(entry[0], victim, entry[1])
+
+    def emit_padded(self, a, b, lanes):
+        self.padded += self.width - len(a)
+        a = a + [0] * (self.width - len(a))
+        self.batches += 1
+        self.emitted.append((a, b, lanes))
+
+    def flush_older_than(self, min_tick):
+        keys = sorted(b for b, e in self.open.items() if e[2] < min_tick)
+        for b in keys:
+            entry = self.open.pop(b)
+            self.emit_padded(entry[0], b, entry[1])
+        return len(keys)
+
+    def flush_open(self):
+        return self.flush_older_than(1 << 63)
+
+    def drain(self):
+        out, self.emitted = self.emitted, []
+        return out
+
+    def pending_elements(self):
+        return sum(len(e[1]) for e in self.open.values())
+
+
+class Session:
+    """Port of coordinator::Session over an immediate batch executor.
+
+    `poison` is the set of broadcast values the fault-injecting backend
+    fails on (FailingBackend semantics).
+    """
+
+    def __init__(self, width, max_open, window_elems, window_age, poison=()):
+        self.batcher = Batcher(width, max_open)
+        self.window_elems = window_elems
+        self.window_age = window_age
+        self.poison = set(poison)
+        self.pending = {}  # id -> [products, remaining, error]
+        self.seen = set()
+        self.ready = []  # (id, ok, products_or_msg)
+        self.batches_ok = 0
+        self.batches_err = 0
+        self.completed = 0
+        self.failed = 0
+        self.lane_log = []  # (job, offset) settlement log (conservation)
+
+    def submit(self, job_id, a, b):
+        if job_id in self.seen:
+            return "duplicate job id %d" % job_id
+        self.seen.add(job_id)
+        if not a:
+            self.completed += 1
+            self.ready.append((job_id, True, []))
+            return None
+        self.pending[job_id] = [[0] * len(a), len(a), None]
+        self.batcher.push(job_id, a, b)
+        # apply_windows: age window first, then size window (as in Rust).
+        if self.window_age is not None:
+            min_tick = max(0, self.batcher.tick - self.window_age)
+            self.batcher.flush_older_than(min_tick)
+        if self.window_elems is not None:
+            if self.batcher.pending_elements() >= self.window_elems:
+                self.batcher.flush_open()
+        self.pump()
+        return None
+
+    def pump(self):
+        for a, b, lanes in self.batcher.drain():
+            if b in self.poison:
+                self.batches_err += 1
+                msg = "injected fault: broadcast operand %d is poisoned" % b
+                for tag in lanes:
+                    self.settle(tag, None, msg)
+            else:
+                self.batches_ok += 1
+                products = [x * b for x in a]
+                for lane, tag in enumerate(lanes):
+                    self.settle(tag, products[lane], None)
+
+    def settle(self, tag, product, err):
+        job_id, offset = tag
+        self.lane_log.append(tag)
+        entry = self.pending.get(job_id)
+        assert entry is not None, "lane for unknown job"
+        if product is not None:
+            entry[0][offset] = product
+        if err is not None and entry[2] is None:
+            entry[2] = err
+        entry[1] -= 1
+        if entry[1] == 0:
+            del self.pending[job_id]
+            if entry[2] is None:
+                self.completed += 1
+                self.ready.append((job_id, True, entry[0]))
+            else:
+                self.failed += 1
+                self.ready.append((job_id, False, entry[2]))
+
+    def drain(self):
+        self.batcher.flush_open()
+        self.pump()
+        assert not self.pending, "jobs left unassembled after drain"
+        out, self.ready = self.ready, []
+        return out
+
+
+def run_case(rng, case):
+    width = rng.choice([2, 4, 8, 16])
+    max_open = rng.choice([None, 1, 2, 4, 8])
+    window_elems = rng.choice([None, width, width + 1, 4 * width])
+    window_age = rng.choice([None, 1, 3, 8 * width])
+    n_jobs = rng.randrange(1, 40)
+    values = rng.randrange(1, 9)
+    poison = set(v for v in range(values) if rng.random() < 0.2)
+    jobs = []
+    for jid in range(n_jobs):
+        ln = rng.randrange(0, 3 * width) if rng.random() < 0.9 else 0
+        jobs.append(
+            (jid, [rng.randrange(256) for _ in range(ln)], rng.randrange(values))
+        )
+
+    # Streamed run, with invariant checks after every submit.
+    s = Session(width, max_open, window_elems, window_age, poison)
+    outcomes = []
+    for jid, a, b in jobs:
+        err = s.submit(jid, a, b)
+        assert err is None, err
+        bt = s.batcher
+        if window_elems is not None:
+            assert bt.pending_elements() < window_elems, "size window violated"
+        if window_age is not None:
+            assert all(
+                e[2] >= bt.tick - window_age for e in bt.open.values()
+            ), "age window violated"
+        if max_open is not None:
+            assert len(bt.open) <= max_open, "buffer bound violated"
+        # interleave result draining, like try_results()
+        outcomes.extend(s.ready)
+        s.ready = []
+    outcomes.extend(s.drain())
+
+    # Closed-set run (windowless) — the run_jobs wrapper.
+    c = Session(width, max_open, None, None, poison)
+    for jid, a, b in jobs:
+        assert c.submit(jid, a, b) is None
+    closed = c.drain()
+
+    # Oracle + cross-checks.
+    def check(results, label):
+        by_id = {r[0]: r for r in results}
+        assert len(by_id) == len(jobs), "%s: %d results for %d jobs" % (
+            label,
+            len(by_id),
+            len(jobs),
+        )
+        for jid, a, b in jobs:
+            _, ok, payload = by_id[jid]
+            if a and b in poison:
+                assert not ok, "%s: job %d must fail (containment)" % (label, jid)
+                assert "poisoned" in payload
+            else:
+                assert ok, "%s: job %d must complete" % (label, jid)
+                assert payload == [x * b for x in a], "%s: job %d products" % (
+                    label,
+                    jid,
+                )
+
+    check(outcomes, "streamed case %d" % case)
+    check(closed, "closed case %d" % case)
+
+    # Element conservation in the streamed run.
+    total = sum(len(a) for _, a, _ in jobs)
+    assert len(s.lane_log) == total and len(set(s.lane_log)) == total
+
+    # Metrics algebra.
+    for sess in (s, c):
+        assert sess.batches_ok + sess.batches_err == sess.batcher.batches
+        assert sess.completed + sess.failed == n_jobs
+        assert sess.batcher.chunks >= 1 or total == 0
+    # With an UNBOUNDED buffer, windows only add padded flushes, so the
+    # closed set coalesces at least as well. (With a bounded LRU buffer
+    # the windowed stream occasionally wins: early flushes change which
+    # victim the LRU eviction picks, so no inequality holds either way.)
+    if max_open is None:
+        assert c.batcher.batches <= s.batcher.batches
+    # Emitted ops never exceed the no-coalescing chunk count, even WITH
+    # windows: every emitted batch has a unique "opener" job, and a job
+    # opens at most ceil(len/width) batches (its elements enter
+    # contiguously). This is why ops_saved() needs no signed arithmetic.
+    assert s.batcher.batches <= s.batcher.chunks
+    assert c.batcher.batches <= c.batcher.chunks
+
+    # Duplicate rejection leaves the stream intact (999 is never in the
+    # poison set, which only holds values < 9).
+    if jobs:
+        err = s.submit(jobs[0][0], [1], 0)
+        assert err and "duplicate" in err
+        assert s.submit(n_jobs + 7, [2, 3], 999) is None
+        tail = s.drain()
+        assert len(tail) == 1 and tail[0][1]
+
+
+def main():
+    n = int(sys.argv[1]) if len(sys.argv) > 1 else 5000
+    rng = random.Random(20260729)
+    for case in range(n):
+        run_case(rng, case)
+    print("OK: %d randomized stream schedules validated" % n)
+
+
+if __name__ == "__main__":
+    main()

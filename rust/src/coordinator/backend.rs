@@ -72,6 +72,35 @@ impl Backend for ExactBackend {
     }
 }
 
+/// Fault-injection backend: exact products, except batches whose
+/// broadcast operand is in the poison set fail with an error. Drives the
+/// error-containment tests — a failed batch must fail only the jobs
+/// whose lanes it carries, never the rest of the stream.
+pub struct FailingBackend {
+    poison: Vec<u16>,
+}
+
+impl FailingBackend {
+    pub fn new(poison: Vec<u16>) -> Self {
+        Self { poison }
+    }
+}
+
+impl Backend for FailingBackend {
+    fn execute(&mut self, batch: &Batch) -> Result<Vec<u32>> {
+        anyhow::ensure!(
+            !self.poison.contains(&batch.b),
+            "injected fault: broadcast operand {} is poisoned",
+            batch.b
+        );
+        ExactBackend.execute(batch)
+    }
+
+    fn name(&self) -> String {
+        format!("failing:{:?}", self.poison)
+    }
+}
+
 /// Gate-level simulated fabric backend with cycle/energy accounting.
 ///
 /// The vector unit drives the shared `design::DesignStore` artifact for

@@ -228,14 +228,41 @@ impl Batcher {
         std::mem::take(&mut self.emitted)
     }
 
-    /// Flush every open partial batch, padding with zero lanes.
-    pub fn flush(&mut self) -> Vec<Batch> {
-        let mut keys: Vec<u16> = self.open.keys().copied().collect();
+    /// Current logical time (ticks once per appended element) — the
+    /// clock the age-window flush of a streaming session reads.
+    pub fn tick(&self) -> u64 {
+        self.tick
+    }
+
+    /// Force-flush (padded) every open batch last touched before
+    /// `min_tick`, in deterministic broadcast-value order; returns how
+    /// many were flushed. This is the logical-time flush window of the
+    /// streaming session: a partial batch cannot hold its lanes' jobs
+    /// hostage for more than a bounded number of submitted elements.
+    pub fn flush_older_than(&mut self, min_tick: u64) -> usize {
+        let mut keys: Vec<u16> = self
+            .open
+            .iter()
+            .filter(|(_, o)| o.touched < min_tick)
+            .map(|(&b, _)| b)
+            .collect();
         keys.sort_unstable(); // deterministic order
+        let n = keys.len();
         for k in keys {
             let open = self.open.remove(&k).expect("key exists");
             self.emit_padded(open.batch);
         }
+        n
+    }
+
+    /// Force-flush (padded) every open partial batch; returns how many.
+    pub fn flush_open(&mut self) -> usize {
+        self.flush_older_than(u64::MAX)
+    }
+
+    /// Flush every open partial batch, padding with zero lanes.
+    pub fn flush(&mut self) -> Vec<Batch> {
+        self.flush_open();
         self.drain()
     }
 
@@ -391,6 +418,25 @@ mod tests {
         // ceil(9/4) + ceil(9/4) + ceil(1/4) = 3 + 3 + 1
         assert_eq!(nb, 7, "provably minimal op count");
         assert_eq!(bounded.stats().batches, unbounded.stats().batches);
+    }
+
+    #[test]
+    fn age_window_flushes_only_stale_open_batches() {
+        let mut batcher = Batcher::new(BatcherConfig::unbounded(4));
+        batcher.push(&job(0, 2, 1)); // elements at ticks 0, 1
+        batcher.push(&job(1, 2, 2)); // elements at ticks 2, 3
+        assert_eq!(batcher.tick(), 4);
+        // Value 1 was last touched at tick 1, value 2 at tick 3: a
+        // min_tick of 2 must flush exactly the stale value-1 batch.
+        assert_eq!(batcher.flush_older_than(2), 1);
+        let out = batcher.drain();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].b, 1);
+        assert_eq!(out[0].occupancy(), 2);
+        assert_eq!(out[0].a.len(), 4, "window-flushed batch is padded");
+        assert_eq!(batcher.open_batches(), 1);
+        assert_eq!(batcher.flush_open(), 1, "value 2 still open");
+        assert_eq!(batcher.stats().forced_flushes, 0, "window, not LRU");
     }
 
     #[test]

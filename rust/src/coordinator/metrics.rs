@@ -61,6 +61,12 @@ impl LatencyHistogram {
 pub struct Metrics {
     pub jobs_submitted: AtomicU64,
     pub jobs_completed: AtomicU64,
+    /// Jobs that finished with a per-job `Err` because a batch carrying
+    /// one of their lanes failed (error containment: disjoint from
+    /// `jobs_completed`).
+    pub jobs_failed: AtomicU64,
+    /// Batches executed *successfully* (errored batches count toward
+    /// `errors`, not here).
     pub batches_executed: AtomicU64,
     /// Backend execution passes. Group-capable backends (the 64-lane
     /// packed fabric) execute many batches per pass, so
@@ -72,11 +78,18 @@ pub struct Metrics {
     /// broadcast coalescing (per-job chunk count — see
     /// [`super::CoalesceStats`]).
     pub coalesce_chunks: AtomicU64,
-    /// Fabric ops eliminated by broadcast coalescing
-    /// (`coalesce_chunks - batches emitted`).
-    pub coalesce_saved: AtomicU64,
+    /// Fabric ops actually emitted by the batcher (full + padded).
+    /// Monotone, unlike "ops saved" — a streaming session reports
+    /// incremental deltas, and a pushed-but-unflushed chunk would make a
+    /// saved counter go backwards; the snapshot derives
+    /// `coalesce_saved = chunks - batches` instead.
+    pub coalesce_batches: AtomicU64,
     /// Partial batches force-flushed by the bounded coalescing buffer.
     pub coalesce_forced: AtomicU64,
+    /// Partial batches flushed by a streaming session's size/age window
+    /// (bounds latency at some padding cost; zero on closed-set runs).
+    pub window_flushes: AtomicU64,
+    /// Batches whose backend execution failed.
     pub errors: AtomicU64,
     pub job_latency: LatencyHistogram,
 }
@@ -86,13 +99,17 @@ pub struct Metrics {
 pub struct MetricsSnapshot {
     pub jobs_submitted: u64,
     pub jobs_completed: u64,
+    pub jobs_failed: u64,
     pub batches_executed: u64,
     pub exec_passes: u64,
     pub lanes_executed: u64,
     pub lanes_padded: u64,
     pub coalesce_chunks: u64,
+    /// Fabric ops eliminated by broadcast coalescing
+    /// (`coalesce_chunks - batcher ops emitted`, derived).
     pub coalesce_saved: u64,
     pub coalesce_forced: u64,
+    pub window_flushes: u64,
     pub errors: u64,
     pub mean_latency_us: f64,
     pub p50_latency_us: u64,
@@ -123,16 +140,24 @@ impl MetricsSnapshot {
 
 impl Metrics {
     pub fn snapshot(&self) -> MetricsSnapshot {
+        // Load chunks ONCE and derive `saved` from that same value: a
+        // re-load could see newer submissions and yield saved > chunks,
+        // underflowing consumers that compute `chunks - saved`.
+        let chunks = self.coalesce_chunks.load(Ordering::Relaxed);
         MetricsSnapshot {
             jobs_submitted: self.jobs_submitted.load(Ordering::Relaxed),
             jobs_completed: self.jobs_completed.load(Ordering::Relaxed),
+            jobs_failed: self.jobs_failed.load(Ordering::Relaxed),
             batches_executed: self.batches_executed.load(Ordering::Relaxed),
             exec_passes: self.exec_passes.load(Ordering::Relaxed),
             lanes_executed: self.lanes_executed.load(Ordering::Relaxed),
             lanes_padded: self.lanes_padded.load(Ordering::Relaxed),
-            coalesce_chunks: self.coalesce_chunks.load(Ordering::Relaxed),
-            coalesce_saved: self.coalesce_saved.load(Ordering::Relaxed),
+            coalesce_chunks: chunks,
+            coalesce_saved: chunks.saturating_sub(
+                self.coalesce_batches.load(Ordering::Relaxed),
+            ),
             coalesce_forced: self.coalesce_forced.load(Ordering::Relaxed),
+            window_flushes: self.window_flushes.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
             mean_latency_us: self.job_latency.mean_us(),
             p50_latency_us: self.job_latency.quantile_us(0.5),
@@ -156,10 +181,11 @@ impl std::fmt::Display for MetricsSnapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         writeln!(
             f,
-            "jobs {}/{} done, batches {} ({} passes, {:.1} batches/pass), \
-             lanes {} (+{} pad), errors {}",
+            "jobs {}/{} done ({} failed), batches {} ({} passes, {:.1} \
+             batches/pass), lanes {} (+{} pad), errors {}",
             self.jobs_completed,
             self.jobs_submitted,
+            self.jobs_failed,
             self.batches_executed,
             self.exec_passes,
             self.batches_per_pass(),
@@ -170,12 +196,13 @@ impl std::fmt::Display for MetricsSnapshot {
         writeln!(
             f,
             "coalesce: {} chunks -> {} fabric ops ({} saved, {:.1}% hit \
-             rate, {} forced flushes)",
+             rate, {} forced flushes, {} window flushes)",
             self.coalesce_chunks,
             self.coalesce_chunks - self.coalesce_saved,
             self.coalesce_saved,
             self.coalesce_hit_rate() * 100.0,
-            self.coalesce_forced
+            self.coalesce_forced,
+            self.window_flushes
         )?;
         write!(
             f,
@@ -216,7 +243,7 @@ mod tests {
         let snap = m.snapshot();
         assert_eq!(snap.coalesce_hit_rate(), 0.0, "empty: defined as 0");
         m.coalesce_chunks.store(40, Ordering::Relaxed);
-        m.coalesce_saved.store(10, Ordering::Relaxed);
+        m.coalesce_batches.store(30, Ordering::Relaxed);
         m.coalesce_forced.store(3, Ordering::Relaxed);
         let snap = m.snapshot();
         assert!((snap.coalesce_hit_rate() - 0.25).abs() < 1e-12);

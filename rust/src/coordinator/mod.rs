@@ -1,12 +1,18 @@
 //! L3 serving coordinator: routes vector × broadcast-scalar multiply jobs
 //! to execution backends with broadcast-reuse-aware dynamic batching.
 //!
-//! This is the request-path layer of the system (vLLM-router-shaped):
+//! This is the request-path layer of the system (vLLM-router-shaped).
+//! The primary entry point is the streaming [`Session`] — an open-ended,
+//! multi-submitter job stream with windowed flushing, per-job
+//! submit-time latency, and per-job error containment; the closed-set
+//! [`Coordinator::run_jobs`] is a thin wrapper over one session:
 //!
 //! ```text
-//!   submit(jobs) ──> Batcher ──> bounded queue ──> worker pool ──> results
-//!                    (chunk to fabric width,        each worker owns a
-//!                     group by broadcast operand)   Backend instance
+//!   Session::submit ──> Batcher ──> bounded queue ──> worker pool
+//!   (many clients)      (chunk to fabric width,       each worker owns
+//!        ▲               group by broadcast operand,   a Backend
+//!        │               size/age flush windows)       instance
+//!        └────────── per-job JobOutcomes (Ok | contained Err) ◀──┘
 //! ```
 //!
 //! Backends: the gate-level simulated fabric (cycle/energy-accounted), the
@@ -19,8 +25,16 @@ mod metrics;
 mod pool;
 mod service;
 
-pub use backend::{Backend, ExactBackend, PjrtBackend, Sim64Backend, SimBackend};
+pub use backend::{
+    Backend, ExactBackend, FailingBackend, PjrtBackend, Sim64Backend,
+    SimBackend,
+};
 pub use batcher::{Batch, Batcher, BatcherConfig, CoalesceStats, LaneTag};
 pub use metrics::{LatencyHistogram, Metrics, MetricsSnapshot};
-pub use pool::{Pool, PoolDone, PoolWorker, WorkerPool};
-pub use service::{Coordinator, CoordinatorConfig, JobResult};
+pub use pool::{
+    Pool, PoolDone, PoolWorker, Received, WorkReceived, WorkerPool,
+};
+pub use service::{
+    Coordinator, CoordinatorConfig, JobOutcome, JobResult, Session,
+    SessionConfig,
+};

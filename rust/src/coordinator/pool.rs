@@ -18,7 +18,7 @@
 //!   `evaluate_arch` per item, reassembled deterministically by sequence
 //!   number.
 
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
@@ -61,13 +61,28 @@ pub struct PoolDone<T, R> {
 /// a dead worker will never produce.
 enum Delivery<T, R> {
     Done(PoolDone<T, R>),
-    Died { worker: usize, seq: u64 },
+    Died { worker: usize, seqs: Vec<u64> },
+}
+
+/// One delivery as seen by a caller: a completed item, a worker-death
+/// notice (carrying the sequence numbers of EVERY item in the dead
+/// group, so seq-tagging callers — the session's epoch filter — can
+/// tell whether any of their own work was lost instead of parsing
+/// error text), or channel closure (every worker exited).
+pub enum Received<T, R> {
+    Done(PoolDone<T, R>),
+    Died { worker: usize, seqs: Vec<u64> },
+    Closed,
 }
 
 /// Fixed-size pool of state-owning workers over a bounded queue.
+///
+/// The result channel sits behind a mutex so the pool is `Sync`: a
+/// streaming [`super::Session`] shared by several submitter threads can
+/// collect completions from whichever thread holds the session lock.
 pub struct Pool<W: PoolWorker> {
     tx: Option<SyncSender<(u64, W::Item)>>,
-    rx_done: Receiver<Delivery<W::Item, W::Out>>,
+    rx_done: Mutex<Receiver<Delivery<W::Item, W::Out>>>,
     handles: Vec<JoinHandle<()>>,
 }
 
@@ -120,7 +135,7 @@ impl<W: PoolWorker> Pool<W> {
                     _ => {
                         let _ = tx_done.send(Delivery::Died {
                             worker: worker_id,
-                            seq: seqs[0],
+                            seqs,
                         });
                         break;
                     }
@@ -148,9 +163,18 @@ impl<W: PoolWorker> Pool<W> {
         }
         Self {
             tx: Some(tx),
-            rx_done,
+            rx_done: Mutex::new(rx_done),
             handles,
         }
+    }
+
+    fn death_notice(worker: usize, seqs: &[u64]) -> anyhow::Error {
+        anyhow::anyhow!(
+            "pool worker {worker} panicked while executing item \
+             seq {}; its group ({} items) is lost",
+            seqs.first().copied().unwrap_or(0),
+            seqs.len()
+        )
     }
 
     /// Submit an item (blocks when the queue is full — backpressure).
@@ -162,18 +186,47 @@ impl<W: PoolWorker> Pool<W> {
             .map_err(|_| anyhow::anyhow!("worker pool closed"))
     }
 
+    /// Blocking receive of the next delivery, variant-preserving.
+    pub fn recv_any(&self) -> Received<W::Item, W::Out> {
+        match self.rx_done.lock().expect("done channel").recv() {
+            Ok(Delivery::Done(done)) => Received::Done(done),
+            Ok(Delivery::Died { worker, seqs }) => {
+                Received::Died { worker, seqs }
+            }
+            Err(_) => Received::Closed,
+        }
+    }
+
+    /// Non-blocking receive, variant-preserving: `None` when nothing has
+    /// been delivered yet.
+    pub fn try_recv_any(&self) -> Option<Received<W::Item, W::Out>> {
+        match self.rx_done.lock().expect("done channel").try_recv() {
+            Ok(Delivery::Done(done)) => Some(Received::Done(done)),
+            Ok(Delivery::Died { worker, seqs }) => {
+                Some(Received::Died { worker, seqs })
+            }
+            Err(TryRecvError::Empty) => None,
+            Err(TryRecvError::Disconnected) => Some(Received::Closed),
+        }
+    }
+
+    fn received_to_result(
+        r: Received<W::Item, W::Out>,
+    ) -> Result<PoolDone<W::Item, W::Out>> {
+        match r {
+            Received::Done(done) => Ok(done),
+            Received::Died { worker, seqs } => {
+                Err(Self::death_notice(worker, &seqs))
+            }
+            Received::Closed => Err(anyhow::anyhow!("all workers exited")),
+        }
+    }
+
     /// Blocking receive of the next completed item. Errors if a worker
     /// died mid-group (its remaining results will never arrive) or if
     /// every worker has exited.
     pub fn recv(&self) -> Result<PoolDone<W::Item, W::Out>> {
-        match self.rx_done.recv() {
-            Ok(Delivery::Done(done)) => Ok(done),
-            Ok(Delivery::Died { worker, seq }) => Err(anyhow::anyhow!(
-                "pool worker {worker} panicked while executing item \
-                 seq {seq}; its group is lost"
-            )),
-            Err(_) => Err(anyhow::anyhow!("all workers exited")),
-        }
+        Self::received_to_result(self.recv_any())
     }
 
     /// Close the queue and join all workers.
@@ -202,6 +255,15 @@ pub struct WorkDone {
     pub group: Option<usize>,
 }
 
+/// One [`WorkerPool`] delivery, variant-preserving (see [`Received`]).
+pub enum WorkReceived {
+    Done(WorkDone),
+    /// A worker died mid-group; `seqs` are every item the group held.
+    Died { worker: usize, seqs: Vec<u64> },
+    /// Every worker has exited.
+    Closed,
+}
+
 /// [`PoolWorker`] adapter over a serving [`Backend`].
 struct BackendWorker(Box<dyn Backend>);
 
@@ -217,15 +279,20 @@ impl PoolWorker for BackendWorker {
         let refs: Vec<&Batch> = items.iter().collect();
         match self.0.execute_group(&refs) {
             Ok(products) => products.into_iter().map(Ok).collect(),
-            Err(e) => {
-                // One error fails the whole group; the message is
-                // replicated per item (anyhow errors don't clone).
-                let msg = format!("{e:#}");
-                items
-                    .iter()
-                    .map(|_| Err(anyhow::anyhow!("{}", msg)))
-                    .collect()
+            Err(_) if items.len() > 1 => {
+                // Per-batch error containment: a grouped pass fails as
+                // a unit (execute_group returns one Result), so retry
+                // one batch at a time — only the actually-failing
+                // batches return Err, and the session fails only the
+                // jobs whose lanes they carry. Tradeoff, accepted on
+                // this exceptional path: group members that already ran
+                // inside the failed pass execute a second time, so a
+                // stateful backend's cycle/energy accounting counts
+                // them twice and the pass ran serially despite the
+                // group tag.
+                items.iter().map(|b| self.0.execute(b)).collect()
             }
+            Err(e) => vec![Err(e)],
         }
     }
 }
@@ -258,14 +325,42 @@ impl WorkerPool {
 
     /// Blocking receive of the next completed item.
     pub fn recv(&self) -> Result<WorkDone> {
-        let done = self.inner.recv()?;
-        Ok(WorkDone {
+        self.inner.recv().map(Self::to_work_done)
+    }
+
+    /// Blocking receive, variant-preserving (death notices keep their
+    /// seqs so the session can epoch-filter stale ones).
+    pub fn recv_any(&self) -> WorkReceived {
+        Self::to_work_received(self.inner.recv_any())
+    }
+
+    /// Non-blocking receive, variant-preserving.
+    pub fn try_recv_any(&self) -> Option<WorkReceived> {
+        self.inner.try_recv_any().map(Self::to_work_received)
+    }
+
+    fn to_work_received(
+        r: Received<Batch, Result<Vec<u32>>>,
+    ) -> WorkReceived {
+        match r {
+            Received::Done(done) => {
+                WorkReceived::Done(Self::to_work_done(done))
+            }
+            Received::Died { worker, seqs } => {
+                WorkReceived::Died { worker, seqs }
+            }
+            Received::Closed => WorkReceived::Closed,
+        }
+    }
+
+    fn to_work_done(done: PoolDone<Batch, Result<Vec<u32>>>) -> WorkDone {
+        WorkDone {
             seq: done.seq,
             batch: done.item,
             products: done.out,
             worker: done.worker,
             group: done.group,
-        })
+        }
     }
 
     /// Close the queue and join all workers.

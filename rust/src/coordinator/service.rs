@@ -1,24 +1,58 @@
-//! The coordinator service: submit jobs, get per-job results back, with
-//! batching, worker dispatch, reassembly and metrics.
+//! The coordinator service: an open-ended streaming session API over the
+//! batcher + worker pool, with per-job submit-time latency, windowed
+//! flushing, backpressure, graceful drain, and per-job error containment.
+//!
+//! [`Coordinator::session`] hands out a [`Session`]: a shareable handle
+//! (`&Session` is `Sync`) that any number of concurrent submitter threads
+//! feed with [`VectorJob`]s. Jobs are stamped at *their own* submit time,
+//! chunked/coalesced by the [`Batcher`], dispatched to the worker pool as
+//! soon as batches fill (the bounded queue provides backpressure), and
+//! reassembled into per-job [`JobOutcome`]s that stream back through
+//! [`Session::try_results`] / [`Session::drain`].
+//!
+//! **Error containment:** a batch whose backend execution fails produces
+//! `Err` outcomes for exactly the jobs whose lanes it carried; every other
+//! job completes normally. Only a pool-level failure (a worker thread
+//! dying mid-group, which loses results that can never be told apart from
+//! slow ones) poisons the whole session — and even then the poisoning is
+//! delivered as per-job `Err` outcomes, and later sessions are shielded
+//! from stragglers by epoch-tagged batch sequence numbers.
+//!
+//! The closed-set [`Coordinator::run_jobs`] is a thin wrapper: one
+//! windowless session, submit everything, drain — bit-identical batching
+//! and results to the pre-session implementation.
 
-use std::collections::HashMap;
-use std::sync::Arc;
-use std::time::Instant;
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{anyhow, ensure, Result};
 
 use crate::workload::VectorJob;
 
 use super::backend::Backend;
-use super::batcher::{Batch, Batcher, BatcherConfig};
+use super::batcher::{Batcher, BatcherConfig, CoalesceStats, LaneTag};
 use super::metrics::Metrics;
-use super::pool::{WorkItem, WorkerPool};
+use super::pool::{WorkDone, WorkItem, WorkReceived, WorkerPool};
 
 /// Completed job: products in original element order.
 #[derive(Clone, Debug)]
 pub struct JobResult {
     pub id: u64,
     pub products: Vec<u32>,
+}
+
+/// One finished job from a streaming session.
+#[derive(Debug)]
+pub struct JobOutcome {
+    pub id: u64,
+    /// Products in element order, or the error of the batch that carried
+    /// one of this job's lanes (per-job error containment).
+    pub result: Result<Vec<u32>>,
+    /// Submit-to-completion latency, stamped at THIS job's submit time
+    /// (not at some shared batch epoch).
+    pub latency: Duration,
 }
 
 /// Coordinator configuration.
@@ -44,17 +78,94 @@ impl Default for CoordinatorConfig {
     }
 }
 
+/// Flush windows of one streaming session, layered on top of the bounded
+/// LRU coalescing buffer (`CoordinatorConfig::max_open`). Both windows
+/// trade padding (worse coalescing) for bounded job latency; with both
+/// disabled, partial batches flush only at [`Session::flush`]/
+/// [`Session::drain`] — maximal coalescing, the closed-set behaviour.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SessionConfig {
+    /// Size window: force-flush every open partial batch once the
+    /// elements waiting across them reach this many. `None` disables.
+    pub window_elems: Option<usize>,
+    /// Logical-time window: force-flush an open batch once it has gone
+    /// untouched for this many ticks (the batcher clock ticks once per
+    /// submitted element). `None` disables.
+    pub window_age: Option<u64>,
+}
+
+impl SessionConfig {
+    /// No flush windows (the closed-set `run_jobs` configuration).
+    pub fn closed_set() -> Self {
+        Self::default()
+    }
+
+    /// Both windows enabled.
+    pub fn windowed(window_elems: usize, window_age: u64) -> Self {
+        assert!(window_elems >= 1, "size window needs >= 1 element");
+        assert!(window_age >= 1, "age window needs >= 1 tick");
+        Self {
+            window_elems: Some(window_elems),
+            window_age: Some(window_age),
+        }
+    }
+}
+
+/// Epoch-tagged batch sequence numbers: the high bits carry the session
+/// epoch so a session ignores stragglers from a poisoned predecessor.
+const SEQ_EPOCH_SHIFT: u32 = 32;
+const SEQ_MASK: u64 = (1 << SEQ_EPOCH_SHIFT) - 1;
+
 /// Orchestrates batcher -> worker pool -> reassembly.
 pub struct Coordinator {
     cfg: CoordinatorConfig,
     pool: WorkerPool,
     pub metrics: Arc<Metrics>,
+    /// One live session at a time owns the pool's result stream (the
+    /// closed-set `run_jobs` takes it too); creating a second session
+    /// blocks until the first is dropped.
+    session_gate: Mutex<()>,
+    /// Monotonic session counter for epoch-tagging batch sequences.
+    epoch: AtomicU64,
 }
 
 struct PendingJob {
     products: Vec<u32>,
     remaining: usize,
-    started: Instant,
+    /// This job's own submit stamp (per-job latency, not a shared epoch).
+    submitted: Instant,
+    /// First error seen on a batch carrying one of this job's lanes.
+    error: Option<String>,
+}
+
+/// Shared assembly state of one session, behind the session mutex.
+struct SessionInner {
+    cfg: SessionConfig,
+    batcher: Batcher,
+    pending: HashMap<u64, PendingJob>,
+    /// Every id this session has accepted — duplicate rejection must
+    /// hold even after the original completed. (Grows with the stream;
+    /// an open-ended deployment would swap in a rotating filter.)
+    seen: HashSet<u64>,
+    /// Completed outcomes not yet taken by the consumer.
+    ready: Vec<JobOutcome>,
+    /// Batches submitted to the pool and not yet received back.
+    in_flight: u64,
+    next_seq: u64,
+    /// Batcher counters already folded into the shared metrics.
+    reported: CoalesceStats,
+    /// Pool-level failure that poisoned the session.
+    fatal: Option<String>,
+}
+
+/// A streaming serving session: an open-ended, multi-submitter job
+/// stream into one [`Coordinator`]. See the module docs for semantics.
+pub struct Session<'a> {
+    coord: &'a Coordinator,
+    epoch: u64,
+    inner: Mutex<SessionInner>,
+    /// Held for the session's lifetime: serializes sessions on the pool.
+    _gate: MutexGuard<'a, ()>,
 }
 
 impl Coordinator {
@@ -66,110 +177,78 @@ impl Coordinator {
             cfg,
             pool,
             metrics: Arc::new(Metrics::default()),
+            session_gate: Mutex::new(()),
+            epoch: AtomicU64::new(0),
+        }
+    }
+
+    /// Open a streaming session. Blocks while another session (or a
+    /// `run_jobs` call) is live — the pool's result stream has exactly
+    /// one owner at a time.
+    pub fn session(&self, cfg: SessionConfig) -> Session<'_> {
+        let gate = self.session_gate.lock().expect("session gate");
+        let epoch = self.epoch.fetch_add(1, Ordering::Relaxed) + 1;
+        Session {
+            coord: self,
+            epoch,
+            inner: Mutex::new(SessionInner {
+                cfg,
+                batcher: Batcher::new(BatcherConfig {
+                    width: self.cfg.width,
+                    max_open: self.cfg.max_open,
+                }),
+                pending: HashMap::new(),
+                seen: HashSet::new(),
+                ready: Vec::new(),
+                in_flight: 0,
+                next_seq: 0,
+                reported: CoalesceStats::default(),
+                fatal: None,
+            }),
+            _gate: gate,
         }
     }
 
     /// Process a closed set of jobs to completion (batch, dispatch,
-    /// reassemble). Returns results sorted by job id.
+    /// reassemble). Returns results sorted by job id; any contained
+    /// per-job failure fails the whole call (streaming consumers that
+    /// want per-job errors use [`Coordinator::session`] directly).
     pub fn run_jobs(&self, jobs: &[VectorJob]) -> Result<Vec<JobResult>> {
-        use std::sync::atomic::Ordering;
+        self.run_jobs_with(jobs, SessionConfig::closed_set())
+    }
 
-        let mut batcher = Batcher::new(BatcherConfig {
-            width: self.cfg.width,
-            max_open: self.cfg.max_open,
-        });
-        let mut pending: HashMap<u64, PendingJob> = HashMap::new();
-        let now = Instant::now();
+    /// [`Coordinator::run_jobs`] over an explicit session window
+    /// configuration (windowed flushing changes op counts and latency,
+    /// never results).
+    pub fn run_jobs_with(
+        &self,
+        jobs: &[VectorJob],
+        cfg: SessionConfig,
+    ) -> Result<Vec<JobResult>> {
+        let session = self.session(cfg);
         for job in jobs {
-            self.metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
-            pending.insert(
-                job.id,
-                PendingJob {
-                    products: vec![0; job.a.len()],
-                    remaining: job.a.len(),
-                    started: now,
-                },
-            );
-            batcher.push(job);
+            session.submit(job)?;
         }
-        let mut batches = batcher.flush();
-        let cstats = batcher.stats();
-        self.metrics
-            .coalesce_chunks
-            .fetch_add(cstats.chunks, Ordering::Relaxed);
-        self.metrics
-            .coalesce_saved
-            .fetch_add(cstats.ops_saved(), Ordering::Relaxed);
-        self.metrics
-            .coalesce_forced
-            .fetch_add(cstats.forced_flushes, Ordering::Relaxed);
-        // Dispatch with bounded in-flight: submit all (queue blocks), then
-        // drain. To avoid deadlock with a bounded queue we interleave
-        // submit/recv.
-        let total = batches.len() as u64;
-        let mut results: Vec<JobResult> = Vec::with_capacity(jobs.len());
-        let mut submitted = 0u64;
-        let mut received = 0u64;
-        let mut iter = batches.drain(..);
-        let mut next: Option<(u64, Batch)> = iter.next().map(|b| (0, b));
-        let mut seq = 0u64;
-        while received < total {
-            // Opportunistically submit while capacity is likely available.
-            if let Some((_, batch)) = next.take() {
-                self.pool.submit(WorkItem { seq, batch })?;
-                submitted += 1;
-                seq += 1;
-                next = iter.next().map(|b| (seq, b));
-                if submitted - received
-                    < self.cfg.queue_depth as u64 && next.is_some()
-                {
-                    continue;
-                }
-            }
-            let done = self.pool.recv()?;
-            received += 1;
-            self.metrics
-                .batches_executed
-                .fetch_add(1, Ordering::Relaxed);
-            if done.group.is_some() {
-                self.metrics.exec_passes.fetch_add(1, Ordering::Relaxed);
-            }
-            let products = match done.products {
-                Ok(p) => p,
-                Err(e) => {
-                    self.metrics.errors.fetch_add(1, Ordering::Relaxed);
-                    return Err(e);
-                }
-            };
-            self.metrics
-                .lanes_executed
-                .fetch_add(done.batch.lanes.len() as u64, Ordering::Relaxed);
-            self.metrics.lanes_padded.fetch_add(
-                (done.batch.a.len() - done.batch.lanes.len()) as u64,
-                Ordering::Relaxed,
-            );
-            for (lane, tag) in done.batch.lanes.iter().enumerate() {
-                let entry = pending
-                    .get_mut(&tag.job)
-                    .expect("lane belongs to a pending job");
-                entry.products[tag.offset] = products[lane];
-                entry.remaining -= 1;
-                if entry.remaining == 0 {
-                    let fin = pending.remove(&tag.job).expect("present");
-                    self.metrics
-                        .job_latency
-                        .record(fin.started.elapsed());
-                    self.metrics
-                        .jobs_completed
-                        .fetch_add(1, Ordering::Relaxed);
-                    results.push(JobResult {
-                        id: tag.job,
-                        products: fin.products,
-                    });
-                }
+        let outcomes = session.drain()?;
+        drop(session);
+        let total = outcomes.len();
+        let mut results = Vec::with_capacity(total);
+        let mut failures: Vec<String> = Vec::new();
+        for o in outcomes {
+            match o.result {
+                Ok(products) => results.push(JobResult {
+                    id: o.id,
+                    products,
+                }),
+                Err(e) => failures.push(format!("job {}: {e:#}", o.id)),
             }
         }
-        anyhow::ensure!(pending.is_empty(), "jobs left unassembled");
+        ensure!(
+            failures.is_empty(),
+            "{} of {total} jobs failed:\n  {}",
+            failures.len(),
+            failures.join("\n  ")
+        );
         results.sort_by_key(|r| r.id);
         Ok(results)
     }
@@ -180,12 +259,388 @@ impl Coordinator {
     }
 }
 
+impl Session<'_> {
+    /// Submit one job. Blocks when the bounded work queue is full
+    /// (backpressure). Zero-length jobs complete immediately with empty
+    /// products; duplicate ids are rejected without corrupting the
+    /// stream; a poisoned session rejects everything.
+    pub fn submit(&self, job: &VectorJob) -> Result<()> {
+        let mut inner = self.inner.lock().expect("session state");
+        if let Some(f) = &inner.fatal {
+            return Err(anyhow!("session poisoned: {f}"));
+        }
+        ensure!(
+            inner.seen.insert(job.id),
+            "duplicate job id {} (ids must be unique within a session)",
+            job.id
+        );
+        let m = &self.coord.metrics;
+        m.jobs_submitted.fetch_add(1, Ordering::Relaxed);
+        let now = Instant::now();
+        if job.a.is_empty() {
+            // No lanes means no batch would ever complete it: finish it
+            // here instead of stranding a remaining=0 entry in pending.
+            m.jobs_completed.fetch_add(1, Ordering::Relaxed);
+            let latency = now.elapsed();
+            m.job_latency.record(latency);
+            inner.ready.push(JobOutcome {
+                id: job.id,
+                result: Ok(Vec::new()),
+                latency,
+            });
+            return Ok(());
+        }
+        inner.pending.insert(
+            job.id,
+            PendingJob {
+                products: vec![0; job.a.len()],
+                remaining: job.a.len(),
+                submitted: now,
+                error: None,
+            },
+        );
+        inner.batcher.push(job);
+        self.apply_windows(&mut inner);
+        let staged = self.stage(&mut inner);
+        drop(inner);
+        // Backpressure from a full queue stalls only THIS submitter —
+        // the session lock is released, so other clients keep submitting
+        // and try_results stays responsive.
+        self.submit_staged(staged)
+    }
+
+    /// Force-flush every open partial batch now and dispatch.
+    pub fn flush(&self) -> Result<()> {
+        let mut inner = self.inner.lock().expect("session state");
+        if let Some(f) = &inner.fatal {
+            return Err(anyhow!("session poisoned: {f}"));
+        }
+        inner.batcher.flush_open();
+        let staged = self.stage(&mut inner);
+        drop(inner);
+        self.submit_staged(staged)
+    }
+
+    /// Take every outcome completed so far (non-blocking; streaming
+    /// consumers poll this between submissions).
+    pub fn try_results(&self) -> Vec<JobOutcome> {
+        let mut inner = self.inner.lock().expect("session state");
+        if inner.fatal.is_none() {
+            // Collection failures poison the session and convert pending
+            // jobs to per-job Err outcomes; nothing extra to propagate.
+            let _ = self.collect(&mut inner, false);
+        }
+        std::mem::take(&mut inner.ready)
+    }
+
+    /// Graceful drain: flush open batches, wait for every in-flight
+    /// batch, and return all not-yet-taken outcomes (completion order;
+    /// sort by id for deterministic reporting). The session remains
+    /// usable afterwards — an open-ended stream can drain repeatedly.
+    pub fn drain(&self) -> Result<Vec<JobOutcome>> {
+        let mut inner = self.inner.lock().expect("session state");
+        if inner.fatal.is_none() {
+            inner.batcher.flush_open();
+            let staged = self.stage(&mut inner);
+            // Submitting under the lock is deliberate here: drain is a
+            // blocking barrier by contract, and progress is guaranteed
+            // (workers never need this lock; the done channel is
+            // unbounded). A pool-level failure fails every pending job
+            // via poison(); those surface as per-job Err outcomes below
+            // rather than aborting the drain.
+            match self.push_to_pool(staged) {
+                Some(e) => self.poison(&mut inner, &format!("{e:#}")),
+                None => {
+                    let _ = self.collect(&mut inner, true);
+                }
+            }
+        }
+        ensure!(
+            inner.pending.is_empty(),
+            "jobs left unassembled after drain"
+        );
+        Ok(std::mem::take(&mut inner.ready))
+    }
+
+    /// Jobs submitted and not yet completed or failed.
+    pub fn outstanding(&self) -> usize {
+        let inner = self.inner.lock().expect("session state");
+        inner.pending.len()
+    }
+
+    /// Apply the size/age flush windows after a submission.
+    fn apply_windows(&self, inner: &mut SessionInner) {
+        let mut flushed = 0u64;
+        if let Some(age) = inner.cfg.window_age {
+            let min_tick = inner.batcher.tick().saturating_sub(age);
+            flushed += inner.batcher.flush_older_than(min_tick) as u64;
+        }
+        if let Some(cap) = inner.cfg.window_elems {
+            if inner.batcher.pending_elements() >= cap {
+                flushed += inner.batcher.flush_open() as u64;
+            }
+        }
+        if flushed > 0 {
+            self.coord
+                .metrics
+                .window_flushes
+                .fetch_add(flushed, Ordering::Relaxed);
+        }
+    }
+
+    /// Take every emitted batch out of the batcher, assigning
+    /// epoch-tagged sequence numbers and counting them in flight while
+    /// the lock is still held (so a concurrent drain keeps waiting for
+    /// them), and fold new coalescing counters into the shared metrics.
+    /// The returned items are submitted by [`Session::submit_staged`]
+    /// after the lock is released.
+    fn stage(&self, inner: &mut SessionInner) -> Vec<WorkItem> {
+        self.report_stats(inner);
+        inner
+            .batcher
+            .drain()
+            .into_iter()
+            .map(|batch| {
+                let seq = (self.epoch << SEQ_EPOCH_SHIFT)
+                    | (inner.next_seq & SEQ_MASK);
+                inner.next_seq += 1;
+                inner.in_flight += 1;
+                WorkItem { seq, batch }
+            })
+            .collect()
+    }
+
+    /// Push staged items into the pool queue (blocking on backpressure);
+    /// the first submission failure is returned for the caller to
+    /// poison with. Safe with or without the session lock held — the
+    /// workers never take that lock and the done channel is unbounded,
+    /// so a full queue always drains.
+    fn push_to_pool(&self, staged: Vec<WorkItem>) -> Option<anyhow::Error> {
+        for item in staged {
+            if let Err(e) = self.coord.pool.submit(item) {
+                return Some(e);
+            }
+        }
+        None
+    }
+
+    /// Blocking-submit staged batches WITHOUT the session lock (queue
+    /// backpressure stalls only the calling submitter), then fold in
+    /// whatever has completed so far.
+    fn submit_staged(&self, staged: Vec<WorkItem>) -> Result<()> {
+        let submit_err = self.push_to_pool(staged);
+        let mut inner = self.inner.lock().expect("session state");
+        if let Some(e) = submit_err {
+            // Unsubmitted staged batches stay counted in in_flight only
+            // until poison() zeroes it and fails their jobs.
+            self.poison(&mut inner, &format!("{e:#}"));
+            return Err(e);
+        }
+        if inner.fatal.is_none() {
+            self.collect(&mut inner, false)?;
+        }
+        Ok(())
+    }
+
+    /// Fold the batcher's coalescing counters into the shared metrics
+    /// (delta against what this session already reported, so an
+    /// open-ended stream keeps the metrics current; all three counters
+    /// are monotone, unlike the derived "ops saved").
+    fn report_stats(&self, inner: &mut SessionInner) {
+        let cur = inner.batcher.stats();
+        let prev = inner.reported;
+        let m = &self.coord.metrics;
+        m.coalesce_chunks
+            .fetch_add(cur.chunks - prev.chunks, Ordering::Relaxed);
+        m.coalesce_batches
+            .fetch_add(cur.batches - prev.batches, Ordering::Relaxed);
+        m.coalesce_forced.fetch_add(
+            cur.forced_flushes - prev.forced_flushes,
+            Ordering::Relaxed,
+        );
+        inner.reported = cur;
+    }
+
+    /// Receive completed batches: all currently available (non-blocking)
+    /// or until nothing is in flight (blocking). Death notices from an
+    /// earlier session's lost group are discarded by epoch, like stale
+    /// `Done` deliveries — only a CURRENT-epoch worker death poisons
+    /// this session.
+    fn collect(&self, inner: &mut SessionInner, block: bool) -> Result<()> {
+        while inner.in_flight > 0 {
+            let received = if block {
+                Some(self.coord.pool.recv_any())
+            } else {
+                self.coord.pool.try_recv_any()
+            };
+            match received {
+                None => break,
+                Some(WorkReceived::Done(done)) => self.absorb(inner, done),
+                Some(WorkReceived::Died { worker, seqs }) => {
+                    // A dead group may mix this session's batches with a
+                    // dropped predecessor's (a worker drains the shared
+                    // queue into one group): poison only if any of OUR
+                    // batches died; a purely-stale group is discarded.
+                    let mine = seqs
+                        .iter()
+                        .filter(|&&s| s >> SEQ_EPOCH_SHIFT == self.epoch)
+                        .count() as u64;
+                    if mine == 0 {
+                        continue;
+                    }
+                    let e = anyhow!(
+                        "pool worker {worker} panicked while executing a \
+                         group holding {mine} of this session's batches \
+                         (first seq {}); the group is lost",
+                        seqs.first().copied().unwrap_or(0) & SEQ_MASK
+                    );
+                    self.poison(inner, &format!("{e:#}"));
+                    return Err(e);
+                }
+                Some(WorkReceived::Closed) => {
+                    let e = anyhow!("all workers exited");
+                    self.poison(inner, &format!("{e:#}"));
+                    return Err(e);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Fold one completed batch into the pending jobs. Errored batches
+    /// fail exactly the jobs whose lanes they carry; they are counted as
+    /// `errors`, not as executed batches.
+    fn absorb(&self, inner: &mut SessionInner, done: WorkDone) {
+        if done.seq >> SEQ_EPOCH_SHIFT != self.epoch {
+            // Straggler from an earlier (poisoned) session; its
+            // accounting died with that session.
+            return;
+        }
+        inner.in_flight -= 1;
+        let m = &self.coord.metrics;
+        match done.products {
+            Ok(products) => {
+                m.batches_executed.fetch_add(1, Ordering::Relaxed);
+                if done.group.is_some() {
+                    m.exec_passes.fetch_add(1, Ordering::Relaxed);
+                }
+                m.lanes_executed.fetch_add(
+                    done.batch.lanes.len() as u64,
+                    Ordering::Relaxed,
+                );
+                m.lanes_padded.fetch_add(
+                    (done.batch.a.len() - done.batch.lanes.len()) as u64,
+                    Ordering::Relaxed,
+                );
+                for (lane, tag) in done.batch.lanes.iter().enumerate() {
+                    self.settle_lane(
+                        inner,
+                        *tag,
+                        Some(products[lane]),
+                        None,
+                    );
+                }
+            }
+            Err(e) => {
+                m.errors.fetch_add(1, Ordering::Relaxed);
+                let msg = format!("{e:#}");
+                for tag in &done.batch.lanes {
+                    self.settle_lane(inner, *tag, None, Some(&msg));
+                }
+            }
+        }
+    }
+
+    /// Account one returned lane to its job; finish the job when its
+    /// last lane arrives.
+    fn settle_lane(
+        &self,
+        inner: &mut SessionInner,
+        tag: LaneTag,
+        product: Option<u32>,
+        err: Option<&str>,
+    ) {
+        let Some(entry) = inner.pending.get_mut(&tag.job) else {
+            // Unknown job: only reachable for lanes of a batch that
+            // poison() already failed — ignore rather than corrupt.
+            return;
+        };
+        if let Some(p) = product {
+            entry.products[tag.offset] = p;
+        }
+        if let Some(e) = err {
+            entry.error.get_or_insert_with(|| e.to_string());
+        }
+        entry.remaining -= 1;
+        if entry.remaining == 0 {
+            let fin = inner.pending.remove(&tag.job).expect("present");
+            let latency = fin.submitted.elapsed();
+            let m = &self.coord.metrics;
+            let result = match fin.error {
+                None => {
+                    m.jobs_completed.fetch_add(1, Ordering::Relaxed);
+                    m.job_latency.record(latency);
+                    Ok(fin.products)
+                }
+                Some(e) => {
+                    m.jobs_failed.fetch_add(1, Ordering::Relaxed);
+                    Err(anyhow!("{e}"))
+                }
+            };
+            inner.ready.push(JobOutcome {
+                id: tag.job,
+                result,
+                latency,
+            });
+        }
+    }
+
+    /// Pool-level failure: fail every pending job, stop waiting for
+    /// deliveries that may never come (epoch tagging shields successor
+    /// sessions from any that do), reject future submissions.
+    fn poison(&self, inner: &mut SessionInner, msg: &str) {
+        inner.fatal = Some(msg.to_string());
+        let m = &self.coord.metrics;
+        let ids: Vec<u64> = inner.pending.keys().copied().collect();
+        for id in ids {
+            let fin = inner.pending.remove(&id).expect("present");
+            m.jobs_failed.fetch_add(1, Ordering::Relaxed);
+            inner.ready.push(JobOutcome {
+                id,
+                result: Err(anyhow!("session failed: {msg}")),
+                latency: fin.submitted.elapsed(),
+            });
+        }
+        inner.in_flight = 0;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::backend::{ExactBackend, Sim64Backend, SimBackend};
+    use crate::coordinator::backend::{
+        ExactBackend, FailingBackend, Sim64Backend, SimBackend,
+    };
+    use crate::coordinator::Batch;
     use crate::multipliers::Arch;
     use crate::workload::broadcast_jobs;
+
+    /// Backend that panics on a marker broadcast value (worker-death
+    /// probe for the session poisoning / stale-notice paths).
+    struct PanickingBackend;
+
+    impl Backend for PanickingBackend {
+        fn execute(&mut self, batch: &Batch) -> Result<Vec<u32>> {
+            if batch.b == 99 {
+                panic!("poison value");
+            }
+            ExactBackend.execute(batch)
+        }
+
+        fn name(&self) -> String {
+            "panicker".into()
+        }
+    }
 
     #[test]
     fn end_to_end_exact_backends() {
@@ -208,6 +663,7 @@ mod tests {
         let snap = coord.metrics.snapshot();
         assert_eq!(snap.errors, 0);
         assert_eq!(snap.jobs_completed, 40);
+        assert_eq!(snap.jobs_failed, 0);
         assert!(snap.batches_executed > 0);
         coord.shutdown();
     }
@@ -257,6 +713,331 @@ mod tests {
             snap.exec_passes <= snap.batches_executed,
             "passes never exceed batches"
         );
+        coord.shutdown();
+    }
+
+    #[test]
+    fn session_streams_incrementally() {
+        let coord = Coordinator::new(
+            CoordinatorConfig {
+                width: 4,
+                queue_depth: 4,
+                max_open: None,
+            },
+            vec![Box::new(ExactBackend)],
+        );
+        let session = coord.session(SessionConfig::windowed(8, 16));
+        let jobs = broadcast_jobs(30, 1, 9, 3);
+        let mut outcomes = Vec::new();
+        for job in &jobs {
+            session.submit(job).unwrap();
+            outcomes.extend(session.try_results());
+        }
+        outcomes.extend(session.drain().unwrap());
+        assert_eq!(session.outstanding(), 0);
+        drop(session);
+        assert_eq!(outcomes.len(), jobs.len());
+        outcomes.sort_by_key(|o| o.id);
+        for (job, out) in jobs.iter().zip(&outcomes) {
+            assert_eq!(out.id, job.id);
+            assert_eq!(
+                out.result.as_ref().unwrap(),
+                &job.expected(),
+                "job {}",
+                job.id
+            );
+        }
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap.jobs_completed, 30);
+        assert_eq!(snap.jobs_failed, 0);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn empty_jobs_complete_immediately() {
+        // Regression: a zero-length job used to strand a remaining=0
+        // entry in pending, failing every run_jobs call it was part of
+        // with "jobs left unassembled".
+        let coord = Coordinator::new(
+            CoordinatorConfig {
+                width: 4,
+                queue_depth: 2,
+                max_open: None,
+            },
+            vec![Box::new(ExactBackend)],
+        );
+        let jobs = vec![
+            VectorJob {
+                id: 0,
+                a: vec![],
+                b: 9,
+            },
+            VectorJob {
+                id: 1,
+                a: vec![3, 5],
+                b: 10,
+            },
+            VectorJob {
+                id: 2,
+                a: vec![],
+                b: 0,
+            },
+        ];
+        let results = coord.run_jobs(&jobs).unwrap();
+        assert_eq!(results.len(), 3);
+        assert_eq!(results[0].products, Vec::<u32>::new());
+        assert_eq!(results[1].products, vec![30, 50]);
+        assert_eq!(results[2].products, Vec::<u32>::new());
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap.jobs_completed, 3);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn duplicate_job_ids_are_rejected() {
+        // Regression: duplicate ids used to silently clobber each other
+        // in the pending map, corrupting `remaining` accounting.
+        let coord = Coordinator::new(
+            CoordinatorConfig {
+                width: 4,
+                queue_depth: 2,
+                max_open: None,
+            },
+            vec![Box::new(ExactBackend)],
+        );
+        let dup = vec![
+            VectorJob {
+                id: 7,
+                a: vec![1, 2],
+                b: 3,
+            },
+            VectorJob {
+                id: 7,
+                a: vec![4],
+                b: 5,
+            },
+        ];
+        let err = coord.run_jobs(&dup).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("duplicate job id 7"),
+            "descriptive error, got: {err:#}"
+        );
+        // The stream itself is not poisoned: a fresh set still runs.
+        let ok = coord
+            .run_jobs(&[VectorJob {
+                id: 7,
+                a: vec![4],
+                b: 5,
+            }])
+            .unwrap();
+        assert_eq!(ok[0].products, vec![20]);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn failed_batches_fail_only_their_jobs() {
+        // Jobs with broadcast value 13 hit the poisoned backend batch;
+        // every other job must still complete (error containment).
+        let coord = Coordinator::new(
+            CoordinatorConfig {
+                width: 4,
+                queue_depth: 4,
+                max_open: None,
+            },
+            vec![Box::new(FailingBackend::new(vec![13]))],
+        );
+        let session = coord.session(SessionConfig::closed_set());
+        let jobs: Vec<VectorJob> = (0..10)
+            .map(|id| VectorJob {
+                id,
+                a: vec![1, 2, 3],
+                b: if id % 3 == 0 { 13 } else { 7 },
+            })
+            .collect();
+        for job in &jobs {
+            session.submit(job).unwrap();
+        }
+        let mut outcomes = session.drain().unwrap();
+        drop(session);
+        outcomes.sort_by_key(|o| o.id);
+        assert_eq!(outcomes.len(), 10);
+        for (job, out) in jobs.iter().zip(&outcomes) {
+            if job.b == 13 {
+                let e = out.result.as_ref().unwrap_err();
+                assert!(
+                    format!("{e:#}").contains("poisoned"),
+                    "job {} carries the batch error", job.id
+                );
+            } else {
+                assert_eq!(
+                    out.result.as_ref().unwrap(),
+                    &job.expected(),
+                    "unaffected job {} completes", job.id
+                );
+            }
+        }
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap.jobs_failed, 4, "ids 0, 3, 6, 9");
+        assert_eq!(snap.jobs_completed, 6);
+        assert!(snap.errors >= 1);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn errored_batches_are_not_counted_as_executed() {
+        // Regression: batches_executed/exec_passes used to count errored
+        // batches as executed work.
+        let coord = Coordinator::new(
+            CoordinatorConfig {
+                width: 4,
+                queue_depth: 2,
+                max_open: None,
+            },
+            vec![Box::new(FailingBackend::new(vec![5]))],
+        );
+        let jobs: Vec<VectorJob> = (0..4)
+            .map(|id| VectorJob {
+                id,
+                a: vec![1, 2, 3, 4],
+                b: 5,
+            })
+            .collect();
+        assert!(coord.run_jobs(&jobs).is_err());
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap.batches_executed, 0, "every batch errored");
+        assert_eq!(snap.exec_passes, 0);
+        assert_eq!(snap.errors, 4);
+        assert_eq!(snap.jobs_failed, 4);
+        assert_eq!(snap.lanes_executed, 0);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn per_job_latency_is_stamped_at_submit() {
+        // Regression: all jobs used to share one Instant taken before
+        // batching, making p50 == p99 == total wall time. A job
+        // submitted well before another must show the larger latency.
+        let coord = Coordinator::new(
+            CoordinatorConfig {
+                width: 4,
+                queue_depth: 2,
+                max_open: None,
+            },
+            vec![Box::new(ExactBackend)],
+        );
+        let session = coord.session(SessionConfig::closed_set());
+        session
+            .submit(&VectorJob {
+                id: 0,
+                a: vec![1],
+                b: 2,
+            })
+            .unwrap();
+        std::thread::sleep(Duration::from_millis(50));
+        session
+            .submit(&VectorJob {
+                id: 1,
+                a: vec![3],
+                b: 4,
+            })
+            .unwrap();
+        let mut outcomes = session.drain().unwrap();
+        drop(session);
+        outcomes.sort_by_key(|o| o.id);
+        let early = outcomes[0].latency;
+        let late = outcomes[1].latency;
+        assert!(
+            early >= late + Duration::from_millis(10),
+            "job 0 waited through the sleep: {early:?} vs {late:?}"
+        );
+        coord.shutdown();
+    }
+
+    #[test]
+    fn stale_death_notice_does_not_poison_next_session() {
+        // A worker dies executing session A's batch; A is dropped
+        // without draining, leaving the death notice in the done
+        // channel. Session B must discard it by epoch and serve
+        // normally on the surviving worker.
+        let coord = Coordinator::new(
+            CoordinatorConfig {
+                width: 2,
+                queue_depth: 4,
+                max_open: None,
+            },
+            vec![Box::new(PanickingBackend), Box::new(PanickingBackend)],
+        );
+        {
+            let session = coord.session(SessionConfig::closed_set());
+            // Full-width batch dispatches during submit; whichever
+            // worker takes it panics. Result may or may not have landed
+            // before the drop — both orders must leave B unharmed.
+            let _ = session.submit(&VectorJob {
+                id: 0,
+                a: vec![1, 2],
+                b: 99,
+            });
+        }
+        std::thread::sleep(Duration::from_millis(50));
+        let session = coord.session(SessionConfig::closed_set());
+        session
+            .submit(&VectorJob {
+                id: 0,
+                a: vec![3, 4],
+                b: 7,
+            })
+            .unwrap();
+        let outcomes = session.drain().unwrap();
+        assert_eq!(outcomes.len(), 1);
+        assert_eq!(outcomes[0].result.as_ref().unwrap(), &vec![21, 28]);
+        drop(session);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn concurrent_submitters_share_one_session() {
+        let coord = Coordinator::new(
+            CoordinatorConfig {
+                width: 8,
+                queue_depth: 4,
+                max_open: Some(4),
+            },
+            (0..2)
+                .map(|_| Box::new(ExactBackend) as Box<dyn Backend>)
+                .collect(),
+        );
+        let jobs = broadcast_jobs(60, 1, 20, 23);
+        let session = coord.session(SessionConfig::windowed(16, 64));
+        let clients = 4usize;
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..clients)
+                .map(|c| {
+                    let session = &session;
+                    let jobs = &jobs;
+                    s.spawn(move || {
+                        for job in jobs.iter().skip(c).step_by(clients) {
+                            session.submit(job).unwrap();
+                        }
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().expect("client thread");
+            }
+        });
+        let mut outcomes = session.drain().unwrap();
+        drop(session);
+        outcomes.sort_by_key(|o| o.id);
+        assert_eq!(outcomes.len(), jobs.len());
+        for (job, out) in jobs.iter().zip(&outcomes) {
+            assert_eq!(out.id, job.id);
+            assert_eq!(
+                out.result.as_ref().unwrap(),
+                &job.expected(),
+                "job {}",
+                job.id
+            );
+        }
         coord.shutdown();
     }
 }

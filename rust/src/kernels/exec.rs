@@ -20,7 +20,7 @@ use anyhow::{ensure, Result};
 
 use crate::coordinator::{
     Backend, Batch, Batcher, BatcherConfig, CoalesceStats, Coordinator,
-    JobResult,
+    JobResult, SessionConfig,
 };
 use crate::workload::VectorJob;
 
@@ -169,21 +169,31 @@ impl JobExecutor for FabricExec {
     }
 }
 
-/// Serving-path executor over a running coordinator.
+/// Serving-path executor over a running coordinator: either the
+/// closed-set `run_jobs` call or a windowed streaming session
+/// ([`CoordinatorExec::streaming`] — results are identical, only op
+/// counts and latency change with the flush windows).
 pub struct CoordinatorExec<'a> {
-    pub coord: &'a Coordinator,
+    coord: &'a Coordinator,
+    session: SessionConfig,
 }
 
 impl<'a> CoordinatorExec<'a> {
+    /// Closed-set serving (windowless session; maximal coalescing).
     pub fn new(coord: &'a Coordinator) -> Self {
-        Self { coord }
+        Self::streaming(coord, SessionConfig::closed_set())
+    }
+
+    /// Stream jobs through a session with the given flush windows.
+    pub fn streaming(coord: &'a Coordinator, session: SessionConfig) -> Self {
+        Self { coord, session }
     }
 }
 
 impl JobExecutor for CoordinatorExec<'_> {
     fn run(&mut self, jobs: &[VectorJob]) -> Result<Vec<JobResult>> {
         ensure_dense_ids(jobs)?;
-        let results = self.coord.run_jobs(jobs)?;
+        let results = self.coord.run_jobs_with(jobs, self.session)?;
         ensure!(
             results.len() == jobs.len(),
             "coordinator returned {} results for {} jobs",
@@ -194,7 +204,11 @@ impl JobExecutor for CoordinatorExec<'_> {
     }
 
     fn name(&self) -> String {
-        "coordinator".into()
+        if self.session == SessionConfig::closed_set() {
+            "coordinator".into()
+        } else {
+            "coordinator:stream".into()
+        }
     }
 }
 
@@ -250,6 +264,36 @@ mod tests {
         assert_eq!(stats.batches, 3);
         assert_eq!(fabric.batches_executed(), 3);
         assert_eq!(stats.ops_saved(), 1);
+    }
+
+    #[test]
+    fn streamed_and_closed_set_serving_agree() {
+        use crate::coordinator::{
+            Coordinator, CoordinatorConfig, ExactBackend,
+        };
+        let coord = Coordinator::new(
+            CoordinatorConfig {
+                width: 4,
+                queue_depth: 4,
+                max_open: Some(2),
+            },
+            vec![Box::new(ExactBackend)],
+        );
+        let jobs = jobs();
+        let want =
+            CoordinatorExec::new(&coord).run(&jobs).unwrap();
+        // Aggressive windows change flush timing, never results.
+        let got = CoordinatorExec::streaming(
+            &coord,
+            SessionConfig::windowed(2, 3),
+        )
+        .run(&jobs)
+        .unwrap();
+        for (w, g) in want.iter().zip(&got) {
+            assert_eq!(w.id, g.id);
+            assert_eq!(w.products, g.products);
+        }
+        coord.shutdown();
     }
 
     #[test]

@@ -32,8 +32,8 @@ use anyhow::{anyhow, Result};
 use nibblemul::bench::Bencher;
 use nibblemul::cli::Args;
 use nibblemul::coordinator::{
-    Backend, BatcherConfig, Coordinator, CoordinatorConfig, Sim64Backend,
-    SimBackend,
+    Backend, BatcherConfig, Coordinator, CoordinatorConfig, JobOutcome,
+    SessionConfig, Sim64Backend, SimBackend,
 };
 use nibblemul::design::DesignStore;
 use nibblemul::fabric::{sweep_paper_set, sweep_paper_set_seq, VectorUnit};
@@ -99,9 +99,17 @@ COMMANDS
   fig3    [--out-dir artifacts]           Fig. 3 VCD waveforms + timeline
   fig4    [--widths 4,8,16] [--ops 32]    Fig. 4 area/power sweep
   serve   [--arch nibble] [--width 16] [--workers 4] [--jobs 512] [--batched]
-          [--max-open K]                  coordinator over simulated fabric
+          [--max-open K] [--stream] [--clients 4]
+          [--window-elems N] [--window-age T]
+                                          coordinator over simulated fabric
                                           (--batched: 64-lane packed workers;
-                                          --max-open: bounded coalescing buffer)
+                                          --max-open: bounded coalescing buffer;
+                                          --stream: open-ended streaming session
+                                          fed by --clients concurrent submitter
+                                          threads, flushing on a size window of
+                                          --window-elems elements and an age
+                                          window of --window-age ticks, with
+                                          per-job submit-time latency)
   mlp     [--backend pjrt|sim|exact] [--arch nibble] [--limit 64]
                                           INT8 inference end-to-end (sim
                                           backend runs batched whole-layer
@@ -259,10 +267,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let n_jobs = args.get_usize("jobs", 512)?;
     let max_open = parse_max_open(args)?;
     let batched = args.has("batched");
+    let stream = args.has("stream");
     println!(
         "coordinator: {workers} workers x {}:{arch} width {width}, \
-         {n_jobs} jobs",
-        if batched { "sim64" } else { "sim" }
+         {n_jobs} jobs{}",
+        if batched { "sim64" } else { "sim" },
+        if stream { " (streaming session)" } else { "" }
     );
     let backends = fabric_backends(arch, width, workers, batched)?;
     let coord = Coordinator::new(
@@ -273,6 +283,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         },
         backends,
     );
+    if stream {
+        let res = cmd_serve_stream(args, &coord, width, n_jobs);
+        coord.shutdown();
+        return res;
+    }
     let jobs = broadcast_jobs(n_jobs, 1, width * 3, 7);
     let sw = Stopwatch::start();
     let results = coord.run_jobs(&jobs)?;
@@ -296,6 +311,83 @@ fn cmd_serve(args: &Args) -> Result<()> {
         elements as f64 / elapsed
     );
     coord.shutdown();
+    Ok(())
+}
+
+/// `serve --stream`: one open-ended streaming session fed by several
+/// concurrent client threads (interleaved submission), windowed flushing,
+/// per-job submit-time latency, per-job error containment, graceful
+/// drain. Jobs include zero-length ones — the stream handles them.
+fn cmd_serve_stream(
+    args: &Args,
+    coord: &Coordinator,
+    width: usize,
+    n_jobs: usize,
+) -> Result<()> {
+    let clients = args.get_usize("clients", 4)?;
+    anyhow::ensure!(clients >= 1, "--clients must be >= 1");
+    let window_elems = args.get_usize("window-elems", width * 4)?;
+    let window_age = args.get_u64("window-age", (width * 16) as u64)?;
+    anyhow::ensure!(window_elems >= 1, "--window-elems must be >= 1");
+    anyhow::ensure!(window_age >= 1, "--window-age must be >= 1");
+    println!(
+        "session: {clients} clients, size window {window_elems} elems, \
+         age window {window_age} ticks"
+    );
+    let jobs = broadcast_jobs(n_jobs, 0, width * 3, 7);
+    let session = coord
+        .session(SessionConfig::windowed(window_elems, window_age));
+    let sw = Stopwatch::start();
+    let mut outcomes: Vec<JobOutcome> = Vec::with_capacity(n_jobs);
+    std::thread::scope(|s| -> Result<()> {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let session = &session;
+                let jobs = &jobs;
+                s.spawn(move || -> Result<()> {
+                    // Interleaved submission: client c takes every
+                    // clients-th job, so broadcast values from different
+                    // clients mix in the coalescing buffer.
+                    for job in jobs.iter().skip(c).step_by(clients) {
+                        session.submit(job)?;
+                    }
+                    Ok(())
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().expect("client thread")?;
+        }
+        Ok(())
+    })?;
+    outcomes.extend(session.drain()?);
+    let elapsed = sw.elapsed_secs();
+    drop(session);
+    outcomes.sort_by_key(|o| o.id);
+    anyhow::ensure!(outcomes.len() == jobs.len(), "lost outcomes");
+    let mut correct = 0usize;
+    let mut failed = 0usize;
+    for (job, out) in jobs.iter().zip(&outcomes) {
+        match &out.result {
+            Ok(products) if products == &job.expected() => correct += 1,
+            Ok(_) => {}
+            Err(_) => failed += 1,
+        }
+    }
+    let elements: usize = jobs.iter().map(|j| j.a.len()).sum();
+    println!("{}", coord.metrics.snapshot());
+    println!(
+        "occupancy {:.1}%, correct {}/{} ({} failed)",
+        coord.metrics.occupancy(width) * 100.0,
+        correct,
+        jobs.len(),
+        failed
+    );
+    println!(
+        "throughput: {:.0} jobs/s, {:.0} multiplies/s (wall)",
+        jobs.len() as f64 / elapsed,
+        elements as f64 / elapsed
+    );
     Ok(())
 }
 
@@ -773,6 +865,37 @@ fn cmd_bench_gemm(args: &Args) -> Result<()> {
         "scheduled vs naive: {speedup_ops:.2}x fewer fabric ops \
          (scheduled hits the provable minimum of {minimal})"
     );
+
+    // The streaming-session serving path must return bit-identical
+    // products on the same scheduled stream (windowed flushing may cost
+    // extra padded ops; it must never change results).
+    let coord = Coordinator::new(
+        CoordinatorConfig {
+            width,
+            queue_depth: workers * 4,
+            max_open: Some(max_open),
+        },
+        fabric_backends(arch, width, workers, true)?,
+    );
+    let c_stream = plan_ws.execute(
+        &a,
+        &b,
+        &mut CoordinatorExec::streaming(
+            &coord,
+            SessionConfig::windowed(width * 2, (width * 8) as u64),
+        ),
+    )?;
+    anyhow::ensure!(
+        c_stream.iter().zip(&want).all(|(&g, &w)| g == w as i64),
+        "session-streamed GEMM diverged from the i32 oracle"
+    );
+    let snap_stream = coord.metrics.snapshot();
+    println!(
+        "session-streamed: bit-identical results, {} fabric ops \
+         ({} window flushes)",
+        snap_stream.batches_executed, snap_stream.window_flushes
+    );
+    coord.shutdown();
 
     // (2) Wall throughput on the scheduled stream: scalar vs 64-lane
     // packed fabric, in-process (deterministic, single-threaded).

@@ -364,8 +364,10 @@ impl QuantMlp {
     /// Batched forward pass: each layer runs as ONE whole-batch GEMM
     /// lowered into a weight-stationary [`crate::workload::VectorJob`]
     /// stream on `exec` — the coordinator-servable path the MLP and CNN
-    /// scenarios share. Logits are bit-exact with [`QuantMlp::forward`]
-    /// under an exact multiply (integer sums are order-free).
+    /// scenarios share (including the streaming-session serving mode,
+    /// `kernels::CoordinatorExec::streaming`). Logits are bit-exact with
+    /// [`QuantMlp::forward`] under an exact multiply (integer sums are
+    /// order-free), for every executor and session window setting.
     pub fn forward_batched(
         &self,
         x: &[Vec<i32>],
@@ -493,6 +495,31 @@ mod tests {
             crate::coordinator::BatcherConfig::bounded(4, 1),
         );
         assert_eq!(mlp.forward_batched(&x, &mut fabric).unwrap(), want);
+    }
+
+    #[test]
+    fn forward_batched_streams_through_a_session() {
+        use crate::coordinator::{
+            Coordinator, CoordinatorConfig, ExactBackend, SessionConfig,
+        };
+        use crate::kernels::CoordinatorExec;
+        let mlp = tiny_mlp();
+        let x = vec![vec![100, 200], vec![0, 255], vec![42, 17]];
+        let want = mlp.forward(&x, |a, b| a as u32 * b as u32);
+        let coord = Coordinator::new(
+            CoordinatorConfig {
+                width: 4,
+                queue_depth: 4,
+                max_open: Some(2),
+            },
+            vec![Box::new(ExactBackend)],
+        );
+        let mut exec = CoordinatorExec::streaming(
+            &coord,
+            SessionConfig::windowed(8, 32),
+        );
+        assert_eq!(mlp.forward_batched(&x, &mut exec).unwrap(), want);
+        coord.shutdown();
     }
 
     #[test]

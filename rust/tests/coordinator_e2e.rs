@@ -97,10 +97,18 @@ fn empty_and_single_element_jobs() {
             a: vec![0],
             b: 0,
         },
+        // A genuinely empty job: completes immediately with no products
+        // (used to strand the whole call as "jobs left unassembled").
+        VectorJob {
+            id: 2,
+            a: vec![],
+            b: 123,
+        },
     ];
     let results = coord.run_jobs(&jobs).unwrap();
     assert_eq!(results[0].products, vec![65025]);
     assert_eq!(results[1].products, vec![0]);
+    assert_eq!(results[2].products, Vec::<u32>::new());
     coord.shutdown();
 }
 

@@ -1,0 +1,402 @@
+//! Streaming-session integration suite: coordinator edge cases (empty,
+//! length-1, duplicate-id jobs), per-job error containment under a
+//! fault-injecting backend, per-job latency stamping, and the property
+//! that session-streamed results are bit-identical to the closed-set
+//! `run_jobs` call across fabric widths × coalescing-buffer bounds.
+
+use std::time::Duration;
+
+use nibblemul::coordinator::{
+    Backend, Batch, Coordinator, CoordinatorConfig, ExactBackend,
+    FailingBackend, SessionConfig, SimBackend,
+};
+use nibblemul::multipliers::Arch;
+use nibblemul::util::Xoshiro256;
+use nibblemul::workload::{broadcast_jobs, VectorJob};
+
+fn exact_coord(
+    width: usize,
+    workers: usize,
+    max_open: Option<usize>,
+) -> Coordinator {
+    Coordinator::new(
+        CoordinatorConfig {
+            width,
+            queue_depth: workers * 4,
+            max_open,
+        },
+        (0..workers)
+            .map(|_| Box::new(ExactBackend) as Box<dyn Backend>)
+            .collect(),
+    )
+}
+
+#[test]
+fn empty_jobs_anywhere_in_the_stream() {
+    // Regression: an empty job used to insert a remaining=0 pending
+    // entry no lane could ever complete, so every run_jobs call carrying
+    // one failed with "jobs left unassembled".
+    let coord = exact_coord(4, 2, None);
+    let mut jobs = broadcast_jobs(12, 1, 10, 3);
+    for id in [0usize, 5, 11] {
+        jobs[id].a.clear();
+    }
+    let results = coord.run_jobs(&jobs).unwrap();
+    assert_eq!(results.len(), jobs.len());
+    for (job, res) in jobs.iter().zip(&results) {
+        assert_eq!(res.id, job.id);
+        assert_eq!(res.products, job.expected(), "job {}", job.id);
+    }
+    assert_eq!(coord.metrics.snapshot().jobs_completed, 12);
+    coord.shutdown();
+}
+
+#[test]
+fn length_one_jobs_round_trip() {
+    let coord = exact_coord(8, 1, Some(1));
+    let jobs: Vec<VectorJob> = (0..20)
+        .map(|id| VectorJob {
+            id,
+            a: vec![(id * 11 % 256) as u16],
+            b: (id * 7 % 256) as u16,
+        })
+        .collect();
+    let results = coord.run_jobs(&jobs).unwrap();
+    for (job, res) in jobs.iter().zip(&results) {
+        assert_eq!(res.products, job.expected(), "job {}", job.id);
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn duplicate_ids_rejected_even_after_completion() {
+    // Regression: `pending.insert(job.id, ..)` used to silently clobber
+    // an existing entry, corrupting `remaining` accounting. The session
+    // must also reject an id whose first job already completed — the
+    // closed-set wrapper would otherwise return two results per id.
+    let coord = exact_coord(4, 1, None);
+    let session = coord.session(SessionConfig::windowed(2, 4));
+    let job = VectorJob {
+        id: 3,
+        a: vec![1, 2, 3, 4],
+        b: 5,
+    };
+    session.submit(&job).unwrap();
+    let _ = session.drain().unwrap(); // id 3 completed and taken
+    let err = session.submit(&job).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("duplicate job id 3"),
+        "descriptive duplicate error, got {err:#}"
+    );
+    // The session survives the rejection.
+    session
+        .submit(&VectorJob {
+            id: 4,
+            a: vec![9],
+            b: 9,
+        })
+        .unwrap();
+    let outcomes = session.drain().unwrap();
+    assert_eq!(outcomes.len(), 1);
+    assert_eq!(outcomes[0].result.as_ref().unwrap(), &vec![81]);
+    drop(session);
+    coord.shutdown();
+}
+
+#[test]
+fn error_containment_under_failing_backend() {
+    // Width 2, no coalescing across values: jobs with the poisoned
+    // broadcast value fail; every other job completes exactly.
+    let coord = Coordinator::new(
+        CoordinatorConfig {
+            width: 2,
+            queue_depth: 4,
+            max_open: None,
+        },
+        vec![
+            Box::new(FailingBackend::new(vec![40, 41])),
+            Box::new(FailingBackend::new(vec![40, 41])),
+        ],
+    );
+    let session = coord.session(SessionConfig::closed_set());
+    let jobs: Vec<VectorJob> = (0..30)
+        .map(|id| VectorJob {
+            id,
+            a: (0..(1 + id as usize % 5)).map(|i| i as u16).collect(),
+            b: 38 + (id % 5) as u16, // values 38..=42
+        })
+        .collect();
+    for job in &jobs {
+        session.submit(job).unwrap();
+    }
+    let mut outcomes = session.drain().unwrap();
+    drop(session);
+    outcomes.sort_by_key(|o| o.id);
+    assert_eq!(outcomes.len(), jobs.len());
+    let mut failed = 0;
+    for (job, out) in jobs.iter().zip(&outcomes) {
+        assert_eq!(out.id, job.id);
+        if job.b == 40 || job.b == 41 {
+            assert!(out.result.is_err(), "poisoned job {} fails", job.id);
+            failed += 1;
+        } else {
+            assert_eq!(
+                out.result.as_ref().unwrap(),
+                &job.expected(),
+                "unaffected job {} completes under containment",
+                job.id
+            );
+        }
+    }
+    let snap = coord.metrics.snapshot();
+    assert_eq!(snap.jobs_failed, failed);
+    assert_eq!(snap.jobs_completed, jobs.len() as u64 - failed);
+    assert!(snap.errors > 0, "failed batches counted as errors");
+    assert!(
+        snap.batches_executed > 0,
+        "successful batches still counted"
+    );
+    coord.shutdown();
+}
+
+/// Fault-injecting backend that advertises a group capacity, so the
+/// worker pool hands it whole groups per pass — the error-containment
+/// contract must hold per BATCH even when a grouped pass fails as a
+/// unit (the pool retries the group one batch at a time).
+struct GroupedFailing {
+    inner: FailingBackend,
+    cap: usize,
+}
+
+impl Backend for GroupedFailing {
+    fn execute(&mut self, batch: &Batch) -> anyhow::Result<Vec<u32>> {
+        self.inner.execute(batch)
+    }
+
+    fn preferred_group(&self) -> usize {
+        self.cap
+    }
+
+    fn name(&self) -> String {
+        format!("grouped-{}", self.inner.name())
+    }
+}
+
+#[test]
+fn error_containment_survives_grouped_dispatch() {
+    // One worker with group capacity 16: queued batches execute as one
+    // group, and the poisoned batch inside it fails alone.
+    let coord = Coordinator::new(
+        CoordinatorConfig {
+            width: 2,
+            queue_depth: 32,
+            max_open: None,
+        },
+        vec![Box::new(GroupedFailing {
+            inner: FailingBackend::new(vec![13]),
+            cap: 16,
+        })],
+    );
+    let session = coord.session(SessionConfig::closed_set());
+    let jobs: Vec<VectorJob> = (0..12)
+        .map(|id| VectorJob {
+            id,
+            a: vec![1, 2],
+            b: if id == 5 { 13 } else { (id % 4) as u16 },
+        })
+        .collect();
+    for job in &jobs {
+        session.submit(job).unwrap();
+    }
+    let mut outcomes = session.drain().unwrap();
+    drop(session);
+    outcomes.sort_by_key(|o| o.id);
+    for (job, out) in jobs.iter().zip(&outcomes) {
+        if job.b == 13 {
+            assert!(out.result.is_err(), "poisoned job {} fails", job.id);
+        } else {
+            assert_eq!(
+                out.result.as_ref().unwrap(),
+                &job.expected(),
+                "job {} must survive its group-mate's failure",
+                job.id
+            );
+        }
+    }
+    let snap = coord.metrics.snapshot();
+    assert_eq!(snap.jobs_failed, 1, "only job 5");
+    assert_eq!(snap.jobs_completed, 11);
+    coord.shutdown();
+}
+
+#[test]
+fn closed_set_run_jobs_aborts_with_per_job_detail() {
+    let coord = Coordinator::new(
+        CoordinatorConfig {
+            width: 4,
+            queue_depth: 2,
+            max_open: None,
+        },
+        vec![Box::new(FailingBackend::new(vec![9]))],
+    );
+    let jobs = vec![
+        VectorJob {
+            id: 0,
+            a: vec![1, 2],
+            b: 7,
+        },
+        VectorJob {
+            id: 1,
+            a: vec![3],
+            b: 9,
+        },
+    ];
+    let err = coord.run_jobs(&jobs).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("1 of 2 jobs failed"), "{msg}");
+    assert!(msg.contains("job 1"), "{msg}");
+    coord.shutdown();
+}
+
+#[test]
+fn latency_is_per_job_not_per_batch_epoch() {
+    let coord = exact_coord(4, 1, None);
+    let session = coord.session(SessionConfig::closed_set());
+    session
+        .submit(&VectorJob {
+            id: 0,
+            a: vec![2, 3, 4],
+            b: 5,
+        })
+        .unwrap();
+    std::thread::sleep(Duration::from_millis(40));
+    session
+        .submit(&VectorJob {
+            id: 1,
+            a: vec![6],
+            b: 7,
+        })
+        .unwrap();
+    let mut outcomes = session.drain().unwrap();
+    drop(session);
+    outcomes.sort_by_key(|o| o.id);
+    assert!(
+        outcomes[0].latency
+            >= outcomes[1].latency + Duration::from_millis(10),
+        "job 0 accrued the sleep: {:?} vs {:?}",
+        outcomes[0].latency,
+        outcomes[1].latency
+    );
+    coord.shutdown();
+}
+
+#[test]
+fn session_is_reusable_after_drain() {
+    // Open-ended service: submit → drain → keep submitting.
+    let coord = exact_coord(4, 1, Some(2));
+    let session = coord.session(SessionConfig::windowed(6, 12));
+    let mut all = Vec::new();
+    for round in 0..5u64 {
+        for k in 0..7u64 {
+            let id = round * 7 + k;
+            session
+                .submit(&VectorJob {
+                    id,
+                    a: vec![(id % 256) as u16; 1 + (k as usize % 3)],
+                    b: (k % 4) as u16,
+                })
+                .unwrap();
+        }
+        all.extend(session.drain().unwrap());
+        assert_eq!(session.outstanding(), 0, "round {round} drained");
+    }
+    drop(session);
+    assert_eq!(all.len(), 35);
+    for o in &all {
+        let id = o.id;
+        let want: Vec<u32> = vec![
+            (id % 256) as u32 * ((id % 7) % 4) as u32;
+            1 + ((id % 7) as usize % 3)
+        ];
+        assert_eq!(o.result.as_ref().unwrap(), &want, "job {id}");
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn streamed_results_match_run_jobs_property() {
+    // Property: for random job sets (including empty jobs), the
+    // session-streamed path returns bit-identical products to the
+    // closed-set run_jobs call, across widths × max_open × windows.
+    let mut rng = Xoshiro256::new(2026);
+    for &width in &[4usize, 8, 16] {
+        for &max_open in &[None, Some(1), Some(2), Some(8)] {
+            let mut jobs =
+                broadcast_jobs(25, 0, 3 * width, rng.next_u64());
+            // Sprinkle guaranteed empties.
+            let n_jobs = jobs.len();
+            jobs[n_jobs - 1].a.clear();
+            jobs[0].a.clear();
+
+            let closed = exact_coord(width, 2, max_open);
+            let want = closed.run_jobs(&jobs).unwrap();
+            closed.shutdown();
+
+            let streamed = exact_coord(width, 2, max_open);
+            let session = streamed.session(SessionConfig::windowed(
+                width + 1,
+                (4 * width) as u64,
+            ));
+            let mut outcomes = Vec::new();
+            for job in &jobs {
+                session.submit(job).unwrap();
+                outcomes.extend(session.try_results());
+            }
+            outcomes.extend(session.drain().unwrap());
+            drop(session);
+            streamed.shutdown();
+
+            outcomes.sort_by_key(|o| o.id);
+            assert_eq!(outcomes.len(), want.len());
+            for (w, o) in want.iter().zip(&outcomes) {
+                assert_eq!(o.id, w.id);
+                assert_eq!(
+                    o.result.as_ref().unwrap(),
+                    &w.products,
+                    "width {width} max_open {max_open:?} job {}",
+                    w.id
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn streamed_fabric_backend_matches_expected_products() {
+    // The session path over the real gate-level fabric backend.
+    let coord = Coordinator::new(
+        CoordinatorConfig {
+            width: 4,
+            queue_depth: 4,
+            max_open: Some(2),
+        },
+        vec![Box::new(SimBackend::new(Arch::Nibble, 4).unwrap())],
+    );
+    let session = coord.session(SessionConfig::windowed(8, 16));
+    let jobs = broadcast_jobs(10, 1, 9, 41);
+    for job in &jobs {
+        session.submit(job).unwrap();
+    }
+    let mut outcomes = session.drain().unwrap();
+    drop(session);
+    outcomes.sort_by_key(|o| o.id);
+    for (job, out) in jobs.iter().zip(&outcomes) {
+        assert_eq!(
+            out.result.as_ref().unwrap(),
+            &job.expected(),
+            "job {}",
+            job.id
+        );
+    }
+    coord.shutdown();
+}
