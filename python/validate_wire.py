@@ -1,0 +1,273 @@
+#!/usr/bin/env python3
+"""Differential validation of the shard wire protocol.
+
+`python/wire.py` is a line-by-line port of
+`rust/src/coordinator/wire.rs`. This script checks, without a Rust
+toolchain in the loop:
+
+  1. GOLDEN VECTORS — the exact byte strings pinned in the Rust test
+     `wire::tests::golden_vectors_match_python_port` must fall out of
+     the Python encoder too. Both languages asserting the same literal
+     bytes pins the format itself, not just each codec's internal
+     consistency.
+  2. ROUNDTRIP PROPERTY — decode(encode(x)) == x for thousands of
+     randomized requests/responses (mirrors the Rust property tests).
+  3. STRICTNESS — bad magic, wrong version, unknown kind, truncated,
+     trailing-byte, oversized-length and lying-vector-count frames are
+     all rejected with distinct errors, mirroring the Rust cases.
+  4. STREAM FRAMING — frames concatenated back-to-back re-split at the
+     header length prefix with nothing consumed across a boundary.
+
+Run: python3 python/validate_wire.py [n_cases]
+"""
+
+import random
+import sys
+
+import wire
+
+GOLDEN = [
+    (
+        "request",
+        {"kind": "hello", "arch": "nibble", "n": 8, "tenant": "t0"},
+        "4e4d01010b0000000208000000020000007430",
+    ),
+    (
+        "request",
+        {
+            "kind": "submit",
+            "id": 0x0102030405060708,
+            "a": [1, 255, 256],
+            "b": 77,
+        },
+        "4e4d01021400000008070605040302014d00030000000100ff000001",
+    ),
+    (
+        "request",
+        {"kind": "flush"},
+        "4e4d010300000000",
+    ),
+    (
+        "response",
+        {
+            "kind": "outcome",
+            "epoch": 3,
+            "id": 9,
+            "latency_us": 1500,
+            "result": ("ok", [6, 700000]),
+        },
+        "4e4d01822500000003000000000000000900000000000000"
+        "dc050000000000000102000000" + "0600000060ae0a00",
+    ),
+    (
+        "response",
+        {
+            "kind": "outcome",
+            "epoch": 3,
+            "id": 9,
+            "latency_us": 1500,
+            "result": ("err", "boom"),
+        },
+        "4e4d01822100000003000000000000000900000000000000"
+        "dc05000000000000" + "0004000000626f6f6d",
+    ),
+    (
+        "response",
+        {"kind": "error", "code": 2, "msg": "no design"},
+        "4e4d01870f0000000200090000006e6f2064657369676e",
+    ),
+]
+
+
+def check_golden():
+    for flavor, value, hexstr in GOLDEN:
+        want = bytes.fromhex(hexstr)
+        if flavor == "request":
+            got = wire.encode_request(value)
+            back = wire.decode_request(want)
+        else:
+            got = wire.encode_response(value)
+            back = wire.decode_response(want)
+        assert got == want, (
+            f"golden mismatch for {value}:\n"
+            f"  want {want.hex()}\n  got  {got.hex()}"
+        )
+        assert back == value, f"golden decode mismatch: {back} != {value}"
+    print(f"golden vectors ok ({len(GOLDEN)} frames)")
+
+
+def rand_string(rng, maxlen):
+    n = rng.randrange(maxlen + 1)
+    return "".join(chr(ord("a") + rng.randrange(26)) for _ in range(n))
+
+
+def rand_request(rng):
+    k = rng.randrange(7)
+    if k == 0:
+        return {
+            "kind": "hello",
+            "arch": rng.choice(wire.ARCH_ALL),
+            "n": rng.randrange(1, 65),
+            "tenant": rand_string(rng, 12),
+        }
+    if k == 1:
+        return {
+            "kind": "submit",
+            "id": rng.getrandbits(64),
+            "a": [rng.randrange(256) for _ in range(rng.randrange(65))],
+            "b": rng.randrange(256),
+        }
+    if k == 2:
+        return {"kind": "flush"}
+    if k == 3:
+        return {"kind": "drain"}
+    if k == 4:
+        return {"kind": "ping", "nonce": rng.getrandbits(64)}
+    if k == 5:
+        return {"kind": "get_metrics"}
+    return {"kind": "bye"}
+
+
+def rand_response(rng):
+    k = rng.randrange(7)
+    if k == 0:
+        return {
+            "kind": "hello_ack",
+            "epoch": rng.getrandbits(64),
+            "width": rng.randrange(1, 65),
+        }
+    if k == 1:
+        if rng.random() < 0.5:
+            result = (
+                "ok",
+                [
+                    rng.getrandbits(32)
+                    for _ in range(rng.randrange(65))
+                ],
+            )
+        else:
+            result = ("err", rand_string(rng, 40))
+        return {
+            "kind": "outcome",
+            "epoch": rng.getrandbits(64),
+            "id": rng.getrandbits(64),
+            "latency_us": rng.getrandbits(30),
+            "result": result,
+        }
+    if k == 2:
+        return {
+            "kind": "drained",
+            "epoch": rng.getrandbits(64),
+            "n": rng.getrandbits(20),
+        }
+    if k == 3:
+        return {
+            "kind": "pong",
+            "epoch": rng.getrandbits(64),
+            "nonce": rng.getrandbits(64),
+        }
+    if k == 4:
+        return {
+            "kind": "metrics",
+            "epoch": rng.getrandbits(64),
+            "text": rand_string(rng, 120),
+        }
+    if k == 5:
+        return {
+            "kind": "rejected",
+            "id": rng.getrandbits(64),
+            "reason": rand_string(rng, 40),
+        }
+    return {
+        "kind": "error",
+        "code": rng.getrandbits(16),
+        "msg": rand_string(rng, 40),
+    }
+
+
+def check_roundtrip(n_cases):
+    rng = random.Random(0x5EED0001)
+    for _ in range(n_cases):
+        req = rand_request(rng)
+        assert wire.decode_request(wire.encode_request(req)) == req
+        resp = rand_response(rng)
+        assert wire.decode_response(wire.encode_response(resp)) == resp
+    print(f"roundtrip property ok ({n_cases} request+response pairs)")
+
+
+def expect_error(fn, data, needle):
+    try:
+        fn(data)
+    except wire.WireError as e:
+        assert needle in str(e), f"wanted '{needle}' in '{e}'"
+        return
+    raise AssertionError(f"frame accepted but should contain '{needle}'")
+
+
+def check_strictness():
+    good = wire.encode_request({"kind": "ping", "nonce": 7})
+
+    bad = bytearray(good)
+    bad[0] ^= 0xFF
+    expect_error(wire.decode_request, bytes(bad), "magic")
+
+    bad = bytearray(good)
+    bad[2] = 99
+    expect_error(wire.decode_request, bytes(bad), "version")
+
+    bad = bytearray(good)
+    bad[3] = 0x7F
+    expect_error(wire.decode_request, bytes(bad), "unknown request")
+
+    expect_error(wire.decode_request, good[:-2], "disagrees")
+    expect_error(wire.decode_request, good + b"\x00\x00", "disagrees")
+
+    bad = bytearray(good)
+    bad[4:8] = (wire.MAX_FRAME + 1).to_bytes(4, "little")
+    expect_error(wire.decode_request, bytes(bad), "exceeds")
+
+    # A Submit whose vector count lies about the payload.
+    p = bytearray()
+    wire.put_u64(p, 1)
+    wire.put_u16(p, 2)
+    wire.put_u32(p, 1000)
+    lying = wire.frame(wire.K_SUBMIT, p)
+    expect_error(wire.decode_request, lying, "exceeds payload")
+
+    # Responses do not parse as requests and vice versa.
+    pong = wire.encode_response(
+        {"kind": "pong", "epoch": 1, "nonce": 2}
+    )
+    expect_error(wire.decode_request, pong, "unknown request")
+    expect_error(wire.decode_response, good, "unknown response")
+    print("strictness ok (8 rejection cases)")
+
+
+def check_stream_framing():
+    rng = random.Random(0x5EED0003)
+    reqs = [rand_request(rng) for _ in range(50)]
+    stream = b"".join(wire.encode_request(r) for r in reqs)
+    pos = 0
+    for want in reqs:
+        kind, length = wire.parse_header(
+            stream[pos : pos + wire.HEADER_LEN]
+        )
+        end = pos + wire.HEADER_LEN + length
+        got = wire.decode_request(stream[pos:end])
+        assert got == want
+        pos = end
+    assert pos == len(stream)
+    print("stream framing ok (50 concatenated frames)")
+
+
+def main():
+    n_cases = int(sys.argv[1]) if len(sys.argv) > 1 else 2000
+    check_golden()
+    check_roundtrip(n_cases)
+    check_strictness()
+    check_stream_framing()
+    print("wire validation PASSED")
+
+
+if __name__ == "__main__":
+    main()

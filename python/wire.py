@@ -1,0 +1,374 @@
+#!/usr/bin/env python3
+"""Line-by-line Python port of `rust/src/coordinator/wire.rs`.
+
+Length-prefixed binary wire protocol for the sharded serving tier.
+Every frame is an 8-byte header followed by a payload:
+
+    magic   u16 LE  0x4D4E ("NM")
+    version u8      WIRE_VERSION
+    kind    u8      request 0x01..=0x07 | response 0x81..=0x87
+    len     u32 LE  payload byte length (<= MAX_FRAME)
+    payload [len bytes]
+
+All integers little-endian; strings are u32 byte length + UTF-8 bytes;
+vectors are u32 element count + packed LE elements. Decoding is strict:
+bad magic, unknown version/kind, oversized frames, truncated payloads
+and trailing payload bytes are all distinct errors.
+
+This module is the cross-language half of the codec's differential
+validation (`python/validate_wire.py`); keep it in lockstep with the
+Rust source.
+"""
+
+import struct
+
+WIRE_MAGIC = 0x4D4E
+WIRE_VERSION = 1
+MAX_FRAME = 1 << 24
+HEADER_LEN = 8
+
+# Request frame kinds.
+K_HELLO = 0x01
+K_SUBMIT = 0x02
+K_FLUSH = 0x03
+K_DRAIN = 0x04
+K_PING = 0x05
+K_GET_METRICS = 0x06
+K_BYE = 0x07
+# Response frame kinds (high bit set).
+K_HELLO_ACK = 0x81
+K_OUTCOME = 0x82
+K_DRAINED = 0x83
+K_PONG = 0x84
+K_METRICS = 0x85
+K_REJECTED = 0x86
+K_ERROR = 0x87
+
+# Mirror of `Arch::ALL` order in rust/src/multipliers/mod.rs — the wire
+# encodes an arch as its index in this list.
+ARCH_ALL = [
+    "shift-add",
+    "booth-r2",
+    "nibble",
+    "nibble-unrolled",
+    "nibble-csd",
+    "wallace",
+    "array",
+    "lut-array",
+]
+
+# Error codes carried by Error frames.
+BAD_HANDSHAKE = 1
+UNKNOWN_DESIGN = 2
+INTERNAL = 3
+PROTOCOL = 4
+
+
+class WireError(ValueError):
+    """Decode failure (mirrors the Rust `anyhow` error strings)."""
+
+
+# ---------------------------------------------------------------- encode
+
+
+def put_u16(buf, v):
+    buf += struct.pack("<H", v)
+
+
+def put_u32(buf, v):
+    buf += struct.pack("<I", v)
+
+
+def put_u64(buf, v):
+    buf += struct.pack("<Q", v)
+
+
+def put_str(buf, s):
+    raw = s.encode("utf-8")
+    put_u32(buf, len(raw))
+    buf += raw
+
+
+def put_vec_u16(buf, v):
+    put_u32(buf, len(v))
+    for x in v:
+        put_u16(buf, x)
+
+
+def put_vec_u32(buf, v):
+    put_u32(buf, len(v))
+    for x in v:
+        put_u32(buf, x)
+
+
+def frame(kind, payload):
+    assert len(payload) <= MAX_FRAME
+    out = bytearray()
+    put_u16(out, WIRE_MAGIC)
+    out.append(WIRE_VERSION)
+    out.append(kind)
+    put_u32(out, len(payload))
+    out += payload
+    return bytes(out)
+
+
+# ---------------------------------------------------------------- decode
+
+
+class Rd:
+    """Strict payload reader: every primitive checks remaining bytes,
+    and the caller checks nothing is left over."""
+
+    def __init__(self, buf):
+        self.buf = buf
+        self.pos = 0
+
+    def remaining(self):
+        return len(self.buf) - self.pos
+
+    def take(self, n):
+        if self.remaining() < n:
+            raise WireError(
+                f"truncated payload: wanted {n} more bytes, "
+                f"have {self.remaining()}"
+            )
+        s = self.buf[self.pos : self.pos + n]
+        self.pos += n
+        return s
+
+    def u8(self):
+        return self.take(1)[0]
+
+    def u16(self):
+        return struct.unpack("<H", self.take(2))[0]
+
+    def u32(self):
+        return struct.unpack("<I", self.take(4))[0]
+
+    def u64(self):
+        return struct.unpack("<Q", self.take(8))[0]
+
+    def str(self):
+        n = self.u32()
+        raw = self.take(n)
+        try:
+            return raw.decode("utf-8")
+        except UnicodeDecodeError:
+            raise WireError("string field is not valid UTF-8")
+
+    def vec_u16(self):
+        count = self.u32()
+        if count > self.remaining() // 2:
+            raise WireError(f"vector count {count} exceeds payload")
+        return [self.u16() for _ in range(count)]
+
+    def vec_u32(self):
+        count = self.u32()
+        if count > self.remaining() // 4:
+            raise WireError(f"vector count {count} exceeds payload")
+        return [self.u32() for _ in range(count)]
+
+    def finish(self):
+        if self.remaining() != 0:
+            raise WireError(
+                f"{self.remaining()} trailing bytes after payload"
+            )
+
+
+def parse_header(header):
+    magic = struct.unpack("<H", header[0:2])[0]
+    if magic != WIRE_MAGIC:
+        raise WireError(
+            f"bad frame magic {magic:#06x} (expected {WIRE_MAGIC:#06x})"
+        )
+    version = header[2]
+    if version != WIRE_VERSION:
+        raise WireError(
+            f"unsupported wire version {version} (this build speaks "
+            f"{WIRE_VERSION})"
+        )
+    kind = header[3]
+    length = struct.unpack("<I", header[4:8])[0]
+    if length > MAX_FRAME:
+        raise WireError(
+            f"frame payload of {length} bytes exceeds the "
+            f"{MAX_FRAME}-byte bound"
+        )
+    return kind, length
+
+
+def split_frame(data):
+    if len(data) < HEADER_LEN:
+        raise WireError(
+            f"frame shorter than the {HEADER_LEN}-byte header"
+        )
+    kind, length = parse_header(data[:HEADER_LEN])
+    if len(data) != HEADER_LEN + length:
+        raise WireError(
+            f"frame length {len(data)} disagrees with header "
+            f"({HEADER_LEN + length} expected)"
+        )
+    return kind, data[HEADER_LEN:]
+
+
+def arch_index(arch):
+    return ARCH_ALL.index(arch)
+
+
+def arch_from_index(idx):
+    if idx >= len(ARCH_ALL):
+        raise WireError(f"unknown arch index {idx}")
+    return ARCH_ALL[idx]
+
+
+# Requests are dicts {"kind": <name>, ...fields}; responses likewise.
+# An Outcome's result is ("ok", [u32...]) or ("err", "message").
+
+
+def encode_request(req):
+    p = bytearray()
+    k = req["kind"]
+    if k == "hello":
+        p.append(arch_index(req["arch"]))
+        put_u32(p, req["n"])
+        put_str(p, req["tenant"])
+        kind = K_HELLO
+    elif k == "submit":
+        put_u64(p, req["id"])
+        put_u16(p, req["b"])
+        put_vec_u16(p, req["a"])
+        kind = K_SUBMIT
+    elif k == "flush":
+        kind = K_FLUSH
+    elif k == "drain":
+        kind = K_DRAIN
+    elif k == "ping":
+        put_u64(p, req["nonce"])
+        kind = K_PING
+    elif k == "get_metrics":
+        kind = K_GET_METRICS
+    elif k == "bye":
+        kind = K_BYE
+    else:
+        raise ValueError(f"unknown request kind {k}")
+    return frame(kind, p)
+
+
+def decode_request(data):
+    kind, payload = split_frame(data)
+    rd = Rd(payload)
+    if kind == K_HELLO:
+        req = {
+            "kind": "hello",
+            "arch": arch_from_index(rd.u8()),
+            "n": rd.u32(),
+            "tenant": rd.str(),
+        }
+    elif kind == K_SUBMIT:
+        req = {
+            "kind": "submit",
+            "id": rd.u64(),
+            "b": rd.u16(),
+            "a": rd.vec_u16(),
+        }
+    elif kind == K_FLUSH:
+        req = {"kind": "flush"}
+    elif kind == K_DRAIN:
+        req = {"kind": "drain"}
+    elif kind == K_PING:
+        req = {"kind": "ping", "nonce": rd.u64()}
+    elif kind == K_GET_METRICS:
+        req = {"kind": "get_metrics"}
+    elif kind == K_BYE:
+        req = {"kind": "bye"}
+    else:
+        raise WireError(f"unknown request frame kind {kind:#04x}")
+    rd.finish()
+    return req
+
+
+def encode_response(resp):
+    p = bytearray()
+    k = resp["kind"]
+    if k == "hello_ack":
+        put_u64(p, resp["epoch"])
+        put_u32(p, resp["width"])
+        kind = K_HELLO_ACK
+    elif k == "outcome":
+        put_u64(p, resp["epoch"])
+        put_u64(p, resp["id"])
+        put_u64(p, resp["latency_us"])
+        tag, val = resp["result"]
+        if tag == "ok":
+            p.append(1)
+            put_vec_u32(p, val)
+        else:
+            p.append(0)
+            put_str(p, val)
+        kind = K_OUTCOME
+    elif k == "drained":
+        put_u64(p, resp["epoch"])
+        put_u64(p, resp["n"])
+        kind = K_DRAINED
+    elif k == "pong":
+        put_u64(p, resp["epoch"])
+        put_u64(p, resp["nonce"])
+        kind = K_PONG
+    elif k == "metrics":
+        put_u64(p, resp["epoch"])
+        put_str(p, resp["text"])
+        kind = K_METRICS
+    elif k == "rejected":
+        put_u64(p, resp["id"])
+        put_str(p, resp["reason"])
+        kind = K_REJECTED
+    elif k == "error":
+        put_u16(p, resp["code"])
+        put_str(p, resp["msg"])
+        kind = K_ERROR
+    else:
+        raise ValueError(f"unknown response kind {k}")
+    return frame(kind, p)
+
+
+def decode_response(data):
+    kind, payload = split_frame(data)
+    rd = Rd(payload)
+    if kind == K_HELLO_ACK:
+        resp = {
+            "kind": "hello_ack",
+            "epoch": rd.u64(),
+            "width": rd.u32(),
+        }
+    elif kind == K_OUTCOME:
+        epoch = rd.u64()
+        oid = rd.u64()
+        latency_us = rd.u64()
+        tag = rd.u8()
+        if tag == 1:
+            result = ("ok", rd.vec_u32())
+        elif tag == 0:
+            result = ("err", rd.str())
+        else:
+            raise WireError(f"bad outcome tag {tag} (want 0 | 1)")
+        resp = {
+            "kind": "outcome",
+            "epoch": epoch,
+            "id": oid,
+            "latency_us": latency_us,
+            "result": result,
+        }
+    elif kind == K_DRAINED:
+        resp = {"kind": "drained", "epoch": rd.u64(), "n": rd.u64()}
+    elif kind == K_PONG:
+        resp = {"kind": "pong", "epoch": rd.u64(), "nonce": rd.u64()}
+    elif kind == K_METRICS:
+        resp = {"kind": "metrics", "epoch": rd.u64(), "text": rd.str()}
+    elif kind == K_REJECTED:
+        resp = {"kind": "rejected", "id": rd.u64(), "reason": rd.str()}
+    elif kind == K_ERROR:
+        resp = {"kind": "error", "code": rd.u16(), "msg": rd.str()}
+    else:
+        raise WireError(f"unknown response frame kind {kind:#04x}")
+    rd.finish()
+    return resp

@@ -72,22 +72,87 @@ impl Backend for ExactBackend {
     }
 }
 
-/// Fault-injection backend: exact products, except batches whose
-/// broadcast operand is in the poison set fail with an error. Drives the
-/// error-containment tests — a failed batch must fail only the jobs
-/// whose lanes it carries, never the rest of the stream.
+/// Configurable fault-injection backend: exact products, except where a
+/// fault rule fires. Drives the error-containment and chaos tests — a
+/// failed batch must fail only the jobs whose lanes it carries, never
+/// the rest of the stream.
+///
+/// Fault rules compose (any rule firing fails the batch):
+///
+/// * a *poison set* of broadcast operands that always fail
+///   ([`FailingBackend::new`]);
+/// * *every-Nth-batch* deterministic failures
+///   ([`FailingBackend::every_nth`]);
+/// * *one-shot-then-recover*: the first `k` batches fail, everything
+///   after succeeds ([`FailingBackend::fail_first`]) — models a backend
+///   that comes up sick and heals;
+/// * *injected latency* on every batch
+///   ([`FailingBackend::with_latency`]) — for deadline/timeout paths.
 pub struct FailingBackend {
     poison: Vec<u16>,
+    every_nth: Option<u64>,
+    fail_first: u64,
+    latency: Option<std::time::Duration>,
+    executed: u64,
 }
 
 impl FailingBackend {
+    /// Fail exactly the batches whose broadcast operand is in `poison`.
     pub fn new(poison: Vec<u16>) -> Self {
-        Self { poison }
+        Self {
+            poison,
+            every_nth: None,
+            fail_first: 0,
+            latency: None,
+            executed: 0,
+        }
+    }
+
+    /// Additionally fail every `n`-th batch seen (1-based: `n = 3`
+    /// fails batches 3, 6, 9, ...). `n = 0` disables the rule.
+    pub fn every_nth(mut self, n: u64) -> Self {
+        self.every_nth = (n > 0).then_some(n);
+        self
+    }
+
+    /// Fail the first `k` batches, then recover and serve the rest.
+    pub fn fail_first(mut self, k: u64) -> Self {
+        self.fail_first = k;
+        self
+    }
+
+    /// Sleep for `latency` before executing each batch.
+    pub fn with_latency(mut self, latency: std::time::Duration) -> Self {
+        self.latency = Some(latency);
+        self
+    }
+
+    /// Batches seen so far (failed ones included).
+    pub fn executed(&self) -> u64 {
+        self.executed
     }
 }
 
 impl Backend for FailingBackend {
     fn execute(&mut self, batch: &Batch) -> Result<Vec<u32>> {
+        if let Some(latency) = self.latency {
+            std::thread::sleep(latency);
+        }
+        self.executed += 1;
+        anyhow::ensure!(
+            self.executed > self.fail_first,
+            "injected fault: batch {} within warm-up failure window {}",
+            self.executed,
+            self.fail_first
+        );
+        if let Some(n) = self.every_nth {
+            anyhow::ensure!(
+                self.executed % n != 0,
+                "injected fault: batch {} hit every-{}th failure rule",
+                self.executed,
+                n
+            );
+        }
         anyhow::ensure!(
             !self.poison.contains(&batch.b),
             "injected fault: broadcast operand {} is poisoned",
@@ -197,7 +262,13 @@ impl Sim64Backend {
 impl Backend for Sim64Backend {
     fn execute(&mut self, batch: &Batch) -> Result<Vec<u32>> {
         let mut out = self.execute_group(&[batch])?;
-        Ok(out.pop().expect("one batch in, one result out"))
+        out.pop().ok_or_else(|| {
+            anyhow::anyhow!(
+                "{}: execute_group returned no products for a \
+                 single-batch pass",
+                self.name()
+            )
+        })
     }
 
     fn preferred_group(&self) -> usize {
@@ -338,6 +409,32 @@ mod tests {
     fn bad_width_is_an_error_not_a_crash() {
         assert!(SimBackend::new(Arch::Nibble, 0).is_err());
         assert!(Sim64Backend::new(Arch::Nibble, 100).is_err());
+    }
+
+    #[test]
+    fn fault_injector_rules_compose() {
+        // One-shot-then-recover: first 2 batches fail, then it heals.
+        let mut be = FailingBackend::new(vec![]).fail_first(2);
+        assert!(be.execute(&mk_batch(vec![1], 3)).is_err());
+        assert!(be.execute(&mk_batch(vec![1], 3)).is_err());
+        assert_eq!(be.execute(&mk_batch(vec![2], 3)).unwrap(), vec![6]);
+        assert_eq!(be.executed(), 3);
+
+        // Every-Nth: batches 2, 4, ... fail deterministically.
+        let mut be = FailingBackend::new(vec![]).every_nth(2);
+        assert!(be.execute(&mk_batch(vec![1], 3)).is_ok());
+        assert!(be.execute(&mk_batch(vec![1], 3)).is_err());
+        assert!(be.execute(&mk_batch(vec![1], 3)).is_ok());
+        assert!(be.execute(&mk_batch(vec![1], 3)).is_err());
+
+        // Poison set still works alongside the counters, and the
+        // latency rule delays without changing results.
+        let mut be = FailingBackend::new(vec![13])
+            .with_latency(std::time::Duration::from_millis(1));
+        let t0 = std::time::Instant::now();
+        assert!(be.execute(&mk_batch(vec![1], 13)).is_err());
+        assert_eq!(be.execute(&mk_batch(vec![4], 5)).unwrap(), vec![20]);
+        assert!(t0.elapsed() >= std::time::Duration::from_millis(2));
     }
 
     #[test]

@@ -136,6 +136,45 @@ impl MetricsSnapshot {
             self.coalesce_saved as f64 / self.coalesce_chunks as f64
         }
     }
+
+    /// Scrapeable one-metric-per-line text form (Prometheus exposition
+    /// shape): `nibblemul_<name>{labels} <value>`. `labels` is the raw
+    /// inner label list (e.g. `shard="s0"`); empty emits no braces.
+    pub fn render_text(&self, labels: &str) -> String {
+        let tag = if labels.is_empty() {
+            String::new()
+        } else {
+            format!("{{{labels}}}")
+        };
+        let ints = [
+            ("jobs_submitted", self.jobs_submitted),
+            ("jobs_completed", self.jobs_completed),
+            ("jobs_failed", self.jobs_failed),
+            ("batches_executed", self.batches_executed),
+            ("exec_passes", self.exec_passes),
+            ("lanes_executed", self.lanes_executed),
+            ("lanes_padded", self.lanes_padded),
+            ("coalesce_chunks", self.coalesce_chunks),
+            ("coalesce_saved", self.coalesce_saved),
+            ("coalesce_forced", self.coalesce_forced),
+            ("window_flushes", self.window_flushes),
+            ("errors", self.errors),
+            ("p50_latency_us", self.p50_latency_us),
+            ("p99_latency_us", self.p99_latency_us),
+        ];
+        let mut out = String::new();
+        for (name, v) in ints {
+            out.push_str(&format!("nibblemul_{name}{tag} {v}\n"));
+        }
+        for (name, v) in [
+            ("mean_latency_us", self.mean_latency_us),
+            ("batches_per_pass", self.batches_per_pass()),
+            ("coalesce_hit_rate", self.coalesce_hit_rate()),
+        ] {
+            out.push_str(&format!("nibblemul_{name}{tag} {v:.6}\n"));
+        }
+        out
+    }
 }
 
 impl Metrics {
@@ -227,6 +266,30 @@ mod tests {
         // p50 should be in the 100us region (bucket upper bound 128).
         assert_eq!(h.quantile_us(0.5), 128);
         assert!(h.quantile_us(0.99) >= 8192);
+    }
+
+    #[test]
+    fn render_text_is_one_metric_per_line() {
+        let m = Metrics::default();
+        m.jobs_submitted.store(12, Ordering::Relaxed);
+        m.coalesce_chunks.store(40, Ordering::Relaxed);
+        m.coalesce_batches.store(30, Ordering::Relaxed);
+        let text = m.snapshot().render_text("shard=\"s0\"");
+        assert!(text
+            .contains("nibblemul_jobs_submitted{shard=\"s0\"} 12\n"));
+        assert!(text.contains("nibblemul_coalesce_saved{shard=\"s0\"} 10\n"));
+        assert!(text
+            .contains("nibblemul_coalesce_hit_rate{shard=\"s0\"} 0.25"));
+        for line in text.lines() {
+            assert!(
+                line.starts_with("nibblemul_")
+                    && line.split_whitespace().count() == 2,
+                "scrapeable `name value` shape: {line:?}"
+            );
+        }
+        // No labels -> no braces.
+        let bare = m.snapshot().render_text("");
+        assert!(bare.contains("nibblemul_jobs_submitted 12\n"));
     }
 
     #[test]

@@ -24,6 +24,8 @@ mod batcher;
 mod metrics;
 mod pool;
 mod service;
+mod shard;
+mod wire;
 
 pub use backend::{
     Backend, ExactBackend, FailingBackend, PjrtBackend, Sim64Backend,
@@ -38,3 +40,24 @@ pub use service::{
     Coordinator, CoordinatorConfig, JobOutcome, JobResult, Session,
     SessionConfig,
 };
+pub use shard::{
+    exact_factory, loopback_addr, sim_factory, Admission, BackendFactory,
+    RoutedOutcome, Router, RouterConfig, RouterMetrics, ShardAddr,
+    ShardServer, ShardServerConfig, ShardSpec,
+};
+pub use wire::{
+    error_code, ShardRequest, ShardResponse, MAX_FRAME, WIRE_MAGIC,
+    WIRE_VERSION,
+};
+
+/// Take a mutex even if a panicking holder poisoned it. Every guarded
+/// structure in this module keeps its invariants at each lock release
+/// (counters, queues, assembly maps), and worker panics are already
+/// converted into per-job `Err` outcomes — propagating the poison would
+/// escalate one contained failure into cascading panics across
+/// unrelated workers and sessions.
+pub(crate) fn lock_unpoisoned<T>(
+    m: &std::sync::Mutex<T>,
+) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}

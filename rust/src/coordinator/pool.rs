@@ -26,6 +26,7 @@ use anyhow::Result;
 
 use super::backend::Backend;
 use super::batcher::Batch;
+use super::lock_unpoisoned;
 
 /// Per-thread worker state: drains sequence-tagged items from the shared
 /// queue and executes them in groups.
@@ -106,7 +107,12 @@ impl<W: PoolWorker> Pool<W> {
                 // 64-lane fabric backend) execute whole groups per pass.
                 let mut batch: Vec<(u64, W::Item)> = Vec::new();
                 {
-                    let guard = rx.lock().expect("queue lock");
+                    // Recover a poisoned queue lock: a sibling that
+                    // panicked between recv() and guard-drop leaves the
+                    // receiver perfectly usable, and its own death is
+                    // already delivered as a per-group notice —
+                    // cascading the panic would kill every worker.
+                    let guard = lock_unpoisoned(&rx);
                     match guard.recv() {
                         Ok(item) => batch.push(item),
                         Err(_) => break,
@@ -188,7 +194,7 @@ impl<W: PoolWorker> Pool<W> {
 
     /// Blocking receive of the next delivery, variant-preserving.
     pub fn recv_any(&self) -> Received<W::Item, W::Out> {
-        match self.rx_done.lock().expect("done channel").recv() {
+        match lock_unpoisoned(&self.rx_done).recv() {
             Ok(Delivery::Done(done)) => Received::Done(done),
             Ok(Delivery::Died { worker, seqs }) => {
                 Received::Died { worker, seqs }
@@ -200,7 +206,7 @@ impl<W: PoolWorker> Pool<W> {
     /// Non-blocking receive, variant-preserving: `None` when nothing has
     /// been delivered yet.
     pub fn try_recv_any(&self) -> Option<Received<W::Item, W::Out>> {
-        match self.rx_done.lock().expect("done channel").try_recv() {
+        match lock_unpoisoned(&self.rx_done).try_recv() {
             Ok(Delivery::Done(done)) => Some(Received::Done(done)),
             Ok(Delivery::Died { worker, seqs }) => {
                 Some(Received::Died { worker, seqs })

@@ -33,6 +33,7 @@ use crate::workload::VectorJob;
 
 use super::backend::Backend;
 use super::batcher::{Batcher, BatcherConfig, CoalesceStats, LaneTag};
+use super::lock_unpoisoned;
 use super::metrics::Metrics;
 use super::pool::{WorkDone, WorkItem, WorkReceived, WorkerPool};
 
@@ -186,7 +187,7 @@ impl Coordinator {
     /// `run_jobs` call) is live — the pool's result stream has exactly
     /// one owner at a time.
     pub fn session(&self, cfg: SessionConfig) -> Session<'_> {
-        let gate = self.session_gate.lock().expect("session gate");
+        let gate = lock_unpoisoned(&self.session_gate);
         let epoch = self.epoch.fetch_add(1, Ordering::Relaxed) + 1;
         Session {
             coord: self,
@@ -265,7 +266,7 @@ impl Session<'_> {
     /// products; duplicate ids are rejected without corrupting the
     /// stream; a poisoned session rejects everything.
     pub fn submit(&self, job: &VectorJob) -> Result<()> {
-        let mut inner = self.inner.lock().expect("session state");
+        let mut inner = lock_unpoisoned(&self.inner);
         if let Some(f) = &inner.fatal {
             return Err(anyhow!("session poisoned: {f}"));
         }
@@ -311,7 +312,7 @@ impl Session<'_> {
 
     /// Force-flush every open partial batch now and dispatch.
     pub fn flush(&self) -> Result<()> {
-        let mut inner = self.inner.lock().expect("session state");
+        let mut inner = lock_unpoisoned(&self.inner);
         if let Some(f) = &inner.fatal {
             return Err(anyhow!("session poisoned: {f}"));
         }
@@ -324,7 +325,7 @@ impl Session<'_> {
     /// Take every outcome completed so far (non-blocking; streaming
     /// consumers poll this between submissions).
     pub fn try_results(&self) -> Vec<JobOutcome> {
-        let mut inner = self.inner.lock().expect("session state");
+        let mut inner = lock_unpoisoned(&self.inner);
         if inner.fatal.is_none() {
             // Collection failures poison the session and convert pending
             // jobs to per-job Err outcomes; nothing extra to propagate.
@@ -338,7 +339,7 @@ impl Session<'_> {
     /// sort by id for deterministic reporting). The session remains
     /// usable afterwards — an open-ended stream can drain repeatedly.
     pub fn drain(&self) -> Result<Vec<JobOutcome>> {
-        let mut inner = self.inner.lock().expect("session state");
+        let mut inner = lock_unpoisoned(&self.inner);
         if inner.fatal.is_none() {
             inner.batcher.flush_open();
             let staged = self.stage(&mut inner);
@@ -364,7 +365,7 @@ impl Session<'_> {
 
     /// Jobs submitted and not yet completed or failed.
     pub fn outstanding(&self) -> usize {
-        let inner = self.inner.lock().expect("session state");
+        let inner = lock_unpoisoned(&self.inner);
         inner.pending.len()
     }
 
@@ -429,7 +430,7 @@ impl Session<'_> {
     /// whatever has completed so far.
     fn submit_staged(&self, staged: Vec<WorkItem>) -> Result<()> {
         let submit_err = self.push_to_pool(staged);
-        let mut inner = self.inner.lock().expect("session state");
+        let mut inner = lock_unpoisoned(&self.inner);
         if let Some(e) = submit_err {
             // Unsubmitted staged batches stay counted in in_flight only
             // until poison() zeroes it and fails their jobs.

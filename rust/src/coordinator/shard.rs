@@ -1,0 +1,1756 @@
+//! Sharded serving tier: wire-framed shard servers plus a fault-tolerant
+//! router front end.
+//!
+//! A [`ShardServer`] listens on a unix or TCP socket and wraps **one
+//! `Coordinator` session per connection** (its own pool, its own epoch),
+//! speaking the length-prefixed frames of [`super::wire`]. The
+//! [`Router`] shards job streams across N such servers keyed by
+//! `(Arch, n)` and extends PR 4's per-job error containment across the
+//! process boundary:
+//!
+//! * **health + deadlines** — pings, per-request deadlines, and reader
+//!   threads that report a dead socket the moment it breaks;
+//! * **bounded retry** — full-jitter exponential backoff, idempotent
+//!   resubmission (job ids reject duplicates shard-side, and reroutes
+//!   only ever follow a connection teardown, so a job can never execute
+//!   visibly twice);
+//! * **epoch containment over the wire** — every response frame carries
+//!   the server-side session epoch and every reader thread a router-side
+//!   generation; a restarted shard's stale in-flight frames are
+//!   structurally discarded instead of being mistaken for fresh results;
+//! * **admission control** — a global in-flight cap plus a per-tenant
+//!   fair share on top of the shard-local queue backpressure;
+//! * **graceful degradation** — when a shard dies mid-stream, exactly
+//!   the jobs routed to it reroute or fail; every other job, and every
+//!   other tenant, keeps streaming.
+
+use std::collections::{HashMap, HashSet};
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant, SystemTime};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::design::DesignKey;
+use crate::util::Xoshiro256;
+use crate::workload::VectorJob;
+
+use super::backend::{
+    Backend, ExactBackend, Sim64Backend, SimBackend,
+};
+use super::lock_unpoisoned;
+use super::service::{
+    Coordinator, CoordinatorConfig, JobOutcome, Session, SessionConfig,
+};
+use super::wire::{error_code, ShardRequest, ShardResponse};
+
+/// Address of one shard endpoint. Anything containing `/` (or ending in
+/// `.sock`) parses as a unix path; everything else as `host:port`.
+/// Unix sockets are the loopback/test transport; TCP the deployed one.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ShardAddr {
+    Unix(PathBuf),
+    Tcp(String),
+}
+
+impl ShardAddr {
+    pub fn parse(s: &str) -> Self {
+        if s.contains('/') || s.ends_with(".sock") {
+            ShardAddr::Unix(PathBuf::from(s))
+        } else {
+            ShardAddr::Tcp(s.to_string())
+        }
+    }
+}
+
+impl std::fmt::Display for ShardAddr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ShardAddr::Unix(p) => write!(f, "{}", p.display()),
+            ShardAddr::Tcp(s) => write!(f, "{s}"),
+        }
+    }
+}
+
+/// A fresh process-unique unix-socket address under the temp dir (the
+/// loopback transport used by tests, CI smoke jobs, and
+/// `serve --router --shards N`).
+pub fn loopback_addr(tag: &str) -> ShardAddr {
+    static NEXT: AtomicU64 = AtomicU64::new(0);
+    let n = NEXT.fetch_add(1, Ordering::Relaxed);
+    ShardAddr::Unix(std::env::temp_dir().join(format!(
+        "nibblemul-{tag}-{}-{n}.sock",
+        std::process::id()
+    )))
+}
+
+/// One bidirectional stream over either transport.
+enum Conn {
+    Unix(UnixStream),
+    Tcp(TcpStream),
+}
+
+impl Conn {
+    fn connect(addr: &ShardAddr) -> Result<Self> {
+        Ok(match addr {
+            ShardAddr::Unix(p) => Conn::Unix(
+                UnixStream::connect(p)
+                    .with_context(|| format!("connect {}", p.display()))?,
+            ),
+            ShardAddr::Tcp(s) => Conn::Tcp(
+                TcpStream::connect(s.as_str())
+                    .with_context(|| format!("connect {s}"))?,
+            ),
+        })
+    }
+
+    fn try_clone(&self) -> Result<Self> {
+        Ok(match self {
+            Conn::Unix(s) => Conn::Unix(s.try_clone()?),
+            Conn::Tcp(s) => Conn::Tcp(s.try_clone()?),
+        })
+    }
+
+    /// Close both directions; any thread blocked reading this socket
+    /// wakes with EOF/error.
+    fn shutdown_both(&self) {
+        let _ = match self {
+            Conn::Unix(s) => s.shutdown(Shutdown::Both),
+            Conn::Tcp(s) => s.shutdown(Shutdown::Both),
+        };
+    }
+
+    fn set_read_timeout(&self, d: Option<Duration>) -> Result<()> {
+        match self {
+            Conn::Unix(s) => s.set_read_timeout(d)?,
+            Conn::Tcp(s) => s.set_read_timeout(d)?,
+        }
+        Ok(())
+    }
+}
+
+impl Read for Conn {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Conn::Unix(s) => s.read(buf),
+            Conn::Tcp(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Conn {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Conn::Unix(s) => s.write(buf),
+            Conn::Tcp(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Conn::Unix(s) => s.flush(),
+            Conn::Tcp(s) => s.flush(),
+        }
+    }
+}
+
+enum Listener {
+    Unix(UnixListener),
+    Tcp(TcpListener),
+}
+
+impl Listener {
+    fn bind(addr: &ShardAddr) -> Result<Self> {
+        Ok(match addr {
+            ShardAddr::Unix(p) => {
+                // A stale socket file from a killed predecessor blocks
+                // bind(2); restarts must not need manual cleanup.
+                let _ = std::fs::remove_file(p);
+                let l = UnixListener::bind(p)
+                    .with_context(|| format!("bind {}", p.display()))?;
+                l.set_nonblocking(true)?;
+                Listener::Unix(l)
+            }
+            ShardAddr::Tcp(s) => {
+                let l = TcpListener::bind(s.as_str())
+                    .with_context(|| format!("bind {s}"))?;
+                l.set_nonblocking(true)?;
+                Listener::Tcp(l)
+            }
+        })
+    }
+
+    fn accept(&self) -> std::io::Result<Conn> {
+        // Accepted sockets must be blocking regardless of what they
+        // inherit from the nonblocking listener.
+        match self {
+            Listener::Unix(l) => l.accept().map(|(s, _)| {
+                let _ = s.set_nonblocking(false);
+                Conn::Unix(s)
+            }),
+            Listener::Tcp(l) => l.accept().map(|(s, _)| {
+                let _ = s.set_nonblocking(false);
+                Conn::Tcp(s)
+            }),
+        }
+    }
+}
+
+/// Builds the backend set a shard connection serves a key with. Called
+/// once per accepted connection (each connection owns a `Coordinator`).
+pub type BackendFactory =
+    Arc<dyn Fn(DesignKey) -> Result<Vec<Box<dyn Backend>>> + Send + Sync>;
+
+/// `workers` simulated-fabric backends per connection — scalar
+/// gate-level sims, or the 64-lane packed fabric when `batched`.
+pub fn sim_factory(workers: usize, batched: bool) -> BackendFactory {
+    Arc::new(move |key: DesignKey| {
+        (0..workers.max(1))
+            .map(|_| -> Result<Box<dyn Backend>> {
+                Ok(if batched {
+                    Box::new(Sim64Backend::new(key.arch, key.n)?)
+                } else {
+                    Box::new(SimBackend::new(key.arch, key.n)?)
+                })
+            })
+            .collect()
+    })
+}
+
+/// `workers` plain scalar-ALU reference backends (fast loopback tests).
+pub fn exact_factory(workers: usize) -> BackendFactory {
+    Arc::new(move |_key: DesignKey| {
+        Ok((0..workers.max(1))
+            .map(|_| Box::new(ExactBackend) as Box<dyn Backend>)
+            .collect())
+    })
+}
+
+/// Shard-server knobs; the coordinator/session shape each connection
+/// gets.
+#[derive(Clone, Debug)]
+pub struct ShardServerConfig {
+    /// Bounded work-queue depth per connection (backpressure point).
+    pub queue_depth: usize,
+    /// Coalescing-buffer bound per connection (`None` unbounded).
+    pub max_open: Option<usize>,
+    /// Session flush windows (closed-set by default: maximal
+    /// coalescing, flush on Drain).
+    pub window: SessionConfig,
+    /// Label stamped on scraped metrics (`shard="<label>"`).
+    pub label: String,
+    /// Optional allowlist of design keys this shard serves; `None`
+    /// serves any valid key.
+    pub keys: Option<Vec<DesignKey>>,
+}
+
+impl Default for ShardServerConfig {
+    fn default() -> Self {
+        Self {
+            queue_depth: 64,
+            max_open: None,
+            window: SessionConfig::closed_set(),
+            label: "shard".to_string(),
+            keys: None,
+        }
+    }
+}
+
+/// One shard-server process-equivalent: accept loop + per-connection
+/// handler threads, each wrapping its own `Coordinator` session.
+pub struct ShardServer {
+    addr: ShardAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+    /// Clones of live connections, retained so `kill` can sever them.
+    conns: Arc<Mutex<Vec<Conn>>>,
+    handlers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl ShardServer {
+    /// Bind `addr` and start accepting. Each accepted connection gets a
+    /// unique session epoch (nanosecond base + counter, so epochs also
+    /// differ across server restarts) and is served on its own thread.
+    pub fn spawn(
+        addr: ShardAddr,
+        factory: BackendFactory,
+        cfg: ShardServerConfig,
+    ) -> Result<Self> {
+        let listener = Listener::bind(&addr)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<Conn>>> = Arc::new(Mutex::new(Vec::new()));
+        let handlers: Arc<Mutex<Vec<JoinHandle<()>>>> =
+            Arc::new(Mutex::new(Vec::new()));
+        let epoch_base = SystemTime::now()
+            .duration_since(SystemTime::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(1);
+        let accept_thread = {
+            let stop = Arc::clone(&stop);
+            let conns = Arc::clone(&conns);
+            let handlers = Arc::clone(&handlers);
+            let cfg = Arc::new(cfg);
+            std::thread::spawn(move || {
+                let mut next_conn = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok(conn) => {
+                            next_conn += 1;
+                            let epoch =
+                                epoch_base.wrapping_add(next_conn);
+                            if let Ok(clone) = conn.try_clone() {
+                                lock_unpoisoned(&conns).push(clone);
+                            }
+                            let factory = Arc::clone(&factory);
+                            let cfg = Arc::clone(&cfg);
+                            let h = std::thread::spawn(move || {
+                                serve_conn(conn, &factory, &cfg, epoch)
+                            });
+                            lock_unpoisoned(&handlers).push(h);
+                        }
+                        Err(e)
+                            if e.kind()
+                                == std::io::ErrorKind::WouldBlock =>
+                        {
+                            std::thread::sleep(Duration::from_millis(2));
+                        }
+                        Err(_) => {
+                            std::thread::sleep(Duration::from_millis(10));
+                        }
+                    }
+                }
+            })
+        };
+        Ok(Self {
+            addr,
+            stop,
+            accept_thread: Some(accept_thread),
+            conns,
+            handlers,
+        })
+    }
+
+    pub fn addr(&self) -> &ShardAddr {
+        &self.addr
+    }
+
+    /// Hard-kill the shard: sever every live connection mid-whatever
+    /// (the chaos-test crash model), stop accepting, join threads,
+    /// remove the socket file. Idempotent via [`Drop`].
+    pub fn kill(mut self) {
+        self.halt();
+    }
+
+    fn halt(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        for c in lock_unpoisoned(&self.conns).drain(..) {
+            c.shutdown_both();
+        }
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+        let hs: Vec<_> = lock_unpoisoned(&self.handlers).drain(..).collect();
+        for h in hs {
+            let _ = h.join();
+        }
+        if let ShardAddr::Unix(p) = &self.addr {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}
+
+impl Drop for ShardServer {
+    fn drop(&mut self) {
+        self.halt();
+    }
+}
+
+/// Serve one accepted connection to completion. I/O errors mean the
+/// peer (or `kill`) severed the socket; the session drops and the
+/// connection's coordinator shuts down either way.
+fn serve_conn(
+    mut conn: Conn,
+    factory: &BackendFactory,
+    cfg: &ShardServerConfig,
+    epoch: u64,
+) {
+    let _ = serve_conn_inner(&mut conn, factory, cfg, epoch);
+}
+
+fn serve_conn_inner(
+    conn: &mut Conn,
+    factory: &BackendFactory,
+    cfg: &ShardServerConfig,
+    epoch: u64,
+) -> Result<()> {
+    let ShardRequest::Hello { arch, n, tenant: _ } =
+        ShardRequest::read_from(conn)?
+    else {
+        ShardResponse::Error {
+            code: error_code::BAD_HANDSHAKE,
+            msg: "expected Hello as the first frame".to_string(),
+        }
+        .write_to(conn)?;
+        return Ok(());
+    };
+    let key = DesignKey {
+        arch,
+        n: n as usize,
+    };
+    if let Some(keys) = &cfg.keys {
+        if !keys.contains(&key) {
+            ShardResponse::Error {
+                code: error_code::UNKNOWN_DESIGN,
+                msg: format!("this shard does not serve {key}"),
+            }
+            .write_to(conn)?;
+            return Ok(());
+        }
+    }
+    let backends = match factory(key) {
+        Ok(b) if !b.is_empty() => b,
+        Ok(_) => {
+            ShardResponse::Error {
+                code: error_code::INTERNAL,
+                msg: "backend factory produced no backends".to_string(),
+            }
+            .write_to(conn)?;
+            return Ok(());
+        }
+        Err(e) => {
+            ShardResponse::Error {
+                code: error_code::INTERNAL,
+                msg: format!("backend factory failed for {key}: {e:#}"),
+            }
+            .write_to(conn)?;
+            return Ok(());
+        }
+    };
+    let coord = Coordinator::new(
+        CoordinatorConfig {
+            width: key.n,
+            queue_depth: cfg.queue_depth,
+            max_open: cfg.max_open,
+        },
+        backends,
+    );
+    {
+        let session = coord.session(cfg.window);
+        ShardResponse::HelloAck {
+            epoch,
+            width: key.n as u32,
+        }
+        .write_to(conn)?;
+        loop {
+            let req = match ShardRequest::read_from(conn) {
+                Ok(r) => r,
+                Err(_) => break, // peer gone or killed
+            };
+            match req {
+                ShardRequest::Submit { job } => {
+                    // Duplicate ids / poisoned session reject per-job;
+                    // the stream itself stays up.
+                    if let Err(e) = session.submit(&job) {
+                        ShardResponse::Rejected {
+                            id: job.id,
+                            reason: format!("{e:#}"),
+                        }
+                        .write_to(conn)?;
+                    }
+                    pump_outcomes(&session, conn, epoch)?;
+                }
+                ShardRequest::Flush => {
+                    let _ = session.flush(); // poisoned: outcomes below
+                    pump_outcomes(&session, conn, epoch)?;
+                }
+                ShardRequest::Drain => match session.drain() {
+                    Ok(outcomes) => {
+                        let count = outcomes.len() as u64;
+                        for o in outcomes {
+                            write_outcome(conn, epoch, o)?;
+                        }
+                        ShardResponse::Drained { epoch, n: count }
+                            .write_to(conn)?;
+                    }
+                    Err(e) => {
+                        ShardResponse::Error {
+                            code: error_code::INTERNAL,
+                            msg: format!("drain failed: {e:#}"),
+                        }
+                        .write_to(conn)?;
+                        break;
+                    }
+                },
+                ShardRequest::Ping { nonce } => {
+                    ShardResponse::Pong { epoch, nonce }.write_to(conn)?;
+                }
+                ShardRequest::GetMetrics => {
+                    ShardResponse::Metrics {
+                        epoch,
+                        text: coord.metrics.snapshot().render_text(
+                            &format!("shard=\"{}\"", cfg.label),
+                        ),
+                    }
+                    .write_to(conn)?;
+                }
+                ShardRequest::Hello { .. } => {
+                    ShardResponse::Error {
+                        code: error_code::PROTOCOL,
+                        msg: "duplicate Hello on an open stream"
+                            .to_string(),
+                    }
+                    .write_to(conn)?;
+                    break;
+                }
+                ShardRequest::Bye => break,
+            }
+        }
+    }
+    coord.shutdown();
+    Ok(())
+}
+
+/// Stream every outcome completed so far back as `Outcome` frames.
+fn pump_outcomes(
+    session: &Session<'_>,
+    conn: &mut Conn,
+    epoch: u64,
+) -> Result<()> {
+    for o in session.try_results() {
+        write_outcome(conn, epoch, o)?;
+    }
+    Ok(())
+}
+
+fn write_outcome(
+    conn: &mut Conn,
+    epoch: u64,
+    o: JobOutcome,
+) -> Result<()> {
+    ShardResponse::Outcome {
+        epoch,
+        id: o.id,
+        latency_us: o.latency.as_micros().min(u64::MAX as u128) as u64,
+        result: o.result.map_err(|e| format!("{e:#}")),
+    }
+    .write_to(conn)
+}
+
+/// One shard endpoint the router should drive, and the design key it
+/// serves (the routing key).
+#[derive(Clone, Debug)]
+pub struct ShardSpec {
+    pub addr: ShardAddr,
+    pub key: DesignKey,
+}
+
+/// Router fault-tolerance knobs.
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    /// Per-attempt deadline: a shard silent this long on an in-flight
+    /// job is declared dead and its jobs reroute.
+    pub request_timeout: Duration,
+    /// Total attempts per job (first route + reroutes) before it fails.
+    pub max_attempts: u32,
+    /// Backoff floor for reconnecting a downed shard.
+    pub backoff_base: Duration,
+    /// Backoff ceiling.
+    pub backoff_max: Duration,
+    /// Global in-flight job cap (admission control above the per-shard
+    /// queue backpressure).
+    pub max_inflight: usize,
+    /// Per-tenant in-flight fair share; a tenant at its share is denied
+    /// admission while other tenants still get in.
+    pub tenant_share: usize,
+    /// Jitter seed (deterministic tests).
+    pub seed: u64,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        Self {
+            request_timeout: Duration::from_secs(5),
+            max_attempts: 3,
+            backoff_base: Duration::from_millis(25),
+            backoff_max: Duration::from_secs(2),
+            max_inflight: 256,
+            tenant_share: 128,
+            seed: 0x5EED_40_7E2,
+        }
+    }
+}
+
+/// Admission-control verdict for one submission attempt.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    Accepted,
+    /// Global in-flight cap reached — try again after outcomes settle.
+    Saturated,
+    /// This tenant is at its fair share; other tenants still admit.
+    TenantOverShare,
+}
+
+/// One routed job's final outcome.
+#[derive(Clone, Debug)]
+pub struct RoutedOutcome {
+    pub id: u64,
+    pub tenant: String,
+    /// Index of the shard that produced (or lost) the final attempt.
+    pub shard: usize,
+    /// Attempts consumed (1 = no reroute).
+    pub attempts: u32,
+    pub result: std::result::Result<Vec<u32>, String>,
+    /// Router-side submit-to-settle latency (spans reroutes).
+    pub latency: Duration,
+}
+
+/// Router-side counters, exported by [`Router::scrape`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RouterMetrics {
+    pub jobs_routed: u64,
+    pub jobs_rerouted: u64,
+    pub jobs_completed: u64,
+    pub jobs_failed: u64,
+    /// Frames discarded by generation/epoch staleness checks.
+    pub stale_frames: u64,
+    pub admission_denied: u64,
+    pub reconnects: u64,
+    pub shard_deaths: u64,
+}
+
+impl RouterMetrics {
+    /// Same scrapeable text shape as `MetricsSnapshot::render_text`.
+    pub fn render_text(&self) -> String {
+        let pairs = [
+            ("jobs_routed", self.jobs_routed),
+            ("jobs_rerouted", self.jobs_rerouted),
+            ("jobs_completed", self.jobs_completed),
+            ("jobs_failed", self.jobs_failed),
+            ("stale_frames", self.stale_frames),
+            ("admission_denied", self.admission_denied),
+            ("reconnects", self.reconnects),
+            ("shard_deaths", self.shard_deaths),
+        ];
+        let mut out = String::new();
+        for (name, v) in pairs {
+            out.push_str(&format!("nibblemul_router_{name} {v}\n"));
+        }
+        out
+    }
+}
+
+/// Frame-or-failure event a reader thread delivers, tagged with the
+/// connection generation it was read under.
+enum Event {
+    Frame {
+        shard: usize,
+        gen: u64,
+        resp: ShardResponse,
+    },
+    Down {
+        shard: usize,
+        gen: u64,
+        error: String,
+    },
+}
+
+enum SlotState {
+    Connected {
+        writer: Conn,
+        /// Server-side session epoch from the HelloAck; every accepted
+        /// Outcome must carry it.
+        epoch: u64,
+    },
+    Down,
+}
+
+/// Router-side state of one shard endpoint.
+struct Slot {
+    spec: ShardSpec,
+    state: SlotState,
+    /// Router-side connection generation: bumped on every (re)connect
+    /// and teardown, so frames read under an old connection are
+    /// structurally discardable.
+    gen: u64,
+    /// Consecutive connect/serve failures (drives backoff).
+    fails: u32,
+    retry_at: Option<Instant>,
+    pongs: Vec<u64>,
+    drained: Vec<u64>,
+    metrics_text: Option<String>,
+}
+
+/// One in-flight job's routing record.
+struct InFlight {
+    key: DesignKey,
+    job: VectorJob,
+    tenant: String,
+    shard: usize,
+    /// Generation of the connection the job was written under.
+    gen: u64,
+    attempts: u32,
+    /// Original router submit stamp (end-to-end latency).
+    submitted: Instant,
+    /// This attempt's write stamp (per-attempt deadline).
+    sent: Instant,
+}
+
+/// The sharding front end. Single-owner (`&mut self` API): submitters
+/// funnel through one router loop, which is also what makes reroute
+/// bookkeeping race-free.
+pub struct Router {
+    cfg: RouterConfig,
+    slots: Vec<Slot>,
+    inflight: HashMap<u64, InFlight>,
+    /// Ids already settled — duplicate submissions are rejected for the
+    /// router's lifetime, which is what makes replays detectable.
+    done_ids: HashSet<u64>,
+    tenant_load: HashMap<String, usize>,
+    outcomes: Vec<RoutedOutcome>,
+    rr: usize,
+    tx: Sender<Event>,
+    rx: Receiver<Event>,
+    rng: Xoshiro256,
+    pub metrics: RouterMetrics,
+}
+
+impl Router {
+    /// Connect to the given shards. Succeeds when at least one shard is
+    /// reachable; unreachable ones start life Down with a retry
+    /// schedule (graceful degradation from the first frame).
+    pub fn connect(
+        specs: Vec<ShardSpec>,
+        cfg: RouterConfig,
+    ) -> Result<Self> {
+        ensure!(!specs.is_empty(), "router needs at least one shard");
+        ensure!(cfg.max_attempts >= 1, "max_attempts must be >= 1");
+        let (tx, rx) = channel();
+        let seed = cfg.seed;
+        let mut router = Router {
+            cfg,
+            slots: specs
+                .into_iter()
+                .map(|spec| Slot {
+                    spec,
+                    state: SlotState::Down,
+                    gen: 0,
+                    fails: 0,
+                    retry_at: None,
+                    pongs: Vec::new(),
+                    drained: Vec::new(),
+                    metrics_text: None,
+                })
+                .collect(),
+            inflight: HashMap::new(),
+            done_ids: HashSet::new(),
+            tenant_load: HashMap::new(),
+            outcomes: Vec::new(),
+            rr: 0,
+            tx,
+            rx,
+            rng: Xoshiro256::new(seed),
+            metrics: RouterMetrics::default(),
+        };
+        let mut up = 0usize;
+        let mut last_err = None;
+        for i in 0..router.slots.len() {
+            match router.connect_slot(i) {
+                Ok(()) => up += 1,
+                Err(e) => {
+                    router.note_connect_failure(i);
+                    last_err = Some(e);
+                }
+            }
+        }
+        ensure!(
+            up > 0,
+            "no shard reachable: {}",
+            last_err
+                .map(|e| format!("{e:#}"))
+                .unwrap_or_else(|| "unknown".to_string())
+        );
+        Ok(router)
+    }
+
+    /// Dial + handshake one slot and start its reader thread.
+    fn connect_slot(&mut self, i: usize) -> Result<()> {
+        let spec = self.slots[i].spec.clone();
+        let conn = Conn::connect(&spec.addr)
+            .with_context(|| format!("shard {i} ({})", spec.addr))?;
+        conn.set_read_timeout(Some(self.cfg.request_timeout))?;
+        {
+            let mut c = conn.try_clone()?;
+            ShardRequest::Hello {
+                arch: spec.key.arch,
+                n: spec.key.n as u32,
+                tenant: "router".to_string(),
+            }
+            .write_to(&mut c)?;
+        }
+        let mut handshake = conn.try_clone()?;
+        let epoch = match ShardResponse::read_from(&mut handshake)? {
+            ShardResponse::HelloAck { epoch, width } => {
+                ensure!(
+                    width as usize == spec.key.n,
+                    "shard {i} serves width {width}, expected {}",
+                    spec.key.n
+                );
+                epoch
+            }
+            ShardResponse::Error { code, msg } => bail!(
+                "shard {i} rejected handshake (code {code}): {msg}"
+            ),
+            other => bail!(
+                "shard {i}: unexpected handshake reply {other:?}"
+            ),
+        };
+        // The reader thread must block indefinitely; timeouts are the
+        // router's job. Reset BEFORE cloning — clones share options.
+        conn.set_read_timeout(None)?;
+        let mut reader = conn.try_clone()?;
+        self.slots[i].gen += 1;
+        let gen = self.slots[i].gen;
+        let tx = self.tx.clone();
+        std::thread::spawn(move || loop {
+            match ShardResponse::read_from(&mut reader) {
+                Ok(resp) => {
+                    if tx.send(Event::Frame { shard: i, gen, resp }).is_err()
+                    {
+                        break;
+                    }
+                }
+                Err(e) => {
+                    let _ = tx.send(Event::Down {
+                        shard: i,
+                        gen,
+                        error: format!("{e:#}"),
+                    });
+                    break;
+                }
+            }
+        });
+        let slot = &mut self.slots[i];
+        slot.state = SlotState::Connected { writer: conn, epoch };
+        slot.fails = 0;
+        slot.retry_at = None;
+        self.metrics.reconnects += 1;
+        Ok(())
+    }
+
+    fn note_connect_failure(&mut self, i: usize) {
+        self.slots[i].fails = self.slots[i].fails.saturating_add(1);
+        let delay = self.backoff(self.slots[i].fails);
+        self.slots[i].retry_at = Some(Instant::now() + delay);
+    }
+
+    /// Full-jitter exponential backoff:
+    /// `base + rand() * (min(cap, base·2^(fails-1)) - base)`.
+    fn backoff(&mut self, fails: u32) -> Duration {
+        let base = self.cfg.backoff_base.as_secs_f64();
+        let cap = self.cfg.backoff_max.as_secs_f64().max(base);
+        let exp = (base * 2f64.powi(fails.saturating_sub(1).min(16) as i32))
+            .min(cap);
+        Duration::from_secs_f64(base + (exp - base) * self.rng.f64())
+    }
+
+    /// Drain every event the readers have delivered (non-blocking).
+    fn pump(&mut self) {
+        while let Ok(ev) = self.rx.try_recv() {
+            self.on_event(ev);
+        }
+    }
+
+    /// Block up to `timeout` for at least one event; returns whether
+    /// any event arrived.
+    fn pump_wait(&mut self, timeout: Duration) -> bool {
+        match self.rx.recv_timeout(timeout) {
+            Ok(ev) => {
+                self.on_event(ev);
+                self.pump();
+                true
+            }
+            Err(_) => false,
+        }
+    }
+
+    fn on_event(&mut self, ev: Event) {
+        match ev {
+            Event::Frame { shard, gen, resp } => {
+                // First staleness gate: the router-side connection
+                // generation. Frames read under a torn-down connection
+                // are discarded no matter what they claim.
+                if self.slots[shard].gen != gen {
+                    self.metrics.stale_frames += 1;
+                    return;
+                }
+                let cur_epoch = match &self.slots[shard].state {
+                    SlotState::Connected { epoch, .. } => *epoch,
+                    SlotState::Down => {
+                        self.metrics.stale_frames += 1;
+                        return;
+                    }
+                };
+                self.on_frame(shard, gen, cur_epoch, resp);
+            }
+            Event::Down { shard, gen, error } => {
+                if self.slots[shard].gen == gen {
+                    self.shard_down(shard, &error);
+                }
+                // Stale Down: the teardown it reports already happened.
+            }
+        }
+    }
+
+    fn on_frame(
+        &mut self,
+        shard: usize,
+        gen: u64,
+        cur_epoch: u64,
+        resp: ShardResponse,
+    ) {
+        match resp {
+            ShardResponse::Outcome {
+                epoch, id, result, ..
+            } => {
+                // Second staleness gate: the server-side session epoch
+                // (a restarted shard answers with a fresh epoch, so a
+                // predecessor's in-flight results can never be
+                // mistaken for this connection's).
+                if epoch != cur_epoch {
+                    self.metrics.stale_frames += 1;
+                    return;
+                }
+                let valid = self
+                    .inflight
+                    .get(&id)
+                    .map(|f| f.shard == shard && f.gen == gen)
+                    .unwrap_or(false);
+                if !valid {
+                    self.metrics.stale_frames += 1;
+                    return;
+                }
+                let inf = self.inflight.remove(&id).expect("checked");
+                self.settle(inf, result);
+            }
+            ShardResponse::Rejected { id, reason } => {
+                let valid = self
+                    .inflight
+                    .get(&id)
+                    .map(|f| f.shard == shard && f.gen == gen)
+                    .unwrap_or(false);
+                if !valid {
+                    self.metrics.stale_frames += 1;
+                    return;
+                }
+                let inf = self.inflight.remove(&id).expect("checked");
+                self.settle(
+                    inf,
+                    Err(format!("rejected by shard {shard}: {reason}")),
+                );
+            }
+            ShardResponse::Drained { n, .. } => {
+                self.slots[shard].drained.push(n);
+            }
+            ShardResponse::Pong { nonce, .. } => {
+                self.slots[shard].pongs.push(nonce);
+            }
+            ShardResponse::Metrics { text, .. } => {
+                self.slots[shard].metrics_text = Some(text);
+            }
+            ShardResponse::Error { code, msg } => {
+                self.shard_down(
+                    shard,
+                    &format!("shard error frame (code {code}): {msg}"),
+                );
+            }
+            ShardResponse::HelloAck { .. } => {
+                // Only legal during the synchronous handshake.
+                self.metrics.stale_frames += 1;
+            }
+        }
+    }
+
+    /// Record one job's final outcome and release its admission slots.
+    fn settle(
+        &mut self,
+        inf: InFlight,
+        result: std::result::Result<Vec<u32>, String>,
+    ) {
+        if result.is_ok() {
+            self.metrics.jobs_completed += 1;
+        } else {
+            self.metrics.jobs_failed += 1;
+        }
+        if let Some(load) = self.tenant_load.get_mut(&inf.tenant) {
+            *load = load.saturating_sub(1);
+        }
+        self.done_ids.insert(inf.job.id);
+        self.outcomes.push(RoutedOutcome {
+            id: inf.job.id,
+            tenant: inf.tenant,
+            shard: inf.shard,
+            attempts: inf.attempts,
+            result,
+            latency: inf.submitted.elapsed(),
+        });
+    }
+
+    /// Declare shard `i` dead: tear the connection down (bumping the
+    /// generation so anything still in the event channel is stale),
+    /// schedule its reconnect, and reroute-or-fail exactly the jobs it
+    /// held. Nothing else is touched — that is the graceful-degradation
+    /// contract.
+    fn shard_down(&mut self, i: usize, err: &str) {
+        if let SlotState::Connected { writer, .. } = &self.slots[i].state {
+            writer.shutdown_both();
+        } else {
+            return; // already down
+        }
+        self.slots[i].state = SlotState::Down;
+        self.slots[i].gen += 1;
+        self.metrics.shard_deaths += 1;
+        self.note_connect_failure(i);
+        let orphans: Vec<u64> = self
+            .inflight
+            .iter()
+            .filter(|(_, f)| f.shard == i)
+            .map(|(id, _)| *id)
+            .collect();
+        for id in orphans {
+            let inf = self.inflight.remove(&id).expect("present");
+            if let Some(load) = self.tenant_load.get_mut(&inf.tenant) {
+                *load = load.saturating_sub(1);
+            }
+            if inf.attempts < self.cfg.max_attempts {
+                self.metrics.jobs_rerouted += 1;
+                let (key, job, tenant, attempts, submitted) = (
+                    inf.key,
+                    inf.job.clone(),
+                    inf.tenant.clone(),
+                    inf.attempts,
+                    inf.submitted,
+                );
+                if let Err(e) =
+                    self.route(key, job, tenant, attempts + 1, submitted)
+                {
+                    self.metrics.jobs_rerouted -= 1;
+                    self.fail_inflight(
+                        inf,
+                        &format!(
+                            "shard {i} died ({err}); reroute failed: {e:#}"
+                        ),
+                    );
+                }
+            } else {
+                self.fail_inflight(
+                    inf,
+                    &format!(
+                        "shard {i} died ({err}); {} attempts exhausted",
+                        self.cfg.max_attempts
+                    ),
+                );
+            }
+        }
+    }
+
+    fn fail_inflight(&mut self, inf: InFlight, msg: &str) {
+        self.metrics.jobs_failed += 1;
+        self.done_ids.insert(inf.job.id);
+        self.outcomes.push(RoutedOutcome {
+            id: inf.job.id,
+            tenant: inf.tenant,
+            shard: inf.shard,
+            attempts: inf.attempts,
+            result: Err(msg.to_string()),
+            latency: inf.submitted.elapsed(),
+        });
+    }
+
+    /// Choose a healthy shard for `key` (round-robin), lazily
+    /// reconnecting Down slots whose backoff has elapsed.
+    fn pick(&mut self, key: DesignKey) -> Result<usize> {
+        let n = self.slots.len();
+        for i in 0..n {
+            if self.slots[i].spec.key != key
+                || !matches!(self.slots[i].state, SlotState::Down)
+            {
+                continue;
+            }
+            let due = self.slots[i]
+                .retry_at
+                .map_or(true, |t| Instant::now() >= t);
+            if due && self.connect_slot(i).is_err() {
+                self.note_connect_failure(i);
+            }
+        }
+        for step in 0..n {
+            let i = (self.rr + step) % n;
+            if self.slots[i].spec.key == key
+                && matches!(self.slots[i].state, SlotState::Connected { .. })
+            {
+                self.rr = i + 1;
+                return Ok(i);
+            }
+        }
+        bail!("no healthy shard serves {key}")
+    }
+
+    /// Write one job to a healthy shard, moving on (and taking the
+    /// failed slot down) when a write fails. Terminates: every failed
+    /// write downs a slot, downed slots only come back after backoff,
+    /// and with none left `pick` errors out.
+    fn route(
+        &mut self,
+        key: DesignKey,
+        job: VectorJob,
+        tenant: String,
+        attempts: u32,
+        submitted: Instant,
+    ) -> Result<()> {
+        loop {
+            let i = self.pick(key)?;
+            let write_res = match &mut self.slots[i].state {
+                SlotState::Connected { writer, .. } => {
+                    ShardRequest::Submit { job: job.clone() }
+                        .write_to(writer)
+                }
+                SlotState::Down => unreachable!("pick returns connected"),
+            };
+            match write_res {
+                Ok(()) => {
+                    let gen = self.slots[i].gen;
+                    *self.tenant_load.entry(tenant.clone()).or_insert(0) +=
+                        1;
+                    self.inflight.insert(
+                        job.id,
+                        InFlight {
+                            key,
+                            job,
+                            tenant,
+                            shard: i,
+                            gen,
+                            attempts,
+                            submitted,
+                            sent: Instant::now(),
+                        },
+                    );
+                    return Ok(());
+                }
+                Err(e) => {
+                    self.shard_down(i, &format!("write failed: {e:#}"));
+                }
+            }
+        }
+    }
+
+    /// Non-blocking submission attempt. `Err` only for malformed input
+    /// (duplicate id, no shard for the key); load shedding comes back
+    /// as a non-`Accepted` [`Admission`].
+    pub fn try_submit(
+        &mut self,
+        key: DesignKey,
+        tenant: &str,
+        job: VectorJob,
+    ) -> Result<Admission> {
+        self.pump();
+        ensure!(
+            !self.inflight.contains_key(&job.id)
+                && !self.done_ids.contains(&job.id),
+            "duplicate job id {} (ids must be unique per router)",
+            job.id
+        );
+        if self.inflight.len() >= self.cfg.max_inflight {
+            self.metrics.admission_denied += 1;
+            return Ok(Admission::Saturated);
+        }
+        if self.tenant_load.get(tenant).copied().unwrap_or(0)
+            >= self.cfg.tenant_share
+        {
+            self.metrics.admission_denied += 1;
+            return Ok(Admission::TenantOverShare);
+        }
+        self.route(key, job, tenant.to_string(), 1, Instant::now())?;
+        self.metrics.jobs_routed += 1;
+        Ok(Admission::Accepted)
+    }
+
+    /// Blocking submission: waits out admission denial by pumping
+    /// events, declaring silent deadline-overdue shards dead so their
+    /// jobs settle and capacity frees up.
+    pub fn submit(
+        &mut self,
+        key: DesignKey,
+        tenant: &str,
+        job: VectorJob,
+    ) -> Result<()> {
+        loop {
+            match self.try_submit(key, tenant, job.clone())? {
+                Admission::Accepted => return Ok(()),
+                Admission::Saturated | Admission::TenantOverShare => {
+                    self.nudge_holders();
+                    if !self.pump_wait(self.cfg.request_timeout) {
+                        self.fail_unresponsive();
+                    }
+                }
+            }
+        }
+    }
+
+    /// Ask every shard holding in-flight jobs to flush partial batches
+    /// and stream back whatever has finished. This is the liveness
+    /// nudge that lets a saturated submitter make progress against a
+    /// windowless shard session: a shard only writes outcome frames in
+    /// response to requests, so a router that stops submitting must
+    /// keep talking to keep results flowing.
+    fn nudge_holders(&mut self) {
+        let holders: HashSet<usize> =
+            self.inflight.values().map(|f| f.shard).collect();
+        for i in holders {
+            let write_res = match &mut self.slots[i].state {
+                SlotState::Connected { writer, .. } => {
+                    ShardRequest::Flush.write_to(writer)
+                }
+                SlotState::Down => unreachable!(
+                    "inflight only rests on connected shards"
+                ),
+            };
+            if let Err(e) = write_res {
+                self.shard_down(i, &format!("flush write failed: {e:#}"));
+            }
+        }
+    }
+
+    /// Take down every shard holding a job whose current attempt is
+    /// older than the request deadline (called when the event stream
+    /// has gone silent for a full deadline).
+    fn fail_unresponsive(&mut self) {
+        let now = Instant::now();
+        let overdue: HashSet<usize> = self
+            .inflight
+            .values()
+            .filter(|f| {
+                now.duration_since(f.sent) >= self.cfg.request_timeout
+            })
+            .map(|f| f.shard)
+            .collect();
+        for i in overdue {
+            self.shard_down(i, "request deadline exceeded");
+        }
+    }
+
+    /// Drive every in-flight job to a final outcome: ask holders to
+    /// drain, reroute off shards that stop making progress, and return
+    /// all settled outcomes. Every job submitted so far resolves to
+    /// exactly one outcome (attempts are bounded, so this terminates
+    /// even with every shard misbehaving).
+    pub fn drain(&mut self) -> Result<Vec<RoutedOutcome>> {
+        self.pump();
+        while !self.inflight.is_empty() {
+            let holders: HashSet<usize> =
+                self.inflight.values().map(|f| f.shard).collect();
+            for i in holders {
+                let write_res =
+                    match &mut self.slots[i].state {
+                        SlotState::Connected { writer, .. } => {
+                            ShardRequest::Drain.write_to(writer)
+                        }
+                        SlotState::Down => unreachable!(
+                            "inflight only rests on connected shards"
+                        ),
+                    };
+                if let Err(e) = write_res {
+                    self.shard_down(
+                        i,
+                        &format!("drain write failed: {e:#}"),
+                    );
+                }
+            }
+            let before = self.inflight.len();
+            let deadline = Instant::now() + self.cfg.request_timeout;
+            while self.inflight.len() >= before
+                && !self.inflight.is_empty()
+            {
+                let left = deadline
+                    .saturating_duration_since(Instant::now());
+                if left.is_zero() {
+                    break;
+                }
+                self.pump_wait(left);
+            }
+            if self.inflight.len() >= before && !self.inflight.is_empty() {
+                // A full deadline with zero progress: every holder is
+                // unresponsive.
+                let holders: Vec<usize> =
+                    self.inflight.values().map(|f| f.shard).collect();
+                for i in holders {
+                    self.shard_down(i, "no progress within deadline");
+                }
+            }
+        }
+        Ok(self.take_outcomes())
+    }
+
+    /// All outcomes settled so far (non-blocking).
+    pub fn take_outcomes(&mut self) -> Vec<RoutedOutcome> {
+        self.pump();
+        std::mem::take(&mut self.outcomes)
+    }
+
+    /// Jobs currently in flight across all shards.
+    pub fn inflight_len(&self) -> usize {
+        self.inflight.len()
+    }
+
+    /// Total jobs acknowledged by shard `Drained` frames so far
+    /// (informational: reroutes settle via `Outcome` frames, so this
+    /// can undercount the router's own view).
+    pub fn drained_acks(&self) -> u64 {
+        self.slots.iter().map(|s| s.drained.iter().sum::<u64>()).sum()
+    }
+
+    /// Health-check every connected shard with a nonce'd ping;
+    /// non-responders within the request deadline are taken down.
+    /// Returns per-slot liveness after the sweep.
+    pub fn ping_all(&mut self) -> Vec<bool> {
+        self.pump();
+        let nonce_base = self.rng.next_u64();
+        let n = self.slots.len();
+        let mut expect: Vec<Option<u64>> = vec![None; n];
+        for i in 0..n {
+            let nonce = nonce_base ^ (i as u64);
+            let write_res = match &mut self.slots[i].state {
+                SlotState::Connected { writer, .. } => {
+                    ShardRequest::Ping { nonce }.write_to(writer)
+                }
+                SlotState::Down => continue,
+            };
+            match write_res {
+                Ok(()) => expect[i] = Some(nonce),
+                Err(e) => {
+                    self.shard_down(i, &format!("ping write failed: {e:#}"))
+                }
+            }
+        }
+        let deadline = Instant::now() + self.cfg.request_timeout;
+        loop {
+            let missing = (0..n).any(|i| {
+                expect[i].map_or(false, |nonce| {
+                    !self.slots[i].pongs.contains(&nonce)
+                })
+            });
+            if !missing {
+                break;
+            }
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                break;
+            }
+            self.pump_wait(left);
+        }
+        for i in 0..n {
+            if let Some(nonce) = expect[i] {
+                if !self.slots[i].pongs.contains(&nonce) {
+                    self.shard_down(i, "ping timeout");
+                }
+            }
+            self.slots[i].pongs.clear();
+        }
+        (0..n)
+            .map(|i| {
+                matches!(self.slots[i].state, SlotState::Connected { .. })
+            })
+            .collect()
+    }
+
+    /// Scrapeable metrics: router counters plus each live shard's
+    /// per-shard snapshot in one-metric-per-line text form.
+    pub fn scrape(&mut self) -> String {
+        self.pump();
+        let n = self.slots.len();
+        let mut asked = vec![false; n];
+        for i in 0..n {
+            self.slots[i].metrics_text = None;
+            let write_res = match &mut self.slots[i].state {
+                SlotState::Connected { writer, .. } => {
+                    ShardRequest::GetMetrics.write_to(writer)
+                }
+                SlotState::Down => continue,
+            };
+            match write_res {
+                Ok(()) => asked[i] = true,
+                Err(e) => self.shard_down(
+                    i,
+                    &format!("metrics write failed: {e:#}"),
+                ),
+            }
+        }
+        let deadline = Instant::now() + self.cfg.request_timeout;
+        loop {
+            let missing = (0..n).any(|i| {
+                asked[i]
+                    && self.slots[i].metrics_text.is_none()
+                    && matches!(
+                        self.slots[i].state,
+                        SlotState::Connected { .. }
+                    )
+            });
+            if !missing {
+                break;
+            }
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                break;
+            }
+            self.pump_wait(left);
+        }
+        let mut out = self.metrics.render_text();
+        for i in 0..n {
+            out.push_str(&format!(
+                "nibblemul_router_shard_up{{shard=\"{i}\"}} {}\n",
+                matches!(self.slots[i].state, SlotState::Connected { .. })
+                    as u8
+            ));
+            if let Some(text) = self.slots[i].metrics_text.take() {
+                out.push_str(&text);
+            }
+        }
+        out
+    }
+
+    /// Per-slot liveness without any network traffic.
+    pub fn shard_up(&self) -> Vec<bool> {
+        self.slots
+            .iter()
+            .map(|s| matches!(s.state, SlotState::Connected { .. }))
+            .collect()
+    }
+
+    /// Send Bye to every live shard (best-effort, then hang up).
+    pub fn shutdown(mut self) {
+        for slot in &mut self.slots {
+            if let SlotState::Connected { writer, .. } = &mut slot.state {
+                let _ = ShardRequest::Bye.write_to(writer);
+                writer.shutdown_both();
+            }
+        }
+    }
+
+    /// Inject an event as if a reader thread delivered it (stale-frame
+    /// unit tests).
+    #[cfg(test)]
+    fn inject(&mut self, ev: Event) {
+        self.on_event(ev);
+    }
+}
+
+impl Drop for Router {
+    fn drop(&mut self) {
+        for slot in &mut self.slots {
+            if let SlotState::Connected { writer, .. } = &mut slot.state {
+                writer.shutdown_both();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::multipliers::Arch;
+    use crate::workload::broadcast_jobs;
+
+    fn key16() -> DesignKey {
+        DesignKey {
+            arch: Arch::Nibble,
+            n: 16,
+        }
+    }
+
+    fn fast_cfg() -> RouterConfig {
+        RouterConfig {
+            request_timeout: Duration::from_millis(800),
+            backoff_base: Duration::from_millis(5),
+            backoff_max: Duration::from_millis(50),
+            ..RouterConfig::default()
+        }
+    }
+
+    fn spawn_shard(tag: &str) -> ShardServer {
+        ShardServer::spawn(
+            loopback_addr(tag),
+            exact_factory(2),
+            ShardServerConfig::default(),
+        )
+        .expect("spawn shard")
+    }
+
+    #[test]
+    fn shard_addr_parse_and_display() {
+        assert_eq!(
+            ShardAddr::parse("/tmp/x.sock"),
+            ShardAddr::Unix(PathBuf::from("/tmp/x.sock"))
+        );
+        assert_eq!(
+            ShardAddr::parse("relative.sock"),
+            ShardAddr::Unix(PathBuf::from("relative.sock"))
+        );
+        assert_eq!(
+            ShardAddr::parse("127.0.0.1:9000"),
+            ShardAddr::Tcp("127.0.0.1:9000".into())
+        );
+        assert_eq!(format!("{}", ShardAddr::parse("h:1")), "h:1");
+    }
+
+    #[test]
+    fn backoff_is_bounded_with_full_jitter() {
+        let server = spawn_shard("backoff");
+        let mut router = Router::connect(
+            vec![ShardSpec {
+                addr: server.addr().clone(),
+                key: key16(),
+            }],
+            RouterConfig {
+                backoff_base: Duration::from_millis(10),
+                backoff_max: Duration::from_millis(100),
+                ..RouterConfig::default()
+            },
+        )
+        .unwrap();
+        let mut saw_spread = false;
+        let mut prev = None;
+        for fails in 1..=10u32 {
+            for _ in 0..20 {
+                let d = router.backoff(fails);
+                assert!(d >= Duration::from_millis(10), "floor: {d:?}");
+                assert!(d <= Duration::from_millis(100), "cap: {d:?}");
+                if let Some(p) = prev {
+                    saw_spread |= p != d;
+                }
+                prev = Some(d);
+            }
+        }
+        assert!(saw_spread, "jitter actually varies the delay");
+        server.kill();
+    }
+
+    #[test]
+    fn loopback_roundtrip_completes_every_job() {
+        let server = spawn_shard("rt");
+        let mut router = Router::connect(
+            vec![ShardSpec {
+                addr: server.addr().clone(),
+                key: key16(),
+            }],
+            fast_cfg(),
+        )
+        .unwrap();
+        let jobs = broadcast_jobs(20, 1, 12, 77);
+        for job in &jobs {
+            router.submit(key16(), "t0", job.clone()).unwrap();
+        }
+        let mut outcomes = router.drain().unwrap();
+        outcomes.sort_by_key(|o| o.id);
+        assert_eq!(outcomes.len(), jobs.len());
+        for (job, out) in jobs.iter().zip(&outcomes) {
+            assert_eq!(out.id, job.id);
+            assert_eq!(out.attempts, 1, "no reroutes on a healthy shard");
+            assert_eq!(
+                out.result.as_ref().unwrap(),
+                &job.expected(),
+                "job {}",
+                job.id
+            );
+        }
+        assert_eq!(router.metrics.jobs_completed, 20);
+        assert_eq!(router.metrics.jobs_failed, 0);
+        assert_eq!(router.metrics.stale_frames, 0);
+        assert!(router.drained_acks() >= 20);
+        let scrape = router.scrape();
+        assert!(scrape.contains("nibblemul_router_jobs_completed 20"));
+        assert!(scrape.contains("nibblemul_router_shard_up{shard=\"0\"} 1"));
+        assert!(
+            scrape.contains("nibblemul_jobs_completed{shard=\"shard\"}"),
+            "per-shard snapshot rides along:\n{scrape}"
+        );
+        assert_eq!(router.ping_all(), vec![true]);
+        router.shutdown();
+        server.kill();
+    }
+
+    #[test]
+    fn stale_generation_and_epoch_frames_are_discarded() {
+        let server = spawn_shard("stale");
+        let mut router = Router::connect(
+            vec![ShardSpec {
+                addr: server.addr().clone(),
+                key: key16(),
+            }],
+            fast_cfg(),
+        )
+        .unwrap();
+        let gen = router.slots[0].gen;
+        let epoch = match &router.slots[0].state {
+            SlotState::Connected { epoch, .. } => *epoch,
+            SlotState::Down => panic!("connected"),
+        };
+        router
+            .submit(
+                key16(),
+                "t0",
+                VectorJob {
+                    id: 1,
+                    a: vec![2, 3],
+                    b: 4,
+                },
+            )
+            .unwrap();
+        // (a) wrong router-side generation: structurally discarded even
+        // with a matching id and epoch.
+        router.inject(Event::Frame {
+            shard: 0,
+            gen: gen + 1,
+            resp: ShardResponse::Outcome {
+                epoch,
+                id: 1,
+                latency_us: 1,
+                result: Ok(vec![0, 0]),
+            },
+        });
+        // (b) right generation, wrong server epoch (a "restarted shard"
+        // answering for its predecessor's session).
+        router.inject(Event::Frame {
+            shard: 0,
+            gen,
+            resp: ShardResponse::Outcome {
+                epoch: epoch ^ 1,
+                id: 1,
+                latency_us: 1,
+                result: Ok(vec![9, 9]),
+            },
+        });
+        // (c) unknown job id.
+        router.inject(Event::Frame {
+            shard: 0,
+            gen,
+            resp: ShardResponse::Outcome {
+                epoch,
+                id: 999,
+                latency_us: 1,
+                result: Ok(vec![]),
+            },
+        });
+        // (d) stale Down notice must not kill the live connection.
+        router.inject(Event::Down {
+            shard: 0,
+            gen: gen.wrapping_sub(1),
+            error: "old reader".into(),
+        });
+        assert_eq!(router.metrics.stale_frames, 3);
+        assert_eq!(router.metrics.shard_deaths, 0);
+        assert_eq!(router.shard_up(), vec![true]);
+        // The real job still settles with the REAL result.
+        let outcomes = router.drain().unwrap();
+        assert_eq!(outcomes.len(), 1);
+        assert_eq!(outcomes[0].result.as_ref().unwrap(), &vec![8, 12]);
+        router.shutdown();
+        server.kill();
+    }
+
+    #[test]
+    fn admission_enforces_global_cap_and_tenant_share() {
+        let server = spawn_shard("adm");
+        // Closed-set window + 1-lane jobs on a 16-wide design: nothing
+        // flushes until Drain, so submissions stay in flight
+        // deterministically.
+        let mut router = Router::connect(
+            vec![ShardSpec {
+                addr: server.addr().clone(),
+                key: key16(),
+            }],
+            RouterConfig {
+                max_inflight: 3,
+                tenant_share: 2,
+                ..fast_cfg()
+            },
+        )
+        .unwrap();
+        let job = |id: u64| VectorJob {
+            id,
+            a: vec![1],
+            b: id as u16,
+        };
+        assert_eq!(
+            router.try_submit(key16(), "a", job(0)).unwrap(),
+            Admission::Accepted
+        );
+        assert_eq!(
+            router.try_submit(key16(), "a", job(1)).unwrap(),
+            Admission::Accepted
+        );
+        // Tenant a is at its share; tenant b still admits.
+        assert_eq!(
+            router.try_submit(key16(), "a", job(2)).unwrap(),
+            Admission::TenantOverShare
+        );
+        assert_eq!(
+            router.try_submit(key16(), "b", job(3)).unwrap(),
+            Admission::Accepted
+        );
+        // Global cap (3) reached: everyone sheds, even fresh tenants.
+        assert_eq!(
+            router.try_submit(key16(), "c", job(4)).unwrap(),
+            Admission::Saturated
+        );
+        assert_eq!(router.metrics.admission_denied, 2);
+        // Duplicate ids are rejected outright, in flight or settled.
+        assert!(router.try_submit(key16(), "a", job(0)).is_err());
+        let outcomes = router.drain().unwrap();
+        assert_eq!(outcomes.len(), 3);
+        assert!(outcomes.iter().all(|o| o.result.is_ok()));
+        assert!(router.try_submit(key16(), "a", job(0)).is_err());
+        // Capacity freed: admission opens back up.
+        assert_eq!(
+            router.try_submit(key16(), "a", job(2)).unwrap(),
+            Admission::Accepted
+        );
+        let outcomes = router.drain().unwrap();
+        assert_eq!(outcomes.len(), 1);
+        router.shutdown();
+        server.kill();
+    }
+
+    #[test]
+    fn unknown_design_key_is_rejected_at_handshake() {
+        let server = ShardServer::spawn(
+            loopback_addr("allow"),
+            exact_factory(1),
+            ShardServerConfig {
+                keys: Some(vec![key16()]),
+                ..ShardServerConfig::default()
+            },
+        )
+        .unwrap();
+        let err = Router::connect(
+            vec![ShardSpec {
+                addr: server.addr().clone(),
+                key: DesignKey {
+                    arch: Arch::Wallace,
+                    n: 8,
+                },
+            }],
+            fast_cfg(),
+        )
+        .unwrap_err();
+        assert!(
+            format!("{err:#}").contains("does not serve"),
+            "allowlist error surfaces: {err:#}"
+        );
+        server.kill();
+    }
+}

@@ -1,0 +1,775 @@
+//! Length-prefixed binary wire protocol for the sharded serving tier.
+//!
+//! Every frame is an 8-byte header followed by a payload:
+//!
+//! ```text
+//!   magic   u16 LE  0x4D4E ("NM")
+//!   version u8      WIRE_VERSION (frames from other versions are
+//!                   rejected, never guessed at)
+//!   kind    u8      request 0x01..=0x07 | response 0x81..=0x87
+//!   len     u32 LE  payload byte length (<= MAX_FRAME)
+//!   payload [u8; len]
+//! ```
+//!
+//! All integers are little-endian. Strings are `u32` byte length +
+//! UTF-8 bytes; vectors are `u32` element count + packed LE elements.
+//! Decoding is strict: bad magic, unknown version/kind, oversized
+//! frames, truncated payloads and trailing payload bytes are all
+//! distinct errors — a [`Router`](super::shard::Router) must never act
+//! on a frame it only partially understood.
+//!
+//! [`ShardRequest`]/[`ShardResponse`] are modeled on the coordinator's
+//! [`JobOutcome`](super::JobOutcome): an `Outcome` frame carries either
+//! products or the contained per-job error text, and every response
+//! carries the shard's session `epoch` so a router structurally
+//! discards frames from a connection generation it no longer trusts.
+//!
+//! The codec is differentially validated by `python/wire.py` (a
+//! line-by-line port) against shared golden byte vectors — see
+//! `python/validate_wire.py`.
+
+use std::io::{Read, Write};
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::multipliers::Arch;
+use crate::workload::VectorJob;
+
+/// Frame magic: "NM" when the u16 is written little-endian.
+pub const WIRE_MAGIC: u16 = 0x4D4E;
+/// Protocol version this build speaks.
+pub const WIRE_VERSION: u8 = 1;
+/// Hard payload-size bound (16 MiB): a corrupt length field must not
+/// make the receiver allocate unbounded memory.
+pub const MAX_FRAME: usize = 1 << 24;
+/// Frame-header byte length.
+pub const HEADER_LEN: usize = 8;
+
+// Request frame kinds.
+const K_HELLO: u8 = 0x01;
+const K_SUBMIT: u8 = 0x02;
+const K_FLUSH: u8 = 0x03;
+const K_DRAIN: u8 = 0x04;
+const K_PING: u8 = 0x05;
+const K_GET_METRICS: u8 = 0x06;
+const K_BYE: u8 = 0x07;
+// Response frame kinds (high bit set).
+const K_HELLO_ACK: u8 = 0x81;
+const K_OUTCOME: u8 = 0x82;
+const K_DRAINED: u8 = 0x83;
+const K_PONG: u8 = 0x84;
+const K_METRICS: u8 = 0x85;
+const K_REJECTED: u8 = 0x86;
+const K_ERROR: u8 = 0x87;
+
+/// Client -> shard frames.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ShardRequest {
+    /// Open a serving session for one design key. Must be the first
+    /// frame on a connection.
+    Hello {
+        arch: Arch,
+        n: u32,
+        /// Admission-control identity of the submitting client.
+        tenant: String,
+    },
+    /// Submit one job into the open session.
+    Submit { job: VectorJob },
+    /// Force-flush open partial batches.
+    Flush,
+    /// Flush + barrier: the shard answers with every pending
+    /// [`ShardResponse::Outcome`] followed by one `Drained`.
+    Drain,
+    /// Health check; answered by `Pong` echoing the nonce.
+    Ping { nonce: u64 },
+    /// Request a scrapeable metrics snapshot.
+    GetMetrics,
+    /// Graceful goodbye; the shard closes the connection.
+    Bye,
+}
+
+/// Shard -> client frames. Every session frame carries the shard's
+/// session `epoch` (fresh per connection) so stale generations are
+/// structurally detectable.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ShardResponse {
+    /// Session opened: the epoch tag for this connection and the fabric
+    /// width serving it.
+    HelloAck { epoch: u64, width: u32 },
+    /// One finished job (mirrors [`super::JobOutcome`]): products, or
+    /// the contained per-job error text.
+    Outcome {
+        epoch: u64,
+        id: u64,
+        latency_us: u64,
+        result: Result<Vec<u32>, String>,
+    },
+    /// Drain barrier complete; `n` outcomes were delivered since the
+    /// matching `Drain`.
+    Drained { epoch: u64, n: u64 },
+    /// Health-check answer.
+    Pong { epoch: u64, nonce: u64 },
+    /// Scrapeable one-metric-per-line snapshot text.
+    Metrics { epoch: u64, text: String },
+    /// A submit the session refused (duplicate id, poisoned session):
+    /// structural rejection, distinct from an executed-but-failed
+    /// `Outcome`.
+    Rejected { id: u64, reason: String },
+    /// Connection-level error (bad handshake, unknown design, protocol
+    /// violation). The shard closes the connection after sending it.
+    Error { code: u16, msg: String },
+}
+
+/// Error codes carried by [`ShardResponse::Error`].
+pub mod error_code {
+    /// First frame was not `Hello`.
+    pub const BAD_HANDSHAKE: u16 = 1;
+    /// The `(Arch, n)` key is not served by this shard.
+    pub const UNKNOWN_DESIGN: u16 = 2;
+    /// Backend/session construction failed.
+    pub const INTERNAL: u16 = 3;
+    /// A request frame arrived that the session state cannot accept.
+    pub const PROTOCOL: u16 = 4;
+}
+
+// ---------------------------------------------------------------- encode
+
+fn put_u16(buf: &mut Vec<u8>, v: u16) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn put_vec_u16(buf: &mut Vec<u8>, v: &[u16]) {
+    put_u32(buf, v.len() as u32);
+    for &x in v {
+        put_u16(buf, x);
+    }
+}
+
+fn put_vec_u32(buf: &mut Vec<u8>, v: &[u32]) {
+    put_u32(buf, v.len() as u32);
+    for &x in v {
+        put_u32(buf, x);
+    }
+}
+
+/// Wrap a payload in the versioned header.
+fn frame(kind: u8, payload: Vec<u8>) -> Vec<u8> {
+    debug_assert!(payload.len() <= MAX_FRAME);
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    put_u16(&mut out, WIRE_MAGIC);
+    out.push(WIRE_VERSION);
+    out.push(kind);
+    put_u32(&mut out, payload.len() as u32);
+    out.extend_from_slice(&payload);
+    out
+}
+
+// ---------------------------------------------------------------- decode
+
+/// Strict payload reader: every primitive checks remaining bytes, and
+/// the caller checks nothing is left over.
+struct Rd<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            self.remaining() >= n,
+            "truncated payload: wanted {n} more bytes, have {}",
+            self.remaining()
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let len = self.u32()? as usize;
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| anyhow!("string field is not valid UTF-8"))
+    }
+
+    fn vec_u16(&mut self) -> Result<Vec<u16>> {
+        let count = self.u32()? as usize;
+        ensure!(
+            count <= self.remaining() / 2,
+            "vector count {count} exceeds payload"
+        );
+        (0..count).map(|_| self.u16()).collect()
+    }
+
+    fn vec_u32(&mut self) -> Result<Vec<u32>> {
+        let count = self.u32()? as usize;
+        ensure!(
+            count <= self.remaining() / 4,
+            "vector count {count} exceeds payload"
+        );
+        (0..count).map(|_| self.u32()).collect()
+    }
+
+    fn finish(self) -> Result<()> {
+        ensure!(
+            self.remaining() == 0,
+            "{} trailing bytes after payload",
+            self.remaining()
+        );
+        Ok(())
+    }
+}
+
+/// Read one frame header + payload from `r`.
+fn read_frame<R: Read>(r: &mut R) -> Result<(u8, Vec<u8>)> {
+    let mut header = [0u8; HEADER_LEN];
+    r.read_exact(&mut header)
+        .map_err(|e| anyhow!("reading frame header: {e}"))?;
+    let (kind, len) = parse_header(&header)?;
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)
+        .map_err(|e| anyhow!("reading {len}-byte payload: {e}"))?;
+    Ok((kind, payload))
+}
+
+fn parse_header(header: &[u8; HEADER_LEN]) -> Result<(u8, usize)> {
+    let magic = u16::from_le_bytes([header[0], header[1]]);
+    ensure!(
+        magic == WIRE_MAGIC,
+        "bad frame magic {magic:#06x} (expected {WIRE_MAGIC:#06x})"
+    );
+    let version = header[2];
+    ensure!(
+        version == WIRE_VERSION,
+        "unsupported wire version {version} (this build speaks \
+         {WIRE_VERSION})"
+    );
+    let kind = header[3];
+    let len = u32::from_le_bytes([header[4], header[5], header[6], header[7]])
+        as usize;
+    ensure!(
+        len <= MAX_FRAME,
+        "frame payload of {len} bytes exceeds the {MAX_FRAME}-byte bound"
+    );
+    Ok((kind, len))
+}
+
+/// Split an in-memory frame into (kind, payload) — the property-test /
+/// golden-vector entry point.
+fn split_frame(bytes: &[u8]) -> Result<(u8, &[u8])> {
+    ensure!(
+        bytes.len() >= HEADER_LEN,
+        "frame shorter than the {HEADER_LEN}-byte header"
+    );
+    let header: [u8; HEADER_LEN] = bytes[..HEADER_LEN].try_into().unwrap();
+    let (kind, len) = parse_header(&header)?;
+    ensure!(
+        bytes.len() == HEADER_LEN + len,
+        "frame length {} disagrees with header ({} expected)",
+        bytes.len(),
+        HEADER_LEN + len
+    );
+    Ok((kind, &bytes[HEADER_LEN..]))
+}
+
+fn arch_index(arch: Arch) -> u8 {
+    Arch::ALL
+        .iter()
+        .position(|&a| a == arch)
+        .expect("every Arch is in ALL") as u8
+}
+
+fn arch_from_index(idx: u8) -> Result<Arch> {
+    Arch::ALL
+        .get(idx as usize)
+        .copied()
+        .ok_or_else(|| anyhow!("unknown arch index {idx}"))
+}
+
+impl ShardRequest {
+    /// Encode into one owned frame (header + payload).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut p = Vec::new();
+        let kind = match self {
+            ShardRequest::Hello { arch, n, tenant } => {
+                p.push(arch_index(*arch));
+                put_u32(&mut p, *n);
+                put_str(&mut p, tenant);
+                K_HELLO
+            }
+            ShardRequest::Submit { job } => {
+                put_u64(&mut p, job.id);
+                put_u16(&mut p, job.b);
+                put_vec_u16(&mut p, &job.a);
+                K_SUBMIT
+            }
+            ShardRequest::Flush => K_FLUSH,
+            ShardRequest::Drain => K_DRAIN,
+            ShardRequest::Ping { nonce } => {
+                put_u64(&mut p, *nonce);
+                K_PING
+            }
+            ShardRequest::GetMetrics => K_GET_METRICS,
+            ShardRequest::Bye => K_BYE,
+        };
+        frame(kind, p)
+    }
+
+    /// Strict inverse of [`ShardRequest::encode`].
+    pub fn decode(bytes: &[u8]) -> Result<Self> {
+        let (kind, payload) = split_frame(bytes)?;
+        Self::decode_payload(kind, payload)
+    }
+
+    fn decode_payload(kind: u8, payload: &[u8]) -> Result<Self> {
+        let mut rd = Rd::new(payload);
+        let req = match kind {
+            K_HELLO => ShardRequest::Hello {
+                arch: arch_from_index(rd.u8()?)?,
+                n: rd.u32()?,
+                tenant: rd.str()?,
+            },
+            K_SUBMIT => ShardRequest::Submit {
+                job: VectorJob {
+                    id: rd.u64()?,
+                    b: rd.u16()?,
+                    a: rd.vec_u16()?,
+                },
+            },
+            K_FLUSH => ShardRequest::Flush,
+            K_DRAIN => ShardRequest::Drain,
+            K_PING => ShardRequest::Ping { nonce: rd.u64()? },
+            K_GET_METRICS => ShardRequest::GetMetrics,
+            K_BYE => ShardRequest::Bye,
+            other => bail!("unknown request frame kind {other:#04x}"),
+        };
+        rd.finish()?;
+        Ok(req)
+    }
+
+    /// Write one frame to a stream.
+    pub fn write_to<W: Write>(&self, w: &mut W) -> Result<()> {
+        w.write_all(&self.encode())?;
+        Ok(())
+    }
+
+    /// Read one frame from a stream (blocking).
+    pub fn read_from<R: Read>(r: &mut R) -> Result<Self> {
+        let (kind, payload) = read_frame(r)?;
+        Self::decode_payload(kind, &payload)
+    }
+}
+
+impl ShardResponse {
+    /// Encode into one owned frame (header + payload).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut p = Vec::new();
+        let kind = match self {
+            ShardResponse::HelloAck { epoch, width } => {
+                put_u64(&mut p, *epoch);
+                put_u32(&mut p, *width);
+                K_HELLO_ACK
+            }
+            ShardResponse::Outcome {
+                epoch,
+                id,
+                latency_us,
+                result,
+            } => {
+                put_u64(&mut p, *epoch);
+                put_u64(&mut p, *id);
+                put_u64(&mut p, *latency_us);
+                match result {
+                    Ok(products) => {
+                        p.push(1);
+                        put_vec_u32(&mut p, products);
+                    }
+                    Err(msg) => {
+                        p.push(0);
+                        put_str(&mut p, msg);
+                    }
+                }
+                K_OUTCOME
+            }
+            ShardResponse::Drained { epoch, n } => {
+                put_u64(&mut p, *epoch);
+                put_u64(&mut p, *n);
+                K_DRAINED
+            }
+            ShardResponse::Pong { epoch, nonce } => {
+                put_u64(&mut p, *epoch);
+                put_u64(&mut p, *nonce);
+                K_PONG
+            }
+            ShardResponse::Metrics { epoch, text } => {
+                put_u64(&mut p, *epoch);
+                put_str(&mut p, text);
+                K_METRICS
+            }
+            ShardResponse::Rejected { id, reason } => {
+                put_u64(&mut p, *id);
+                put_str(&mut p, reason);
+                K_REJECTED
+            }
+            ShardResponse::Error { code, msg } => {
+                put_u16(&mut p, *code);
+                put_str(&mut p, msg);
+                K_ERROR
+            }
+        };
+        frame(kind, p)
+    }
+
+    /// Strict inverse of [`ShardResponse::encode`].
+    pub fn decode(bytes: &[u8]) -> Result<Self> {
+        let (kind, payload) = split_frame(bytes)?;
+        Self::decode_payload(kind, payload)
+    }
+
+    fn decode_payload(kind: u8, payload: &[u8]) -> Result<Self> {
+        let mut rd = Rd::new(payload);
+        let resp = match kind {
+            K_HELLO_ACK => ShardResponse::HelloAck {
+                epoch: rd.u64()?,
+                width: rd.u32()?,
+            },
+            K_OUTCOME => {
+                let epoch = rd.u64()?;
+                let id = rd.u64()?;
+                let latency_us = rd.u64()?;
+                let result = match rd.u8()? {
+                    1 => Ok(rd.vec_u32()?),
+                    0 => Err(rd.str()?),
+                    tag => bail!("bad outcome tag {tag} (want 0 | 1)"),
+                };
+                ShardResponse::Outcome {
+                    epoch,
+                    id,
+                    latency_us,
+                    result,
+                }
+            }
+            K_DRAINED => ShardResponse::Drained {
+                epoch: rd.u64()?,
+                n: rd.u64()?,
+            },
+            K_PONG => ShardResponse::Pong {
+                epoch: rd.u64()?,
+                nonce: rd.u64()?,
+            },
+            K_METRICS => ShardResponse::Metrics {
+                epoch: rd.u64()?,
+                text: rd.str()?,
+            },
+            K_REJECTED => ShardResponse::Rejected {
+                id: rd.u64()?,
+                reason: rd.str()?,
+            },
+            K_ERROR => ShardResponse::Error {
+                code: rd.u16()?,
+                msg: rd.str()?,
+            },
+            other => bail!("unknown response frame kind {other:#04x}"),
+        };
+        rd.finish()?;
+        Ok(resp)
+    }
+
+    /// Write one frame to a stream.
+    pub fn write_to<W: Write>(&self, w: &mut W) -> Result<()> {
+        w.write_all(&self.encode())?;
+        Ok(())
+    }
+
+    /// Read one frame from a stream (blocking).
+    pub fn read_from<R: Read>(r: &mut R) -> Result<Self> {
+        let (kind, payload) = read_frame(r)?;
+        Self::decode_payload(kind, &payload)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Xoshiro256;
+
+    fn rand_string(rng: &mut Xoshiro256, max: usize) -> String {
+        let len = rng.below(max as u64 + 1) as usize;
+        (0..len)
+            .map(|_| (b'a' + rng.below(26) as u8) as char)
+            .collect()
+    }
+
+    fn rand_job(rng: &mut Xoshiro256) -> VectorJob {
+        let len = rng.below(65) as usize;
+        VectorJob {
+            id: rng.next_u64(),
+            a: (0..len).map(|_| rng.operand8()).collect(),
+            b: rng.operand8(),
+        }
+    }
+
+    fn rand_request(rng: &mut Xoshiro256) -> ShardRequest {
+        match rng.below(7) {
+            0 => ShardRequest::Hello {
+                arch: Arch::ALL[rng.below(Arch::ALL.len() as u64) as usize],
+                n: rng.range(1, 64) as u32,
+                tenant: rand_string(rng, 12),
+            },
+            1 => ShardRequest::Submit { job: rand_job(rng) },
+            2 => ShardRequest::Flush,
+            3 => ShardRequest::Drain,
+            4 => ShardRequest::Ping {
+                nonce: rng.next_u64(),
+            },
+            5 => ShardRequest::GetMetrics,
+            _ => ShardRequest::Bye,
+        }
+    }
+
+    fn rand_response(rng: &mut Xoshiro256) -> ShardResponse {
+        match rng.below(7) {
+            0 => ShardResponse::HelloAck {
+                epoch: rng.next_u64(),
+                width: rng.range(1, 64) as u32,
+            },
+            1 => ShardResponse::Outcome {
+                epoch: rng.next_u64(),
+                id: rng.next_u64(),
+                latency_us: rng.below(1 << 30),
+                result: if rng.chance(0.5) {
+                    Ok((0..rng.below(65)).map(|_| rng.next_u64() as u32)
+                        .collect())
+                } else {
+                    Err(rand_string(rng, 40))
+                },
+            },
+            2 => ShardResponse::Drained {
+                epoch: rng.next_u64(),
+                n: rng.below(1 << 20),
+            },
+            3 => ShardResponse::Pong {
+                epoch: rng.next_u64(),
+                nonce: rng.next_u64(),
+            },
+            4 => ShardResponse::Metrics {
+                epoch: rng.next_u64(),
+                text: rand_string(rng, 120),
+            },
+            5 => ShardResponse::Rejected {
+                id: rng.next_u64(),
+                reason: rand_string(rng, 40),
+            },
+            _ => ShardResponse::Error {
+                code: rng.next_u64() as u16,
+                msg: rand_string(rng, 40),
+            },
+        }
+    }
+
+    #[test]
+    fn request_roundtrip_property() {
+        let mut rng = Xoshiro256::new(0x5EED_0001);
+        for _ in 0..2000 {
+            let req = rand_request(&mut rng);
+            let bytes = req.encode();
+            let back = ShardRequest::decode(&bytes).unwrap();
+            assert_eq!(req, back, "encode∘decode must be identity");
+        }
+    }
+
+    #[test]
+    fn response_roundtrip_property() {
+        let mut rng = Xoshiro256::new(0x5EED_0002);
+        for _ in 0..2000 {
+            let resp = rand_response(&mut rng);
+            let bytes = resp.encode();
+            let back = ShardResponse::decode(&bytes).unwrap();
+            assert_eq!(resp, back, "encode∘decode must be identity");
+        }
+    }
+
+    #[test]
+    fn stream_roundtrip_via_read_write() {
+        let mut rng = Xoshiro256::new(0x5EED_0003);
+        let reqs: Vec<ShardRequest> =
+            (0..50).map(|_| rand_request(&mut rng)).collect();
+        let mut buf = Vec::new();
+        for r in &reqs {
+            r.write_to(&mut buf).unwrap();
+        }
+        let mut cursor = std::io::Cursor::new(buf);
+        for want in &reqs {
+            let got = ShardRequest::read_from(&mut cursor).unwrap();
+            assert_eq!(&got, want);
+        }
+    }
+
+    #[test]
+    fn corrupt_frames_are_rejected_with_distinct_errors() {
+        let good = ShardRequest::Ping { nonce: 7 }.encode();
+
+        let mut bad_magic = good.clone();
+        bad_magic[0] ^= 0xFF;
+        let e = ShardRequest::decode(&bad_magic).unwrap_err();
+        assert!(format!("{e}").contains("magic"), "{e}");
+
+        let mut bad_version = good.clone();
+        bad_version[2] = 99;
+        let e = ShardRequest::decode(&bad_version).unwrap_err();
+        assert!(format!("{e}").contains("version"), "{e}");
+
+        let mut bad_kind = good.clone();
+        bad_kind[3] = 0x7F;
+        let e = ShardRequest::decode(&bad_kind).unwrap_err();
+        assert!(format!("{e}").contains("unknown request"), "{e}");
+
+        let truncated = &good[..good.len() - 2];
+        let e = ShardRequest::decode(truncated).unwrap_err();
+        assert!(format!("{e}").contains("disagrees"), "{e}");
+
+        let mut trailing = good.clone();
+        trailing.extend_from_slice(&[0, 0]);
+        let e = ShardRequest::decode(&trailing).unwrap_err();
+        assert!(format!("{e}").contains("disagrees"), "{e}");
+
+        // Oversize length field must be refused before any allocation.
+        let mut oversize = good;
+        oversize[4..8]
+            .copy_from_slice(&((MAX_FRAME as u32) + 1).to_le_bytes());
+        let e = ShardRequest::decode(&oversize).unwrap_err();
+        assert!(format!("{e}").contains("exceeds"), "{e}");
+    }
+
+    #[test]
+    fn response_frames_do_not_parse_as_requests() {
+        let frame = ShardResponse::Pong { epoch: 1, nonce: 2 }.encode();
+        let e = ShardRequest::decode(&frame).unwrap_err();
+        assert!(format!("{e}").contains("unknown request"), "{e}");
+        let frame = ShardRequest::Ping { nonce: 2 }.encode();
+        let e = ShardResponse::decode(&frame).unwrap_err();
+        assert!(format!("{e}").contains("unknown response"), "{e}");
+    }
+
+    #[test]
+    fn vector_count_cannot_exceed_payload() {
+        // Hand-build a Submit whose vector count lies about the payload:
+        // header + id + b + count=1000 with no elements behind it.
+        let mut p = Vec::new();
+        put_u64(&mut p, 1);
+        put_u16(&mut p, 2);
+        put_u32(&mut p, 1000);
+        let bytes = frame(K_SUBMIT, p);
+        let e = ShardRequest::decode(&bytes).unwrap_err();
+        assert!(format!("{e}").contains("exceeds payload"), "{e}");
+    }
+
+    /// Golden byte vectors shared with the python port
+    /// (`python/validate_wire.py` checks the same bytes) — pinning the
+    /// format across languages, not just within this build.
+    #[test]
+    fn golden_vectors_match_python_port() {
+        let req = ShardRequest::Hello {
+            arch: Arch::Nibble,
+            n: 8,
+            tenant: "t0".into(),
+        };
+        assert_eq!(
+            req.encode(),
+            hex("4e4d01010b0000000208000000020000007430")
+        );
+        let req = ShardRequest::Submit {
+            job: VectorJob {
+                id: 0x0102030405060708,
+                a: vec![1, 255, 256],
+                b: 77,
+            },
+        };
+        assert_eq!(
+            req.encode(),
+            hex(
+                "4e4d0102140000000807060504030201\
+                 4d00030000000100ff000001"
+            )
+        );
+        assert_eq!(ShardRequest::Flush.encode(), hex("4e4d010300000000"));
+        let resp = ShardResponse::Outcome {
+            epoch: 3,
+            id: 9,
+            latency_us: 1500,
+            result: Ok(vec![6, 700000]),
+        };
+        assert_eq!(
+            resp.encode(),
+            hex(
+                "4e4d018225000000030000000000000009000000000000\
+                 00dc0500000000000001020000000600000060ae0a00"
+            )
+        );
+        let resp = ShardResponse::Outcome {
+            epoch: 3,
+            id: 9,
+            latency_us: 1500,
+            result: Err("boom".into()),
+        };
+        assert_eq!(
+            resp.encode(),
+            hex(
+                "4e4d018221000000030000000000000009000000000000\
+                 00dc050000000000000004000000626f6f6d"
+            )
+        );
+        let resp = ShardResponse::Error {
+            code: 2,
+            msg: "no design".into(),
+        };
+        assert_eq!(
+            resp.encode(),
+            hex("4e4d01870f0000000200090000006e6f2064657369676e")
+        );
+    }
+
+    fn hex(s: &str) -> Vec<u8> {
+        (0..s.len())
+            .step_by(2)
+            .map(|i| u8::from_str_radix(&s[i..i + 2], 16).unwrap())
+            .collect()
+    }
+}

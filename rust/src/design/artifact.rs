@@ -1,0 +1,596 @@
+//! On-disk serialized form of a compiled design — the crash-safe warm
+//! start for shard servers.
+//!
+//! One artifact file per [`DesignKey`] (`<arch>_x<n>.design`) holding
+//! the **optimized netlist** plus the synthesis stats and a few
+//! integrity scalars. The compiled `Program` and the `SynthReport` are
+//! pure, deterministic functions of the optimized netlist, so the
+//! loader *recompiles* them and then proves bit-identity by comparing
+//! the recomputed report scalars (`f64::to_bits` exact) against the
+//! stored ones. Combined with the FNV-1a checksum over the payload,
+//! any corrupt, truncated, stale, or version-skewed file surfaces as an
+//! `Err` — which [`super::DesignStore`] downgrades to a warning plus
+//! cold re-synthesis, never a serving failure.
+//!
+//! Layout (all little-endian):
+//!
+//! ```text
+//!   magic   b"NMLD"            4 B
+//!   version u16 = 1            2 B
+//!   arch    u8  (Arch::ALL index)
+//!   n       u32 (vector width)
+//!   len     u64 (payload bytes)
+//!   fnv64   u64 (FNV-1a over payload)
+//!   payload: name, n_nets, cells, ports, OptStats, report scalars
+//! ```
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::multipliers::Arch;
+use crate::netlist::{BinKind, Cell, NetId, Netlist, Port, UnaryKind};
+use crate::sim::Program;
+use crate::synth::{report_for, OptStats};
+use crate::tech::TechLibrary;
+
+use super::{CompiledDesign, DesignKey};
+
+const MAGIC: &[u8; 4] = b"NMLD";
+const VERSION: u16 = 1;
+
+/// Artifact file for `key` inside `dir`.
+pub fn artifact_path(dir: &Path, key: DesignKey) -> PathBuf {
+    dir.join(format!("{}_x{}.design", key.arch.name(), key.n))
+}
+
+/// FNV-1a 64-bit (tiny, dependency-free, plenty for corruption
+/// detection — this is an integrity check, not an authenticity one).
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn arch_index(arch: Arch) -> u8 {
+    Arch::ALL
+        .iter()
+        .position(|&a| a == arch)
+        .expect("every Arch is in Arch::ALL") as u8
+}
+
+fn arch_from_index(i: u8) -> Result<Arch> {
+    Arch::ALL
+        .get(i as usize)
+        .copied()
+        .ok_or_else(|| anyhow!("unknown arch index {i}"))
+}
+
+// ---------------------------------------------------------------- write
+
+struct Wr {
+    buf: Vec<u8>,
+}
+
+impl Wr {
+    fn new() -> Self {
+        Self { buf: Vec::new() }
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f64_bits(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    fn net(&mut self, n: NetId) {
+        self.u32(n.0);
+    }
+
+    fn opt_net(&mut self, n: Option<NetId>) {
+        match n {
+            Some(n) => {
+                self.u8(1);
+                self.net(n);
+            }
+            None => self.u8(0),
+        }
+    }
+
+    fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    fn port(&mut self, p: &Port) {
+        self.str(&p.name);
+        self.u64(p.bits.len() as u64);
+        for &b in &p.bits {
+            self.net(b);
+        }
+    }
+
+    fn cell(&mut self, c: &Cell) {
+        match *c {
+            Cell::Const { value, out } => {
+                self.u8(0);
+                self.u8(value as u8);
+                self.net(out);
+            }
+            Cell::Unary { kind, a, out } => {
+                self.u8(1);
+                self.u8(match kind {
+                    UnaryKind::Buf => 0,
+                    UnaryKind::Not => 1,
+                });
+                self.net(a);
+                self.net(out);
+            }
+            Cell::Binary { kind, a, b, out } => {
+                self.u8(2);
+                self.u8(match kind {
+                    BinKind::And => 0,
+                    BinKind::Or => 1,
+                    BinKind::Xor => 2,
+                    BinKind::Nand => 3,
+                    BinKind::Nor => 4,
+                    BinKind::Xnor => 5,
+                });
+                self.net(a);
+                self.net(b);
+                self.net(out);
+            }
+            Cell::Mux2 { sel, a0, a1, out } => {
+                self.u8(3);
+                self.net(sel);
+                self.net(a0);
+                self.net(a1);
+                self.net(out);
+            }
+            Cell::HalfAdder { a, b, sum, carry } => {
+                self.u8(4);
+                self.net(a);
+                self.net(b);
+                self.net(sum);
+                self.net(carry);
+            }
+            Cell::FullAdder {
+                a,
+                b,
+                c,
+                sum,
+                carry,
+            } => {
+                self.u8(5);
+                self.net(a);
+                self.net(b);
+                self.net(c);
+                self.net(sum);
+                self.net(carry);
+            }
+            Cell::Dff {
+                d,
+                en,
+                clr,
+                q,
+                init,
+            } => {
+                self.u8(6);
+                self.net(d);
+                self.opt_net(en);
+                self.opt_net(clr);
+                self.net(q);
+                self.u8(init as u8);
+            }
+        }
+    }
+}
+
+// ----------------------------------------------------------------- read
+
+struct Rd<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn new(bytes: &'a [u8]) -> Self {
+        Self { bytes, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            self.pos + n <= self.bytes.len(),
+            "truncated payload: wanted {n} bytes at {}, have {}",
+            self.pos,
+            self.bytes.len() - self.pos
+        );
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64_bits(&mut self) -> Result<u64> {
+        self.u64()
+    }
+
+    fn net(&mut self) -> Result<NetId> {
+        Ok(NetId(self.u32()?))
+    }
+
+    fn opt_net(&mut self) -> Result<Option<NetId>> {
+        Ok(match self.u8()? {
+            0 => None,
+            1 => Some(self.net()?),
+            f => bail!("bad Option flag {f}"),
+        })
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let len = self.u32()? as usize;
+        let s = self.take(len)?;
+        String::from_utf8(s.to_vec())
+            .map_err(|_| anyhow!("non-UTF-8 string in artifact"))
+    }
+
+    /// Count fields are bounded by what the remaining payload could
+    /// possibly hold, so a corrupt count cannot over-allocate.
+    fn count(&mut self, elem_min: usize) -> Result<usize> {
+        let n = self.u64()? as usize;
+        ensure!(
+            n.saturating_mul(elem_min) <= self.bytes.len() - self.pos,
+            "corrupt count {n} exceeds remaining payload"
+        );
+        Ok(n)
+    }
+
+    fn port(&mut self) -> Result<Port> {
+        let name = self.str()?;
+        let n = self.count(4)?;
+        let mut bits = Vec::with_capacity(n);
+        for _ in 0..n {
+            bits.push(self.net()?);
+        }
+        Ok(Port { name, bits })
+    }
+
+    fn cell(&mut self) -> Result<Cell> {
+        Ok(match self.u8()? {
+            0 => Cell::Const {
+                value: self.u8()? != 0,
+                out: self.net()?,
+            },
+            1 => Cell::Unary {
+                kind: match self.u8()? {
+                    0 => UnaryKind::Buf,
+                    1 => UnaryKind::Not,
+                    k => bail!("bad unary kind {k}"),
+                },
+                a: self.net()?,
+                out: self.net()?,
+            },
+            2 => Cell::Binary {
+                kind: match self.u8()? {
+                    0 => BinKind::And,
+                    1 => BinKind::Or,
+                    2 => BinKind::Xor,
+                    3 => BinKind::Nand,
+                    4 => BinKind::Nor,
+                    5 => BinKind::Xnor,
+                    k => bail!("bad binary kind {k}"),
+                },
+                a: self.net()?,
+                b: self.net()?,
+                out: self.net()?,
+            },
+            3 => Cell::Mux2 {
+                sel: self.net()?,
+                a0: self.net()?,
+                a1: self.net()?,
+                out: self.net()?,
+            },
+            4 => Cell::HalfAdder {
+                a: self.net()?,
+                b: self.net()?,
+                sum: self.net()?,
+                carry: self.net()?,
+            },
+            5 => Cell::FullAdder {
+                a: self.net()?,
+                b: self.net()?,
+                c: self.net()?,
+                sum: self.net()?,
+                carry: self.net()?,
+            },
+            6 => Cell::Dff {
+                d: self.net()?,
+                en: self.opt_net()?,
+                clr: self.opt_net()?,
+                q: self.net()?,
+                init: self.u8()? != 0,
+            },
+            t => bail!("bad cell tag {t}"),
+        })
+    }
+
+    fn done(&self) -> Result<()> {
+        ensure!(
+            self.pos == self.bytes.len(),
+            "{} trailing bytes after payload",
+            self.bytes.len() - self.pos
+        );
+        Ok(())
+    }
+}
+
+// ------------------------------------------------------------ save/load
+
+/// Persist `design` (best-effort atomically: temp file + rename) into
+/// `dir`, creating it as needed. Only optimized designs (the ones
+/// carrying a report) are cacheable.
+pub fn save(dir: &Path, design: &CompiledDesign) -> Result<()> {
+    let report = design
+        .report
+        .as_ref()
+        .ok_or_else(|| anyhow!("raw designs are not cacheable"))?;
+    std::fs::create_dir_all(dir)?;
+    let nl = &design.netlist;
+    let mut w = Wr::new();
+    w.str(&nl.name);
+    w.u64(nl.n_nets as u64);
+    w.u64(nl.cells.len() as u64);
+    for c in &nl.cells {
+        w.cell(c);
+    }
+    for ports in [&nl.inputs, &nl.outputs, &nl.named] {
+        w.u64(ports.len() as u64);
+        for p in ports.iter() {
+            w.port(p);
+        }
+    }
+    w.u64(report.rewrites);
+    w.u64(report.n_cells_pre as u64);
+    w.u64(report.n_cells_post as u64);
+    w.f64_bits(report.area_um2);
+    w.f64_bits(report.timing.critical_path_ps);
+    w.f64_bits(report.gate_equiv);
+    let payload = w.buf;
+
+    let mut file = Vec::with_capacity(payload.len() + 26);
+    file.extend_from_slice(MAGIC);
+    file.extend_from_slice(&VERSION.to_le_bytes());
+    file.push(arch_index(design.key.arch));
+    file.extend_from_slice(&(design.key.n as u32).to_le_bytes());
+    file.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    file.extend_from_slice(&fnv1a64(&payload).to_le_bytes());
+    file.extend_from_slice(&payload);
+
+    let path = artifact_path(dir, design.key);
+    let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
+    std::fs::write(&tmp, &file)?;
+    std::fs::rename(&tmp, &path)?;
+    Ok(())
+}
+
+/// Load the artifact for `key` from `dir` and rebuild the full
+/// [`CompiledDesign`] (recompiling the `Program` and report — both
+/// deterministic in the netlist).
+///
+/// * `Ok(None)` — no artifact on disk (cold start).
+/// * `Ok(Some)` — warm start, proven bit-identical to a cold build of
+///   the same netlist.
+/// * `Err` — artifact exists but is corrupt/truncated/stale; the
+///   caller falls back to re-synthesis.
+pub fn load(
+    dir: &Path,
+    key: DesignKey,
+    lib: &TechLibrary,
+) -> Result<Option<CompiledDesign>> {
+    let path = artifact_path(dir, key);
+    let bytes = match std::fs::read(&path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return Ok(None)
+        }
+        Err(e) => return Err(e.into()),
+    };
+    ensure!(bytes.len() >= 27, "file too short for header");
+    ensure!(&bytes[0..4] == MAGIC, "bad magic");
+    let version = u16::from_le_bytes(bytes[4..6].try_into().unwrap());
+    ensure!(version == VERSION, "unsupported artifact version {version}");
+    let arch = arch_from_index(bytes[6])?;
+    let n = u32::from_le_bytes(bytes[7..11].try_into().unwrap()) as usize;
+    ensure!(
+        arch == key.arch && n == key.n,
+        "artifact is for {arch}x{n}, expected {key}"
+    );
+    let len =
+        u64::from_le_bytes(bytes[11..19].try_into().unwrap()) as usize;
+    let stored_sum = u64::from_le_bytes(bytes[19..27].try_into().unwrap());
+    let payload = &bytes[27..];
+    ensure!(
+        payload.len() == len,
+        "payload length {} != declared {len} (truncated?)",
+        payload.len()
+    );
+    ensure!(
+        fnv1a64(payload) == stored_sum,
+        "checksum mismatch (corrupt artifact)"
+    );
+
+    let mut r = Rd::new(payload);
+    let name = r.str()?;
+    let n_nets = r.u64()? as usize;
+    let n_cells = r.count(5)?;
+    let mut cells = Vec::with_capacity(n_cells);
+    for _ in 0..n_cells {
+        cells.push(r.cell()?);
+    }
+    let mut port_groups: [Vec<Port>; 3] = Default::default();
+    for group in port_groups.iter_mut() {
+        let n_ports = r.count(8)?;
+        for _ in 0..n_ports {
+            group.push(r.port()?);
+        }
+    }
+    let [inputs, outputs, named] = port_groups;
+    let stats = OptStats {
+        rewrites: r.u64()?,
+        cells_pre: r.u64()? as usize,
+        cells_post: r.u64()? as usize,
+    };
+    let area_bits = r.f64_bits()?;
+    let cp_bits = r.f64_bits()?;
+    let ge_bits = r.f64_bits()?;
+    r.done()?;
+
+    let netlist = Netlist {
+        name,
+        n_nets,
+        cells,
+        inputs,
+        outputs,
+        named,
+    };
+    // Recompile program + report from the netlist (deterministic), then
+    // prove the stored scalars match bit-for-bit: a stale artifact from
+    // an older generator/optimizer/library fails here instead of
+    // silently serving different products or stats.
+    let program = std::sync::Arc::new(Program::compile(&netlist)?);
+    let report = report_for(&netlist, lib, stats)?;
+    ensure!(
+        report.area_um2.to_bits() == area_bits
+            && report.timing.critical_path_ps.to_bits() == cp_bits
+            && report.gate_equiv.to_bits() == ge_bits,
+        "integrity scalars diverge from recomputed report (stale artifact)"
+    );
+    Ok(Some(CompiledDesign {
+        key,
+        netlist,
+        program,
+        report: Some(report),
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "nibblemul-artifact-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn roundtrip_is_bit_identical() {
+        let dir = tmp_dir("rt");
+        let lib = TechLibrary::hpc28();
+        let cold = CompiledDesign::build(Arch::Nibble, 4, &lib).unwrap();
+        save(&dir, &cold).unwrap();
+        let warm = load(&dir, cold.key, &lib).unwrap().expect("present");
+        assert_eq!(warm.netlist, cold.netlist, "structural equality");
+        let (wr, cr) = (
+            warm.report.as_ref().unwrap(),
+            cold.report.as_ref().unwrap(),
+        );
+        assert_eq!(wr.area_um2.to_bits(), cr.area_um2.to_bits());
+        assert_eq!(
+            wr.timing.critical_path_ps.to_bits(),
+            cr.timing.critical_path_ps.to_bits()
+        );
+        assert_eq!(wr.counts, cr.counts);
+        assert_eq!(warm.program.n_nets(), cold.program.n_nets());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_file_is_none_not_err() {
+        let dir = tmp_dir("missing");
+        let lib = TechLibrary::hpc28();
+        let key = DesignKey {
+            arch: Arch::Booth,
+            n: 8,
+        };
+        assert!(load(&dir, key, &lib).unwrap().is_none());
+    }
+
+    #[test]
+    fn corruption_truncation_and_key_mismatch_all_err() {
+        let dir = tmp_dir("corrupt");
+        let lib = TechLibrary::hpc28();
+        let cold = CompiledDesign::build(Arch::Nibble, 4, &lib).unwrap();
+        save(&dir, &cold).unwrap();
+        let path = artifact_path(&dir, cold.key);
+        let good = std::fs::read(&path).unwrap();
+
+        // Flip one payload byte: checksum catches it.
+        let mut bad = good.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0xFF;
+        std::fs::write(&path, &bad).unwrap();
+        let err = load(&dir, cold.key, &lib).unwrap_err();
+        assert!(format!("{err:#}").contains("checksum"), "{err:#}");
+
+        // Truncate: declared length no longer matches.
+        std::fs::write(&path, &good[..good.len() - 9]).unwrap();
+        let err = load(&dir, cold.key, &lib).unwrap_err();
+        assert!(format!("{err:#}").contains("truncated"), "{err:#}");
+
+        // Wrong magic.
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        std::fs::write(&path, &bad).unwrap();
+        let err = load(&dir, cold.key, &lib).unwrap_err();
+        assert!(format!("{err:#}").contains("magic"), "{err:#}");
+
+        // A file for a different key at this key's path (stale rename).
+        std::fs::write(&path, &good).unwrap();
+        let err = load(
+            &dir,
+            DesignKey {
+                arch: Arch::Nibble,
+                n: 8,
+            },
+            &lib,
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("expected"), "{err:#}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn raw_designs_refuse_to_cache() {
+        let dir = tmp_dir("raw");
+        let raw = CompiledDesign::raw(Arch::Nibble, 4).unwrap();
+        assert!(save(&dir, &raw).is_err());
+    }
+}

@@ -29,7 +29,10 @@
 //! [`crate::synth::report_for`] on the cached netlist (cheap: a linear
 //! STA + area scan, no re-optimization).
 
+pub mod artifact;
+
 use std::collections::HashMap;
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
@@ -135,7 +138,16 @@ pub struct DesignStore {
     lib: TechLibrary,
     builds: AtomicU64,
     raw_builds: AtomicU64,
+    /// On-disk artifact cache ([`artifact`]): optimized designs warm-
+    /// start from here instead of re-synthesizing, and new builds are
+    /// persisted back (best-effort). `None` disables persistence.
+    cache_dir: Option<PathBuf>,
+    warm_loads: AtomicU64,
 }
+
+/// Backing slot for [`DesignStore::global`] /
+/// [`DesignStore::init_global_cache`].
+static GLOBAL: OnceLock<DesignStore> = OnceLock::new();
 
 impl DesignStore {
     /// An empty store over the default library. Prefer
@@ -152,14 +164,40 @@ impl DesignStore {
             lib,
             builds: AtomicU64::new(0),
             raw_builds: AtomicU64::new(0),
+            cache_dir: None,
+            warm_loads: AtomicU64::new(0),
         }
+    }
+
+    /// An empty store backed by an on-disk artifact cache at `dir`
+    /// (created on first save). Optimized designs load from disk when a
+    /// valid artifact exists — checksum-verified and proven
+    /// bit-identical to a cold build — and corrupt/stale artifacts fall
+    /// back to re-synthesis with a warning on stderr.
+    pub fn with_cache_dir(dir: impl Into<PathBuf>) -> Self {
+        let mut store = Self::new();
+        store.cache_dir = Some(dir.into());
+        store
+    }
+
+    /// The artifact-cache directory, if persistence is enabled.
+    pub fn cache_dir(&self) -> Option<&PathBuf> {
+        self.cache_dir.as_ref()
     }
 
     /// The process-wide store shared by sweep, harness, coordinator,
     /// bench and CLI.
     pub fn global() -> &'static DesignStore {
-        static GLOBAL: OnceLock<DesignStore> = OnceLock::new();
         GLOBAL.get_or_init(DesignStore::new)
+    }
+
+    /// Enable on-disk artifact caching on the process-wide store (crash-
+    /// safe warm start for long-lived servers). Only effective before
+    /// the first [`DesignStore::global`] consumer touches the store;
+    /// returns `false` — and changes nothing — if the global store was
+    /// already initialized without a cache.
+    pub fn init_global_cache(dir: impl Into<PathBuf>) -> bool {
+        GLOBAL.set(DesignStore::with_cache_dir(dir)).is_ok()
     }
 
     /// Shared slot-fetch: one build per key per flavor map, built outside
@@ -169,7 +207,6 @@ impl DesignStore {
     fn fetch(
         &self,
         slots: &Mutex<HashMap<DesignKey, Slot>>,
-        builds: &AtomicU64,
         key: DesignKey,
         flavor: &str,
         build: impl FnOnce() -> Result<CompiledDesign>,
@@ -179,7 +216,6 @@ impl DesignStore {
             Arc::clone(slots.entry(key).or_default())
         };
         let result = slot.get_or_init(|| {
-            builds.fetch_add(1, Ordering::Relaxed);
             build().map(Arc::new).map_err(|e| format!("{e:#}"))
         });
         match result {
@@ -190,20 +226,49 @@ impl DesignStore {
 
     /// Fetch the compiled artifact for `(arch, n)`, building it if this
     /// is the first request. Width validation errors (outside `1..=64`)
-    /// are reported here as `anyhow` errors.
+    /// are reported here as `anyhow` errors. With a cache directory
+    /// configured, first requests warm-start from a valid on-disk
+    /// artifact (counted in [`DesignStore::warm_loads`], not
+    /// [`DesignStore::builds`]); unusable artifacts warn and fall back
+    /// to a cold build, which is then persisted back (best-effort).
     pub fn get(&self, arch: Arch, n: usize) -> Result<Arc<CompiledDesign>> {
         let key = DesignKey { arch, n };
-        self.fetch(&self.slots, &self.builds, key, "", || {
-            CompiledDesign::build(arch, n, &self.lib)
+        self.fetch(&self.slots, key, "", || {
+            if let Some(dir) = &self.cache_dir {
+                match artifact::load(dir, key, &self.lib) {
+                    Ok(Some(design)) => {
+                        self.warm_loads.fetch_add(1, Ordering::Relaxed);
+                        return Ok(design);
+                    }
+                    Ok(None) => {}
+                    Err(e) => eprintln!(
+                        "warning: design artifact for {key} unusable \
+                         ({e:#}); re-synthesizing"
+                    ),
+                }
+            }
+            self.builds.fetch_add(1, Ordering::Relaxed);
+            let built = CompiledDesign::build(arch, n, &self.lib)?;
+            if let Some(dir) = &self.cache_dir {
+                if let Err(e) = artifact::save(dir, &built) {
+                    eprintln!(
+                        "warning: could not persist design artifact for \
+                         {key}: {e:#}"
+                    );
+                }
+            }
+            Ok(built)
         })
     }
 
     /// Fetch the **raw** (unoptimized, named-signal-preserving) compiled
     /// artifact for `(arch, n)`, building it once per process — the VCD
     /// waveform path ([`crate::report::fig3_run`], `examples/waveforms`).
+    /// Raw bundles are never persisted (debug-only, report-less).
     pub fn get_raw(&self, arch: Arch, n: usize) -> Result<Arc<CompiledDesign>> {
         let key = DesignKey { arch, n };
-        self.fetch(&self.raw_slots, &self.raw_builds, key, "raw ", || {
+        self.fetch(&self.raw_slots, key, "raw ", || {
+            self.raw_builds.fetch_add(1, Ordering::Relaxed);
             CompiledDesign::raw(arch, n)
         })
     }
@@ -217,6 +282,12 @@ impl DesignStore {
     /// Number of raw (waveform-flavor) designs built so far.
     pub fn raw_builds(&self) -> u64 {
         self.raw_builds.load(Ordering::Relaxed)
+    }
+
+    /// Number of designs warm-started from the on-disk artifact cache
+    /// (disjoint from [`DesignStore::builds`] — the warm-start probe).
+    pub fn warm_loads(&self) -> u64 {
+        self.warm_loads.load(Ordering::Relaxed)
     }
 
     /// Number of cached (or in-flight) design keys, both flavors.
@@ -306,6 +377,61 @@ mod tests {
             "flavors never alias: raw has more cells"
         );
         assert!(opt.netlist.n_cells() <= r1.netlist.n_cells());
+    }
+
+    #[test]
+    fn warm_start_skips_synthesis_and_matches_cold() {
+        let dir = std::env::temp_dir().join(format!(
+            "nibblemul-store-warm-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cold_store = DesignStore::with_cache_dir(&dir);
+        let cold = cold_store.get(Arch::Nibble, 4).unwrap();
+        assert_eq!(cold_store.builds(), 1);
+        assert_eq!(cold_store.warm_loads(), 0);
+        // A new store over the same directory: no synthesis at all.
+        let warm_store = DesignStore::with_cache_dir(&dir);
+        let warm = warm_store.get(Arch::Nibble, 4).unwrap();
+        assert_eq!(warm_store.builds(), 0, "no cold build on warm start");
+        assert_eq!(warm_store.warm_loads(), 1);
+        assert_eq!(warm.netlist, cold.netlist, "bit-identical netlist");
+        assert_eq!(
+            warm.report.as_ref().unwrap().area_um2.to_bits(),
+            cold.report.as_ref().unwrap().area_um2.to_bits()
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_artifact_falls_back_to_resynthesis() {
+        let dir = std::env::temp_dir().join(format!(
+            "nibblemul-store-corrupt-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = DesignStore::with_cache_dir(&dir);
+        store.get(Arch::ShiftAdd, 4).unwrap();
+        let key = DesignKey {
+            arch: Arch::ShiftAdd,
+            n: 4,
+        };
+        let path = artifact::artifact_path(&dir, key);
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        // Fresh store: the corrupt file must warn + rebuild, not error.
+        let store2 = DesignStore::with_cache_dir(&dir);
+        let d = store2.get(Arch::ShiftAdd, 4).unwrap();
+        assert_eq!(store2.warm_loads(), 0, "corrupt file never warm-loads");
+        assert_eq!(store2.builds(), 1, "fell back to a cold build");
+        assert!(d.report.is_some());
+        // The rebuild re-persisted a good artifact.
+        let store3 = DesignStore::with_cache_dir(&dir);
+        store3.get(Arch::ShiftAdd, 4).unwrap();
+        assert_eq!(store3.warm_loads(), 1, "cache healed by the rebuild");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -15,13 +15,17 @@
 //!   cycle/energy introspection.
 //! * [`CoordinatorExec`] — the serving path: jobs submitted to a running
 //!   [`Coordinator`] (batching, bounded queue, worker pool, metrics).
+//! * [`RouterExec`]      — the sharded serving path: jobs go over the
+//!   wire protocol through a [`Router`] to shard servers, with retry,
+//!   rerouting and admission control in the loop.
 
-use anyhow::{ensure, Result};
+use anyhow::{bail, ensure, Result};
 
 use crate::coordinator::{
     Backend, Batch, Batcher, BatcherConfig, CoalesceStats, Coordinator,
-    JobResult, SessionConfig,
+    JobResult, Router, SessionConfig,
 };
+use crate::design::DesignKey;
 use crate::workload::VectorJob;
 
 /// A job-stream execution engine.
@@ -212,6 +216,93 @@ impl JobExecutor for CoordinatorExec<'_> {
     }
 }
 
+/// Sharded serving executor: jobs travel over the wire protocol through
+/// a [`Router`] to shard servers. Same bit-exact results as the local
+/// substrates; what changes is the failure model — shard deaths,
+/// retries and reroutes happen inside [`Router::submit`]/
+/// [`Router::drain`], and any job whose attempts are exhausted surfaces
+/// here as an error naming the failed ids.
+///
+/// Router job ids must be unique for the router's whole lifetime
+/// (duplicate-delivery protection), while [`JobExecutor::run`] takes
+/// dense `0..len` ids per call — so each `run` remaps ids onto a fresh
+/// base offset and maps them back before returning.
+pub struct RouterExec<'a> {
+    router: &'a mut Router,
+    key: DesignKey,
+    tenant: String,
+    next_id: u64,
+}
+
+impl<'a> RouterExec<'a> {
+    pub fn new(
+        router: &'a mut Router,
+        key: DesignKey,
+        tenant: impl Into<String>,
+    ) -> Self {
+        Self {
+            router,
+            key,
+            tenant: tenant.into(),
+            next_id: 0,
+        }
+    }
+}
+
+impl JobExecutor for RouterExec<'_> {
+    fn run(&mut self, jobs: &[VectorJob]) -> Result<Vec<JobResult>> {
+        ensure_dense_ids(jobs)?;
+        let base = self.next_id;
+        self.next_id += jobs.len() as u64;
+        for job in jobs {
+            let mut remapped = job.clone();
+            remapped.id = base + job.id;
+            self.router.submit(self.key, &self.tenant, remapped)?;
+        }
+        let mut results = Vec::with_capacity(jobs.len());
+        let mut failures = Vec::new();
+        for out in self.router.drain()? {
+            // Outcomes from earlier runs (already reported) are gone by
+            // now; everything drained here belongs to this id window.
+            if out.id < base {
+                continue;
+            }
+            match out.result {
+                Ok(products) => results.push(JobResult {
+                    id: out.id - base,
+                    products,
+                }),
+                Err(e) => failures.push(format!(
+                    "job {} (shard {}, {} attempts): {e}",
+                    out.id - base,
+                    out.shard,
+                    out.attempts
+                )),
+            }
+        }
+        if !failures.is_empty() {
+            bail!(
+                "{} of {} jobs failed after retries: {}",
+                failures.len(),
+                jobs.len(),
+                failures.join("; ")
+            );
+        }
+        ensure!(
+            results.len() == jobs.len(),
+            "router drained {} results for {} jobs",
+            results.len(),
+            jobs.len()
+        );
+        results.sort_by_key(|r| r.id);
+        Ok(results)
+    }
+
+    fn name(&self) -> String {
+        format!("router:{}", self.key)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -294,6 +385,51 @@ mod tests {
             assert_eq!(w.products, g.products);
         }
         coord.shutdown();
+    }
+
+    #[test]
+    fn router_exec_matches_oracle_over_loopback() {
+        use crate::coordinator::{
+            exact_factory, loopback_addr, Router, RouterConfig,
+            ShardServer, ShardServerConfig, ShardSpec,
+        };
+        use crate::multipliers::Arch;
+
+        let key = DesignKey {
+            arch: Arch::Nibble,
+            n: 16,
+        };
+        let addr = loopback_addr("exec");
+        let server = ShardServer::spawn(
+            addr.clone(),
+            exact_factory(2),
+            ShardServerConfig::default(),
+        )
+        .unwrap();
+        let mut router = Router::connect(
+            vec![ShardSpec { addr, key }],
+            RouterConfig::default(),
+        )
+        .unwrap();
+
+        let jobs = jobs();
+        let want = exact_exec().run(&jobs).unwrap();
+        let mut exec = RouterExec::new(&mut router, key, "tenant-a");
+        assert_eq!(exec.name(), "router:nibblex16");
+        let got = exec.run(&jobs).unwrap();
+        assert_eq!(got.len(), want.len());
+        for (w, g) in want.iter().zip(&got) {
+            assert_eq!(w.id, g.id);
+            assert_eq!(w.products, g.products);
+        }
+        // A second run through the same executor remaps onto a fresh id
+        // window, so the router never sees a duplicate id.
+        let again = exec.run(&jobs).unwrap();
+        for (w, g) in want.iter().zip(&again) {
+            assert_eq!(w.products, g.products);
+        }
+        router.shutdown();
+        server.kill();
     }
 
     #[test]

@@ -39,6 +39,7 @@ pub use conv::{
 };
 pub use exec::{
     exact_exec, ClosureExec, CoordinatorExec, FabricExec, JobExecutor,
+    RouterExec,
 };
 pub use gemm::{matmul_i32, GemmPlan, GemmSpec, JobTarget};
 pub use schedule::{

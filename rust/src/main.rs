@@ -32,15 +32,17 @@ use anyhow::{anyhow, Result};
 use nibblemul::bench::Bencher;
 use nibblemul::cli::Args;
 use nibblemul::coordinator::{
-    Backend, BatcherConfig, Coordinator, CoordinatorConfig, JobOutcome,
-    SessionConfig, Sim64Backend, SimBackend,
+    exact_factory, loopback_addr, sim_factory, Backend, BatcherConfig,
+    Coordinator, CoordinatorConfig, JobOutcome, Router, RouterConfig,
+    SessionConfig, ShardAddr, ShardServer, ShardServerConfig, ShardSpec,
+    Sim64Backend, SimBackend,
 };
-use nibblemul::design::DesignStore;
+use nibblemul::design::{DesignKey, DesignStore};
 use nibblemul::fabric::{sweep_paper_set, sweep_paper_set_seq, VectorUnit};
 use nibblemul::kernels::{
     conv2d_i32, im2col, matmul_i32, min_fabric_ops, to_chw,
     weights_to_gemm, Conv2dSpec, CoordinatorExec, FabricExec, GemmPlan,
-    GemmSpec, Order,
+    GemmSpec, Order, RouterExec,
 };
 use nibblemul::model::quant::QuantMlp;
 use nibblemul::multipliers::Arch;
@@ -110,6 +112,32 @@ COMMANDS
                                           --window-elems elements and an age
                                           window of --window-age ticks, with
                                           per-job submit-time latency)
+  serve --shard-server --listen ADDR [--workers 2] [--exact|--batched]
+          [--arch A --width N] [--label NAME] [--artifact-cache DIR]
+                                          one shard server speaking the
+                                          length-prefixed wire protocol (v1,
+                                          magic 0x4D4E) on a unix socket path
+                                          (contains '/' or ends .sock) or
+                                          host:port; --arch/--width pin the
+                                          served design key; --artifact-cache
+                                          enables crash-safe warm start from
+                                          on-disk compiled-design artifacts
+  serve --router --shards <N|addr,...> [--jobs 256] [--tenants 2]
+          [--retries 3] [--timeout-ms 5000] [--chaos-kill] [--chaos-restart]
+          [--gemm [--m 24 --k 12 --n 12]] [--expect-clean]
+          [--exact|--batched] [--arch nibble] [--width 16]
+                                          shard a job stream across shard
+                                          servers (integer N: in-process
+                                          loopback cluster) with health checks,
+                                          deadlines, bounded retry + reroute,
+                                          per-tenant admission control;
+                                          --chaos-kill hard-kills shard 0
+                                          mid-stream (--chaos-restart brings it
+                                          back on the same socket); --gemm
+                                          streams an int8 GEMM through the
+                                          tier and checks the i32 oracle;
+                                          --expect-clean fails unless every
+                                          job succeeded despite chaos
   mlp     [--backend pjrt|sim|exact] [--arch nibble] [--limit 64]
                                           INT8 inference end-to-end (sim
                                           backend runs batched whole-layer
@@ -261,6 +289,12 @@ fn fabric_backends(
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    if args.has("shard-server") {
+        return cmd_serve_shard_server(args);
+    }
+    if args.has("router") {
+        return cmd_serve_router(args);
+    }
     let arch = parse_arch(args, Arch::Nibble)?;
     let width = args.get_usize("width", 16)?;
     let workers = args.get_usize("workers", 4)?;
@@ -388,6 +422,294 @@ fn cmd_serve_stream(
         jobs.len() as f64 / elapsed,
         elements as f64 / elapsed
     );
+    Ok(())
+}
+
+/// Enable the on-disk artifact cache on the global design store if
+/// `--artifact-cache DIR` was passed (crash-safe warm start).
+fn maybe_enable_artifact_cache(args: &Args) -> Result<()> {
+    if let Some(dir) = args.get("artifact-cache") {
+        if DesignStore::init_global_cache(dir) {
+            println!("artifact cache: {dir} (warm start enabled)");
+        } else {
+            eprintln!(
+                "warning: design store already initialized — \
+                 --artifact-cache {dir} ignored"
+            );
+        }
+    }
+    Ok(())
+}
+
+/// The backend factory shared by `serve --shard-server` and the
+/// in-process cluster of `serve --router --shards N`.
+fn shard_factory(
+    args: &Args,
+    workers: usize,
+) -> Result<nibblemul::coordinator::BackendFactory> {
+    anyhow::ensure!(workers >= 1, "--workers must be >= 1");
+    Ok(if args.has("exact") {
+        exact_factory(workers)
+    } else {
+        sim_factory(workers, args.has("batched"))
+    })
+}
+
+/// `serve --shard-server --listen ADDR`: one shard server speaking the
+/// length-prefixed wire protocol; every accepted connection gets its own
+/// coordinator session over a fresh worker pool. Runs until killed.
+fn cmd_serve_shard_server(args: &Args) -> Result<()> {
+    let listen = args
+        .get("listen")
+        .ok_or_else(|| anyhow!("--shard-server requires --listen ADDR"))?;
+    let addr = ShardAddr::parse(listen);
+    let workers = args.get_usize("workers", 2)?;
+    maybe_enable_artifact_cache(args)?;
+    // Pinning --arch/--width restricts the server to that one design
+    // key; without them, any (arch, width) handshake is served.
+    let keys = if args.get("arch").is_some() || args.get("width").is_some()
+    {
+        Some(vec![DesignKey {
+            arch: parse_arch(args, Arch::Nibble)?,
+            n: args.get_usize("width", 16)?,
+        }])
+    } else {
+        None
+    };
+    let cfg = ShardServerConfig {
+        queue_depth: args.get_usize("queue-depth", workers * 4)?,
+        max_open: parse_max_open(args)?,
+        label: args.get_or("label", "shard"),
+        keys,
+        ..ShardServerConfig::default()
+    };
+    let label = cfg.label.clone();
+    let server =
+        ShardServer::spawn(addr, shard_factory(args, workers)?, cfg)?;
+    println!(
+        "shard server '{label}' listening on {} ({} workers per \
+         connection, {})",
+        server.addr(),
+        workers,
+        if args.has("exact") {
+            "exact backends"
+        } else if args.has("batched") {
+            "sim64 backends"
+        } else {
+            "sim backends"
+        }
+    );
+    println!("wire protocol v1 (magic 0x4D4E); ctrl-c to stop");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+/// `serve --router --shards <N|addr,...>`: shard a broadcast job stream
+/// across shard servers with retry/reroute/admission control. Integer
+/// `--shards N` spawns an in-process loopback cluster over unix
+/// sockets; a comma-separated address list routes to external servers.
+/// `--chaos-kill` hard-kills one in-process shard mid-stream (and
+/// `--chaos-restart` restarts it) to demonstrate containment.
+fn cmd_serve_router(args: &Args) -> Result<()> {
+    let shards_flag = args
+        .get("shards")
+        .ok_or_else(|| anyhow!("--router requires --shards <N|addr,...>"))?
+        .to_string();
+    let arch = parse_arch(args, Arch::Nibble)?;
+    let width = args.get_usize("width", 16)?;
+    let workers = args.get_usize("workers", 2)?;
+    let n_jobs = args.get_usize("jobs", 256)?;
+    let tenants = args.get_usize("tenants", 2)?.max(1);
+    let seed = args.get_u64("seed", 7)?;
+    let chaos_kill = args.has("chaos-kill");
+    let chaos_restart = args.has("chaos-restart");
+    let key = DesignKey { arch, n: width };
+    maybe_enable_artifact_cache(args)?;
+
+    // In-process loopback cluster, or external shard addresses.
+    let mut servers: Vec<Option<ShardServer>> = Vec::new();
+    let specs: Vec<ShardSpec> = if let Ok(n) = shards_flag.parse::<usize>()
+    {
+        anyhow::ensure!(n >= 1, "--shards must be >= 1");
+        let factory = shard_factory(args, workers)?;
+        (0..n)
+            .map(|i| -> Result<ShardSpec> {
+                let addr = loopback_addr("serve");
+                let server = ShardServer::spawn(
+                    addr.clone(),
+                    factory.clone(),
+                    ShardServerConfig {
+                        label: format!("shard{i}"),
+                        ..ShardServerConfig::default()
+                    },
+                )?;
+                servers.push(Some(server));
+                Ok(ShardSpec { addr, key })
+            })
+            .collect::<Result<_>>()?
+    } else {
+        shards_flag
+            .split(',')
+            .map(|a| ShardSpec {
+                addr: ShardAddr::parse(a.trim()),
+                key,
+            })
+            .collect()
+    };
+    anyhow::ensure!(
+        !chaos_kill || !servers.is_empty(),
+        "--chaos-kill needs an in-process cluster (--shards N)"
+    );
+    println!(
+        "router: {} shards for {key}, {n_jobs} jobs across {tenants} \
+         tenants{}",
+        specs.len(),
+        if chaos_kill { " (chaos: kill shard 0 mid-stream)" } else { "" }
+    );
+
+    let cfg = RouterConfig {
+        request_timeout: std::time::Duration::from_millis(
+            args.get_u64("timeout-ms", 5000)?,
+        ),
+        max_attempts: args.get_u64("retries", 3)?.max(1) as u32,
+        ..RouterConfig::default()
+    };
+    let mut router = Router::connect(specs, cfg)?;
+
+    if args.has("gemm") {
+        // Int8 GEMM lowered onto the sharded tier: the same
+        // weight-stationary job stream as `nibblemul gemm`, but
+        // submitted over the wire through the router, with an optional
+        // shard kill landing mid-stream.
+        let m = args.get_usize("m", 24)?;
+        let k = args.get_usize("k", 12)?;
+        let n = args.get_usize("n", 12)?;
+        let values = args.get_usize("values", 32)?;
+        check_gemm_flags(m, k, n, values)?;
+        let spec = GemmSpec::new(m, k, n);
+        println!(
+            "router gemm: {spec} ({} products) over {} shards",
+            spec.products(),
+            router.shard_up().len()
+        );
+        let (a, b) = gemm_operands(m, k, n, values, seed);
+        let want = matmul_i32(&a, &b, spec);
+        let plan = GemmPlan::new(spec, Order::WeightStationary);
+        let victim = if chaos_kill { servers[0].take() } else { None };
+        let sw = Stopwatch::start();
+        let c = std::thread::scope(|s| {
+            if let Some(victim) = victim {
+                s.spawn(move || {
+                    std::thread::sleep(
+                        std::time::Duration::from_millis(40),
+                    );
+                    println!("chaos: killing shard 0 mid-GEMM");
+                    victim.kill();
+                });
+            }
+            let mut exec = RouterExec::new(&mut router, key, "gemm");
+            plan.execute(&a, &b, &mut exec)
+        })?;
+        let elapsed = sw.elapsed_secs();
+        anyhow::ensure!(
+            c.iter().zip(&want).all(|(&g, &w)| g == w as i64),
+            "sharded GEMM diverged from the i32 oracle"
+        );
+        println!(
+            "verified bit-exact against the i32 oracle (zero loss)"
+        );
+        println!("{}", router.scrape());
+        println!(
+            "{:.0} products/s (wall)",
+            spec.products() as f64 / elapsed
+        );
+        router.shutdown();
+        for server in servers.into_iter().flatten() {
+            server.kill();
+        }
+        return Ok(());
+    }
+
+    let jobs = broadcast_jobs(n_jobs, 1, width * 2, seed);
+    let sw = Stopwatch::start();
+    for (i, job) in jobs.iter().enumerate() {
+        if chaos_kill && i == n_jobs / 2 {
+            if let Some(victim) = servers[0].take() {
+                let addr = victim.addr().clone();
+                println!("chaos: killing shard 0 at job {i}");
+                victim.kill();
+                if chaos_restart {
+                    // Rebinding the same socket gives the router's
+                    // backoff reconnect a healthy shard with a fresh
+                    // epoch; stale frames die at the epoch gate.
+                    servers[0] = Some(ShardServer::spawn(
+                        addr,
+                        shard_factory(args, workers)?,
+                        ShardServerConfig {
+                            label: "shard0-restarted".to_string(),
+                            ..ShardServerConfig::default()
+                        },
+                    )?);
+                    println!(
+                        "chaos: shard 0 restarted on the same socket"
+                    );
+                }
+            }
+        }
+        let tenant = format!("tenant-{}", i % tenants);
+        router.submit(key, &tenant, job.clone())?;
+    }
+    let outcomes = router.drain()?;
+    let elapsed = sw.elapsed_secs();
+    anyhow::ensure!(
+        outcomes.len() == jobs.len(),
+        "router settled {} outcomes for {} jobs",
+        outcomes.len(),
+        jobs.len()
+    );
+    let mut sorted = outcomes;
+    sorted.sort_by_key(|o| o.id);
+    let mut correct = 0usize;
+    let mut failed = 0usize;
+    let mut rerouted = 0usize;
+    for (job, out) in jobs.iter().zip(&sorted) {
+        if out.attempts > 1 {
+            rerouted += 1;
+        }
+        match &out.result {
+            Ok(products) if products == &job.expected() => correct += 1,
+            Ok(_) => {}
+            Err(_) => failed += 1,
+        }
+    }
+    println!("{}", router.scrape());
+    println!(
+        "correct {correct}/{} ({failed} failed, {rerouted} rerouted), \
+         {:.0} jobs/s (wall)",
+        jobs.len(),
+        jobs.len() as f64 / elapsed
+    );
+    router.shutdown();
+    for server in servers.into_iter().flatten() {
+        server.kill();
+    }
+    // Chaos normally tolerates failures (a killed shard with no
+    // survivor to reroute to legitimately fails its jobs);
+    // --expect-clean demands zero loss anyway — the CI smoke uses it
+    // with >= 2 shards, where containment must reroute everything.
+    if args.has("expect-clean") {
+        anyhow::ensure!(
+            failed == 0 && correct == jobs.len(),
+            "--expect-clean: {correct}/{} correct, {failed} failed",
+            jobs.len()
+        );
+    } else {
+        anyhow::ensure!(
+            failed == 0 || chaos_kill,
+            "{failed} jobs failed without chaos injection"
+        );
+    }
     Ok(())
 }
 

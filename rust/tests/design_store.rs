@@ -7,10 +7,24 @@
 use std::sync::Arc;
 
 use nibblemul::coordinator::{Sim64Backend, SimBackend};
-use nibblemul::design::{CompiledDesign, DesignStore};
+use nibblemul::design::{artifact, CompiledDesign, DesignKey, DesignStore};
 use nibblemul::fabric::{evaluate_arch, VectorUnit};
 use nibblemul::multipliers::Arch;
 use nibblemul::tech::TechLibrary;
+
+/// A unique scratch directory for artifact-cache tests.
+fn scratch_dir(tag: &str) -> std::path::PathBuf {
+    static NEXT: std::sync::atomic::AtomicU64 =
+        std::sync::atomic::AtomicU64::new(0);
+    let dir = std::env::temp_dir().join(format!(
+        "nibblemul-cache-{}-{}-{}",
+        tag,
+        std::process::id(),
+        NEXT.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
 
 #[test]
 fn all_consumers_share_one_artifact_per_design_point() {
@@ -74,6 +88,84 @@ fn out_of_range_widths_error_through_every_user_path() {
         assert!(SimBackend::new(Arch::Nibble, bad).is_err());
         assert!(Sim64Backend::new(Arch::Nibble, bad).is_err());
     }
+}
+
+#[test]
+fn warm_start_from_disk_is_bit_identical_to_cold_synthesis() {
+    let dir = scratch_dir("warm");
+    let key = DesignKey {
+        arch: Arch::Nibble,
+        n: 4,
+    };
+
+    // Cold process-equivalent: build, persisting the artifact.
+    let cold = DesignStore::with_cache_dir(&dir);
+    let d1 = cold.get(key.arch, key.n).unwrap();
+    assert_eq!((cold.builds(), cold.warm_loads()), (1, 0));
+    assert!(artifact::artifact_path(&dir, key).exists());
+
+    // Warm process-equivalent: loads from disk, zero synthesis.
+    let warm = DesignStore::with_cache_dir(&dir);
+    let d2 = warm.get(key.arch, key.n).unwrap();
+    assert_eq!((warm.builds(), warm.warm_loads()), (0, 1));
+
+    // Bit-identity: same netlist structure, same report scalars down to
+    // the f64 bit pattern, same simulated behavior.
+    assert_eq!(d1.netlist, d2.netlist);
+    let (r1, r2) = (
+        d1.report.as_ref().unwrap(),
+        d2.report.as_ref().unwrap(),
+    );
+    assert_eq!(r1.area_um2.to_bits(), r2.area_um2.to_bits());
+    assert_eq!(
+        r1.timing.critical_path_ps.to_bits(),
+        r2.timing.critical_path_ps.to_bits()
+    );
+    assert_eq!(r1.gate_equiv.to_bits(), r2.gate_equiv.to_bits());
+    let unit = VectorUnit::from_design(Arc::clone(&d2));
+    let mut sim = unit.simulator().unwrap();
+    let res = unit.run_op(&mut sim, &[3, 5, 7, 9], 11).unwrap();
+    assert_eq!(res.products, vec![33, 55, 77, 99]);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupt_or_truncated_artifacts_fall_back_to_resynthesis() {
+    let dir = scratch_dir("corrupt");
+    let key = DesignKey {
+        arch: Arch::Nibble,
+        n: 4,
+    };
+    let cold = DesignStore::with_cache_dir(&dir);
+    cold.get(key.arch, key.n).unwrap();
+    let path = artifact::artifact_path(&dir, key);
+
+    // Flip one payload byte: checksum rejects, store re-synthesizes
+    // (and heals the cache with a fresh artifact).
+    let mut bytes = std::fs::read(&path).unwrap();
+    let last = bytes.len() - 1;
+    bytes[last] ^= 0xFF;
+    std::fs::write(&path, &bytes).unwrap();
+    let s2 = DesignStore::with_cache_dir(&dir);
+    let d2 = s2.get(key.arch, key.n).unwrap();
+    assert_eq!((s2.builds(), s2.warm_loads()), (1, 0));
+    assert_eq!(d2.netlist.n_cells() > 0, true);
+
+    // Truncation: same fallback.
+    let healed = std::fs::read(&path).unwrap();
+    std::fs::write(&path, &healed[..healed.len() / 2]).unwrap();
+    let s3 = DesignStore::with_cache_dir(&dir);
+    let d3 = s3.get(key.arch, key.n).unwrap();
+    assert_eq!((s3.builds(), s3.warm_loads()), (1, 0));
+    assert_eq!(d2.netlist, d3.netlist);
+
+    // The re-save healed the cache again: next store warm-starts.
+    let s4 = DesignStore::with_cache_dir(&dir);
+    s4.get(key.arch, key.n).unwrap();
+    assert_eq!((s4.builds(), s4.warm_loads()), (0, 1));
+
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]

@@ -1,0 +1,270 @@
+//! Chaos suite for the sharded serving tier: shard servers speaking the
+//! length-prefixed wire protocol over loopback unix sockets, a router
+//! with retry/reroute/admission in front, and faults injected
+//! mid-stream. The containment contract under test:
+//!
+//! * every submitted job resolves to EXACTLY one outcome — no loss, no
+//!   duplicates — even when a shard is hard-killed with jobs in flight;
+//! * a shard death affects only the jobs it held (survivors keep
+//!   serving, rerouted jobs land on them);
+//! * a restarted shard rejoins on the same socket with a fresh epoch
+//!   and serves bit-identical results.
+
+use std::collections::HashSet;
+use std::time::Duration;
+
+use nibblemul::coordinator::{
+    exact_factory, loopback_addr, sim_factory, Router, RouterConfig,
+    ShardServer, ShardServerConfig, ShardSpec,
+};
+use nibblemul::design::DesignKey;
+use nibblemul::multipliers::Arch;
+use nibblemul::workload::{broadcast_jobs, VectorJob};
+
+fn key16() -> DesignKey {
+    DesignKey {
+        arch: Arch::Nibble,
+        n: 16,
+    }
+}
+
+/// Tight knobs so a chaos round settles in well under a second of
+/// backoff, while the per-attempt deadline stays far above loopback
+/// latency.
+fn chaos_cfg() -> RouterConfig {
+    RouterConfig {
+        request_timeout: Duration::from_millis(2000),
+        max_attempts: 4,
+        backoff_base: Duration::from_millis(5),
+        backoff_max: Duration::from_millis(80),
+        ..RouterConfig::default()
+    }
+}
+
+fn spawn_exact(tag: &str, label: &str) -> ShardServer {
+    ShardServer::spawn(
+        loopback_addr(tag),
+        exact_factory(2),
+        ShardServerConfig {
+            label: label.to_string(),
+            ..ShardServerConfig::default()
+        },
+    )
+    .expect("spawn shard")
+}
+
+/// Submit with a bounded retry loop around transient
+/// "no healthy shard" windows (a downed slot only becomes eligible
+/// again after its backoff elapses).
+fn submit_eventually(
+    router: &mut Router,
+    key: DesignKey,
+    tenant: &str,
+    job: &VectorJob,
+) {
+    for _ in 0..200 {
+        match router.submit(key, tenant, job.clone()) {
+            Ok(()) => return,
+            Err(_) => std::thread::sleep(Duration::from_millis(5)),
+        }
+    }
+    panic!("job {} never admitted", job.id);
+}
+
+#[test]
+fn killing_one_shard_mid_stream_loses_and_duplicates_nothing() {
+    let mut s0 = Some(spawn_exact("chaos-a0", "s0"));
+    let s1 = spawn_exact("chaos-a1", "s1");
+    let s2 = spawn_exact("chaos-a2", "s2");
+    let specs = vec![
+        ShardSpec {
+            addr: s0.as_ref().unwrap().addr().clone(),
+            key: key16(),
+        },
+        ShardSpec {
+            addr: s1.addr().clone(),
+            key: key16(),
+        },
+        ShardSpec {
+            addr: s2.addr().clone(),
+            key: key16(),
+        },
+    ];
+    let mut router = Router::connect(specs, chaos_cfg()).unwrap();
+
+    let jobs = broadcast_jobs(120, 1, 32, 11);
+    for (i, job) in jobs.iter().enumerate() {
+        if i == 60 {
+            // Hard-kill s0 while it holds ~a third of the submitted
+            // stream staged in its session.
+            s0.take().unwrap().kill();
+        }
+        submit_eventually(
+            &mut router,
+            key16(),
+            &format!("tenant-{}", i % 3),
+            job,
+        );
+    }
+    let outcomes = router.drain().unwrap();
+
+    // Exactly one outcome per job: nothing lost, nothing duplicated.
+    assert_eq!(outcomes.len(), jobs.len());
+    let ids: HashSet<u64> = outcomes.iter().map(|o| o.id).collect();
+    assert_eq!(ids.len(), jobs.len(), "duplicate outcome ids");
+
+    // With two survivors and 4 attempts, every orphan reroutes to a
+    // healthy shard and succeeds.
+    let mut sorted = outcomes;
+    sorted.sort_by_key(|o| o.id);
+    for (job, out) in jobs.iter().zip(&sorted) {
+        assert_eq!(out.id, job.id);
+        match &out.result {
+            Ok(products) => assert_eq!(products, &job.expected()),
+            Err(e) => panic!("job {} failed despite survivors: {e}", job.id),
+        }
+    }
+    let m = router.scrape();
+    assert!(
+        m.contains("nibblemul_router_shard_deaths 1"),
+        "exactly one shard death recorded:\n{m}"
+    );
+    assert!(
+        m.contains("nibblemul_router_jobs_rerouted"),
+        "reroute counter present:\n{m}"
+    );
+
+    // Survivors keep serving a fresh stream after the death.
+    let more = broadcast_jobs(30, 1, 16, 13);
+    for job in &more {
+        let mut j = job.clone();
+        j.id += 1000;
+        submit_eventually(&mut router, key16(), "tenant-late", &j);
+    }
+    let late = router.drain().unwrap();
+    assert_eq!(late.len(), more.len());
+    for out in &late {
+        assert!(
+            out.result.is_ok(),
+            "post-kill stream must be clean: {:?}",
+            out.result
+        );
+    }
+
+    router.shutdown();
+    s1.kill();
+    s2.kill();
+}
+
+#[test]
+fn restarted_shard_rejoins_with_fresh_epoch_and_identical_results() {
+    // A real (gate-level) fabric shard so "bit-identical" is about the
+    // hardware path, not a trivial scalar multiply.
+    let key = DesignKey {
+        arch: Arch::Nibble,
+        n: 4,
+    };
+    let addr = loopback_addr("chaos-restart");
+    let server = ShardServer::spawn(
+        addr.clone(),
+        sim_factory(1, false),
+        ShardServerConfig::default(),
+    )
+    .unwrap();
+    let mut router = Router::connect(
+        vec![ShardSpec {
+            addr: addr.clone(),
+            key,
+        }],
+        chaos_cfg(),
+    )
+    .unwrap();
+
+    let jobs = broadcast_jobs(12, 1, 8, 5);
+    for job in &jobs {
+        submit_eventually(&mut router, key, "t", job);
+    }
+    let before = {
+        let mut o = router.drain().unwrap();
+        o.sort_by_key(|o| o.id);
+        o
+    };
+    assert!(before.iter().all(|o| o.result.is_ok()));
+
+    // Kill and restart on the SAME socket: the router reconnects after
+    // backoff and the new connection carries a fresh epoch, so anything
+    // the dead process had in its pipes is discarded at the epoch gate.
+    server.kill();
+    let server2 = ShardServer::spawn(
+        addr,
+        sim_factory(1, false),
+        ShardServerConfig {
+            label: "restarted".to_string(),
+            ..ShardServerConfig::default()
+        },
+    )
+    .unwrap();
+
+    for job in &jobs {
+        let mut j = job.clone();
+        j.id += 500; // fresh ids; router ids are unique forever
+        submit_eventually(&mut router, key, "t", &j);
+    }
+    let after = {
+        let mut o = router.drain().unwrap();
+        o.sort_by_key(|o| o.id);
+        o
+    };
+    assert_eq!(after.len(), jobs.len());
+    for (b, a) in before.iter().zip(&after) {
+        assert_eq!(a.id, b.id + 500);
+        assert_eq!(
+            a.result.as_ref().unwrap(),
+            b.result.as_ref().unwrap(),
+            "restarted shard must serve bit-identical products"
+        );
+    }
+    assert_eq!(router.shard_up(), vec![true], "slot healthy again");
+
+    // Liveness checks flow over the same connection.
+    assert_eq!(router.ping_all(), vec![true]);
+
+    router.shutdown();
+    server2.kill();
+}
+
+#[test]
+fn all_shards_down_fails_jobs_with_descriptive_errors_not_hangs() {
+    let server = spawn_exact("chaos-dead", "doomed");
+    let addr = server.addr().clone();
+    let cfg = RouterConfig {
+        request_timeout: Duration::from_millis(300),
+        max_attempts: 2,
+        backoff_base: Duration::from_millis(500),
+        backoff_max: Duration::from_millis(500),
+        ..RouterConfig::default()
+    };
+    let mut router = Router::connect(
+        vec![ShardSpec { addr, key: key16() }],
+        cfg,
+    )
+    .unwrap();
+    let jobs = broadcast_jobs(6, 1, 8, 3);
+    for job in &jobs {
+        router.submit(key16(), "t", job.clone()).unwrap();
+    }
+    // Kill the only shard with everything staged: the long backoff means
+    // reroutes find no healthy shard, so every job settles as a
+    // descriptive error instead of hanging the drain.
+    server.kill();
+    let outcomes = router.drain().unwrap();
+    assert_eq!(outcomes.len(), jobs.len());
+    for out in &outcomes {
+        let err = out.result.as_ref().unwrap_err();
+        assert!(
+            err.contains("died") || err.contains("attempts"),
+            "error names the failure: {err}"
+        );
+    }
+    router.shutdown();
+}
