@@ -6,6 +6,7 @@
 use nibblemul::bench::Bencher;
 use nibblemul::fabric::VectorUnit;
 use nibblemul::multipliers::Arch;
+use nibblemul::sim::{W256, W512};
 use nibblemul::util::Xoshiro256;
 
 fn main() {
@@ -78,6 +79,32 @@ fn main() {
             || {
                 let stats =
                     unit.run_stream64(&mut sim64, ROUNDS, 11).unwrap();
+                assert_eq!(stats.errors, 0);
+            },
+        );
+        // Wide carriers: one settle evaluates 256/512 lanes. Each round
+        // packs LANES vector ops, so throughput is lanes/settle-limited.
+        let mut sim256 = unit.simulator_wide::<W256>().unwrap();
+        bencher.bench(
+            &format!("sim/packed256/{}x{} activity ({} vec-ops)",
+                arch.name(), n, ROUNDS * 256),
+            Some((ROUNDS * 256) as f64),
+            || {
+                let stats = unit
+                    .run_stream_wide(&mut sim256, ROUNDS, 11)
+                    .unwrap();
+                assert_eq!(stats.errors, 0);
+            },
+        );
+        let mut sim512 = unit.simulator_wide::<W512>().unwrap();
+        bencher.bench(
+            &format!("sim/packed512/{}x{} activity ({} vec-ops)",
+                arch.name(), n, ROUNDS * 512),
+            Some((ROUNDS * 512) as f64),
+            || {
+                let stats = unit
+                    .run_stream_wide(&mut sim512, ROUNDS, 11)
+                    .unwrap();
                 assert_eq!(stats.errors, 0);
             },
         );

@@ -15,7 +15,7 @@ use anyhow::Result;
 use crate::fabric::VectorUnit;
 use crate::multipliers::Arch;
 use crate::runtime::{ArtifactSet, Runtime};
-use crate::sim::{Simulator, Simulator64, LANES};
+use crate::sim::{Simulator, SimulatorWide, Word, W256, W512};
 use crate::tech::{PowerModel, TechLibrary};
 
 use super::batcher::Batch;
@@ -52,6 +52,13 @@ pub trait Backend: Send {
     /// Energy consumed so far in femtojoules (0 where not modelled).
     fn energy_fj(&self) -> f64 {
         0.0
+    }
+
+    /// Dirty-cone settle counters so far: `(ops evaluated, ops
+    /// skipped)`. `(0, 0)` where the backend has no incremental engine.
+    /// Monotone — the pool folds deltas into [`super::Metrics`].
+    fn cone_stats(&self) -> (u64, u64) {
+        (0, 0)
     }
 }
 
@@ -225,27 +232,38 @@ impl Backend for SimBackend {
     }
 }
 
-/// Word-parallel gate-level fabric backend: packs up to 64 queued batches
-/// into the lanes of a [`Simulator64`] and settles them in one pass — 64
-/// fabric operations for roughly the wall cost of one scalar-simulated
-/// op. Unfilled lanes are driven with zero operands.
+/// Word-parallel gate-level fabric backend: packs up to `W::LANES`
+/// queued batches into the lanes of a [`SimulatorWide`] and settles
+/// them in one pass — up to 512 fabric operations for roughly the wall
+/// cost of one scalar-simulated op. Unfilled lanes are driven with zero
+/// operands.
 ///
 /// Cycle accounting is *fabric* cycles (one packed pass of `k` batches
 /// costs one op latency, not `k`), which is the serving-throughput story;
-/// energy integrates switching across every driven lane.
-pub struct Sim64Backend {
+/// energy integrates switching across every driven lane. The packed
+/// passes settle incrementally (dirty-cone), which pays off when the
+/// batcher delivers weight-stationary groups (consecutive passes sharing
+/// broadcast operands); [`Backend::cone_stats`] exposes the counters.
+pub struct SimWideBackend<W: Word> {
     unit: VectorUnit,
-    sim: Simulator64,
+    sim: SimulatorWide<W>,
     lib: TechLibrary,
     cycles: u64,
 }
 
-impl Sim64Backend {
+/// The historical 64-lane packed backend.
+pub type Sim64Backend = SimWideBackend<u64>;
+/// 256-lane packed backend (`[u64; 4]` carrier).
+pub type Sim256Backend = SimWideBackend<W256>;
+/// 512-lane packed backend (`[u64; 8]` carrier).
+pub type Sim512Backend = SimWideBackend<W512>;
+
+impl<W: Word> SimWideBackend<W> {
     /// Build a backend around `arch` at fabric width `n` (sharing the
     /// process-wide compiled artifact, like [`SimBackend::new`]).
     pub fn new(arch: Arch, n: usize) -> Result<Self> {
         let unit = VectorUnit::try_new(arch, n)?;
-        let sim = unit.simulator64()?;
+        let sim = unit.simulator_wide::<W>()?;
         Ok(Self {
             unit,
             sim,
@@ -259,7 +277,7 @@ impl Sim64Backend {
     }
 }
 
-impl Backend for Sim64Backend {
+impl<W: Word> Backend for SimWideBackend<W> {
     fn execute(&mut self, batch: &Batch) -> Result<Vec<u32>> {
         let mut out = self.execute_group(&[batch])?;
         out.pop().ok_or_else(|| {
@@ -272,26 +290,27 @@ impl Backend for Sim64Backend {
     }
 
     fn preferred_group(&self) -> usize {
-        LANES
+        W::LANES
     }
 
     fn execute_group(&mut self, batches: &[&Batch]) -> Result<Vec<Vec<u32>>> {
+        let lanes = W::LANES;
         let n = self.unit.n;
         let mut out = Vec::with_capacity(batches.len());
-        for chunk in batches.chunks(LANES) {
-            let mut a: Vec<Vec<u16>> = Vec::with_capacity(LANES);
-            let mut b: Vec<u16> = Vec::with_capacity(LANES);
+        for chunk in batches.chunks(lanes) {
+            let mut a: Vec<Vec<u16>> = Vec::with_capacity(lanes);
+            let mut b: Vec<u16> = Vec::with_capacity(lanes);
             for batch in chunk {
                 let mut lane_a = batch.a.clone();
                 lane_a.resize(n, 0);
                 a.push(lane_a);
                 b.push(batch.b);
             }
-            while a.len() < LANES {
+            while a.len() < lanes {
                 a.push(vec![0; n]);
                 b.push(0);
             }
-            let res = self.unit.run_op64(&mut self.sim, &a, &b)?;
+            let res = self.unit.run_op_wide(&mut self.sim, &a, &b)?;
             self.cycles += res.cycles;
             for (l, batch) in chunk.iter().enumerate() {
                 out.push(res.products[l][..batch.a.len()].to_vec());
@@ -301,7 +320,12 @@ impl Backend for Sim64Backend {
     }
 
     fn name(&self) -> String {
-        format!("sim64:{}x{}", self.unit.arch.name(), self.unit.n)
+        format!(
+            "sim{}:{}x{}",
+            W::LANES,
+            self.unit.arch.name(),
+            self.unit.n
+        )
     }
 
     fn cycles(&self) -> u64 {
@@ -309,19 +333,24 @@ impl Backend for Sim64Backend {
     }
 
     fn energy_fj(&self) -> f64 {
-        // Dynamic energy integrates switching across all 64 virtual
-        // lanes (average power × aggregate lane-time — exact, since the
-        // toggle counts are aggregates). Static energy (clock + leakage)
-        // accrues on the ONE physical fabric's wall time, consistent
-        // with the fabric-cycle accounting of `cycles()` — that's where
-        // batching wins: 64 batches share one fabric's static power.
+        // Dynamic energy integrates switching across all W::LANES
+        // virtual lanes (average power × aggregate lane-time — exact,
+        // since the toggle counts are aggregates). Static energy (clock
+        // + leakage) accrues on the ONE physical fabric's wall time,
+        // consistent with the fabric-cycle accounting of `cycles()` —
+        // that's where batching wins: the packed batches share one
+        // fabric's static power.
         let p = PowerModel::new(&self.lib)
-            .estimate64(self.unit.netlist(), &self.sim);
+            .estimate_wide(self.unit.netlist(), &self.sim);
         let lane_t = self.sim.lane_cycles() as f64 / crate::tech::CLOCK_HZ;
         let wall_t = self.sim.cycles() as f64 / crate::tech::CLOCK_HZ;
         (p.dynamic_mw * lane_t + (p.clock_mw + p.leakage_mw) * wall_t)
             * 1e-3
             * 1e15
+    }
+
+    fn cone_stats(&self) -> (u64, u64) {
+        self.sim.cone_stats()
     }
 }
 
@@ -487,5 +516,25 @@ mod tests {
         let single = be.execute(&mk_batch(vec![4, 4, 4, 4], 4)).unwrap();
         assert_eq!(single, vec![16, 16, 16, 16]);
         assert_eq!(be.cycles(), 16);
+    }
+
+    #[test]
+    fn wide_backends_pack_more_lanes_and_report_cone_stats() {
+        let mut be = Sim256Backend::new(Arch::Nibble, 4).unwrap();
+        assert_eq!(be.preferred_group(), 256);
+        assert!(be.name().starts_with("sim256:"));
+        assert_eq!(be.cone_stats(), (0, 0), "fresh backend is clean");
+        let batches = vec![
+            mk_batch(vec![3, 5, 7, 9], 11),
+            mk_batch(vec![1, 2], 11), // weight-stationary pair
+        ];
+        let refs: Vec<&Batch> = batches.iter().collect();
+        let out = be.execute_group(&refs).unwrap();
+        assert_eq!(out[0], vec![33, 55, 77, 99]);
+        assert_eq!(out[1], vec![11, 22]);
+        let (evaluated, _) = be.cone_stats();
+        assert!(evaluated > 0, "incremental settles ran");
+        // The exact backend has no incremental engine.
+        assert_eq!(ExactBackend.cone_stats(), (0, 0));
     }
 }

@@ -91,6 +91,14 @@ pub struct Metrics {
     pub window_flushes: AtomicU64,
     /// Batches whose backend execution failed.
     pub errors: AtomicU64,
+    /// Ops evaluated by the packed backends' dirty-cone incremental
+    /// settles (delta-folded from [`super::Backend::cone_stats`] by the
+    /// worker pool).
+    pub cone_evaluated: AtomicU64,
+    /// Ops skipped by dirty-cone settles — work a full re-evaluation
+    /// would have done. High skip fractions are the weight-stationary
+    /// win made visible.
+    pub cone_skipped: AtomicU64,
     pub job_latency: LatencyHistogram,
 }
 
@@ -111,6 +119,8 @@ pub struct MetricsSnapshot {
     pub coalesce_forced: u64,
     pub window_flushes: u64,
     pub errors: u64,
+    pub cone_evaluated: u64,
+    pub cone_skipped: u64,
     pub mean_latency_us: f64,
     pub p50_latency_us: u64,
     pub p99_latency_us: u64,
@@ -137,6 +147,17 @@ impl MetricsSnapshot {
         }
     }
 
+    /// Fraction of settle work skipped by dirty-cone incremental
+    /// evaluation, in [0, 1] (0 when no incremental backend ran).
+    pub fn cone_skip_rate(&self) -> f64 {
+        let total = self.cone_evaluated + self.cone_skipped;
+        if total == 0 {
+            0.0
+        } else {
+            self.cone_skipped as f64 / total as f64
+        }
+    }
+
     /// Scrapeable one-metric-per-line text form (Prometheus exposition
     /// shape): `nibblemul_<name>{labels} <value>`. `labels` is the raw
     /// inner label list (e.g. `shard="s0"`); empty emits no braces.
@@ -159,6 +180,8 @@ impl MetricsSnapshot {
             ("coalesce_forced", self.coalesce_forced),
             ("window_flushes", self.window_flushes),
             ("errors", self.errors),
+            ("cone_evaluated", self.cone_evaluated),
+            ("cone_skipped", self.cone_skipped),
             ("p50_latency_us", self.p50_latency_us),
             ("p99_latency_us", self.p99_latency_us),
         ];
@@ -170,6 +193,7 @@ impl MetricsSnapshot {
             ("mean_latency_us", self.mean_latency_us),
             ("batches_per_pass", self.batches_per_pass()),
             ("coalesce_hit_rate", self.coalesce_hit_rate()),
+            ("cone_skip_rate", self.cone_skip_rate()),
         ] {
             out.push_str(&format!("nibblemul_{name}{tag} {v:.6}\n"));
         }
@@ -198,6 +222,8 @@ impl Metrics {
             coalesce_forced: self.coalesce_forced.load(Ordering::Relaxed),
             window_flushes: self.window_flushes.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
+            cone_evaluated: self.cone_evaluated.load(Ordering::Relaxed),
+            cone_skipped: self.cone_skipped.load(Ordering::Relaxed),
             mean_latency_us: self.job_latency.mean_us(),
             p50_latency_us: self.job_latency.quantile_us(0.5),
             p99_latency_us: self.job_latency.quantile_us(0.99),
@@ -242,6 +268,13 @@ impl std::fmt::Display for MetricsSnapshot {
             self.coalesce_hit_rate() * 100.0,
             self.coalesce_forced,
             self.window_flushes
+        )?;
+        writeln!(
+            f,
+            "dirty-cone: {} ops evaluated, {} skipped ({:.1}% skip rate)",
+            self.cone_evaluated,
+            self.cone_skipped,
+            self.cone_skip_rate() * 100.0
         )?;
         write!(
             f,
@@ -290,6 +323,22 @@ mod tests {
         // No labels -> no braces.
         let bare = m.snapshot().render_text("");
         assert!(bare.contains("nibblemul_jobs_submitted 12\n"));
+    }
+
+    #[test]
+    fn cone_skip_rate_math() {
+        let m = Metrics::default();
+        assert_eq!(m.snapshot().cone_skip_rate(), 0.0, "empty: defined as 0");
+        m.cone_evaluated.store(25, Ordering::Relaxed);
+        m.cone_skipped.store(75, Ordering::Relaxed);
+        let snap = m.snapshot();
+        assert!((snap.cone_skip_rate() - 0.75).abs() < 1e-12);
+        let text = snap.render_text("");
+        assert!(text.contains("nibblemul_cone_evaluated 25\n"));
+        assert!(text.contains("nibblemul_cone_skipped 75\n"));
+        assert!(text.contains("nibblemul_cone_skip_rate 0.75"));
+        assert!(format!("{snap}")
+            .contains("dirty-cone: 25 ops evaluated, 75 skipped"));
     }
 
     #[test]

@@ -28,8 +28,8 @@ mod shard;
 mod wire;
 
 pub use backend::{
-    Backend, ExactBackend, FailingBackend, PjrtBackend, Sim64Backend,
-    SimBackend,
+    Backend, ExactBackend, FailingBackend, PjrtBackend, Sim256Backend,
+    Sim512Backend, Sim64Backend, SimBackend, SimWideBackend,
 };
 pub use batcher::{Batch, Batcher, BatcherConfig, CoalesceStats, LaneTag};
 pub use metrics::{LatencyHistogram, Metrics, MetricsSnapshot};

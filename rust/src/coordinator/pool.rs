@@ -27,6 +27,7 @@ use anyhow::Result;
 use super::backend::Backend;
 use super::batcher::Batch;
 use super::lock_unpoisoned;
+use super::metrics::Metrics;
 
 /// Per-thread worker state: drains sequence-tagged items from the shared
 /// queue and executes them in groups.
@@ -271,19 +272,52 @@ pub enum WorkReceived {
 }
 
 /// [`PoolWorker`] adapter over a serving [`Backend`].
-struct BackendWorker(Box<dyn Backend>);
+struct BackendWorker {
+    backend: Box<dyn Backend>,
+    /// Shared coordinator counters to fold backend-side statistics into
+    /// (`None` for standalone pools).
+    metrics: Option<Arc<Metrics>>,
+    /// Last-seen [`Backend::cone_stats`] values: the backend counters
+    /// are monotone per-backend totals, so each pass folds only the
+    /// delta into the shared metrics.
+    last_cone: (u64, u64),
+}
+
+impl BackendWorker {
+    fn new(backend: Box<dyn Backend>, metrics: Option<Arc<Metrics>>) -> Self {
+        Self {
+            backend,
+            metrics,
+            last_cone: (0, 0),
+        }
+    }
+
+    fn fold_cone_stats(&mut self) {
+        let Some(metrics) = &self.metrics else { return };
+        let (evaluated, skipped) = self.backend.cone_stats();
+        let (last_ev, last_sk) = self.last_cone;
+        use std::sync::atomic::Ordering;
+        metrics
+            .cone_evaluated
+            .fetch_add(evaluated.saturating_sub(last_ev), Ordering::Relaxed);
+        metrics
+            .cone_skipped
+            .fetch_add(skipped.saturating_sub(last_sk), Ordering::Relaxed);
+        self.last_cone = (evaluated, skipped);
+    }
+}
 
 impl PoolWorker for BackendWorker {
     type Item = Batch;
     type Out = Result<Vec<u32>>;
 
     fn group_cap(&self) -> usize {
-        self.0.preferred_group()
+        self.backend.preferred_group()
     }
 
     fn run_group(&mut self, items: &[Batch]) -> Vec<Result<Vec<u32>>> {
         let refs: Vec<&Batch> = items.iter().collect();
-        match self.0.execute_group(&refs) {
+        let outs = match self.backend.execute_group(&refs) {
             Ok(products) => products.into_iter().map(Ok).collect(),
             Err(_) if items.len() > 1 => {
                 // Per-batch error containment: a grouped pass fails as
@@ -296,10 +330,12 @@ impl PoolWorker for BackendWorker {
                 // stateful backend's cycle/energy accounting counts
                 // them twice and the pass ran serially despite the
                 // group tag.
-                items.iter().map(|b| self.0.execute(b)).collect()
+                items.iter().map(|b| self.backend.execute(b)).collect()
             }
             Err(e) => vec![Err(e)],
-        }
+        };
+        self.fold_cone_stats();
+        outs
     }
 }
 
@@ -316,9 +352,31 @@ impl WorkerPool {
         backends: Vec<Box<dyn Backend>>,
         queue_depth: usize,
     ) -> Self {
+        Self::spawn_inner(backends, queue_depth, None)
+    }
+
+    /// [`WorkerPool::spawn`], with backend-side statistics (the
+    /// dirty-cone settle counters) delta-folded into `metrics` after
+    /// every execution pass.
+    pub fn spawn_with_metrics(
+        backends: Vec<Box<dyn Backend>>,
+        queue_depth: usize,
+        metrics: Arc<Metrics>,
+    ) -> Self {
+        Self::spawn_inner(backends, queue_depth, Some(metrics))
+    }
+
+    fn spawn_inner(
+        backends: Vec<Box<dyn Backend>>,
+        queue_depth: usize,
+        metrics: Option<Arc<Metrics>>,
+    ) -> Self {
         Self {
             inner: Pool::spawn(
-                backends.into_iter().map(BackendWorker).collect(),
+                backends
+                    .into_iter()
+                    .map(|b| BackendWorker::new(b, metrics.clone()))
+                    .collect(),
                 queue_depth,
             ),
         }
@@ -507,6 +565,53 @@ mod tests {
         assert!(died, "the poison item must fail recv, not hang it");
         assert!(oks <= 3);
         pool.shutdown();
+    }
+
+    /// Backend with synthetic monotone cone counters (folding probe).
+    struct ConeStub {
+        batches: u64,
+    }
+
+    impl Backend for ConeStub {
+        fn execute(&mut self, batch: &Batch) -> Result<Vec<u32>> {
+            self.batches += 1;
+            ExactBackend.execute(batch)
+        }
+
+        fn name(&self) -> String {
+            "cone-stub".into()
+        }
+
+        fn cone_stats(&self) -> (u64, u64) {
+            (self.batches * 10, self.batches * 90)
+        }
+    }
+
+    #[test]
+    fn pool_folds_cone_stat_deltas_into_metrics() {
+        let metrics = Arc::new(Metrics::default());
+        let backends: Vec<Box<dyn Backend>> =
+            vec![Box::new(ConeStub { batches: 0 })];
+        let pool =
+            WorkerPool::spawn_with_metrics(backends, 8, Arc::clone(&metrics));
+        for seq in 0..3u64 {
+            pool.submit(WorkItem {
+                seq,
+                batch: mk_batch(vec![2], 5),
+            })
+            .unwrap();
+        }
+        for _ in 0..3 {
+            assert_eq!(pool.recv().unwrap().products.unwrap(), vec![10]);
+        }
+        pool.shutdown();
+        use std::sync::atomic::Ordering;
+        // 3 batches × (10 evaluated, 90 skipped) each, folded as deltas
+        // (not re-added totals) no matter how the passes grouped.
+        assert_eq!(metrics.cone_evaluated.load(Ordering::Relaxed), 30);
+        assert_eq!(metrics.cone_skipped.load(Ordering::Relaxed), 270);
+        let snap = metrics.snapshot();
+        assert!((snap.cone_skip_rate() - 0.9).abs() < 1e-12);
     }
 
     #[test]

@@ -173,11 +173,18 @@ impl Coordinator {
     /// Create a coordinator over a set of backend instances (one worker
     /// thread per backend).
     pub fn new(cfg: CoordinatorConfig, backends: Vec<Box<dyn Backend>>) -> Self {
-        let pool = WorkerPool::spawn(backends, cfg.queue_depth);
+        let metrics = Arc::new(Metrics::default());
+        // Workers fold backend-side dirty-cone counters into the shared
+        // metrics after every pass.
+        let pool = WorkerPool::spawn_with_metrics(
+            backends,
+            cfg.queue_depth,
+            Arc::clone(&metrics),
+        );
         Self {
             cfg,
             pool,
-            metrics: Arc::new(Metrics::default()),
+            metrics,
             session_gate: Mutex::new(()),
             epoch: AtomicU64::new(0),
         }

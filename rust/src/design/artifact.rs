@@ -16,13 +16,26 @@
 //!
 //! ```text
 //!   magic   b"NMLD"            4 B
-//!   version u16 = 1            2 B
+//!   version u16 = 2            2 B
 //!   arch    u8  (Arch::ALL index)
 //!   n       u32 (vector width)
 //!   len     u64 (payload bytes)
 //!   fnv64   u64 (FNV-1a over payload)
-//!   payload: name, n_nets, cells, ports, OptStats, report scalars
+//!   payload: name, n_nets, cells, ports, OptStats, report scalars,
+//!            levelized program section (v2+)
 //! ```
+//!
+//! **Version 2** appends the levelized [`Program`] section (op records
+//! in final fused/rank-sorted order, level offsets, arena remap, fusion
+//! count) at the *end* of the payload — the v1 payload is a byte prefix
+//! of the v2 payload. The loader still recompiles the program from the
+//! netlist (cheap, deterministic) and then byte-compares the stored
+//! section against the recompilation: an artifact written by a
+//! different compiler (changed fusion rules, different rank order)
+//! fails loudly instead of silently serving a different schedule.
+//! Version-1 files are rejected with a descriptive error, which the
+//! store downgrades to warn + re-synthesize — the rebuild then persists
+//! a fresh v2 file (self-healing, never corrupting).
 
 use std::path::{Path, PathBuf};
 
@@ -37,7 +50,7 @@ use crate::tech::TechLibrary;
 use super::{CompiledDesign, DesignKey};
 
 const MAGIC: &[u8; 4] = b"NMLD";
-const VERSION: u16 = 1;
+const VERSION: u16 = 2;
 
 /// Artifact file for `key` inside `dir`.
 pub fn artifact_path(dir: &Path, key: DesignKey) -> PathBuf {
@@ -197,6 +210,39 @@ impl Wr {
             }
         }
     }
+
+    /// Levelized program section (v2+): the compiled schedule in final
+    /// fused / rank-sorted / arena-remapped form. Deterministic in the
+    /// netlist, so the loader verifies it by byte-comparing against a
+    /// recompilation.
+    fn program(&mut self, p: &Program) {
+        self.u64(p.n_ops() as u64);
+        for op in &p.ops {
+            self.u8(op.code);
+            self.u32(op.a);
+            self.u32(op.b);
+            self.u32(op.c);
+            self.u32(op.o1);
+            self.u32(op.o2);
+        }
+        self.u64(p.levels.len() as u64);
+        for &l in &p.levels {
+            self.u32(l);
+        }
+        self.u64(p.remap.len() as u64);
+        for &m in &p.remap {
+            self.u32(m);
+        }
+        self.u64(p.n_fused() as u64);
+    }
+}
+
+/// The byte encoding of `p`'s program section (what v2 payloads end
+/// with).
+fn program_section(p: &Program) -> Vec<u8> {
+    let mut w = Wr::new();
+    w.program(p);
+    w.buf
 }
 
 // ----------------------------------------------------------------- read
@@ -338,27 +384,28 @@ impl<'a> Rd<'a> {
         })
     }
 
-    fn done(&self) -> Result<()> {
-        ensure!(
-            self.pos == self.bytes.len(),
-            "{} trailing bytes after payload",
-            self.bytes.len() - self.pos
-        );
-        Ok(())
+    /// Everything after the structured prefix — the v2 program section
+    /// (compared wholesale against a recompilation, so trailing garbage
+    /// is caught by the byte comparison).
+    fn rest(&self) -> &'a [u8] {
+        &self.bytes[self.pos..]
     }
 }
 
 // ------------------------------------------------------------ save/load
 
-/// Persist `design` (best-effort atomically: temp file + rename) into
-/// `dir`, creating it as needed. Only optimized designs (the ones
-/// carrying a report) are cacheable.
-pub fn save(dir: &Path, design: &CompiledDesign) -> Result<()> {
+/// Serialize the payload for `design`. `include_program = false` yields
+/// the exact version-1 payload (a byte prefix of the v2 payload) — kept
+/// separate so tests can author legacy files and prove the migration
+/// path.
+fn encode_payload(
+    design: &CompiledDesign,
+    include_program: bool,
+) -> Result<Vec<u8>> {
     let report = design
         .report
         .as_ref()
         .ok_or_else(|| anyhow!("raw designs are not cacheable"))?;
-    std::fs::create_dir_all(dir)?;
     let nl = &design.netlist;
     let mut w = Wr::new();
     w.str(&nl.name);
@@ -379,17 +426,32 @@ pub fn save(dir: &Path, design: &CompiledDesign) -> Result<()> {
     w.f64_bits(report.area_um2);
     w.f64_bits(report.timing.critical_path_ps);
     w.f64_bits(report.gate_equiv);
-    let payload = w.buf;
+    if include_program {
+        w.program(&design.program);
+    }
+    Ok(w.buf)
+}
 
-    let mut file = Vec::with_capacity(payload.len() + 26);
+/// Frame `payload` with the NMLD header at `version`.
+fn frame(key: DesignKey, version: u16, payload: &[u8]) -> Vec<u8> {
+    let mut file = Vec::with_capacity(payload.len() + 27);
     file.extend_from_slice(MAGIC);
-    file.extend_from_slice(&VERSION.to_le_bytes());
-    file.push(arch_index(design.key.arch));
-    file.extend_from_slice(&(design.key.n as u32).to_le_bytes());
+    file.extend_from_slice(&version.to_le_bytes());
+    file.push(arch_index(key.arch));
+    file.extend_from_slice(&(key.n as u32).to_le_bytes());
     file.extend_from_slice(&(payload.len() as u64).to_le_bytes());
-    file.extend_from_slice(&fnv1a64(&payload).to_le_bytes());
-    file.extend_from_slice(&payload);
+    file.extend_from_slice(&fnv1a64(payload).to_le_bytes());
+    file.extend_from_slice(payload);
+    file
+}
 
+/// Persist `design` (best-effort atomically: temp file + rename) into
+/// `dir`, creating it as needed. Only optimized designs (the ones
+/// carrying a report) are cacheable.
+pub fn save(dir: &Path, design: &CompiledDesign) -> Result<()> {
+    let payload = encode_payload(design, true)?;
+    std::fs::create_dir_all(dir)?;
+    let file = frame(design.key, VERSION, &payload);
     let path = artifact_path(dir, design.key);
     let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
     std::fs::write(&tmp, &file)?;
@@ -422,7 +484,12 @@ pub fn load(
     ensure!(bytes.len() >= 27, "file too short for header");
     ensure!(&bytes[0..4] == MAGIC, "bad magic");
     let version = u16::from_le_bytes(bytes[4..6].try_into().unwrap());
-    ensure!(version == VERSION, "unsupported artifact version {version}");
+    ensure!(
+        version == VERSION,
+        "unsupported artifact version {version} (this build reads \
+         version {VERSION}; the design will be re-synthesized and the \
+         artifact rewritten)"
+    );
     let arch = arch_from_index(bytes[6])?;
     let n = u32::from_le_bytes(bytes[7..11].try_into().unwrap()) as usize;
     ensure!(
@@ -467,7 +534,7 @@ pub fn load(
     let area_bits = r.f64_bits()?;
     let cp_bits = r.f64_bits()?;
     let ge_bits = r.f64_bits()?;
-    r.done()?;
+    let stored_program = r.rest();
 
     let netlist = Netlist {
         name,
@@ -488,6 +555,14 @@ pub fn load(
             && report.timing.critical_path_ps.to_bits() == cp_bits
             && report.gate_equiv.to_bits() == ge_bits,
         "integrity scalars diverge from recomputed report (stale artifact)"
+    );
+    // v2: the stored levelized program section must be byte-identical
+    // to the recompilation — a schedule produced by a different
+    // compiler (changed fusion / rank / remap rules) is stale.
+    ensure!(
+        stored_program == &program_section(&program)[..],
+        "stored levelized program diverges from recompilation \
+         (artifact from a different compiler)"
     );
     Ok(Some(CompiledDesign {
         key,
@@ -592,5 +667,85 @@ mod tests {
         let dir = tmp_dir("raw");
         let raw = CompiledDesign::raw(Arch::Nibble, 4).unwrap();
         assert!(save(&dir, &raw).is_err());
+    }
+
+    #[test]
+    fn v2_payload_extends_v1_with_the_program_section() {
+        let lib = TechLibrary::hpc28();
+        let d = CompiledDesign::build(Arch::Nibble, 4, &lib).unwrap();
+        let v1 = encode_payload(&d, false).unwrap();
+        let v2 = encode_payload(&d, true).unwrap();
+        assert_eq!(&v2[..v1.len()], &v1[..], "v1 is a byte prefix of v2");
+        assert_eq!(
+            &v2[v1.len()..],
+            &program_section(&d.program)[..],
+            "the suffix is exactly the program section"
+        );
+        assert!(d.program.n_ops() > 0 && d.program.n_levels() > 1);
+    }
+
+    #[test]
+    fn tampered_program_section_is_rejected() {
+        let dir = tmp_dir("prog-tamper");
+        let lib = TechLibrary::hpc28();
+        let cold = CompiledDesign::build(Arch::Nibble, 4, &lib).unwrap();
+        save(&dir, &cold).unwrap();
+        let path = artifact_path(&dir, cold.key);
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Flip one byte inside the program section and re-seal the
+        // checksum, so only the program comparison can catch it.
+        let prefix = encode_payload(&cold, false).unwrap().len();
+        bytes[27 + prefix + 9] ^= 0x01;
+        let sum = fnv1a64(&bytes[27..]);
+        bytes[19..27].copy_from_slice(&sum.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&dir, cold.key, &lib).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("levelized program diverges"),
+            "{err:#}"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn v1_artifacts_err_with_a_version_message() {
+        let dir = tmp_dir("v1");
+        let lib = TechLibrary::hpc28();
+        let cold = CompiledDesign::build(Arch::Nibble, 4, &lib).unwrap();
+        std::fs::create_dir_all(&dir).unwrap();
+        // Author a faithful legacy file: v1 payload, v1 header.
+        let payload = encode_payload(&cold, false).unwrap();
+        let file = frame(cold.key, 1, &payload);
+        std::fs::write(artifact_path(&dir, cold.key), &file).unwrap();
+        let err = load(&dir, cold.key, &lib).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("unsupported artifact version 1"),
+            "{err:#}"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn store_heals_v1_artifacts_to_v2() {
+        let dir = tmp_dir("v1-heal");
+        let lib = TechLibrary::hpc28();
+        let cold = CompiledDesign::build(Arch::Nibble, 4, &lib).unwrap();
+        std::fs::create_dir_all(&dir).unwrap();
+        let payload = encode_payload(&cold, false).unwrap();
+        let file = frame(cold.key, 1, &payload);
+        std::fs::write(artifact_path(&dir, cold.key), &file).unwrap();
+        // The store must warn + re-synthesize, never fail the request...
+        let store = super::super::DesignStore::with_cache_dir(&dir);
+        let d = store.get(Arch::Nibble, 4).unwrap();
+        assert_eq!(store.warm_loads(), 0, "v1 files never warm-load");
+        assert_eq!(store.builds(), 1, "fell back to a cold build");
+        assert_eq!(d.netlist, cold.netlist);
+        // ...and the rebuild persists a v2 file that then warm-loads.
+        let healed = std::fs::read(artifact_path(&dir, cold.key)).unwrap();
+        assert_eq!(u16::from_le_bytes([healed[4], healed[5]]), VERSION);
+        let store2 = super::super::DesignStore::with_cache_dir(&dir);
+        store2.get(Arch::Nibble, 4).unwrap();
+        assert_eq!(store2.warm_loads(), 1, "cache healed to v2");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

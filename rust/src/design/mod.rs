@@ -40,7 +40,7 @@ use anyhow::{anyhow, Result};
 
 use crate::multipliers::Arch;
 use crate::netlist::Netlist;
-use crate::sim::{Program, Simulator, Simulator64};
+use crate::sim::{Program, Simulator, Simulator64, SimulatorWide, Word};
 use crate::synth::{optimize_in_place, report_for, OptStats, SynthReport};
 use crate::tech::TechLibrary;
 
@@ -117,6 +117,12 @@ impl CompiledDesign {
     /// A 64-lane packed simulator instance over the shared program.
     pub fn simulator64(&self) -> Simulator64 {
         Simulator64::from_program(Arc::clone(&self.program))
+    }
+
+    /// A word-parallel simulator of any carrier width (`u64`, `W256`,
+    /// `W512`) over the shared program.
+    pub fn simulator_wide<W: Word>(&self) -> SimulatorWide<W> {
+        SimulatorWide::from_program(Arc::clone(&self.program))
     }
 }
 

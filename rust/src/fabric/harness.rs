@@ -12,9 +12,18 @@
 //!
 //! * [`VectorUnit::run_op`] / [`VectorUnit::run_stream`] — scalar, one
 //!   vector op per settle (debugging, VCD, unit tests);
-//! * [`VectorUnit::run_op64`] / [`VectorUnit::run_stream64`] — packed, 64
-//!   independent vector ops per settle on a [`Simulator64`] (the
-//!   Monte-Carlo power stimulus and batched serving hot path).
+//! * [`VectorUnit::run_op_wide`] / [`VectorUnit::run_stream_wide`] —
+//!   packed, `W::LANES` (64–512) independent vector ops per settle on a
+//!   [`SimulatorWide`] (the Monte-Carlo power stimulus and batched
+//!   serving hot path), with [`VectorUnit::run_op64`] /
+//!   [`VectorUnit::run_stream64`] as the `u64` instantiations.
+//!
+//! The packed path settles incrementally (`settle_dirty`): every poke
+//! marks the fanout cone of nets that actually changed, so a
+//! weight-stationary stream — consecutive ops sharing the broadcast `b`
+//! operand, which `kernels::schedule` arranges — skips the untouched
+//! part of the multiplier between ops. Results and toggle counts are
+//! bit-identical to full settles (asserted by `tests/dirty_cone.rs`).
 
 use std::sync::Arc;
 
@@ -23,7 +32,9 @@ use anyhow::{ensure, Result};
 use crate::design::{CompiledDesign, DesignStore};
 use crate::multipliers::Arch;
 use crate::netlist::{NetId, Netlist};
-use crate::sim::{lane_seeds, Simulator, Simulator64, LANES};
+use crate::sim::{
+    lane_seeds_n, Simulator, Simulator64, SimulatorWide, Word, LANES,
+};
 use crate::util::Xoshiro256;
 
 /// Port nets of a vector unit, resolved once (no per-op string lookups).
@@ -73,16 +84,20 @@ pub struct OpResult {
     pub cycles: u64,
 }
 
-/// Result of one packed operation: 64 independent vector ops, one per
-/// lane, executed in lockstep.
+/// Result of one packed operation: `W::LANES` independent vector ops,
+/// one per lane, executed in lockstep (the lane count is implied by
+/// the `products` length).
 #[derive(Clone, Debug)]
-pub struct OpResult64 {
+pub struct OpResultWide {
     /// `products[lane][element]`.
     pub products: Vec<Vec<u32>>,
     /// Clock cycles per lane (identical across lanes — the FSM is
     /// data-independent).
     pub cycles: u64,
 }
+
+/// Historical name for the 64-lane packed result.
+pub type OpResult64 = OpResultWide;
 
 /// Aggregate statistics of a driven operation stream.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
@@ -159,6 +174,11 @@ impl VectorUnit {
     /// A 64-lane packed simulator over the shared compiled program.
     pub fn simulator64(&self) -> Result<Simulator64> {
         Ok(self.design.simulator64())
+    }
+
+    /// A `W::LANES`-lane packed simulator over the shared program.
+    pub fn simulator_wide<W: Word>(&self) -> Result<SimulatorWide<W>> {
+        Ok(self.design.simulator_wide::<W>())
     }
 
     /// Pack N 8-bit elements into the `a` port word.
@@ -238,78 +258,89 @@ impl VectorUnit {
     /// Drive the packed operand ports: `a[lane]` is lane `lane`'s element
     /// vector, `b[lane]` its broadcast operand. Write order mirrors the
     /// scalar [`VectorUnit::run_op`] exactly so toggle accounting matches
-    /// 64 scalar runs bit-for-bit.
-    fn drive_operands64(
+    /// `W::LANES` scalar runs bit-for-bit. Pokes are tracked: only bit
+    /// planes that actually change dirty their fanout cone.
+    fn drive_operands_wide<W: Word>(
         &self,
-        sim: &mut Simulator64,
+        sim: &mut SimulatorWide<W>,
         a: &[Vec<u16>],
         b: &[u16],
     ) {
         for i in 0..self.n {
             for bit in 0..8 {
-                let mut plane = 0u64;
+                let mut plane = W::zero();
                 for (l, lane_a) in a.iter().enumerate() {
-                    plane |= (((lane_a[i] >> bit) & 1) as u64) << l;
+                    if (lane_a[i] >> bit) & 1 != 0 {
+                        plane.set_lane(l, true);
+                    }
                 }
                 sim.poke_net_mask(self.io.a[8 * i + bit], plane);
             }
         }
         for (bit, &net) in self.io.b.iter().enumerate() {
-            let mut plane = 0u64;
+            let mut plane = W::zero();
             for (l, &lane_b) in b.iter().enumerate() {
-                plane |= (((lane_b >> bit) & 1) as u64) << l;
+                if (lane_b >> bit) & 1 != 0 {
+                    plane.set_lane(l, true);
+                }
             }
             sim.poke_net_mask(net, plane);
         }
     }
 
-    /// Execute 64 independent vector ops in one packed pass: lane `l`
-    /// computes `a[l] × b[l]`. Requires exactly [`LANES`] lane operands,
-    /// each of length `n`.
-    pub fn run_op64(
+    /// Execute `W::LANES` independent vector ops in one packed pass:
+    /// lane `l` computes `a[l] × b[l]`. Requires exactly `W::LANES`
+    /// lane operands, each of length `n`. Settles are incremental
+    /// (dirty-cone): when the broadcast operands repeat across calls
+    /// (weight-stationary streams) the untouched cone is skipped, with
+    /// bit-identical results and toggle counts.
+    pub fn run_op_wide<W: Word>(
         &self,
-        sim: &mut Simulator64,
+        sim: &mut SimulatorWide<W>,
         a: &[Vec<u16>],
         b: &[u16],
-    ) -> Result<OpResult64> {
-        ensure!(a.len() == LANES, "need {LANES} lane operand vectors");
-        ensure!(b.len() == LANES, "need {LANES} lane broadcast operands");
+    ) -> Result<OpResultWide> {
+        let lanes = W::LANES;
+        ensure!(a.len() == lanes, "need {lanes} lane operand vectors");
+        ensure!(b.len() == lanes, "need {lanes} lane broadcast operands");
         for (l, lane_a) in a.iter().enumerate() {
             ensure!(
                 lane_a.len() == self.n,
                 "lane {l}: operand count != vector width"
             );
         }
-        self.drive_operands64(sim, a, b);
+        self.drive_operands_wide(sim, a, b);
 
         if self.arch.is_combinational() {
-            sim.poke_net_mask(self.io.start, u64::MAX);
-            sim.settle();
-            let products = self.read_products64(sim);
+            sim.poke_net_mask(self.io.start, W::splat(true));
+            sim.settle_dirty();
+            let products = self.read_products_wide(sim);
             sim.step();
-            sim.poke_net_mask(self.io.start, 0);
-            return Ok(OpResult64 {
+            sim.poke_net_mask(self.io.start, W::zero());
+            return Ok(OpResultWide {
                 products,
                 cycles: 1,
             });
         }
 
-        sim.poke_net_mask(self.io.start, u64::MAX);
+        sim.poke_net_mask(self.io.start, W::splat(true));
         sim.step();
-        sim.poke_net_mask(self.io.start, 0);
+        sim.poke_net_mask(self.io.start, W::zero());
         let mut cycles = 0u64;
         let max = self.arch.latency_cycles(self.n) + 8;
         loop {
-            sim.settle();
+            sim.settle_dirty();
             let done = sim.peek_net_mask(self.io.done);
-            if done == u64::MAX {
+            if done.all() {
                 break;
             }
             // The control FSM is operand-independent, so lanes started
             // together finish together; anything else is an engine bug.
             ensure!(
-                done == 0,
-                "lanes diverged: done mask {done:#018x} after {cycles} cycles"
+                !done.any(),
+                "lanes diverged: {} of {lanes} lanes done after {cycles} \
+                 cycles",
+                done.popcount()
             );
             sim.step();
             cycles += 1;
@@ -317,14 +348,27 @@ impl VectorUnit {
         }
         sim.step();
         cycles += 1;
-        Ok(OpResult64 {
-            products: self.read_products64(sim),
+        Ok(OpResultWide {
+            products: self.read_products_wide(sim),
             cycles,
         })
     }
 
-    fn read_products64(&self, sim: &Simulator64) -> Vec<Vec<u32>> {
-        (0..LANES)
+    /// 64-lane instantiation of [`VectorUnit::run_op_wide`].
+    pub fn run_op64(
+        &self,
+        sim: &mut Simulator64,
+        a: &[Vec<u16>],
+        b: &[u16],
+    ) -> Result<OpResult64> {
+        self.run_op_wide::<u64>(sim, a, b)
+    }
+
+    fn read_products_wide<W: Word>(
+        &self,
+        sim: &SimulatorWide<W>,
+    ) -> Vec<Vec<u32>> {
+        (0..W::LANES)
             .map(|l| {
                 (0..self.n)
                     .map(|i| {
@@ -367,23 +411,26 @@ impl VectorUnit {
         Ok(stats)
     }
 
-    /// 64-wide Monte-Carlo stream: `ops` rounds of 64 packed vector ops,
-    /// all verified. Lane `l`'s operand stream equals a scalar
-    /// [`VectorUnit::run_stream`] seeded with `lane_seeds(seed)[l]`, so a
-    /// packed stream is exactly 64 scalar streams run in lockstep —
-    /// including aggregate toggle counts.
+    /// `W::LANES`-wide Monte-Carlo stream: `ops` rounds of packed
+    /// vector ops, all verified. Lane `l`'s operand stream equals a
+    /// scalar [`VectorUnit::run_stream`] seeded with
+    /// `lane_seeds_n(seed, W::LANES)[l]`, so a packed stream is exactly
+    /// `W::LANES` scalar streams run in lockstep — including aggregate
+    /// toggle counts. (The first 64 lanes replay the lanes of a 64-wide
+    /// stream with the same seed: the seed streams share a prefix.)
     ///
     /// Statistics are lane-accounted: `ops`/`elements` count every lane's
     /// work and `cycles` counts lane-cycles, so derived figures
     /// (cycles/op, power over simulated time) are comparable with scalar
     /// streams.
-    pub fn run_stream64(
+    pub fn run_stream_wide<W: Word>(
         &self,
-        sim: &mut Simulator64,
+        sim: &mut SimulatorWide<W>,
         ops: u64,
         seed: u64,
     ) -> Result<StreamStats> {
-        let mut rngs: Vec<Xoshiro256> = lane_seeds(seed)
+        let lanes = W::LANES;
+        let mut rngs: Vec<Xoshiro256> = lane_seeds_n(seed, lanes)
             .iter()
             .map(|&s| Xoshiro256::new(s))
             .collect();
@@ -395,11 +442,11 @@ impl VectorUnit {
                 .collect();
             let b: Vec<u16> =
                 rngs.iter_mut().map(|rng| rng.operand8()).collect();
-            let res = self.run_op64(sim, &a, &b)?;
-            stats.ops += LANES as u64;
-            stats.elements += (LANES * self.n) as u64;
-            stats.cycles += res.cycles * LANES as u64;
-            for l in 0..LANES {
+            let res = self.run_op_wide(sim, &a, &b)?;
+            stats.ops += lanes as u64;
+            stats.elements += (lanes * self.n) as u64;
+            stats.cycles += res.cycles * lanes as u64;
+            for l in 0..lanes {
                 for (x, p) in a[l].iter().zip(&res.products[l]) {
                     if *p != *x as u32 * b[l] as u32 {
                         stats.errors += 1;
@@ -408,6 +455,16 @@ impl VectorUnit {
             }
         }
         Ok(stats)
+    }
+
+    /// 64-lane instantiation of [`VectorUnit::run_stream_wide`].
+    pub fn run_stream64(
+        &self,
+        sim: &mut Simulator64,
+        ops: u64,
+        seed: u64,
+    ) -> Result<StreamStats> {
+        self.run_stream_wide::<u64>(sim, ops, seed)
     }
 }
 
@@ -475,6 +532,21 @@ mod tests {
             let scalar = unit.run_op(&mut sim, &a[l], b[l]).unwrap();
             assert_eq!(packed.products[l], scalar.products, "lane {l}");
         }
+    }
+
+    #[test]
+    fn wide_packed_stream_runs_256_and_512_lanes() {
+        use crate::sim::{W256, W512};
+        let unit = VectorUnit::new(Arch::Nibble, 4);
+        let mut sim256 = unit.simulator_wide::<W256>().unwrap();
+        let stats = unit.run_stream_wide(&mut sim256, 1, 7).unwrap();
+        assert_eq!(stats.errors, 0);
+        assert_eq!(stats.ops, 256);
+        assert_eq!(stats.cycles, 256 * Arch::Nibble.latency_cycles(4));
+        let mut sim512 = unit.simulator_wide::<W512>().unwrap();
+        let stats = unit.run_stream_wide(&mut sim512, 1, 7).unwrap();
+        assert_eq!(stats.errors, 0);
+        assert_eq!(stats.ops, 512);
     }
 
     #[test]

@@ -6,7 +6,9 @@
 mod harness;
 mod sweep;
 
-pub use harness::{OpResult, OpResult64, StreamStats, VectorUnit};
+pub use harness::{
+    OpResult, OpResult64, OpResultWide, StreamStats, VectorUnit,
+};
 pub use sweep::{
     evaluate_arch, sweep_paper_set, sweep_paper_set_seq, ArchEval, SweepRow,
 };

@@ -124,6 +124,14 @@ impl FabricExec {
         self.backend.as_ref()
     }
 
+    /// Dirty-cone settle counters of the owned backend: `(ops
+    /// evaluated, ops skipped)`. Non-zero only for the packed fabric
+    /// backends; the skip fraction is the measured weight-stationary
+    /// win of `kernels::schedule`'s broadcast-stable job order.
+    pub fn cone_stats(&self) -> (u64, u64) {
+        self.backend.cone_stats()
+    }
+
     fn exec_batches(
         &mut self,
         batches: &[Batch],

@@ -13,8 +13,9 @@
 //!   conv                int8 conv2d via im2col + GEMM lowering
 //!   synth               synthesis report for one architecture (from the
 //!                       shared compiled-design store)
-//!   bench-sim           scalar vs 64-lane packed simulator throughput
-//!                       (machine-readable BENCH_sim.json)
+//!   bench-sim           scalar vs 64/256/512-lane packed simulator
+//!                       throughput, levelized vs unlevelized programs,
+//!                       dirty-cone skip rate (BENCH_sim.json)
 //!   bench-synth         in-place worklist vs clone-per-round optimizer +
 //!                       pooled vs sequential sweep (BENCH_synth.json)
 //!   bench-gemm          weight-stationary vs row-major GEMM scheduling:
@@ -26,6 +27,7 @@
 //!   help
 
 use std::io::Write;
+use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
@@ -35,7 +37,7 @@ use nibblemul::coordinator::{
     exact_factory, loopback_addr, sim_factory, Backend, BatcherConfig,
     Coordinator, CoordinatorConfig, JobOutcome, Router, RouterConfig,
     SessionConfig, ShardAddr, ShardServer, ShardServerConfig, ShardSpec,
-    Sim64Backend, SimBackend,
+    Sim256Backend, Sim512Backend, Sim64Backend, SimBackend,
 };
 use nibblemul::design::{DesignKey, DesignStore};
 use nibblemul::fabric::{sweep_paper_set, sweep_paper_set_seq, VectorUnit};
@@ -47,10 +49,11 @@ use nibblemul::kernels::{
 use nibblemul::model::quant::QuantMlp;
 use nibblemul::multipliers::Arch;
 use nibblemul::report::{fig3_run, fig4_report, table2_report};
+use nibblemul::sim::{Program, Simulator64, W256, W512};
 use nibblemul::runtime::{ArtifactSet, Runtime};
 use nibblemul::synth::{optimize, optimize_rounds};
 use nibblemul::tech::TechLibrary;
-use nibblemul::util::Stopwatch;
+use nibblemul::util::{Stopwatch, Xoshiro256};
 use nibblemul::workload::{
     broadcast_jobs, gemm_operands, operand_stream, palette_stream,
 };
@@ -101,10 +104,11 @@ COMMANDS
   fig3    [--out-dir artifacts]           Fig. 3 VCD waveforms + timeline
   fig4    [--widths 4,8,16] [--ops 32]    Fig. 4 area/power sweep
   serve   [--arch nibble] [--width 16] [--workers 4] [--jobs 512] [--batched]
-          [--max-open K] [--stream] [--clients 4]
+          [--lanes 64|256|512] [--max-open K] [--stream] [--clients 4]
           [--window-elems N] [--window-age T]
                                           coordinator over simulated fabric
-                                          (--batched: 64-lane packed workers;
+                                          (--batched: packed workers, carrier
+                                          width from --lanes;
                                           --max-open: bounded coalescing buffer;
                                           --stream: open-ended streaming session
                                           fed by --clients concurrent submitter
@@ -143,21 +147,27 @@ COMMANDS
                                           backend runs batched whole-layer
                                           GEMM job streams on the fabric)
   gemm    [--m 25] [--k 12] [--n 12] [--arch nibble] [--width 8] [--workers 2]
-          [--order ws|naive] [--max-open K] [--values 32] [--batched] [--seed 7]
+          [--order ws|naive] [--max-open K] [--values 32] [--batched]
+          [--lanes 64|256|512] [--seed 7]
                                           int8 GEMM lowered to broadcast-reuse
                                           jobs, served by the coordinator,
                                           verified against the i32 oracle
   conv    [--cin 3] [--h 12] [--w 12] [--cout 8] [--ksize 3] [--stride 1]
           [--pad 1] [--arch nibble] [--width 8] [--workers 2] [--order ws|naive]
           [--max-open K] [--values 32] [--seed 7] [--batched]
+          [--lanes 64|256|512]
                                           int8 conv2d via im2col + GEMM
                                           lowering, verified vs direct conv
   synth   [--arch nibble] [--n 8]         synthesis report for one design
                                           (served from the shared design store)
   bench-sim [--arch nibble] [--n 8] [--rounds 4] [--out BENCH_sim.json] [--check]
-                                          scalar vs 64-lane packed simulator
-                                          throughput; writes machine-readable
-                                          JSON (--check: fail below 8x)
+                                          scalar vs 64/256/512-lane packed
+                                          simulator throughput, levelized vs
+                                          unlevelized program, dirty-cone
+                                          weight-stationary skip rate; writes
+                                          machine-readable JSON (--check:
+                                          packed64 >= 8x scalar, wide/levelized
+                                          >= 1x, cone skip rate > 0)
   bench-synth [--arch nibble] [--n 16] [--widths 4,8] [--ops 4] [--out BENCH_synth.json] [--check]
                                           in-place worklist optimizer vs the
                                           clone-per-round pipeline, per-arch
@@ -266,24 +276,37 @@ fn check_gemm_flags(
     check_values_flag(values)
 }
 
+/// Parse the `--lanes 64|256|512` packed-carrier width (used with
+/// `--batched`; wider carriers pack more jobs per settle).
+fn parse_lanes(args: &Args) -> Result<usize> {
+    let lanes = args.get_usize("lanes", 64)?;
+    anyhow::ensure!(
+        matches!(lanes, 64 | 256 | 512),
+        "--lanes must be 64, 256 or 512 (got {lanes})"
+    );
+    Ok(lanes)
+}
+
 /// Build `workers` simulated-fabric backends (`--batched` selects the
-/// 64-lane packed engine).
+/// packed engine; `lanes` picks its carrier width, 64/256/512).
 fn fabric_backends(
     arch: Arch,
     width: usize,
     workers: usize,
     batched: bool,
+    lanes: usize,
 ) -> Result<Vec<Box<dyn Backend>>> {
     anyhow::ensure!(workers >= 1, "--workers must be >= 1");
     (0..workers)
-        .map(|_| {
-            if batched {
-                Sim64Backend::new(arch, width)
-                    .map(|b| Box::new(b) as Box<dyn Backend>)
-            } else {
-                SimBackend::new(arch, width)
-                    .map(|b| Box::new(b) as Box<dyn Backend>)
-            }
+        .map(|_| match (batched, lanes) {
+            (false, _) => SimBackend::new(arch, width)
+                .map(|b| Box::new(b) as Box<dyn Backend>),
+            (true, 256) => Sim256Backend::new(arch, width)
+                .map(|b| Box::new(b) as Box<dyn Backend>),
+            (true, 512) => Sim512Backend::new(arch, width)
+                .map(|b| Box::new(b) as Box<dyn Backend>),
+            (true, _) => Sim64Backend::new(arch, width)
+                .map(|b| Box::new(b) as Box<dyn Backend>),
         })
         .collect()
 }
@@ -301,14 +324,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let n_jobs = args.get_usize("jobs", 512)?;
     let max_open = parse_max_open(args)?;
     let batched = args.has("batched");
+    let lanes = parse_lanes(args)?;
     let stream = args.has("stream");
     println!(
         "coordinator: {workers} workers x {}:{arch} width {width}, \
          {n_jobs} jobs{}",
-        if batched { "sim64" } else { "sim" },
+        if batched { format!("sim{lanes}") } else { "sim".to_string() },
         if stream { " (streaming session)" } else { "" }
     );
-    let backends = fabric_backends(arch, width, workers, batched)?;
+    let backends = fabric_backends(arch, width, workers, batched, lanes)?;
     let coord = Coordinator::new(
         CoordinatorConfig {
             width,
@@ -815,6 +839,7 @@ fn cmd_gemm(args: &Args) -> Result<()> {
     let order = parse_order(args)?;
     let max_open = parse_max_open(args)?;
     let batched = args.has("batched");
+    let lanes = parse_lanes(args)?;
     check_gemm_flags(m, k, n, values)?;
 
     let spec = GemmSpec::new(m, k, n);
@@ -823,7 +848,7 @@ fn cmd_gemm(args: &Args) -> Result<()> {
          {order} order, {} workers x {}:{arch} width {width}",
         spec.products(),
         workers,
-        if batched { "sim64" } else { "sim" },
+        if batched { format!("sim{lanes}") } else { "sim".to_string() },
     );
     let (a, b) = gemm_operands(m, k, n, values, seed);
     let want = matmul_i32(&a, &b, spec);
@@ -834,7 +859,7 @@ fn cmd_gemm(args: &Args) -> Result<()> {
             queue_depth: workers * 4,
             max_open,
         },
-        fabric_backends(arch, width, workers, batched)?,
+        fabric_backends(arch, width, workers, batched, lanes)?,
     );
     let plan = GemmPlan::new(spec, order);
     let sw = Stopwatch::start();
@@ -875,6 +900,7 @@ fn cmd_conv(args: &Args) -> Result<()> {
     let order = parse_order(args)?;
     let max_open = parse_max_open(args)?;
     let batched = args.has("batched");
+    let lanes = parse_lanes(args)?;
 
     let gemm = spec.gemm();
     println!(
@@ -904,7 +930,7 @@ fn cmd_conv(args: &Args) -> Result<()> {
             queue_depth: workers * 4,
             max_open,
         },
-        fabric_backends(arch, width, workers, batched)?,
+        fabric_backends(arch, width, workers, batched, lanes)?,
     );
     let plan = GemmPlan::new(gemm, order);
     let sw = Stopwatch::start();
@@ -924,8 +950,10 @@ fn cmd_conv(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Scalar vs 64-lane packed simulator throughput on the Monte-Carlo
-/// activity-estimation workload, written as machine-readable JSON so
+/// Simulator throughput on the Monte-Carlo activity-estimation workload:
+/// scalar vs 64/256/512-lane packed engines, levelized vs unlevelized
+/// compiled programs, and the dirty-cone skip rate on a
+/// weight-stationary op stream — written as machine-readable JSON so
 /// future PRs can track the perf trajectory.
 fn cmd_bench_sim(args: &Args) -> Result<()> {
     let arch = parse_arch(args, Arch::Nibble)?;
@@ -935,7 +963,9 @@ fn cmd_bench_sim(args: &Args) -> Result<()> {
     let vec_ops = rounds * 64;
     println!(
         "bench-sim: {arch} x{n} activity estimation, \
-         {vec_ops} vector ops per iteration (scalar vs 64-lane packed)"
+         {vec_ops} vector ops per iteration \
+         (scalar vs packed 64/256/512, levelized vs unlevelized, \
+         dirty-cone weight-stationary)"
     );
 
     let unit = VectorUnit::new(arch, n);
@@ -966,13 +996,123 @@ fn cmd_bench_sim(args: &Args) -> Result<()> {
         )
         .clone();
 
-    let speedup = packed.items_per_sec().unwrap_or(0.0)
-        / scalar.items_per_sec().unwrap_or(f64::INFINITY);
-    println!("packed/scalar speedup: {speedup:.1}x (vector ops/sec)");
+    // Wider carriers: same stream, fewer settles. Round counts are
+    // scaled so every row runs at least `vec_ops` vector ops.
+    let mut sim256 = unit.simulator_wide::<W256>()?;
+    let rounds256 = (vec_ops / 256).max(1);
+    let wide256 = bencher
+        .bench(
+            &format!(
+                "sim/packed256/{arch}x{n} ({} vec-ops)",
+                rounds256 * 256
+            ),
+            Some((rounds256 * 256) as f64),
+            || {
+                let stats = unit
+                    .run_stream_wide(&mut sim256, rounds256, 11)
+                    .unwrap();
+                assert_eq!(stats.errors, 0);
+            },
+        )
+        .clone();
+
+    let mut sim512 = unit.simulator_wide::<W512>()?;
+    let rounds512 = (vec_ops / 512).max(1);
+    let wide512 = bencher
+        .bench(
+            &format!(
+                "sim/packed512/{arch}x{n} ({} vec-ops)",
+                rounds512 * 512
+            ),
+            Some((rounds512 * 512) as f64),
+            || {
+                let stats = unit
+                    .run_stream_wide(&mut sim512, rounds512, 11)
+                    .unwrap();
+                assert_eq!(stats.errors, 0);
+            },
+        )
+        .clone();
+
+    // Levelization win: the same 64-lane stream on a program compiled
+    // without rank sorting, arena remapping or super-op fusion.
+    let unlev = Program::compile_unlevelized(unit.netlist())?;
+    let mut sim_unlev = Simulator64::from_program(Arc::new(unlev));
+    let unlevelized = bencher
+        .bench(
+            &format!("sim/packed64-unlevelized/{arch}x{n} ({vec_ops} vec-ops)"),
+            Some(vec_ops as f64),
+            || {
+                let stats =
+                    unit.run_stream64(&mut sim_unlev, rounds, 11).unwrap();
+                assert_eq!(stats.errors, 0);
+            },
+        )
+        .clone();
+
+    // Dirty-cone win: a weight-stationary stream (the broadcast operand
+    // held fixed across ops) settles only the per-lane operand cone.
+    let mut sim_ws = unit.simulator64()?;
+    let mut rng = Xoshiro256::new(11);
+    let b_fixed: Vec<u16> = (0..64).map(|_| rng.operand8()).collect();
+    let ws = bencher
+        .bench(
+            &format!(
+                "sim/packed64-weight-stationary/{arch}x{n} \
+                 ({vec_ops} vec-ops)"
+            ),
+            Some(vec_ops as f64),
+            || {
+                for _ in 0..rounds {
+                    let a: Vec<Vec<u16>> = (0..64)
+                        .map(|_| {
+                            (0..n).map(|_| rng.operand8()).collect()
+                        })
+                        .collect();
+                    let res =
+                        unit.run_op_wide(&mut sim_ws, &a, &b_fixed).unwrap();
+                    assert_eq!(res.products.len(), 64);
+                }
+            },
+        )
+        .clone();
+    let (cone_ev, cone_sk) = sim_ws.cone_stats();
+    let cone_skip_rate = if cone_ev + cone_sk == 0 {
+        0.0
+    } else {
+        cone_sk as f64 / (cone_ev + cone_sk) as f64
+    };
+
+    let ratio = |num: &nibblemul::bench::BenchResult,
+                 den: &nibblemul::bench::BenchResult| {
+        num.items_per_sec().unwrap_or(0.0)
+            / den.items_per_sec().unwrap_or(f64::INFINITY)
+    };
+    let speedup = ratio(&packed, &scalar);
+    let speedup256 = ratio(&wide256, &scalar);
+    let speedup512 = ratio(&wide512, &scalar);
+    let speedup_lev = ratio(&packed, &unlevelized);
+    let speedup_ws = ratio(&ws, &packed);
+    println!("packed64/scalar speedup: {speedup:.1}x (vector ops/sec)");
+    println!(
+        "packed256/scalar {speedup256:.1}x, packed512/scalar \
+         {speedup512:.1}x, levelized/unlevelized {speedup_lev:.2}x, \
+         weight-stationary/packed64 {speedup_ws:.2}x"
+    );
+    println!(
+        "dirty-cone: {cone_ev} ops evaluated, {cone_sk} skipped \
+         ({:.1}% skip rate, weight-stationary stream)",
+        cone_skip_rate * 100.0
+    );
     let json = format!(
         "{{\n  \"bench\": \"sim_engine\",\n  \"workload\": \
          \"{arch} x{n} activity estimation\",\n  \"results\": {},  \
-         \"speedup_packed_vs_scalar\": {speedup:.3}\n}}\n",
+         \"speedup_packed_vs_scalar\": {speedup:.3},\n  \
+         \"speedup_wide256_vs_scalar\": {speedup256:.3},\n  \
+         \"speedup_wide512_vs_scalar\": {speedup512:.3},\n  \
+         \"speedup_levelized_vs_unlevelized\": {speedup_lev:.3},\n  \
+         \"speedup_weight_stationary_vs_packed\": {speedup_ws:.3},\n  \
+         \"cone_skip_rate\": {cone_skip_rate:.4}\n}}\n",
         bencher.json_report().trim_end()
     );
     std::fs::write(&out, json)?;
@@ -983,7 +1123,29 @@ fn cmd_bench_sim(args: &Args) -> Result<()> {
             "packed engine speedup {speedup:.1}x is below the 8x \
              acceptance floor"
         );
-        println!("check passed: speedup >= 8x");
+        // Conservative floors for the new rows: the wide carriers and
+        // the levelized program must not be slower than what they
+        // replace, and a weight-stationary stream must skip some of
+        // the cone.
+        anyhow::ensure!(
+            speedup256 >= 1.0 && speedup512 >= 1.0,
+            "wide carriers are slower than the scalar engine \
+             (256: {speedup256:.2}x, 512: {speedup512:.2}x)"
+        );
+        anyhow::ensure!(
+            speedup_lev >= 1.0,
+            "levelized program is slower than the unlevelized one \
+             ({speedup_lev:.2}x)"
+        );
+        anyhow::ensure!(
+            cone_skip_rate > 0.0,
+            "weight-stationary stream skipped no cone ops"
+        );
+        println!(
+            "check passed: packed >= 8x, wide >= 1x, levelized >= 1x, \
+             cone skip rate {:.1}%",
+            cone_skip_rate * 100.0
+        );
     }
     Ok(())
 }
@@ -1143,7 +1305,7 @@ fn cmd_bench_gemm(args: &Args) -> Result<()> {
                 queue_depth: workers * 4,
                 max_open: Some(max_open),
             },
-            fabric_backends(arch, width, workers, true)?,
+            fabric_backends(arch, width, workers, true, 64)?,
         );
         let plan = GemmPlan::new(spec, order);
         let c =
@@ -1197,7 +1359,7 @@ fn cmd_bench_gemm(args: &Args) -> Result<()> {
             queue_depth: workers * 4,
             max_open: Some(max_open),
         },
-        fabric_backends(arch, width, workers, true)?,
+        fabric_backends(arch, width, workers, true, 64)?,
     );
     let c_stream = plan_ws.execute(
         &a,

@@ -1,20 +1,41 @@
-//! Word-parallel (64-lane bit-packed) logic simulation.
+//! Word-parallel (bit-packed) logic simulation, 64–512 lanes per pass.
 //!
-//! [`Simulator64`] packs 64 independent stimulus vectors into one `u64`
-//! per net (lane `l` lives in bit `l`) and evaluates the pre-compiled op
-//! program once per 64 vectors using bitwise instructions — up to 64
-//! two-value simulations for roughly the cost of one. This is the classic
+//! [`SimulatorWide<W>`] packs `W::LANES` independent stimulus vectors
+//! into one carrier word per net (lane `l` lives in bit `l` — see
+//! `sim/word.rs`) and evaluates the pre-compiled op program once per
+//! `W::LANES` vectors using bitwise instructions — up to 512 two-value
+//! simulations for roughly the cost of one. This is the classic
 //! bit-parallel ("PPSFP-style") technique from fault simulation, applied
 //! here to the Monte-Carlo switching-activity workload behind every
-//! power figure in the paper reproduction.
+//! power figure in the paper reproduction. [`Simulator64`] (`W = u64`)
+//! is the historical 64-lane instantiation; [`Simulator256`] and
+//! [`Simulator512`] run on `[u64; 4]` / `[u64; 8]` limb arrays.
 //!
 //! Per-net activity is counted as `popcount(old ^ new)` on every write,
-//! so aggregate toggle counts are **exactly** equal to the sum of 64
-//! scalar [`super::Simulator`] runs fed the same per-lane stimulus (both
-//! engines instantiate from one shared compiled [`Program`] — see
-//! `sim/ops.rs` — and the equivalence is asserted by
-//! `tests/sim64_equivalence.rs`). Power numbers derived from them are
-//! therefore bit-identical in aggregate, not approximations.
+//! so aggregate toggle counts are **exactly** equal to the sum of
+//! `W::LANES` scalar [`super::Simulator`] runs fed the same per-lane
+//! stimulus (all engines instantiate from one shared compiled
+//! [`Program`] — see `sim/ops.rs` — and the equivalence is asserted by
+//! `tests/sim64_equivalence.rs` / `tests/sim_wide_equivalence.rs`).
+//! Power numbers derived from them are therefore bit-identical in
+//! aggregate, not approximations.
+//!
+//! # Dirty-cone incremental evaluation
+//!
+//! Every externally triggered net write (input drive, poke, DFF
+//! commit) marks the reader ops of the changed net dirty via the
+//! program's fanout CSR; [`SimulatorWide::settle_dirty`] then
+//! evaluates **only** the marked cone, in one forward scan of the
+//! (topologically ordered) op list, re-marking downstream readers as
+//! changes propagate and stopping at ops whose inputs did not change.
+//! Because an unchanged write is a no-op in both modes (no value
+//! store, no toggle increment), the incremental result — values *and*
+//! toggle counts — is bit-identical to a full [`SimulatorWide::settle`]
+//! pass; the weight-stationary job streams produced by
+//! `kernels::schedule` (consecutive jobs share the broadcast operand)
+//! are exactly the workload where most of the cone stays clean.
+//! `cone_stats()` exposes monotone evaluated/skipped op counters,
+//! surfaced as `nibblemul_cone_*` metrics by the coordinator.
 
 use std::sync::Arc;
 
@@ -24,8 +45,10 @@ use crate::netlist::Netlist;
 use crate::util::SplitMix64;
 
 use super::ops::{self, PortHandle, Program};
+use super::word::{Word, W256, W512};
 
-/// Number of packed stimulus lanes (one per bit of the carrier word).
+/// Number of packed stimulus lanes in the `u64` engine (one per bit of
+/// the carrier word). Wider engines have `W::LANES`.
 pub const LANES: usize = 64;
 
 /// Deterministic per-lane seeds derived from a stream seed: lane `l` of a
@@ -40,62 +63,88 @@ pub fn lane_seeds(seed: u64) -> [u64; LANES] {
     out
 }
 
-#[inline]
-fn bcast(v: bool) -> u64 {
-    if v {
-        u64::MAX
-    } else {
-        0
-    }
+/// Per-lane seeds for an arbitrary lane count, drawn from the same
+/// `SplitMix64` stream as [`lane_seeds`]: the first 64 entries are
+/// identical, so a 256/512-lane run's lanes 0..64 replay exactly the
+/// lanes of a 64-lane run with the same stream seed.
+pub fn lane_seeds_n(seed: u64, lanes: usize) -> Vec<u64> {
+    let mut sm = SplitMix64::new(seed);
+    (0..lanes).map(|_| sm.next_u64()).collect()
 }
 
-/// 64-lane cycle-accurate simulator over a shared compiled [`Program`].
+/// `W::LANES`-lane cycle-accurate simulator over a shared compiled
+/// [`Program`].
 ///
-/// The API mirrors [`super::Simulator`] with lane-aware accessors: values
-/// are `u64` lane masks, inputs are driven per lane (or broadcast), and
-/// toggle counters aggregate across lanes.
-pub struct Simulator64 {
+/// The API mirrors [`super::Simulator`] with lane-aware accessors:
+/// values are `W` lane masks, inputs are driven per lane (or
+/// broadcast), and toggle counters aggregate across lanes.
+pub struct SimulatorWide<W: Word> {
     prog: Arc<Program>,
-    /// Lane mask per net: bit `l` = lane `l`'s value.
-    values: Vec<u64>,
-    /// Cumulative toggle count per net, summed over all 64 lanes.
+    /// Lane mask per arena net slot: bit `l` = lane `l`'s value.
+    values: Vec<W>,
+    /// Cumulative toggle count per arena net slot, summed over lanes.
     toggles: Vec<u64>,
-    next_q: Vec<u64>,
+    next_q: Vec<W>,
     /// Completed clock cycles (per lane — lanes step in lockstep).
     cycles: u64,
+    /// Dirty flag per op (set = inputs may have changed since last eval).
+    dirty: Vec<bool>,
+    /// Lowest dirty op index; `ops.len()` when fully clean (O(1) skip).
+    dirty_from: usize,
+    /// Monotone count of ops evaluated by `settle_dirty` scans.
+    cone_evaluated: u64,
+    /// Monotone count of ops skipped by `settle_dirty` scans.
+    cone_skipped: u64,
 }
 
-impl Simulator64 {
+/// The 64-lane engine (`W = u64`) — one `u64` carrier per net.
+pub type Simulator64 = SimulatorWide<u64>;
+
+/// 256-lane engine over `[u64; 4]` limb arrays.
+pub type Simulator256 = SimulatorWide<W256>;
+
+/// 512-lane engine over `[u64; 8]` limb arrays.
+pub type Simulator512 = SimulatorWide<W512>;
+
+impl<W: Word> SimulatorWide<W> {
     /// Compile `nl` and build a packed simulator over it. For repeated
     /// instantiation of the same design, compile once and use
-    /// [`Simulator64::from_program`].
+    /// [`SimulatorWide::from_program`].
     pub fn new(nl: &Netlist) -> Result<Self> {
         Ok(Self::from_program(Arc::new(Program::compile(nl)?)))
     }
 
     /// Instantiate from a pre-compiled program; every lane starts from the
     /// same reset state (constants driven, DFFs at init, combinational
-    /// cloud settled), exactly like 64 fresh scalar simulators.
+    /// cloud settled), exactly like `W::LANES` fresh scalar simulators.
     pub fn from_program(prog: Arc<Program>) -> Self {
-        let mut values = vec![0u64; prog.n_nets];
+        let mut values = vec![W::zero(); prog.n_nets];
         for &(net, v) in &prog.consts {
-            values[net as usize] = bcast(v);
+            values[net as usize] = W::splat(v);
         }
         for dff in &prog.dffs {
-            values[dff.q as usize] = bcast(dff.init);
+            values[dff.q as usize] = W::splat(dff.init);
         }
-        let next_q = vec![0u64; prog.dffs.len()];
+        let next_q = vec![W::zero(); prog.dffs.len()];
         let toggles = vec![0; prog.n_nets];
+        let dirty = vec![false; prog.ops.len()];
+        let dirty_from = prog.ops.len();
         let mut sim = Self {
             prog,
             values,
             toggles,
             next_q,
             cycles: 0,
+            dirty,
+            dirty_from,
+            cone_evaluated: 0,
+            cone_skipped: 0,
         };
         sim.settle();
         // Initialisation is not workload activity (matches Simulator::new).
         sim.toggles.iter_mut().for_each(|t| *t = 0);
+        sim.cone_evaluated = 0;
+        sim.cone_skipped = 0;
         sim
     }
 
@@ -109,16 +158,20 @@ impl Simulator64 {
         self.cycles
     }
 
-    /// Total simulated lane-cycles: `cycles() × 64`. This is the time
-    /// denominator for activity-based power (aggregate toggles over
+    /// Total simulated lane-cycles: `cycles() × W::LANES`. This is the
+    /// time denominator for activity-based power (aggregate toggles over
     /// aggregate simulated time).
     pub fn lane_cycles(&self) -> u64 {
-        self.cycles * LANES as u64
+        self.cycles * W::LANES as u64
     }
 
-    /// Cumulative per-net toggle counts, aggregated over all lanes.
-    pub fn toggles(&self) -> &[u64] {
-        &self.toggles
+    /// Cumulative per-net toggle counts aggregated over all lanes, in
+    /// **netlist** net order (what `tech::PowerModel::estimate_activity`
+    /// indexes by cell output). Storage is arena-ordered internally.
+    pub fn toggles(&self) -> Vec<u64> {
+        (0..self.prog.n_nets)
+            .map(|i| self.toggles[self.prog.slot(i)])
+            .collect()
     }
 
     /// Total toggles across all nets and lanes.
@@ -126,10 +179,20 @@ impl Simulator64 {
         self.toggles.iter().sum()
     }
 
-    /// Reset toggle statistics (e.g. after a warm-up phase).
+    /// Reset toggle statistics (e.g. after a warm-up phase). The
+    /// dirty-cone work counters are *not* reset — they are monotone so
+    /// the coordinator can fold deltas into `Metrics`.
     pub fn clear_activity(&mut self) {
         self.toggles.iter_mut().for_each(|t| *t = 0);
         self.cycles = 0;
+    }
+
+    /// Monotone dirty-cone work counters: `(ops evaluated, ops
+    /// skipped)` across every `settle_dirty` scan so far. A skipped op
+    /// is one a full settle would have evaluated but whose inputs were
+    /// provably unchanged.
+    pub fn cone_stats(&self) -> (u64, u64) {
+        (self.cone_evaluated, self.cone_skipped)
     }
 
     /// Resolve an input port to a reusable handle.
@@ -143,29 +206,32 @@ impl Simulator64 {
     }
 
     /// Drive an input bus with one integer value per lane (LSB-first bus,
-    /// `vals.len()` must be [`LANES`]).
+    /// `vals.len()` must be `W::LANES`).
     pub fn set_input_lanes(&mut self, name: &str, vals: &[u64]) -> Result<()> {
         let h = ops::resolve_input(&self.prog.ports, name)?;
         self.set_input_lanes_h(h, vals);
         Ok(())
     }
 
-    /// Handle-based variant of [`Simulator64::set_input_lanes`].
+    /// Handle-based variant of [`SimulatorWide::set_input_lanes`].
     pub fn set_input_lanes_h(&mut self, h: PortHandle, vals: &[u64]) {
         debug_assert!(h.input, "set_input_lanes_h needs an input handle");
-        assert_eq!(vals.len(), LANES, "one value per lane");
+        assert_eq!(vals.len(), W::LANES, "one value per lane");
         debug_assert!(
             self.prog.inputs[h.index].bits.len() <= 64,
             "set_input_lanes on a wide port: drive nets via poke_net_mask"
         );
         let n_bits = self.prog.inputs[h.index].bits.len();
         for i in 0..n_bits {
-            let idx = self.prog.inputs[h.index].bits[i].idx();
-            let mut plane = 0u64;
+            let idx =
+                self.prog.slot(self.prog.inputs[h.index].bits[i].idx());
+            let mut plane = W::zero();
             for (l, &v) in vals.iter().enumerate() {
-                plane |= ((v >> i) & 1) << l;
+                if (v >> i) & 1 != 0 {
+                    plane.set_lane(l, true);
+                }
             }
-            self.write(idx, plane);
+            self.write::<true>(idx, plane);
         }
     }
 
@@ -176,13 +242,14 @@ impl Simulator64 {
         Ok(())
     }
 
-    /// Handle-based variant of [`Simulator64::set_input_broadcast`].
+    /// Handle-based variant of [`SimulatorWide::set_input_broadcast`].
     pub fn set_input_broadcast_h(&mut self, h: PortHandle, value: u64) {
         debug_assert!(h.input, "set_input_broadcast_h needs an input handle");
         let n_bits = self.prog.inputs[h.index].bits.len();
         for i in 0..n_bits {
-            let idx = self.prog.inputs[h.index].bits[i].idx();
-            self.write(idx, bcast((value >> i) & 1 != 0));
+            let idx =
+                self.prog.slot(self.prog.inputs[h.index].bits[i].idx());
+            self.write::<true>(idx, W::splat((value >> i) & 1 != 0));
         }
     }
 
@@ -212,101 +279,190 @@ impl Simulator64 {
         lane: usize,
     ) -> u64 {
         debug_assert!(bits.len() <= 64);
-        debug_assert!(lane < LANES);
+        debug_assert!(lane < W::LANES);
         bits.iter().take(64).enumerate().fold(0u64, |acc, (i, b)| {
-            acc | (((self.values[b.idx()] >> lane) & 1) << i)
+            let v = self.values[self.prog.slot(b.idx())].lane(lane);
+            acc | ((v as u64) << i)
         })
     }
 
     /// Current lane mask of a single net (bit `l` = lane `l`).
-    pub fn peek_net_mask(&self, net: crate::netlist::NetId) -> u64 {
-        self.values[net.idx()]
+    pub fn peek_net_mask(&self, net: crate::netlist::NetId) -> W {
+        self.values[self.prog.slot(net.idx())]
     }
 
-    /// Set all 64 lanes of a single net from a lane mask. Toggle
+    /// Set all lanes of a single net from a lane mask. Toggle
     /// accounting is preserved. The caller is responsible for only poking
     /// primary-input nets.
-    pub fn poke_net_mask(&mut self, net: crate::netlist::NetId, mask: u64) {
-        self.write(net.idx(), mask);
+    pub fn poke_net_mask(&mut self, net: crate::netlist::NetId, mask: W) {
+        let idx = self.prog.slot(net.idx());
+        self.write::<true>(idx, mask);
     }
 
-    /// Propagate combinational logic to a fixed point — one levelized
-    /// pass over the compiled program, evaluating all 64 lanes per op.
-    pub fn settle(&mut self) {
-        for i in 0..self.prog.ops.len() {
-            let op = self.prog.ops[i];
-            let av = self.values[op.a as usize];
-            match op.code {
-                0 => self.write(op.o1 as usize, av),
-                1 => self.write(op.o1 as usize, !av),
-                2..=7 => {
-                    let bv = self.values[op.b as usize];
-                    let v = match op.code {
-                        2 => av & bv,
-                        3 => av | bv,
-                        4 => av ^ bv,
-                        5 => !(av & bv),
-                        6 => !(av | bv),
-                        _ => !(av ^ bv),
-                    };
-                    self.write(op.o1 as usize, v);
-                }
-                8 => {
-                    let a0 = self.values[op.b as usize];
-                    let a1 = self.values[op.c as usize];
-                    self.write(op.o1 as usize, (av & a1) | (!av & a0));
-                }
-                9 => {
-                    let bv = self.values[op.b as usize];
-                    self.write(op.o1 as usize, av ^ bv);
-                    self.write(op.o2 as usize, av & bv);
-                }
-                _ => {
-                    let bv = self.values[op.b as usize];
-                    let cv = self.values[op.c as usize];
-                    self.write(op.o1 as usize, av ^ bv ^ cv);
-                    self.write(
-                        op.o2 as usize,
-                        (av & bv) | (cv & (av ^ bv)),
-                    );
-                }
+    /// Evaluate op `i` on all lanes. With `MARK` set, any resulting
+    /// net change marks the net's reader ops dirty (always at higher
+    /// indices — the op list is topologically ordered).
+    #[inline]
+    fn eval_op<const MARK: bool>(&mut self, i: usize) {
+        let op = self.prog.ops[i];
+        let av = self.values[op.a as usize];
+        match op.code {
+            0 => self.write::<MARK>(op.o1 as usize, av),
+            1 => self.write::<MARK>(op.o1 as usize, !av),
+            2..=7 => {
+                let bv = self.values[op.b as usize];
+                let v = match op.code {
+                    2 => av & bv,
+                    3 => av | bv,
+                    4 => av ^ bv,
+                    5 => !(av & bv),
+                    6 => !(av | bv),
+                    _ => !(av ^ bv),
+                };
+                self.write::<MARK>(op.o1 as usize, v);
+            }
+            8 => {
+                let a0 = self.values[op.b as usize];
+                let a1 = self.values[op.c as usize];
+                self.write::<MARK>(op.o1 as usize, (av & a1) | (!av & a0));
+            }
+            9 => {
+                let bv = self.values[op.b as usize];
+                self.write::<MARK>(op.o1 as usize, av ^ bv);
+                self.write::<MARK>(op.o2 as usize, av & bv);
+            }
+            10 => {
+                let bv = self.values[op.b as usize];
+                let cv = self.values[op.c as usize];
+                self.write::<MARK>(op.o1 as usize, av ^ bv ^ cv);
+                self.write::<MARK>(
+                    op.o2 as usize,
+                    (av & bv) | (cv & (av ^ bv)),
+                );
+            }
+            11 => {
+                // Fused AND-NOT: the NOT's output is still written
+                // (o2) so its toggle count stays power-exact.
+                let bv = self.values[op.b as usize];
+                let t = !av;
+                self.write::<MARK>(op.o2 as usize, t);
+                self.write::<MARK>(op.o1 as usize, t & bv);
+            }
+            _ => {
+                // Fused XOR chain (code 12).
+                let bv = self.values[op.b as usize];
+                let cv = self.values[op.c as usize];
+                let t = av ^ bv;
+                self.write::<MARK>(op.o2 as usize, t);
+                self.write::<MARK>(op.o1 as usize, t ^ cv);
             }
         }
     }
 
+    /// Propagate combinational logic to a fixed point — one full
+    /// levelized pass over the compiled program, evaluating all lanes
+    /// per op. Leaves the simulator fully clean (every op evaluated),
+    /// so it also serves as the restore path after arbitrary mutation.
+    pub fn settle(&mut self) {
+        for i in 0..self.prog.ops.len() {
+            self.eval_op::<false>(i);
+        }
+        if self.dirty_from < self.prog.ops.len() {
+            self.dirty.iter_mut().for_each(|d| *d = false);
+        }
+        self.dirty_from = self.prog.ops.len();
+    }
+
+    /// Incremental settle: evaluate only ops whose inputs changed
+    /// since the last settle (the dirty cone), in one forward scan.
+    /// Marks set during the scan always land at higher indices
+    /// (topological order), so the scan absorbs its own propagation —
+    /// this is the dirty-set stabilization loop, replayed line-by-line
+    /// by `python/validate_cone.py`.
+    ///
+    /// Bit-identical to [`SimulatorWide::settle`] in both values and
+    /// toggle counts: every external mutation path marks its cone, and
+    /// evaluating a clean op is a no-op write (no store, no toggles).
+    pub fn settle_dirty(&mut self) {
+        let n = self.prog.ops.len();
+        if self.dirty_from >= n {
+            self.cone_skipped += n as u64;
+            return;
+        }
+        let start = self.dirty_from;
+        let mut evaluated = 0u64;
+        for i in start..n {
+            if self.dirty[i] {
+                self.dirty[i] = false;
+                self.eval_op::<true>(i);
+                evaluated += 1;
+            }
+        }
+        // Everything at or above `start` was cleared by the scan, and
+        // nothing below it was dirty: fully clean.
+        self.dirty_from = n;
+        self.cone_evaluated += evaluated;
+        self.cone_skipped += n as u64 - evaluated;
+    }
+
     #[inline]
-    fn write(&mut self, idx: usize, v: u64) {
+    fn write<const MARK: bool>(&mut self, idx: usize, v: W) {
         // popcount of the changed lanes == the number of scalar sims that
         // would have toggled this net on the same write.
-        let diff = self.values[idx] ^ v;
-        if diff != 0 {
+        let old = self.values[idx];
+        if old != v {
             self.values[idx] = v;
-            self.toggles[idx] += diff.count_ones() as u64;
+            self.toggles[idx] += (old ^ v).popcount();
+            if MARK {
+                self.mark_readers(idx);
+            }
+        }
+    }
+
+    /// Mark every op reading arena net `idx` dirty (fanout CSR walk).
+    #[inline]
+    fn mark_readers(&mut self, idx: usize) {
+        let s = self.prog.reader_start[idx] as usize;
+        let e = self.prog.reader_start[idx + 1] as usize;
+        for k in s..e {
+            let op = self.prog.reader_ops[k] as usize;
+            if !self.dirty[op] {
+                self.dirty[op] = true;
+                if op < self.dirty_from {
+                    self.dirty_from = op;
+                }
+            }
         }
     }
 
     /// One full clock cycle on every lane: settle, commit DFFs on the
     /// rising edge (per-lane enable/clear masks), settle the new state.
+    /// Both settles run incrementally — for weight-stationary streams
+    /// (shared broadcast operand) only the changed operand's fanout
+    /// cone is re-evaluated.
     pub fn step(&mut self) {
-        self.settle();
+        self.settle_dirty();
         // Sample all D inputs first (simultaneous edge semantics)...
         for k in 0..self.prog.dffs.len() {
             let f = self.prog.dffs[k];
             let cur = self.values[f.q as usize];
-            let en = f.en.map_or(u64::MAX, |e| self.values[e as usize]);
+            let en = match f.en {
+                Some(e) => self.values[e as usize],
+                None => W::splat(true),
+            };
             let mut next = (cur & !en) | (self.values[f.d as usize] & en);
             if let Some(r) = f.clr {
-                next &= !self.values[r as usize]; // clear dominates
+                next = next & !self.values[r as usize]; // clear dominates
             }
             self.next_q[k] = next;
         }
-        // ...then commit.
+        // ...then commit (tracked writes: changed q nets mark their cone).
         for k in 0..self.prog.dffs.len() {
             let q = self.prog.dffs[k].q as usize;
             let v = self.next_q[k];
-            self.write(q, v);
+            self.write::<true>(q, v);
         }
-        self.settle();
+        self.settle_dirty();
         self.cycles += 1;
     }
 
@@ -376,6 +532,58 @@ mod tests {
         assert_eq!(packed.total_toggles(), 64 * scalar.total_toggles());
     }
 
+    fn wide_lanes_match_scalar<W: Word>() {
+        let nl = xor_adder();
+        let prog = Arc::new(Program::compile(&nl).unwrap());
+        let mut packed = SimulatorWide::<W>::from_program(Arc::clone(&prog));
+        let seeds = lane_seeds_n(7, W::LANES);
+        let mut summed = vec![0u64; nl.n_nets];
+        let mut xs = vec![0u64; W::LANES];
+        let mut ys = vec![0u64; W::LANES];
+        for (l, &s) in seeds.iter().enumerate() {
+            let mut rng = crate::util::Xoshiro256::new(s);
+            xs[l] = rng.next_u64() & 0xFF;
+            ys[l] = rng.next_u64() & 0xFF;
+        }
+        packed.set_input_lanes("x", &xs).unwrap();
+        packed.set_input_lanes("y", &ys).unwrap();
+        packed.step();
+        for (l, &s) in seeds.iter().enumerate() {
+            let mut rng = crate::util::Xoshiro256::new(s);
+            let (x, y) = (rng.next_u64() & 0xFF, rng.next_u64() & 0xFF);
+            let mut scalar = Simulator::from_program(Arc::clone(&prog));
+            scalar.set_input("x", x).unwrap();
+            scalar.set_input("y", y).unwrap();
+            scalar.step();
+            assert_eq!(
+                packed.get_output_lane("q", l).unwrap(),
+                scalar.get_output("q").unwrap(),
+                "lane {l}"
+            );
+            for (acc, t) in summed.iter_mut().zip(scalar.toggles()) {
+                *acc += t;
+            }
+        }
+        assert_eq!(packed.toggles(), summed, "per-net aggregate toggles");
+        assert_eq!(packed.lane_cycles(), W::LANES as u64);
+    }
+
+    #[test]
+    fn w256_lanes_match_scalar() {
+        wide_lanes_match_scalar::<W256>();
+    }
+
+    #[test]
+    fn w512_lanes_match_scalar() {
+        wide_lanes_match_scalar::<W512>();
+    }
+
+    #[test]
+    fn lane_seed_streams_share_a_prefix() {
+        assert_eq!(lane_seeds(42)[..], lane_seeds_n(42, 64)[..]);
+        assert_eq!(lane_seeds_n(42, 512)[..64], lane_seeds(42)[..]);
+    }
+
     #[test]
     fn per_lane_toggles_sum_scalar_toggles() {
         let nl = xor_adder();
@@ -410,11 +618,58 @@ mod tests {
                 scalar.set_input("y", lane_inputs[l][t].1).unwrap();
                 scalar.step();
             }
-            for (acc, &t) in summed.iter_mut().zip(scalar.toggles()) {
+            for (acc, t) in summed.iter_mut().zip(scalar.toggles()) {
                 *acc += t;
             }
         }
-        assert_eq!(packed.toggles(), &summed[..], "per-net aggregate");
+        assert_eq!(packed.toggles(), summed, "per-net aggregate");
+    }
+
+    #[test]
+    fn dirty_settle_matches_full_settle() {
+        let nl = xor_adder();
+        let prog = Arc::new(Program::compile(&nl).unwrap());
+        let mut inc = Simulator64::from_program(Arc::clone(&prog));
+        let mut full = Simulator64::from_program(Arc::clone(&prog));
+        let mut rng = crate::util::Xoshiro256::new(0xD1);
+        for cycle in 0..40 {
+            // Weight-stationary-style stimulus: y changes rarely.
+            let x = rng.next_u64() & 0xFF;
+            inc.set_input_broadcast("x", x).unwrap();
+            full.set_input_broadcast("x", x).unwrap();
+            if cycle % 8 == 0 {
+                let y = rng.next_u64() & 0xFF;
+                inc.set_input_broadcast("y", y).unwrap();
+                full.set_input_broadcast("y", y).unwrap();
+            }
+            inc.settle_dirty();
+            full.settle();
+            for l in [0, 31, 63] {
+                assert_eq!(
+                    inc.get_output_lane("q", l).unwrap(),
+                    full.get_output_lane("q", l).unwrap()
+                );
+            }
+            inc.step();
+            full.step(); // full.step also goes dirty; values stay equal
+        }
+        assert_eq!(inc.toggles(), full.toggles(), "toggle-exact");
+        let (ev, sk) = inc.cone_stats();
+        assert!(ev > 0, "cone evaluated some ops");
+        assert!(sk > 0, "stationary operand skipped some ops");
+    }
+
+    #[test]
+    fn clean_settle_dirty_is_a_noop_and_counts_skips() {
+        let nl = xor_adder();
+        let mut sim = Simulator64::new(&nl).unwrap();
+        let (ev0, sk0) = sim.cone_stats();
+        assert_eq!((ev0, sk0), (0, 0), "init work is not counted");
+        sim.settle_dirty();
+        let (ev, sk) = sim.cone_stats();
+        assert_eq!(ev, 0);
+        assert_eq!(sk as usize, sim.program().n_ops());
+        assert_eq!(sim.total_toggles(), 0);
     }
 
     #[test]

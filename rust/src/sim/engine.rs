@@ -7,11 +7,18 @@
 //! is not modelled — the power model accounts for that with a documented
 //! glitch factor (see `tech::power`).
 //!
-//! This is the one-vector-at-a-time engine; [`super::Simulator64`] runs 64
-//! independent stimulus vectors per pass over the same compiled program
-//! (see `sim/ops.rs`). Both instantiate from a shared [`super::Program`]
-//! (`Arc`'d, compile-once / instantiate-many), so they execute
-//! bit-identical programs.
+//! This is the one-vector-at-a-time engine; [`super::SimulatorWide`] runs
+//! 64–512 independent stimulus vectors per pass over the same compiled
+//! program (see `sim/ops.rs`). Both instantiate from a shared
+//! [`super::Program`] (`Arc`'d, compile-once / instantiate-many), so they
+//! execute bit-identical programs.
+//!
+//! Net state is stored in the program's *arena* order (levelized
+//! first-write order — see `sim/ops.rs`); every public peek/poke/port
+//! boundary translates netlist `NetId`s through `Program::slot`, so
+//! callers never see arena indices. This engine is the always-full-settle
+//! reference: the dirty-cone incremental mode lives only in the packed
+//! engine and is differentially asserted against this one.
 
 use std::sync::Arc;
 
@@ -79,9 +86,13 @@ impl Simulator {
         self.cycles
     }
 
-    /// Cumulative per-net toggle counts.
-    pub fn toggles(&self) -> &[u64] {
-        &self.toggles
+    /// Cumulative per-net toggle counts, in **netlist** net order (the
+    /// order `tech::PowerModel::estimate_activity` indexes by cell
+    /// output). Storage is arena-ordered internally; this un-permutes.
+    pub fn toggles(&self) -> Vec<u64> {
+        (0..self.prog.n_nets)
+            .map(|i| self.toggles[self.prog.slot(i)])
+            .collect()
     }
 
     /// Total toggles across all nets.
@@ -119,7 +130,8 @@ impl Simulator {
         debug_assert!(h.input, "set_input_h needs an input handle");
         let n_bits = self.prog.inputs[h.index].bits.len();
         for i in 0..n_bits {
-            let idx = self.prog.inputs[h.index].bits[i].idx();
+            let idx =
+                self.prog.slot(self.prog.inputs[h.index].bits[i].idx());
             self.write(idx, (value >> i) & 1 != 0);
         }
     }
@@ -166,7 +178,7 @@ impl Simulator {
             .take(64)
             .enumerate()
             .fold(0u64, |acc, (i, b)| {
-                acc | ((self.values[b.idx()] as u64) << i)
+                acc | ((self.values[self.prog.slot(b.idx())] as u64) << i)
             })
     }
 
@@ -181,14 +193,15 @@ impl Simulator {
 
     /// Current value of a single net.
     pub fn peek_net(&self, net: crate::netlist::NetId) -> bool {
-        self.values[net.idx()]
+        self.values[self.prog.slot(net.idx())]
     }
 
     /// Set a single net's value directly (for wide primary-input ports
     /// whose buses exceed 64 bits). Toggle accounting is preserved. The
     /// caller is responsible for only poking primary-input nets.
     pub fn poke_net(&mut self, net: crate::netlist::NetId, v: bool) {
-        self.write(net.idx(), v);
+        let idx = self.prog.slot(net.idx());
+        self.write(idx, v);
     }
 
     /// Propagate combinational logic to a fixed point (single levelized
@@ -227,7 +240,7 @@ impl Simulator {
                     self.write(op.o1 as usize, av ^ bv);
                     self.write(op.o2 as usize, av && bv);
                 }
-                _ => {
+                10 => {
                     let bv = self.values[op.b as usize];
                     let cv = self.values[op.c as usize];
                     self.write(op.o1 as usize, av ^ bv ^ cv);
@@ -235,6 +248,22 @@ impl Simulator {
                         op.o2 as usize,
                         (av && bv) || (cv && (av ^ bv)),
                     );
+                }
+                11 => {
+                    // Fused AND-NOT: the NOT's output is still written
+                    // (o2) so its toggle count stays power-exact.
+                    let bv = self.values[op.b as usize];
+                    let t = !av;
+                    self.write(op.o2 as usize, t);
+                    self.write(op.o1 as usize, t && bv);
+                }
+                _ => {
+                    // Fused XOR chain (code 12).
+                    let bv = self.values[op.b as usize];
+                    let cv = self.values[op.c as usize];
+                    let t = av ^ bv;
+                    self.write(op.o2 as usize, t);
+                    self.write(op.o1 as usize, t ^ cv);
                 }
             }
         }

@@ -7,25 +7,35 @@
 //! waveforms for the Fig. 3 functional-verification reproduction.
 //!
 //! The pipeline is compile-once / instantiate-many: a netlist is compiled
-//! once into a [`Program`] (flat op records in topological order + port
-//! tables, `sim/ops.rs`), and any number of simulator instances are
+//! once into a [`Program`] (flat op records, rank-levelized and
+//! arena-remapped with fused super-ops — `sim/ops.rs` and DESIGN.md
+//! §Levelized programs), and any number of simulator instances are
 //! stamped out from the shared `Arc<Program>`. The
 //! [`crate::design::DesignStore`] caches one program per `(Arch, n)` for
-//! the whole process, so the sweep, the serving coordinator, the harness
-//! and the benches all execute the same compiled artifact.
+//! the whole process — and on disk in the versioned NMLD artifact — so
+//! the sweep, the serving coordinator, the harness and the benches all
+//! execute the same compiled artifact.
 //!
-//! Two engines share that program form:
+//! Two engine families share that program form:
 //!
 //! * [`Simulator`] — scalar, one stimulus vector at a time. Drives the
-//!   interactive paths (VCD waveforms, single-op debugging, unit tests).
-//! * [`Simulator64`] — word-parallel: 64 independent stimulus vectors
-//!   packed one-per-bit into a `u64` per net, evaluated with bitwise ops
-//!   (up to 64 simulations for the cost of one pass). Drives the bulk
-//!   Monte-Carlo paths: activity/power estimation, sweep stimulus,
-//!   differential fuzzing and batched serving. Aggregate toggle counts
-//!   are exactly equal to the sum of 64 scalar runs on the same per-lane
-//!   stimulus (asserted by `tests/sim64_equivalence.rs`), so power
-//!   numbers are bit-identical, not approximate.
+//!   interactive paths (VCD waveforms, single-op debugging, unit tests)
+//!   and serves as the always-full-settle reference engine.
+//! * [`SimulatorWide`] — word-parallel: `W::LANES` independent stimulus
+//!   vectors packed one-per-bit into a carrier [`Word`] per net,
+//!   evaluated with bitwise ops (up to 512 simulations for the cost of
+//!   one pass). [`Simulator64`] (`u64`), [`Simulator256`] (`[u64; 4]`)
+//!   and [`Simulator512`] (`[u64; 8]`) are the stamped widths. Drives
+//!   the bulk Monte-Carlo paths: activity/power estimation, sweep
+//!   stimulus, differential fuzzing and batched serving. Aggregate
+//!   toggle counts are exactly equal to the sum of `W::LANES` scalar
+//!   runs on the same per-lane stimulus (asserted by
+//!   `tests/sim64_equivalence.rs` / `tests/sim_wide_equivalence.rs`),
+//!   so power numbers are bit-identical, not approximate. The packed
+//!   engines also support dirty-cone incremental settling
+//!   (`settle_dirty`): only the fanout cone of changed nets is
+//!   re-evaluated — the win for weight-stationary job streams where
+//!   consecutive ops share the broadcast operand.
 //!
 //! Hot loops should resolve ports once via `input_handle`/`output_handle`
 //! and use the `*_h` accessors; the string-keyed entry points are
@@ -36,9 +46,14 @@ mod engine;
 mod ops;
 mod testbench;
 mod vcd;
+mod word;
 
-pub use batch::{lane_seeds, Simulator64, LANES};
+pub use batch::{
+    lane_seeds, lane_seeds_n, Simulator256, Simulator512, Simulator64,
+    SimulatorWide, LANES,
+};
 pub use engine::Simulator;
 pub use ops::{PortHandle, Program};
 pub use testbench::{drive_and_settle, run_cycles};
 pub use vcd::VcdWriter;
+pub use word::{WideWord, Word, W256, W512};

@@ -5,12 +5,47 @@
 //! or netlist indirection in the hot loop — EXPERIMENTS.md §Perf), the
 //! sequential cells into [`DffOp`] records, plus the port tables needed to
 //! drive and observe the design. Both the scalar [`super::Simulator`] and
-//! the 64-lane word-parallel [`super::Simulator64`] instantiate from the
+//! the word-parallel [`super::SimulatorWide`] engines instantiate from the
 //! same `Arc<Program>` — compile once, instantiate many (the
 //! `design::DesignStore` caches one program per `(Arch, n)` for the whole
-//! process). Keeping one compiler guarantees the two engines execute
+//! process). Keeping one compiler guarantees the engines execute
 //! bit-identical programs, which the packed-vs-scalar equivalence tests
 //! rely on.
+//!
+//! # Levelized layout (see DESIGN.md §Levelized programs)
+//!
+//! [`Program::compile`] does three things beyond flattening:
+//!
+//! 1. **Super-op fusion**: a `not` whose output feeds exactly one
+//!    combinational reader, an `and`, fuses into one AND-NOT record
+//!    (code 11); an `xor` feeding exactly one `xor` fuses into one
+//!    XOR-chain record (code 12). The intermediate net is *still
+//!    written* (`o2`) so per-net toggle counts — and therefore the
+//!    power model, which charges energy per netlist net — are
+//!    unchanged; fusion only removes a dispatch + re-read, never an
+//!    observable write.
+//! 2. **Rank levelization**: every op gets rank `1 + max(rank of read
+//!    nets)` (sources — inputs, constants, DFF outputs — are rank 0),
+//!    and the op list is stable-sorted by rank. The result is still a
+//!    topological order (every producer has strictly lower rank), so
+//!    one forward pass settles the cloud, but ops of equal depth are
+//!    now adjacent: the metadata enables per-level scheduling and the
+//!    order itself is what the artifact caches.
+//! 3. **Arena remap**: net storage is renumbered in first-write order
+//!    (constants, DFF state, input port bits, then op outputs in
+//!    levelized order), so a settle pass walks `values[]` nearly
+//!    monotonically — cache-linear instead of netlist-creation-order
+//!    scattered. `remap` translates netlist `NetId` → arena slot; the
+//!    port tables stay in netlist space and the simulators translate
+//!    at every public peek/poke boundary.
+//!
+//! The compiler also builds a fanout CSR (`reader_start`/`reader_ops`:
+//! arena net → indices of ops reading it) used by the dirty-cone
+//! incremental mode of [`super::SimulatorWide`]: a changed net marks
+//! exactly its reader ops dirty, and a settle evaluates only the
+//! marked cone. [`Program::compile_unlevelized`] skips fusion,
+//! sorting, and remapping (identity arena) — the differential baseline
+//! for the levelized path in tests and `bench-sim`.
 
 use std::collections::HashMap;
 
@@ -22,8 +57,9 @@ use crate::netlist::{Cell, Netlist, Port};
 ///
 /// `code`: 0 buf, 1 not, 2..=7 binary (`BinKind` order: and, or, xor,
 /// nand, nor, xnor), 8 mux (`a`=sel, `b`=a0, `c`=a1), 9 half adder,
-/// 10 full adder.
-#[derive(Clone, Copy)]
+/// 10 full adder, 11 fused AND-NOT (`o2 = !a` then `o1 = o2 & b`),
+/// 12 fused XOR chain (`o2 = a ^ b` then `o1 = o2 ^ c`).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
 pub(crate) struct Op {
     pub code: u8,
     pub a: u32,
@@ -31,6 +67,35 @@ pub(crate) struct Op {
     pub c: u32,
     pub o1: u32,
     pub o2: u32,
+}
+
+impl Op {
+    /// Number of nets this op reads (`a`, then `b`, then `c`).
+    ///
+    /// Mux (code 8) counts all three operands: its *value* depends on
+    /// every one, so dirty-cone marking must treat each as a read even
+    /// though a scalar evaluation only loads the selected branch.
+    #[inline]
+    pub(crate) fn n_reads(self) -> usize {
+        match self.code {
+            0 | 1 => 1,
+            8 | 10 | 12 => 3,
+            _ => 2,
+        }
+    }
+
+    /// Read operands in `a`, `b`, `c` order (only the first
+    /// [`Op::n_reads`] entries are meaningful).
+    #[inline]
+    pub(crate) fn reads(self) -> [u32; 3] {
+        [self.a, self.b, self.c]
+    }
+
+    /// True if the op writes `o2` in addition to `o1`.
+    #[inline]
+    pub(crate) fn writes_two(self) -> bool {
+        matches!(self.code, 9 | 10 | 11 | 12)
+    }
 }
 
 /// A pre-compiled sequential (DFF) cell.
@@ -46,28 +111,61 @@ pub(crate) struct DffOp {
 /// The full compiled program of a netlist: everything a simulator needs,
 /// detached from the `Netlist` it was compiled from, so one `Arc<Program>`
 /// can back any number of simulator instances without borrowing.
+///
+/// All net indices inside `ops`, `dffs`, and `consts` are **arena
+/// slots** (levelized first-write order); the port tables (`inputs`,
+/// `outputs`) remain in netlist space and are translated through
+/// [`Program::slot`] at the simulators' public boundaries.
 pub struct Program {
-    /// Combinational ops in topological order.
+    /// Combinational ops, stable-sorted by rank (still a topological
+    /// order — one forward pass settles).
     pub(crate) ops: Vec<Op>,
     /// Sequential cells, in netlist order.
     pub(crate) dffs: Vec<DffOp>,
-    /// Constant-driven nets: (net index, value).
+    /// Constant-driven nets: (arena slot, value).
     pub(crate) consts: Vec<(u32, bool)>,
-    /// Net-state vector length.
+    /// Net-state vector length (arena size == netlist net count).
     pub(crate) n_nets: usize,
-    /// Primary input ports (name + LSB-first net ids).
+    /// Primary input ports (name + LSB-first netlist-space net ids).
     pub(crate) inputs: Vec<Port>,
     /// Primary output ports.
     pub(crate) outputs: Vec<Port>,
     /// Port name -> handle lookup (cold path; hot loops use handles).
     pub(crate) ports: HashMap<String, PortHandle>,
+    /// Rank offsets: ops of rank `l` (1-based) span
+    /// `levels[l-1]..levels[l]`; `levels.len() - 1` is the logic depth.
+    pub(crate) levels: Vec<u32>,
+    /// Netlist net index -> arena slot.
+    pub(crate) remap: Vec<u32>,
+    /// Fanout CSR offsets: arena net `s` is read by
+    /// `reader_ops[reader_start[s]..reader_start[s+1]]`.
+    pub(crate) reader_start: Vec<u32>,
+    /// Fanout CSR payload: op indices, ascending per net.
+    pub(crate) reader_ops: Vec<u32>,
+    /// Number of super-op fusions applied.
+    pub(crate) fused: usize,
+    /// False for [`Program::compile_unlevelized`] output.
+    pub(crate) levelized: bool,
 }
 
 impl Program {
-    /// Compile `nl` into the flat program form (errors on combinational
-    /// cycles, via `topo_order`).
+    /// Compile `nl` into the levelized flat program form (errors on
+    /// combinational cycles, via `topo_order`).
     pub fn compile(nl: &Netlist) -> Result<Self> {
+        Self::compile_with(nl, true)
+    }
+
+    /// Compile without fusion, rank sorting, or arena remapping
+    /// (identity net numbering, plain topological op order). Same
+    /// observable behaviour as [`Program::compile`] — the differential
+    /// baseline used by tests and `bench-sim`.
+    pub fn compile_unlevelized(nl: &Netlist) -> Result<Self> {
+        Self::compile_with(nl, false)
+    }
+
+    fn compile_with(nl: &Netlist, levelize: bool) -> Result<Self> {
         let order = nl.topo_order()?;
+        let n_nets = nl.n_nets;
         let mut dffs = Vec::new();
         let mut consts = Vec::new();
         for cell in &nl.cells {
@@ -83,7 +181,7 @@ impl Program {
                 _ => {}
             }
         }
-        let ops = order
+        let mut ops: Vec<Op> = order
             .into_iter()
             .map(|ci| {
                 let cell = &nl.cells[ci];
@@ -143,14 +241,93 @@ impl Program {
                 }
             })
             .collect();
+
+        let mut fused = 0usize;
+        if levelize {
+            fused = fuse_super_ops(&mut ops, n_nets);
+            levelize_ops(&mut ops, n_nets);
+        }
+
+        // Arena remap in first-write order (identity when unlevelized).
+        let remap = if levelize {
+            let mut remap = vec![u32::MAX; n_nets];
+            let mut next: u32 = 0;
+            let mut assign = |remap: &mut Vec<u32>, net: u32| {
+                if remap[net as usize] == u32::MAX {
+                    remap[net as usize] = next;
+                    next += 1;
+                }
+            };
+            for &(net, _) in &consts {
+                assign(&mut remap, net);
+            }
+            for f in &dffs {
+                assign(&mut remap, f.q);
+            }
+            for p in &nl.inputs {
+                for b in &p.bits {
+                    assign(&mut remap, b.0);
+                }
+            }
+            for op in &ops {
+                // Eval-order writes: fused ops store the intermediate
+                // (o2) first, adders store sum (o1) first.
+                if matches!(op.code, 11 | 12) {
+                    assign(&mut remap, op.o2);
+                    assign(&mut remap, op.o1);
+                } else {
+                    assign(&mut remap, op.o1);
+                    if op.writes_two() {
+                        assign(&mut remap, op.o2);
+                    }
+                }
+            }
+            // Leftovers (undriven / dangling nets) keep relative order.
+            for i in 0..n_nets {
+                assign(&mut remap, i as u32);
+            }
+            remap
+        } else {
+            (0..n_nets as u32).collect()
+        };
+
+        // Rewrite every net field into arena space. Unused operand
+        // fields (they default to 0) are remapped too — harmless, the
+        // evaluators never read them for those codes.
+        for op in ops.iter_mut() {
+            op.a = remap[op.a as usize];
+            op.b = remap[op.b as usize];
+            op.c = remap[op.c as usize];
+            op.o1 = remap[op.o1 as usize];
+            op.o2 = remap[op.o2 as usize];
+        }
+        for f in dffs.iter_mut() {
+            f.d = remap[f.d as usize];
+            f.q = remap[f.q as usize];
+            f.en = f.en.map(|n| remap[n as usize]);
+            f.clr = f.clr.map(|n| remap[n as usize]);
+        }
+        for c in consts.iter_mut() {
+            c.0 = remap[c.0 as usize];
+        }
+
+        let levels = level_offsets(&ops, n_nets, levelize);
+        let (reader_start, reader_ops) = fanout_csr(&ops, n_nets);
+
         Ok(Self {
             ops,
             dffs,
             consts,
-            n_nets: nl.n_nets,
+            n_nets,
             inputs: nl.inputs.clone(),
             outputs: nl.outputs.clone(),
             ports: port_map(nl),
+            levels,
+            remap,
+            reader_start,
+            reader_ops,
+            fused,
+            levelized: levelize,
         })
     }
 
@@ -168,6 +345,192 @@ impl Program {
     pub fn n_dffs(&self) -> usize {
         self.dffs.len()
     }
+
+    /// Logic depth: number of topological ranks in the levelized
+    /// order (1 for an unlevelized program with any ops).
+    pub fn n_levels(&self) -> usize {
+        self.levels.len().saturating_sub(1)
+    }
+
+    /// Number of super-op fusions (AND-NOT + XOR-chain) applied.
+    pub fn n_fused(&self) -> usize {
+        self.fused
+    }
+
+    /// True unless built by [`Program::compile_unlevelized`].
+    pub fn is_levelized(&self) -> bool {
+        self.levelized
+    }
+
+    /// Translate a netlist-space net index to its arena slot.
+    #[inline]
+    pub(crate) fn slot(&self, netlist_idx: usize) -> usize {
+        self.remap[netlist_idx] as usize
+    }
+}
+
+/// Fuse single-reader NOT→AND and XOR→XOR producer/consumer pairs into
+/// super-ops (codes 11/12). The fused record sits at the *consumer's*
+/// position (safe: the producer's only combinational reader is the
+/// consumer; DFF and port reads observe the still-written `o2` after
+/// settle). Returns the number of fusions.
+fn fuse_super_ops(ops: &mut Vec<Op>, n_nets: usize) -> usize {
+    // Per-occurrence read counts and the writing op per net.
+    let mut readers = vec![0u32; n_nets];
+    let mut writer: Vec<i64> = vec![-1; n_nets];
+    for (i, op) in ops.iter().enumerate() {
+        for k in 0..op.n_reads() {
+            readers[op.reads()[k] as usize] += 1;
+        }
+        writer[op.o1 as usize] = i as i64;
+        if op.writes_two() {
+            writer[op.o2 as usize] = i as i64;
+        }
+    }
+    let mut dead = vec![false; ops.len()];
+    let mut fused = 0usize;
+    for i in 0..ops.len() {
+        let op = ops[i];
+        // Which producer code can melt into this consumer?
+        let want_code: u8 = match op.code {
+            2 => 1, // and  <- not
+            4 => 4, // xor  <- xor
+            _ => continue,
+        };
+        for (t, other) in [(op.a, op.b), (op.b, op.a)] {
+            let j = writer[t as usize];
+            if j < 0 || dead[j as usize] {
+                continue;
+            }
+            let p = ops[j as usize];
+            // Only a clean single-output producer whose sole
+            // combinational reader is this op (per-occurrence count,
+            // so `t & t` style double reads disqualify).
+            if p.code != want_code || p.o1 != t || readers[t as usize] != 1 {
+                continue;
+            }
+            ops[i] = if op.code == 2 {
+                // o2 = !a; o1 = o2 & b
+                Op {
+                    code: 11,
+                    a: p.a,
+                    b: other,
+                    c: 0,
+                    o1: op.o1,
+                    o2: t,
+                }
+            } else {
+                // o2 = a ^ b; o1 = o2 ^ c
+                Op {
+                    code: 12,
+                    a: p.a,
+                    b: p.b,
+                    c: other,
+                    o1: op.o1,
+                    o2: t,
+                }
+            };
+            dead[j as usize] = true;
+            fused += 1;
+            break;
+        }
+    }
+    if fused > 0 {
+        let mut kept = Vec::with_capacity(ops.len() - fused);
+        for (i, op) in ops.iter().enumerate() {
+            if !dead[i] {
+                kept.push(*op);
+            }
+        }
+        *ops = kept;
+    }
+    fused
+}
+
+/// Stable-sort `ops` by rank (rank = 1 + max rank of read nets;
+/// sources are rank 0). Input must be topologically ordered; output
+/// still is — a producer's rank is strictly below every reader's, and
+/// stable sorting preserves the relative order within a rank.
+fn levelize_ops(ops: &mut Vec<Op>, n_nets: usize) {
+    let mut net_rank = vec![0u32; n_nets];
+    let mut op_rank = vec![0u32; ops.len()];
+    for (i, op) in ops.iter().enumerate() {
+        let mut r = 0;
+        for k in 0..op.n_reads() {
+            r = r.max(net_rank[op.reads()[k] as usize]);
+        }
+        let r = r + 1;
+        op_rank[i] = r;
+        net_rank[op.o1 as usize] = r;
+        if op.writes_two() {
+            net_rank[op.o2 as usize] = r;
+        }
+    }
+    let mut idx: Vec<usize> = (0..ops.len()).collect();
+    idx.sort_by_key(|&i| op_rank[i]); // stable
+    *ops = idx.iter().map(|&i| ops[i]).collect();
+}
+
+/// Rank offsets for the final op order: `levels[l-1]..levels[l]` spans
+/// rank `l`. Recomputed post-sort so it holds for both compile modes.
+fn level_offsets(ops: &[Op], n_nets: usize, levelize: bool) -> Vec<u32> {
+    if ops.is_empty() {
+        return vec![0];
+    }
+    if !levelize {
+        // One synthetic rank containing everything.
+        return vec![0, ops.len() as u32];
+    }
+    let mut net_rank = vec![0u32; n_nets];
+    let mut counts: Vec<u32> = Vec::new();
+    for op in ops {
+        let mut r = 0;
+        for k in 0..op.n_reads() {
+            r = r.max(net_rank[op.reads()[k] as usize]);
+        }
+        let r = r + 1;
+        net_rank[op.o1 as usize] = r;
+        if op.writes_two() {
+            net_rank[op.o2 as usize] = r;
+        }
+        if counts.len() < r as usize {
+            counts.resize(r as usize, 0);
+        }
+        counts[r as usize - 1] += 1;
+    }
+    let mut offsets = vec![0u32];
+    let mut acc = 0;
+    for c in counts {
+        acc += c;
+        offsets.push(acc);
+    }
+    offsets
+}
+
+/// Fanout CSR over the final (arena-space) op list: for each arena
+/// net, the ascending indices of ops that read it. Powers dirty-cone
+/// marking: `write(net)` marks exactly `reader_ops[start[net]..
+/// start[net+1]]`.
+fn fanout_csr(ops: &[Op], n_nets: usize) -> (Vec<u32>, Vec<u32>) {
+    let mut start = vec![0u32; n_nets + 1];
+    for op in ops {
+        for k in 0..op.n_reads() {
+            start[op.reads()[k] as usize + 1] += 1;
+        }
+    }
+    for i in 1..=n_nets {
+        start[i] += start[i - 1];
+    }
+    let mut fill: Vec<u32> = start[..n_nets].to_vec();
+    let mut payload = vec![0u32; start[n_nets] as usize];
+    for (i, op) in ops.iter().enumerate() {
+        for k in 0..op.n_reads() {
+            let s = op.reads()[k] as usize;
+            payload[fill[s] as usize] = i as u32;
+            fill[s] += 1;
+        }
+    }
+    (start, payload)
 }
 
 /// A resolved handle to a named port: look the name up once, then use the
@@ -232,4 +595,125 @@ pub(crate) fn resolve_port(
         .get(name)
         .copied()
         .ok_or_else(|| anyhow!("no port named {name}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::multipliers::Arch;
+
+    fn programs(arch: Arch, n: usize) -> (Program, Program) {
+        let nl = {
+            let mut nl = arch.build(n);
+            crate::synth::optimize_in_place(&mut nl);
+            nl
+        };
+        (
+            Program::compile(&nl).unwrap(),
+            Program::compile_unlevelized(&nl).unwrap(),
+        )
+    }
+
+    #[test]
+    fn levelized_order_is_topological() {
+        for arch in Arch::ALL {
+            let (p, _) = programs(arch, 8);
+            // Every read net is either a source (const/dff/input — not
+            // written by any op) or written by a strictly earlier op.
+            let mut written_at = vec![usize::MAX; p.n_nets];
+            for (i, op) in p.ops.iter().enumerate() {
+                for k in 0..op.n_reads() {
+                    let r = op.reads()[k] as usize;
+                    assert!(
+                        written_at[r] == usize::MAX || written_at[r] < i,
+                        "{arch:?}: op {i} reads net {r} before its write"
+                    );
+                }
+                written_at[op.o1 as usize] = i;
+                if op.writes_two() {
+                    written_at[op.o2 as usize] = i;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn levels_partition_ops_monotonically() {
+        for arch in Arch::ALL {
+            let (p, u) = programs(arch, 8);
+            assert!(p.is_levelized() && !u.is_levelized());
+            assert_eq!(
+                *p.levels.last().unwrap() as usize,
+                p.n_ops(),
+                "offsets must cover every op"
+            );
+            assert!(p.levels.windows(2).all(|w| w[0] <= w[1]));
+            assert!(
+                p.n_levels() >= 1 || p.n_ops() == 0,
+                "{arch:?}: depth must be positive"
+            );
+            assert_eq!(u.n_levels(), if u.n_ops() == 0 { 0 } else { 1 });
+        }
+    }
+
+    #[test]
+    fn remap_is_a_permutation() {
+        for arch in Arch::ALL {
+            let (p, u) = programs(arch, 8);
+            let mut seen = vec![false; p.n_nets];
+            for &s in &p.remap {
+                assert!(!seen[s as usize], "{arch:?}: duplicate arena slot");
+                seen[s as usize] = true;
+            }
+            assert!(seen.iter().all(|&b| b), "{arch:?}: arena slot unassigned");
+            assert!(u.remap.iter().enumerate().all(|(i, &s)| i == s as usize));
+        }
+    }
+
+    #[test]
+    fn fusion_preserves_op_read_write_sets() {
+        // Fused programs still write every net the unlevelized program
+        // writes (the power model charges per-net activity).
+        for arch in Arch::ALL {
+            let (p, u) = programs(arch, 4);
+            let writes = |prog: &Program| {
+                let mut w = vec![false; prog.n_nets];
+                for op in &prog.ops {
+                    // Translate back to netlist space for comparison.
+                    let unslot = |s: u32| {
+                        prog.remap.iter().position(|&x| x == s).unwrap()
+                    };
+                    w[unslot(op.o1)] = true;
+                    if op.writes_two() {
+                        w[unslot(op.o2)] = true;
+                    }
+                }
+                w
+            };
+            assert_eq!(writes(&p), writes(&u), "{arch:?}");
+            assert_eq!(
+                p.n_ops() + p.n_fused(),
+                u.n_ops(),
+                "{arch:?}: each fusion removes exactly one op record"
+            );
+        }
+    }
+
+    #[test]
+    fn fanout_csr_lists_every_reader() {
+        for arch in Arch::ALL {
+            let (p, _) = programs(arch, 4);
+            let mut expect: Vec<Vec<u32>> = vec![Vec::new(); p.n_nets];
+            for (i, op) in p.ops.iter().enumerate() {
+                for k in 0..op.n_reads() {
+                    expect[op.reads()[k] as usize].push(i as u32);
+                }
+            }
+            for s in 0..p.n_nets {
+                let got = &p.reader_ops[p.reader_start[s] as usize
+                    ..p.reader_start[s + 1] as usize];
+                assert_eq!(got, &expect[s][..], "{arch:?} net {s}");
+            }
+        }
+    }
 }

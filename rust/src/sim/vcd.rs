@@ -12,9 +12,15 @@ use crate::netlist::{Netlist, Port};
 use crate::sim::Simulator;
 
 /// Streams named-signal values per cycle into VCD text.
+///
+/// Change detection is bit-level against the previous sample: an
+/// unchanged signal costs one boolean scan per step — no string
+/// rendering, no allocation, no emission (VCD is a *change* dump;
+/// re-emitting stable nets every step is pure waste on wide designs).
 pub struct VcdWriter {
     signals: Vec<(String, Vec<crate::netlist::NetId>, String)>,
-    last: Vec<Option<String>>,
+    /// Previous sampled bit values per signal (LSB-first, port order).
+    last: Vec<Option<Vec<bool>>>,
     body: String,
     time: u64,
     header_done: bool,
@@ -64,19 +70,32 @@ impl VcdWriter {
     pub fn sample(&mut self, sim: &Simulator) {
         let mut changes = String::new();
         for (k, (_, bits, id)) in self.signals.iter().enumerate() {
-            // Render MSB-first per bit (handles buses of any width).
-            let mut bin = String::with_capacity(bits.len());
-            for &b in bits.iter().rev() {
-                bin.push(if sim.peek_net(b) { '1' } else { '0' });
+            let changed = match self.last[k].as_deref() {
+                Some(prev) => bits
+                    .iter()
+                    .enumerate()
+                    .any(|(i, &b)| prev[i] != sim.peek_net(b)),
+                None => true,
+            };
+            if !changed {
+                continue;
             }
-            if self.last[k].as_deref() != Some(bin.as_str()) {
-                if bits.len() == 1 {
-                    changes.push_str(&format!("{bin}{id}\n"));
-                } else {
-                    changes.push_str(&format!("b{bin} {id}\n"));
+            let vals: Vec<bool> =
+                bits.iter().map(|&b| sim.peek_net(b)).collect();
+            // Render MSB-first (handles buses of any width).
+            if bits.len() == 1 {
+                changes.push(if vals[0] { '1' } else { '0' });
+                changes.push_str(id);
+            } else {
+                changes.push('b');
+                for &v in vals.iter().rev() {
+                    changes.push(if v { '1' } else { '0' });
                 }
-                self.last[k] = Some(bin);
+                changes.push(' ');
+                changes.push_str(id);
             }
+            changes.push('\n');
+            self.last[k] = Some(vals);
         }
         if !changes.is_empty() || self.time == 0 {
             self.body.push_str(&format!("#{}\n", self.time));
@@ -85,23 +104,29 @@ impl VcdWriter {
         self.time += 1;
     }
 
+    fn header_text(&self) -> String {
+        let mut out = String::new();
+        out.push_str("$date nibblemul $end\n");
+        out.push_str("$version nibblemul gate-level sim $end\n");
+        out.push_str("$timescale 1ns $end\n");
+        out.push_str(&format!("$scope module {} $end\n", self.module));
+        for (name, bits, id) in &self.signals {
+            out.push_str(&format!(
+                "$var wire {} {} {} $end\n",
+                bits.len(),
+                id,
+                name
+            ));
+        }
+        out.push_str("$upscope $end\n$enddefinitions $end\n");
+        out
+    }
+
     /// Render the complete VCD document.
     pub fn render(&mut self) -> String {
         let mut out = String::new();
         if !self.header_done {
-            out.push_str("$date nibblemul $end\n");
-            out.push_str("$version nibblemul gate-level sim $end\n");
-            out.push_str("$timescale 1ns $end\n");
-            out.push_str(&format!("$scope module {} $end\n", self.module));
-            for (name, bits, id) in &self.signals {
-                out.push_str(&format!(
-                    "$var wire {} {} {} $end\n",
-                    bits.len(),
-                    id,
-                    name
-                ));
-            }
-            out.push_str("$upscope $end\n$enddefinitions $end\n");
+            out.push_str(&self.header_text());
             self.header_done = true;
         }
         out.push_str(&self.body);
@@ -109,11 +134,19 @@ impl VcdWriter {
         out
     }
 
-    /// Write the document to a file.
+    /// Write the document to a file through a buffered writer (header,
+    /// body and trailer are streamed — the full document is never
+    /// duplicated into one allocation).
     pub fn write_file(&mut self, path: &str) -> Result<()> {
-        let doc = self.render();
-        let mut f = std::fs::File::create(path)?;
-        f.write_all(doc.as_bytes())?;
+        let f = std::fs::File::create(path)?;
+        let mut w = std::io::BufWriter::new(f);
+        if !self.header_done {
+            w.write_all(self.header_text().as_bytes())?;
+            self.header_done = true;
+        }
+        w.write_all(self.body.as_bytes())?;
+        w.write_all(format!("#{}\n", self.time).as_bytes())?;
+        w.flush()?;
         Ok(())
     }
 }
@@ -150,6 +183,36 @@ mod tests {
             .map(|l| l[1..].parse().unwrap())
             .collect();
         assert!(times.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn unchanged_signals_emit_once() {
+        let mut b = Builder::new("hold");
+        let x = b.input("x", 4);
+        let (q, d) = b.dff_bus_feedback(3, None, None);
+        let next = b.inc_to(&q, 3);
+        b.drive(&d, &next);
+        b.output("q", &q);
+        b.output("y", &x.clone());
+        let nl = b.finish();
+        let mut sim = Simulator::new(&nl).unwrap();
+        sim.set_input("x", 0b0101).unwrap();
+        sim.settle();
+        let mut vcd = VcdWriter::for_netlist(&nl);
+        vcd.sample(&sim);
+        for _ in 0..6 {
+            sim.step(); // q counts; x and y never change after t0
+            vcd.sample(&sim);
+        }
+        let doc = vcd.render();
+        let stable_emissions = doc
+            .lines()
+            .filter(|l| l.starts_with("b0101 "))
+            .count();
+        assert_eq!(
+            stable_emissions, 2,
+            "x and y emitted exactly once each (at t0): {doc}"
+        );
     }
 
     #[test]

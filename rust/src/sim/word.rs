@@ -1,0 +1,246 @@
+//! Carrier-word abstraction for the bit-parallel simulation engines.
+//!
+//! The packed engine stores one carrier word per net, with stimulus
+//! lane `l` living in bit `l` of the word. [`Word`] abstracts the
+//! carrier so the same engine ([`super::SimulatorWide`]) runs 64 lanes
+//! on a plain `u64`, or 256/512 lanes on fixed-size `u64` limb arrays
+//! ([`W256`], [`W512`]). The limb arrays are explicit `[u64; K]` — no
+//! nightly `std::simd` — with straight-line per-limb loops the compiler
+//! auto-vectorizes (the loops are constant-trip-count and branch-free,
+//! exactly the shape LLVM turns into AVX2/AVX-512 ops).
+//!
+//! Every operation a settle pass needs is closed over the trait: the
+//! four bitwise ops (via the `std::ops` traits, so generic engine code
+//! reads identically to the `u64` engine it generalizes), lane
+//! get/set for the drive/observe boundary, and `popcount` for the
+//! exact per-write toggle accounting (`popcount(old ^ new)` = number
+//! of lanes whose scalar replay would have toggled the net).
+
+use std::ops::{BitAnd, BitOr, BitXor, Not};
+
+/// A fixed-width carrier word: one simulation lane per bit.
+pub trait Word:
+    Copy
+    + Clone
+    + PartialEq
+    + Eq
+    + std::fmt::Debug
+    + Send
+    + Sync
+    + 'static
+    + BitAnd<Output = Self>
+    + BitOr<Output = Self>
+    + BitXor<Output = Self>
+    + Not<Output = Self>
+{
+    /// Number of packed stimulus lanes (bits) in the carrier.
+    const LANES: usize;
+
+    /// All-zero word (every lane false).
+    fn zero() -> Self;
+
+    /// Broadcast one boolean to every lane.
+    fn splat(v: bool) -> Self;
+
+    /// Read lane `l` (`l < Self::LANES`).
+    fn lane(self, l: usize) -> bool;
+
+    /// Write lane `l` (`l < Self::LANES`).
+    fn set_lane(&mut self, l: usize, v: bool);
+
+    /// Number of set lanes (the toggle-accounting primitive).
+    fn popcount(self) -> u64;
+
+    /// Any lane set?
+    fn any(self) -> bool {
+        self != Self::zero()
+    }
+
+    /// Every lane set?
+    fn all(self) -> bool {
+        self == Self::splat(true)
+    }
+}
+
+impl Word for u64 {
+    const LANES: usize = 64;
+
+    #[inline]
+    fn zero() -> Self {
+        0
+    }
+
+    #[inline]
+    fn splat(v: bool) -> Self {
+        if v {
+            u64::MAX
+        } else {
+            0
+        }
+    }
+
+    #[inline]
+    fn lane(self, l: usize) -> bool {
+        (self >> l) & 1 != 0
+    }
+
+    #[inline]
+    fn set_lane(&mut self, l: usize, v: bool) {
+        if v {
+            *self |= 1u64 << l;
+        } else {
+            *self &= !(1u64 << l);
+        }
+    }
+
+    #[inline]
+    fn popcount(self) -> u64 {
+        self.count_ones() as u64
+    }
+}
+
+/// A `64 * K`-lane carrier made of `K` contiguous `u64` limbs (lane
+/// `l` lives in bit `l % 64` of limb `l / 64`).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct WideWord<const K: usize>(pub [u64; K]);
+
+/// 256-lane carrier (`[u64; 4]`).
+pub type W256 = WideWord<4>;
+
+/// 512-lane carrier (`[u64; 8]`).
+pub type W512 = WideWord<8>;
+
+impl<const K: usize> BitAnd for WideWord<K> {
+    type Output = Self;
+
+    #[inline]
+    fn bitand(self, rhs: Self) -> Self {
+        let mut o = self.0;
+        for i in 0..K {
+            o[i] &= rhs.0[i];
+        }
+        Self(o)
+    }
+}
+
+impl<const K: usize> BitOr for WideWord<K> {
+    type Output = Self;
+
+    #[inline]
+    fn bitor(self, rhs: Self) -> Self {
+        let mut o = self.0;
+        for i in 0..K {
+            o[i] |= rhs.0[i];
+        }
+        Self(o)
+    }
+}
+
+impl<const K: usize> BitXor for WideWord<K> {
+    type Output = Self;
+
+    #[inline]
+    fn bitxor(self, rhs: Self) -> Self {
+        let mut o = self.0;
+        for i in 0..K {
+            o[i] ^= rhs.0[i];
+        }
+        Self(o)
+    }
+}
+
+impl<const K: usize> Not for WideWord<K> {
+    type Output = Self;
+
+    #[inline]
+    fn not(self) -> Self {
+        let mut o = self.0;
+        for v in o.iter_mut() {
+            *v = !*v;
+        }
+        Self(o)
+    }
+}
+
+impl<const K: usize> Word for WideWord<K> {
+    const LANES: usize = 64 * K;
+
+    #[inline]
+    fn zero() -> Self {
+        Self([0; K])
+    }
+
+    #[inline]
+    fn splat(v: bool) -> Self {
+        Self([u64::splat(v); K])
+    }
+
+    #[inline]
+    fn lane(self, l: usize) -> bool {
+        (self.0[l / 64] >> (l % 64)) & 1 != 0
+    }
+
+    #[inline]
+    fn set_lane(&mut self, l: usize, v: bool) {
+        self.0[l / 64].set_lane(l % 64, v);
+    }
+
+    #[inline]
+    fn popcount(self) -> u64 {
+        self.0.iter().map(|&v| v.count_ones() as u64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_word_laws<W: Word>() {
+        let mut w = W::zero();
+        assert!(!w.any());
+        assert_eq!(w.popcount(), 0);
+        w.set_lane(0, true);
+        w.set_lane(W::LANES - 1, true);
+        assert!(w.lane(0) && w.lane(W::LANES - 1));
+        assert!(!w.lane(W::LANES / 2));
+        assert_eq!(w.popcount(), 2);
+        assert!(w.any() && !w.all());
+        assert!(W::splat(true).all());
+        assert_eq!(W::splat(true).popcount(), W::LANES as u64);
+        // De Morgan over lanes.
+        let a = w;
+        let b = W::splat(true);
+        assert_eq!(!(a & b), !a | !b);
+        assert_eq!(a ^ b, !a);
+        w.set_lane(0, false);
+        assert!(!w.lane(0));
+        assert_eq!(w.popcount(), 1);
+    }
+
+    #[test]
+    fn u64_word_laws() {
+        check_word_laws::<u64>();
+    }
+
+    #[test]
+    fn w256_word_laws() {
+        assert_eq!(W256::LANES, 256);
+        check_word_laws::<W256>();
+    }
+
+    #[test]
+    fn w512_word_laws() {
+        assert_eq!(W512::LANES, 512);
+        check_word_laws::<W512>();
+    }
+
+    #[test]
+    fn limb_boundaries_are_independent() {
+        let mut w = W256::zero();
+        w.set_lane(63, true);
+        w.set_lane(64, true);
+        assert_eq!(w.0[0], 1u64 << 63);
+        assert_eq!(w.0[1], 1);
+        assert_eq!((w & W256::splat(true)).popcount(), 2);
+    }
+}

@@ -17,7 +17,7 @@
 //! unaffected).
 
 use crate::netlist::{Cell, Netlist};
-use crate::sim::{Simulator, Simulator64};
+use crate::sim::{Simulator, Simulator64, SimulatorWide, Word};
 use crate::tech::{TechLibrary, CLOCK_HZ};
 
 /// Power decomposition in milliwatts.
@@ -47,19 +47,28 @@ impl<'l> PowerModel<'l> {
     /// Estimate power for `nl` given a simulator that has executed the
     /// workload (its toggle counters and cycle count are read here).
     pub fn estimate(&self, nl: &Netlist, sim: &Simulator) -> PowerBreakdown {
-        self.estimate_activity(nl, sim.toggles(), sim.cycles())
+        self.estimate_activity(nl, &sim.toggles(), sim.cycles())
     }
 
     /// Estimate power from a word-parallel run: toggles are aggregated
-    /// over all 64 lanes, so the time denominator is the aggregate
-    /// lane-cycles — the result is the exact mean of the 64 per-lane
-    /// scalar estimates.
+    /// over all `W::LANES` lanes, so the time denominator is the
+    /// aggregate lane-cycles — the result is the exact mean of the
+    /// per-lane scalar estimates.
+    pub fn estimate_wide<W: Word>(
+        &self,
+        nl: &Netlist,
+        sim: &SimulatorWide<W>,
+    ) -> PowerBreakdown {
+        self.estimate_activity(nl, &sim.toggles(), sim.lane_cycles())
+    }
+
+    /// 64-lane convenience alias for [`PowerModel::estimate_wide`].
     pub fn estimate64(
         &self,
         nl: &Netlist,
         sim: &Simulator64,
     ) -> PowerBreakdown {
-        self.estimate_activity(nl, sim.toggles(), sim.lane_cycles())
+        self.estimate_wide(nl, sim)
     }
 
     /// Core estimator over raw activity statistics: per-net toggle counts

@@ -1,13 +1,14 @@
 //! Property-testing substrate (proptest is unavailable offline): seeded
 //! generators, a `forall` runner with failure-case reporting and simple
-//! input shrinking for integer tuples, and a 64-way differential fuzzer
-//! over the word-parallel simulator ([`fuzz_mul64`]).
+//! input shrinking for integer tuples, and a word-parallel differential
+//! fuzzer over the packed simulator ([`fuzz_mul_wide`], 64–512 lanes;
+//! [`fuzz_mul64`] is the 64-lane instantiation).
 
 use anyhow::{ensure, Result};
 
 use crate::fabric::VectorUnit;
 use crate::multipliers::Arch;
-use crate::sim::{lane_seeds, LANES};
+use crate::sim::{lane_seeds_n, Word};
 use crate::util::Xoshiro256;
 
 /// Number of cases per property by default.
@@ -96,21 +97,22 @@ pub fn forall_pairs<P: Fn(u16, u16) -> bool>(seed: u64, cases: usize, prop: P) {
     }
 }
 
-/// 64-way differential fuzz of a multiplier architecture: drive `rounds`
-/// packed vector ops (64 independent boundary-biased operand streams per
-/// settle) through the gate-level unit on a [`crate::sim::Simulator64`]
-/// and check every lane's every product against the exact reference
-/// model, plus the Table 2 cycle count. Returns the number of products
-/// verified.
-pub fn fuzz_mul64(
+/// Word-parallel differential fuzz of a multiplier architecture: drive
+/// `rounds` packed vector ops (`W::LANES` independent boundary-biased
+/// operand streams per settle) through the gate-level unit on a
+/// [`crate::sim::SimulatorWide`] and check every lane's every product
+/// against the exact reference model, plus the Table 2 cycle count.
+/// Returns the number of products verified.
+pub fn fuzz_mul_wide<W: Word>(
     arch: Arch,
     n: usize,
     rounds: u64,
     seed: u64,
 ) -> Result<u64> {
+    let lanes = W::LANES;
     let unit = VectorUnit::new(arch, n);
-    let mut sim = unit.simulator64()?;
-    let mut rngs: Vec<Xoshiro256> = lane_seeds(seed)
+    let mut sim = unit.simulator_wide::<W>()?;
+    let mut rngs: Vec<Xoshiro256> = lane_seeds_n(seed, lanes)
         .iter()
         .map(|&s| Xoshiro256::new(s))
         .collect();
@@ -121,14 +123,14 @@ pub fn fuzz_mul64(
             .map(|rng| (0..n).map(|_| operand8(rng)).collect())
             .collect();
         let b: Vec<u16> = rngs.iter_mut().map(|rng| operand8(rng)).collect();
-        let res = unit.run_op64(&mut sim, &a, &b)?;
+        let res = unit.run_op_wide(&mut sim, &a, &b)?;
         ensure!(
             res.cycles == arch.latency_cycles(n),
             "{arch} x{n} round {round}: {} cycles, Table 2 says {}",
             res.cycles,
             arch.latency_cycles(n)
         );
-        for l in 0..LANES {
+        for l in 0..lanes {
             for i in 0..n {
                 let want = a[l][i] as u32 * b[l] as u32;
                 ensure!(
@@ -145,6 +147,17 @@ pub fn fuzz_mul64(
         }
     }
     Ok(checked)
+}
+
+/// 64-lane instantiation of [`fuzz_mul_wide`] (the historical entry
+/// point).
+pub fn fuzz_mul64(
+    arch: Arch,
+    n: usize,
+    rounds: u64,
+    seed: u64,
+) -> Result<u64> {
+    fuzz_mul_wide::<u64>(arch, n, rounds, seed)
 }
 
 #[cfg(test)]
@@ -167,6 +180,15 @@ mod tests {
     fn fuzz_mul64_verifies_products() {
         let checked = fuzz_mul64(Arch::Nibble, 2, 2, 5).unwrap();
         assert_eq!(checked, 2 * 64 * 2, "rounds x lanes x elements");
+    }
+
+    #[test]
+    fn fuzz_mul_wide_verifies_256_and_512_lanes() {
+        use crate::sim::{W256, W512};
+        let checked = fuzz_mul_wide::<W256>(Arch::Nibble, 2, 1, 5).unwrap();
+        assert_eq!(checked, 256 * 2, "rounds x lanes x elements");
+        let checked = fuzz_mul_wide::<W512>(Arch::Nibble, 2, 1, 5).unwrap();
+        assert_eq!(checked, 512 * 2);
     }
 
     #[test]

@@ -1,0 +1,160 @@
+//! Dirty-cone incremental evaluation correctness: `settle_dirty` must be
+//! bit-identical — values AND toggle counts — to a full `settle` pass,
+//! across randomized weight-stationary streams (the serving workload
+//! where consecutive ops share the broadcast operand). The scalar
+//! [`Simulator`] is the always-full-settle reference engine; the
+//! same stabilization loop is replayed line-by-line by
+//! `python/validate_cone.py` as the in-container oracle.
+
+use std::sync::Arc;
+
+use nibblemul::fabric::VectorUnit;
+use nibblemul::multipliers::Arch;
+use nibblemul::netlist::{Builder, Netlist};
+use nibblemul::sim::{Program, Simulator, Simulator64};
+use nibblemul::util::Xoshiro256;
+
+/// A small sequential design: an 8-bit adder feeding a register, the
+/// shape of one accumulate stage — enough structure for a real fanout
+/// cone without the multiplier handshake around it.
+fn acc_stage() -> Netlist {
+    let mut b = Builder::new("acc");
+    let x = b.input("x", 8);
+    let y = b.input("y", 8);
+    let s = b.add(&x, &y);
+    let q = b.dff_bus(&s, None, None);
+    b.output("q", &q);
+    b.finish()
+}
+
+/// 1000 randomized weight-stationary streams: the incremental engine
+/// (only ever `settle_dirty`, via `step`) against a full-settle twin
+/// (explicit `settle` before every edge) and the scalar reference.
+/// Broadcast stimulus makes one scalar run stand for all 64 lanes
+/// (aggregate toggles are exactly 64x the scalar count).
+#[test]
+fn incremental_equals_full_across_1000_weight_stationary_streams() {
+    let prog = Arc::new(Program::compile(&acc_stage()).unwrap());
+    let mut rng = Xoshiro256::new(0xD1C0);
+    let mut total_skipped = 0u64;
+    for stream in 0..1000u32 {
+        let mut inc = Simulator64::from_program(Arc::clone(&prog));
+        let mut full = Simulator64::from_program(Arc::clone(&prog));
+        let mut scalar = Simulator::from_program(Arc::clone(&prog));
+        // Stationary operand for the whole stream; x changes per op.
+        let y = rng.next_u64() & 0xFF;
+        inc.set_input_broadcast("y", y).unwrap();
+        full.set_input_broadcast("y", y).unwrap();
+        scalar.set_input("y", y).unwrap();
+        let ops = 1 + rng.below(6);
+        for _ in 0..ops {
+            let x = rng.next_u64() & 0xFF;
+            inc.set_input_broadcast("x", x).unwrap();
+            full.set_input_broadcast("x", x).unwrap();
+            scalar.set_input("x", x).unwrap();
+            full.settle(); // force the full pass on the reference twin
+            inc.step();
+            full.step();
+            scalar.step();
+            let want = scalar.get_output("q").unwrap();
+            for lane in [0usize, 17, 63] {
+                assert_eq!(
+                    inc.get_output_lane("q", lane).unwrap(),
+                    want,
+                    "stream {stream} lane {lane}"
+                );
+            }
+        }
+        assert_eq!(
+            inc.toggles(),
+            full.toggles(),
+            "stream {stream}: incremental vs full toggle counts"
+        );
+        let scalar64: Vec<u64> =
+            scalar.toggles().iter().map(|t| t * 64).collect();
+        assert_eq!(
+            inc.toggles(),
+            scalar64,
+            "stream {stream}: broadcast lanes vs scalar reference"
+        );
+        let (evaluated, skipped) = inc.cone_stats();
+        assert!(evaluated > 0, "stream {stream}: cone did some work");
+        total_skipped += skipped;
+    }
+    assert!(
+        total_skipped > 0,
+        "stationary operands must leave part of the cone clean"
+    );
+}
+
+/// At the fabric level, a weight-stationary op stream (fixed broadcast
+/// operand) must evaluate strictly fewer ops than the same stream with
+/// a fresh broadcast operand per op — with identical, correct products.
+#[test]
+fn fabric_weight_stationary_stream_skips_more_cone() {
+    let arch = Arch::Nibble;
+    let n = 4usize;
+    let unit = VectorUnit::new(arch, n);
+    let ops = 8usize;
+    let mut rng = Xoshiro256::new(0xAB5);
+    let a_stream: Vec<Vec<Vec<u16>>> = (0..ops)
+        .map(|_| {
+            (0..64)
+                .map(|_| (0..n).map(|_| rng.operand8()).collect())
+                .collect()
+        })
+        .collect();
+
+    let mut sim_ws = unit.simulator64().unwrap();
+    let b_fixed: Vec<u16> = (0..64).map(|l| (l * 3 + 1) as u16 & 0xFF).collect();
+    for a in &a_stream {
+        let res = unit.run_op_wide(&mut sim_ws, a, &b_fixed).unwrap();
+        for l in 0..64 {
+            for i in 0..n {
+                assert_eq!(
+                    res.products[l][i],
+                    a[l][i] as u32 * b_fixed[l] as u32
+                );
+            }
+        }
+    }
+    let (ev_ws, sk_ws) = sim_ws.cone_stats();
+
+    let mut sim_rand = unit.simulator64().unwrap();
+    for (k, a) in a_stream.iter().enumerate() {
+        // A distinct broadcast operand every op (never repeats).
+        let b: Vec<u16> =
+            (0..64).map(|l| ((l * 3 + 1) ^ (k << 3) ^ 0x55) as u16 & 0xFF).collect();
+        let res = unit.run_op_wide(&mut sim_rand, a, &b).unwrap();
+        for l in 0..64 {
+            assert_eq!(res.products[l][0], a[l][0] as u32 * b[l] as u32);
+        }
+    }
+    let (ev_rand, _) = sim_rand.cone_stats();
+
+    assert!(sk_ws > 0, "stationary stream skipped no ops");
+    assert!(
+        ev_ws < ev_rand,
+        "stationary stream evaluated {ev_ws} ops, changing-operand \
+         stream {ev_rand} — holding the broadcast operand must shrink \
+         the cone"
+    );
+}
+
+/// The cone counters are monotone telemetry: `clear_activity` resets
+/// toggles/cycles but must NOT reset them (the coordinator pool folds
+/// deltas, so a reset would corrupt the metrics).
+#[test]
+fn cone_counters_survive_clear_activity() {
+    let prog = Arc::new(Program::compile(&acc_stage()).unwrap());
+    let mut sim = Simulator64::from_program(prog);
+    sim.set_input_broadcast("x", 0x5A).unwrap();
+    sim.set_input_broadcast("y", 0xA5).unwrap();
+    sim.step();
+    let before = sim.cone_stats();
+    assert!(before.0 > 0);
+    sim.clear_activity();
+    assert_eq!(sim.cone_stats(), before, "monotone across clears");
+    assert_eq!(sim.total_toggles(), 0);
+    assert_eq!(sim.cycles(), 0);
+}

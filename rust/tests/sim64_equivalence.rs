@@ -38,7 +38,7 @@ fn packed_equals_64_scalar_runs_all_archs() {
                 assert_eq!(stats.errors, 0, "{arch} x{n}: scalar products");
                 assert_eq!(sim.cycles(), sim64.cycles(), "{arch} x{n}");
                 scalar_cycles_total += stats.cycles;
-                for (acc, &t) in toggles_sum.iter_mut().zip(sim.toggles())
+                for (acc, t) in toggles_sum.iter_mut().zip(sim.toggles())
                 {
                     *acc += t;
                 }
@@ -48,7 +48,7 @@ fn packed_equals_64_scalar_runs_all_archs() {
             assert_eq!(stats64.cycles, scalar_cycles_total, "{arch} x{n}");
             assert_eq!(
                 sim64.toggles(),
-                &toggles_sum[..],
+                toggles_sum,
                 "{arch} x{n}: per-net aggregate toggle counts must be \
                  bit-identical to 64 scalar runs"
             );

@@ -1,0 +1,125 @@
+//! Wide-carrier engine equivalence: a packed [`SimulatorWide`] run at
+//! 256 or 512 lanes must be EXACTLY `W::LANES` scalar [`Simulator`]
+//! runs in lockstep — same products, same per-net aggregate toggle
+//! counts, same cycle counts, and therefore the same power numbers.
+//! This extends `tests/sim64_equivalence.rs` (the `u64` instantiation)
+//! to the `[u64; 4]` / `[u64; 8]` limb-array carriers; `lane_seeds_n`
+//! is the shared stimulus contract between `run_stream_wide` and the
+//! scalar replay here.
+
+use nibblemul::fabric::VectorUnit;
+use nibblemul::multipliers::Arch;
+use nibblemul::sim::{lane_seeds_n, Word, W256, W512};
+use nibblemul::tech::{PowerModel, TechLibrary};
+use nibblemul::testkit;
+
+const OPS: u64 = 2; // stimulus rounds (per lane)
+
+fn wide_equals_scalar_runs<W: Word>(arch: Arch, n: usize) {
+    let seed = 0xC0FFEE ^ (n as u64) << 8 ^ arch as u64;
+    let unit = VectorUnit::new(arch, n);
+
+    // Packed run: OPS rounds of W::LANES verified vector ops.
+    let mut wide = unit.simulator_wide::<W>().unwrap();
+    let stats = unit.run_stream_wide(&mut wide, OPS, seed).unwrap();
+    assert_eq!(stats.errors, 0, "{arch} x{n}: packed products");
+    assert_eq!(stats.ops, OPS * W::LANES as u64);
+
+    // W::LANES scalar runs on the same per-lane streams.
+    let seeds = lane_seeds_n(seed, W::LANES);
+    let mut toggles_sum = vec![0u64; unit.netlist().n_nets];
+    let mut scalar_cycles_total = 0u64;
+    for &lane_seed in &seeds {
+        let mut sim = unit.simulator().unwrap();
+        let stats = unit.run_stream(&mut sim, OPS, lane_seed).unwrap();
+        assert_eq!(stats.errors, 0, "{arch} x{n}: scalar products");
+        assert_eq!(sim.cycles(), wide.cycles(), "{arch} x{n}");
+        scalar_cycles_total += stats.cycles;
+        for (acc, t) in toggles_sum.iter_mut().zip(sim.toggles()) {
+            *acc += t;
+        }
+    }
+
+    // Aggregate lane-cycles and per-net toggles match exactly.
+    assert_eq!(stats.cycles, scalar_cycles_total, "{arch} x{n}");
+    assert_eq!(
+        wide.toggles(),
+        toggles_sum,
+        "{arch} x{n} @ {} lanes: per-net aggregate toggle counts must \
+         be bit-identical to the scalar runs",
+        W::LANES
+    );
+}
+
+#[test]
+fn packed256_equals_256_scalar_runs() {
+    for arch in [Arch::Nibble, Arch::LutArray] {
+        for n in [1usize, 4] {
+            wide_equals_scalar_runs::<W256>(arch, n);
+        }
+    }
+}
+
+#[test]
+fn packed512_equals_512_scalar_runs() {
+    wide_equals_scalar_runs::<W512>(Arch::Nibble, 4);
+}
+
+#[test]
+fn wide_lane_prefix_replays_the_64_lane_run() {
+    // lane_seeds_n draws from the same SplitMix64 stream for every
+    // width, so lanes 0..64 of a 256-lane run are the exact lanes of a
+    // 64-lane run with the same stream seed: aggregate stats of the
+    // wider run can never silently fork from the packed64 baseline.
+    let seed = 4242u64;
+    assert_eq!(lane_seeds_n(seed, 256)[..64], lane_seeds_n(seed, 64)[..]);
+    assert_eq!(lane_seeds_n(seed, 512)[..256], lane_seeds_n(seed, 256)[..]);
+}
+
+#[test]
+fn wide_power_equals_mean_of_scalar_power() {
+    let lib = TechLibrary::hpc28();
+    let arch = Arch::Nibble;
+    let n = 4usize;
+    let seed = 77u64;
+    let unit = VectorUnit::new(arch, n);
+
+    let mut wide = unit.simulator_wide::<W256>().unwrap();
+    unit.run_stream_wide(&mut wide, 2, seed).unwrap();
+    let packed = PowerModel::new(&lib).estimate_wide(unit.netlist(), &wide);
+
+    let seeds = lane_seeds_n(seed, 256);
+    let mut mean_dynamic = 0.0f64;
+    for &lane_seed in &seeds {
+        let mut sim = unit.simulator().unwrap();
+        unit.run_stream(&mut sim, 2, lane_seed).unwrap();
+        let p = PowerModel::new(&lib).estimate(unit.netlist(), &sim);
+        mean_dynamic += p.dynamic_mw;
+        // Clock + leakage are workload-independent: identical per lane.
+        assert!((p.clock_mw - packed.clock_mw).abs() < 1e-12);
+        assert!((p.leakage_mw - packed.leakage_mw).abs() < 1e-12);
+    }
+    mean_dynamic /= 256.0;
+    let rel =
+        (packed.dynamic_mw - mean_dynamic).abs() / mean_dynamic.max(1e-30);
+    assert!(
+        rel < 1e-9,
+        "wide dynamic power {} vs scalar mean {} (rel err {rel:e})",
+        packed.dynamic_mw,
+        mean_dynamic
+    );
+}
+
+#[test]
+fn fuzz_mul_wide_all_archs_boundary_biased() {
+    // 256-way differential fuzz (boundary-biased operands) across every
+    // architecture; one 512-way spot check on the paper's primary arch.
+    for arch in Arch::ALL {
+        let checked =
+            testkit::fuzz_mul_wide::<W256>(arch, 1, 1, 0xF00D).unwrap();
+        assert_eq!(checked, 256, "{arch}");
+    }
+    let checked =
+        testkit::fuzz_mul_wide::<W512>(Arch::Nibble, 2, 1, 0xBEEF).unwrap();
+    assert_eq!(checked, 512 * 2);
+}
