@@ -1,0 +1,148 @@
+//! Attention scenario: a single-head int8 attention block —
+//! `softmax(Q·Kᵀ)·V` — lowered through `kernels::attention` as TWO
+//! chained GEMM job streams with opposite stationarity (QKᵀ
+//! weight-stationary, P·V row-major) and executed on three substrates:
+//!
+//!  1. the plain-loop i32/i64 Rust oracle (`attention_i64`),
+//!  2. the in-process gate-level fabric under a bounded coalescing
+//!     buffer (per-phase hit rates show the stationary phase winning),
+//!  3. a 2-shard router over the wire protocol (the serving path).
+//!
+//! All three must agree bit-exactly, and the output must hash to the
+//! SAME FNV-1a-64 digest the Python AOT oracle pins
+//! (`python/validate_attention.py`, `artifacts/attention.nmd`) — one
+//! literal, two codebases, so the arithmetic, the integer softmax AND
+//! the lowering are cross-checked, not just each port's
+//! self-consistency.
+//!
+//!     cargo run --release --example int8_attention
+
+use nibblemul::coordinator::{
+    loopback_addr, sim_factory, BatcherConfig, Router, RouterConfig,
+    ShardServer, ShardServerConfig, ShardSpec, SimBackend,
+};
+use nibblemul::design::DesignKey;
+use nibblemul::kernels::{
+    attention_i64, attention_test_vectors, stream_digest, AttentionPlan,
+    AttentionSpec, FabricExec, JobExecutor, RouterExec,
+};
+use nibblemul::multipliers::Arch;
+
+/// Pinned by `python/validate_attention.py` over the same canonical
+/// (s=8, d=4, shift=4) palette block.
+const ATTN_DIGEST: u64 = 0xB02D_192B_4B6D_B035;
+
+fn main() -> anyhow::Result<()> {
+    let spec = AttentionSpec::new(8, 4);
+    let shift = 4;
+    let (q, k, v) = attention_test_vectors(spec.s, spec.d);
+    println!("== int8 attention on the nibble fabric ==");
+    println!(
+        "block: {spec}, shift {shift}; QKᵀ {} then P·V {} = {} \
+         u8 x u8 products",
+        spec.qk_gemm(),
+        spec.pv_gemm(),
+        spec.products()
+    );
+
+    // --- 1. plain-loop oracle + the cross-language digest pin ---------
+    let want = attention_i64(&q, &k, &v, spec, shift);
+    let digest = stream_digest(&want);
+    anyhow::ensure!(
+        digest == ATTN_DIGEST,
+        "oracle digest {digest:016x} != the Python AOT pin \
+         {ATTN_DIGEST:016x}"
+    );
+    println!(
+        "oracle digest {digest:016x} matches the Python AOT oracle pin"
+    );
+
+    // --- 2. in-process gate-level fabric, bounded buffer --------------
+    // Width 16 > the 8-row tiles, so jobs end in partial batches — the
+    // regime where the opposite stationarity of the two phases shows up
+    // as opposite coalescing hit rates on the SAME buffer.
+    let plan = AttentionPlan::new(spec, shift);
+    let mut fabric = FabricExec::new(
+        Box::new(SimBackend::new(Arch::Nibble, 16)?),
+        BatcherConfig::bounded(16, 2),
+    );
+    let scores = plan.scores(&q, &k, &mut fabric)?;
+    let qk = fabric.stats();
+    let probs = plan.probs(&scores);
+    let out = plan.output(&probs, &v, &mut fabric)?;
+    let both = fabric.stats();
+    anyhow::ensure!(out == want, "gate-level fabric diverged");
+    let pv_chunks = both.chunks - qk.chunks;
+    let pv_ops = both.batches - qk.batches;
+    let pv_rate =
+        pv_chunks.saturating_sub(pv_ops) as f64 / pv_chunks as f64;
+    println!(
+        "\ngate-level fabric ({}): bit-exact",
+        fabric.name()
+    );
+    println!(
+        "  QKᵀ weight-stationary: {} chunks -> {} fabric ops \
+         ({:.1}% hit rate)",
+        qk.chunks,
+        qk.batches,
+        qk.hit_rate() * 100.0
+    );
+    println!(
+        "  P·V row-major:         {} chunks -> {} fabric ops \
+         ({:.1}% hit rate)",
+        pv_chunks,
+        pv_ops,
+        pv_rate * 100.0
+    );
+    anyhow::ensure!(
+        qk.hit_rate() > pv_rate,
+        "stationary phase must out-coalesce the churning phase"
+    );
+
+    // --- 3. the sharded serving path ----------------------------------
+    let key = DesignKey {
+        arch: Arch::Nibble,
+        n: 16,
+    };
+    let factory = sim_factory(2, false);
+    let mut servers = Vec::new();
+    let specs: Vec<ShardSpec> = (0..2)
+        .map(|i| -> anyhow::Result<ShardSpec> {
+            let addr = loopback_addr("attn");
+            servers.push(ShardServer::spawn(
+                addr.clone(),
+                factory.clone(),
+                ShardServerConfig {
+                    label: format!("attn-shard{i}"),
+                    ..ShardServerConfig::default()
+                },
+            )?);
+            Ok(ShardSpec { addr, key })
+        })
+        .collect::<anyhow::Result<_>>()?;
+    let mut router = Router::connect(specs, RouterConfig::default())?;
+    let got = {
+        let mut exec = RouterExec::new(&mut router, key, "attn");
+        plan.execute(&q, &k, &v, &mut exec)?
+    };
+    anyhow::ensure!(got.out == want, "sharded attention diverged");
+    anyhow::ensure!(
+        stream_digest(&got.out) == ATTN_DIGEST,
+        "sharded digest left the pin"
+    );
+    println!(
+        "\n2-shard router ({key}): bit-exact, digest {:016x}",
+        stream_digest(&got.out)
+    );
+    router.shutdown();
+    for server in servers {
+        server.kill();
+    }
+
+    println!(
+        "\nall three substrates agree bit-exactly on {} outputs \
+         (digest {digest:016x}, pinned in two languages)",
+        want.len()
+    );
+    Ok(())
+}

@@ -50,12 +50,7 @@ fn main() -> anyhow::Result<()> {
         w_zp: 14,
         in_zp: 8,
         bias_i32: (0..spec.c_out as i32).map(|o| o * 37 - 100).collect(),
-        requant: Requant {
-            m: 97,
-            shift: 14,
-            zp: 8,
-            relu: true,
-        },
+        requant: Requant::scalar(97, 14, 8, true),
     };
     let img: Vec<i32> = operand_stream(spec.c_in * spec.h * spec.w, 7)
         .into_iter()

@@ -18,6 +18,10 @@ Emitted artifacts
   weights.nmd                   quantized layer data for the Rust gate-level
                                 fabric replay (text, custom .nmd format)
   testset.nmd                   quantized held-out inputs + labels
+  attention.nmd                 int8 attention as two chained job streams
+                                (QKᵀ weight-stationary, P·V row-major)
+  int4_gemm.nmd                 nibble-packed INT4-weight GEMM job stream
+                                (every broadcast operand ≤ 0xF → nibble4)
   training_log.txt              build-time loss curve (E2E requirement)
   meta.nmd                      provenance: sizes, accuracy, seeds
 """
@@ -106,6 +110,67 @@ def _fmt_ints(a: np.ndarray) -> str:
     return " ".join(str(int(v)) for v in np.asarray(a).ravel())
 
 
+def _fmt_jobs(jobs) -> list:
+    return [
+        f"job {job['id']} b {job['b']} a {' '.join(map(str, job['a']))}"
+        for job in jobs
+    ]
+
+
+def dump_attention(out_dir: str) -> None:
+    """Emit the canonical int8 attention block as the SAME two chained job
+    streams the Rust lowering produces (`kernels::attention`): QK^T
+    weight-stationary, then softmax-requant, then P.V row-major. The Rust
+    example and `python/validate_attention.py` check the digest of the
+    output accumulators against this artifact's `digest` line.
+    """
+    s, d, shift = model_lib.ATTN_SPEC
+    q, k, v = model_lib.attention_test_vectors(s, d)
+    qk_jobs, _, pv_jobs, _, probs = model_lib.attention_job_streams(
+        q, k, v, s, d, shift
+    )
+    _, _, out = model_lib.attention_oracle(q, k, v, s, d, shift)
+    lines = [
+        f"attention s {s} d {d} shift {shift}",
+        "q " + " ".join(map(str, q)),
+        "k " + " ".join(map(str, k)),
+        "v " + " ".join(map(str, v)),
+        f"qk_jobs {len(qk_jobs)} order weight-stationary",
+        *_fmt_jobs(qk_jobs),
+        f"pv_jobs {len(pv_jobs)} order row-major",
+        *_fmt_jobs(pv_jobs),
+        "probs " + " ".join(map(str, probs)),
+        "out " + " ".join(map(str, out)),
+        f"digest {model_lib.stream_digest(out):016x}",
+    ]
+    _write(os.path.join(out_dir, "attention.nmd"), "\n".join(lines) + "\n")
+
+
+def dump_int4_gemm(out_dir: str) -> None:
+    """Emit an INT4-weight GEMM job stream: weights nibble-packed two per
+    byte, unpacked at plan time, every broadcast operand <= 0xF — the W4
+    operand class the `nibble4` datapath serves in one cycle per element.
+    """
+    m, k, n = 6, 5, 4
+    a = [(i * 29 + 13) % 256 for i in range(m * k)]
+    w = [(i * 7 + 2) % 16 for i in range(k * n)]
+    packed = model_lib.pack_nibbles(w)
+    jobs, targets = model_lib.int4_gemm_stream(a, packed, m, k, n)
+    c = model_lib.accumulate_jobs(
+        model_lib.run_jobs_exact(jobs), targets, m, n
+    )
+    lines = [
+        f"int4_gemm m {m} k {k} n {n}",
+        "a " + " ".join(map(str, a)),
+        "w4_packed " + packed.hex(),
+        f"jobs {len(jobs)} order weight-stationary arch nibble4",
+        *_fmt_jobs(jobs),
+        "c " + " ".join(map(str, c)),
+        f"digest {model_lib.stream_digest(c):016x}",
+    ]
+    _write(os.path.join(out_dir, "int4_gemm.nmd"), "\n".join(lines) + "\n")
+
+
 def dump_weights(out_dir: str, qmlp) -> None:
     """Custom .nmd text format (the Rust side has no serde; parser in
     rust/src/workload/nmd.rs)."""
@@ -153,6 +218,10 @@ def main() -> None:
 
     print("== lowering L1 kernels ==")
     lower_kernels(args.out_dir)
+
+    print("== emitting attention + INT4 job streams ==")
+    dump_attention(args.out_dir)
+    dump_int4_gemm(args.out_dir)
 
     print("== build-time training (L2) ==")
     params, log, test_acc, (x_te, y_te) = model_lib.train_mlp(

@@ -1,0 +1,181 @@
+"""Pure-integer int8 attention + INT4 job-stream oracle.
+
+Line-for-line port of `rust/src/kernels/attention.rs` (softmax-requant,
+two chained GEMM streams with opposite stationarity), the GEMM lowering
+of `rust/src/kernels/gemm.rs`, and the nibble pack/unpack of
+`rust/src/model/quant.rs`.  Deliberately stdlib-only (no jax, no numpy):
+`python/validate_attention.py` imports this module directly so the CI
+differential validation needs no accelerator stack.
+"""
+
+from __future__ import annotations
+
+def softmax_u8(row, shift):
+    """Integer softmax-requant of one score row to the u8 domain.
+
+    Line-for-line port of `kernels::attention::softmax_u8`: fixed-point
+    exp2 approximation over differences from the row max, then a
+    round-half-up normalization to a ~255 row sum.
+    """
+    mx = max(row)
+    e = []
+    for s in row:
+        d = (mx - s) >> shift
+        e.append(0 if d >= 8 else 255 >> d)
+    total = max(sum(e), 1)
+    return [(w * 255 + total // 2) // total for w in e]
+
+
+def attention_oracle(q, k, v, s, d, shift):
+    """Plain-loop int8 attention: returns (scores, probs, out) flat lists.
+
+    Port of `kernels::attention::attention_i64` (plus the intermediate
+    probability rows): scores = Q.K^T (s x s), probs = per-row softmax_u8,
+    out = P.V raw accumulators (s x d).
+    """
+    assert len(q) == len(k) == len(v) == s * d
+    scores, probs, out = [], [], [0] * (s * d)
+    for i in range(s):
+        row = [
+            sum(q[i * d + t] * k[j * d + t] for t in range(d))
+            for j in range(s)
+        ]
+        p = softmax_u8(row, shift)
+        scores.extend(row)
+        probs.extend(p)
+        for t in range(d):
+            out[i * d + t] = sum(p[j] * v[j * d + t] for j in range(s))
+    return scores, probs, out
+
+
+def lower_gemm_jobs(a, b, m, k, n, order, tile_m=None):
+    """Lower C[m x n] = A[m x k] . B[k x n] into the vector-job stream of
+    `kernels::gemm::GemmPlan::jobs` — same tiling (whole-m tiles capped at
+    64), same loop nest, same stable weight-stationary sort, same dense id
+    assignment. Returns (jobs, targets): jobs are dicts {id, a, b},
+    targets {row0, rows, col}.
+    """
+    assert len(a) == m * k and len(b) == k * n
+    assert order in ("row-major", "weight-stationary")
+    tile_m = min(m, 64) if tile_m is None else tile_m
+    pairs = []
+    for row0 in range(0, m, tile_m):
+        rows = min(tile_m, m - row0)
+        for kk in range(k):
+            for j in range(n):
+                vec = [a[(row0 + e) * k + kk] for e in range(rows)]
+                pairs.append(
+                    (
+                        {"id": 0, "a": vec, "b": b[kk * n + j]},
+                        {"row0": row0, "rows": rows, "col": j},
+                    )
+                )
+    if order == "weight-stationary":
+        pairs.sort(key=lambda p: p[0]["b"])  # python sort is stable
+    for i, (job, _) in enumerate(pairs):
+        job["id"] = i
+    return [p[0] for p in pairs], [p[1] for p in pairs]
+
+
+def run_jobs_exact(jobs):
+    """The exact-product executor: one product list per job, id order."""
+    return [[x * job["b"] for x in job["a"]] for job in jobs]
+
+
+def accumulate_jobs(results, targets, m, n):
+    """Scatter-accumulate per-job products into C[m x n] (port of
+    `GemmPlan::accumulate`)."""
+    c = [0] * (m * n)
+    for products, tgt in zip(results, targets):
+        for e, p in enumerate(products):
+            c[(tgt["row0"] + e) * n + tgt["col"]] += p
+    return c
+
+
+def attention_job_streams(q, k, v, s, d, shift):
+    """The two chained job streams of `kernels::attention::AttentionPlan`
+    with the default opposite stationarity: QK^T weight-stationary, P.V
+    row-major. Returns (qk_jobs, qk_targets, pv_jobs, pv_targets, probs)
+    with the P.V stream lowered from the requantized probability rows.
+    """
+    kt = [k[r * d + c] for c in range(d) for r in range(s)]  # K^T (d x s)
+    qk_jobs, qk_targets = lower_gemm_jobs(
+        q, kt, s, d, s, "weight-stationary"
+    )
+    scores = accumulate_jobs(run_jobs_exact(qk_jobs), qk_targets, s, s)
+    probs = []
+    for i in range(s):
+        probs.extend(softmax_u8(scores[i * s : (i + 1) * s], shift))
+    pv_jobs, pv_targets = lower_gemm_jobs(
+        probs, v, s, s, d, "row-major"
+    )
+    return qk_jobs, qk_targets, pv_jobs, pv_targets, probs
+
+
+def pack_nibbles(vals):
+    """Nibble-pack 4-bit values two per byte (port of
+    `model::quant::pack_nibbles`): element 2i low nibble, 2i+1 high."""
+    out = []
+    for i in range(0, len(vals), 2):
+        pair = vals[i : i + 2]
+        byte = 0
+        for j, x in enumerate(pair):
+            if not 0 <= x <= 15:
+                raise ValueError(f"value {x} at {i + j} is not 4-bit")
+            byte |= x << (4 * j)
+        out.append(byte)
+    return bytes(out)
+
+
+def unpack_nibbles(packed, n):
+    """Unpack n 4-bit values (port of `model::quant::unpack_nibbles`)."""
+    if len(packed) != (n + 1) // 2:
+        raise ValueError(f"{len(packed)} bytes cannot hold {n} nibbles")
+    if n % 2 == 1 and packed[-1] >> 4:
+        raise ValueError("odd-length pad nibble is nonzero")
+    return [(packed[i // 2] >> (4 * (i % 2))) & 0xF for i in range(n)]
+
+
+def int4_gemm_stream(a, w4_packed, m, k, n):
+    """An INT4-weight GEMM job stream: unpack the nibble-packed weights at
+    plan time (mirror of `QuantGemm::pack_int4` + `forward_flat`) and
+    lower weight-stationary. Every broadcast operand is <= 0xF, so the
+    whole stream fits the `nibble4` W4 operand class on the wire.
+    """
+    w = unpack_nibbles(w4_packed, k * n)
+    jobs, targets = lower_gemm_jobs(a, w, m, k, n, "weight-stationary")
+    assert all(job["b"] <= 0xF for job in jobs)
+    return jobs, targets
+
+
+#: Canonical attention block shared by the Rust example and the Python
+#: validator: (s, d, softmax shift).
+ATTN_SPEC = (8, 4, 4)
+
+
+def attention_test_vectors(s, d):
+    """The deterministic Q/K/V every substrate agrees on — mirrored by
+    `examples/int8_attention.rs` (same closed-form operand streams).
+
+    K and V draw from 6-value palettes (clustered weights, like the conv
+    example's `palette_stream`): repeated broadcast values are what give
+    the coalescing buffer something to merge, so the two phases' hit
+    rates actually separate. Q is the moving operand; its values don't
+    affect coalescing and stay full-range.
+    """
+    q = [(i * 31 + 7) % 256 for i in range(s * d)]
+    k = [((i * 5 + 1) % 6) * 40 + 3 for i in range(s * d)]
+    v = [((i * 7 + 2) % 6) * 31 + 5 for i in range(s * d)]
+    return q, k, v
+
+
+def stream_digest(values):
+    """FNV-1a-64 over an i64 stream — the cross-language checksum printed
+    by `examples/int8_attention.rs` and `python/validate_attention.py`.
+    """
+    h = 0xCBF29CE484222325
+    for x in values:
+        h = ((h ^ (x & 0xFFFFFFFFFFFFFFFF)) * 0x100000001B3) & (
+            (1 << 64) - 1
+        )
+    return h

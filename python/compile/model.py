@@ -311,3 +311,26 @@ def mlp_int8_fwd(qmlp: QuantMLP, x_q, *, exact: bool = False, weights=None):
 def quantize_input(x, qmlp: QuantMLP):
     """float input -> u8 (int32 carrier) with the model's input qparams."""
     return jnp.asarray(_quantize(x, qmlp.in_scale, qmlp.in_zp))
+
+
+# ---------------------------------------------------------------------------
+# int8 attention + INT4 weight streams: the pure-integer lowering lives in
+# compile.attention (stdlib-only so CI validators run without jax); it is
+# re-exported here because this module is the oracle surface aot.py emits
+# from.
+# ---------------------------------------------------------------------------
+
+from .attention import (  # noqa: E402,F401
+    ATTN_SPEC,
+    accumulate_jobs,
+    attention_job_streams,
+    attention_oracle,
+    attention_test_vectors,
+    int4_gemm_stream,
+    lower_gemm_jobs,
+    pack_nibbles,
+    run_jobs_exact,
+    softmax_u8,
+    stream_digest,
+    unpack_nibbles,
+)

@@ -1,0 +1,215 @@
+#!/usr/bin/env python3
+"""Differential validation of the int8 attention + INT4 subsystem.
+
+`python/compile/attention.py` is a line-by-line, stdlib-only port of the
+Rust lowering (`rust/src/kernels/attention.rs`, the GEMM lowering of
+`kernels/gemm.rs`, and the nibble pack/unpack of `model/quant.rs`). This
+script checks, without a Rust toolchain in the loop:
+
+  1. ORACLE vs STREAMS — the two chained job streams (QKᵀ
+     weight-stationary, softmax-requant, P·V row-major), executed with an
+     exact multiplier and scatter-accumulated, reproduce the plain-loop
+     attention oracle bit-exactly across shapes and temperatures.
+  2. GOLDEN DIGEST — the canonical (s=8, d=4, shift=4) block's output
+     accumulators hash to the same FNV-1a-64 digest the Rust example
+     `examples/int8_attention.rs` asserts. Both languages pinning one
+     literal digest pins the arithmetic, the softmax approximation AND
+     the lowering, not just each port's self-consistency.
+  3. STATIONARITY — the QKᵀ stream is broadcast-value sorted (coalesces
+     to the provable minimum) while the P·V stream stays in churning
+     emission order; a one-entry coalescing-buffer simulation shows the
+     stationary phase saving strictly more fabric ops.
+  4. INT4 — nibble pack/unpack roundtrips on random 4-bit vectors (odd
+     and even lengths), rejects out-of-range values and bad shapes; the
+     packed-weight GEMM stream unpacks at plan time, keeps every
+     broadcast operand ≤ 0xF (the nibble4 W4 operand class), matches the
+     dense GEMM, and hashes to its own pinned digest.
+  5. WIRE — "nibble4" is encodable: it sits LAST in ARCH_ALL (index 8,
+     appended so all previous wire indices survive), and a W4 hello +
+     submit roundtrip through python/wire.py carries it.
+
+Run: python3 python/validate_attention.py [n_cases]
+"""
+
+import random
+import sys
+
+import wire
+from compile import attention as A
+
+# Pinned by examples/int8_attention.rs as well — one literal, two codebases.
+ATTN_DIGEST = 0xB02D192B4B6DB035
+INT4_DIGEST = 0x72A6A04AA7A2ACE1
+
+
+def check(cond, msg):
+    if not cond:
+        raise SystemExit(f"FAIL: {msg}")
+
+
+def matmul(a, b, m, k, n):
+    return [
+        sum(a[i * k + t] * b[t * n + j] for t in range(k))
+        for i in range(m)
+        for j in range(n)
+    ]
+
+
+def validate_oracle_vs_streams(cases):
+    rng = random.Random(0xA77)
+    shapes = [(1, 1), (3, 5), (8, 4), (9, 2), (6, 6)]
+    for case in range(cases):
+        s, d = shapes[case % len(shapes)]
+        shift = rng.choice([2, 4, 6])
+        q = [rng.randrange(256) for _ in range(s * d)]
+        k = [rng.randrange(256) for _ in range(s * d)]
+        v = [rng.randrange(256) for _ in range(s * d)]
+        scores, probs, out = A.attention_oracle(q, k, v, s, d, shift)
+        qk_jobs, qk_t, pv_jobs, pv_t, sprobs = A.attention_job_streams(
+            q, k, v, s, d, shift
+        )
+        got_scores = A.accumulate_jobs(
+            A.run_jobs_exact(qk_jobs), qk_t, s, s
+        )
+        check(got_scores == scores, f"case {case}: QK^T scores diverged")
+        check(sprobs == probs, f"case {case}: requant rows diverged")
+        got_out = A.accumulate_jobs(A.run_jobs_exact(pv_jobs), pv_t, s, d)
+        check(got_out == out, f"case {case}: P.V output diverged")
+        for row in range(s):
+            prow = probs[row * s : (row + 1) * s]
+            check(max(prow) <= 255, "probability left the u8 domain")
+            check(
+                abs(sum(prow) - 255) <= s,
+                f"row sum {sum(prow)} too far from 255",
+            )
+    print(f"oracle vs job streams: {cases} cases bit-exact")
+
+
+def one_entry_buffer_ops(jobs, width):
+    """Fabric ops under a ONE-entry coalescing buffer: a broadcast-value
+    switch always evicts the open partial batch (mirrors the Rust
+    batcher's bounded-buffer worst case)."""
+    ops, open_b, open_lanes = 0, None, 0
+    for job in jobs:
+        if job["b"] != open_b:
+            if open_lanes:
+                ops += 1
+            open_b, open_lanes = job["b"], 0
+        for _ in job["a"]:
+            open_lanes += 1
+            if open_lanes == width:
+                ops, open_lanes = ops + 1, 0
+    return ops + (1 if open_lanes else 0)
+
+
+def validate_golden_block():
+    s, d, shift = A.ATTN_SPEC
+    q, k, v = A.attention_test_vectors(s, d)
+    _, _, out = A.attention_oracle(q, k, v, s, d, shift)
+    digest = A.stream_digest(out)
+    check(
+        digest == ATTN_DIGEST,
+        f"attention digest {digest:016x} != pinned {ATTN_DIGEST:016x}",
+    )
+    qk_jobs, _, pv_jobs, _, _ = A.attention_job_streams(
+        q, k, v, s, d, shift
+    )
+    bs = [j["b"] for j in qk_jobs]
+    check(bs == sorted(bs), "QK^T stream is not broadcast-value sorted")
+    pv_bs = [j["b"] for j in pv_jobs]
+    check(pv_bs != sorted(pv_bs), "P.V stream unexpectedly sorted")
+    # Width 16 > the 8-row tiles, so partial batches exist and repeated
+    # palette values can merge — the regime where order matters.
+    width = 16
+    qk_chunks = sum((len(j["a"]) + width - 1) // width for j in qk_jobs)
+    qk_ops = one_entry_buffer_ops(qk_jobs, width)
+    pv_chunks = sum((len(j["a"]) + width - 1) // width for j in pv_jobs)
+    pv_ops = one_entry_buffer_ops(pv_jobs, width)
+    qk_rate = (qk_chunks - qk_ops) / qk_chunks
+    pv_rate = max(pv_chunks - pv_ops, 0) / pv_chunks
+    check(
+        qk_rate > pv_rate,
+        f"stationary phase must out-coalesce: {qk_rate:.3f} vs {pv_rate:.3f}",
+    )
+    print(
+        f"golden block: digest {digest:016x} pinned; coalescing hit rate "
+        f"{qk_rate:.2f} (QK^T stationary) vs {pv_rate:.2f} (P.V churning)"
+    )
+
+
+def validate_int4(cases):
+    rng = random.Random(0x4B17)
+    for _ in range(cases):
+        n = rng.randrange(0, 33)
+        vals = [rng.randrange(16) for _ in range(n)]
+        packed = A.pack_nibbles(vals)
+        check(len(packed) == (n + 1) // 2, "packed size")
+        check(A.unpack_nibbles(packed, n) == vals, "roundtrip")
+    for bad in ([16], [3, -1]):
+        try:
+            A.pack_nibbles(bad)
+            check(False, f"pack accepted {bad}")
+        except ValueError:
+            pass
+    for packed, n in ((b"\x21", 3), (b"\x21", 1)):
+        try:
+            A.unpack_nibbles(packed, n)
+            check(False, f"unpack accepted {packed!r} x{n}")
+        except ValueError:
+            pass
+
+    m, k, n = 6, 5, 4
+    a = [(i * 29 + 13) % 256 for i in range(m * k)]
+    w = [(i * 7 + 2) % 16 for i in range(k * n)]
+    jobs, targets = A.int4_gemm_stream(a, A.pack_nibbles(w), m, k, n)
+    check(
+        all(j["b"] <= 0xF for j in jobs),
+        "INT4 stream left the W4 operand class",
+    )
+    c = A.accumulate_jobs(A.run_jobs_exact(jobs), targets, m, n)
+    check(c == matmul(a, w, m, k, n), "INT4 GEMM diverged from dense")
+    digest = A.stream_digest(c)
+    check(
+        digest == INT4_DIGEST,
+        f"int4 digest {digest:016x} != pinned {INT4_DIGEST:016x}",
+    )
+    print(
+        f"int4: {cases} pack/unpack roundtrips, stream all-W4, "
+        f"digest {digest:016x} pinned"
+    )
+
+
+def validate_wire_arch():
+    check(
+        wire.ARCH_ALL[-1] == "nibble4" and wire.arch_index("nibble4") == 8,
+        "nibble4 must be appended LAST (wire index stability)",
+    )
+    hello = {"kind": "hello", "arch": "nibble4", "n": 8, "tenant": "w4"}
+    check(
+        wire.decode_request(wire.encode_request(hello)) == hello,
+        "nibble4 hello roundtrip",
+    )
+    submit = {
+        "kind": "submit",
+        "id": 7,
+        "a": [0, 128, 255],
+        "b": 0xF,  # the W4 ceiling
+    }
+    check(
+        wire.decode_request(wire.encode_request(submit)) == submit,
+        "W4 submit roundtrip",
+    )
+    print("wire: nibble4 at index 8, W4 handshake frames roundtrip")
+
+
+def main():
+    cases = int(sys.argv[1]) if len(sys.argv) > 1 else 200
+    validate_oracle_vs_streams(cases)
+    validate_golden_block()
+    validate_int4(cases)
+    validate_wire_arch()
+    print("OK: attention + INT4 differential validation passed")
+
+
+if __name__ == "__main__":
+    main()

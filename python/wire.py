@@ -55,6 +55,7 @@ ARCH_ALL = [
     "wallace",
     "array",
     "lut-array",
+    "nibble4",
 ]
 
 # Error codes carried by Error frames.

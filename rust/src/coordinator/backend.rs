@@ -208,6 +208,16 @@ impl SimBackend {
 
 impl Backend for SimBackend {
     fn execute(&mut self, batch: &Batch) -> Result<Vec<u32>> {
+        // A W4 (`nibble4`) fabric never latches b[4..8]; an out-of-range
+        // broadcast operand must be a routing error, not a silently
+        // truncated product.
+        anyhow::ensure!(
+            batch.b <= self.unit.arch.b_mask(),
+            "{}: broadcast operand {} exceeds the {}-bit operand class",
+            self.name(),
+            batch.b,
+            self.unit.arch.b_bits()
+        );
         let mut a = batch.a.clone();
         a.resize(self.unit.n, 0);
         let res = self.unit.run_op(&mut self.sim, &a, batch.b)?;
@@ -296,6 +306,18 @@ impl<W: Word> Backend for SimWideBackend<W> {
     fn execute_group(&mut self, batches: &[&Batch]) -> Result<Vec<Vec<u32>>> {
         let lanes = W::LANES;
         let n = self.unit.n;
+        // Same W4 contract as the scalar backend: reject out-of-range
+        // broadcast operands before they reach a lane.
+        for batch in batches {
+            anyhow::ensure!(
+                batch.b <= self.unit.arch.b_mask(),
+                "{}: broadcast operand {} exceeds the {}-bit operand \
+                 class",
+                self.name(),
+                batch.b,
+                self.unit.arch.b_bits()
+            );
+        }
         let mut out = Vec::with_capacity(batches.len());
         for chunk in batches.chunks(lanes) {
             let mut a: Vec<Vec<u16>> = Vec::with_capacity(lanes);
@@ -516,6 +538,24 @@ mod tests {
         let single = be.execute(&mk_batch(vec![4, 4, 4, 4], 4)).unwrap();
         assert_eq!(single, vec![16, 16, 16, 16]);
         assert_eq!(be.cycles(), 16);
+    }
+
+    #[test]
+    fn nibble4_backend_serves_w4_and_rejects_w8_operands() {
+        let mut be = SimBackend::new(Arch::Nibble4, 4).unwrap();
+        let out = be.execute(&mk_batch(vec![3, 5, 200, 255], 15)).unwrap();
+        assert_eq!(out, vec![45, 75, 3000, 3825]);
+        assert_eq!(be.cycles(), 4, "N cycles at N=4: one per element");
+        let err = be.execute(&mk_batch(vec![1], 16)).unwrap_err();
+        assert!(format!("{err:#}").contains("4-bit operand class"));
+
+        let mut be64 = Sim64Backend::new(Arch::Nibble4, 4).unwrap();
+        let batches =
+            vec![mk_batch(vec![9, 9, 9, 9], 7), mk_batch(vec![1], 16)];
+        let refs: Vec<&Batch> = batches.iter().collect();
+        assert!(be64.execute_group(&refs).is_err());
+        let ok = be64.execute(&batches[0]).unwrap();
+        assert_eq!(ok, vec![63, 63, 63, 63]);
     }
 
     #[test]

@@ -393,11 +393,15 @@ impl VectorUnit {
         ops: u64,
         seed: u64,
     ) -> Result<StreamStats> {
+        // The stimulus keeps one RNG draw per operand across all archs
+        // ("identical stimulus"); the INT4 class sees the same stream
+        // masked to its 4-bit broadcast range.
+        let b_mask = self.arch.b_mask();
         let mut rng = Xoshiro256::new(seed);
         let mut stats = StreamStats::default();
         for _ in 0..ops {
             let a: Vec<u16> = (0..self.n).map(|_| rng.operand8()).collect();
-            let b = rng.operand8();
+            let b = rng.operand8() & b_mask;
             let res = self.run_op(sim, &a, b)?;
             stats.ops += 1;
             stats.elements += self.n as u64;
@@ -429,6 +433,21 @@ impl VectorUnit {
         ops: u64,
         seed: u64,
     ) -> Result<StreamStats> {
+        self.run_stream_wide_masked(sim, ops, seed, self.arch.b_mask())
+    }
+
+    /// [`VectorUnit::run_stream_wide`] with an explicit broadcast-operand
+    /// mask. This is how the sweep compares W4 and W8 datapaths on the
+    /// SAME operand stream: run the 8-bit arch with `b_mask = 0xF` and
+    /// its toggles are directly comparable with the `nibble4` unit's
+    /// (identical RNG draws, identical masked values).
+    pub fn run_stream_wide_masked<W: Word>(
+        &self,
+        sim: &mut SimulatorWide<W>,
+        ops: u64,
+        seed: u64,
+        b_mask: u16,
+    ) -> Result<StreamStats> {
         let lanes = W::LANES;
         let mut rngs: Vec<Xoshiro256> = lane_seeds_n(seed, lanes)
             .iter()
@@ -440,8 +459,10 @@ impl VectorUnit {
                 .iter_mut()
                 .map(|rng| (0..self.n).map(|_| rng.operand8()).collect())
                 .collect();
-            let b: Vec<u16> =
-                rngs.iter_mut().map(|rng| rng.operand8()).collect();
+            let b: Vec<u16> = rngs
+                .iter_mut()
+                .map(|rng| rng.operand8() & b_mask)
+                .collect();
             let res = self.run_op_wide(sim, &a, &b)?;
             stats.ops += lanes as u64;
             stats.elements += (lanes * self.n) as u64;

@@ -10,5 +10,6 @@ pub use harness::{
     OpResult, OpResult64, OpResultWide, StreamStats, VectorUnit,
 };
 pub use sweep::{
-    evaluate_arch, sweep_paper_set, sweep_paper_set_seq, ArchEval, SweepRow,
+    evaluate_arch, evaluate_int4, int4_sweep, sweep_paper_set,
+    sweep_paper_set_seq, ArchEval, Int4Eval, SweepRow, INT4_SET,
 };

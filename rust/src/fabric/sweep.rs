@@ -37,6 +37,11 @@ pub struct ArchEval {
     /// Verified vector-op count during the power stimulus (64 lanes ×
     /// stimulus rounds — every lane's products are checked).
     pub ops_verified: u64,
+    /// Measured net toggles per vector op (popcount-exact, from the
+    /// packed simulator's activity counters) — the raw switching
+    /// activity behind the power model, reported so operand-width
+    /// effects (W4 vs W8) are visible independent of calibration.
+    pub toggles_per_op: f64,
 }
 
 /// Evaluate one architecture at one width: synthesis stats from the
@@ -90,7 +95,78 @@ pub fn evaluate_arch(
         meets_1ghz: report.timing.meets_1ghz,
         cycles_per_op: stats.cycles / stats.ops,
         ops_verified: stats.ops,
+        toggles_per_op: sim.total_toggles() as f64 / stats.ops as f64,
     })
+}
+
+/// One row of the INT4 operand-class comparison: an architecture driven
+/// by the SAME 4-bit-masked broadcast stream the `nibble4` unit consumes
+/// (identical RNG draws, identical masked values), so per-op toggle
+/// counts are directly comparable across W4 and W8 datapaths.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Int4Eval {
+    pub arch: Arch,
+    pub n: usize,
+    /// Measured cycles per vector op on the masked stream (W4: N,
+    /// W8 sequential: 2N — the latency distinction the Pareto rows
+    /// must carry).
+    pub cycles_per_op: u64,
+    /// Measured net toggles per vector op (popcount-exact).
+    pub toggles_per_op: f64,
+    /// Raw model power under the masked stimulus.
+    pub power: crate::tech::PowerBreakdown,
+    pub ops_verified: u64,
+}
+
+/// The architectures compared in the INT4 sweep: the W4 one-cycle
+/// datapath against the two W8 nibble datapaths that could serve the
+/// same stream.
+pub const INT4_SET: [Arch; 3] =
+    [Arch::Nibble4, Arch::NibbleUnrolled, Arch::Nibble];
+
+/// Evaluate one architecture on the 4-bit-masked broadcast stream.
+pub fn evaluate_int4(
+    arch: Arch,
+    n: usize,
+    lib: &TechLibrary,
+    ops: u64,
+    seed: u64,
+) -> Result<Int4Eval> {
+    let design = DesignStore::global().get(arch, n)?;
+    let unit = VectorUnit::from_design(design);
+    let mut sim = unit.simulator64()?;
+    let stats = unit.run_stream_wide_masked(&mut sim, ops, seed, 0xF)?;
+    anyhow::ensure!(
+        stats.errors == 0,
+        "{arch} x{n}: {} wrong products under the INT4 stimulus",
+        stats.errors
+    );
+    let power = PowerModel::new(lib).estimate64(unit.netlist(), &sim);
+    Ok(Int4Eval {
+        arch,
+        n,
+        cycles_per_op: stats.cycles / stats.ops,
+        toggles_per_op: sim.total_toggles() as f64 / stats.ops as f64,
+        power,
+        ops_verified: stats.ops,
+    })
+}
+
+/// Run the INT4 operand-class sweep ([`INT4_SET`] × widths) on one
+/// shared masked stimulus, in row order (width-major, `nibble4` first).
+pub fn int4_sweep(
+    widths: &[usize],
+    lib: &TechLibrary,
+    ops: u64,
+    seed: u64,
+) -> Result<Vec<Int4Eval>> {
+    let mut rows = Vec::new();
+    for &n in widths {
+        for arch in INT4_SET {
+            rows.push(evaluate_int4(arch, n, lib, ops, seed)?);
+        }
+    }
+    Ok(rows)
 }
 
 /// A calibrated sweep row (what the Fig. 4 tables print).
@@ -309,6 +385,37 @@ mod tests {
             cal_p.power.scale.to_bits(),
             cal_s.power.scale.to_bits()
         );
+    }
+
+    #[test]
+    fn nibble4_toggles_strictly_below_w8_on_same_stream() {
+        // The acceptance claim: for the SAME 4-bit broadcast operand
+        // stream, the W4 one-cycle datapath switches strictly less than
+        // either W8 nibble datapath, and takes half the cycles of the
+        // sequential one.
+        let lib = TechLibrary::hpc28();
+        let rows = int4_sweep(&[8], &lib, 8, 5).unwrap();
+        let get = |a: Arch| rows.iter().find(|r| r.arch == a).unwrap();
+        let w4 = get(Arch::Nibble4);
+        let w8u = get(Arch::NibbleUnrolled);
+        let w8s = get(Arch::Nibble);
+        assert!(
+            w4.toggles_per_op < w8u.toggles_per_op,
+            "nibble4 {} >= nibble-unrolled {} toggles/op",
+            w4.toggles_per_op,
+            w8u.toggles_per_op
+        );
+        assert!(
+            w4.toggles_per_op < w8s.toggles_per_op,
+            "nibble4 {} >= nibble {} toggles/op",
+            w4.toggles_per_op,
+            w8s.toggles_per_op
+        );
+        // Latency distinction (satellite): W4 is one cycle per element,
+        // W8 sequential is two.
+        assert_eq!(w4.cycles_per_op, 8);
+        assert_eq!(w8u.cycles_per_op, 8);
+        assert_eq!(w8s.cycles_per_op, 16);
     }
 
     #[test]

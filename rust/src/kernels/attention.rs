@@ -1,0 +1,430 @@
+//! Single-head int8 attention lowering: `softmax(Q·Kᵀ)·V` as TWO chained
+//! GEMM job streams with opposite stationarity patterns.
+//!
+//! ```text
+//!   Q (s×d), K (s×d), V (s×d), all u8
+//!     phase 1: S = Q·Kᵀ          GEMM m=s, k=d, n=s   (K stationary)
+//!     requant: P = softmax_u8(S)  integer exp2 approx → u8 rows
+//!     phase 2: O = P·V           GEMM m=s, k=s, n=d   (P moving)
+//! ```
+//!
+//! The two phases stress the coalescing buffer in opposite ways. Phase 1
+//! is lowered weight-stationary: every K element becomes a broadcast
+//! scalar reused across the whole Q column tile, so consecutive jobs
+//! share their broadcast operand and coalesce maximally. Phase 2 defaults
+//! to the row-major order: the probability rows just produced are the
+//! *moving* operand and the broadcast operands (V elements) churn every
+//! job, which is the adversarial stream for a bounded
+//! [`crate::coordinator::BatcherConfig::max_open`] buffer. Comparing
+//! [`crate::coordinator::CoalesceStats`] hit rates between the phases
+//! (see `nibblemul attn`) measures exactly how much the paper's
+//! broadcast-reuse property depends on the schedule, on one workload.
+//!
+//! Everything is integer arithmetic — the softmax is a fixed-point exp2
+//! approximation over score *differences* ([`softmax_u8`]) — so the
+//! whole subsystem is bit-exactly reproducible by the plain-loop oracle
+//! ([`attention_i64`]) and by the Python port
+//! (`python/compile/model.py::attention_oracle`), on every executor
+//! substrate, job order and session window.
+
+use anyhow::{ensure, Result};
+
+use super::exec::JobExecutor;
+use super::gemm::{GemmPlan, GemmSpec};
+use super::schedule::Order;
+
+/// Shape of one single-head attention block over a sequence of `s`
+/// tokens with head dimension `d`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AttentionSpec {
+    /// Sequence length (rows of Q/K/V; scores are s×s).
+    pub s: usize,
+    /// Head dimension (columns of Q/K/V).
+    pub d: usize,
+}
+
+impl AttentionSpec {
+    pub fn new(s: usize, d: usize) -> Self {
+        assert!(s >= 1 && d >= 1, "degenerate attention shape");
+        Self { s, d }
+    }
+
+    /// The QKᵀ phase as a GEMM: `S[s×s] = Q[s×d] · Kᵀ[d×s]`.
+    pub fn qk_gemm(&self) -> GemmSpec {
+        GemmSpec::new(self.s, self.d, self.s)
+    }
+
+    /// The P·V phase as a GEMM: `O[s×d] = P[s×s] · V[s×d]`.
+    pub fn pv_gemm(&self) -> GemmSpec {
+        GemmSpec::new(self.s, self.s, self.d)
+    }
+
+    /// Total u8×u8 products across both phases.
+    pub fn products(&self) -> u64 {
+        self.qk_gemm().products() + self.pv_gemm().products()
+    }
+}
+
+impl std::fmt::Display for AttentionSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "s{}xd{}", self.s, self.d)
+    }
+}
+
+/// Transpose a row-major `rows×cols` matrix.
+pub fn transpose(m: &[u16], rows: usize, cols: usize) -> Vec<u16> {
+    assert_eq!(m.len(), rows * cols, "matrix shape");
+    let mut t = vec![0u16; rows * cols];
+    for r in 0..rows {
+        for c in 0..cols {
+            t[c * rows + r] = m[r * cols + c];
+        }
+    }
+    t
+}
+
+/// Integer softmax-requant of one score row to the u8 domain.
+///
+/// Fixed-point exp2 approximation over differences from the row max:
+/// `e_i = 255 >> ((max - s_i) >> shift)` (zero once the shifted
+/// difference reaches 8), then a round-half-up normalization so each row
+/// sums to ≈255 — the u8 probability carrier the P·V GEMM consumes.
+/// `shift` is the temperature: bigger keeps more of the row alive.
+/// Monotone (higher score ⇒ probability no smaller), all-integer, and
+/// ported line-for-line by the Python oracle.
+pub fn softmax_u8(row: &[i64], shift: u32) -> Vec<u16> {
+    let max = *row.iter().max().expect("nonempty score row");
+    let e: Vec<u64> = row
+        .iter()
+        .map(|&s| {
+            let d = ((max - s) as u64) >> shift;
+            if d >= 8 {
+                0
+            } else {
+                255u64 >> d
+            }
+        })
+        .collect();
+    let sum: u64 = e.iter().sum::<u64>().max(1);
+    e.iter()
+        .map(|&w| ((w * 255 + sum / 2) / sum) as u16)
+        .collect()
+}
+
+/// Plain-loop attention oracle: the bit-exact reference every lowered
+/// execution (any executor, order, tile, session window) must reproduce.
+/// Returns the raw i64 output accumulators `O[s×d]` of the P·V phase.
+pub fn attention_i64(
+    q: &[u16],
+    k: &[u16],
+    v: &[u16],
+    spec: AttentionSpec,
+    shift: u32,
+) -> Vec<i64> {
+    let AttentionSpec { s, d } = spec;
+    assert_eq!(q.len(), s * d, "Q shape");
+    assert_eq!(k.len(), s * d, "K shape");
+    assert_eq!(v.len(), s * d, "V shape");
+    let mut out = vec![0i64; s * d];
+    for i in 0..s {
+        let scores: Vec<i64> = (0..s)
+            .map(|j| {
+                (0..d)
+                    .map(|t| q[i * d + t] as i64 * k[j * d + t] as i64)
+                    .sum()
+            })
+            .collect();
+        let p = softmax_u8(&scores, shift);
+        for t in 0..d {
+            out[i * d + t] = (0..s)
+                .map(|j| p[j] as i64 * v[j * d + t] as i64)
+                .sum();
+        }
+    }
+    out
+}
+
+/// The canonical cross-language Q/K/V block (mirrors
+/// `python/compile/attention.py::attention_test_vectors`): Q full-range,
+/// K and V drawn from 6-value palettes so repeated broadcast values give
+/// the coalescing buffer something to merge. The Rust example, the CLI
+/// and `python/validate_attention.py` all pin the same digest over the
+/// same vectors.
+pub fn attention_test_vectors(
+    s: usize,
+    d: usize,
+) -> (Vec<u16>, Vec<u16>, Vec<u16>) {
+    let q = (0..s * d).map(|i| ((i * 31 + 7) % 256) as u16).collect();
+    let k = (0..s * d)
+        .map(|i| (((i * 5 + 1) % 6) * 40 + 3) as u16)
+        .collect();
+    let v = (0..s * d)
+        .map(|i| (((i * 7 + 2) % 6) * 31 + 5) as u16)
+        .collect();
+    (q, k, v)
+}
+
+/// FNV-1a-64 over an i64 stream — the cross-language checksum shared
+/// with `python/compile/attention.py::stream_digest`.
+pub fn stream_digest(values: &[i64]) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    for &x in values {
+        h = (h ^ x as u64).wrapping_mul(0x100_0000_01B3);
+    }
+    h
+}
+
+/// Everything one attention execution produces, phase by phase.
+#[derive(Clone, Debug)]
+pub struct AttentionOutput {
+    /// Raw QKᵀ score accumulators, `s×s`.
+    pub scores: Vec<i64>,
+    /// Requantized u8 probability rows, `s×s`.
+    pub probs: Vec<u16>,
+    /// Raw P·V output accumulators, `s×d`.
+    pub out: Vec<i64>,
+}
+
+/// A lowered attention block: both phase plans plus the softmax
+/// temperature, chained through any [`JobExecutor`].
+#[derive(Clone, Copy, Debug)]
+pub struct AttentionPlan {
+    pub spec: AttentionSpec,
+    /// Softmax temperature shift (see [`softmax_u8`]).
+    pub shift: u32,
+    /// Job order of the QKᵀ phase (default: weight-stationary — K is
+    /// the reused operand).
+    pub qk_order: Order,
+    /// Job order of the P·V phase (default: row-major — the opposite
+    /// pattern; V's broadcast operands churn).
+    pub pv_order: Order,
+}
+
+impl AttentionPlan {
+    /// The default opposite-stationarity chaining.
+    pub fn new(spec: AttentionSpec, shift: u32) -> Self {
+        Self {
+            spec,
+            shift,
+            qk_order: Order::WeightStationary,
+            pv_order: Order::RowMajor,
+        }
+    }
+
+    /// Phase 1: lower and execute `S = Q·Kᵀ`.
+    pub fn scores(
+        &self,
+        q: &[u16],
+        k: &[u16],
+        exec: &mut dyn JobExecutor,
+    ) -> Result<Vec<i64>> {
+        let AttentionSpec { s, d } = self.spec;
+        ensure!(q.len() == s * d, "Q must be s*d = {} elements", s * d);
+        ensure!(k.len() == s * d, "K must be s*d = {} elements", s * d);
+        let kt = transpose(k, s, d);
+        GemmPlan::new(self.qk_gemm_spec(), self.qk_order)
+            .execute(q, &kt, exec)
+    }
+
+    /// The requant between the phases: score rows → u8 probability rows.
+    pub fn probs(&self, scores: &[i64]) -> Vec<u16> {
+        let s = self.spec.s;
+        assert_eq!(scores.len(), s * s, "score matrix shape");
+        scores
+            .chunks(s)
+            .flat_map(|row| softmax_u8(row, self.shift))
+            .collect()
+    }
+
+    /// Phase 2: lower and execute `O = P·V` on the requantized rows.
+    pub fn output(
+        &self,
+        probs: &[u16],
+        v: &[u16],
+        exec: &mut dyn JobExecutor,
+    ) -> Result<Vec<i64>> {
+        let AttentionSpec { s, d } = self.spec;
+        ensure!(probs.len() == s * s, "P must be s*s = {} elements", s * s);
+        ensure!(v.len() == s * d, "V must be s*d = {} elements", s * d);
+        GemmPlan::new(self.pv_gemm_spec(), self.pv_order)
+            .execute(probs, v, exec)
+    }
+
+    /// Chain both phases through one executor. Bit-exact with
+    /// [`attention_i64`] on every substrate — integer sums are
+    /// order-free, and the requant sits between the GEMMs, outside any
+    /// reordering.
+    pub fn execute(
+        &self,
+        q: &[u16],
+        k: &[u16],
+        v: &[u16],
+        exec: &mut dyn JobExecutor,
+    ) -> Result<AttentionOutput> {
+        let scores = self.scores(q, k, exec)?;
+        let probs = self.probs(&scores);
+        let out = self.output(&probs, v, exec)?;
+        Ok(AttentionOutput { scores, probs, out })
+    }
+
+    fn qk_gemm_spec(&self) -> GemmSpec {
+        self.spec.qk_gemm()
+    }
+
+    fn pv_gemm_spec(&self) -> GemmSpec {
+        self.spec.pv_gemm()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{BatcherConfig, ExactBackend, SimBackend};
+    use crate::kernels::{exact_exec, FabricExec};
+    use crate::multipliers::Arch;
+    use crate::util::Xoshiro256;
+
+    fn rand_mat(rng: &mut Xoshiro256, len: usize) -> Vec<u16> {
+        (0..len).map(|_| rng.operand8()).collect()
+    }
+
+    #[test]
+    fn transpose_roundtrips() {
+        let m: Vec<u16> = (0..12).collect();
+        let t = transpose(&m, 3, 4);
+        assert_eq!(t[0], m[0]);
+        assert_eq!(t[1 * 3 + 2], m[2 * 4 + 1]);
+        assert_eq!(transpose(&t, 4, 3), m);
+    }
+
+    #[test]
+    fn softmax_rows_are_monotone_and_normalized() {
+        let p = softmax_u8(&[10, 1000, 1000, -50], 4);
+        assert_eq!(p[1], p[2], "equal scores, equal probability");
+        assert!(p[1] > p[0] && p[0] >= p[3], "monotone in the score");
+        let sum: u32 = p.iter().map(|&x| x as u32).sum();
+        assert!(
+            (250..=260).contains(&sum),
+            "row sums to ~255, got {sum}"
+        );
+        assert!(p.iter().all(|&x| x <= 255), "u8 probability carrier");
+        // A one-hot row concentrates all mass.
+        assert_eq!(softmax_u8(&[0, 1 << 20], 4), vec![0, 255]);
+    }
+
+    #[test]
+    fn lowered_attention_matches_plain_loop_oracle() {
+        let mut rng = Xoshiro256::new(0xA77);
+        for (s, d) in [(1, 1), (3, 5), (6, 4), (9, 2)] {
+            let spec = AttentionSpec::new(s, d);
+            let q = rand_mat(&mut rng, s * d);
+            let k = rand_mat(&mut rng, s * d);
+            let v = rand_mat(&mut rng, s * d);
+            let want = attention_i64(&q, &k, &v, spec, 4);
+            let plan = AttentionPlan::new(spec, 4);
+            let got =
+                plan.execute(&q, &k, &v, &mut exact_exec()).unwrap();
+            assert_eq!(got.out, want, "s{s} d{d}");
+            assert_eq!(got.scores.len(), s * s);
+            assert_eq!(got.probs.len(), s * s);
+        }
+    }
+
+    #[test]
+    fn orders_change_op_counts_never_results() {
+        let mut rng = Xoshiro256::new(0x5EED);
+        let spec = AttentionSpec::new(6, 3);
+        let q = rand_mat(&mut rng, 18);
+        let k = rand_mat(&mut rng, 18);
+        let v = rand_mat(&mut rng, 18);
+        let want = attention_i64(&q, &k, &v, spec, 4);
+        let mut op_counts = Vec::new();
+        for (qk, pv) in [
+            (Order::WeightStationary, Order::RowMajor),
+            (Order::RowMajor, Order::WeightStationary),
+            (Order::WeightStationary, Order::WeightStationary),
+        ] {
+            let mut plan = AttentionPlan::new(spec, 4);
+            plan.qk_order = qk;
+            plan.pv_order = pv;
+            let mut fabric = FabricExec::new(
+                Box::new(ExactBackend),
+                BatcherConfig::bounded(8, 2),
+            );
+            let got = plan.execute(&q, &k, &v, &mut fabric).unwrap();
+            assert_eq!(got.out, want, "{qk}/{pv}");
+            op_counts.push(fabric.batches_executed());
+        }
+        assert!(
+            op_counts.iter().any(|&c| c != op_counts[0]),
+            "schedules must differ in fabric ops: {op_counts:?}"
+        );
+    }
+
+    #[test]
+    fn opposite_phases_stress_the_buffer_oppositely() {
+        // On a bounded buffer, the weight-stationary QKᵀ phase must
+        // coalesce strictly better than the row-major P·V phase. The
+        // canonical palette block keeps K/V values repeating, and the
+        // width (16) exceeds the 8-row tiles, so partial batches exist —
+        // the regime where the schedule actually matters.
+        let spec = AttentionSpec::new(8, 4);
+        let (q, k, v) = attention_test_vectors(8, 4);
+        let plan = AttentionPlan::new(spec, 4);
+        let mut fabric = FabricExec::new(
+            Box::new(ExactBackend),
+            BatcherConfig::bounded(16, 2),
+        );
+        let scores = plan.scores(&q, &k, &mut fabric).unwrap();
+        let qk_stats = fabric.stats();
+        let probs = plan.probs(&scores);
+        plan.output(&probs, &v, &mut fabric).unwrap();
+        let both = fabric.stats();
+        let pv_chunks = both.chunks - qk_stats.chunks;
+        let pv_saved =
+            pv_chunks - (both.batches - qk_stats.batches).min(pv_chunks);
+        let pv_hit = pv_saved as f64 / pv_chunks as f64;
+        assert!(
+            qk_stats.hit_rate() > pv_hit,
+            "stationary phase must out-coalesce the churning phase: \
+             {:.3} vs {pv_hit:.3}",
+            qk_stats.hit_rate()
+        );
+    }
+
+    #[test]
+    fn canonical_block_digest_matches_python_pin() {
+        // The same literal is pinned by python/validate_attention.py and
+        // examples/int8_attention.rs: one digest, two codebases.
+        let (q, k, v) = attention_test_vectors(8, 4);
+        let out = attention_i64(&q, &k, &v, AttentionSpec::new(8, 4), 4);
+        assert_eq!(stream_digest(&out), 0xB02D_192B_4B6D_B035);
+    }
+
+    #[test]
+    fn gate_level_fabric_is_bit_exact() {
+        let mut rng = Xoshiro256::new(0xFAB);
+        let spec = AttentionSpec::new(5, 3);
+        let q = rand_mat(&mut rng, 15);
+        let k = rand_mat(&mut rng, 15);
+        let v = rand_mat(&mut rng, 15);
+        let want = attention_i64(&q, &k, &v, spec, 4);
+        let plan = AttentionPlan::new(spec, 4);
+        let mut fabric = FabricExec::new(
+            Box::new(SimBackend::new(Arch::Nibble, 4).unwrap()),
+            BatcherConfig::bounded(4, 2),
+        );
+        let got = plan.execute(&q, &k, &v, &mut fabric).unwrap();
+        assert_eq!(got.out, want);
+    }
+
+    #[test]
+    fn bad_shapes_error() {
+        let plan = AttentionPlan::new(AttentionSpec::new(2, 2), 4);
+        let mut exec = exact_exec();
+        assert!(plan.scores(&[1, 2, 3], &[1, 2, 3, 4], &mut exec).is_err());
+        assert!(plan
+            .output(&[1, 2, 3], &[1, 2, 3, 4], &mut exec)
+            .is_err());
+    }
+}

@@ -18,7 +18,9 @@
 
 use anyhow::{ensure, Result};
 
-use super::gemm::GemmSpec;
+use super::exec::JobExecutor;
+use super::gemm::{GemmPlan, GemmSpec};
+use super::schedule::Order;
 
 /// Geometry of one conv2d layer.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -216,6 +218,111 @@ pub fn conv2d_i32(
     Ok(out)
 }
 
+/// Depthwise conv2d lowering: channel `c` of the input convolves with
+/// kernel `c` only (groups = channels, multiplier 1; `spec.c_out` must
+/// equal `spec.c_in`). Weights are `(c, kh, kw)`, one kernel per channel.
+///
+/// Reuses the im2col + tiled-GEMM machinery once per channel — each
+/// channel is a `c_in=1, c_out=1` convolution — instead of materializing
+/// the block-diagonal dense GEMM, which would spend `(c−1)/c` of its
+/// products multiplying structural zeros. Output is channel-major
+/// `(c, out_h, out_w)` i64 accumulators, bit-exact against
+/// [`depthwise_conv2d_i32`] for every order and executor.
+pub fn depthwise_conv2d(
+    spec: &Conv2dSpec,
+    input: &[u16],
+    w: &[u16],
+    pad_value: u16,
+    order: Order,
+    exec: &mut dyn JobExecutor,
+) -> Result<Vec<i64>> {
+    spec.validate()?;
+    ensure!(
+        spec.c_out == spec.c_in,
+        "depthwise conv needs c_out == c_in, got {} != {}",
+        spec.c_out,
+        spec.c_in
+    );
+    ensure!(
+        input.len() == spec.c_in * spec.h * spec.w,
+        "input must be c_in*h*w = {} elements",
+        spec.c_in * spec.h * spec.w
+    );
+    let kk = spec.kh * spec.kw;
+    ensure!(
+        w.len() == spec.c_in * kk,
+        "depthwise weights must be c*kh*kw = {} elements",
+        spec.c_in * kk
+    );
+    let ch_spec = Conv2dSpec {
+        c_in: 1,
+        c_out: 1,
+        ..*spec
+    };
+    let gemm = ch_spec.gemm();
+    let plane = spec.h * spec.w;
+    let mut out = Vec::with_capacity(spec.c_in * gemm.m);
+    for c in 0..spec.c_in {
+        let a = im2col(
+            &ch_spec,
+            &input[c * plane..(c + 1) * plane],
+            pad_value,
+        )?;
+        let b = weights_to_gemm(&ch_spec, &w[c * kk..(c + 1) * kk])?;
+        // n = 1, so the GEMM output is already this channel's
+        // position-major (out_h, out_w) plane.
+        out.extend(GemmPlan::new(gemm, order).execute(&a, &b, exec)?);
+    }
+    Ok(out)
+}
+
+/// Direct-loop depthwise conv2d oracle, `(c, out_h, out_w)` layout — the
+/// reference [`depthwise_conv2d`] must match bit-exactly.
+pub fn depthwise_conv2d_i32(
+    spec: &Conv2dSpec,
+    input: &[u16],
+    w: &[u16],
+    pad_value: u16,
+) -> Result<Vec<i32>> {
+    spec.validate()?;
+    ensure!(spec.c_out == spec.c_in, "depthwise needs c_out == c_in");
+    ensure!(input.len() == spec.c_in * spec.h * spec.w, "input shape");
+    ensure!(w.len() == spec.c_in * spec.kh * spec.kw, "weight shape");
+    let (oh, ow) = (spec.out_h(), spec.out_w());
+    let mut out = vec![0i32; spec.c_in * oh * ow];
+    for c in 0..spec.c_in {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut acc = 0i64;
+                for ky in 0..spec.kh {
+                    for kx in 0..spec.kw {
+                        let iy = (oy * spec.stride + ky) as isize
+                            - spec.pad as isize;
+                        let ix = (ox * spec.stride + kx) as isize
+                            - spec.pad as isize;
+                        let x = if iy >= 0
+                            && ix >= 0
+                            && (iy as usize) < spec.h
+                            && (ix as usize) < spec.w
+                        {
+                            input[(c * spec.h + iy as usize) * spec.w
+                                + ix as usize]
+                        } else {
+                            pad_value
+                        };
+                        let wt =
+                            w[(c * spec.kh + ky) * spec.kw + kx];
+                        acc += x as i64 * wt as i64;
+                    }
+                }
+                out[(c * oh + oy) * ow + ox] = i32::try_from(acc)
+                    .expect("oracle accumulator overflow");
+            }
+        }
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -298,6 +405,114 @@ mod tests {
         // m=2 positions, n=2 channels: [[p0c0, p0c1], [p1c0, p1c1]]
         let chw = to_chw(&spec, &[10, 20, 30, 40]);
         assert_eq!(chw, vec![10, 30, 20, 40]);
+    }
+
+    #[test]
+    fn depthwise_matches_direct_loop_oracle() {
+        use crate::kernels::exact_exec;
+        use crate::util::Xoshiro256;
+        let mut rng = Xoshiro256::new(0xD3);
+        for (stride, pad) in [(1, 0), (1, 1), (2, 1)] {
+            let spec = Conv2dSpec {
+                c_in: 3,
+                h: 5,
+                w: 6,
+                c_out: 3,
+                kh: 3,
+                kw: 3,
+                stride,
+                pad,
+            };
+            let img: Vec<u16> =
+                (0..90).map(|_| rng.operand8()).collect();
+            let w: Vec<u16> =
+                (0..27).map(|_| rng.operand8()).collect();
+            let want = depthwise_conv2d_i32(&spec, &img, &w, 9).unwrap();
+            for order in [Order::RowMajor, Order::WeightStationary] {
+                let got = depthwise_conv2d(
+                    &spec,
+                    &img,
+                    &w,
+                    9,
+                    order,
+                    &mut exact_exec(),
+                )
+                .unwrap();
+                let got32: Vec<i32> =
+                    got.iter().map(|&x| x as i32).collect();
+                assert_eq!(got32, want, "s{stride} p{pad} {order}");
+            }
+        }
+    }
+
+    #[test]
+    fn depthwise_equals_block_diagonal_dense_conv() {
+        // A depthwise conv IS the dense conv whose weight tensor is
+        // block-diagonal across channels — cross-check against the
+        // existing dense oracle, and count the products saved.
+        let spec = Conv2dSpec {
+            c_in: 4,
+            h: 4,
+            w: 4,
+            c_out: 4,
+            kh: 2,
+            kw: 2,
+            stride: 1,
+            pad: 1,
+        };
+        let img: Vec<u16> = (0..64).map(|i| (i * 13 % 256) as u16).collect();
+        let w: Vec<u16> = (0..16).map(|i| (i * 29 % 256) as u16).collect();
+        let mut dense_w = vec![0u16; 4 * 4 * 4];
+        for c in 0..4 {
+            for t in 0..4 {
+                dense_w[(c * 4 + c) * 4 + t] = w[c * 4 + t];
+            }
+        }
+        let want = conv2d_i32(&spec, &img, &dense_w, 5).unwrap();
+        let got = depthwise_conv2d(
+            &spec,
+            &img,
+            &w,
+            5,
+            Order::WeightStationary,
+            &mut crate::kernels::exact_exec(),
+        )
+        .unwrap();
+        let got32: Vec<i32> = got.iter().map(|&x| x as i32).collect();
+        assert_eq!(got32, want);
+        // The dense lowering pays c_in x the products of the depthwise.
+        let ch = Conv2dSpec {
+            c_in: 1,
+            c_out: 1,
+            ..spec
+        };
+        assert_eq!(spec.products(), 4 * 4 * ch.products());
+    }
+
+    #[test]
+    fn depthwise_rejects_mismatched_channels() {
+        let spec = Conv2dSpec {
+            c_in: 2,
+            h: 3,
+            w: 3,
+            c_out: 3,
+            kh: 1,
+            kw: 1,
+            stride: 1,
+            pad: 0,
+        };
+        let img = vec![1u16; 18];
+        let w = vec![1u16; 2];
+        assert!(depthwise_conv2d_i32(&spec, &img, &w, 0).is_err());
+        assert!(depthwise_conv2d(
+            &spec,
+            &img,
+            &w,
+            0,
+            Order::RowMajor,
+            &mut crate::kernels::exact_exec()
+        )
+        .is_err());
     }
 
     #[test]

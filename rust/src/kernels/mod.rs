@@ -10,7 +10,8 @@
 //! ```text
 //!   conv2d ──im2col──▶ GEMM ──tiled weight-stationary──▶ VectorJobs
 //!     (conv.rs)        (gemm.rs)      (schedule.rs)          │
-//!                                                            ▼
+//!   attention ──QKᵀ / softmax-requant / ·V──▶ 2 chained GEMMs│
+//!     (attention.rs, opposite stationarity per phase)        ▼
 //!    ClosureExec | FabricExec (DesignStore fabric) | CoordinatorExec
 //!                         (exec.rs)
 //! ```
@@ -29,13 +30,19 @@
 //! row-major order degrades to the uncoalesced chunk count
 //! ([`chunk_count`]). `nibblemul bench-gemm` measures the gap.
 
+mod attention;
 mod conv;
 mod exec;
 mod gemm;
 mod schedule;
 
+pub use attention::{
+    attention_i64, attention_test_vectors, softmax_u8, stream_digest,
+    transpose, AttentionOutput, AttentionPlan, AttentionSpec,
+};
 pub use conv::{
-    conv2d_i32, im2col, to_chw, weights_to_gemm, Conv2dSpec,
+    conv2d_i32, depthwise_conv2d, depthwise_conv2d_i32, im2col, to_chw,
+    weights_to_gemm, Conv2dSpec,
 };
 pub use exec::{
     exact_exec, ClosureExec, CoordinatorExec, FabricExec, JobExecutor,

@@ -11,6 +11,9 @@
 //!   gemm                int8 GEMM lowered onto the fabric through the
 //!                       coordinator (kernels::GemmPlan)
 //!   conv                int8 conv2d via im2col + GEMM lowering
+//!   attn                int8 attention: QKᵀ / softmax-requant / ·V as
+//!                       two chained GEMM job streams with opposite
+//!                       stationarity (kernels::attention)
 //!   synth               synthesis report for one architecture (from the
 //!                       shared compiled-design store)
 //!   bench-sim           scalar vs 64/256/512-lane packed simulator
@@ -21,6 +24,9 @@
 //!   bench-gemm          weight-stationary vs row-major GEMM scheduling:
 //!                       fabric ops, coalescing hit rate, lane occupancy,
 //!                       scalar vs packed wall time (BENCH_gemm.json)
+//!   bench-attn          per-phase coalescing of the attention chain:
+//!                       stationary QKᵀ vs churning P·V hit rates on a
+//!                       bounded buffer (BENCH_attn.json)
 //!   bench-all           every bench above + merged BENCH_all.json with
 //!                       one --check gate
 //!   report              the paper figures, in order (paper reproduction)
@@ -42,8 +48,9 @@ use nibblemul::coordinator::{
 use nibblemul::design::{DesignKey, DesignStore};
 use nibblemul::fabric::{sweep_paper_set, sweep_paper_set_seq, VectorUnit};
 use nibblemul::kernels::{
-    conv2d_i32, im2col, matmul_i32, min_fabric_ops, to_chw,
-    weights_to_gemm, Conv2dSpec, CoordinatorExec, FabricExec, GemmPlan,
+    attention_i64, attention_test_vectors, conv2d_i32, im2col, matmul_i32,
+    min_fabric_ops, stream_digest, to_chw, weights_to_gemm, AttentionPlan,
+    AttentionSpec, Conv2dSpec, CoordinatorExec, FabricExec, GemmPlan,
     GemmSpec, Order, RouterExec,
 };
 use nibblemul::model::quant::QuantMlp;
@@ -81,6 +88,8 @@ fn run(args: &Args) -> Result<()> {
         "mlp" => cmd_mlp(args),
         "gemm" => cmd_gemm(args),
         "conv" => cmd_conv(args),
+        "attn" => cmd_attn(args),
+        "bench-attn" => cmd_bench_attn(args),
         "synth" => cmd_synth(args),
         "bench-sim" => cmd_bench_sim(args),
         "bench-synth" => cmd_bench_synth(args),
@@ -158,6 +167,16 @@ COMMANDS
           [--lanes 64|256|512]
                                           int8 conv2d via im2col + GEMM
                                           lowering, verified vs direct conv
+  attn    [--s 8] [--d 4] [--shift 4] [--arch nibble] [--width 16]
+          [--workers 2] [--max-open 2] [--batched] [--lanes 64|256|512]
+                                          int8 attention (QKᵀ, integer
+                                          softmax-requant, P·V) as two
+                                          chained GEMM job streams with
+                                          opposite stationarity, served by
+                                          the coordinator, verified vs the
+                                          plain-loop oracle; reports the
+                                          per-phase coalescing deltas and
+                                          the cross-language FNV digest
   synth   [--arch nibble] [--n 8]         synthesis report for one design
                                           (served from the shared design store)
   bench-sim [--arch nibble] [--n 8] [--rounds 4] [--out BENCH_sim.json] [--check]
@@ -184,6 +203,15 @@ COMMANDS
                                           misses the provable op minimum;
                                           --check additionally enforces the
                                           >= 1.0x fewer-ops-than-naive floor
+  bench-attn [--s 8] [--d 4] [--shift 4] [--arch nibble] [--width 16]
+          [--max-open 2] [--out BENCH_attn.json] [--check]
+                                          per-phase coalescing of the
+                                          attention chain on a bounded
+                                          buffer: stationary QKᵀ vs
+                                          churning P·V hit rates, padded
+                                          lanes, forced flushes (--check:
+                                          stationary phase must strictly
+                                          out-coalesce the churning phase)
   bench-all [--out BENCH_all.json] [--check]
                                           run bench-sim, bench-synth and
                                           bench-gemm, merge their JSON into one
@@ -947,6 +975,190 @@ fn cmd_conv(args: &Args) -> Result<()> {
         gemm.products() as f64 / elapsed
     );
     coord.shutdown();
+    Ok(())
+}
+
+/// Run the int8 attention chain (QKᵀ → integer softmax-requant → P·V)
+/// through the serving stack on the canonical cross-language Q/K/V
+/// block, verify against the plain-loop oracle, and report how
+/// differently the two phases coalesce: the QKᵀ stream is lowered
+/// weight-stationary (every K element reused across the whole column
+/// tile) while the P·V stream stays row-major (broadcast values churn
+/// every job — the adversarial pattern for a bounded buffer).
+fn cmd_attn(args: &Args) -> Result<()> {
+    let arch = parse_arch(args, Arch::Nibble)?;
+    let s = args.get_usize("s", 8)?;
+    let d = args.get_usize("d", 4)?;
+    let shift = args.get_u64("shift", 4)? as u32;
+    let width = args.get_usize("width", 16)?;
+    let workers = args.get_usize("workers", 2)?;
+    let max_open = parse_max_open(args)?.or(Some(2));
+    let batched = args.has("batched");
+    let lanes = parse_lanes(args)?;
+    anyhow::ensure!(s >= 1 && d >= 1, "--s/--d must be >= 1");
+    anyhow::ensure!(shift <= 16, "--shift must be <= 16");
+
+    let spec = AttentionSpec::new(s, d);
+    println!(
+        "attn: {spec} ({} products: QKᵀ {} then P·V {}), shift {shift}, \
+         {workers} workers x {}:{arch} width {width}",
+        spec.products(),
+        spec.qk_gemm(),
+        spec.pv_gemm(),
+        if batched { format!("sim{lanes}") } else { "sim".to_string() },
+    );
+    let (q, k, v) = attention_test_vectors(s, d);
+    let want = attention_i64(&q, &k, &v, spec, shift);
+
+    let coord = Coordinator::new(
+        CoordinatorConfig {
+            width,
+            queue_depth: workers * 4,
+            max_open,
+        },
+        fabric_backends(arch, width, workers, batched, lanes)?,
+    );
+    let plan = AttentionPlan::new(spec, shift);
+    let mut exec = CoordinatorExec::new(&coord);
+    let sw = Stopwatch::start();
+    let scores = plan.scores(&q, &k, &mut exec)?;
+    let qk = coord.metrics.snapshot();
+    let probs = plan.probs(&scores);
+    let out = plan.output(&probs, &v, &mut exec)?;
+    let elapsed = sw.elapsed_secs();
+    let all = coord.metrics.snapshot();
+    anyhow::ensure!(
+        out == want,
+        "attention diverged from the plain-loop oracle"
+    );
+    println!("verified bit-exact against the plain-loop attention oracle");
+
+    let qk_rate = qk.coalesce_hit_rate();
+    let pv_chunks = all.coalesce_chunks - qk.coalesce_chunks;
+    let pv_saved = all.coalesce_saved.saturating_sub(qk.coalesce_saved);
+    let pv_rate = if pv_chunks == 0 {
+        0.0
+    } else {
+        pv_saved as f64 / pv_chunks as f64
+    };
+    println!(
+        "phase coalescing: QKᵀ ({}) {:.1}% hit rate vs P·V ({}) {:.1}%",
+        plan.qk_order.name(),
+        qk_rate * 100.0,
+        plan.pv_order.name(),
+        pv_rate * 100.0,
+    );
+    println!("{all}");
+    println!(
+        "occupancy {:.1}%, {:.0} products/s (wall)",
+        coord.metrics.occupancy(width) * 100.0,
+        spec.products() as f64 / elapsed
+    );
+    println!(
+        "output digest {:016x} (FNV-1a-64; python/validate_attention.py \
+         pins the same literal for the canonical s8xd4 shift-4 block)",
+        stream_digest(&out)
+    );
+    coord.shutdown();
+    Ok(())
+}
+
+/// The measured version of the opposite-stationarity claim: on the SAME
+/// attention block through the SAME bounded buffer, the
+/// weight-stationary QKᵀ stream must out-coalesce the row-major P·V
+/// stream. In-process [`FabricExec`] keeps the per-phase
+/// [`nibblemul::coordinator::CoalesceStats`] deterministic; written as
+/// machine-readable BENCH_attn.json.
+fn cmd_bench_attn(args: &Args) -> Result<()> {
+    let arch = parse_arch(args, Arch::Nibble)?;
+    let s = args.get_usize("s", 8)?;
+    let d = args.get_usize("d", 4)?;
+    let shift = args.get_u64("shift", 4)? as u32;
+    let width = args.get_usize("width", 16)?;
+    let max_open = args.get_usize("max-open", 2)?;
+    let out = args.get_or("out", "BENCH_attn.json");
+    anyhow::ensure!(s >= 1 && d >= 1, "--s/--d must be >= 1");
+    anyhow::ensure!(shift <= 16, "--shift must be <= 16");
+    anyhow::ensure!(max_open >= 1, "--max-open must be >= 1");
+
+    let spec = AttentionSpec::new(s, d);
+    println!(
+        "bench-attn: {spec} shift {shift}, {arch} x{width}, coalescing \
+         buffer {max_open} (stationary QKᵀ vs churning P·V)"
+    );
+    let (q, k, v) = attention_test_vectors(s, d);
+    let want = attention_i64(&q, &k, &v, spec, shift);
+    let plan = AttentionPlan::new(spec, shift);
+
+    let mut fabric = FabricExec::new(
+        Box::new(SimBackend::new(arch, width)?),
+        BatcherConfig::bounded(width, max_open),
+    );
+    let scores = plan.scores(&q, &k, &mut fabric)?;
+    let qk = fabric.stats();
+    let probs = plan.probs(&scores);
+    let got = plan.output(&probs, &v, &mut fabric)?;
+    let both = fabric.stats();
+    anyhow::ensure!(
+        got == want,
+        "attention diverged from the plain-loop oracle"
+    );
+
+    let pv_chunks = both.chunks - qk.chunks;
+    let pv_ops = both.batches - qk.batches;
+    let pv_saved = pv_chunks.saturating_sub(pv_ops);
+    let qk_rate = qk.hit_rate();
+    let pv_rate = if pv_chunks == 0 {
+        0.0
+    } else {
+        pv_saved as f64 / pv_chunks as f64
+    };
+    println!(
+        "  QKᵀ ({:>17}): {} chunks -> {} fabric ops, {:.1}% hit rate, \
+         {} padded lanes, {} forced flushes",
+        plan.qk_order.name(),
+        qk.chunks,
+        qk.batches,
+        qk_rate * 100.0,
+        qk.padded_lanes,
+        qk.forced_flushes,
+    );
+    println!(
+        "  P·V ({:>17}): {} chunks -> {} fabric ops, {:.1}% hit rate, \
+         {} padded lanes, {} forced flushes",
+        plan.pv_order.name(),
+        pv_chunks,
+        pv_ops,
+        pv_rate * 100.0,
+        both.padded_lanes - qk.padded_lanes,
+        both.forced_flushes - qk.forced_flushes,
+    );
+    let json = format!(
+        "{{\n  \"bench\": \"attn\",\n  \"workload\": \"{arch} x{width} \
+         attention {spec} shift {shift}, coalesce buffer {max_open}\",\n  \
+         \"qk_chunks\": {},\n  \"qk_fabric_ops\": {},\n  \
+         \"qk_hit_rate\": {qk_rate:.4},\n  \
+         \"pv_chunks\": {pv_chunks},\n  \"pv_fabric_ops\": {pv_ops},\n  \
+         \"pv_hit_rate\": {pv_rate:.4},\n  \
+         \"out_digest\": \"{:016x}\"\n}}\n",
+        qk.chunks,
+        qk.batches,
+        stream_digest(&got),
+    );
+    std::fs::write(&out, json)?;
+    println!("wrote {out}");
+    if args.has("check") {
+        anyhow::ensure!(
+            qk_rate > pv_rate,
+            "stationary QKᵀ phase must strictly out-coalesce the \
+             churning P·V phase ({qk_rate:.3} vs {pv_rate:.3})"
+        );
+        println!(
+            "check passed: stationary {:.1}% > churning {:.1}%",
+            qk_rate * 100.0,
+            pv_rate * 100.0
+        );
+    }
     Ok(())
 }
 

@@ -24,7 +24,14 @@ use crate::kernels::{
 /// Fixed-point requantization parameters (round-half-up, saturating to
 /// the u8 domain) — identical to `model.py::_requant`. Factored out of
 /// [`QuantLayer`] so the GEMM/conv layer types share one implementation.
-#[derive(Clone, Copy, Debug)]
+///
+/// `per_channel`, when present, carries one `(m, shift)` pair per output
+/// channel (per GEMM column / conv output channel); the scalar `m`/`shift`
+/// then only serve channels beyond the vector's length (which is rejected
+/// by the layer types anyway). The zero point and ReLU floor stay shared —
+/// per-channel zero points do not survive the padding-taps-are-quantized-
+/// zero property that makes the conv zero-point algebra exact.
+#[derive(Clone, Debug)]
 pub struct Requant {
     /// Fixed-point multiplier (m < 2^7; see model.py).
     pub m: i32,
@@ -32,23 +39,67 @@ pub struct Requant {
     /// Output zero point (also the ReLU floor).
     pub zp: i32,
     pub relu: bool,
+    /// Optional per-output-channel `(m, shift)` overrides.
+    pub per_channel: Option<Vec<(i32, u32)>>,
 }
 
 impl Requant {
-    /// Requantize one i32 accumulator to the u8 domain.
+    /// A scalar (whole-tensor) requant — the historical constructor.
+    pub fn scalar(m: i32, shift: u32, zp: i32, relu: bool) -> Self {
+        Self {
+            m,
+            shift,
+            zp,
+            relu,
+            per_channel: None,
+        }
+    }
+
+    /// Attach per-output-channel `(m, shift)` pairs.
+    pub fn with_channel_scales(mut self, scales: Vec<(i32, u32)>) -> Self {
+        self.per_channel = Some(scales);
+        self
+    }
+
+    /// The `(m, shift)` pair serving output channel `ch`.
+    fn params_for(&self, ch: usize) -> (i32, u32) {
+        match &self.per_channel {
+            Some(v) => v[ch],
+            None => (self.m, self.shift),
+        }
+    }
+
+    /// Requantize one i32 accumulator to the u8 domain using the scalar
+    /// (whole-tensor) scale.
     pub fn apply_one(&self, a: i32) -> i32 {
-        let rounding: i32 = if self.shift > 0 {
-            1 << (self.shift - 1)
-        } else {
-            0
-        };
-        let y = ((a * self.m + rounding) >> self.shift) + self.zp;
+        self.apply_scaled(a, self.m, self.shift)
+    }
+
+    fn apply_scaled(&self, a: i32, m: i32, shift: u32) -> i32 {
+        let rounding: i32 = if shift > 0 { 1 << (shift - 1) } else { 0 };
+        let y = ((a * m + rounding) >> shift) + self.zp;
         let lo = if self.relu { self.zp } else { 0 };
         y.clamp(lo, 255)
     }
 
+    /// Requantize a row of accumulators; index = output channel. With
+    /// `per_channel` set, its length must cover the row.
     pub fn apply(&self, acc: &[i32]) -> Vec<i32> {
-        acc.iter().map(|&a| self.apply_one(a)).collect()
+        if let Some(v) = &self.per_channel {
+            assert!(
+                v.len() >= acc.len(),
+                "per-channel requant: {} scales for {} channels",
+                v.len(),
+                acc.len()
+            );
+        }
+        acc.iter()
+            .enumerate()
+            .map(|(ch, &a)| {
+                let (m, shift) = self.params_for(ch);
+                self.apply_scaled(a, m, shift)
+            })
+            .collect()
     }
 }
 
@@ -109,12 +160,7 @@ impl QuantLayer {
 
     /// This layer's requantization parameters.
     pub fn requant_params(&self) -> Requant {
-        Requant {
-            m: self.m,
-            shift: self.shift,
-            zp: self.out_zp,
-            relu: self.relu,
-        }
+        Requant::scalar(self.m, self.shift, self.out_zp, self.relu)
     }
 
     /// Requantize an accumulator to the next layer's u8 domain —
@@ -147,6 +193,47 @@ fn carrier_to_u16(w: &[i32]) -> Result<Vec<u16>> {
         .collect()
 }
 
+/// Nibble-pack 4-bit values (i32 carrier, each in `0..=15`) two per byte:
+/// element `2i` in the low nibble, `2i+1` in the high. An odd tail pads
+/// the final high nibble with zero. This is the INT4 weight storage
+/// format of [`QuantGemm::pack_int4`] — half the bytes of the dense u8
+/// carrier, matched to the [`crate::multipliers::Arch::Nibble4`] W4
+/// operand class.
+pub fn pack_nibbles(vals: &[i32]) -> Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(vals.len().div_ceil(2));
+    for (i, pair) in vals.chunks(2).enumerate() {
+        let mut byte = 0u8;
+        for (j, &v) in pair.iter().enumerate() {
+            ensure!(
+                (0..=15).contains(&v),
+                "value {v} at index {} is not a 4-bit weight",
+                2 * i + j
+            );
+            byte |= (v as u8) << (4 * j);
+        }
+        out.push(byte);
+    }
+    Ok(out)
+}
+
+/// Unpack `len` 4-bit values from [`pack_nibbles`] storage back into the
+/// i32 carrier. Rejects a byte count that cannot hold exactly `len`
+/// nibbles, and a nonzero pad nibble (which would silently drop a value).
+pub fn unpack_nibbles(packed: &[u8], len: usize) -> Result<Vec<i32>> {
+    ensure!(
+        packed.len() == len.div_ceil(2),
+        "{} packed bytes cannot hold exactly {len} nibbles",
+        packed.len()
+    );
+    if len % 2 == 1 {
+        let pad = packed[packed.len() - 1] >> 4;
+        ensure!(pad == 0, "odd-length pad nibble is {pad}, not zero");
+    }
+    Ok((0..len)
+        .map(|i| ((packed[i / 2] >> (4 * (i % 2))) & 0xF) as i32)
+        .collect())
+}
+
 /// A quantized GEMM layer: `Y = requant(X·W + zero-point algebra + bias)`
 /// with `X (batch × k)` activations and `W (k × n)` weights, lowered onto
 /// the fabric as a weight-stationary job stream.
@@ -157,8 +244,14 @@ fn carrier_to_u16(w: &[i32]) -> Result<Vec<u16>> {
 /// batched fabric execution and the scalar closure path agree exactly.
 #[derive(Clone, Debug)]
 pub struct QuantGemm {
-    /// Weights, u8 values in an i32 carrier, row-major `(k, n)`.
+    /// Weights, u8 values in an i32 carrier, row-major `(k, n)`. Empty
+    /// when `w_q4` carries the nibble-packed INT4 form instead.
     pub w_q: Vec<i32>,
+    /// Optional INT4 weight storage: the same `(k, n)` row-major weights
+    /// nibble-packed two per byte ([`pack_nibbles`]). Unpacked at plan
+    /// time; every weight is ≤ 0xF, so the lowered job stream's broadcast
+    /// operands fit the [`crate::multipliers::Arch::Nibble4`] W4 class.
+    pub w_q4: Option<Vec<u8>>,
     pub k: usize,
     pub n: usize,
     pub w_zp: i32,
@@ -172,6 +265,7 @@ impl QuantGemm {
     pub fn from_layer(layer: &QuantLayer) -> Self {
         Self {
             w_q: layer.w_q.clone(),
+            w_q4: None,
             k: layer.n_in,
             n: layer.n_out,
             w_zp: layer.w_zp,
@@ -186,6 +280,30 @@ impl QuantGemm {
         Self {
             requant: None,
             ..Self::from_layer(layer)
+        }
+    }
+
+    /// Convert to the INT4 weight mode: validate every weight fits 4 bits,
+    /// nibble-pack the storage (half the bytes), and drop the dense
+    /// carrier. The weight zero point must itself be a 4-bit value or the
+    /// zero-point algebra would leave the W4 operand class.
+    pub fn pack_int4(mut self) -> Result<Self> {
+        ensure!(
+            (0..=15).contains(&self.w_zp),
+            "INT4 weight zero point {} is not a 4-bit value",
+            self.w_zp
+        );
+        self.w_q4 = Some(pack_nibbles(&self.w_q)?);
+        self.w_q = Vec::new();
+        Ok(self)
+    }
+
+    /// The dense `(k, n)` weight carrier: `w_q` as-is, or the plan-time
+    /// unpack of the nibble-packed INT4 storage.
+    pub fn dense_weights(&self) -> Result<Vec<i32>> {
+        match &self.w_q4 {
+            Some(p) => unpack_nibbles(p, self.k * self.n),
+            None => Ok(self.w_q.clone()),
         }
     }
 
@@ -224,18 +342,33 @@ impl QuantGemm {
         order: Order,
         exec: &mut dyn JobExecutor,
     ) -> Result<Vec<Vec<i32>>> {
-        ensure!(self.w_q.len() == self.k * self.n, "weight shape");
+        // Plan time: INT4 mode unpacks the nibble-packed storage into the
+        // dense carrier once, before any jobs are framed.
+        let w_q = self.dense_weights()?;
+        ensure!(w_q.len() == self.k * self.n, "weight shape");
         ensure!(self.bias_i32.len() == self.n, "bias shape");
+        if let Some(v) = self
+            .requant
+            .as_ref()
+            .and_then(|r| r.per_channel.as_ref())
+        {
+            ensure!(
+                v.len() == self.n,
+                "per-channel requant: {} scales for {} output columns",
+                v.len(),
+                self.n
+            );
+        }
         let spec = GemmSpec::new(m, self.k, self.n);
         ensure!(a.len() == m * self.k, "activation shape");
-        let b = carrier_to_u16(&self.w_q)?;
+        let b = carrier_to_u16(&w_q)?;
         let raw = GemmPlan::new(spec, order).execute(a, &b, exec)?;
         // Zero-point algebra over the raw u8·u8 accumulators — mirrors
         // `QuantLayer::accumulate` (and therefore `model.py`).
         let sum_w: Vec<i64> = (0..self.n)
             .map(|o| {
                 (0..self.k)
-                    .map(|kk| self.w_q[kk * self.n + o] as i64)
+                    .map(|kk| w_q[kk * self.n + o] as i64)
                     .sum()
             })
             .collect();
@@ -325,12 +458,13 @@ impl QuantConv2d {
                 .into_iter()
                 .map(|v| v as i32)
                 .collect(),
+            w_q4: None,
             k: gemm.k,
             n: gemm.n,
             w_zp: self.w_zp,
             in_zp: self.in_zp,
             bias_i32: self.bias_i32.clone(),
-            requant: Some(self.requant),
+            requant: Some(self.requant.clone()),
         };
         let rows = weights.forward_flat(&a, gemm.m, order, exec)?;
         let flat: Vec<i32> = rows.into_iter().flatten().collect();
@@ -523,6 +657,163 @@ mod tests {
     }
 
     #[test]
+    fn per_channel_uniform_scales_match_scalar() {
+        // Satellite check: a per-channel vector whose every entry equals
+        // the scalar (m, shift) must be bit-identical — on the raw apply,
+        // on QuantGemm, and on QuantConv2d.
+        let mlp = tiny_mlp();
+        let scalar = QuantGemm::from_layer(&mlp.layers[0]);
+        let mut per_ch = scalar.clone();
+        let r = scalar.requant.as_ref().unwrap();
+        per_ch.requant = Some(
+            r.clone()
+                .with_channel_scales(vec![(r.m, r.shift); scalar.n]),
+        );
+        let x = vec![vec![9, 250], vec![88, 0], vec![1, 1], vec![255, 255]];
+        let mut exec = crate::kernels::exact_exec();
+        assert_eq!(
+            per_ch.forward(&x, &mut exec).unwrap(),
+            scalar.forward(&x, &mut exec).unwrap()
+        );
+
+        let mk_conv = |requant: Requant| QuantConv2d {
+            spec: Conv2dSpec {
+                c_in: 1,
+                h: 4,
+                w: 4,
+                c_out: 2,
+                kh: 2,
+                kw: 2,
+                stride: 1,
+                pad: 0,
+            },
+            w_q: (0..8).map(|i| (i * 31) % 256).collect(),
+            w_zp: 3,
+            in_zp: 2,
+            bias_i32: vec![10, -10],
+            requant,
+        };
+        let base = Requant::scalar(77, 9, 4, true);
+        let conv_s = mk_conv(base.clone());
+        let conv_c = mk_conv(
+            base.clone().with_channel_scales(vec![(base.m, base.shift); 2]),
+        );
+        let img: Vec<i32> = (0..16).map(|i| (i * 17) % 256).collect();
+        assert_eq!(
+            conv_c.forward(&img, &mut exec).unwrap(),
+            conv_s.forward(&img, &mut exec).unwrap()
+        );
+    }
+
+    #[test]
+    fn per_channel_distinct_scales_follow_each_channel() {
+        let r = Requant::scalar(1, 0, 5, false)
+            .with_channel_scales(vec![(64, 6), (32, 6), (128, 6)]);
+        // Channel o applies its own (m, shift): acc*m_o >> 6 (+ zp 5).
+        assert_eq!(r.apply(&[64, 64, 64]), vec![64 + 5, 32 + 5, 128 + 5]);
+        // Scalar apply_one keeps using the whole-tensor scale.
+        assert_eq!(r.apply_one(64), 64 + 5);
+    }
+
+    #[test]
+    fn per_channel_length_mismatch_is_rejected() {
+        let mlp = tiny_mlp();
+        let mut gemm = QuantGemm::from_layer(&mlp.layers[0]);
+        let r = gemm.requant.as_ref().unwrap().clone();
+        gemm.requant = Some(r.with_channel_scales(vec![(64, 9)])); // n = 2
+        let mut exec = crate::kernels::exact_exec();
+        let err = gemm.forward(&[vec![1, 2]], &mut exec).unwrap_err();
+        assert!(err.to_string().contains("per-channel"), "{err}");
+    }
+
+    #[test]
+    fn nibble_pack_unpack_roundtrips() {
+        // Property: any 4-bit vector (odd or even length) survives
+        // pack → unpack bit-exactly at half the storage.
+        crate::testkit::forall(
+            0x4B17,
+            200,
+            |rng: &mut crate::util::Xoshiro256| {
+                let len = rng.below(33) as usize;
+                (0..len)
+                    .map(|_| (rng.operand8() & 0xF) as i32)
+                    .collect::<Vec<i32>>()
+            },
+            |vals: &Vec<i32>| {
+                let packed = pack_nibbles(vals).unwrap();
+                packed.len() == vals.len().div_ceil(2)
+                    && unpack_nibbles(&packed, vals.len()).unwrap() == *vals
+            },
+        );
+        // Out-of-range values and bad shapes are rejected loudly.
+        assert!(pack_nibbles(&[3, 16]).is_err());
+        assert!(unpack_nibbles(&[0x21], 3).is_err()); // 1 byte, 3 nibbles
+        assert!(unpack_nibbles(&[0x21], 1).is_err()); // nonzero pad nibble
+        assert_eq!(unpack_nibbles(&[0x21], 2).unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn int4_gemm_matches_dense_and_runs_on_nibble4_fabric() {
+        // 4-bit weights in the dense carrier, then the same layer in
+        // nibble-packed INT4 mode: identical outputs on the exact
+        // executor, and the packed stream's broadcast operands all fit
+        // the W4 class — proven by running it on a Nibble4 gate-level
+        // fabric backend (which rejects any b > 0xF).
+        let dense = QuantGemm {
+            w_q: (0..3 * 5).map(|i| (i * 7) % 16).collect(),
+            w_q4: None,
+            k: 3,
+            n: 5,
+            w_zp: 6,
+            in_zp: 11,
+            bias_i32: vec![40, -3, 0, 17, -60],
+            requant: Some(
+                Requant::scalar(90, 11, 7, true).with_channel_scales(
+                    (0..5).map(|o| (80 + o * 4, 11)).collect(),
+                ),
+            ),
+        };
+        let int4 = dense.clone().pack_int4().unwrap();
+        assert_eq!(
+            int4.w_q4.as_ref().unwrap().len(),
+            (3 * 5usize).div_ceil(2),
+            "packed storage is half the dense carrier"
+        );
+        let x = vec![vec![200, 0, 255], vec![1, 128, 13], vec![9, 9, 9]];
+        let mut exec = crate::kernels::exact_exec();
+        let want = dense.forward(&x, &mut exec).unwrap();
+        assert_eq!(int4.forward(&x, &mut exec).unwrap(), want);
+        let mut w4 = crate::kernels::FabricExec::new(
+            Box::new(
+                crate::coordinator::SimBackend::new(
+                    crate::multipliers::Arch::Nibble4,
+                    4,
+                )
+                .unwrap(),
+            ),
+            crate::coordinator::BatcherConfig::bounded(4, 2),
+        );
+        assert_eq!(int4.forward(&x, &mut w4).unwrap(), want);
+    }
+
+    #[test]
+    fn pack_int4_rejects_wide_weights_and_zero_points() {
+        let mk = |w_q: Vec<i32>, w_zp| QuantGemm {
+            w_q,
+            w_q4: None,
+            k: 2,
+            n: 1,
+            w_zp,
+            in_zp: 0,
+            bias_i32: vec![0],
+            requant: None,
+        };
+        assert!(mk(vec![3, 16], 2).pack_int4().is_err());
+        assert!(mk(vec![3, 15], 16).pack_int4().is_err());
+        assert!(mk(vec![3, 15], 15).pack_int4().is_ok());
+    }
+
+    #[test]
     fn quant_gemm_orders_agree() {
         let mlp = tiny_mlp();
         let gemm = QuantGemm::from_layer(&mlp.layers[0]);
@@ -555,12 +846,7 @@ mod tests {
             w_zp: 1,
             in_zp: 2,
             bias_i32: vec![5],
-            requant: Requant {
-                m: 64,
-                shift: 6,
-                zp: 0,
-                relu: false,
-            },
+            requant: Requant::scalar(64, 6, 0, false),
         };
         let img = vec![10, 20, 30, 40, 50, 60, 70, 80, 90];
         let mut exec = crate::kernels::exact_exec();
@@ -607,12 +893,7 @@ mod tests {
             w_zp: 7,
             in_zp: 9,
             bias_i32: vec![100, -100, 0],
-            requant: Requant {
-                m: 32,
-                shift: 8,
-                zp: 3,
-                relu: true,
-            },
+            requant: Requant::scalar(32, 8, 3, true),
         };
         let img: Vec<i32> = (0..32).map(|i| (i * 13) % 256).collect();
         let mut exec = crate::kernels::exact_exec();

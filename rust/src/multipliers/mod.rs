@@ -1,15 +1,25 @@
 //! Gate-level generators for every multiplier architecture the paper
 //! evaluates (§II–III):
 //!
-//! | Arch        | Type          | Latency (N ops) | Module        |
-//! |-------------|---------------|-----------------|---------------|
-//! | Shift-Add   | sequential    | 8N              | [`shift_add`] |
-//! | Booth (r2)  | sequential    | 4N              | [`booth`]     |
-//! | Nibble      | sequential    | 2N              | [`nibble`]    |
-//! | Nibble-Unr  | sequential    | N (ablation)    | [`nibble`]    |
-//! | Wallace     | combinational | 1               | [`wallace`]   |
-//! | Array       | combinational | 1               | [`array`]     |
-//! | LUT-Array   | combinational | 1               | [`lut_array`] |
+//! | Arch        | Type          | B width | Latency (N ops) | Module        |
+//! |-------------|---------------|---------|-----------------|---------------|
+//! | Shift-Add   | sequential    | 8       | 8N              | [`shift_add`] |
+//! | Booth (r2)  | sequential    | 8       | 4N              | [`booth`]     |
+//! | Nibble      | sequential    | 8       | 2N              | [`nibble`]    |
+//! | Nibble-Unr  | sequential    | 8       | N (ablation)    | [`nibble`]    |
+//! | Nibble-CSD  | sequential    | 8       | 2N (ablation)   | [`nibble`]    |
+//! | Nibble4     | sequential    | 4       | N (INT4, 1 PL)  | [`nibble`]    |
+//! | Wallace     | combinational | 8       | 1               | [`wallace`]   |
+//! | Array       | combinational | 8       | 1               | [`array`]     |
+//! | LUT-Array   | combinational | 8       | 1               | [`lut_array`] |
+//!
+//! `Nibble4` is the INT4 operand class: the broadcast operand is a single
+//! nibble, so the shared datapath needs ONE Precompute Logic instance and
+//! one deterministic cycle per element (half the PL activity of the 8-bit
+//! unrolled mode, which duplicates the PL to reach the same latency). Its
+//! `b` port keeps the common 8-bit contract but bits 4..8 are never
+//! latched — callers must mask the broadcast operand to
+//! [`Arch::b_mask`].
 //!
 //! Every generator emits an N-operand **vector unit** with the common port
 //! contract of [`VECTOR_PORTS`]; the baselines are replicated
@@ -48,6 +58,10 @@ pub enum Arch {
     Wallace,
     Array,
     LutArray,
+    /// INT4 broadcast operand through the single-nibble one-cycle
+    /// datapath (appended last so existing wire-protocol arch indices
+    /// stay stable).
+    Nibble4,
 }
 
 impl Arch {
@@ -60,8 +74,11 @@ impl Arch {
         Arch::LutArray,
     ];
 
-    /// Everything we can build (paper set + ablations).
-    pub const ALL: [Arch; 8] = [
+    /// Everything we can build (paper set + ablations + the INT4
+    /// operand class). `Nibble4` must stay LAST: the wire protocol
+    /// encodes an arch as its index in this array, and appending keeps
+    /// every existing index (and golden byte vector) valid.
+    pub const ALL: [Arch; 9] = [
         Arch::ShiftAdd,
         Arch::Booth,
         Arch::Nibble,
@@ -70,6 +87,7 @@ impl Arch {
         Arch::Wallace,
         Arch::Array,
         Arch::LutArray,
+        Arch::Nibble4,
     ];
 
     pub fn name(self) -> &'static str {
@@ -82,6 +100,7 @@ impl Arch {
             Arch::Wallace => "wallace",
             Arch::Array => "array",
             Arch::LutArray => "lut-array",
+            Arch::Nibble4 => "nibble4",
         }
     }
 
@@ -95,14 +114,36 @@ impl Arch {
     }
 
     /// Cycle latency for an N-operand vector op (paper Table 2).
+    /// `Nibble4` is the W4 operand class: ONE nibble iteration per
+    /// element, so N cycles — the 8-bit sequential nibble design (W8)
+    /// takes 2N. The sweep report carries this distinction so Pareto
+    /// rows never misreport W4 latency as the W8 figure.
     pub fn latency_cycles(self, n: usize) -> u64 {
         match self {
             Arch::ShiftAdd => 8 * n as u64,
             Arch::Booth => 4 * n as u64,
             Arch::Nibble | Arch::NibbleCsd => 2 * n as u64,
-            Arch::NibbleUnrolled => n as u64,
+            Arch::NibbleUnrolled | Arch::Nibble4 => n as u64,
             Arch::Wallace | Arch::Array | Arch::LutArray => 1,
         }
+    }
+
+    /// Broadcast-operand width in bits: 4 for the INT4 operand class,
+    /// 8 for everything else. The `b` input port itself is always
+    /// 8 bits wide ([`VECTOR_PORTS`] contract); a `Nibble4` unit simply
+    /// never latches the high nibble, so callers must keep broadcast
+    /// values within [`Arch::b_mask`] for the product to be exact.
+    pub fn b_bits(self) -> u32 {
+        match self {
+            Arch::Nibble4 => 4,
+            _ => 8,
+        }
+    }
+
+    /// Mask selecting the valid broadcast-operand bits (`0xF` for the
+    /// INT4 class, `0xFF` otherwise).
+    pub fn b_mask(self) -> u16 {
+        ((1u32 << self.b_bits()) - 1) as u16
     }
 
     /// Analytical per-operand complexity class (paper Table 2).
@@ -111,7 +152,7 @@ impl Arch {
             Arch::ShiftAdd => "O(W)",
             Arch::Booth => "O(W/2)",
             Arch::Nibble | Arch::NibbleCsd => "O(W/4)",
-            Arch::NibbleUnrolled => "O(W/8)",
+            Arch::NibbleUnrolled | Arch::Nibble4 => "O(W/8)",
             Arch::Wallace | Arch::Array | Arch::LutArray => "O(1)",
         }
     }
@@ -160,6 +201,7 @@ impl Arch {
             Arch::Wallace => wallace::build_vector(n),
             Arch::Array => array::build_vector(n),
             Arch::LutArray => lut_array::build_vector(n),
+            Arch::Nibble4 => nibble::build_vector(n, nibble::Mode::Nibble4),
         }
     }
 }
@@ -182,6 +224,22 @@ mod tests {
         assert_eq!(Arch::Wallace.latency_cycles(16), 1);
         assert_eq!(Arch::ShiftAdd.latency_cycles(16), 128);
         assert_eq!(Arch::Nibble.latency_cycles(16), 32);
+        // W4 vs W8: one nibble iteration instead of two.
+        assert_eq!(Arch::Nibble4.latency_cycles(1), 1);
+        assert_eq!(Arch::Nibble4.latency_cycles(16), 16);
+    }
+
+    #[test]
+    fn nibble4_is_last_in_all_and_masks_to_4_bits() {
+        // Wire-protocol stability: arch indices are positions in ALL.
+        assert_eq!(*Arch::ALL.last().unwrap(), Arch::Nibble4);
+        assert_eq!(Arch::Nibble4.b_bits(), 4);
+        assert_eq!(Arch::Nibble4.b_mask(), 0xF);
+        for a in Arch::ALL {
+            if a != Arch::Nibble4 {
+                assert_eq!(a.b_mask(), 0xFF, "{a}");
+            }
+        }
     }
 
     #[test]

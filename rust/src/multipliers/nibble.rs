@@ -16,6 +16,11 @@
 //!   (paper §II.B "unrolled mode"; duplicated PL + alignment).
 //! * [`Mode::Csd`]        — ablation: PL built from canonical-signed-digit
 //!   compositions (subtraction allowed) instead of adds-only gating.
+//! * [`Mode::Nibble4`]    — INT4 broadcast operand: the low nibble IS the
+//!   whole operand, so the high-nibble half of the broadcast register,
+//!   its PL and its alignment shifter are never built. One deterministic
+//!   cycle per element with a single (not duplicated) PL — the
+//!   architecture's native fast case.
 
 use crate::netlist::{BinKind, Builder, Bus, NetId};
 
@@ -27,6 +32,10 @@ pub enum Mode {
     Sequential,
     Unrolled,
     Csd,
+    /// 4-bit broadcast operand: single-nibble datapath, 1 cycle/element.
+    /// The `b` port keeps the common 8-bit contract; bits 4..8 are
+    /// ignored (never latched), so the unit computes `a * (b & 0xF)`.
+    Nibble4,
 }
 
 /// Adds-only Precompute Logic (Fig. 2b): the 16 shift-add configurations
@@ -98,6 +107,7 @@ pub fn build_vector(n: usize, mode: Mode) -> crate::netlist::Netlist {
         Mode::Sequential => format!("nibble_x{n}"),
         Mode::Unrolled => format!("nibble_unrolled_x{n}"),
         Mode::Csd => format!("nibble_csd_x{n}"),
+        Mode::Nibble4 => format!("nibble4_x{n}"),
     };
     let mut b = Builder::new(name);
     let a = b.input("a", 8 * n);
@@ -142,7 +152,7 @@ pub fn build_vector(n: usize, mode: Mode) -> crate::netlist::Netlist {
             b.name("phase", &vec![ph]);
             (elem_done, done)
         }
-        Mode::Unrolled => {
+        Mode::Unrolled | Mode::Nibble4 => {
             let elem_done = b.buf_gate(busy);
             let done = b.and_gate(busy, ecnt_is_last);
             (elem_done, done)
@@ -164,9 +174,18 @@ pub fn build_vector(n: usize, mode: Mode) -> crate::netlist::Netlist {
     // ------------------------------------------------------------------
     // Shared broadcast-B register + nibble selector.
     // ------------------------------------------------------------------
-    let breg = b.dff_bus(&bb, Some(load), None);
+    // Nibble4 latches only b[0..4]: the high half of the broadcast
+    // register (and everything fed by it) simply does not exist, which
+    // is where the INT4 activity reduction comes from.
+    let breg = match mode {
+        Mode::Nibble4 => b.dff_bus(&bb[0..4].to_vec(), Some(load), None),
+        _ => b.dff_bus(&bb, Some(load), None),
+    };
     let b_lo: Bus = breg[0..4].to_vec();
-    let b_hi: Bus = breg[4..8].to_vec();
+    let b_hi: Option<Bus> = match mode {
+        Mode::Nibble4 => None,
+        _ => Some(breg[4..8].to_vec()),
+    };
 
     // Shared element selector: one N:1 operand mux.
     let a_sel = if n == 1 {
@@ -186,7 +205,8 @@ pub fn build_vector(n: usize, mode: Mode) -> crate::netlist::Netlist {
             // ph whenever the datapath is active, so it doubles as the
             // phase select (idle cycles don't matter functionally).
             let ph = elem_done;
-            let nib = b.mux_bus(ph, &b_lo, &b_hi);
+            let b_hi = b_hi.as_ref().expect("8-bit modes latch b_hi");
+            let nib = b.mux_bus(ph, &b_lo, b_hi);
             // PL in carry-save form.
             let m = pl_rows(&mut b, &a_sel, &nib, 0);
             let (pl_s, pl_c) = csa_reduce(&mut b, m);
@@ -219,8 +239,9 @@ pub fn build_vector(n: usize, mode: Mode) -> crate::netlist::Netlist {
         }
         Mode::Unrolled => {
             // Both nibbles in one cycle: duplicated PL + alignment.
+            let b_hi = b_hi.as_ref().expect("8-bit modes latch b_hi");
             let m_lo = pl_rows(&mut b, &a_sel, &b_lo, 0);
-            let m_hi = pl_rows(&mut b, &a_sel, &b_hi, 4);
+            let m_hi = pl_rows(&mut b, &a_sel, b_hi, 4);
             let mut m = m_lo;
             for (w, col) in m_hi.cols.into_iter().enumerate() {
                 if m.cols.len() <= w {
@@ -232,9 +253,18 @@ pub fn build_vector(n: usize, mode: Mode) -> crate::netlist::Netlist {
             let sum = b.add(&s, &c);
             b.resize(&sum, 16)
         }
+        Mode::Nibble4 => {
+            // INT4 fast case: one PL, no alignment shifter, no
+            // accumulator — the low-nibble partial IS the product.
+            let m = pl_rows(&mut b, &a_sel, &b_lo, 0);
+            let (s, c) = csa_reduce(&mut b, m);
+            let sum = b.add(&s, &c);
+            b.resize(&sum, 16)
+        }
         Mode::Csd => {
             let ph = elem_done;
-            let nib = b.mux_bus(ph, &b_lo, &b_hi);
+            let b_hi = b_hi.as_ref().expect("8-bit modes latch b_hi");
+            let nib = b.mux_bus(ph, &b_lo, b_hi);
             // All CSD arithmetic lives mod 2^16: the negative-term rows are
             // two's complement at 16 bits, so every width reduction below
             // must also be 16 bits for the wrap-around to cancel exactly.
@@ -347,6 +377,34 @@ mod tests {
         let r = sim.get_output("r").unwrap();
         for (i, e) in [1u64, 2, 3, 4].iter().enumerate() {
             assert_eq!((r >> (16 * i)) & 0xFFFF, e * 0x55);
+        }
+    }
+
+    #[test]
+    fn nibble4_one_cycle_per_element() {
+        let nl = build_vector(4, Mode::Nibble4);
+        let mut sim = Simulator::new(&nl).unwrap();
+        let (_, cycles) = run_op(&mut sim, 0xFF_80_11_02, 0x0B, 10);
+        assert_eq!(cycles, 4);
+        let r = sim.get_output("r").unwrap();
+        for (i, e) in [0x02u64, 0x11, 0x80, 0xFF].iter().enumerate() {
+            assert_eq!((r >> (16 * i)) & 0xFFFF, e * 0x0B, "elem {i}");
+        }
+    }
+
+    #[test]
+    fn nibble4_ignores_high_nibble_of_b() {
+        // The port contract keeps b at 8 bits; Nibble4 never latches
+        // bits 4..8, so the unit computes a * (b & 0xF) exactly.
+        let nl = build_vector(1, Mode::Nibble4);
+        let mut sim = Simulator::new(&nl).unwrap();
+        let mut rng = Xoshiro256::new(21);
+        for _ in 0..300 {
+            let a = rng.operand8() as u64;
+            let bb = rng.operand8() as u64;
+            let (r, cycles) = run_op(&mut sim, a, bb, 4);
+            assert_eq!(r & 0xFFFF, a * (bb & 0xF), "{a}*{bb}");
+            assert_eq!(cycles, 1);
         }
     }
 

@@ -4,7 +4,7 @@
 
 use anyhow::Result;
 
-use crate::fabric::{sweep_paper_set, SweepRow};
+use crate::fabric::{int4_sweep, sweep_paper_set, SweepRow};
 use crate::multipliers::Arch;
 use crate::report::render_table;
 use crate::tech::TechLibrary;
@@ -116,6 +116,7 @@ pub fn fig4_report(
             format!("{:.2}x", row.power_vs_shift_add),
             format!("{:.0}", row.energy_per_op_fj),
             format!("{:.2}x", row.energy_vs_shift_add),
+            format!("{:.0}", row.eval.toggles_per_op),
             fmt_sig(row.eval.power.dynamic_mw, 3),
             fmt_sig(row.eval.power.clock_mw, 3),
         ]);
@@ -130,10 +131,48 @@ pub fn fig4_report(
             "vs shift-add",
             "E/op fJ",
             "E vs SA",
+            "tog/op",
             "dyn (raw)",
             "clk (raw)",
         ],
         &pw_rows,
+    ));
+
+    // INT4 operand class (our extension): the W4 one-cycle datapath vs
+    // the two W8 nibble datapaths, all driven by the IDENTICAL
+    // 4-bit-masked broadcast stream — per-op toggles are directly
+    // comparable, and the cycles column carries the W4 (N) vs W8
+    // sequential (2N) latency distinction.
+    let int4 = int4_sweep(widths, lib, ops, seed)?;
+    let mut i4_rows = Vec::new();
+    for e in &int4 {
+        let base = int4
+            .iter()
+            .find(|b| {
+                b.arch == crate::multipliers::Arch::Nibble4 && b.n == e.n
+            })
+            .expect("nibble4 row present");
+        i4_rows.push(vec![
+            e.arch.name().to_string(),
+            e.n.to_string(),
+            format!("{}b", e.arch.b_bits()),
+            e.cycles_per_op.to_string(),
+            format!("{:.0}", e.toggles_per_op),
+            format!("{:.2}x", e.toggles_per_op / base.toggles_per_op),
+            fmt_sig(e.power.total_mw(), 3),
+        ]);
+    }
+    out.push('\n');
+    out.push_str(
+        "INT4 operand class — same 4-bit broadcast stream on W4 vs W8 \
+         datapaths\n",
+    );
+    out.push_str(&render_table(
+        &[
+            "arch", "N", "B", "cyc/op", "tog/op", "vs nibble4",
+            "power mW",
+        ],
+        &i4_rows,
     ));
     Ok((out, rows))
 }

@@ -122,7 +122,12 @@ pub fn fuzz_mul_wide<W: Word>(
             .iter_mut()
             .map(|rng| (0..n).map(|_| operand8(rng)).collect())
             .collect();
-        let b: Vec<u16> = rngs.iter_mut().map(|rng| operand8(rng)).collect();
+        // The INT4 operand class sees the same draws masked to its
+        // 4-bit broadcast range (same contract as `run_stream_wide`).
+        let b: Vec<u16> = rngs
+            .iter_mut()
+            .map(|rng| operand8(rng) & arch.b_mask())
+            .collect();
         let res = unit.run_op_wide(&mut sim, &a, &b)?;
         ensure!(
             res.cycles == arch.latency_cycles(n),

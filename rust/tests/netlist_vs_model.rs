@@ -19,7 +19,8 @@ fn all_architectures_all_widths_random_streams() {
             for op in 0..25 {
                 let a: Vec<u16> =
                     (0..n).map(|_| testkit::operand8(&mut rng)).collect();
-                let b = testkit::operand8(&mut rng);
+                // nibble4 is the W4 operand class: mask b to its range.
+                let b = testkit::operand8(&mut rng) & arch.b_mask();
                 let res = unit.run_op(&mut sim, &a, b).unwrap();
                 assert_eq!(
                     res.cycles,
@@ -57,6 +58,22 @@ fn nibble_netlist_exhaustive_against_model_width1() {
         for a in (0..=255u16).step_by(37) {
             let res = unit.run_op(&mut sim, &[a], b).unwrap();
             assert_eq!(res.products[0], model::nibble_mul(a, b), "{a}*{b}");
+        }
+    }
+}
+
+#[test]
+fn nibble4_netlist_exhaustive_4bit_times_8bit() {
+    // The ENTIRE W4 operand space: every 4-bit broadcast operand against
+    // every 8-bit vector element, checked against the exact product in
+    // exactly one cycle per op.
+    let unit = VectorUnit::new(Arch::Nibble4, 1);
+    let mut sim = unit.simulator().unwrap();
+    for b in 0..=15u16 {
+        for a in 0..=255u16 {
+            let res = unit.run_op(&mut sim, &[a], b).unwrap();
+            assert_eq!(res.products[0], model::mul_exact(a, b), "{a}*{b}");
+            assert_eq!(res.cycles, 1, "{a}*{b} cycles");
         }
     }
 }

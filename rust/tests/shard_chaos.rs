@@ -234,6 +234,111 @@ fn restarted_shard_rejoins_with_fresh_epoch_and_identical_results() {
 }
 
 #[test]
+fn w4_stream_survives_kill_and_restart_bit_exactly() {
+    // The nibble4 one-cycle datapath as a served design: a W4 job
+    // stream (every broadcast operand <= 0xF) through a gate-level
+    // Nibble4 shard, hard-killed and restarted mid-suite. The restart
+    // must serve bit-identical products, and the W4 operand contract is
+    // enforced at the shard, not silently truncated.
+    let key = DesignKey {
+        arch: Arch::Nibble4,
+        n: 8,
+    };
+    let addr = loopback_addr("chaos-w4");
+    let server = ShardServer::spawn(
+        addr.clone(),
+        sim_factory(1, false),
+        ShardServerConfig::default(),
+    )
+    .unwrap();
+    let mut router = Router::connect(
+        vec![ShardSpec {
+            addr: addr.clone(),
+            key,
+        }],
+        chaos_cfg(),
+    )
+    .unwrap();
+
+    // Deterministic W4 stream: full-range vector operands, 4-bit
+    // broadcast operands (the whole nibble4 operand class).
+    let jobs: Vec<VectorJob> = (0..24)
+        .map(|i| VectorJob {
+            id: i as u64,
+            a: (0..8).map(|e| ((i * 37 + e * 11) % 256) as u16).collect(),
+            b: (i % 16) as u16,
+        })
+        .collect();
+    for job in &jobs {
+        submit_eventually(&mut router, key, "w4", job);
+    }
+    let before = {
+        let mut o = router.drain().unwrap();
+        o.sort_by_key(|o| o.id);
+        o
+    };
+    assert_eq!(before.len(), jobs.len());
+    for (job, out) in jobs.iter().zip(&before) {
+        assert_eq!(
+            out.result.as_ref().unwrap(),
+            &job.expected(),
+            "W4 job {} diverged from mul_exact",
+            job.id
+        );
+    }
+
+    // Kill + restart on the same socket, then replay the stream.
+    server.kill();
+    let server2 = ShardServer::spawn(
+        addr,
+        sim_factory(1, false),
+        ShardServerConfig {
+            label: "w4-restarted".to_string(),
+            ..ShardServerConfig::default()
+        },
+    )
+    .unwrap();
+    for job in &jobs {
+        let mut j = job.clone();
+        j.id += 100;
+        submit_eventually(&mut router, key, "w4", &j);
+    }
+    let after = {
+        let mut o = router.drain().unwrap();
+        o.sort_by_key(|o| o.id);
+        o
+    };
+    assert_eq!(after.len(), jobs.len());
+    for (b, a) in before.iter().zip(&after) {
+        assert_eq!(a.id, b.id + 100);
+        assert_eq!(
+            a.result.as_ref().unwrap(),
+            b.result.as_ref().unwrap(),
+            "restarted nibble4 shard must serve bit-identical products"
+        );
+    }
+
+    // A W8 operand through the W4 design settles as a descriptive
+    // error, never a silently-masked product.
+    let wide = VectorJob {
+        id: 999,
+        a: vec![1, 2, 3],
+        b: 0x10,
+    };
+    submit_eventually(&mut router, key, "w4", &wide);
+    let outcomes = router.drain().unwrap();
+    assert_eq!(outcomes.len(), 1);
+    let err = outcomes[0].result.as_ref().unwrap_err();
+    assert!(
+        err.contains("4-bit") || err.contains("nibble4") || err.contains("W4"),
+        "error names the W4 contract: {err}"
+    );
+
+    router.shutdown();
+    server2.kill();
+}
+
+#[test]
 fn all_shards_down_fails_jobs_with_descriptive_errors_not_hangs() {
     let server = spawn_exact("chaos-dead", "doomed");
     let addr = server.addr().clone();
