@@ -1,0 +1,316 @@
+#!/usr/bin/env python3
+"""Differential validator for the Rust static-analysis passes.
+
+Mirrors the two soundness-critical abstract domains of
+``rust/src/netlist/analyze`` in plain Python and checks them against
+brute-force ground truth on randomly generated combinational netlists:
+
+* **Ternary 0/1/X interpretation** (``ternary.rs``): any net the
+  abstract pass calls constant must evaluate to that constant under
+  *every* concrete input assignment (soundness of ``NX001``).
+* **Structural support sets** (``support.rs``): the true logical
+  support of a net — the inputs whose cofactors differ — must be a
+  subset of the structural support (soundness of the independence
+  direction used by the ``NC0xx`` contract proofs), and the structural
+  support must be contained in the transitive input cone.
+
+Netlists are small (<= 12 input bits) so exhaustive enumeration is
+exact. Stdlib only; no third-party dependencies.
+
+Usage: python3 python/validate_lint.py [trials]   (default 200)
+"""
+
+import itertools
+import random
+import sys
+
+# Cell kinds mirror rust/src/netlist/cell.rs (combinational subset).
+BIN_OPS = {
+    "and": lambda a, b: a & b,
+    "or": lambda a, b: a | b,
+    "xor": lambda a, b: a ^ b,
+    "nand": lambda a, b: 1 - (a & b),
+    "nor": lambda a, b: 1 - (a | b),
+    "xnor": lambda a, b: 1 - (a ^ b),
+}
+
+X = "x"  # the unknown lattice top
+
+
+def t_not(a):
+    return X if a == X else 1 - a
+
+
+def t_and(a, b):
+    if a == 0 or b == 0:
+        return 0
+    if a == 1 and b == 1:
+        return 1
+    return X
+
+
+def t_or(a, b):
+    if a == 1 or b == 1:
+        return 1
+    if a == 0 and b == 0:
+        return 0
+    return X
+
+
+def t_xor(a, b):
+    if a == X or b == X:
+        return X
+    return a ^ b
+
+
+def t_join(a, b):
+    return a if a == b else X
+
+
+def t_mux(sel, a0, a1):
+    if sel == 0:
+        return a0
+    if sel == 1:
+        return a1
+    return t_join(a0, a1)
+
+
+def t_maj(a, b, c):
+    ones = [a, b, c].count(1)
+    zeros = [a, b, c].count(0)
+    if ones >= 2:
+        return 1
+    if zeros >= 2:
+        return 0
+    return X
+
+
+TERN_BIN = {
+    "and": t_and,
+    "or": t_or,
+    "xor": t_xor,
+    "nand": lambda a, b: t_not(t_and(a, b)),
+    "nor": lambda a, b: t_not(t_or(a, b)),
+    "xnor": lambda a, b: t_not(t_xor(a, b)),
+}
+
+
+def gen_netlist(rng, n_inputs, n_cells):
+    """A random acyclic netlist: nets 0..n_inputs are primary inputs,
+    every cell reads strictly earlier nets (topological by
+    construction, like the Rust generators)."""
+    cells = []
+    n_nets = n_inputs
+    while len(cells) < n_cells:
+        avail = n_nets
+        kind = rng.choice(
+            ["const", "not", "buf", "bin", "mux", "ha", "fa"]
+        )
+        if kind == "const":
+            cells.append(("const", rng.randint(0, 1), n_nets))
+            n_nets += 1
+        elif kind in ("not", "buf"):
+            cells.append((kind, rng.randrange(avail), n_nets))
+            n_nets += 1
+        elif kind == "bin":
+            op = rng.choice(list(BIN_OPS))
+            cells.append(
+                (
+                    "bin",
+                    op,
+                    rng.randrange(avail),
+                    rng.randrange(avail),
+                    n_nets,
+                )
+            )
+            n_nets += 1
+        elif kind == "mux":
+            cells.append(
+                (
+                    "mux",
+                    rng.randrange(avail),
+                    rng.randrange(avail),
+                    rng.randrange(avail),
+                    n_nets,
+                )
+            )
+            n_nets += 1
+        elif kind == "ha":
+            cells.append(
+                (
+                    "ha",
+                    rng.randrange(avail),
+                    rng.randrange(avail),
+                    n_nets,
+                    n_nets + 1,
+                )
+            )
+            n_nets += 2
+        else:  # fa
+            cells.append(
+                (
+                    "fa",
+                    rng.randrange(avail),
+                    rng.randrange(avail),
+                    rng.randrange(avail),
+                    n_nets,
+                    n_nets + 1,
+                )
+            )
+            n_nets += 2
+    return cells, n_nets
+
+
+def eval_concrete(cells, n_inputs, n_nets, assignment):
+    v = list(assignment) + [0] * (n_nets - n_inputs)
+    for c in cells:
+        if c[0] == "const":
+            v[c[2]] = c[1]
+        elif c[0] == "not":
+            v[c[2]] = 1 - v[c[1]]
+        elif c[0] == "buf":
+            v[c[2]] = v[c[1]]
+        elif c[0] == "bin":
+            v[c[4]] = BIN_OPS[c[1]](v[c[2]], v[c[3]])
+        elif c[0] == "mux":
+            sel, a0, a1, out = c[1], c[2], c[3], c[4]
+            v[out] = v[a1] if v[sel] else v[a0]
+        elif c[0] == "ha":
+            a, b, s, cy = c[1], c[2], c[3], c[4]
+            v[s] = v[a] ^ v[b]
+            v[cy] = v[a] & v[b]
+        else:  # fa
+            a, b, ci, s, cy = c[1], c[2], c[3], c[4], c[5]
+            v[s] = v[a] ^ v[b] ^ v[ci]
+            v[cy] = t_maj(v[a], v[b], v[ci])
+    return v
+
+
+def eval_ternary(cells, n_inputs, n_nets):
+    """The comb_values pass: inputs X, constants known."""
+    v = [X] * n_nets
+    for c in cells:
+        if c[0] == "const":
+            v[c[2]] = c[1]
+        elif c[0] == "not":
+            v[c[2]] = t_not(v[c[1]])
+        elif c[0] == "buf":
+            v[c[2]] = v[c[1]]
+        elif c[0] == "bin":
+            v[c[4]] = TERN_BIN[c[1]](v[c[2]], v[c[3]])
+        elif c[0] == "mux":
+            v[c[4]] = t_mux(v[c[1]], v[c[2]], v[c[3]])
+        elif c[0] == "ha":
+            v[c[3]] = t_xor(v[c[1]], v[c[2]])
+            v[c[4]] = t_and(v[c[1]], v[c[2]])
+        else:  # fa
+            a, b, ci = v[c[1]], v[c[2]], v[c[3]]
+            v[c[4]] = t_xor(t_xor(a, b), ci)
+            v[c[5]] = t_maj(a, b, ci)
+    return v
+
+
+def structural_support(cells, n_inputs, n_nets):
+    """The SupportMatrix forward pass: per-net set of input indices."""
+    sup = [set() for _ in range(n_nets)]
+    for i in range(n_inputs):
+        sup[i] = {i}
+    for c in cells:
+        if c[0] == "const":
+            ins, outs = [], [c[2]]
+        elif c[0] in ("not", "buf"):
+            ins, outs = [c[1]], [c[2]]
+        elif c[0] == "bin":
+            ins, outs = [c[2], c[3]], [c[4]]
+        elif c[0] == "mux":
+            ins, outs = [c[1], c[2], c[3]], [c[4]]
+        elif c[0] == "ha":
+            ins, outs = [c[1], c[2]], [c[3], c[4]]
+        else:
+            ins, outs = [c[1], c[2], c[3]], [c[4], c[5]]
+        acc = set()
+        for i in ins:
+            acc |= sup[i]
+        for o in outs:
+            sup[o] = set(acc)
+    return sup
+
+
+def run_trial(rng, trial):
+    n_inputs = rng.randint(1, 12)
+    n_cells = rng.randint(1, 40)
+    cells, n_nets = gen_netlist(rng, n_inputs, n_cells)
+
+    tern = eval_ternary(cells, n_inputs, n_nets)
+    sup = structural_support(cells, n_inputs, n_nets)
+
+    # Exhaustive concrete truth tables, one row per assignment.
+    tables = [[] for _ in range(n_nets)]
+    for assignment in itertools.product((0, 1), repeat=n_inputs):
+        v = eval_concrete(cells, n_inputs, n_nets, assignment)
+        for net in range(n_nets):
+            tables[net].append(v[net])
+
+    rows = len(tables[0])
+    for net in range(n_nets):
+        tbl = tables[net]
+        # 1. Ternary soundness: abstract constants are real constants.
+        if tern[net] != X:
+            assert all(x == tern[net] for x in tbl), (
+                f"trial {trial}: net {net} ternary-{tern[net]} but varies "
+                f"concretely (inputs {n_inputs}, cells {cells})"
+            )
+        # 2. Support soundness: logical support ⊆ structural support.
+        for i in range(n_inputs):
+            stride = 1 << (n_inputs - 1 - i)
+            depends = any(
+                tbl[r] != tbl[r ^ stride]
+                for r in range(rows)
+                if not r & stride
+            )
+            if depends:
+                assert i in sup[net], (
+                    f"trial {trial}: net {net} logically depends on input "
+                    f"{i} outside its structural support {sup[net]} "
+                    f"(cells {cells})"
+                )
+        # 3. Structural support never exceeds the transitive input cone
+        #    (trivially true by construction here, but guards the mirror
+        #    against drift).
+        assert sup[net] <= set(range(n_inputs))
+
+
+def main():
+    trials = int(sys.argv[1]) if len(sys.argv) > 1 else 200
+    rng = random.Random(0x6E69626C)
+    for trial in range(trials):
+        run_trial(rng, trial)
+    print(
+        f"validate_lint: {trials} random netlists — ternary constants "
+        f"and support sets sound against brute force"
+    )
+
+
+def self_test():
+    """A few fixed netlists with known answers."""
+    # and(x, const0) is ternary-0; support structural {0}, logical {}.
+    cells = [("const", 0, 1), ("bin", "and", 0, 1, 2)]
+    tern = eval_ternary(cells, 1, 3)
+    assert tern[2] == 0
+    sup = structural_support(cells, 1, 3)
+    assert sup[2] == {0}
+    # mux with agreeing constant arms folds under X select.
+    cells = [
+        ("const", 1, 1),
+        ("const", 1, 2),
+        ("mux", 0, 1, 2, 3),
+    ]
+    assert eval_ternary(cells, 1, 4)[3] == 1
+    # fa carry with two constant zeros is 0 regardless of the third.
+    cells = [("const", 0, 1), ("const", 0, 2), ("fa", 0, 1, 2, 3, 4)]
+    assert eval_ternary(cells, 1, 5)[4] == 0
+
+
+if __name__ == "__main__":
+    self_test()
+    main()

@@ -121,6 +121,13 @@ pub struct MetricsSnapshot {
     pub errors: u64,
     pub cone_evaluated: u64,
     pub cone_skipped: u64,
+    /// Static-analysis runs so far this process (process-wide counter
+    /// from [`crate::netlist::analyze::counters`], not per-shard).
+    pub analysis_runs: u64,
+    /// Diagnostics (all severities) collected across those runs.
+    pub analysis_findings: u64,
+    /// Designs refused by the build/load gate on `Error` findings.
+    pub analysis_rejects: u64,
     pub mean_latency_us: f64,
     pub p50_latency_us: u64,
     pub p99_latency_us: u64,
@@ -182,6 +189,9 @@ impl MetricsSnapshot {
             ("errors", self.errors),
             ("cone_evaluated", self.cone_evaluated),
             ("cone_skipped", self.cone_skipped),
+            ("analysis_runs", self.analysis_runs),
+            ("analysis_findings", self.analysis_findings),
+            ("analysis_rejects", self.analysis_rejects),
             ("p50_latency_us", self.p50_latency_us),
             ("p99_latency_us", self.p99_latency_us),
         ];
@@ -207,6 +217,8 @@ impl Metrics {
         // re-load could see newer submissions and yield saved > chunks,
         // underflowing consumers that compute `chunks - saved`.
         let chunks = self.coalesce_chunks.load(Ordering::Relaxed);
+        let (analysis_runs, analysis_findings, analysis_rejects) =
+            crate::netlist::analyze::counters();
         MetricsSnapshot {
             jobs_submitted: self.jobs_submitted.load(Ordering::Relaxed),
             jobs_completed: self.jobs_completed.load(Ordering::Relaxed),
@@ -224,6 +236,9 @@ impl Metrics {
             errors: self.errors.load(Ordering::Relaxed),
             cone_evaluated: self.cone_evaluated.load(Ordering::Relaxed),
             cone_skipped: self.cone_skipped.load(Ordering::Relaxed),
+            analysis_runs,
+            analysis_findings,
+            analysis_rejects,
             mean_latency_us: self.job_latency.mean_us(),
             p50_latency_us: self.job_latency.quantile_us(0.5),
             p99_latency_us: self.job_latency.quantile_us(0.99),
@@ -313,6 +328,9 @@ mod tests {
         assert!(text.contains("nibblemul_coalesce_saved{shard=\"s0\"} 10\n"));
         assert!(text
             .contains("nibblemul_coalesce_hit_rate{shard=\"s0\"} 0.25"));
+        assert!(text.contains("nibblemul_analysis_runs{shard=\"s0\"} "));
+        assert!(text.contains("nibblemul_analysis_findings{shard=\"s0\"} "));
+        assert!(text.contains("nibblemul_analysis_rejects{shard=\"s0\"} "));
         for line in text.lines() {
             assert!(
                 line.starts_with("nibblemul_")

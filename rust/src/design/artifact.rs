@@ -39,7 +39,7 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, ensure, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use crate::multipliers::Arch;
 use crate::netlist::{BinKind, Cell, NetId, Netlist, Port, UnaryKind};
@@ -564,6 +564,18 @@ pub fn load(
         "stored levelized program diverges from recompilation \
          (artifact from a different compiler)"
     );
+    // The byte checks above only prove internal consistency — a
+    // tampered netlist section with a recomputed checksum passes all of
+    // them. The static-analysis gate re-derives the ground truth (a
+    // fresh build of the generator netlist) and requires the loaded
+    // netlist to prove structural soundness, the datapath contracts and
+    // signature equivalence against it before it is served.
+    let reference = key
+        .arch
+        .try_build(key.n)
+        .context("rebuilding the reference netlist for the lint gate")?;
+    crate::netlist::analyze::gate(key.arch, key.n, &reference, &netlist)
+        .context("loaded artifact failed the static-analysis gate")?;
     Ok(Some(CompiledDesign {
         key,
         netlist,

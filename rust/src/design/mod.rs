@@ -74,10 +74,15 @@ pub struct CompiledDesign {
 impl CompiledDesign {
     /// Build + optimize + compile one design point (the store calls this
     /// exactly once per key; call it directly only for uncached
-    /// experiments).
+    /// experiments). The optimized netlist must pass the static-analysis
+    /// gate ([`crate::netlist::analyze::gate`]) against its
+    /// pre-optimization reference before it is compiled or cached —
+    /// failures are descriptive errors, never panics.
     pub fn build(arch: Arch, n: usize, lib: &TechLibrary) -> Result<Self> {
-        let mut netlist = arch.try_build(n)?;
-        let stats: OptStats = optimize_in_place(&mut netlist);
+        let raw = arch.try_build(n)?;
+        let mut netlist = raw.clone();
+        let stats: OptStats = optimize_in_place(&mut netlist)?;
+        crate::netlist::analyze::gate(arch, n, &raw, &netlist)?;
         let report = report_for(&netlist, lib, stats)?;
         let program = Arc::new(Program::compile(&netlist)?);
         Ok(Self {

@@ -24,6 +24,19 @@
 //! See `ROADMAP.md` for the system direction and open items, and
 //! `EXPERIMENTS.md` for paper-vs-measured results.
 
+// Style decisions the codebase makes deliberately (kept allowed so
+// `clippy --all-targets -- -D warnings` stays meaningful in CI):
+// index-style loops mirror the hardware bit/net indexing they model,
+// `&Vec` bus parameters match the `Builder` API, and the div_ceil /
+// argument-count lints would churn stable call sites for no clarity.
+#![allow(
+    clippy::manual_div_ceil,
+    clippy::needless_range_loop,
+    clippy::ptr_arg,
+    clippy::too_many_arguments,
+    clippy::type_complexity
+)]
+
 pub mod bench;
 pub mod cli;
 pub mod coordinator;

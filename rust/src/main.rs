@@ -16,6 +16,8 @@
 //!                       stationarity (kernels::attention)
 //!   synth               synthesis report for one architecture (from the
 //!                       shared compiled-design store)
+//!   lint                static-analysis lint (X-propagation, contract
+//!                       proofs, signature equivalence) over built designs
 //!   bench-sim           scalar vs 64/256/512-lane packed simulator
 //!                       throughput, levelized vs unlevelized programs,
 //!                       dirty-cone skip rate (BENCH_sim.json)
@@ -31,6 +33,15 @@
 //!                       one --check gate
 //!   report              the paper figures, in order (paper reproduction)
 //!   help
+
+// Same deliberate style allowances as the library crate (see lib.rs).
+#![allow(
+    clippy::manual_div_ceil,
+    clippy::needless_range_loop,
+    clippy::ptr_arg,
+    clippy::too_many_arguments,
+    clippy::type_complexity
+)]
 
 use std::io::Write;
 use std::sync::Arc;
@@ -91,6 +102,7 @@ fn run(args: &Args) -> Result<()> {
         "attn" => cmd_attn(args),
         "bench-attn" => cmd_bench_attn(args),
         "synth" => cmd_synth(args),
+        "lint" => cmd_lint(args),
         "bench-sim" => cmd_bench_sim(args),
         "bench-synth" => cmd_bench_synth(args),
         "bench-gemm" => cmd_bench_gemm(args),
@@ -179,6 +191,15 @@ COMMANDS
                                           the cross-language FNV digest
   synth   [--arch nibble] [--n 8]         synthesis report for one design
                                           (served from the shared design store)
+  lint    [--arch A | --all-archs] [--width N | --widths 1,8,64]
+          [--deny warn|error] [--json]    static analysis over built designs:
+                                          X-propagation (NX), cone-of-influence
+                                          contract proofs (NC), unobservable
+                                          logic (NL006) and raw-vs-optimized
+                                          signature equivalence (NE); exits
+                                          non-zero on findings at or above the
+                                          --deny threshold (--json: one JSON
+                                          report array on stdout)
   bench-sim [--arch nibble] [--n 8] [--rounds 4] [--out BENCH_sim.json] [--check]
                                           scalar vs 64/256/512-lane packed
                                           simulator throughput, levelized vs
@@ -1376,6 +1397,65 @@ fn cmd_synth(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `nibblemul lint`: run the full static-analysis pipeline (structural,
+/// observability, ternary X-propagation, support/contract proofs, and
+/// raw-vs-optimized signature equivalence) over freshly built designs —
+/// the same checks `DesignStore` gates every build and artifact load on,
+/// but reported exhaustively instead of failing on the first error.
+fn cmd_lint(args: &Args) -> Result<()> {
+    use nibblemul::netlist::analyze::{analyze, AnalyzeSpec, Deny};
+
+    let deny = Deny::parse(&args.get_or("deny", "error"))?;
+    let json = args.has("json");
+    let archs: Vec<Arch> = if args.has("all-archs") {
+        Arch::ALL.to_vec()
+    } else {
+        vec![parse_arch(args, Arch::Nibble)?]
+    };
+    let widths: Vec<usize> = match args.get("width") {
+        Some(_) => vec![args.get_usize("width", 8)?],
+        None => args.get_usize_list("widths", &[1, 8, 64])?,
+    };
+
+    let mut fatal = 0usize;
+    let mut designs = 0usize;
+    let mut json_reports: Vec<String> = Vec::new();
+    for &arch in &archs {
+        for &n in &widths {
+            let raw = arch.try_build(n)?;
+            let opt = optimize(&raw)?;
+            let spec = AnalyzeSpec {
+                arch: Some(arch),
+                n,
+                raw: Some(&raw),
+                ..Default::default()
+            };
+            let report = analyze(&opt, &spec);
+            designs += 1;
+            fatal += report.fatal_count(deny);
+            if json {
+                json_reports.push(report.render_json());
+            } else {
+                print!("{}", report.render_text());
+            }
+        }
+    }
+    if json {
+        println!("[{}]", json_reports.join(","));
+    }
+    anyhow::ensure!(
+        fatal == 0,
+        "lint failed: {fatal} finding(s) at or above the --deny {} \
+         threshold across {designs} design(s)",
+        args.get_or("deny", "error")
+    );
+    if !json {
+        println!("lint clean: {designs} design(s), 0 findings at or above \
+                  the deny threshold");
+    }
+    Ok(())
+}
+
 /// In-place worklist optimizer vs the legacy clone-per-round pipeline,
 /// per-architecture synthesis wall time, and sequential vs pooled sweep
 /// throughput — written as machine-readable JSON (BENCH_synth.json) so
@@ -1399,14 +1479,14 @@ fn cmd_bench_synth(args: &Args) -> Result<()> {
             &format!("synth/clone-rounds/{arch}x{n}"),
             Some(1.0),
             || {
-                let opt = optimize_rounds(&raw);
+                let opt = optimize_rounds(&raw).unwrap();
                 assert!(opt.n_cells() <= raw.n_cells());
             },
         )
         .clone();
     let inplace = bencher
         .bench(&format!("synth/inplace/{arch}x{n}"), Some(1.0), || {
-            let opt = optimize(&raw);
+            let opt = optimize(&raw).unwrap();
             assert!(opt.n_cells() <= raw.n_cells());
         })
         .clone();

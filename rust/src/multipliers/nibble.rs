@@ -181,6 +181,7 @@ pub fn build_vector(n: usize, mode: Mode) -> crate::netlist::Netlist {
         Mode::Nibble4 => b.dff_bus(&bb[0..4].to_vec(), Some(load), None),
         _ => b.dff_bus(&bb, Some(load), None),
     };
+    b.name("breg", &breg);
     let b_lo: Bus = breg[0..4].to_vec();
     let b_hi: Option<Bus> = match mode {
         Mode::Nibble4 => None,

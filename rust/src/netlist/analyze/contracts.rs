@@ -1,0 +1,535 @@
+//! Datapath contract proofs (`NC0xx`), driven by the [`SupportMatrix`].
+//!
+//! Each architecture declares position bounds for how far an operand
+//! bit may reach into the product (partial products land at `j + k`,
+//! and carries only move *up*), whether its elements are physically
+//! replicated (isolation) or share one datapath (the paper's
+//! logic-reuse design), and which named internal ports anchor the
+//! two-cycle phase contract. The support pass proves independence
+//! (absence is sound under over-approximation) and the minimum-cone
+//! check proves presence of every single-partial-product witness
+//! (presence of a true logical dependency is guaranteed).
+
+use crate::multipliers::Arch;
+use crate::netlist::{Cell, Netlist, Port};
+
+use super::ternary::{comb_values, Tern};
+use super::{AnalyzeSpec, AnalysisReport, Code, Diag, Severity, SupportMatrix};
+
+/// Operand-cone position granularity: which operand bit positions `j`
+/// may influence product bit `i`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Gran {
+    /// `j <= i` — bit-granular placement (carries only move up).
+    Bit,
+    /// `4 * (j / 4) <= i` — nibble-segment placement (LUT segments).
+    Nib,
+    /// `j <= i + 4` — bit-granular modulo the phase mux reading both
+    /// nibble arms of the broadcast register at offset 4.
+    Slack4,
+    /// No position bound (right-shifting accumulators).
+    Free,
+}
+
+impl Gran {
+    fn allows(self, j: usize, i: usize) -> bool {
+        match self {
+            Gran::Bit => j <= i,
+            Gran::Nib => 4 * (j / 4) <= i,
+            Gran::Slack4 => j <= i + 4,
+            Gran::Free => true,
+        }
+    }
+
+    fn describe(self) -> &'static str {
+        match self {
+            Gran::Bit => "j <= i",
+            Gran::Nib => "4*(j/4) <= i",
+            Gran::Slack4 => "j <= i+4",
+            Gran::Free => "unbounded",
+        }
+    }
+}
+
+/// Per-arch contract row.
+struct Contract {
+    a: Gran,
+    b: Gran,
+    /// Physically replicated per-element units: element `e`'s outputs
+    /// must be independent of every other element's operand.
+    replicated: bool,
+    /// Two-cycle designs with a `phase` register: the cycle-0 cone
+    /// must never read the high broadcast nibble.
+    phased: bool,
+}
+
+fn contract_for(arch: Arch) -> Contract {
+    match arch {
+        Arch::ShiftAdd | Arch::Booth => Contract {
+            a: Gran::Free,
+            b: Gran::Free,
+            replicated: true,
+            phased: false,
+        },
+        Arch::Nibble => Contract {
+            a: Gran::Bit,
+            b: Gran::Slack4,
+            replicated: false,
+            phased: true,
+        },
+        Arch::NibbleUnrolled => Contract {
+            a: Gran::Bit,
+            b: Gran::Bit,
+            replicated: false,
+            phased: false,
+        },
+        Arch::NibbleCsd => Contract {
+            a: Gran::Bit,
+            b: Gran::Free,
+            replicated: false,
+            phased: true,
+        },
+        Arch::Wallace | Arch::Array => Contract {
+            a: Gran::Bit,
+            b: Gran::Bit,
+            replicated: true,
+            phased: false,
+        },
+        Arch::LutArray => Contract {
+            a: Gran::Nib,
+            b: Gran::Nib,
+            replicated: true,
+            phased: false,
+        },
+        Arch::Nibble4 => Contract {
+            a: Gran::Bit,
+            b: Gran::Bit,
+            replicated: false,
+            phased: false,
+        },
+    }
+}
+
+fn named<'a>(nl: &'a Netlist, name: &str) -> Option<&'a Port> {
+    nl.named.iter().find(|p| p.name == name)
+}
+
+/// The `NC0xx` pass. No-op without a declared architecture.
+pub fn check(
+    nl: &Netlist,
+    order: &[usize],
+    spec: &AnalyzeSpec,
+    sup: &SupportMatrix,
+    report: &mut AnalysisReport,
+) {
+    let Some(arch) = spec.arch else { return };
+    let n = spec.n;
+
+    // NC007: the vector port contract must hold before any cone math.
+    let mut shape_ok = true;
+    for (port, input, want) in [
+        ("a", true, 8 * n),
+        ("b", true, 8),
+        ("start", true, 1),
+        ("r", false, 16 * n),
+        ("done", false, 1),
+    ] {
+        let got = if input { nl.input(port) } else { nl.output(port) };
+        match got {
+            Some(p) if p.bits.len() == want => {}
+            Some(p) => {
+                shape_ok = false;
+                report.diags.push(Diag::new(
+                    Code::NC007,
+                    Severity::Error,
+                    format!(
+                        "port {port} has {} bits, {arch}x{n} requires {want}",
+                        p.bits.len()
+                    ),
+                ));
+            }
+            None => {
+                shape_ok = false;
+                report.diags.push(Diag::new(
+                    Code::NC007,
+                    Severity::Error,
+                    format!("port {port} missing ({arch}x{n} vector contract)"),
+                ));
+            }
+        }
+    }
+    if !shape_ok {
+        return;
+    }
+    let r = nl.output("r").unwrap().bits.clone();
+    let done = nl.output("done").unwrap().bits[0];
+    let a_bit = |f: usize, j: usize| sup.input_bit("a", f * 8 + j).unwrap();
+    let b_bit = |k: usize| sup.input_bit("b", k).unwrap();
+    let start_bit = sup.input_bit("start", 0).unwrap();
+
+    // NC008: control liveness — start must reach done.
+    if sup.contains(done, start_bit) {
+        let pure = sup.indices(done) == vec![start_bit];
+        if pure {
+            report
+                .proved
+                .push("done depends on start and on no data bit (control isolation)".into());
+        }
+    } else {
+        report.diags.push(
+            Diag::new(
+                Code::NC008,
+                Severity::Error,
+                "start is not in the support of done (control cone severed)",
+            )
+            .at_net(done),
+        );
+    }
+
+    // NC001 (Nibble4 only): nothing anywhere may depend on b[4..8].
+    if arch == Arch::Nibble4 {
+        let mut hits = 0usize;
+        for net in 0..nl.n_nets {
+            for k in 4..8 {
+                if sup.contains(crate::netlist::NetId(net as u32), b_bit(k)) {
+                    hits += 1;
+                    if hits <= 8 {
+                        report.diags.push(
+                            Diag::new(
+                                Code::NC001,
+                                Severity::Error,
+                                format!(
+                                    "net {net} depends on b[{k}]: the W4 contract says \
+                                     the high broadcast nibble is never read"
+                                ),
+                            )
+                            .at_net(crate::netlist::NetId(net as u32)),
+                        );
+                    }
+                }
+            }
+        }
+        if hits > 8 {
+            report.diags.push(Diag::new(
+                Code::NC001,
+                Severity::Error,
+                format!("... and {} more b[4..8] dependencies", hits - 8),
+            ));
+        }
+        if hits == 0 {
+            report.proved.push(
+                "nibble4: every net is independent of b[4..8] (W4 masking contract holds \
+                 structurally)"
+                    .into(),
+            );
+        }
+    }
+
+    // NC002/NC003/NC004: operand cone bounds and element isolation.
+    let c = contract_for(arch);
+    let mut cone_violations = 0usize;
+    let mut push_cone = |report: &mut AnalysisReport, diag: Diag| {
+        cone_violations += 1;
+        if cone_violations <= 16 {
+            report.diags.push(diag);
+        }
+    };
+    for e in 0..n {
+        for i in 0..16 {
+            let out = r[e * 16 + i];
+            for f in 0..n {
+                for j in 0..8 {
+                    if !sup.contains(out, a_bit(f, j)) {
+                        continue;
+                    }
+                    if f != e && c.replicated {
+                        push_cone(
+                            report,
+                            Diag::new(
+                                Code::NC004,
+                                Severity::Error,
+                                format!(
+                                    "r[{e}][{i}] depends on a[{f}][{j}] — elements of \
+                                     a replicated {arch} unit must be isolated"
+                                ),
+                            )
+                            .at_net(out),
+                        );
+                    } else if !c.a.allows(j, i) {
+                        push_cone(
+                            report,
+                            Diag::new(
+                                Code::NC002,
+                                Severity::Error,
+                                format!(
+                                    "r[{e}][{i}] depends on a[{f}][{j}] above the \
+                                     {arch} bound ({})",
+                                    c.a.describe()
+                                ),
+                            )
+                            .at_net(out),
+                        );
+                    }
+                }
+            }
+            for k in 0..8 {
+                if sup.contains(out, b_bit(k)) && !c.b.allows(k, i) {
+                    push_cone(
+                        report,
+                        Diag::new(
+                            Code::NC003,
+                            Severity::Error,
+                            format!(
+                                "r[{e}][{i}] depends on b[{k}] above the {arch} \
+                                 bound ({})",
+                                c.b.describe()
+                            ),
+                        )
+                        .at_net(out),
+                    );
+                }
+            }
+        }
+    }
+    if cone_violations > 16 {
+        report.diags.push(Diag::new(
+            Code::NC002,
+            Severity::Error,
+            format!("... and {} more cone violations", cone_violations - 16),
+        ));
+    }
+    if cone_violations == 0 {
+        if c.a != Gran::Free {
+            report.proved.push(format!(
+                "per-bit carry cone: r[i] depends on a[j] only for {} \
+                 (carries strictly upward)",
+                c.a.describe()
+            ));
+        }
+        if c.b != Gran::Free {
+            report.proved.push(format!(
+                "broadcast cone: r[i] depends on b[k] only for {}",
+                c.b.describe().replace('j', "k")
+            ));
+        }
+        if c.replicated {
+            report
+                .proved
+                .push("element isolation: r[e] reads no other element's operand".into());
+        }
+    }
+
+    // NC005: minimum-cone completeness — every single-partial-product
+    // witness a[j]·b[k] with j+k = i must appear in r[i]'s support.
+    let b_bits = arch.b_bits() as usize;
+    let mut missing = 0usize;
+    for e in 0..n {
+        for i in 0..16 {
+            let out = r[e * 16 + i];
+            for j in 0..8 {
+                let need = i >= j && i - j < b_bits;
+                if need && !sup.contains(out, a_bit(e, j)) {
+                    missing += 1;
+                    if missing <= 8 {
+                        report.diags.push(
+                            Diag::new(
+                                Code::NC005,
+                                Severity::Error,
+                                format!(
+                                    "r[{e}][{i}] misses its required dependency on \
+                                     a[{e}][{j}] (witness b[{}])",
+                                    i - j
+                                ),
+                            )
+                            .at_net(out),
+                        );
+                    }
+                }
+            }
+            for k in 0..b_bits {
+                let need = i >= k && i - k < 8;
+                if need && !sup.contains(out, b_bit(k)) {
+                    missing += 1;
+                    if missing <= 8 {
+                        report.diags.push(
+                            Diag::new(
+                                Code::NC005,
+                                Severity::Error,
+                                format!(
+                                    "r[{e}][{i}] misses its required dependency on \
+                                     b[{k}] (witness a[{e}][{}])",
+                                    i - k
+                                ),
+                            )
+                            .at_net(out),
+                        );
+                    }
+                }
+            }
+        }
+    }
+    if missing > 8 {
+        report.diags.push(Diag::new(
+            Code::NC005,
+            Severity::Error,
+            format!("... and {} more missing min-cone dependencies", missing - 8),
+        ));
+    }
+    if missing == 0 {
+        report.proved.push(
+            "min-cone completeness: every single-partial-product witness is in its \
+             product bit's support"
+                .into(),
+        );
+    }
+
+    // NC006: two-cycle phase-0 cone isolation.
+    if c.phased {
+        check_phase0(nl, order, arch, report);
+    }
+}
+
+/// Prove the two-cycle contract: with the `phase` register pinned to 0
+/// (cycle 0 of an element), no register input and no output bit can be
+/// influenced by the high nibble of the broadcast register, and the
+/// result CPA is ternary-quiet (all zeros — nothing is committed).
+fn check_phase0(
+    nl: &Netlist,
+    order: &[usize],
+    arch: Arch,
+    report: &mut AnalysisReport,
+) {
+    let mut missing = Vec::new();
+    for want in ["phase", "breg", "result"] {
+        if named(nl, want).is_none() {
+            missing.push(want);
+        }
+    }
+    if !missing.is_empty() {
+        report.diags.push(Diag::new(
+            Code::NC006,
+            Severity::Error,
+            format!(
+                "named port(s) {} required by the {arch} phase contract are missing",
+                missing.join(", ")
+            ),
+        ));
+        return;
+    }
+    let phase = named(nl, "phase").unwrap().bits[0];
+    let breg = &named(nl, "breg").unwrap().bits;
+    let result = &named(nl, "result").unwrap().bits;
+    if breg.len() < 8 {
+        report.diags.push(Diag::new(
+            Code::NC006,
+            Severity::Error,
+            format!("breg has {} bits, the phase contract needs 8", breg.len()),
+        ));
+        return;
+    }
+
+    let vals = comb_values(nl, order, &[(phase, Tern::Zero)]);
+    // Taint = "can differ with the high broadcast nibble, given phase=0".
+    let mut taint = vec![false; nl.n_nets];
+    for &b in &breg[4..8] {
+        taint[b.idx()] = true;
+    }
+    for &ci in order {
+        let cell = &nl.cells[ci];
+        let from = |taint: &[bool], nets: &[crate::netlist::NetId]| {
+            nets.iter().any(|n| taint[n.idx()])
+        };
+        let t = match *cell {
+            Cell::Mux2 { sel, a0, a1, .. } => match vals[sel.idx()] {
+                Tern::Zero => taint[a0.idx()],
+                Tern::One => taint[a1.idx()],
+                Tern::X => from(&taint, &[sel, a0, a1]),
+            },
+            _ => from(&taint, &cell.inputs()),
+        };
+        for o in cell.outputs() {
+            // A net that is abstractly constant under the pin cannot
+            // carry any influence.
+            taint[o.idx()] = t && vals[o.idx()].as_bool().is_none();
+        }
+    }
+
+    let mut violations = 0usize;
+    for (ci, cell) in nl.cells.iter().enumerate() {
+        if !cell.is_sequential() {
+            continue;
+        }
+        for i in cell.inputs() {
+            if taint[i.idx()] {
+                violations += 1;
+                if violations <= 8 {
+                    report.diags.push(
+                        Diag::new(
+                            Code::NC006,
+                            Severity::Error,
+                            format!(
+                                "cycle-0 cone violation: register cell {ci} input net \
+                                 {} can read the high broadcast nibble at phase 0",
+                                i.0
+                            ),
+                        )
+                        .at_net(i)
+                        .at_cell(ci),
+                    );
+                }
+            }
+        }
+    }
+    for p in &nl.outputs {
+        for (bi, &b) in p.bits.iter().enumerate() {
+            if taint[b.idx()] {
+                violations += 1;
+                if violations <= 8 {
+                    report.diags.push(
+                        Diag::new(
+                            Code::NC006,
+                            Severity::Error,
+                            format!(
+                                "cycle-0 cone violation: output {}[{bi}] can read the \
+                                 high broadcast nibble at phase 0",
+                                p.name
+                            ),
+                        )
+                        .at_net(b),
+                    );
+                }
+            }
+        }
+    }
+    for (bi, &b) in result.iter().enumerate() {
+        if vals[b.idx()] != Tern::Zero {
+            violations += 1;
+            if violations <= 8 {
+                report.diags.push(
+                    Diag::new(
+                        Code::NC006,
+                        Severity::Error,
+                        format!(
+                            "result[{bi}] is not ternary-0 at phase 0 — the CPA must \
+                             be quiet in cycle 0"
+                        ),
+                    )
+                    .at_net(b),
+                );
+            }
+        }
+    }
+    if violations > 8 {
+        report.diags.push(Diag::new(
+            Code::NC006,
+            Severity::Error,
+            format!("... and {} more phase-0 violations", violations - 8),
+        ));
+    }
+    if violations == 0 {
+        report.proved.push(format!(
+            "{arch} phase-0 cone: cycle 0 never reads breg[4..8] and the result \
+             CPA is quiet (all-0) until phase 1"
+        ));
+    }
+}

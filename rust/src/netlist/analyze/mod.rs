@@ -1,0 +1,503 @@
+//! Multi-pass static analysis over the netlist IR.
+//!
+//! Every design the system serves passes through here (see
+//! [`gate`]): at `DesignStore` build time and again on every NMLD
+//! artifact load, the post-optimize netlist must survive
+//!
+//! 1. **structural** — the exhaustive form of [`Netlist::validate`]
+//!    (`NL001..NL005`): single driver, in-range references, no undriven
+//!    reads, no combinational cycles;
+//! 2. **observability** — cells whose output cone reaches no port
+//!    (`NL006`), the static cross-check of DCE;
+//! 3. **ternary** — 0/1/X abstract interpretation (`NX0xx`): constants
+//!    the optimizer should have folded, sequentially stuck-at-constant
+//!    nets and output bits;
+//! 4. **support / contracts** — per-net input-support sets
+//!    ([`SupportMatrix`]) proving the datapath contracts (`NC0xx`):
+//!    operand cone bounds, the Nibble4 `b[4..8]` independence, element
+//!    isolation, minimum-cone completeness, and the two-cycle design's
+//!    phase-0 cone isolation;
+//! 5. **sec** — miter-free signature equivalence (`NE0xx`): 64-lane
+//!    random co-simulation of the raw and optimized netlists,
+//!    certifying `optimize(nl) ≡ nl` output-by-output and partitioning
+//!    nets into signature classes.
+//!
+//! Diagnostics carry stable codes, severity, and a net/cell locus, and
+//! are collected exhaustively (first-violation behaviour lives only in
+//! the legacy [`Netlist::validate`] wrapper). The `nibblemul lint` CLI
+//! renders reports as text or JSON; the coordinator exports
+//! `analysis_*` counters from [`counters`].
+
+pub mod contracts;
+pub mod sec;
+pub mod structural;
+pub mod support;
+pub mod ternary;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{bail, Result};
+
+use crate::multipliers::Arch;
+use crate::netlist::{NetId, Netlist};
+pub use support::SupportMatrix;
+pub use ternary::Tern;
+
+static ANALYSIS_RUNS: AtomicU64 = AtomicU64::new(0);
+static ANALYSIS_FINDINGS: AtomicU64 = AtomicU64::new(0);
+static ANALYSIS_REJECTS: AtomicU64 = AtomicU64::new(0);
+
+/// Process-lifetime analysis counters: `(runs, findings, rejects)`.
+/// Mirrored into the coordinator `Metrics` snapshot as `analysis_*`.
+pub fn counters() -> (u64, u64, u64) {
+    (
+        ANALYSIS_RUNS.load(Ordering::Relaxed),
+        ANALYSIS_FINDINGS.load(Ordering::Relaxed),
+        ANALYSIS_REJECTS.load(Ordering::Relaxed),
+    )
+}
+
+/// Diagnostic severity, ascending.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    /// Observation only; never gates a build.
+    Info,
+    /// Suspicious but not provably wrong; fatal under `--deny warn`.
+    Warn,
+    /// Provable defect; always fatal.
+    Error,
+}
+
+impl Severity {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Severity::Info => "info",
+            Severity::Warn => "warn",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// Stable diagnostic codes. `NL` structural, `NX` X-propagation,
+/// `NC` datapath contract, `NE` equivalence.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Code {
+    /// Net reference out of range.
+    NL001,
+    /// Net driven by more than one source.
+    NL002,
+    /// Cell reads an undriven net.
+    NL003,
+    /// Port bit is undriven or out of range.
+    NL004,
+    /// Combinational cycle.
+    NL005,
+    /// Cell drives no observable cone (should have been DCE'd).
+    NL006,
+    /// Combinationally constant net not materialized as a `Const`
+    /// cell — a fold the optimizer missed.
+    NX001,
+    /// Output port bit sequentially stuck at a constant (info when the
+    /// architecture expects it: product bits at or above `8 + b_bits`).
+    NX002,
+    /// Internal net sequentially stuck at a constant.
+    NX003,
+    /// Nibble4 W4 contract: logic depends on broadcast bits `b[4..8]`.
+    NC001,
+    /// Vector-operand cone bound: output bit depends on an `a` bit
+    /// above its architectural position bound.
+    NC002,
+    /// Broadcast-operand cone bound: output bit depends on a `b` bit
+    /// above its architectural position bound.
+    NC003,
+    /// Element isolation: a replicated-unit output depends on another
+    /// element's operand.
+    NC004,
+    /// Minimum-cone completeness: output bit misses a required
+    /// single-partial-product dependency.
+    NC005,
+    /// Two-cycle phase-0 cone isolation: the cycle-0 cone reads the
+    /// high broadcast nibble, or the result CPA is not quiet.
+    NC006,
+    /// Vector port shape violated for the declared architecture.
+    NC007,
+    /// Control liveness: `start` is not in the support of `done`.
+    NC008,
+    /// Output signature diverges between raw and optimized netlists.
+    NE001,
+    /// Port contract differs between raw and optimized netlists.
+    NE002,
+    /// Distinct nets share a 64-lane signature (possible residual
+    /// redundancy; statistical, never fatal).
+    NE003,
+}
+
+impl Code {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Code::NL001 => "NL001",
+            Code::NL002 => "NL002",
+            Code::NL003 => "NL003",
+            Code::NL004 => "NL004",
+            Code::NL005 => "NL005",
+            Code::NL006 => "NL006",
+            Code::NX001 => "NX001",
+            Code::NX002 => "NX002",
+            Code::NX003 => "NX003",
+            Code::NC001 => "NC001",
+            Code::NC002 => "NC002",
+            Code::NC003 => "NC003",
+            Code::NC004 => "NC004",
+            Code::NC005 => "NC005",
+            Code::NC006 => "NC006",
+            Code::NC007 => "NC007",
+            Code::NC008 => "NC008",
+            Code::NE001 => "NE001",
+            Code::NE002 => "NE002",
+            Code::NE003 => "NE003",
+        }
+    }
+}
+
+impl std::fmt::Display for Code {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// One finding: stable code, severity, human message, and an optional
+/// net/cell locus.
+#[derive(Clone, Debug)]
+pub struct Diag {
+    pub code: Code,
+    pub severity: Severity,
+    pub message: String,
+    pub net: Option<NetId>,
+    pub cell: Option<usize>,
+}
+
+impl Diag {
+    pub fn new(code: Code, severity: Severity, message: impl Into<String>) -> Self {
+        Self {
+            code,
+            severity,
+            message: message.into(),
+            net: None,
+            cell: None,
+        }
+    }
+
+    pub fn at_net(mut self, net: NetId) -> Self {
+        self.net = Some(net);
+        self
+    }
+
+    pub fn at_cell(mut self, ci: usize) -> Self {
+        self.cell = Some(ci);
+        self
+    }
+}
+
+impl std::fmt::Display for Diag {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} [{}] {}", self.code, self.severity.as_str(), self.message)?;
+        if let Some(n) = self.net {
+            write!(f, " (net {})", n.0)?;
+        }
+        if let Some(c) = self.cell {
+            write!(f, " (cell {c})")?;
+        }
+        Ok(())
+    }
+}
+
+/// Denial threshold for exit-code gating.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Deny {
+    /// Only `Error` findings are fatal (the build-gate default).
+    Error,
+    /// `Warn` and above are fatal (`nibblemul lint --deny warn`).
+    Warn,
+}
+
+impl Deny {
+    pub fn parse(s: &str) -> Result<Deny> {
+        match s {
+            "error" => Ok(Deny::Error),
+            "warn" => Ok(Deny::Warn),
+            other => bail!("unknown deny level {other:?} (expected warn|error)"),
+        }
+    }
+
+    fn threshold(self) -> Severity {
+        match self {
+            Deny::Error => Severity::Error,
+            Deny::Warn => Severity::Warn,
+        }
+    }
+}
+
+/// What the analyzer knows about the design under analysis beyond the
+/// netlist itself. Everything is optional: with no `arch` the contract
+/// pass is skipped, with no `raw` reference the SEC pass is skipped.
+#[derive(Clone, Copy, Debug)]
+pub struct AnalyzeSpec<'a> {
+    /// Architecture whose datapath contracts apply.
+    pub arch: Option<Arch>,
+    /// Vector width (operand count) of the unit.
+    pub n: usize,
+    /// Pre-optimization reference netlist for the SEC pass.
+    pub raw: Option<&'a Netlist>,
+    /// Seed for the signature stimulus stream.
+    pub seed: u64,
+    /// Override the SEC cycle count (default `2 * latency + 16`).
+    pub sec_cycles: Option<u64>,
+}
+
+impl Default for AnalyzeSpec<'static> {
+    fn default() -> Self {
+        AnalyzeSpec {
+            arch: None,
+            n: 0,
+            raw: None,
+            seed: 0x6e69_626c_6d75_6c31, // "niblmul1"
+            sec_cycles: None,
+        }
+    }
+}
+
+/// The result of one [`analyze`] run: every finding plus the contract
+/// statements the support pass proved.
+#[derive(Clone, Debug, Default)]
+pub struct AnalysisReport {
+    /// Netlist name (usually `archxN`).
+    pub design: String,
+    pub nets: usize,
+    pub cells: usize,
+    /// Passes that actually ran, in order.
+    pub passes: Vec<&'static str>,
+    pub diags: Vec<Diag>,
+    /// Human-readable contract statements proven by the support pass.
+    pub proved: Vec<String>,
+    /// Signature equivalence classes found by the SEC pass.
+    pub sec_classes: Option<usize>,
+}
+
+impl AnalysisReport {
+    pub fn errors(&self) -> usize {
+        self.count_severity(Severity::Error)
+    }
+
+    pub fn warnings(&self) -> usize {
+        self.count_severity(Severity::Warn)
+    }
+
+    pub fn infos(&self) -> usize {
+        self.count_severity(Severity::Info)
+    }
+
+    fn count_severity(&self, s: Severity) -> usize {
+        self.diags.iter().filter(|d| d.severity == s).count()
+    }
+
+    /// Number of findings at or above the deny threshold.
+    pub fn fatal_count(&self, deny: Deny) -> usize {
+        let t = deny.threshold();
+        self.diags.iter().filter(|d| d.severity >= t).count()
+    }
+
+    pub fn count(&self, code: Code) -> usize {
+        self.diags.iter().filter(|d| d.code == code).count()
+    }
+
+    pub fn has(&self, code: Code) -> bool {
+        self.count(code) > 0
+    }
+
+    /// True if some proven contract statement contains `needle`.
+    pub fn proves(&self, needle: &str) -> bool {
+        self.proved.iter().any(|p| p.contains(needle))
+    }
+
+    /// One-line digest of the fatal findings (for gate errors).
+    fn fatal_digest(&self) -> String {
+        let mut parts: Vec<String> = self
+            .diags
+            .iter()
+            .filter(|d| d.severity == Severity::Error)
+            .take(4)
+            .map(|d| d.to_string())
+            .collect();
+        let total = self.errors();
+        if total > parts.len() {
+            parts.push(format!("... and {} more", total - parts.len()));
+        }
+        parts.join("; ")
+    }
+
+    /// Multi-line human-readable report.
+    pub fn render_text(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let _ = writeln!(s, "== lint {} ==", self.design);
+        let _ = writeln!(s, "passes: {}", self.passes.join(", "));
+        let _ = write!(s, "nets {}, cells {}", self.nets, self.cells);
+        if let Some(c) = self.sec_classes {
+            let _ = write!(s, ", sec classes {c}");
+        }
+        s.push('\n');
+        for p in &self.proved {
+            let _ = writeln!(s, "proved: {p}");
+        }
+        for d in &self.diags {
+            let _ = writeln!(s, "{d}");
+        }
+        let _ = writeln!(
+            s,
+            "{} ({} errors, {} warnings, {} infos)",
+            if self.errors() == 0 { "OK" } else { "FAIL" },
+            self.errors(),
+            self.warnings(),
+            self.infos()
+        );
+        s
+    }
+
+    /// JSON object (hand-rolled; no serde in the dependency set).
+    pub fn render_json(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        s.push('{');
+        let _ = write!(s, "\"design\":{}", json_str(&self.design));
+        let _ = write!(s, ",\"nets\":{},\"cells\":{}", self.nets, self.cells);
+        let _ = write!(
+            s,
+            ",\"passes\":[{}]",
+            self.passes.iter().map(|p| json_str(p)).collect::<Vec<_>>().join(",")
+        );
+        match self.sec_classes {
+            Some(c) => {
+                let _ = write!(s, ",\"sec_classes\":{c}");
+            }
+            None => s.push_str(",\"sec_classes\":null"),
+        }
+        let _ = write!(
+            s,
+            ",\"proved\":[{}]",
+            self.proved.iter().map(|p| json_str(p)).collect::<Vec<_>>().join(",")
+        );
+        s.push_str(",\"diags\":[");
+        for (i, d) in self.diags.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            let _ = write!(
+                s,
+                "{{\"code\":{},\"severity\":{},\"message\":{}",
+                json_str(d.code.as_str()),
+                json_str(d.severity.as_str()),
+                json_str(&d.message)
+            );
+            match d.net {
+                Some(n) => {
+                    let _ = write!(s, ",\"net\":{}", n.0);
+                }
+                None => s.push_str(",\"net\":null"),
+            }
+            match d.cell {
+                Some(c) => {
+                    let _ = write!(s, ",\"cell\":{c}");
+                }
+                None => s.push_str(",\"cell\":null"),
+            }
+            s.push('}');
+        }
+        let _ = write!(
+            s,
+            "],\"errors\":{},\"warnings\":{},\"infos\":{}}}",
+            self.errors(),
+            self.warnings(),
+            self.infos()
+        );
+        s
+    }
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Run every applicable pass over `nl`, collecting findings
+/// exhaustively. Never errors: a broken netlist yields `NL0xx`
+/// diagnostics (and the deeper passes, which assume structural
+/// soundness, are skipped).
+pub fn analyze(nl: &Netlist, spec: &AnalyzeSpec) -> AnalysisReport {
+    ANALYSIS_RUNS.fetch_add(1, Ordering::Relaxed);
+    let mut report = AnalysisReport {
+        design: nl.name.clone(),
+        nets: nl.n_nets,
+        cells: nl.cells.len(),
+        ..Default::default()
+    };
+    report.passes.push("structural");
+    report.diags = structural::structural(nl);
+    if report.errors() == 0 {
+        // Structural soundness proven, so a topological order exists.
+        let order = nl.topo_order().expect("structurally sound netlist");
+        report.passes.push("observability");
+        structural::unobservable(nl, &mut report.diags);
+        report.passes.push("ternary");
+        ternary::check(nl, &order, spec, &mut report);
+        report.passes.push("support");
+        let sup = SupportMatrix::build(nl, &order);
+        report.passes.push("contracts");
+        contracts::check(nl, &order, spec, &sup, &mut report);
+        if spec.raw.is_some() {
+            report.passes.push("sec");
+            sec::check(nl, spec, &mut report);
+        }
+    }
+    ANALYSIS_FINDINGS.fetch_add(report.diags.len() as u64, Ordering::Relaxed);
+    report
+}
+
+/// The build gate: analyze `opt` (the post-optimize netlist) against
+/// its pre-optimization reference `raw` under the `arch`/`n` contracts,
+/// and refuse (descriptive error, never a panic) on any `Error`-level
+/// finding. Run by `DesignStore` on every build and on every NMLD
+/// artifact load.
+pub fn gate(
+    arch: Arch,
+    n: usize,
+    raw: &Netlist,
+    opt: &Netlist,
+) -> Result<AnalysisReport> {
+    let spec = AnalyzeSpec {
+        arch: Some(arch),
+        n,
+        raw: Some(raw),
+        ..Default::default()
+    };
+    let report = analyze(opt, &spec);
+    if report.errors() > 0 {
+        ANALYSIS_REJECTS.fetch_add(1, Ordering::Relaxed);
+        bail!(
+            "static analysis rejected {arch}x{n}: {} error(s): {}",
+            report.errors(),
+            report.fatal_digest()
+        );
+    }
+    Ok(report)
+}

@@ -1,0 +1,187 @@
+//! Structural pass (`NL0xx`): the exhaustive form of the invariants
+//! `Netlist::validate` has always enforced first-violation-only, plus
+//! the observability cross-check of DCE.
+
+use crate::netlist::{Cell, NetId, Netlist};
+
+use super::{Code, Diag, Severity};
+
+/// Collect every structural violation: out-of-range references
+/// (`NL001`), multiple drivers (`NL002`), undriven cell reads
+/// (`NL003`), undriven port bits (`NL004`), combinational cycles
+/// (`NL005`). The messages for the *first* violation match what the
+/// legacy `validate()` bails with — `validate()` is now a thin wrapper
+/// over this collector.
+pub fn structural(nl: &Netlist) -> Vec<Diag> {
+    let mut diags = Vec::new();
+    let n = nl.n_nets;
+    let mut out_of_range = false;
+    let mut driver: Vec<i64> = vec![-1; n];
+    // Primary inputs are drivers.
+    for p in &nl.inputs {
+        for &b in &p.bits {
+            if b.idx() >= n {
+                out_of_range = true;
+                diags.push(
+                    Diag::new(
+                        Code::NL001,
+                        Severity::Error,
+                        format!("input {} references net {} out of range", p.name, b.0),
+                    )
+                    .at_net(b),
+                );
+                continue;
+            }
+            if driver[b.idx()] != -1 {
+                diags.push(
+                    Diag::new(
+                        Code::NL002,
+                        Severity::Error,
+                        format!("input {} net {} multiply driven", p.name, b.0),
+                    )
+                    .at_net(b),
+                );
+            } else {
+                driver[b.idx()] = -2; // input-driven marker
+            }
+        }
+    }
+    for (ci, cell) in nl.cells.iter().enumerate() {
+        for o in cell.outputs() {
+            if o.idx() >= n {
+                out_of_range = true;
+                diags.push(
+                    Diag::new(
+                        Code::NL001,
+                        Severity::Error,
+                        format!("cell {ci} drives net {} out of range", o.0),
+                    )
+                    .at_cell(ci),
+                );
+                continue;
+            }
+            if driver[o.idx()] != -1 {
+                diags.push(
+                    Diag::new(
+                        Code::NL002,
+                        Severity::Error,
+                        format!(
+                            "net {} multiply driven (cell {ci} and {})",
+                            o.0,
+                            driver[o.idx()]
+                        ),
+                    )
+                    .at_net(o)
+                    .at_cell(ci),
+                );
+            } else {
+                driver[o.idx()] = ci as i64;
+            }
+        }
+    }
+    // Every read net must be driven.
+    for (ci, cell) in nl.cells.iter().enumerate() {
+        for i in cell.inputs() {
+            if i.idx() >= n {
+                out_of_range = true;
+                diags.push(
+                    Diag::new(
+                        Code::NL001,
+                        Severity::Error,
+                        format!("cell {ci} reads net {} out of range", i.0),
+                    )
+                    .at_cell(ci),
+                );
+            } else if driver[i.idx()] == -1 {
+                diags.push(
+                    Diag::new(
+                        Code::NL003,
+                        Severity::Error,
+                        format!("cell {ci} reads undriven net {}", i.0),
+                    )
+                    .at_net(i)
+                    .at_cell(ci),
+                );
+            }
+        }
+    }
+    for p in nl.outputs.iter().chain(&nl.named) {
+        for &b in &p.bits {
+            if b.idx() >= n || driver[b.idx()] == -1 {
+                diags.push(
+                    Diag::new(
+                        Code::NL004,
+                        Severity::Error,
+                        format!("port {} reads undriven net {}", p.name, b.0),
+                    )
+                    .at_net(b),
+                );
+            }
+        }
+    }
+    // Cycle check needs in-range references (the Kahn pass indexes by
+    // net id); with any NL001 present the netlist is already fatal.
+    if !out_of_range {
+        if let Err(e) = nl.topo_order() {
+            diags.push(Diag::new(Code::NL005, Severity::Error, format!("{e}")));
+        }
+    }
+    diags
+}
+
+/// Observability pass (`NL006`): flag cells none of whose outputs reach
+/// an output or named port through any (combinational or sequential)
+/// path. Uses the same liveness definition as `synth::dce` — outputs
+/// and named ports are roots, liveness flows backward through every
+/// cell — so on a DCE'd netlist this pass must find nothing, and on a
+/// pre-DCE netlist its finding count equals the number of cells DCE
+/// removes (asserted in tests).
+pub fn unobservable(nl: &Netlist, diags: &mut Vec<Diag>) {
+    let mut live_net = vec![false; nl.n_nets];
+    let mut live_cell = vec![false; nl.cells.len()];
+    // net -> driver cell.
+    let mut driver: Vec<i64> = vec![-1; nl.n_nets];
+    for (ci, cell) in nl.cells.iter().enumerate() {
+        for o in cell.outputs() {
+            driver[o.idx()] = ci as i64;
+        }
+    }
+    let mut stack: Vec<NetId> = Vec::new();
+    for p in nl.outputs.iter().chain(&nl.named) {
+        for &b in &p.bits {
+            if !live_net[b.idx()] {
+                live_net[b.idx()] = true;
+                stack.push(b);
+            }
+        }
+    }
+    while let Some(net) = stack.pop() {
+        let ci = driver[net.idx()];
+        if ci < 0 || live_cell[ci as usize] {
+            continue;
+        }
+        live_cell[ci as usize] = true;
+        for i in nl.cells[ci as usize].inputs() {
+            if !live_net[i.idx()] {
+                live_net[i.idx()] = true;
+                stack.push(i);
+            }
+        }
+    }
+    for (ci, cell) in nl.cells.iter().enumerate() {
+        if !live_cell[ci] {
+            diags.push(
+                Diag::new(
+                    Code::NL006,
+                    Severity::Warn,
+                    format!(
+                        "cell {ci} ({}) drives no observable cone (dead logic DCE \
+                         should have removed)",
+                        cell.type_name()
+                    ),
+                )
+                .at_cell(ci),
+            );
+        }
+    }
+}

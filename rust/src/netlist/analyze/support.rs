@@ -1,0 +1,180 @@
+//! Cone-of-influence support analysis (`SupportMatrix`).
+//!
+//! For every net, the set of *primary input bits* that can possibly
+//! influence it, as a bitset over the input universe (all input-port
+//! bits in port order). Computed by a forward union pass over the
+//! topological order with an outer fixpoint across DFFs (a register's
+//! support absorbs its data, enable, and clear cones until stable) —
+//! a structural over-approximation of logical support, so
+//!
+//! * a bit **absent** here is *proven* absent: no assignment of inputs
+//!   can make the net depend on it (independence contracts are sound);
+//! * a bit **present** in the true logical support is always present
+//!   here (minimum-cone contracts can never false-positive).
+//!
+//! Optimization only removes or bypasses logic, so supports shrink
+//! under `optimize` — proving a contract on the optimized netlist is
+//! the strongest (and cached) form.
+
+use std::collections::HashMap;
+
+use crate::netlist::{Cell, NetId, Netlist};
+
+/// Per-net input-support bitsets.
+pub struct SupportMatrix {
+    words: usize,
+    n_nets: usize,
+    /// `n_nets * words` words, row-major.
+    sets: Vec<u64>,
+    /// Input-port name -> index of the port's bit 0 in the universe.
+    port_offset: HashMap<String, usize>,
+    /// Total universe size (sum of input-port widths).
+    universe: usize,
+}
+
+impl SupportMatrix {
+    /// Build the matrix. `order` must be a valid topological order of
+    /// `nl` (the analyzer computes it once and shares it).
+    pub fn build(nl: &Netlist, order: &[usize]) -> Self {
+        let mut port_offset = HashMap::new();
+        let mut universe = 0usize;
+        for p in &nl.inputs {
+            port_offset.insert(p.name.clone(), universe);
+            universe += p.bits.len();
+        }
+        let words = universe.div_ceil(64).max(1);
+        let n_nets = nl.n_nets;
+        let mut sets = vec![0u64; n_nets * words];
+        let mut k = 0usize;
+        for p in &nl.inputs {
+            for &b in &p.bits {
+                sets[b.idx() * words + (k / 64)] |= 1u64 << (k % 64);
+                k += 1;
+            }
+        }
+        let dffs: Vec<(NetId, Vec<NetId>)> = nl
+            .cells
+            .iter()
+            .filter_map(|c| match *c {
+                Cell::Dff { q, .. } => Some((q, c.inputs())),
+                _ => None,
+            })
+            .collect();
+        // Chaotic iteration to the least fixpoint: the comb pass and
+        // the DFF joins are all monotone unions, so accumulating
+        // in place converges.
+        loop {
+            for &ci in order {
+                let cell = &nl.cells[ci];
+                let mut acc = vec![0u64; words];
+                for i in cell.inputs() {
+                    let row = &sets[i.idx() * words..(i.idx() + 1) * words];
+                    for (a, &w) in acc.iter_mut().zip(row) {
+                        *a |= w;
+                    }
+                }
+                for o in cell.outputs() {
+                    sets[o.idx() * words..(o.idx() + 1) * words]
+                        .copy_from_slice(&acc);
+                }
+            }
+            let mut changed = false;
+            for (q, ins) in &dffs {
+                for i in ins {
+                    for w in 0..words {
+                        let add = sets[i.idx() * words + w];
+                        let dst = &mut sets[q.idx() * words + w];
+                        if *dst | add != *dst {
+                            *dst |= add;
+                            changed = true;
+                        }
+                    }
+                }
+            }
+            if !changed {
+                return Self {
+                    words,
+                    n_nets,
+                    sets,
+                    port_offset,
+                    universe,
+                };
+            }
+        }
+    }
+
+    /// Universe index of `port[bit]`, if the port exists.
+    pub fn input_bit(&self, port: &str, bit: usize) -> Option<usize> {
+        self.port_offset.get(port).map(|off| off + bit)
+    }
+
+    /// Does input-universe bit `k` lie in the support of `net`?
+    pub fn contains(&self, net: NetId, k: usize) -> bool {
+        debug_assert!(net.idx() < self.n_nets && k < self.universe);
+        self.sets[net.idx() * self.words + (k / 64)] >> (k % 64) & 1 == 1
+    }
+
+    /// All universe indices in the support of `net`, ascending.
+    pub fn indices(&self, net: NetId) -> Vec<usize> {
+        let row = &self.sets[net.idx() * self.words..(net.idx() + 1) * self.words];
+        let mut out = Vec::new();
+        for (wi, &w) in row.iter().enumerate() {
+            let mut w = w;
+            while w != 0 {
+                let b = w.trailing_zeros() as usize;
+                out.push(wi * 64 + b);
+                w &= w - 1;
+            }
+        }
+        out
+    }
+
+    /// Size of the input universe.
+    pub fn universe(&self) -> usize {
+        self.universe
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::Builder;
+
+    #[test]
+    fn comb_support_is_the_read_cone() {
+        let mut b = Builder::new("sup");
+        let x = b.input("x", 2);
+        let y = b.input("y", 1);
+        let g = b.and_gate(x[0], y[0]);
+        let h = b.not_gate(x[1]);
+        b.output("g", &vec![g]);
+        b.output("h", &vec![h]);
+        let nl = b.finish();
+        let order = nl.topo_order().unwrap();
+        let sup = SupportMatrix::build(&nl, &order);
+        let x0 = sup.input_bit("x", 0).unwrap();
+        let x1 = sup.input_bit("x", 1).unwrap();
+        let y0 = sup.input_bit("y", 0).unwrap();
+        assert_eq!(sup.indices(g), vec![x0, y0]);
+        assert_eq!(sup.indices(h), vec![x1]);
+        assert!(!sup.contains(g, x1));
+    }
+
+    #[test]
+    fn dff_feedback_accumulates_support() {
+        // A self-incrementing counter with an enable: q's support must
+        // absorb the enable input through the feedback fixpoint.
+        let mut b = Builder::new("fb");
+        let en = b.input("en", 1);
+        let (q, d) = b.dff_bus_feedback(2, Some(en[0]), None);
+        let next = b.inc_to(&q, 2);
+        b.drive(&d, &next);
+        b.output("q", &q);
+        let nl = b.finish();
+        let order = nl.topo_order().unwrap();
+        let sup = SupportMatrix::build(&nl, &order);
+        let e = sup.input_bit("en", 0).unwrap();
+        assert!(sup.contains(q[0], e));
+        assert!(sup.contains(q[1], e));
+    }
+}

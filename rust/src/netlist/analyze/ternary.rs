@@ -1,0 +1,342 @@
+//! Ternary (0/1/X) abstract interpretation (`NX0xx`).
+//!
+//! Two variants over the same transfer functions:
+//!
+//! * **combinational** ([`comb_values`]): DFF outputs and primary
+//!   inputs are `X`; a net that still evaluates to a constant is a fold
+//!   the optimizer missed (`NX001`) — the optimizer's constant domain
+//!   strictly contains this one, so an optimized netlist must produce
+//!   zero such findings (asserted in tests).
+//! * **sequential** ([`seq_values`]): DFF outputs start at their
+//!   power-on `init` and are joined with every reachable next-state
+//!   value (enable may hold, clear may fire) until a fixpoint. The join
+//!   only moves up the `const -> X` lattice, so the fixpoint is reached
+//!   after at most one change per DFF and the result is sound: a net
+//!   abstractly constant here is truly stuck at that value in every
+//!   reachable power-on execution (`NX002` on output bits, `NX003`
+//!   internally).
+
+use crate::netlist::{BinKind, Cell, NetId, Netlist, UnaryKind};
+
+use super::{AnalyzeSpec, AnalysisReport, Code, Diag, Severity};
+
+/// A ternary abstract value.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tern {
+    Zero,
+    One,
+    X,
+}
+
+impl Tern {
+    pub fn from_bool(b: bool) -> Tern {
+        if b {
+            Tern::One
+        } else {
+            Tern::Zero
+        }
+    }
+
+    /// `Some(v)` iff abstractly constant.
+    pub fn as_bool(self) -> Option<bool> {
+        match self {
+            Tern::Zero => Some(false),
+            Tern::One => Some(true),
+            Tern::X => None,
+        }
+    }
+
+    /// Least upper bound on the flat lattice.
+    pub fn join(self, other: Tern) -> Tern {
+        if self == other {
+            self
+        } else {
+            Tern::X
+        }
+    }
+
+    pub fn not(self) -> Tern {
+        match self {
+            Tern::Zero => Tern::One,
+            Tern::One => Tern::Zero,
+            Tern::X => Tern::X,
+        }
+    }
+
+    pub fn and(self, other: Tern) -> Tern {
+        match (self, other) {
+            (Tern::Zero, _) | (_, Tern::Zero) => Tern::Zero,
+            (Tern::One, Tern::One) => Tern::One,
+            _ => Tern::X,
+        }
+    }
+
+    pub fn or(self, other: Tern) -> Tern {
+        match (self, other) {
+            (Tern::One, _) | (_, Tern::One) => Tern::One,
+            (Tern::Zero, Tern::Zero) => Tern::Zero,
+            _ => Tern::X,
+        }
+    }
+
+    pub fn xor(self, other: Tern) -> Tern {
+        match (self.as_bool(), other.as_bool()) {
+            (Some(a), Some(b)) => Tern::from_bool(a ^ b),
+            _ => Tern::X,
+        }
+    }
+
+    /// `sel ? a1 : a0` — constant when the selected arm is, or when
+    /// both arms agree on a constant.
+    pub fn mux(sel: Tern, a0: Tern, a1: Tern) -> Tern {
+        match sel {
+            Tern::Zero => a0,
+            Tern::One => a1,
+            Tern::X => a0.join(a1),
+        }
+    }
+
+    /// Majority of three (full-adder carry): constant as soon as two
+    /// inputs agree on a constant.
+    pub fn maj(a: Tern, b: Tern, c: Tern) -> Tern {
+        let ones = [a, b, c].iter().filter(|&&v| v == Tern::One).count();
+        let zeros = [a, b, c].iter().filter(|&&v| v == Tern::Zero).count();
+        if ones >= 2 {
+            Tern::One
+        } else if zeros >= 2 {
+            Tern::Zero
+        } else {
+            Tern::X
+        }
+    }
+
+    pub fn bin(kind: BinKind, a: Tern, b: Tern) -> Tern {
+        match kind {
+            BinKind::And => a.and(b),
+            BinKind::Or => a.or(b),
+            BinKind::Xor => a.xor(b),
+            BinKind::Nand => a.and(b).not(),
+            BinKind::Nor => a.or(b).not(),
+            BinKind::Xnor => a.xor(b).not(),
+        }
+    }
+}
+
+fn eval_comb_cell(cell: &Cell, vals: &mut [Tern]) {
+    match *cell {
+        Cell::Const { .. } | Cell::Dff { .. } => {}
+        Cell::Unary { kind, a, out } => {
+            let v = vals[a.idx()];
+            vals[out.idx()] = match kind {
+                UnaryKind::Buf => v,
+                UnaryKind::Not => v.not(),
+            };
+        }
+        Cell::Binary { kind, a, b, out } => {
+            vals[out.idx()] = Tern::bin(kind, vals[a.idx()], vals[b.idx()]);
+        }
+        Cell::Mux2 { sel, a0, a1, out } => {
+            vals[out.idx()] = Tern::mux(vals[sel.idx()], vals[a0.idx()], vals[a1.idx()]);
+        }
+        Cell::HalfAdder { a, b, sum, carry } => {
+            let (va, vb) = (vals[a.idx()], vals[b.idx()]);
+            vals[sum.idx()] = va.xor(vb);
+            vals[carry.idx()] = va.and(vb);
+        }
+        Cell::FullAdder { a, b, c, sum, carry } => {
+            let (va, vb, vc) = (vals[a.idx()], vals[b.idx()], vals[c.idx()]);
+            vals[sum.idx()] = va.xor(vb).xor(vc);
+            vals[carry.idx()] = Tern::maj(va, vb, vc);
+        }
+    }
+}
+
+/// One combinational ternary pass over `order` (a valid topological
+/// order of `nl`). Constants drive their value, everything else starts
+/// `X`; `pins` overrides *source* nets (primary inputs or DFF outputs)
+/// before evaluation.
+pub fn comb_values(nl: &Netlist, order: &[usize], pins: &[(NetId, Tern)]) -> Vec<Tern> {
+    let mut vals = vec![Tern::X; nl.n_nets];
+    for cell in &nl.cells {
+        if let Cell::Const { value, out } = *cell {
+            vals[out.idx()] = Tern::from_bool(value);
+        }
+    }
+    for &(net, v) in pins {
+        vals[net.idx()] = v;
+    }
+    for &ci in order {
+        eval_comb_cell(&nl.cells[ci], &mut vals);
+    }
+    vals
+}
+
+/// Sequential fixpoint: start every DFF at its power-on `init`, join in
+/// every abstractly reachable next state (matching the engine's commit
+/// semantics — enable holds `q`, synchronous clear dominates and forces
+/// 0), and re-run the combinational pass until no DFF changes.
+pub fn seq_values(nl: &Netlist, order: &[usize]) -> Vec<Tern> {
+    let dffs: Vec<(usize, &Cell)> = nl
+        .cells
+        .iter()
+        .enumerate()
+        .filter(|(_, c)| c.is_sequential())
+        .collect();
+    let mut q_abs: Vec<Tern> = dffs
+        .iter()
+        .map(|(_, c)| match *c {
+            Cell::Dff { init, .. } => Tern::from_bool(*init),
+            _ => unreachable!(),
+        })
+        .collect();
+    // Each join can only move a DFF up the lattice once, so the loop
+    // terminates after at most one change per DFF.
+    loop {
+        let pins: Vec<(NetId, Tern)> = dffs
+            .iter()
+            .zip(&q_abs)
+            .map(|((_, c), &v)| match *c {
+                Cell::Dff { q, .. } => (*q, v),
+                _ => unreachable!(),
+            })
+            .collect();
+        let vals = comb_values(nl, order, &pins);
+        let mut changed = false;
+        for (k, (_, c)) in dffs.iter().enumerate() {
+            let (d, en, clr) = match c {
+                Cell::Dff { d, en, clr, .. } => (*d, *en, *clr),
+                _ => unreachable!(),
+            };
+            let cur = q_abs[k];
+            let dv = vals[d.idx()];
+            let after_en = match en.map(|e| vals[e.idx()]) {
+                None | Some(Tern::One) => dv,
+                Some(Tern::Zero) => cur,
+                Some(Tern::X) => dv.join(cur),
+            };
+            let next = match clr.map(|r| vals[r.idx()]) {
+                None | Some(Tern::Zero) => after_en,
+                Some(Tern::One) => Tern::Zero,
+                Some(Tern::X) => after_en.join(Tern::Zero),
+            };
+            let joined = cur.join(next);
+            if joined != cur {
+                q_abs[k] = joined;
+                changed = true;
+            }
+        }
+        if !changed {
+            return vals;
+        }
+    }
+}
+
+/// True when `arch` is *expected* to hold an output bit at 0: product
+/// bits at or above `8 + b_bits` can never be set (an 8-bit element
+/// times a `b_bits`-wide broadcast operand fits in `8 + b_bits` bits),
+/// so the W4 class legitimately registers constant zeros there.
+fn expected_stuck(
+    spec: &AnalyzeSpec,
+    port: &str,
+    bit: usize,
+    value: bool,
+) -> bool {
+    let Some(arch) = spec.arch else { return false };
+    port == "r" && !value && (bit % 16) as u32 >= 8 + arch.b_bits()
+}
+
+/// The `NX0xx` pass.
+pub fn check(
+    nl: &Netlist,
+    order: &[usize],
+    spec: &AnalyzeSpec,
+    report: &mut AnalysisReport,
+) {
+    let n = nl.n_nets;
+    let mut const_driven = vec![false; n];
+    let mut driver: Vec<i64> = vec![-1; n];
+    for (ci, cell) in nl.cells.iter().enumerate() {
+        if let Cell::Const { out, .. } = cell {
+            const_driven[out.idx()] = true;
+        }
+        for o in cell.outputs() {
+            driver[o.idx()] = ci as i64;
+        }
+    }
+
+    // NX001: combinationally constant nets the optimizer should own.
+    let comb = comb_values(nl, order, &[]);
+    for net in 0..n {
+        let Some(v) = comb[net].as_bool() else { continue };
+        if const_driven[net] || driver[net] < 0 {
+            continue;
+        }
+        let ci = driver[net] as usize;
+        report.diags.push(
+            Diag::new(
+                Code::NX001,
+                Severity::Warn,
+                format!(
+                    "net {net} is combinationally constant {} (driver cell {ci} {}) \
+                     — a fold the optimizer missed",
+                    v as u8,
+                    nl.cells[ci].type_name()
+                ),
+            )
+            .at_net(NetId(net as u32))
+            .at_cell(ci),
+        );
+    }
+
+    // NX002/NX003: sequentially stuck nets (power-on reachability).
+    let seq = seq_values(nl, order);
+    let mut output_bit: Vec<Option<(usize, usize)>> = vec![None; n];
+    for (pi, p) in nl.outputs.iter().enumerate() {
+        for (bi, &b) in p.bits.iter().enumerate() {
+            output_bit[b.idx()] = Some((pi, bi));
+        }
+    }
+    for net in 0..n {
+        let Some(v) = seq[net].as_bool() else { continue };
+        // Const-driven nets are materialized constants; comb-constant
+        // nets were already reported by NX001.
+        if const_driven[net] || comb[net].as_bool().is_some() || driver[net] < 0 {
+            continue;
+        }
+        if let Some((pi, bi)) = output_bit[net] {
+            let port = &nl.outputs[pi].name;
+            let expected = expected_stuck(spec, port, bi, v);
+            let mut msg = format!(
+                "output {port}[{bi}] is sequentially stuck at {}",
+                v as u8
+            );
+            if expected {
+                msg.push_str(
+                    " (architecturally expected: product bits at or above \
+                     8+b_bits are never driven)",
+                );
+            }
+            report.diags.push(
+                Diag::new(
+                    Code::NX002,
+                    if expected { Severity::Info } else { Severity::Warn },
+                    msg,
+                )
+                .at_net(NetId(net as u32)),
+            );
+        } else {
+            report.diags.push(
+                Diag::new(
+                    Code::NX003,
+                    Severity::Info,
+                    format!(
+                        "net {net} is sequentially stuck at {} (constant over the \
+                         reachable state space)",
+                        v as u8
+                    ),
+                )
+                .at_net(NetId(net as u32)),
+            );
+        }
+    }
+}

@@ -14,8 +14,10 @@
 //! * Sequential state is explicit [`Cell::Dff`]; there is a single implicit
 //!   global clock (the paper's designs are all single-clock @ 1 GHz).
 
+pub mod analyze;
 mod builder;
 mod cell;
+pub mod order;
 mod stats;
 mod validate;
 

@@ -1,0 +1,183 @@
+//! Shared topological-ordering and levelization routines.
+//!
+//! Historically the repo carried three orderings: the Kahn pass inside
+//! `Netlist::validate`, the rank levelizer in `sim/ops.rs`, and the
+//! worklist seeding in `synth/inplace.rs`. They are now all fed from this
+//! module — [`kahn_comb_order`] is THE combinational order (re-exported as
+//! [`Netlist::topo_order`], which the optimizer's worklist and the static
+//! analyzer consume), and [`Leveler`] is THE rank computation the program
+//! compiler levelizes with — so analyzer, optimizer, and compiler agree on
+//! ordering by construction.
+
+use anyhow::{bail, Result};
+
+use super::cell::Cell;
+use super::Netlist;
+
+/// Kahn (FIFO) topological order of *combinational* cells: DFF outputs,
+/// constants and primary inputs are sources. Errors on combinational
+/// cycles. Deterministic: seeded in cell-index order and popped
+/// front-to-back, so equal netlists always get byte-identical orders
+/// (the artifact layer depends on this).
+pub fn kahn_comb_order(nl: &Netlist) -> Result<Vec<usize>> {
+    // fanout: net -> list of comb cells reading it
+    let mut readers: Vec<Vec<u32>> = vec![Vec::new(); nl.n_nets];
+    let mut indeg: Vec<u32> = vec![0; nl.cells.len()];
+    let mut comb: Vec<bool> = vec![false; nl.cells.len()];
+    for (ci, cell) in nl.cells.iter().enumerate() {
+        if cell.is_sequential() || matches!(cell, Cell::Const { .. }) {
+            continue;
+        }
+        comb[ci] = true;
+        for i in cell.inputs() {
+            readers[i.idx()].push(ci as u32);
+        }
+    }
+    // A comb cell's indegree = number of its inputs driven by other comb
+    // cells.
+    let mut driven_by_comb: Vec<i64> = vec![-1; nl.n_nets];
+    for (ci, cell) in nl.cells.iter().enumerate() {
+        if comb[ci] {
+            for o in cell.outputs() {
+                driven_by_comb[o.idx()] = ci as i64;
+            }
+        }
+    }
+    for (ci, cell) in nl.cells.iter().enumerate() {
+        if !comb[ci] {
+            continue;
+        }
+        indeg[ci] = cell
+            .inputs()
+            .iter()
+            .filter(|n| driven_by_comb[n.idx()] >= 0)
+            .count() as u32;
+    }
+    let mut queue: Vec<usize> = (0..nl.cells.len())
+        .filter(|&ci| comb[ci] && indeg[ci] == 0)
+        .collect();
+    let mut order = Vec::with_capacity(queue.len());
+    let mut head = 0;
+    while head < queue.len() {
+        let ci = queue[head];
+        head += 1;
+        order.push(ci);
+        for o in nl.cells[ci].outputs() {
+            for &r in &readers[o.idx()] {
+                let r = r as usize;
+                indeg[r] -= 1;
+                if indeg[r] == 0 {
+                    queue.push(r);
+                }
+            }
+        }
+    }
+    let n_comb = comb.iter().filter(|&&c| c).count();
+    if order.len() != n_comb {
+        bail!(
+            "combinational cycle: {} of {} comb cells unreachable",
+            n_comb - order.len(),
+            n_comb
+        );
+    }
+    Ok(order)
+}
+
+/// Rank computation over an already-topologically-ordered node stream.
+///
+/// Feed nodes front to back with [`Leveler::push`]; the node's rank is
+/// `1 + max(rank of read nets)` with sources (nets no earlier node
+/// wrote) at rank 0. Rank values are invariant under any bijective net
+/// renaming, so callers may compute them before or after an arena
+/// remap and get the same partition.
+pub struct Leveler {
+    net_rank: Vec<u32>,
+    ranks: Vec<u32>,
+}
+
+impl Leveler {
+    pub fn new(n_nets: usize) -> Self {
+        Self {
+            net_rank: vec![0; n_nets],
+            ranks: Vec::new(),
+        }
+    }
+
+    /// Record the next node; returns its rank.
+    pub fn push(&mut self, reads: &[u32], writes: &[u32]) -> u32 {
+        let mut r = 0;
+        for &n in reads {
+            r = r.max(self.net_rank[n as usize]);
+        }
+        let r = r + 1;
+        for &w in writes {
+            self.net_rank[w as usize] = r;
+        }
+        self.ranks.push(r);
+        r
+    }
+
+    /// Per-node ranks, in push order.
+    pub fn ranks(&self) -> &[u32] {
+        &self.ranks
+    }
+
+    /// Stable-partition the pushed nodes by rank: returns the
+    /// permutation (node indices in rank order, push order within a
+    /// rank) and the rank offsets — nodes of rank `l` (1-based) span
+    /// `offsets[l-1]..offsets[l]` of the permuted list. An empty
+    /// stream yields `([], [0])`.
+    pub fn partition(&self) -> (Vec<usize>, Vec<u32>) {
+        let mut idx: Vec<usize> = (0..self.ranks.len()).collect();
+        idx.sort_by_key(|&i| self.ranks[i]); // stable
+        let depth = self.ranks.iter().copied().max().unwrap_or(0) as usize;
+        let mut counts = vec![0u32; depth];
+        for &r in &self.ranks {
+            counts[r as usize - 1] += 1;
+        }
+        let mut offsets = vec![0u32];
+        let mut acc = 0;
+        for c in counts {
+            acc += c;
+            offsets.push(acc);
+        }
+        (idx, offsets)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn leveler_ranks_and_partition() {
+        // net 0,1 sources; node0: 0->2, node1: 1->3, node2: 2,3->4.
+        let mut lv = Leveler::new(5);
+        assert_eq!(lv.push(&[0], &[2]), 1);
+        assert_eq!(lv.push(&[1], &[3]), 1);
+        assert_eq!(lv.push(&[2, 3], &[4]), 2);
+        let (perm, offsets) = lv.partition();
+        assert_eq!(perm, vec![0, 1, 2]);
+        assert_eq!(offsets, vec![0, 2, 3]);
+    }
+
+    #[test]
+    fn leveler_partition_is_stable_within_rank() {
+        // Two independent rank-1 nodes pushed out of net order must
+        // keep push order.
+        let mut lv = Leveler::new(4);
+        lv.push(&[1], &[2]);
+        lv.push(&[0], &[3]);
+        let (perm, offsets) = lv.partition();
+        assert_eq!(perm, vec![0, 1]);
+        assert_eq!(offsets, vec![0, 2]);
+    }
+
+    #[test]
+    fn empty_stream_partitions_to_zero_offsets() {
+        let lv = Leveler::new(0);
+        let (perm, offsets) = lv.partition();
+        assert!(perm.is_empty());
+        assert_eq!(offsets, vec![0]);
+    }
+}

@@ -1,130 +1,35 @@
 //! Structural invariants: single driver per net, no undriven reads, no
 //! combinational cycles. Run by `Builder::finish` on every generated design
 //! and re-run after each synthesis pass.
+//!
+//! This is the first-violation wrapper the construction paths use; the
+//! exhaustive collector (every violation, with stable `NL0xx` codes)
+//! lives in [`super::analyze::structural`] and the shared Kahn order in
+//! [`super::order`] — `validate()` and `topo_order()` delegate to them,
+//! so the builder, the optimizer, and the static analyzer agree on both
+//! the invariants and the ordering by construction.
 
 use anyhow::{bail, Result};
 
-use super::cell::Cell;
+use super::analyze::{structural, Severity};
 use super::Netlist;
 
 impl Netlist {
     /// Check structural invariants; returns the first violation found.
     pub fn validate(&self) -> Result<()> {
-        let mut driver: Vec<i64> = vec![-1; self.n_nets];
-        // Primary inputs are drivers.
-        for p in &self.inputs {
-            for &b in &p.bits {
-                if b.idx() >= self.n_nets {
-                    bail!("input {} references net {} out of range", p.name, b.0);
-                }
-                if driver[b.idx()] != -1 {
-                    bail!("input {} net {} multiply driven", p.name, b.0);
-                }
-                driver[b.idx()] = -2; // input-driven marker
-            }
+        match structural::structural(self)
+            .into_iter()
+            .find(|d| d.severity == Severity::Error)
+        {
+            Some(d) => bail!("{}", d.message),
+            None => Ok(()),
         }
-        for (ci, cell) in self.cells.iter().enumerate() {
-            for o in cell.outputs() {
-                if o.idx() >= self.n_nets {
-                    bail!("cell {ci} drives net {} out of range", o.0);
-                }
-                if driver[o.idx()] != -1 {
-                    bail!(
-                        "net {} multiply driven (cell {ci} and {})",
-                        o.0,
-                        driver[o.idx()]
-                    );
-                }
-                driver[o.idx()] = ci as i64;
-            }
-        }
-        // Every read net must be driven.
-        for (ci, cell) in self.cells.iter().enumerate() {
-            for i in cell.inputs() {
-                if i.idx() >= self.n_nets {
-                    bail!("cell {ci} reads net {} out of range", i.0);
-                }
-                if driver[i.idx()] == -1 {
-                    bail!("cell {ci} reads undriven net {}", i.0);
-                }
-            }
-        }
-        for p in self.outputs.iter().chain(&self.named) {
-            for &b in &p.bits {
-                if b.idx() >= self.n_nets || driver[b.idx()] == -1 {
-                    bail!("port {} reads undriven net {}", p.name, b.0);
-                }
-            }
-        }
-        // Combinational cycle check == topological order must exist.
-        self.topo_order()?;
-        Ok(())
     }
 
     /// Topological order of *combinational* cells (DFF outputs, constants
     /// and primary inputs are sources). Errors on combinational cycles.
     pub fn topo_order(&self) -> Result<Vec<usize>> {
-        // fanout: net -> list of comb cells reading it
-        let mut readers: Vec<Vec<u32>> = vec![Vec::new(); self.n_nets];
-        let mut indeg: Vec<u32> = vec![0; self.cells.len()];
-        let mut comb: Vec<bool> = vec![false; self.cells.len()];
-        for (ci, cell) in self.cells.iter().enumerate() {
-            if cell.is_sequential() || matches!(cell, Cell::Const { .. }) {
-                continue;
-            }
-            comb[ci] = true;
-            for i in cell.inputs() {
-                readers[i.idx()].push(ci as u32);
-            }
-        }
-        // A comb cell's indegree = number of its inputs driven by other comb
-        // cells.
-        let mut driven_by_comb: Vec<i64> = vec![-1; self.n_nets];
-        for (ci, cell) in self.cells.iter().enumerate() {
-            if comb[ci] {
-                for o in cell.outputs() {
-                    driven_by_comb[o.idx()] = ci as i64;
-                }
-            }
-        }
-        for (ci, cell) in self.cells.iter().enumerate() {
-            if !comb[ci] {
-                continue;
-            }
-            indeg[ci] = cell
-                .inputs()
-                .iter()
-                .filter(|n| driven_by_comb[n.idx()] >= 0)
-                .count() as u32;
-        }
-        let mut queue: Vec<usize> = (0..self.cells.len())
-            .filter(|&ci| comb[ci] && indeg[ci] == 0)
-            .collect();
-        let mut order = Vec::with_capacity(queue.len());
-        let mut head = 0;
-        while head < queue.len() {
-            let ci = queue[head];
-            head += 1;
-            order.push(ci);
-            for o in self.cells[ci].outputs() {
-                for &r in &readers[o.idx()] {
-                    let r = r as usize;
-                    indeg[r] -= 1;
-                    if indeg[r] == 0 {
-                        queue.push(r);
-                    }
-                }
-            }
-        }
-        let n_comb = comb.iter().filter(|&&c| c).count();
-        if order.len() != n_comb {
-            bail!(
-                "combinational cycle: {} of {} comb cells unreachable",
-                n_comb - order.len(),
-                n_comb
-            );
-        }
-        Ok(order)
+        super::order::kahn_comb_order(self)
     }
 }
 
@@ -187,5 +92,19 @@ mod tests {
         b.output("q", &q);
         let nl = b.finish();
         assert!(nl.validate().is_ok());
+    }
+
+    #[test]
+    fn validate_message_matches_the_exhaustive_collector() {
+        // The wrapper must surface the first Error-severity finding.
+        let mut nl = crate::netlist::Netlist::new("und");
+        nl.n_nets = 2;
+        nl.cells.push(Cell::Unary {
+            kind: UnaryKind::Buf,
+            a: NetId(1), // undriven
+            out: NetId(0),
+        });
+        let err = format!("{:#}", nl.validate().unwrap_err());
+        assert!(err.contains("reads undriven net 1"), "{err}");
     }
 }

@@ -242,10 +242,28 @@ impl Program {
             })
             .collect();
 
+        // Rank levelization via the shared `netlist::order::Leveler`
+        // (the same rank definition the analyzer uses): stable-sort by
+        // rank keeps the order topological, and ranks are invariant
+        // under the bijective arena remap below, so computing levels
+        // here (pre-remap) matches the final op list exactly.
         let mut fused = 0usize;
+        let mut levels: Vec<u32> = vec![0];
         if levelize {
             fused = fuse_super_ops(&mut ops, n_nets);
-            levelize_ops(&mut ops, n_nets);
+            let mut lv = crate::netlist::order::Leveler::new(n_nets);
+            for op in &ops {
+                let reads = op.reads();
+                let writes = [op.o1, op.o2];
+                let n_writes = if op.writes_two() { 2 } else { 1 };
+                lv.push(&reads[..op.n_reads()], &writes[..n_writes]);
+            }
+            let (perm, offsets) = lv.partition();
+            ops = perm.iter().map(|&i| ops[i]).collect();
+            levels = offsets;
+        } else if !ops.is_empty() {
+            // One synthetic rank containing everything.
+            levels = vec![0, ops.len() as u32];
         }
 
         // Arena remap in first-write order (identity when unlevelized).
@@ -311,7 +329,6 @@ impl Program {
             c.0 = remap[c.0 as usize];
         }
 
-        let levels = level_offsets(&ops, n_nets, levelize);
         let (reader_start, reader_ops) = fanout_csr(&ops, n_nets);
 
         Ok(Self {
@@ -447,66 +464,6 @@ fn fuse_super_ops(ops: &mut Vec<Op>, n_nets: usize) -> usize {
     fused
 }
 
-/// Stable-sort `ops` by rank (rank = 1 + max rank of read nets;
-/// sources are rank 0). Input must be topologically ordered; output
-/// still is — a producer's rank is strictly below every reader's, and
-/// stable sorting preserves the relative order within a rank.
-fn levelize_ops(ops: &mut Vec<Op>, n_nets: usize) {
-    let mut net_rank = vec![0u32; n_nets];
-    let mut op_rank = vec![0u32; ops.len()];
-    for (i, op) in ops.iter().enumerate() {
-        let mut r = 0;
-        for k in 0..op.n_reads() {
-            r = r.max(net_rank[op.reads()[k] as usize]);
-        }
-        let r = r + 1;
-        op_rank[i] = r;
-        net_rank[op.o1 as usize] = r;
-        if op.writes_two() {
-            net_rank[op.o2 as usize] = r;
-        }
-    }
-    let mut idx: Vec<usize> = (0..ops.len()).collect();
-    idx.sort_by_key(|&i| op_rank[i]); // stable
-    *ops = idx.iter().map(|&i| ops[i]).collect();
-}
-
-/// Rank offsets for the final op order: `levels[l-1]..levels[l]` spans
-/// rank `l`. Recomputed post-sort so it holds for both compile modes.
-fn level_offsets(ops: &[Op], n_nets: usize, levelize: bool) -> Vec<u32> {
-    if ops.is_empty() {
-        return vec![0];
-    }
-    if !levelize {
-        // One synthetic rank containing everything.
-        return vec![0, ops.len() as u32];
-    }
-    let mut net_rank = vec![0u32; n_nets];
-    let mut counts: Vec<u32> = Vec::new();
-    for op in ops {
-        let mut r = 0;
-        for k in 0..op.n_reads() {
-            r = r.max(net_rank[op.reads()[k] as usize]);
-        }
-        let r = r + 1;
-        net_rank[op.o1 as usize] = r;
-        if op.writes_two() {
-            net_rank[op.o2 as usize] = r;
-        }
-        if counts.len() < r as usize {
-            counts.resize(r as usize, 0);
-        }
-        counts[r as usize - 1] += 1;
-    }
-    let mut offsets = vec![0u32];
-    let mut acc = 0;
-    for c in counts {
-        acc += c;
-        offsets.push(acc);
-    }
-    offsets
-}
-
 /// Fanout CSR over the final (arena-space) op list: for each arena
 /// net, the ascending indices of ops that read it. Powers dirty-cone
 /// marking: `write(net)` marks exactly `reader_ops[start[net]..
@@ -605,7 +562,7 @@ mod tests {
     fn programs(arch: Arch, n: usize) -> (Program, Program) {
         let nl = {
             let mut nl = arch.build(n);
-            crate::synth::optimize_in_place(&mut nl);
+            crate::synth::optimize_in_place(&mut nl).unwrap();
             nl
         };
         (

@@ -9,6 +9,8 @@
 
 use std::collections::HashMap;
 
+use anyhow::{Context, Result};
+
 use crate::netlist::{BinKind, Cell, NetId, Netlist, Port, UnaryKind};
 
 /// Lattice value for a net during the pass.
@@ -312,9 +314,12 @@ impl Rewriter {
     }
 }
 
-/// One round of constant propagation + identities + CSE.
-pub fn constprop_round(nl: &Netlist) -> Netlist {
-    let order = nl.topo_order().expect("input netlist must be acyclic");
+/// One round of constant propagation + identities + CSE. Errors (rather
+/// than panicking) when the input netlist has a combinational cycle.
+pub fn constprop_round(nl: &Netlist) -> Result<Netlist> {
+    let order = nl
+        .topo_order()
+        .context("constprop requires an acyclic netlist")?;
     let mut rw = Rewriter::new(nl);
 
     // Constants first (they are not in the comb order).
@@ -407,14 +412,14 @@ pub fn constprop_round(nl: &Netlist) -> Netlist {
     let named: Vec<Port> =
         nl.named.iter().map(|p| remap_port(&mut rw, p)).collect();
 
-    Netlist {
+    Ok(Netlist {
         name: nl.name.clone(),
         n_nets: rw.n_nets,
         cells: rw.cells,
         inputs,
         outputs,
         named,
-    }
+    })
 }
 
 #[cfg(test)]
@@ -433,7 +438,7 @@ mod tests {
         let t3 = b.xor_gate(t2, x[0]); // -> !x
         b.output("y", &vec![t3]);
         let nl = b.finish();
-        let out = constprop_round(&nl);
+        let out = constprop_round(&nl).unwrap();
         // Only an INV (plus possibly const cells) should survive.
         let counts = out.cell_counts();
         assert_eq!(counts.get("INV"), 1);
@@ -450,7 +455,7 @@ mod tests {
         let o = b.or_gate(g1, g2); // -> alias of g1 after CSE
         b.output("o", &vec![o]);
         let nl = b.finish();
-        let out = constprop_round(&nl);
+        let out = constprop_round(&nl).unwrap();
         assert_eq!(out.cell_counts().get("AND2"), 1);
         assert_eq!(out.cell_counts().get("OR2"), 0);
     }
@@ -465,7 +470,7 @@ mod tests {
         b.output("s", &vec![s]);
         b.output("c", &vec![c]);
         let nl = b.finish();
-        let out = constprop_round(&nl);
+        let out = constprop_round(&nl).unwrap();
         assert_eq!(out.cell_counts().get("FA"), 0);
         assert_eq!(out.cell_counts().get("HA"), 1);
     }

@@ -30,6 +30,8 @@
 
 use std::collections::{HashMap, VecDeque};
 
+use anyhow::{Context, Result};
+
 use crate::netlist::{BinKind, Cell, NetId, Netlist, Port, UnaryKind};
 
 use super::dce;
@@ -871,21 +873,28 @@ impl Opt {
 /// Optimize a netlist in place; returns the applied-rewrite statistics.
 /// `stats.rewrites == 0` means the input was already at fixpoint and the
 /// netlist is unchanged up to net-id compaction.
-pub fn optimize_in_place(nl: &mut Netlist) -> OptStats {
+///
+/// Errors — rather than panicking — when the input has a combinational
+/// cycle or the rebuilt netlist fails structural validation, so callers
+/// (the design store, the CLI) surface a descriptive message instead of
+/// aborting the process. On error the netlist may be partially rewritten
+/// and must be discarded.
+pub fn optimize_in_place(nl: &mut Netlist) -> Result<OptStats> {
     let cells_pre = nl.n_cells();
     let order = nl
         .topo_order()
-        .expect("optimize requires an acyclic netlist");
+        .context("optimize requires an acyclic netlist")?;
     let mut opt = Opt::new(nl);
     opt.run(&order);
     let rewrites = opt.rewrites;
     opt.rebuild(nl);
-    nl.validate().expect("optimize produced invalid netlist");
-    OptStats {
+    nl.validate()
+        .context("optimize produced an invalid netlist")?;
+    Ok(OptStats {
         rewrites,
         cells_pre,
         cells_post: nl.n_cells(),
-    }
+    })
 }
 
 #[cfg(test)]
@@ -905,7 +914,7 @@ mod tests {
         let t3 = b.xor_gate(t2, x[0]); // -> !x
         b.output("y", &vec![t3]);
         let mut nl = b.finish();
-        let stats = optimize_in_place(&mut nl);
+        let stats = optimize_in_place(&mut nl).unwrap();
         assert!(stats.rewrites > 0);
         let counts = nl.cell_counts();
         assert_eq!(counts.get("INV"), 1);
@@ -925,7 +934,7 @@ mod tests {
         let o = b.or_gate(g1, g2);
         b.output("o", &vec![o]);
         let mut nl = b.finish();
-        optimize_in_place(&mut nl);
+        optimize_in_place(&mut nl).unwrap();
         assert_eq!(nl.cell_counts().get("AND2"), 1, "duplicates merged");
         assert_eq!(nl.cell_counts().get("OR2"), 0, "or(x,x) aliased");
         assert_eq!(nl.cell_counts().get("BUF"), 0);
@@ -939,9 +948,9 @@ mod tests {
         let s = b.add(&x, &y);
         b.output("s", &s);
         let mut nl = b.finish();
-        optimize_in_place(&mut nl);
+        optimize_in_place(&mut nl).unwrap();
         let snapshot = nl.clone();
-        let stats = optimize_in_place(&mut nl);
+        let stats = optimize_in_place(&mut nl).unwrap();
         assert_eq!(stats.rewrites, 0, "already at fixpoint");
         assert_eq!(nl, snapshot, "fixpoint run must be a no-op");
     }
@@ -959,7 +968,7 @@ mod tests {
         b.output("q", &q);
         let nl = b.finish();
         let mut opt = nl.clone();
-        optimize_in_place(&mut opt);
+        optimize_in_place(&mut opt).unwrap();
         assert!(opt.n_cells() < nl.n_cells());
         let mut s1 = Simulator::new(&nl).unwrap();
         let mut s2 = Simulator::new(&opt).unwrap();

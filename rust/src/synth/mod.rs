@@ -33,14 +33,17 @@ pub use dce::dce;
 pub use inplace::{optimize_in_place, OptStats};
 pub use report::{report_for, synthesize, SynthReport};
 
+use anyhow::{Context, Result};
+
 use crate::netlist::Netlist;
 
 /// Optimize a netlist (in-place worklist engine; see [`optimize_in_place`]
 /// for the variant that mutates its argument and reports statistics).
-pub fn optimize(nl: &Netlist) -> Netlist {
+/// Errors on cyclic or structurally invalid input instead of panicking.
+pub fn optimize(nl: &Netlist) -> Result<Netlist> {
     let mut out = nl.clone();
-    optimize_in_place(&mut out);
-    out
+    optimize_in_place(&mut out)?;
+    Ok(out)
 }
 
 /// Legacy clone-per-round pipeline: run [`constprop_round`] + [`dce`] to
@@ -51,10 +54,10 @@ pub fn optimize(nl: &Netlist) -> Netlist {
 /// The fixpoint check compares netlists *structurally* — the seed
 /// terminated on `n_cells()` equality, which can declare convergence
 /// while a round rewrote structure without changing the cell count.
-pub fn optimize_rounds(nl: &Netlist) -> Netlist {
-    let mut cur = dce(&constprop_round(nl));
+pub fn optimize_rounds(nl: &Netlist) -> Result<Netlist> {
+    let mut cur = dce(&constprop_round(nl)?);
     for _ in 0..16 {
-        let next = dce(&constprop_round(&cur));
+        let next = dce(&constprop_round(&cur)?);
         let done = next == cur;
         cur = next;
         if done {
@@ -62,8 +65,8 @@ pub fn optimize_rounds(nl: &Netlist) -> Netlist {
         }
     }
     cur.validate()
-        .expect("optimize_rounds produced invalid netlist");
-    cur
+        .context("optimize_rounds produced an invalid netlist")?;
+    Ok(cur)
 }
 
 #[cfg(test)]
@@ -87,7 +90,7 @@ mod tests {
         let q = b.dff_bus(&t3, None, None);
         b.output("q", &q);
         let nl = b.finish();
-        let opt = optimize(&nl);
+        let opt = optimize(&nl).unwrap();
         assert!(opt.n_cells() <= nl.n_cells());
 
         let mut s1 = Simulator::new(&nl).unwrap();
@@ -119,7 +122,7 @@ mod tests {
         let out = b.mux_n(&sel, &choices);
         b.output("out", &out);
         let nl = b.finish();
-        let opt = optimize(&nl);
+        let opt = optimize(&nl).unwrap();
         assert!(
             opt.n_cells() < nl.n_cells() / 2,
             "constant folding should remove most of the tree: {} -> {}",
@@ -151,7 +154,7 @@ mod tests {
         let nl = b.finish();
         assert_eq!(nl.n_cells(), 2, "mux + const cell");
         let mut opt = nl.clone();
-        let stats = optimize_in_place(&mut opt);
+        let stats = optimize_in_place(&mut opt).unwrap();
         assert!(stats.rewrites > 0, "structure changed");
         assert_eq!(
             opt.n_cells(),
@@ -161,12 +164,12 @@ mod tests {
         );
         // True fixpoint: a second run applies nothing and changes nothing.
         let snapshot = opt.clone();
-        let stats2 = optimize_in_place(&mut opt);
+        let stats2 = optimize_in_place(&mut opt).unwrap();
         assert_eq!(stats2.rewrites, 0);
         assert_eq!(opt, snapshot);
         // And the legacy pipeline (with the structural-equality fix)
         // agrees behaviourally.
-        let legacy = optimize_rounds(&nl);
+        let legacy = optimize_rounds(&nl).unwrap();
         let mut s1 = Simulator::new(&opt).unwrap();
         let mut s2 = Simulator::new(&legacy).unwrap();
         for sv in [0u64, 1] {

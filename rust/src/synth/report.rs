@@ -55,7 +55,7 @@ pub fn report_for(
 /// artifact from [`crate::design::DesignStore`] instead.
 pub fn synthesize(nl: &Netlist, lib: &TechLibrary) -> Result<SynthReport> {
     let mut opt = nl.clone();
-    let stats = optimize_in_place(&mut opt);
+    let stats = optimize_in_place(&mut opt)?;
     report_for(&opt, lib, stats)
 }
 

@@ -10,6 +10,9 @@ use nibblemul::coordinator::{Sim64Backend, SimBackend};
 use nibblemul::design::{artifact, CompiledDesign, DesignKey, DesignStore};
 use nibblemul::fabric::{evaluate_arch, VectorUnit};
 use nibblemul::multipliers::Arch;
+use nibblemul::netlist::Cell;
+use nibblemul::sim::Program;
+use nibblemul::synth::{optimize_in_place, report_for};
 use nibblemul::tech::TechLibrary;
 
 /// A unique scratch directory for artifact-cache tests.
@@ -164,6 +167,64 @@ fn corrupt_or_truncated_artifacts_fall_back_to_resynthesis() {
     let s4 = DesignStore::with_cache_dir(&dir);
     s4.get(key.arch, key.n).unwrap();
     assert_eq!((s4.builds(), s4.warm_loads()), (0, 1));
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn tampered_artifact_fails_the_lint_gate_and_heals() {
+    let dir = scratch_dir("lint-tamper");
+    let key = DesignKey {
+        arch: Arch::Wallace,
+        n: 2,
+    };
+    let lib = TechLibrary::hpc28();
+
+    // Author an *internally consistent* artifact around a netlist with
+    // one flipped adder: its checksum, report scalars and levelized
+    // program section are all recomputed from the tampered netlist, so
+    // every byte-level integrity check passes and only the static-
+    // analysis gate (SEC against a fresh generator build) can refuse it.
+    let raw = Arch::Wallace.try_build(key.n).unwrap();
+    let mut tampered = raw.clone();
+    let stats = optimize_in_place(&mut tampered).unwrap();
+    let adder = tampered
+        .cells
+        .iter_mut()
+        .find_map(|c| match c {
+            Cell::HalfAdder { sum, carry, .. }
+            | Cell::FullAdder { sum, carry, .. } => Some((sum, carry)),
+            _ => None,
+        })
+        .expect("a multiplier has adders");
+    std::mem::swap(adder.0, adder.1);
+    let report = report_for(&tampered, &lib, stats).unwrap();
+    let program = Arc::new(Program::compile(&tampered).unwrap());
+    let forged = CompiledDesign {
+        key,
+        netlist: tampered,
+        program,
+        report: Some(report),
+    };
+    artifact::save(&dir, &forged).unwrap();
+
+    // A direct load surfaces the gate's descriptive refusal.
+    let err = artifact::load(&dir, key, &lib).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("static-analysis gate"), "{msg}");
+    assert!(msg.contains("NE001"), "{msg}");
+
+    // The store downgrades to warn + cold rebuild and never serves the
+    // forged netlist...
+    let store = DesignStore::with_cache_dir(&dir);
+    let d = store.get(key.arch, key.n).unwrap();
+    assert_eq!((store.builds(), store.warm_loads()), (1, 0));
+    assert_ne!(d.netlist, forged.netlist, "forged netlist must not serve");
+
+    // ...and the rebuild re-persisted a clean artifact that warm-loads.
+    let healed = DesignStore::with_cache_dir(&dir);
+    healed.get(key.arch, key.n).unwrap();
+    assert_eq!((healed.builds(), healed.warm_loads()), (0, 1));
 
     let _ = std::fs::remove_dir_all(&dir);
 }

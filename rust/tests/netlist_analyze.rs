@@ -1,0 +1,513 @@
+//! Golden diagnostics for the static-analysis subsystem: one test per
+//! lint code (`NL001..NE003`) on a netlist hand-built to contain exactly
+//! that defect, plus the positive direction — every architecture's
+//! datapath contracts must be *proven* (not merely unviolated) on its
+//! optimized netlist, and the build gate must accept every real design.
+
+use nibblemul::multipliers::Arch;
+use nibblemul::netlist::analyze::{
+    analyze, counters, gate, AnalyzeSpec, Code, Deny, Severity, SupportMatrix,
+};
+use nibblemul::netlist::{BinKind, Builder, Cell, NetId, Netlist, Port};
+use nibblemul::synth::optimize;
+
+fn port(name: &str, bits: Vec<NetId>) -> Port {
+    Port {
+        name: name.into(),
+        bits,
+    }
+}
+
+/// Analyze with no architecture contract and no SEC reference.
+fn plain(nl: &Netlist) -> nibblemul::netlist::analyze::AnalysisReport {
+    analyze(nl, &AnalyzeSpec::default())
+}
+
+/// Flip the function of the first adder or binary gate — a
+/// behavior-changing, structurally valid corruption.
+fn tamper(nl: &mut Netlist) {
+    for c in nl.cells.iter_mut() {
+        match c {
+            Cell::HalfAdder { sum, carry, .. }
+            | Cell::FullAdder { sum, carry, .. } => {
+                std::mem::swap(sum, carry);
+                return;
+            }
+            Cell::Binary { kind, .. } => {
+                *kind = match *kind {
+                    BinKind::And => BinKind::Or,
+                    BinKind::Or => BinKind::And,
+                    BinKind::Xor => BinKind::Xnor,
+                    BinKind::Xnor => BinKind::Xor,
+                    BinKind::Nand => BinKind::Nor,
+                    BinKind::Nor => BinKind::Nand,
+                };
+                return;
+            }
+            _ => {}
+        }
+    }
+    panic!("netlist has no gate to tamper with");
+}
+
+#[test]
+fn nl001_out_of_range_reference() {
+    let nl = Netlist {
+        name: "nl001".into(),
+        n_nets: 2,
+        cells: vec![Cell::Binary {
+            kind: BinKind::And,
+            a: NetId(0),
+            b: NetId(9),
+            out: NetId(1),
+        }],
+        inputs: vec![port("x", vec![NetId(0)])],
+        outputs: vec![port("o", vec![NetId(1)])],
+        named: vec![],
+    };
+    let r = plain(&nl);
+    assert!(r.has(Code::NL001), "{}", r.render_text());
+    assert!(r.errors() > 0);
+}
+
+#[test]
+fn nl002_multiple_drivers() {
+    let nl = Netlist {
+        name: "nl002".into(),
+        n_nets: 2,
+        cells: vec![
+            Cell::Const {
+                value: false,
+                out: NetId(1),
+            },
+            Cell::Const {
+                value: true,
+                out: NetId(1),
+            },
+        ],
+        inputs: vec![port("x", vec![NetId(0)])],
+        outputs: vec![port("o", vec![NetId(1)])],
+        named: vec![],
+    };
+    let r = plain(&nl);
+    assert!(r.has(Code::NL002), "{}", r.render_text());
+}
+
+#[test]
+fn nl003_undriven_cell_read() {
+    let nl = Netlist {
+        name: "nl003".into(),
+        n_nets: 3,
+        cells: vec![Cell::Binary {
+            kind: BinKind::And,
+            a: NetId(0),
+            b: NetId(1),
+            out: NetId(2),
+        }],
+        inputs: vec![port("x", vec![NetId(0)])],
+        outputs: vec![port("o", vec![NetId(2)])],
+        named: vec![],
+    };
+    let r = plain(&nl);
+    assert!(r.has(Code::NL003), "{}", r.render_text());
+}
+
+#[test]
+fn nl004_undriven_port_bit() {
+    let nl = Netlist {
+        name: "nl004".into(),
+        n_nets: 2,
+        cells: vec![],
+        inputs: vec![port("x", vec![NetId(0)])],
+        outputs: vec![port("o", vec![NetId(1)])],
+        named: vec![],
+    };
+    let r = plain(&nl);
+    assert!(r.has(Code::NL004), "{}", r.render_text());
+}
+
+#[test]
+fn nl005_combinational_cycle() {
+    let nl = Netlist {
+        name: "nl005".into(),
+        n_nets: 3,
+        cells: vec![
+            Cell::Binary {
+                kind: BinKind::And,
+                a: NetId(0),
+                b: NetId(2),
+                out: NetId(1),
+            },
+            Cell::Unary {
+                kind: nibblemul::netlist::UnaryKind::Not,
+                a: NetId(1),
+                out: NetId(2),
+            },
+        ],
+        inputs: vec![port("x", vec![NetId(0)])],
+        outputs: vec![port("o", vec![NetId(1)])],
+        named: vec![],
+    };
+    let r = plain(&nl);
+    assert!(r.has(Code::NL005), "{}", r.render_text());
+    // Structural errors stop the deeper passes.
+    assert_eq!(r.passes, vec!["structural"]);
+}
+
+#[test]
+fn nl006_unobservable_logic_warns() {
+    let mut b = Builder::new("nl006");
+    let x = b.input("x", 1);
+    let y = b.input("y", 1);
+    let g = b.and_gate(x[0], y[0]);
+    let _dead = b.or_gate(x[0], y[0]); // drives no port
+    b.output("o", &vec![g]);
+    let r = plain(&b.finish());
+    assert_eq!(r.errors(), 0, "{}", r.render_text());
+    assert_eq!(r.count(Code::NL006), 1);
+    let d = r.diags.iter().find(|d| d.code == Code::NL006).unwrap();
+    assert_eq!(d.severity, Severity::Warn);
+}
+
+#[test]
+fn nx001_missed_constant_fold_warns() {
+    let mut b = Builder::new("nx001");
+    let x = b.input("x", 1);
+    let zero = b.zero();
+    let t = b.and_gate(x[0], zero); // ternary-constant 0, yet a gate
+    b.output("o", &vec![t]);
+    let r = plain(&b.finish());
+    assert_eq!(r.errors(), 0, "{}", r.render_text());
+    assert!(r.has(Code::NX001));
+    // ...and the optimizer's own output must never trigger it.
+    let opt = optimize(&Arch::Wallace.try_build(1).unwrap()).unwrap();
+    let r = plain(&opt);
+    assert!(!r.has(Code::NX001), "{}", r.render_text());
+}
+
+#[test]
+fn nx002_stuck_output_and_nx003_stuck_internal() {
+    let mut b = Builder::new("nx00x");
+    // q holds its power-on 0 forever (d = q feedback).
+    let (q, d) = b.dff_bus_feedback(1, None, None);
+    b.drive(&d, &q);
+    let inv = b.not_gate(q[0]); // stuck at 1, exported
+    b.output("o", &vec![inv]);
+    let r = plain(&b.finish());
+    assert!(r.has(Code::NX002), "{}", r.render_text());
+    assert!(r.has(Code::NX003), "internal stuck q: {}", r.render_text());
+    let nx2 = r.diags.iter().find(|d| d.code == Code::NX002).unwrap();
+    assert_eq!(nx2.severity, Severity::Warn);
+}
+
+#[test]
+fn nx002_expected_high_product_bits_downgrade_to_info() {
+    // 16-bit "r" whose top nibble is register-stuck at 0 — exactly what
+    // the W4 (Nibble4) product range 8+b_bits..16 legitimately does.
+    let build = || {
+        let mut b = Builder::new("nx002i");
+        let lo = b.input("r_lo", 12);
+        let (q, d) = b.dff_bus_feedback(4, None, None);
+        b.drive(&d, &q);
+        let mut r = lo.clone();
+        r.extend_from_slice(&q);
+        b.output("r", &r);
+        b.finish()
+    };
+    let spec = AnalyzeSpec {
+        arch: Some(Arch::Nibble4),
+        n: 1,
+        ..Default::default()
+    };
+    let with_arch = analyze(&build(), &spec);
+    let infos: Vec<_> = with_arch
+        .diags
+        .iter()
+        .filter(|d| d.code == Code::NX002)
+        .collect();
+    assert_eq!(infos.len(), 4, "{}", with_arch.render_text());
+    assert!(infos.iter().all(|d| d.severity == Severity::Info));
+    // Without the architecture context the same bits are suspicious.
+    let without = plain(&build());
+    assert!(without
+        .diags
+        .iter()
+        .filter(|d| d.code == Code::NX002)
+        .all(|d| d.severity == Severity::Warn));
+}
+
+#[test]
+fn nc001_foreign_design_violates_the_w4_contract() {
+    // A full 8x8 design analyzed under the Nibble4 contract must trip
+    // the b[4..8] independence proof everywhere.
+    let opt = optimize(&Arch::NibbleUnrolled.try_build(1).unwrap()).unwrap();
+    let spec = AnalyzeSpec {
+        arch: Some(Arch::Nibble4),
+        n: 1,
+        ..Default::default()
+    };
+    let r = analyze(&opt, &spec);
+    assert!(r.has(Code::NC001), "{}", r.render_text());
+    assert!(!r.proves("independent of b[4..8]"));
+}
+
+#[test]
+fn nc002_nc003_position_bounds_catch_a_free_form_datapath() {
+    // ShiftAdd accumulates right-shifted partial sums: every product bit
+    // depends on high operand bits, far above Wallace's j <= i bound.
+    let opt = optimize(&Arch::ShiftAdd.try_build(1).unwrap()).unwrap();
+    let spec = AnalyzeSpec {
+        arch: Some(Arch::Wallace),
+        n: 1,
+        ..Default::default()
+    };
+    let r = analyze(&opt, &spec);
+    assert!(r.has(Code::NC002), "{}", r.render_text());
+    assert!(r.has(Code::NC003), "{}", r.render_text());
+}
+
+#[test]
+fn nc004_shared_datapath_fails_a_replicated_contract() {
+    // The paper's logic-reuse design muxes all elements through one
+    // datapath; under a replicated-unit contract that reads as element
+    // leakage.
+    let opt = optimize(&Arch::Nibble.try_build(2).unwrap()).unwrap();
+    let spec = AnalyzeSpec {
+        arch: Some(Arch::Wallace),
+        n: 2,
+        ..Default::default()
+    };
+    let r = analyze(&opt, &spec);
+    assert!(r.has(Code::NC004), "{}", r.render_text());
+}
+
+#[test]
+fn nc005_severed_min_cone_is_reported_and_capped() {
+    // A "multiplier" whose r is tied to 0 misses every required
+    // single-partial-product dependency.
+    let mut b = Builder::new("nc005");
+    let _a = b.input("a", 8);
+    let _bb = b.input("b", 8);
+    let start = b.input("start", 1);
+    let zero = b.zero();
+    b.output("r", &vec![zero; 16]);
+    let done = b.not_gate(start[0]);
+    b.output("done", &vec![done]);
+    let spec = AnalyzeSpec {
+        arch: Some(Arch::Wallace),
+        n: 1,
+        ..Default::default()
+    };
+    let r = analyze(&b.finish(), &spec);
+    // 8 capped diagnostics plus the "... and N more" summary.
+    assert_eq!(r.count(Code::NC005), 9, "{}", r.render_text());
+    assert!(r.proves("control isolation"), "{}", r.render_text());
+}
+
+#[test]
+fn nc006_missing_phase_anchor_is_an_error() {
+    let mut opt = optimize(&Arch::Nibble.try_build(1).unwrap()).unwrap();
+    opt.named.retain(|p| p.name != "breg");
+    let spec = AnalyzeSpec {
+        arch: Some(Arch::Nibble),
+        n: 1,
+        ..Default::default()
+    };
+    let r = analyze(&opt, &spec);
+    assert!(r.has(Code::NC006), "{}", r.render_text());
+    assert!(!r.proves("phase-0 cone"));
+}
+
+#[test]
+fn nc007_port_shape_mismatch() {
+    let opt = optimize(&Arch::Wallace.try_build(2).unwrap()).unwrap();
+    let spec = AnalyzeSpec {
+        arch: Some(Arch::Wallace),
+        n: 4, // the netlist is x2
+        ..Default::default()
+    };
+    let r = analyze(&opt, &spec);
+    assert!(r.has(Code::NC007), "{}", r.render_text());
+}
+
+#[test]
+fn nc008_done_severed_from_start() {
+    let mut b = Builder::new("nc008");
+    let _a = b.input("a", 8);
+    let _bb = b.input("b", 8);
+    let _start = b.input("start", 1);
+    let zero = b.zero();
+    let one = b.one();
+    b.output("r", &vec![zero; 16]);
+    b.output("done", &vec![one]); // constant done: start unreachable
+    let spec = AnalyzeSpec {
+        arch: Some(Arch::Wallace),
+        n: 1,
+        ..Default::default()
+    };
+    let r = analyze(&b.finish(), &spec);
+    assert!(r.has(Code::NC008), "{}", r.render_text());
+}
+
+#[test]
+fn ne001_tampered_logic_diverges_and_the_gate_rejects_it() {
+    let raw = Arch::Wallace.try_build(1).unwrap();
+    let mut opt = optimize(&raw).unwrap();
+    tamper(&mut opt);
+    let spec = AnalyzeSpec {
+        arch: Some(Arch::Wallace),
+        n: 1,
+        raw: Some(&raw),
+        ..Default::default()
+    };
+    let r = analyze(&opt, &spec);
+    assert!(r.has(Code::NE001), "{}", r.render_text());
+    assert!(!r.proves("signature equivalence"));
+    // The build gate refuses with a descriptive error, not a panic.
+    let err = gate(Arch::Wallace, 1, &raw, &opt).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("static analysis rejected"), "{msg}");
+    assert!(msg.contains("NE001"), "{msg}");
+}
+
+#[test]
+fn ne002_reference_port_contract_mismatch() {
+    let raw_x2 = Arch::Wallace.try_build(2).unwrap();
+    let opt_x1 = optimize(&Arch::Wallace.try_build(1).unwrap()).unwrap();
+    let spec = AnalyzeSpec {
+        arch: Some(Arch::Wallace),
+        n: 1,
+        raw: Some(&raw_x2),
+        ..Default::default()
+    };
+    let r = analyze(&opt_x1, &spec);
+    assert!(r.has(Code::NE002), "{}", r.render_text());
+}
+
+#[test]
+fn ne003_duplicate_logic_shares_a_signature() {
+    let mut b = Builder::new("ne003");
+    let x = b.input("x", 1);
+    let y = b.input("y", 1);
+    let g1 = b.and_gate(x[0], y[0]);
+    let g2 = b.and_gate(x[0], y[0]); // structural duplicate, no CSE yet
+    b.output("o1", &vec![g1]);
+    b.output("o2", &vec![g2]);
+    let nl = b.finish();
+    let spec = AnalyzeSpec {
+        raw: Some(&nl),
+        ..Default::default()
+    };
+    let r = analyze(&nl, &spec);
+    assert_eq!(r.errors(), 0, "{}", r.render_text());
+    assert!(r.has(Code::NE003), "{}", r.render_text());
+    assert!(r.sec_classes.unwrap() < nl.n_nets);
+}
+
+/// The positive direction of the whole subsystem: every architecture at
+/// the paper's widths passes the full gate with zero errors *and* zero
+/// warnings, and the contract statements are affirmatively proven.
+#[test]
+fn contracts_proven_on_every_architecture() {
+    for arch in Arch::ALL {
+        for n in [1usize, 8] {
+            let raw = arch.try_build(n).unwrap();
+            let opt = optimize(&raw).unwrap();
+            let r = gate(arch, n, &raw, &opt)
+                .unwrap_or_else(|e| panic!("{arch}x{n}: {e:#}"));
+            assert_eq!(r.warnings(), 0, "{arch}x{n}:\n{}", r.render_text());
+            assert!(r.proves("min-cone completeness"), "{arch}x{n}");
+            assert!(r.proves("signature equivalence"), "{arch}x{n}");
+            match arch {
+                Arch::Nibble4 => {
+                    assert!(r.proves("independent of b[4..8]"), "{arch}x{n}")
+                }
+                Arch::Nibble | Arch::NibbleCsd => {
+                    assert!(r.proves("phase-0 cone"), "{arch}x{n}")
+                }
+                Arch::ShiftAdd
+                | Arch::Booth
+                | Arch::Wallace
+                | Arch::Array
+                | Arch::LutArray => {
+                    assert!(r.proves("element isolation"), "{arch}x{n}")
+                }
+                Arch::NibbleUnrolled => {}
+            }
+            if !matches!(arch, Arch::ShiftAdd | Arch::Booth) {
+                assert!(r.proves("carries strictly upward"), "{arch}x{n}");
+            }
+        }
+    }
+}
+
+#[test]
+fn width_64_designs_lint_clean() {
+    for arch in [Arch::Nibble, Arch::Nibble4, Arch::Wallace] {
+        let raw = arch.try_build(64).unwrap();
+        let opt = optimize(&raw).unwrap();
+        let r = gate(arch, 64, &raw, &opt)
+            .unwrap_or_else(|e| panic!("{arch}x64: {e:#}"));
+        assert_eq!(r.warnings(), 0, "{arch}x64:\n{}", r.render_text());
+        assert_eq!(r.fatal_count(Deny::Warn), 0);
+    }
+}
+
+/// The Nibble4 independence contract, checked directly against the
+/// support matrix rather than through the diagnostic plumbing.
+#[test]
+fn nibble4_product_support_never_reaches_the_high_broadcast_nibble() {
+    let opt = optimize(&Arch::Nibble4.try_build(2).unwrap()).unwrap();
+    let order = opt.topo_order().unwrap();
+    let sup = SupportMatrix::build(&opt, &order);
+    let r = opt.output("r").unwrap();
+    for (i, &bit) in r.bits.iter().enumerate() {
+        for k in 4..8 {
+            let b_hi = sup.input_bit("b", k).unwrap();
+            assert!(
+                !sup.contains(bit, b_hi),
+                "r[{i}] depends on b[{k}] — W4 contract broken"
+            );
+        }
+    }
+}
+
+#[test]
+fn deny_threshold_and_renderers() {
+    assert_eq!(Deny::parse("warn").unwrap(), Deny::Warn);
+    assert_eq!(Deny::parse("error").unwrap(), Deny::Error);
+    assert!(Deny::parse("loud").is_err());
+
+    // A netlist with one Warn finding: fatal under warn, clean under
+    // error.
+    let mut b = Builder::new("deny");
+    let x = b.input("x", 1);
+    let y = b.input("y", 1);
+    let g = b.and_gate(x[0], y[0]);
+    let _dead = b.or_gate(x[0], y[0]);
+    b.output("o", &vec![g]);
+    let r = plain(&b.finish());
+    assert_eq!(r.fatal_count(Deny::Error), 0);
+    assert_eq!(r.fatal_count(Deny::Warn), 1);
+
+    let text = r.render_text();
+    assert!(text.contains("== lint deny =="), "{text}");
+    assert!(text.contains("OK (0 errors, 1 warnings"), "{text}");
+    let json = r.render_json();
+    assert!(json.contains("\"design\":\"deny\""), "{json}");
+    assert!(json.contains("\"code\":\"NL006\""), "{json}");
+    assert!(json.contains("\"errors\":0"), "{json}");
+}
+
+#[test]
+fn analysis_counters_are_monotonic_and_count_rejects() {
+    let (runs0, findings0, rejects0) = counters();
+    let raw = Arch::Array.try_build(1).unwrap();
+    let mut opt = optimize(&raw).unwrap();
+    tamper(&mut opt);
+    assert!(gate(Arch::Array, 1, &raw, &opt).is_err());
+    let (runs1, findings1, rejects1) = counters();
+    assert!(runs1 > runs0);
+    assert!(findings1 > findings0);
+    assert!(rejects1 > rejects0);
+}

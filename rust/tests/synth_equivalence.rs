@@ -11,8 +11,8 @@ use nibblemul::util::Xoshiro256;
 fn optimization_preserves_every_architecture() {
     for arch in Arch::ALL {
         let raw_unit = VectorUnit::new_raw(arch, 4);
-        let opt_unit =
-            VectorUnit::from_netlist(arch, 4, optimize(raw_unit.netlist()));
+        let opt_netlist = optimize(raw_unit.netlist()).unwrap();
+        let opt_unit = VectorUnit::from_netlist(arch, 4, opt_netlist);
         assert!(
             opt_unit.netlist().n_cells() <= raw_unit.netlist().n_cells(),
             "{arch}: optimization must not grow the netlist"
@@ -35,7 +35,7 @@ fn optimization_preserves_every_architecture() {
 fn optimization_shrinks_constant_heavy_designs() {
     // The LUT-array's constant tables must fold substantially.
     let raw = Arch::LutArray.build(4);
-    let opt = optimize(&raw);
+    let opt = optimize(&raw).unwrap();
     assert!(
         (opt.n_cells() as f64) < 0.7 * raw.n_cells() as f64,
         "LUT constant folding too weak: {} -> {}",
@@ -49,7 +49,7 @@ fn all_optimized_designs_meet_1ghz() {
     let lib = TechLibrary::hpc28();
     for arch in Arch::ALL {
         for n in [4usize, 16] {
-            let nl = optimize(&arch.build(n));
+            let nl = optimize(&arch.build(n)).unwrap();
             let rep = sta(&nl, &lib).unwrap();
             assert!(
                 rep.meets_1ghz,
@@ -63,7 +63,7 @@ fn all_optimized_designs_meet_1ghz() {
 #[test]
 fn optimized_netlists_validate() {
     for arch in Arch::ALL {
-        let nl = optimize(&arch.build(8));
+        let nl = optimize(&arch.build(8)).unwrap();
         nl.validate().unwrap_or_else(|e| {
             panic!("{arch}: invalid after optimization: {e}")
         });

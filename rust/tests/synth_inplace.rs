@@ -17,10 +17,10 @@ fn inplace_matches_clone_pipeline_on_every_arch() {
     for arch in Arch::ALL {
         for n in WIDTHS {
             let raw = arch.build(n);
-            let inplace =
-                VectorUnit::from_netlist(arch, n, optimize(&raw));
-            let legacy =
-                VectorUnit::from_netlist(arch, n, optimize_rounds(&raw));
+            let opt_new = optimize(&raw).unwrap();
+            let opt_old = optimize_rounds(&raw).unwrap();
+            let inplace = VectorUnit::from_netlist(arch, n, opt_new);
+            let legacy = VectorUnit::from_netlist(arch, n, opt_old);
             let raw_unit = VectorUnit::from_netlist(arch, n, raw);
 
             let mut sim_raw = raw_unit.simulator().unwrap();
@@ -56,8 +56,8 @@ fn inplace_optimizes_at_least_as_hard_as_clone_pipeline() {
     for arch in Arch::ALL {
         for n in WIDTHS {
             let raw = arch.build(n);
-            let a = optimize(&raw).n_cells();
-            let b = optimize_rounds(&raw).n_cells();
+            let a = optimize(&raw).unwrap().n_cells();
+            let b = optimize_rounds(&raw).unwrap().n_cells();
             assert!(
                 a <= b,
                 "{arch} x{n}: in-place left {a} cells vs {b} from the \
@@ -72,9 +72,9 @@ fn optimize_is_idempotent() {
     for arch in Arch::ALL {
         for n in WIDTHS {
             let mut nl = arch.build(n);
-            optimize_in_place(&mut nl);
+            optimize_in_place(&mut nl).unwrap();
             let once = nl.clone();
-            let stats = optimize_in_place(&mut nl);
+            let stats = optimize_in_place(&mut nl).unwrap();
             assert_eq!(
                 stats.rewrites, 0,
                 "{arch} x{n}: fixpoint output must need zero rewrites"
@@ -92,7 +92,7 @@ fn rewrite_counter_reflects_real_work() {
     for arch in Arch::ALL {
         let mut nl = arch.build(4);
         let pre = nl.n_cells();
-        let stats = optimize_in_place(&mut nl);
+        let stats = optimize_in_place(&mut nl).unwrap();
         assert_eq!(stats.cells_pre, pre);
         assert_eq!(stats.cells_post, nl.n_cells());
         assert!(
