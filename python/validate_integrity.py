@@ -1,0 +1,246 @@
+#!/usr/bin/env python3
+"""Differential validation of the runtime arithmetic-integrity layer.
+
+Mirrors `rust/src/integrity/mod.rs` (mod-15 residue algebra) and the
+shard health state machine of `rust/src/coordinator/shard.rs`, without
+a Rust toolchain in the loop:
+
+  1. RESIDUE MATH — the base-16 digit-sum fold must equal brute-force
+     `% 15` exhaustively over u16, over every 8x8-bit product, over the
+     INT4 operand class, and over randomized u32 values.
+  2. DIGEST ALGEBRA — the one-byte job digest (sum of per-element
+     product residues, mod 15) must equal the operand-side fold, and
+     any single-bit flip in any one product must change it.
+  3. HEALTH FSM — a line-by-line port of the router's
+     healthy/suspect/quarantined/probation machine walks the pinned
+     scenario from the Rust unit test, then randomized event streams
+     are checked against the reachable-transition invariants.
+
+Run: python3 python/validate_integrity.py [n_cases]
+"""
+
+import random
+import sys
+
+
+# --- 1. residue math (port of integrity::res15_u32 and friends) -----
+
+def res15(x):
+    """Mod-15 residue by repeated base-16 digit summing (no division)."""
+    while x > 0xF:
+        s = 0
+        while x > 0:
+            s += x & 0xF
+            x >>= 4
+        x = s
+    return 0 if x == 15 else x
+
+
+def expected_residue(a, b):
+    return res15(res15(a) * res15(b))
+
+
+def job_residue(a_vec, b):
+    rb = res15(b)
+    return res15(sum(res15(res15(ai) * rb) for ai in a_vec))
+
+
+def products_residue(products):
+    return res15(sum(res15(p) for p in products))
+
+
+def check_residue_math(n_cases):
+    for x in range(1 << 16):
+        assert res15(x) == x % 15, f"res15({x})"
+    for a in range(256):
+        for b in range(256):
+            p = a * b
+            assert res15(p) == p % 15
+            assert expected_residue(a, b) == p % 15, f"{a}x{b}"
+    for a in range(16):
+        for b in range(16):
+            assert expected_residue(a, b) == (a * b) % 15
+    rng = random.Random(0xC0DE)
+    for _ in range(n_cases):
+        x = rng.getrandbits(32)
+        assert res15(x) == x % 15, f"res15({x:#x})"
+    print("residue math ok (u16 exhaustive, 8x8 + int4 products, "
+          f"{n_cases} random u32)")
+
+
+def check_digest_algebra(n_cases):
+    rng = random.Random(0xD16E57)
+    for _ in range(n_cases):
+        n = rng.randrange(1, 17)
+        a_vec = [rng.randrange(256) for _ in range(n)]
+        b = rng.randrange(256)
+        products = [ai * b for ai in a_vec]
+        want = job_residue(a_vec, b)
+        assert want == products_residue(products)
+        # Single-bit product faults always move the digest: the faulty
+        # element's residue changes by +-2^k mod 15 (never 0) and the
+        # other summands are untouched.
+        lane = rng.randrange(n)
+        bit = rng.randrange(16)
+        bad = list(products)
+        bad[lane] ^= 1 << bit
+        assert products_residue(bad) != want, \
+            f"digest escape: a={a_vec} b={b} lane={lane} bit={bit}"
+    print(f"digest algebra ok ({n_cases} jobs, one injected "
+          "bit flip each)")
+
+
+# --- 3. health FSM (port of shard.rs strike/note_clean/parole) ------
+
+HEALTHY, SUSPECT, QUARANTINED, PROBATION = (
+    "healthy", "suspect", "quarantined", "probation")
+
+
+class HealthFsm:
+    """Port of the router slot health machine. Time is a logical clock
+    the caller advances; `parole(now)` mirrors the router's pick()-time
+    sweep."""
+
+    def __init__(self, suspect_after=1, quarantine_after=3,
+                 quarantine_window=2000, probation_jobs=8):
+        self.suspect_after = suspect_after
+        self.quarantine_after = quarantine_after
+        self.quarantine_window = quarantine_window
+        self.probation_jobs = probation_jobs
+        self.state = HEALTHY
+        self.strikes = 0
+        self.quarantine_until = None
+        self.probation_clean = 0
+        self.quarantines = 0
+
+    def strike(self, kind, now):
+        assert kind in ("soft", "residue")
+        self.strikes += 1
+        if self.state in (QUARANTINED, PROBATION):
+            quarantine = True
+        else:
+            quarantine = (kind == "residue"
+                          or self.strikes >= self.quarantine_after)
+        if quarantine:
+            if self.state != QUARANTINED:
+                self.quarantines += 1
+            self.state = QUARANTINED
+            self.quarantine_until = now + self.quarantine_window
+            self.probation_clean = 0
+        elif self.strikes >= self.suspect_after:
+            self.state = SUSPECT
+
+    def note_clean(self, _now):
+        if self.state == HEALTHY:
+            self.strikes = 0
+        elif self.state == SUSPECT:
+            self.strikes -= 1
+            if self.strikes == 0:
+                self.state = HEALTHY
+        elif self.state == PROBATION:
+            self.probation_clean += 1
+            if self.probation_clean >= self.probation_jobs:
+                self.state = HEALTHY
+                self.strikes = 0
+        # QUARANTINED ignores clean outcomes (nothing should be routed
+        # there in the first place).
+
+    def parole(self, now):
+        if (self.state == QUARANTINED
+                and self.quarantine_until is not None
+                and now >= self.quarantine_until):
+            self.state = PROBATION
+            self.probation_clean = 0
+            self.quarantine_until = None
+
+    def routable(self):
+        return self.state != QUARANTINED
+
+
+def check_fsm_scenario():
+    """The pinned walk from the Rust unit test
+    `health_fsm_walks_suspect_quarantine_probation`."""
+    fsm = HealthFsm(suspect_after=1, quarantine_after=3,
+                    quarantine_window=10, probation_jobs=2)
+    now = 0
+    fsm.strike("soft", now)
+    assert fsm.state == SUSPECT
+    fsm.note_clean(now)
+    assert fsm.state == HEALTHY
+    for _ in range(3):
+        fsm.strike("soft", now)
+    assert fsm.state == QUARANTINED and fsm.quarantines == 1
+    assert not fsm.routable()
+    now += 15
+    fsm.parole(now)
+    assert fsm.state == PROBATION
+    fsm.note_clean(now)
+    fsm.note_clean(now)
+    assert fsm.state == HEALTHY and fsm.strikes == 0
+    fsm.strike("residue", now)
+    assert fsm.state == QUARANTINED and fsm.quarantines == 2
+    now += 15
+    fsm.parole(now)
+    assert fsm.state == PROBATION
+    fsm.strike("soft", now)  # parole violation
+    assert fsm.state == QUARANTINED and fsm.quarantines == 3
+    print("health FSM scenario ok (suspect -> quarantine -> probation "
+          "-> parole violation)")
+
+
+def check_fsm_invariants(n_cases):
+    """Randomized event streams against the reachable-transition set."""
+    allowed = {
+        (HEALTHY, HEALTHY), (HEALTHY, SUSPECT), (HEALTHY, QUARANTINED),
+        (SUSPECT, SUSPECT), (SUSPECT, HEALTHY), (SUSPECT, QUARANTINED),
+        (QUARANTINED, QUARANTINED), (QUARANTINED, PROBATION),
+        (PROBATION, PROBATION), (PROBATION, HEALTHY),
+        (PROBATION, QUARANTINED),
+    }
+    rng = random.Random(0xF5A)
+    for case in range(n_cases):
+        fsm = HealthFsm(
+            suspect_after=rng.randrange(1, 4),
+            quarantine_after=rng.randrange(1, 6),
+            quarantine_window=rng.randrange(1, 50),
+            probation_jobs=rng.randrange(1, 5),
+        )
+        now = 0
+        quarantines_seen = 0
+        for _ in range(rng.randrange(4, 40)):
+            before = fsm.state
+            ev = rng.choice(["soft", "residue", "clean", "tick"])
+            if ev == "tick":
+                now += rng.randrange(1, 30)
+                fsm.parole(now)
+            elif ev == "clean":
+                fsm.note_clean(now)
+            else:
+                fsm.strike(ev, now)
+            after = fsm.state
+            assert (before, after) in allowed, \
+                f"case {case}: illegal {before} -> {after} on {ev}"
+            # A residue strike is a hard strike: always quarantined.
+            if ev == "residue":
+                assert after == QUARANTINED
+            # The counter moves only on entry into quarantine.
+            entered = (before != QUARANTINED and after == QUARANTINED)
+            assert fsm.quarantines == quarantines_seen + (
+                1 if entered else 0)
+            quarantines_seen = fsm.quarantines
+            # Quarantined shards are never routable; everyone else is.
+            assert fsm.routable() == (after != QUARANTINED)
+    print(f"health FSM invariants ok ({n_cases} randomized streams)")
+
+
+def main():
+    n_cases = int(sys.argv[1]) if len(sys.argv) > 1 else 1000
+    check_residue_math(n_cases)
+    check_digest_algebra(n_cases)
+    check_fsm_scenario()
+    check_fsm_invariants(n_cases)
+    print("integrity validation PASSED")
+
+
+if __name__ == "__main__":
+    main()

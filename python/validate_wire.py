@@ -30,7 +30,7 @@ GOLDEN = [
     (
         "request",
         {"kind": "hello", "arch": "nibble", "n": 8, "tenant": "t0"},
-        "4e4d01010b0000000208000000020000007430",
+        "4e4d02010b0000000208000000020000007430",
     ),
     (
         "request",
@@ -40,12 +40,12 @@ GOLDEN = [
             "a": [1, 255, 256],
             "b": 77,
         },
-        "4e4d01021400000008070605040302014d00030000000100ff000001",
+        "4e4d02021400000008070605040302014d00030000000100ff000001",
     ),
     (
         "request",
         {"kind": "flush"},
-        "4e4d010300000000",
+        "4e4d020300000000",
     ),
     (
         "response",
@@ -55,6 +55,50 @@ GOLDEN = [
             "id": 9,
             "latency_us": 1500,
             "result": ("ok", [6, 700000]),
+            # (6 % 15) + (700000 % 15) = 6 + 10 = 1 (mod 15)
+            "residue": 1,
+        },
+        "4e4d02822600000003000000000000000900000000000000"
+        "dc050000000000000102000000" + "0600000060ae0a0001",
+    ),
+    (
+        "response",
+        {
+            "kind": "outcome",
+            "epoch": 3,
+            "id": 9,
+            "latency_us": 1500,
+            "result": ("err", "boom"),
+            "residue": None,
+        },
+        "4e4d02822200000003000000000000000900000000000000"
+        "dc05000000000000" + "0004000000626f6f6dff",
+    ),
+    (
+        "response",
+        {"kind": "error", "code": 2, "msg": "no design"},
+        "4e4d02870f0000000200090000006e6f2064657369676e",
+    ),
+]
+
+# v1 byte streams from the previous protocol revision: decode-only
+# (rolling upgrade — a v2 peer in front of a v1 peer). The v1 Outcome
+# has no residue byte; it reads back as None.
+GOLDEN_V1_DECODE = [
+    (
+        "request",
+        {"kind": "hello", "arch": "nibble", "n": 8, "tenant": "t0"},
+        "4e4d01010b0000000208000000020000007430",
+    ),
+    (
+        "response",
+        {
+            "kind": "outcome",
+            "epoch": 3,
+            "id": 9,
+            "latency_us": 1500,
+            "result": ("ok", [6, 700000]),
+            "residue": None,
         },
         "4e4d01822500000003000000000000000900000000000000"
         "dc050000000000000102000000" + "0600000060ae0a00",
@@ -67,14 +111,10 @@ GOLDEN = [
             "id": 9,
             "latency_us": 1500,
             "result": ("err", "boom"),
+            "residue": None,
         },
         "4e4d01822100000003000000000000000900000000000000"
         "dc05000000000000" + "0004000000626f6f6d",
-    ),
-    (
-        "response",
-        {"kind": "error", "code": 2, "msg": "no design"},
-        "4e4d01870f0000000200090000006e6f2064657369676e",
     ),
 ]
 
@@ -93,7 +133,17 @@ def check_golden():
             f"  want {want.hex()}\n  got  {got.hex()}"
         )
         assert back == value, f"golden decode mismatch: {back} != {value}"
-    print(f"golden vectors ok ({len(GOLDEN)} frames)")
+    for flavor, value, hexstr in GOLDEN_V1_DECODE:
+        data = bytes.fromhex(hexstr)
+        if flavor == "request":
+            back = wire.decode_request(data)
+        else:
+            back = wire.decode_response(data)
+        assert back == value, f"v1 decode mismatch: {back} != {value}"
+    print(
+        f"golden vectors ok ({len(GOLDEN)} v2 frames, "
+        f"{len(GOLDEN_V1_DECODE)} v1 decode-compat frames)"
+    )
 
 
 def rand_string(rng, maxlen):
@@ -153,6 +203,9 @@ def rand_response(rng):
             "id": rng.getrandbits(64),
             "latency_us": rng.getrandbits(30),
             "result": result,
+            "residue": (
+                rng.randrange(15) if rng.random() < 0.5 else None
+            ),
         }
     if k == 2:
         return {
@@ -240,7 +293,23 @@ def check_strictness():
     )
     expect_error(wire.decode_request, pong, "unknown request")
     expect_error(wire.decode_response, good, "unknown response")
-    print("strictness ok (8 rejection cases)")
+
+    # A v2 Outcome residue byte outside 0..=14 | 0xff is refused.
+    out = bytearray(
+        wire.encode_response(
+            {
+                "kind": "outcome",
+                "epoch": 1,
+                "id": 2,
+                "latency_us": 3,
+                "result": ("ok", [4]),
+                "residue": None,
+            }
+        )
+    )
+    out[-1] = 0x20
+    expect_error(wire.decode_response, bytes(out), "residue")
+    print("strictness ok (9 rejection cases)")
 
 
 def check_stream_framing():
@@ -249,7 +318,7 @@ def check_stream_framing():
     stream = b"".join(wire.encode_request(r) for r in reqs)
     pos = 0
     for want in reqs:
-        kind, length = wire.parse_header(
+        _version, kind, length = wire.parse_header(
             stream[pos : pos + wire.HEADER_LEN]
         )
         end = pos + wire.HEADER_LEN + length

@@ -15,6 +15,10 @@ vectors are u32 element count + packed LE elements. Decoding is strict:
 bad magic, unknown version/kind, oversized frames, truncated payloads
 and trailing payload bytes are all distinct errors.
 
+v2 (current) appends one residue byte to Outcome frames — the shard's
+mod-15 digest of its products, RESIDUE_NONE when absent. v1 frames
+still decode (residue None) for rolling upgrade; encoding emits v2.
+
 This module is the cross-language half of the codec's differential
 validation (`python/validate_wire.py`); keep it in lockstep with the
 Rust source.
@@ -23,7 +27,9 @@ Rust source.
 import struct
 
 WIRE_MAGIC = 0x4D4E
-WIRE_VERSION = 1
+WIRE_VERSION = 2
+WIRE_VERSION_MIN = 1
+RESIDUE_NONE = 0xFF
 MAX_FRAME = 1 << 24
 HEADER_LEN = 8
 
@@ -183,10 +189,10 @@ def parse_header(header):
             f"bad frame magic {magic:#06x} (expected {WIRE_MAGIC:#06x})"
         )
     version = header[2]
-    if version != WIRE_VERSION:
+    if not (WIRE_VERSION_MIN <= version <= WIRE_VERSION):
         raise WireError(
             f"unsupported wire version {version} (this build speaks "
-            f"{WIRE_VERSION})"
+            f"{WIRE_VERSION_MIN}..={WIRE_VERSION})"
         )
     kind = header[3]
     length = struct.unpack("<I", header[4:8])[0]
@@ -195,7 +201,7 @@ def parse_header(header):
             f"frame payload of {length} bytes exceeds the "
             f"{MAX_FRAME}-byte bound"
         )
-    return kind, length
+    return version, kind, length
 
 
 def split_frame(data):
@@ -203,13 +209,13 @@ def split_frame(data):
         raise WireError(
             f"frame shorter than the {HEADER_LEN}-byte header"
         )
-    kind, length = parse_header(data[:HEADER_LEN])
+    version, kind, length = parse_header(data[:HEADER_LEN])
     if len(data) != HEADER_LEN + length:
         raise WireError(
             f"frame length {len(data)} disagrees with header "
             f"({HEADER_LEN + length} expected)"
         )
-    return kind, data[HEADER_LEN:]
+    return version, kind, data[HEADER_LEN:]
 
 
 def arch_index(arch):
@@ -256,7 +262,9 @@ def encode_request(req):
 
 
 def decode_request(data):
-    kind, payload = split_frame(data)
+    # Request payloads are identical in v1 and v2; the version only
+    # gates the header.
+    _version, kind, payload = split_frame(data)
     rd = Rd(payload)
     if kind == K_HELLO:
         req = {
@@ -306,6 +314,10 @@ def encode_response(resp):
         else:
             p.append(0)
             put_str(p, val)
+        # v2: one trailing residue byte (RESIDUE_NONE = none).
+        residue = resp.get("residue")
+        assert residue is None or 0 <= residue < 15
+        p.append(RESIDUE_NONE if residue is None else residue)
         kind = K_OUTCOME
     elif k == "drained":
         put_u64(p, resp["epoch"])
@@ -333,7 +345,7 @@ def encode_response(resp):
 
 
 def decode_response(data):
-    kind, payload = split_frame(data)
+    version, kind, payload = split_frame(data)
     rd = Rd(payload)
     if kind == K_HELLO_ACK:
         resp = {
@@ -352,12 +364,26 @@ def decode_response(data):
             result = ("err", rd.str())
         else:
             raise WireError(f"bad outcome tag {tag} (want 0 | 1)")
+        # The residue byte exists only from v2 on.
+        if version >= 2:
+            raw = rd.u8()
+            if raw == RESIDUE_NONE:
+                residue = None
+            elif raw < 15:
+                residue = raw
+            else:
+                raise WireError(
+                    f"bad residue byte {raw:#04x} (want 0..=14 | 0xff)"
+                )
+        else:
+            residue = None
         resp = {
             "kind": "outcome",
             "epoch": epoch,
             "id": oid,
             "latency_us": latency_us,
             "result": result,
+            "residue": residue,
         }
     elif kind == K_DRAINED:
         resp = {"kind": "drained", "epoch": rd.u64(), "n": rd.u64()}

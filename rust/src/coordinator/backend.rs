@@ -94,12 +94,17 @@ impl Backend for ExactBackend {
 ///   after succeeds ([`FailingBackend::fail_first`]) — models a backend
 ///   that comes up sick and heals;
 /// * *injected latency* on every batch
-///   ([`FailingBackend::with_latency`]) — for deadline/timeout paths.
+///   ([`FailingBackend::with_latency`]) — for deadline/timeout paths;
+/// * *silent corruption*: batches whose broadcast operand is in the
+///   corrupt set return `Ok` with one product bit flipped
+///   ([`FailingBackend::corrupting`]) — the soft-error case only the
+///   mod-15 residue guard ([`crate::integrity`]) can catch.
 pub struct FailingBackend {
     poison: Vec<u16>,
     every_nth: Option<u64>,
     fail_first: u64,
     latency: Option<std::time::Duration>,
+    corrupt: Vec<u16>,
     executed: u64,
 }
 
@@ -111,6 +116,7 @@ impl FailingBackend {
             every_nth: None,
             fail_first: 0,
             latency: None,
+            corrupt: Vec::new(),
             executed: 0,
         }
     }
@@ -131,6 +137,17 @@ impl FailingBackend {
     /// Sleep for `latency` before executing each batch.
     pub fn with_latency(mut self, latency: std::time::Duration) -> Self {
         self.latency = Some(latency);
+        self
+    }
+
+    /// Silently corrupt batches whose broadcast operand is in
+    /// `corrupt`: the result is `Ok` but one product has a single bit
+    /// flipped (lane and bit rotate with the batch counter, so sweeps
+    /// cover every position). Models a datapath soft error — an
+    /// *undetectable* failure for everything upstream of the residue
+    /// guard.
+    pub fn corrupting(mut self, corrupt: Vec<u16>) -> Self {
+        self.corrupt = corrupt;
         self
     }
 
@@ -165,7 +182,13 @@ impl Backend for FailingBackend {
             "injected fault: broadcast operand {} is poisoned",
             batch.b
         );
-        ExactBackend.execute(batch)
+        let mut products = ExactBackend.execute(batch)?;
+        if self.corrupt.contains(&batch.b) && !products.is_empty() {
+            let lane = (self.executed as usize - 1) % products.len();
+            let bit = (self.executed as u32 - 1) % 16;
+            products[lane] ^= 1 << bit;
+        }
+        Ok(products)
     }
 
     fn name(&self) -> String {
@@ -486,6 +509,27 @@ mod tests {
         assert!(be.execute(&mk_batch(vec![1], 13)).is_err());
         assert_eq!(be.execute(&mk_batch(vec![4], 5)).unwrap(), vec![20]);
         assert!(t0.elapsed() >= std::time::Duration::from_millis(2));
+    }
+
+    #[test]
+    fn corrupt_mode_flips_exactly_one_bit_and_reports_ok() {
+        let mut be = FailingBackend::new(vec![]).corrupting(vec![9]);
+        // Clean operand: untouched.
+        assert_eq!(be.execute(&mk_batch(vec![2, 3], 5)).unwrap(), [10, 15]);
+        // Corrupt operand: Ok result, exactly one product off by one
+        // power of two — every such fault must trip the residue guard.
+        let got = be.execute(&mk_batch(vec![2, 3], 9)).unwrap();
+        let want = [18u32, 27];
+        let diffs: Vec<usize> =
+            (0..want.len()).filter(|&i| got[i] != want[i]).collect();
+        assert_eq!(diffs.len(), 1, "one corrupted lane: {got:?}");
+        let delta = got[diffs[0]] ^ want[diffs[0]];
+        assert_eq!(delta.count_ones(), 1, "single bit flip");
+        assert!(!crate::integrity::check_product(
+            if diffs[0] == 0 { 2 } else { 3 },
+            9,
+            got[diffs[0]]
+        ));
     }
 
     #[test]

@@ -99,6 +99,14 @@ pub struct Metrics {
     /// would have done. High skip fractions are the weight-stationary
     /// win made visible.
     pub cone_skipped: AtomicU64,
+    /// Settled lanes whose product was checked against the mod-15
+    /// residue folded from the operands at submit time
+    /// ([`crate::integrity`]).
+    pub residue_checked: AtomicU64,
+    /// Residue-guard failures: products whose mod-15 digit sum
+    /// disagreed with the operand fold (arithmetic corruption caught
+    /// before delivery; the affected job fails instead).
+    pub residue_mismatch: AtomicU64,
     pub job_latency: LatencyHistogram,
 }
 
@@ -121,6 +129,8 @@ pub struct MetricsSnapshot {
     pub errors: u64,
     pub cone_evaluated: u64,
     pub cone_skipped: u64,
+    pub residue_checked: u64,
+    pub residue_mismatch: u64,
     /// Static-analysis runs so far this process (process-wide counter
     /// from [`crate::netlist::analyze::counters`], not per-shard).
     pub analysis_runs: u64,
@@ -189,6 +199,8 @@ impl MetricsSnapshot {
             ("errors", self.errors),
             ("cone_evaluated", self.cone_evaluated),
             ("cone_skipped", self.cone_skipped),
+            ("residue_checked", self.residue_checked),
+            ("residue_mismatch", self.residue_mismatch),
             ("analysis_runs", self.analysis_runs),
             ("analysis_findings", self.analysis_findings),
             ("analysis_rejects", self.analysis_rejects),
@@ -236,6 +248,8 @@ impl Metrics {
             errors: self.errors.load(Ordering::Relaxed),
             cone_evaluated: self.cone_evaluated.load(Ordering::Relaxed),
             cone_skipped: self.cone_skipped.load(Ordering::Relaxed),
+            residue_checked: self.residue_checked.load(Ordering::Relaxed),
+            residue_mismatch: self.residue_mismatch.load(Ordering::Relaxed),
             analysis_runs,
             analysis_findings,
             analysis_rejects,
@@ -290,6 +304,11 @@ impl std::fmt::Display for MetricsSnapshot {
             self.cone_evaluated,
             self.cone_skipped,
             self.cone_skip_rate() * 100.0
+        )?;
+        writeln!(
+            f,
+            "integrity: {} lanes residue-checked, {} mismatches",
+            self.residue_checked, self.residue_mismatch
         )?;
         write!(
             f,

@@ -43,11 +43,11 @@ pub use service::{
 pub use shard::{
     exact_factory, loopback_addr, sim_factory, Admission, BackendFactory,
     RoutedOutcome, Router, RouterConfig, RouterMetrics, ShardAddr,
-    ShardServer, ShardServerConfig, ShardSpec,
+    ShardHealth, ShardServer, ShardServerConfig, ShardSpec,
 };
 pub use wire::{
-    error_code, ShardRequest, ShardResponse, MAX_FRAME, WIRE_MAGIC,
-    WIRE_VERSION,
+    error_code, ShardRequest, ShardResponse, MAX_FRAME, RESIDUE_NONE,
+    WIRE_MAGIC, WIRE_VERSION, WIRE_VERSION_MIN,
 };
 
 /// Take a mutex even if a panicking holder poisoned it. Every guarded

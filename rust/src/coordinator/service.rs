@@ -29,6 +29,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, ensure, Result};
 
+use crate::integrity;
 use crate::workload::VectorJob;
 
 use super::backend::Backend;
@@ -137,6 +138,12 @@ struct PendingJob {
     submitted: Instant,
     /// First error seen on a batch carrying one of this job's lanes.
     error: Option<String>,
+    /// Expected mod-15 residue per element, folded from the operands at
+    /// submit time (the operands themselves are not retained). Every
+    /// settled lane is checked against its entry — a backend that
+    /// returns a corrupted product fails the job instead of leaking the
+    /// bad value into downstream accumulators.
+    residues: Vec<u8>,
 }
 
 /// Shared assembly state of one session, behind the session mutex.
@@ -305,6 +312,7 @@ impl Session<'_> {
                 remaining: job.a.len(),
                 submitted: now,
                 error: None,
+                residues: integrity::lane_residues(&job.a, job.b),
             },
         );
         inner.batcher.push(job);
@@ -575,6 +583,25 @@ impl Session<'_> {
         };
         if let Some(p) = product {
             entry.products[tag.offset] = p;
+            // Mod-15 residue guard: the product's base-16 digit sum
+            // must match the residue folded from the operands at
+            // submit time. A mismatch is arithmetic corruption — fail
+            // the job rather than deliver a wrong product.
+            let m = &self.coord.metrics;
+            m.residue_checked.fetch_add(1, Ordering::Relaxed);
+            let want = entry.residues[tag.offset];
+            let got = integrity::res15_u32(p);
+            if got != want {
+                m.residue_mismatch.fetch_add(1, Ordering::Relaxed);
+                entry.error.get_or_insert_with(|| {
+                    format!(
+                        "residue mismatch on element {}: product {p} \
+                         has mod-15 residue {got}, operands fold to \
+                         {want} (soft error in the datapath?)",
+                        tag.offset
+                    )
+                });
+            }
         }
         if let Some(e) = err {
             entry.error.get_or_insert_with(|| e.to_string());
@@ -888,6 +915,60 @@ mod tests {
         assert_eq!(snap.jobs_failed, 4, "ids 0, 3, 6, 9");
         assert_eq!(snap.jobs_completed, 6);
         assert!(snap.errors >= 1);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn residue_guard_catches_silently_corrupted_products() {
+        // The backend returns Ok with one flipped product bit for
+        // broadcast operand 9 — invisible to error containment, caught
+        // only by the mod-15 residue check folded at submit time.
+        let coord = Coordinator::new(
+            CoordinatorConfig {
+                width: 4,
+                queue_depth: 4,
+                max_open: None,
+            },
+            vec![Box::new(FailingBackend::new(vec![]).corrupting(vec![9]))],
+        );
+        let session = coord.session(SessionConfig::closed_set());
+        // Full-width jobs: each is exactly one batch, so the injector's
+        // one-flipped-lane-per-batch lands in every corrupted job.
+        let jobs: Vec<VectorJob> = (0..8)
+            .map(|id| VectorJob {
+                id,
+                a: vec![1, 2, 3, 4],
+                b: if id % 2 == 0 { 9 } else { 7 },
+            })
+            .collect();
+        for job in &jobs {
+            session.submit(job).unwrap();
+        }
+        let mut outcomes = session.drain().unwrap();
+        drop(session);
+        outcomes.sort_by_key(|o| o.id);
+        for (job, out) in jobs.iter().zip(&outcomes) {
+            if job.b == 9 {
+                let e = out.result.as_ref().unwrap_err();
+                assert!(
+                    format!("{e:#}").contains("residue mismatch"),
+                    "job {} must be caught, got: {e:#}",
+                    job.id
+                );
+            } else {
+                assert_eq!(
+                    out.result.as_ref().unwrap(),
+                    &job.expected(),
+                    "clean job {} unaffected",
+                    job.id
+                );
+            }
+        }
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap.jobs_failed, 4, "every corrupted job caught");
+        assert_eq!(snap.jobs_completed, 4);
+        assert_eq!(snap.residue_mismatch, 4);
+        assert_eq!(snap.residue_checked, 32, "every settled lane checked");
         coord.shutdown();
     }
 

@@ -22,7 +22,20 @@
 //!   fair share on top of the shard-local queue backpressure;
 //! * **graceful degradation** — when a shard dies mid-stream, exactly
 //!   the jobs routed to it reroute or fail; every other job, and every
-//!   other tenant, keeps streaming.
+//!   other tenant, keeps streaming;
+//! * **arithmetic integrity** — every v2 `Outcome` frame carries the
+//!   shard's mod-15 product digest ([`crate::integrity`]); the router
+//!   cross-checks it in O(1) against the operand fold it stored at
+//!   route time, so a soft error anywhere in a shard's datapath is
+//!   caught before the products reach an accumulator;
+//! * **health state machine** — each shard walks Healthy → Suspect →
+//!   Quarantined → Probation, driven by residue mismatches (hard
+//!   strikes) and deaths/deadline misses/decode errors (soft strikes).
+//!   Quarantined shards are unroutable until their window elapses;
+//!   their jobs transparently re-execute on a sibling, or — when a
+//!   fallback factory is installed — degrade to an in-process
+//!   [`crate::kernels::FabricExec`] so the stream keeps flowing even
+//!   with every shard down.
 
 use std::collections::{HashMap, HashSet};
 use std::io::{Read, Write};
@@ -38,12 +51,14 @@ use std::time::{Duration, Instant, SystemTime};
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::design::DesignKey;
+use crate::integrity;
 use crate::util::Xoshiro256;
 use crate::workload::VectorJob;
 
 use super::backend::{
     Backend, ExactBackend, Sim64Backend, SimBackend,
 };
+use super::batcher::BatcherConfig;
 use super::lock_unpoisoned;
 use super::service::{
     Coordinator, CoordinatorConfig, JobOutcome, Session, SessionConfig,
@@ -533,11 +548,19 @@ fn write_outcome(
     epoch: u64,
     o: JobOutcome,
 ) -> Result<()> {
+    // v2: fold the products into a one-byte mod-15 digest so the
+    // router can cross-check arithmetic integrity without recomputing.
+    let residue = o
+        .result
+        .as_ref()
+        .ok()
+        .map(|p| integrity::products_residue(p));
     ShardResponse::Outcome {
         epoch,
         id: o.id,
         latency_us: o.latency.as_micros().min(u64::MAX as u128) as u64,
         result: o.result.map_err(|e| format!("{e:#}")),
+        residue,
     }
     .write_to(conn)
 }
@@ -570,6 +593,18 @@ pub struct RouterConfig {
     pub tenant_share: usize,
     /// Jitter seed (deterministic tests).
     pub seed: u64,
+    /// Soft strikes (deaths, deadline misses, decode errors) before a
+    /// shard is marked [`ShardHealth::Suspect`].
+    pub suspect_after: u32,
+    /// Soft strikes before a shard is quarantined outright. Residue
+    /// mismatches are hard strikes and quarantine immediately.
+    pub quarantine_after: u32,
+    /// How long a quarantined shard stays unroutable before it is
+    /// paroled to [`ShardHealth::Probation`].
+    pub quarantine_window: Duration,
+    /// Clean outcomes a probation shard must deliver to be trusted as
+    /// healthy again (one more strike meanwhile re-quarantines it).
+    pub probation_jobs: u32,
 }
 
 impl Default for RouterConfig {
@@ -582,6 +617,10 @@ impl Default for RouterConfig {
             max_inflight: 256,
             tenant_share: 128,
             seed: 0x5EED_40_7E2,
+            suspect_after: 1,
+            quarantine_after: 3,
+            quarantine_window: Duration::from_secs(2),
+            probation_jobs: 8,
         }
     }
 }
@@ -622,6 +661,15 @@ pub struct RouterMetrics {
     pub admission_denied: u64,
     pub reconnects: u64,
     pub shard_deaths: u64,
+    /// Successful outcomes whose mod-15 digest the router verified.
+    pub residue_checked: u64,
+    /// Outcomes whose digest disagreed with the operand fold — a
+    /// detected soft error; the job re-executes elsewhere.
+    pub residue_mismatches: u64,
+    /// Transitions into [`ShardHealth::Quarantined`].
+    pub quarantines: u64,
+    /// Jobs completed by the in-process fallback executor.
+    pub fallback_executed: u64,
 }
 
 impl RouterMetrics {
@@ -636,6 +684,10 @@ impl RouterMetrics {
             ("admission_denied", self.admission_denied),
             ("reconnects", self.reconnects),
             ("shard_deaths", self.shard_deaths),
+            ("residue_checked", self.residue_checked),
+            ("residue_mismatches", self.residue_mismatches),
+            ("quarantines", self.quarantines),
+            ("fallback_executed", self.fallback_executed),
         ];
         let mut out = String::new();
         for (name, v) in pairs {
@@ -670,6 +722,44 @@ enum SlotState {
     Down,
 }
 
+/// Per-shard trust state. Strikes (residue mismatches, deaths,
+/// deadline misses, decode errors) walk a shard right; clean outcomes
+/// walk it back left:
+///
+/// ```text
+///            soft strike            strikes >= quarantine_after,
+///          (>= suspect_after)       or any residue mismatch
+/// Healthy ----------------> Suspect ----------------> Quarantined
+///    ^                        |  ^                       |
+///    |   strikes decay to 0   |  |   any strike          | window
+///    +------------------------+  +------------+          | elapses
+///    ^                                        |          v
+///    +----------------------------------- Probation <----+
+///          probation_jobs clean outcomes
+/// ```
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardHealth {
+    /// Full trust; routable.
+    Healthy,
+    /// Accumulating strikes; still routable.
+    Suspect,
+    /// Unroutable until the quarantine window elapses.
+    Quarantined,
+    /// Routable again, but one more strike re-quarantines it.
+    Probation,
+}
+
+/// How severe one health strike is.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum StrikeKind {
+    /// Connection death, deadline miss, decode error: escalates via
+    /// the `suspect_after`/`quarantine_after` thresholds.
+    Soft,
+    /// Arithmetic integrity violation (residue mismatch): wrong
+    /// answers are worse than no answers, so quarantine immediately.
+    Residue,
+}
+
 /// Router-side state of one shard endpoint.
 struct Slot {
     spec: ShardSpec,
@@ -681,6 +771,13 @@ struct Slot {
     /// Consecutive connect/serve failures (drives backoff).
     fails: u32,
     retry_at: Option<Instant>,
+    health: ShardHealth,
+    /// Accumulated strikes (decay on clean outcomes while Suspect).
+    strikes: u32,
+    /// When a quarantined shard becomes eligible for probation.
+    quarantine_until: Option<Instant>,
+    /// Clean outcomes delivered so far while on probation.
+    probation_clean: u32,
     pongs: Vec<u64>,
     drained: Vec<u64>,
     metrics_text: Option<String>,
@@ -699,6 +796,10 @@ struct InFlight {
     submitted: Instant,
     /// This attempt's write stamp (per-attempt deadline).
     sent: Instant,
+    /// Expected mod-15 product digest, folded from the operands at
+    /// route time ([`integrity::job_residue`]) — what the shard's
+    /// v2 Outcome digest must equal.
+    digest: u8,
 }
 
 /// The sharding front end. Single-owner (`&mut self` API): submitters
@@ -717,6 +818,11 @@ pub struct Router {
     tx: Sender<Event>,
     rx: Receiver<Event>,
     rng: Xoshiro256,
+    /// Opt-in in-process degradation: when no routable shard serves a
+    /// key, jobs execute locally through a [`crate::kernels::FabricExec`]
+    /// built from this factory instead of failing. `None` (the default)
+    /// keeps the fail-fast contract of the chaos tests.
+    fallback: Option<BackendFactory>,
     pub metrics: RouterMetrics,
 }
 
@@ -742,6 +848,10 @@ impl Router {
                     gen: 0,
                     fails: 0,
                     retry_at: None,
+                    health: ShardHealth::Healthy,
+                    strikes: 0,
+                    quarantine_until: None,
+                    probation_clean: 0,
                     pongs: Vec::new(),
                     drained: Vec::new(),
                     metrics_text: None,
@@ -755,6 +865,7 @@ impl Router {
             tx,
             rx,
             rng: Xoshiro256::new(seed),
+            fallback: None,
             metrics: RouterMetrics::default(),
         };
         let mut up = 0usize;
@@ -859,6 +970,92 @@ impl Router {
         Duration::from_secs_f64(base + (exp - base) * self.rng.f64())
     }
 
+    /// Install the in-process degradation path: when every shard that
+    /// serves a key is down or quarantined, jobs run locally through a
+    /// [`crate::kernels::FabricExec`] built from `factory` (and still
+    /// pass the residue guard) instead of failing.
+    pub fn set_fallback(&mut self, factory: BackendFactory) {
+        self.fallback = Some(factory);
+    }
+
+    /// Per-slot health, index-aligned with the connect specs.
+    pub fn shard_health(&self) -> Vec<ShardHealth> {
+        self.slots.iter().map(|s| s.health).collect()
+    }
+
+    /// Snapshot of the router-side counters (the same numbers
+    /// [`Router::scrape`] renders, without the shard round-trips).
+    pub fn metrics(&self) -> RouterMetrics {
+        self.metrics
+    }
+
+    /// Record one strike against shard `i` and walk its health FSM.
+    fn strike(&mut self, i: usize, kind: StrikeKind) {
+        self.slots[i].strikes = self.slots[i].strikes.saturating_add(1);
+        let quarantine = match self.slots[i].health {
+            // Already serving time: refresh the window below.
+            ShardHealth::Quarantined => true,
+            // Parole violation: one strike re-quarantines.
+            ShardHealth::Probation => true,
+            ShardHealth::Healthy | ShardHealth::Suspect => {
+                kind == StrikeKind::Residue
+                    || self.slots[i].strikes >= self.cfg.quarantine_after
+            }
+        };
+        if quarantine {
+            if self.slots[i].health != ShardHealth::Quarantined {
+                self.metrics.quarantines += 1;
+            }
+            self.slots[i].health = ShardHealth::Quarantined;
+            self.slots[i].quarantine_until =
+                Some(Instant::now() + self.cfg.quarantine_window);
+            self.slots[i].probation_clean = 0;
+        } else if self.slots[i].strikes >= self.cfg.suspect_after {
+            self.slots[i].health = ShardHealth::Suspect;
+        }
+    }
+
+    /// Record one residue-verified outcome from shard `i`: strikes
+    /// decay, and a probation shard earns its way back to full trust.
+    fn note_clean(&mut self, i: usize) {
+        let s = &mut self.slots[i];
+        match s.health {
+            ShardHealth::Healthy => s.strikes = 0,
+            ShardHealth::Suspect => {
+                s.strikes = s.strikes.saturating_sub(1);
+                if s.strikes == 0 {
+                    s.health = ShardHealth::Healthy;
+                }
+            }
+            ShardHealth::Probation => {
+                s.probation_clean += 1;
+                if s.probation_clean >= self.cfg.probation_jobs {
+                    s.health = ShardHealth::Healthy;
+                    s.strikes = 0;
+                }
+            }
+            // No routable connection should be yielding outcomes, but
+            // a frame can race the quarantine: results are re-verified
+            // wherever the job re-executes, so just ignore it here.
+            ShardHealth::Quarantined => {}
+        }
+    }
+
+    /// Quarantine windows that have elapsed parole their shard to
+    /// Probation (called on every pick, so parole needs no timer).
+    fn parole_due(&mut self) {
+        let now = Instant::now();
+        for s in &mut self.slots {
+            if s.health == ShardHealth::Quarantined
+                && s.quarantine_until.map_or(true, |t| now >= t)
+            {
+                s.health = ShardHealth::Probation;
+                s.probation_clean = 0;
+                s.quarantine_until = None;
+            }
+        }
+    }
+
     /// Drain every event the readers have delivered (non-blocking).
     fn pump(&mut self) {
         while let Ok(ev) = self.rx.try_recv() {
@@ -916,7 +1113,11 @@ impl Router {
     ) {
         match resp {
             ShardResponse::Outcome {
-                epoch, id, result, ..
+                epoch,
+                id,
+                result,
+                residue,
+                ..
             } => {
                 // Second staleness gate: the server-side session epoch
                 // (a restarted shard answers with a fresh epoch, so a
@@ -936,7 +1137,26 @@ impl Router {
                     return;
                 }
                 let inf = self.inflight.remove(&id).expect("checked");
-                self.settle(inf, result);
+                match result {
+                    Ok(products) => {
+                        // Residue guard: the shard's v2 digest (or a
+                        // local fold when a v1 peer sent none) must
+                        // equal the operand fold stored at route time.
+                        self.metrics.residue_checked += 1;
+                        let got = residue.unwrap_or_else(|| {
+                            integrity::products_residue(&products)
+                        });
+                        if got == inf.digest {
+                            self.note_clean(shard);
+                            self.settle(inf, Ok(products));
+                        } else {
+                            self.on_residue_mismatch(shard, inf, got);
+                        }
+                    }
+                    // A shard-reported failure is an honest answer,
+                    // not an integrity event.
+                    Err(e) => self.settle(inf, Err(e)),
+                }
             }
             ShardResponse::Rejected { id, reason } => {
                 let valid = self
@@ -974,6 +1194,137 @@ impl Router {
                 self.metrics.stale_frames += 1;
             }
         }
+    }
+
+    /// A shard returned `Ok` products whose mod-15 digest disagrees
+    /// with the operand fold: a detected soft error. The shard is
+    /// quarantined (hard strike) and its connection torn down — which
+    /// also reroutes everything else it held — then the corrupted job
+    /// itself re-executes on a sibling, the fallback, or fails. The
+    /// teardown is what keeps the idempotency contract: the re-issued
+    /// job only ever lands on a fresh session (new epoch), so the
+    /// shard-side duplicate-id guard never fires on a legitimate retry.
+    fn on_residue_mismatch(
+        &mut self,
+        shard: usize,
+        inf: InFlight,
+        got: u8,
+    ) {
+        self.metrics.residue_mismatches += 1;
+        if let Some(load) = self.tenant_load.get_mut(&inf.tenant) {
+            *load = load.saturating_sub(1);
+        }
+        let msg = format!(
+            "shard {shard} product digest {got} != operand fold {} \
+             (mod-15 residue guard caught a corrupted product)",
+            inf.digest
+        );
+        self.strike(shard, StrikeKind::Residue);
+        self.shard_down(shard, &msg);
+        self.reroute_or_degrade(inf, &msg);
+    }
+
+    /// Re-issue a job whose last attempt is void: reroute while the
+    /// attempt budget lasts, then degrade to the in-process fallback
+    /// (when installed), then fail with the full causal chain.
+    fn reroute_or_degrade(&mut self, inf: InFlight, why: &str) {
+        if inf.attempts < self.cfg.max_attempts {
+            self.metrics.jobs_rerouted += 1;
+            let (key, job, tenant, attempts, submitted) = (
+                inf.key,
+                inf.job.clone(),
+                inf.tenant.clone(),
+                inf.attempts,
+                inf.submitted,
+            );
+            match self.route(key, job, tenant, attempts + 1, submitted) {
+                Ok(()) => {}
+                Err(e) => {
+                    self.metrics.jobs_rerouted -= 1;
+                    self.degrade_or_fail(
+                        inf,
+                        &format!("{why}; reroute failed: {e:#}"),
+                    );
+                }
+            }
+        } else {
+            self.degrade_or_fail(
+                inf,
+                &format!(
+                    "{why}; {} attempts exhausted",
+                    self.cfg.max_attempts
+                ),
+            );
+        }
+    }
+
+    /// Last rung of the degradation ladder: execute the job locally
+    /// through the fallback factory (still residue-guarded), or settle
+    /// it failed when no fallback is installed.
+    fn degrade_or_fail(&mut self, inf: InFlight, msg: &str) {
+        if self.fallback.is_none() {
+            self.fail_inflight(inf, msg);
+            return;
+        }
+        match self.fallback_products(inf.key, &inf.job) {
+            Ok(products) => {
+                if integrity::products_residue(&products) == inf.digest {
+                    self.metrics.fallback_executed += 1;
+                    self.metrics.jobs_completed += 1;
+                    self.done_ids.insert(inf.job.id);
+                    self.outcomes.push(RoutedOutcome {
+                        id: inf.job.id,
+                        tenant: inf.tenant,
+                        shard: inf.shard,
+                        attempts: inf.attempts,
+                        result: Ok(products),
+                        latency: inf.submitted.elapsed(),
+                    });
+                } else {
+                    self.fail_inflight(
+                        inf,
+                        &format!(
+                            "{msg}; in-process fallback failed the \
+                             residue check too"
+                        ),
+                    );
+                }
+            }
+            Err(e) => self.fail_inflight(
+                inf,
+                &format!("{msg}; in-process fallback failed: {e:#}"),
+            ),
+        }
+    }
+
+    /// Execute one job locally through a [`crate::kernels::FabricExec`]
+    /// built from the fallback factory.
+    fn fallback_products(
+        &self,
+        key: DesignKey,
+        job: &VectorJob,
+    ) -> Result<Vec<u32>> {
+        use crate::kernels::{FabricExec, JobExecutor};
+        let factory =
+            self.fallback.as_ref().expect("caller checked fallback");
+        let mut backends = factory(key)?;
+        ensure!(
+            !backends.is_empty(),
+            "fallback factory produced no backends"
+        );
+        let mut exec = FabricExec::new(
+            backends.remove(0),
+            BatcherConfig::unbounded(key.n),
+        );
+        let mut local = job.clone();
+        local.id = 0; // FabricExec wants dense ids; remap and back.
+        let mut results = exec.run(&[local])?;
+        ensure!(
+            results.len() == 1,
+            "fallback produced {} results for one job",
+            results.len()
+        );
+        Ok(results.pop().expect("checked").products)
     }
 
     /// Record one job's final outcome and release its admission slots.
@@ -1016,6 +1367,9 @@ impl Router {
         self.slots[i].gen += 1;
         self.metrics.shard_deaths += 1;
         self.note_connect_failure(i);
+        // Deaths, deadline misses, and decode errors all funnel here:
+        // one soft strike each against the health FSM.
+        self.strike(i, StrikeKind::Soft);
         let orphans: Vec<u64> = self
             .inflight
             .iter()
@@ -1027,35 +1381,10 @@ impl Router {
             if let Some(load) = self.tenant_load.get_mut(&inf.tenant) {
                 *load = load.saturating_sub(1);
             }
-            if inf.attempts < self.cfg.max_attempts {
-                self.metrics.jobs_rerouted += 1;
-                let (key, job, tenant, attempts, submitted) = (
-                    inf.key,
-                    inf.job.clone(),
-                    inf.tenant.clone(),
-                    inf.attempts,
-                    inf.submitted,
-                );
-                if let Err(e) =
-                    self.route(key, job, tenant, attempts + 1, submitted)
-                {
-                    self.metrics.jobs_rerouted -= 1;
-                    self.fail_inflight(
-                        inf,
-                        &format!(
-                            "shard {i} died ({err}); reroute failed: {e:#}"
-                        ),
-                    );
-                }
-            } else {
-                self.fail_inflight(
-                    inf,
-                    &format!(
-                        "shard {i} died ({err}); {} attempts exhausted",
-                        self.cfg.max_attempts
-                    ),
-                );
-            }
+            self.reroute_or_degrade(
+                inf,
+                &format!("shard {i} died ({err})"),
+            );
         }
     }
 
@@ -1072,12 +1401,16 @@ impl Router {
         });
     }
 
-    /// Choose a healthy shard for `key` (round-robin), lazily
-    /// reconnecting Down slots whose backoff has elapsed.
+    /// Choose a routable shard for `key` (round-robin), lazily
+    /// reconnecting Down slots whose backoff has elapsed. Quarantined
+    /// slots are neither reconnected nor selected until their window
+    /// paroles them to probation.
     fn pick(&mut self, key: DesignKey) -> Result<usize> {
+        self.parole_due();
         let n = self.slots.len();
         for i in 0..n {
             if self.slots[i].spec.key != key
+                || self.slots[i].health == ShardHealth::Quarantined
                 || !matches!(self.slots[i].state, SlotState::Down)
             {
                 continue;
@@ -1092,6 +1425,7 @@ impl Router {
         for step in 0..n {
             let i = (self.rr + step) % n;
             if self.slots[i].spec.key == key
+                && self.slots[i].health != ShardHealth::Quarantined
                 && matches!(self.slots[i].state, SlotState::Connected { .. })
             {
                 self.rr = i + 1;
@@ -1113,6 +1447,9 @@ impl Router {
         attempts: u32,
         submitted: Instant,
     ) -> Result<()> {
+        // Fold the operands into the expected mod-15 digest once per
+        // attempt; the shard's answer must reproduce it.
+        let digest = integrity::job_residue(&job.a, job.b);
         loop {
             let i = self.pick(key)?;
             let write_res = match &mut self.slots[i].state {
@@ -1138,6 +1475,7 @@ impl Router {
                             attempts,
                             submitted,
                             sent: Instant::now(),
+                            digest,
                         },
                     );
                     return Ok(());
@@ -1175,7 +1513,32 @@ impl Router {
             self.metrics.admission_denied += 1;
             return Ok(Admission::TenantOverShare);
         }
-        self.route(key, job, tenant.to_string(), 1, Instant::now())?;
+        let now = Instant::now();
+        match self.route(key, job.clone(), tenant.to_string(), 1, now) {
+            Ok(()) => {}
+            // No routable shard at all (down or quarantined): degrade
+            // to the in-process fallback when one is installed — the
+            // job settles locally — otherwise surface the error.
+            Err(e) if self.fallback.is_some() => {
+                let digest = integrity::job_residue(&job.a, job.b);
+                let inf = InFlight {
+                    key,
+                    job,
+                    tenant: tenant.to_string(),
+                    shard: 0,
+                    gen: 0,
+                    attempts: 1,
+                    submitted: now,
+                    sent: now,
+                    digest,
+                };
+                self.degrade_or_fail(
+                    inf,
+                    &format!("no shard available ({e:#})"),
+                );
+            }
+            Err(e) => return Err(e),
+        }
         self.metrics.jobs_routed += 1;
         Ok(Admission::Accepted)
     }
@@ -1620,6 +1983,7 @@ mod tests {
                 id: 1,
                 latency_us: 1,
                 result: Ok(vec![0, 0]),
+                residue: None,
             },
         });
         // (b) right generation, wrong server epoch (a "restarted shard"
@@ -1632,6 +1996,7 @@ mod tests {
                 id: 1,
                 latency_us: 1,
                 result: Ok(vec![9, 9]),
+                residue: None,
             },
         });
         // (c) unknown job id.
@@ -1643,6 +2008,7 @@ mod tests {
                 id: 999,
                 latency_us: 1,
                 result: Ok(vec![]),
+                residue: None,
             },
         });
         // (d) stale Down notice must not kill the live connection.
@@ -1721,6 +2087,191 @@ mod tests {
         );
         let outcomes = router.drain().unwrap();
         assert_eq!(outcomes.len(), 1);
+        router.shutdown();
+        server.kill();
+    }
+
+    /// A shard whose backend silently corrupts one product bit per
+    /// batch with broadcast operand 9 — only the residue guard can
+    /// tell its answers from good ones.
+    fn corrupt_shard(tag: &str) -> ShardServer {
+        use super::super::backend::FailingBackend;
+        ShardServer::spawn(
+            loopback_addr(tag),
+            Arc::new(move |_key| {
+                Ok(vec![Box::new(
+                    FailingBackend::new(vec![]).corrupting(vec![9]),
+                ) as Box<dyn Backend>])
+            }),
+            ShardServerConfig::default(),
+        )
+        .expect("spawn corrupt shard")
+    }
+
+    fn corrupt_jobs(count: u64) -> Vec<VectorJob> {
+        (0..count)
+            .map(|id| VectorJob {
+                id,
+                a: vec![1 + id as u16, 2, 3],
+                b: 9,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn residue_mismatch_quarantines_shard_and_reroutes_to_sibling() {
+        let bad = corrupt_shard("resbad");
+        let good = spawn_shard("resgood");
+        let key = key16();
+        let mut router = Router::connect(
+            vec![
+                ShardSpec {
+                    addr: bad.addr().clone(),
+                    key,
+                },
+                ShardSpec {
+                    addr: good.addr().clone(),
+                    key,
+                },
+            ],
+            RouterConfig {
+                // Long window: once quarantined, the corrupting shard
+                // must stay out for the rest of the test.
+                quarantine_window: Duration::from_secs(60),
+                ..fast_cfg()
+            },
+        )
+        .unwrap();
+        let jobs = corrupt_jobs(8);
+        for job in &jobs {
+            router.submit(key, "t0", job.clone()).unwrap();
+        }
+        let mut outcomes = router.drain().unwrap();
+        outcomes.sort_by_key(|o| o.id);
+        assert_eq!(outcomes.len(), jobs.len(), "no lost/duplicate jobs");
+        for (job, out) in jobs.iter().zip(&outcomes) {
+            assert_eq!(out.id, job.id);
+            assert_eq!(
+                out.result.as_ref().unwrap(),
+                &job.expected(),
+                "job {} must end bit-exact despite the corrupt shard",
+                job.id
+            );
+        }
+        assert!(
+            router.metrics.residue_mismatches >= 1,
+            "the guard caught at least one corrupted product"
+        );
+        assert!(router.metrics.quarantines >= 1);
+        assert_eq!(
+            router.shard_health()[0],
+            ShardHealth::Quarantined,
+            "the corrupting shard is quarantined"
+        );
+        assert!(
+            outcomes.iter().any(|o| o.attempts > 1),
+            "corrupted jobs were re-issued"
+        );
+        assert_eq!(router.metrics.jobs_failed, 0);
+        assert_eq!(router.metrics.jobs_completed, 8);
+        let scrape = router.scrape();
+        assert!(scrape.contains("nibblemul_router_residue_mismatches"));
+        assert!(scrape.contains("nibblemul_router_quarantines"));
+        router.shutdown();
+        bad.kill();
+        good.kill();
+    }
+
+    #[test]
+    fn fallback_executes_locally_when_every_shard_is_quarantined() {
+        let bad = corrupt_shard("fbonly");
+        let key = key16();
+        let mut router = Router::connect(
+            vec![ShardSpec {
+                addr: bad.addr().clone(),
+                key,
+            }],
+            RouterConfig {
+                quarantine_window: Duration::from_secs(60),
+                ..fast_cfg()
+            },
+        )
+        .unwrap();
+        router.set_fallback(exact_factory(1));
+        let jobs = corrupt_jobs(4);
+        for job in &jobs {
+            router.submit(key, "t0", job.clone()).unwrap();
+        }
+        let mut outcomes = router.drain().unwrap();
+        outcomes.sort_by_key(|o| o.id);
+        assert_eq!(outcomes.len(), jobs.len());
+        for (job, out) in jobs.iter().zip(&outcomes) {
+            assert_eq!(
+                out.result.as_ref().unwrap(),
+                &job.expected(),
+                "job {} degraded to the in-process fallback",
+                job.id
+            );
+        }
+        assert!(router.metrics.fallback_executed >= 1);
+        assert_eq!(router.metrics.jobs_failed, 0);
+        assert_eq!(router.shard_health(), vec![ShardHealth::Quarantined]);
+        router.shutdown();
+        bad.kill();
+    }
+
+    #[test]
+    fn health_fsm_walks_suspect_quarantine_probation() {
+        let server = spawn_shard("fsm");
+        let key = key16();
+        let mut router = Router::connect(
+            vec![ShardSpec {
+                addr: server.addr().clone(),
+                key,
+            }],
+            RouterConfig {
+                quarantine_window: Duration::from_millis(10),
+                probation_jobs: 2,
+                ..fast_cfg()
+            },
+        )
+        .unwrap();
+        assert_eq!(router.shard_health(), vec![ShardHealth::Healthy]);
+        // One soft strike: Suspect. A clean outcome decays it back.
+        router.strike(0, StrikeKind::Soft);
+        assert_eq!(router.shard_health(), vec![ShardHealth::Suspect]);
+        router.note_clean(0);
+        assert_eq!(router.shard_health(), vec![ShardHealth::Healthy]);
+        // Three consecutive soft strikes cross quarantine_after.
+        router.strike(0, StrikeKind::Soft);
+        router.strike(0, StrikeKind::Soft);
+        assert_eq!(router.shard_health(), vec![ShardHealth::Suspect]);
+        router.strike(0, StrikeKind::Soft);
+        assert_eq!(router.shard_health(), vec![ShardHealth::Quarantined]);
+        assert_eq!(router.metrics.quarantines, 1);
+        assert!(
+            router.pick(key).is_err(),
+            "quarantined shards are unroutable"
+        );
+        // The window elapses: parole to Probation, routable again.
+        std::thread::sleep(Duration::from_millis(15));
+        assert!(router.pick(key).is_ok());
+        assert_eq!(router.shard_health(), vec![ShardHealth::Probation]);
+        // probation_jobs clean outcomes restore full trust.
+        router.note_clean(0);
+        router.note_clean(0);
+        assert_eq!(router.shard_health(), vec![ShardHealth::Healthy]);
+        // A residue strike quarantines instantly, from any state.
+        router.strike(0, StrikeKind::Residue);
+        assert_eq!(router.shard_health(), vec![ShardHealth::Quarantined]);
+        assert_eq!(router.metrics.quarantines, 2);
+        // And a strike during probation is a parole violation.
+        std::thread::sleep(Duration::from_millis(15));
+        assert!(router.pick(key).is_ok());
+        assert_eq!(router.shard_health(), vec![ShardHealth::Probation]);
+        router.strike(0, StrikeKind::Soft);
+        assert_eq!(router.shard_health(), vec![ShardHealth::Quarantined]);
+        assert_eq!(router.metrics.quarantines, 3);
         router.shutdown();
         server.kill();
     }

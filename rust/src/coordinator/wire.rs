@@ -4,7 +4,7 @@
 //!
 //! ```text
 //!   magic   u16 LE  0x4D4E ("NM")
-//!   version u8      WIRE_VERSION (frames from other versions are
+//!   version u8      WIRE_VERSION_MIN..=WIRE_VERSION (anything else is
 //!                   rejected, never guessed at)
 //!   kind    u8      request 0x01..=0x07 | response 0x81..=0x87
 //!   len     u32 LE  payload byte length (<= MAX_FRAME)
@@ -17,6 +17,13 @@
 //! frames, truncated payloads and trailing payload bytes are all
 //! distinct errors — a [`Router`](super::shard::Router) must never act
 //! on a frame it only partially understood.
+//!
+//! **v2** (current) appends one residue byte to `Outcome`: the shard's
+//! mod-15 digest of the products it computed ([`RESIDUE_NONE`] when the
+//! shard did not attach one), so a router cross-checks arithmetic
+//! integrity in O(1) per outcome. v1 frames still decode (the residue
+//! reads back as `None`) for rolling shard upgrades; encoding always
+//! emits v2.
 //!
 //! [`ShardRequest`]/[`ShardResponse`] are modeled on the coordinator's
 //! [`JobOutcome`](super::JobOutcome): an `Outcome` frame carries either
@@ -37,8 +44,14 @@ use crate::workload::VectorJob;
 
 /// Frame magic: "NM" when the u16 is written little-endian.
 pub const WIRE_MAGIC: u16 = 0x4D4E;
-/// Protocol version this build speaks.
-pub const WIRE_VERSION: u8 = 1;
+/// Protocol version this build emits.
+pub const WIRE_VERSION: u8 = 2;
+/// Oldest protocol version this build still decodes (rolling upgrade:
+/// a v2 router keeps accepting outcomes from not-yet-upgraded shards).
+pub const WIRE_VERSION_MIN: u8 = 1;
+/// `Outcome` residue byte meaning "no residue attached" (v1 frames and
+/// backends that cannot digest their products).
+pub const RESIDUE_NONE: u8 = 0xFF;
 /// Hard payload-size bound (16 MiB): a corrupt length field must not
 /// make the receiver allocate unbounded memory.
 pub const MAX_FRAME: usize = 1 << 24;
@@ -97,12 +110,16 @@ pub enum ShardResponse {
     /// width serving it.
     HelloAck { epoch: u64, width: u32 },
     /// One finished job (mirrors [`super::JobOutcome`]): products, or
-    /// the contained per-job error text.
+    /// the contained per-job error text. `residue` is the shard's
+    /// mod-15 digest of the products ([`crate::integrity`]) — `None`
+    /// on v1 frames, on errors, and from shards that did not attach
+    /// one.
     Outcome {
         epoch: u64,
         id: u64,
         latency_us: u64,
         result: Result<Vec<u32>, String>,
+        residue: Option<u8>,
     },
     /// Drain barrier complete; `n` outcomes were delivered since the
     /// matching `Drain`.
@@ -258,18 +275,18 @@ impl<'a> Rd<'a> {
 }
 
 /// Read one frame header + payload from `r`.
-fn read_frame<R: Read>(r: &mut R) -> Result<(u8, Vec<u8>)> {
+fn read_frame<R: Read>(r: &mut R) -> Result<(u8, u8, Vec<u8>)> {
     let mut header = [0u8; HEADER_LEN];
     r.read_exact(&mut header)
         .map_err(|e| anyhow!("reading frame header: {e}"))?;
-    let (kind, len) = parse_header(&header)?;
+    let (version, kind, len) = parse_header(&header)?;
     let mut payload = vec![0u8; len];
     r.read_exact(&mut payload)
         .map_err(|e| anyhow!("reading {len}-byte payload: {e}"))?;
-    Ok((kind, payload))
+    Ok((version, kind, payload))
 }
 
-fn parse_header(header: &[u8; HEADER_LEN]) -> Result<(u8, usize)> {
+fn parse_header(header: &[u8; HEADER_LEN]) -> Result<(u8, u8, usize)> {
     let magic = u16::from_le_bytes([header[0], header[1]]);
     ensure!(
         magic == WIRE_MAGIC,
@@ -277,9 +294,9 @@ fn parse_header(header: &[u8; HEADER_LEN]) -> Result<(u8, usize)> {
     );
     let version = header[2];
     ensure!(
-        version == WIRE_VERSION,
+        (WIRE_VERSION_MIN..=WIRE_VERSION).contains(&version),
         "unsupported wire version {version} (this build speaks \
-         {WIRE_VERSION})"
+         {WIRE_VERSION_MIN}..={WIRE_VERSION})"
     );
     let kind = header[3];
     let len = u32::from_le_bytes([header[4], header[5], header[6], header[7]])
@@ -288,25 +305,25 @@ fn parse_header(header: &[u8; HEADER_LEN]) -> Result<(u8, usize)> {
         len <= MAX_FRAME,
         "frame payload of {len} bytes exceeds the {MAX_FRAME}-byte bound"
     );
-    Ok((kind, len))
+    Ok((version, kind, len))
 }
 
-/// Split an in-memory frame into (kind, payload) — the property-test /
-/// golden-vector entry point.
-fn split_frame(bytes: &[u8]) -> Result<(u8, &[u8])> {
+/// Split an in-memory frame into (version, kind, payload) — the
+/// property-test / golden-vector entry point.
+fn split_frame(bytes: &[u8]) -> Result<(u8, u8, &[u8])> {
     ensure!(
         bytes.len() >= HEADER_LEN,
         "frame shorter than the {HEADER_LEN}-byte header"
     );
     let header: [u8; HEADER_LEN] = bytes[..HEADER_LEN].try_into().unwrap();
-    let (kind, len) = parse_header(&header)?;
+    let (version, kind, len) = parse_header(&header)?;
     ensure!(
         bytes.len() == HEADER_LEN + len,
         "frame length {} disagrees with header ({} expected)",
         bytes.len(),
         HEADER_LEN + len
     );
-    Ok((kind, &bytes[HEADER_LEN..]))
+    Ok((version, kind, &bytes[HEADER_LEN..]))
 }
 
 fn arch_index(arch: Arch) -> u8 {
@@ -352,9 +369,10 @@ impl ShardRequest {
         frame(kind, p)
     }
 
-    /// Strict inverse of [`ShardRequest::encode`].
+    /// Strict inverse of [`ShardRequest::encode`]. Request payloads are
+    /// identical in v1 and v2, so the version only gates the header.
     pub fn decode(bytes: &[u8]) -> Result<Self> {
-        let (kind, payload) = split_frame(bytes)?;
+        let (_version, kind, payload) = split_frame(bytes)?;
         Self::decode_payload(kind, payload)
     }
 
@@ -392,7 +410,7 @@ impl ShardRequest {
 
     /// Read one frame from a stream (blocking).
     pub fn read_from<R: Read>(r: &mut R) -> Result<Self> {
-        let (kind, payload) = read_frame(r)?;
+        let (_version, kind, payload) = read_frame(r)?;
         Self::decode_payload(kind, &payload)
     }
 }
@@ -412,6 +430,7 @@ impl ShardResponse {
                 id,
                 latency_us,
                 result,
+                residue,
             } => {
                 put_u64(&mut p, *epoch);
                 put_u64(&mut p, *id);
@@ -426,6 +445,9 @@ impl ShardResponse {
                         put_str(&mut p, msg);
                     }
                 }
+                // v2: one trailing residue byte (RESIDUE_NONE = none).
+                debug_assert!(residue.map_or(true, |r| r < 15));
+                p.push(residue.unwrap_or(RESIDUE_NONE));
                 K_OUTCOME
             }
             ShardResponse::Drained { epoch, n } => {
@@ -457,13 +479,14 @@ impl ShardResponse {
         frame(kind, p)
     }
 
-    /// Strict inverse of [`ShardResponse::encode`].
+    /// Strict inverse of [`ShardResponse::encode`]; also decodes v1
+    /// frames (whose `Outcome` carries no residue byte).
     pub fn decode(bytes: &[u8]) -> Result<Self> {
-        let (kind, payload) = split_frame(bytes)?;
-        Self::decode_payload(kind, payload)
+        let (version, kind, payload) = split_frame(bytes)?;
+        Self::decode_payload(version, kind, payload)
     }
 
-    fn decode_payload(kind: u8, payload: &[u8]) -> Result<Self> {
+    fn decode_payload(version: u8, kind: u8, payload: &[u8]) -> Result<Self> {
         let mut rd = Rd::new(payload);
         let resp = match kind {
             K_HELLO_ACK => ShardResponse::HelloAck {
@@ -479,11 +502,24 @@ impl ShardResponse {
                     0 => Err(rd.str()?),
                     tag => bail!("bad outcome tag {tag} (want 0 | 1)"),
                 };
+                // The residue byte exists only from v2 on; a v1 shard
+                // simply never attached one.
+                let residue = if version >= 2 {
+                    match rd.u8()? {
+                        RESIDUE_NONE => None,
+                        r if r < 15 => Some(r),
+                        r => bail!("bad residue byte {r:#04x} (want \
+                                    0..=14 | 0xff)"),
+                    }
+                } else {
+                    None
+                };
                 ShardResponse::Outcome {
                     epoch,
                     id,
                     latency_us,
                     result,
+                    residue,
                 }
             }
             K_DRAINED => ShardResponse::Drained {
@@ -520,8 +556,8 @@ impl ShardResponse {
 
     /// Read one frame from a stream (blocking).
     pub fn read_from<R: Read>(r: &mut R) -> Result<Self> {
-        let (kind, payload) = read_frame(r)?;
-        Self::decode_payload(kind, &payload)
+        let (version, kind, payload) = read_frame(r)?;
+        Self::decode_payload(version, kind, &payload)
     }
 }
 
@@ -579,6 +615,11 @@ mod tests {
                         .collect())
                 } else {
                     Err(rand_string(rng, 40))
+                },
+                residue: if rng.chance(0.5) {
+                    Some(rng.below(15) as u8)
+                } else {
+                    None
                 },
             },
             2 => ShardResponse::Drained {
@@ -713,7 +754,7 @@ mod tests {
         };
         assert_eq!(
             req.encode(),
-            hex("4e4d01010b0000000208000000020000007430")
+            hex("4e4d02010b0000000208000000020000007430")
         );
         let req = ShardRequest::Submit {
             job: VectorJob {
@@ -725,22 +766,24 @@ mod tests {
         assert_eq!(
             req.encode(),
             hex(
-                "4e4d0102140000000807060504030201\
+                "4e4d0202140000000807060504030201\
                  4d00030000000100ff000001"
             )
         );
-        assert_eq!(ShardRequest::Flush.encode(), hex("4e4d010300000000"));
+        assert_eq!(ShardRequest::Flush.encode(), hex("4e4d020300000000"));
         let resp = ShardResponse::Outcome {
             epoch: 3,
             id: 9,
             latency_us: 1500,
             result: Ok(vec![6, 700000]),
+            // (6 % 15) + (700000 % 15) = 6 + 10 ≡ 1 (mod 15)
+            residue: Some(1),
         };
         assert_eq!(
             resp.encode(),
             hex(
-                "4e4d018225000000030000000000000009000000000000\
-                 00dc0500000000000001020000000600000060ae0a00"
+                "4e4d028226000000030000000000000009000000000000\
+                 00dc0500000000000001020000000600000060ae0a0001"
             )
         );
         let resp = ShardResponse::Outcome {
@@ -748,12 +791,13 @@ mod tests {
             id: 9,
             latency_us: 1500,
             result: Err("boom".into()),
+            residue: None,
         };
         assert_eq!(
             resp.encode(),
             hex(
-                "4e4d018221000000030000000000000009000000000000\
-                 00dc050000000000000004000000626f6f6d"
+                "4e4d028222000000030000000000000009000000000000\
+                 00dc050000000000000004000000626f6f6dff"
             )
         );
         let resp = ShardResponse::Error {
@@ -762,8 +806,82 @@ mod tests {
         };
         assert_eq!(
             resp.encode(),
-            hex("4e4d01870f0000000200090000006e6f2064657369676e")
+            hex("4e4d02870f0000000200090000006e6f2064657369676e")
         );
+    }
+
+    /// The exact v1 byte streams from the previous protocol revision
+    /// must keep decoding (rolling upgrade: a v2 router in front of a
+    /// v1 shard). The v1 `Outcome` has no residue byte — it reads back
+    /// as `None`.
+    #[test]
+    fn v1_frames_still_decode() {
+        let req = ShardRequest::decode(&hex(
+            "4e4d01010b0000000208000000020000007430",
+        ))
+        .unwrap();
+        assert_eq!(
+            req,
+            ShardRequest::Hello {
+                arch: Arch::Nibble,
+                n: 8,
+                tenant: "t0".into(),
+            }
+        );
+        let resp = ShardResponse::decode(&hex(
+            "4e4d018225000000030000000000000009000000000000\
+             00dc0500000000000001020000000600000060ae0a00",
+        ))
+        .unwrap();
+        assert_eq!(
+            resp,
+            ShardResponse::Outcome {
+                epoch: 3,
+                id: 9,
+                latency_us: 1500,
+                result: Ok(vec![6, 700000]),
+                residue: None,
+            }
+        );
+        let resp = ShardResponse::decode(&hex(
+            "4e4d018221000000030000000000000009000000000000\
+             00dc050000000000000004000000626f6f6d",
+        ))
+        .unwrap();
+        assert_eq!(
+            resp,
+            ShardResponse::Outcome {
+                epoch: 3,
+                id: 9,
+                latency_us: 1500,
+                result: Err("boom".into()),
+                residue: None,
+            }
+        );
+        // A v1-framed Outcome carrying a trailing residue byte anyway
+        // is malformed (trailing bytes), and a v2 residue byte outside
+        // 0..=14 | 0xff is refused.
+        let mut v1_with_residue = hex(
+            "4e4d018225000000030000000000000009000000000000\
+             00dc0500000000000001020000000600000060ae0a00",
+        );
+        v1_with_residue.push(0x01);
+        let len = (v1_with_residue.len() - HEADER_LEN) as u32;
+        v1_with_residue[4..8].copy_from_slice(&len.to_le_bytes());
+        let e = ShardResponse::decode(&v1_with_residue).unwrap_err();
+        assert!(format!("{e}").contains("trailing"), "{e}");
+        let mut bad_residue = ShardResponse::Outcome {
+            epoch: 1,
+            id: 2,
+            latency_us: 3,
+            result: Ok(vec![4]),
+            residue: None,
+        }
+        .encode();
+        let last = bad_residue.len() - 1;
+        bad_residue[last] = 0x20;
+        let e = ShardResponse::decode(&bad_residue).unwrap_err();
+        assert!(format!("{e}").contains("residue"), "{e}");
     }
 
     fn hex(s: &str) -> Vec<u8> {

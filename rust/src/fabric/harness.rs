@@ -364,6 +364,56 @@ impl VectorUnit {
         self.run_op_wide::<u64>(sim, a, b)
     }
 
+    /// Netlist ids of the primary-input ports (`a`, `b`, `start`). The
+    /// soft-error campaign ([`crate::integrity::soft_error_campaign`])
+    /// excludes these from fault injection: a flipped primary input is
+    /// an *operand* error — the multiplier then correctly computes a
+    /// different product — which the mod-15 guard detects only
+    /// probabilistically (the fold is over the operands that were
+    /// submitted, not the ones the logic consumed). Logic and state
+    /// faults are the class the residue algebra covers.
+    pub fn input_nets(&self) -> Vec<usize> {
+        self.io
+            .a
+            .iter()
+            .chain(self.io.b.iter())
+            .map(|id| id.0 as usize)
+            .chain(std::iter::once(self.io.start.0 as usize))
+            .collect()
+    }
+
+    /// Netlist ids of the product bus `r` (element-major, 16 bits per
+    /// element) — the provably-always-detected injection targets: a
+    /// single flipped product bit changes the element by `±2^k`, and
+    /// `2^k mod 15` is never zero.
+    pub fn product_nets(&self) -> Vec<usize> {
+        self.io.r.iter().map(|id| id.0 as usize).collect()
+    }
+
+    /// Re-drive the `start` strobe on every lane without clocking (the
+    /// fault campaign holds `start` high so a combinational design's
+    /// product bus stays valid across the post-op settle).
+    pub fn hold_start_wide<W: Word>(
+        &self,
+        sim: &mut SimulatorWide<W>,
+        on: bool,
+    ) {
+        sim.poke_net_mask(
+            self.io.start,
+            if on { W::splat(true) } else { W::zero() },
+        );
+    }
+
+    /// Re-read the settled product buses without driving a new
+    /// operation (used after a fault injection + `settle_dirty` to
+    /// observe what the corrupted datapath now outputs).
+    pub fn peek_products_wide<W: Word>(
+        &self,
+        sim: &SimulatorWide<W>,
+    ) -> Vec<Vec<u32>> {
+        self.read_products_wide(sim)
+    }
+
     fn read_products_wide<W: Word>(
         &self,
         sim: &SimulatorWide<W>,

@@ -160,12 +160,29 @@ impl JobExecutor for FabricExec {
         let mut batcher = Batcher::new(self.cfg);
         let mut out: Vec<Vec<u32>> =
             jobs.iter().map(|j| vec![0; j.a.len()]).collect();
+        // Fold each job's operand digit-sum residue at plan time; the
+        // assembled products must reproduce it or the fabric (or the
+        // assembly plumbing between batches and jobs) corrupted a bit.
+        let digests: Vec<u8> = jobs
+            .iter()
+            .map(|j| crate::integrity::job_residue(&j.a, j.b))
+            .collect();
         for job in jobs {
             batcher.push(job);
         }
         let batches = batcher.flush();
         self.stats.merge(&batcher.stats());
         self.exec_batches(&batches, &mut out)?;
+        for (job, products) in jobs.iter().zip(&out) {
+            let got = crate::integrity::products_residue(products);
+            let want = digests[job.id as usize];
+            ensure!(
+                got == want,
+                "job {}: product digest {got} != operand fold {want} \
+                 (mod-15 residue guard caught a corrupted product)",
+                job.id
+            );
+        }
         Ok(out
             .into_iter()
             .enumerate()

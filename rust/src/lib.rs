@@ -15,8 +15,9 @@
 //!   organizations ([`fabric`]), a conv2d/GEMM lowering engine that turns
 //!   matrix workloads into broadcast-reuse vector jobs ([`kernels`]),
 //!   word-level golden models ([`model`]), a serving coordinator
-//!   ([`coordinator`]) and the PJRT runtime that executes the AOT-lowered
-//!   JAX artifacts ([`runtime`]).
+//!   ([`coordinator`]), mod-15 residue guards for runtime arithmetic
+//!   integrity ([`integrity`]) and the PJRT runtime that executes the
+//!   AOT-lowered JAX artifacts ([`runtime`]).
 //! * **L2/L1 (python/, build-time only)** — the same nibble algorithm as a
 //!   Pallas kernel inside a quantized-MLP JAX graph, lowered once to HLO
 //!   text; Python never runs at serving time.
@@ -42,6 +43,7 @@ pub mod cli;
 pub mod coordinator;
 pub mod design;
 pub mod fabric;
+pub mod integrity;
 pub mod kernels;
 pub mod model;
 pub mod multipliers;

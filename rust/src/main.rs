@@ -29,6 +29,11 @@
 //!   bench-attn          per-phase coalescing of the attention chain:
 //!                       stationary QKᵀ vs churning P·V hit rates on a
 //!                       bounded buffer (BENCH_attn.json)
+//!   bench-integrity     measured soft-error campaign: seeded bit flips
+//!                       injected into the gate-level datapath per
+//!                       arch × width; detection coverage, escape rate
+//!                       and re-execution overhead of the mod-15
+//!                       residue guard (BENCH_integrity.json)
 //!   bench-all           every bench above + merged BENCH_all.json with
 //!                       one --check gate
 //!   report              the paper figures, in order (paper reproduction)
@@ -106,6 +111,7 @@ fn run(args: &Args) -> Result<()> {
         "bench-sim" => cmd_bench_sim(args),
         "bench-synth" => cmd_bench_synth(args),
         "bench-gemm" => cmd_bench_gemm(args),
+        "bench-integrity" => cmd_bench_integrity(args),
         "bench-all" => cmd_bench_all(args),
         "report" => cmd_report(args),
         _ => {
@@ -140,29 +146,46 @@ COMMANDS
   serve --shard-server --listen ADDR [--workers 2] [--exact|--batched]
           [--arch A --width N] [--label NAME] [--artifact-cache DIR]
                                           one shard server speaking the
-                                          length-prefixed wire protocol (v1,
-                                          magic 0x4D4E) on a unix socket path
+                                          length-prefixed wire protocol (v2,
+                                          magic 0x4D4E; v1 frames still
+                                          decode) on a unix socket path
                                           (contains '/' or ends .sock) or
                                           host:port; --arch/--width pin the
                                           served design key; --artifact-cache
                                           enables crash-safe warm start from
                                           on-disk compiled-design artifacts
   serve --router --shards <N|addr,...> [--jobs 256] [--tenants 2]
-          [--retries 3] [--timeout-ms 5000] [--chaos-kill] [--chaos-restart]
-          [--gemm [--m 24 --k 12 --n 12]] [--expect-clean]
+          [--retries 3] [--timeout-ms 5000] [--backoff-base-ms 25]
+          [--backoff-max-ms 2000] [--router-seed S] [--suspect-after 1]
+          [--quarantine-after 3] [--quarantine-window-ms 2000]
+          [--probation-jobs 8] [--fallback]
+          [--chaos-kill] [--chaos-restart] [--chaos-bitflip]
+          [--gemm [--m 24 --k 12 --n 12]] [--expect-clean] [--expect-detect]
           [--exact|--batched] [--arch nibble] [--width 16]
                                           shard a job stream across shard
                                           servers (integer N: in-process
                                           loopback cluster) with health checks,
                                           deadlines, bounded retry + reroute,
-                                          per-tenant admission control;
+                                          per-tenant admission control, and the
+                                          mod-15 residue guard + shard health
+                                          FSM (suspect/quarantine/probation
+                                          knobs above; --router-seed seeds the
+                                          backoff jitter; --fallback installs
+                                          the in-process degradation executor);
                                           --chaos-kill hard-kills shard 0
                                           mid-stream (--chaos-restart brings it
-                                          back on the same socket); --gemm
-                                          streams an int8 GEMM through the
-                                          tier and checks the i32 oracle;
-                                          --expect-clean fails unless every
-                                          job succeeded despite chaos
+                                          back on the same socket);
+                                          --chaos-bitflip makes shard 0
+                                          silently flip one product bit per
+                                          batch — the guard must detect and
+                                          quarantine; --gemm streams an int8
+                                          GEMM through the tier and checks the
+                                          i32 oracle; --expect-clean fails
+                                          unless every job settled exactly
+                                          once, bit-correct, within the retry
+                                          budget; --expect-detect additionally
+                                          requires the guard to have caught
+                                          >= 1 corruption with zero escapes
   mlp     [--backend pjrt|sim|exact] [--arch nibble] [--limit 64]
                                           INT8 inference end-to-end (sim
                                           backend runs batched whole-layer
@@ -233,6 +256,20 @@ COMMANDS
                                           lanes, forced flushes (--check:
                                           stationary phase must strictly
                                           out-coalesce the churning phase)
+  bench-integrity [--archs all] [--widths 2,4] [--trials 64] [--seed 2026]
+          [--out BENCH_integrity.json] [--check]
+                                          measured soft-error campaign: per
+                                          arch × width, inject single-bit
+                                          faults (one net/register lane each)
+                                          into the settled gate-level
+                                          datapath and classify every one as
+                                          masked (output-equivalent escape),
+                                          detected (mod-15 residue mismatch,
+                                          timed fresh-instance re-execution)
+                                          or silent (corrupted yet aliased to
+                                          a multiple of 15); --check enforces
+                                          >= 99% detection of corrupting
+                                          faults and zero silent escapes
   bench-all [--out BENCH_all.json] [--check]
                                           run bench-sim, bench-synth and
                                           bench-gemm, merge their JSON into one
@@ -572,7 +609,10 @@ fn cmd_serve_shard_server(args: &Args) -> Result<()> {
             "sim backends"
         }
     );
-    println!("wire protocol v1 (magic 0x4D4E); ctrl-c to stop");
+    println!(
+        "wire protocol v2 (magic 0x4D4E, outcomes carry the mod-15 \
+         digest; v1 peers still decode); ctrl-c to stop"
+    );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
@@ -597,10 +637,26 @@ fn cmd_serve_router(args: &Args) -> Result<()> {
     let seed = args.get_u64("seed", 7)?;
     let chaos_kill = args.has("chaos-kill");
     let chaos_restart = args.has("chaos-restart");
+    let chaos_bitflip = args.has("chaos-bitflip");
     let key = DesignKey { arch, n: width };
     maybe_enable_artifact_cache(args)?;
 
-    // In-process loopback cluster, or external shard addresses.
+    // In-process loopback cluster, or external shard addresses. Under
+    // --chaos-bitflip, shard 0's backends silently flip one product bit
+    // per batch (every broadcast operand is in the corrupt set) — the
+    // router's residue guard must catch it, quarantine the shard, and
+    // reroute; nothing is allowed to surface as a wrong product.
+    let corrupt_factory: nibblemul::coordinator::BackendFactory =
+        Arc::new(move |_key| {
+            Ok((0..workers.max(1))
+                .map(|_| {
+                    Box::new(
+                        nibblemul::coordinator::FailingBackend::new(vec![])
+                            .corrupting((0..=255).collect()),
+                    ) as Box<dyn Backend>
+                })
+                .collect())
+        });
     let mut servers: Vec<Option<ShardServer>> = Vec::new();
     let specs: Vec<ShardSpec> = if let Ok(n) = shards_flag.parse::<usize>()
     {
@@ -611,9 +667,17 @@ fn cmd_serve_router(args: &Args) -> Result<()> {
                 let addr = loopback_addr("serve");
                 let server = ShardServer::spawn(
                     addr.clone(),
-                    factory.clone(),
+                    if chaos_bitflip && i == 0 {
+                        corrupt_factory.clone()
+                    } else {
+                        factory.clone()
+                    },
                     ShardServerConfig {
-                        label: format!("shard{i}"),
+                        label: if chaos_bitflip && i == 0 {
+                            format!("shard{i}-bitflip")
+                        } else {
+                            format!("shard{i}")
+                        },
                         ..ShardServerConfig::default()
                     },
                 )?;
@@ -634,21 +698,61 @@ fn cmd_serve_router(args: &Args) -> Result<()> {
         !chaos_kill || !servers.is_empty(),
         "--chaos-kill needs an in-process cluster (--shards N)"
     );
+    anyhow::ensure!(
+        !chaos_bitflip || servers.len() >= 2 || args.has("fallback"),
+        "--chaos-bitflip needs an in-process cluster with a healthy \
+         sibling (--shards >= 2) or --fallback to reroute onto"
+    );
     println!(
         "router: {} shards for {key}, {n_jobs} jobs across {tenants} \
-         tenants{}",
+         tenants{}{}",
         specs.len(),
-        if chaos_kill { " (chaos: kill shard 0 mid-stream)" } else { "" }
+        if chaos_kill { " (chaos: kill shard 0 mid-stream)" } else { "" },
+        if chaos_bitflip {
+            " (chaos: shard 0 silently corrupts one product bit/batch)"
+        } else {
+            ""
+        }
     );
 
+    let dflt = RouterConfig::default();
+    let ms = std::time::Duration::from_millis;
     let cfg = RouterConfig {
-        request_timeout: std::time::Duration::from_millis(
-            args.get_u64("timeout-ms", 5000)?,
-        ),
+        request_timeout: ms(args.get_u64("timeout-ms", 5000)?),
         max_attempts: args.get_u64("retries", 3)?.max(1) as u32,
-        ..RouterConfig::default()
+        backoff_base: ms(args.get_u64(
+            "backoff-base-ms",
+            dflt.backoff_base.as_millis() as u64,
+        )?),
+        backoff_max: ms(args.get_u64(
+            "backoff-max-ms",
+            dflt.backoff_max.as_millis() as u64,
+        )?),
+        seed: args.get_u64("router-seed", dflt.seed)?,
+        suspect_after: args
+            .get_u64("suspect-after", dflt.suspect_after as u64)?
+            .max(1) as u32,
+        quarantine_after: args
+            .get_u64("quarantine-after", dflt.quarantine_after as u64)?
+            .max(1) as u32,
+        quarantine_window: ms(args.get_u64(
+            "quarantine-window-ms",
+            dflt.quarantine_window.as_millis() as u64,
+        )?),
+        probation_jobs: args
+            .get_u64("probation-jobs", dflt.probation_jobs as u64)?
+            .max(1) as u32,
+        ..dflt
     };
+    let max_attempts = cfg.max_attempts;
     let mut router = Router::connect(specs, cfg)?;
+    if args.has("fallback") {
+        // Degradation ladder's last rung: when every shard serving the
+        // key is down or quarantined, jobs execute in-process (still
+        // residue-guarded) instead of failing.
+        router.set_fallback(shard_factory(args, workers)?);
+        println!("fallback: in-process degradation executor installed");
+    }
 
     if args.has("gemm") {
         // Int8 GEMM lowered onto the sharded tier: the same
@@ -697,6 +801,21 @@ fn cmd_serve_router(args: &Args) -> Result<()> {
             "{:.0} products/s (wall)",
             spec.products() as f64 / elapsed
         );
+        if args.has("expect-detect") {
+            let m = router.metrics();
+            anyhow::ensure!(
+                m.residue_mismatches >= 1 && m.quarantines >= 1,
+                "--expect-detect: GEMM stream saw {} residue \
+                 mismatches, {} quarantines",
+                m.residue_mismatches,
+                m.quarantines
+            );
+            println!(
+                "detected {} corruptions, {} quarantines, bit-exact \
+                 result anyway",
+                m.residue_mismatches, m.quarantines
+            );
+        }
         router.shutdown();
         for server in servers.into_iter().flatten() {
             server.kill();
@@ -746,20 +865,30 @@ fn cmd_serve_router(args: &Args) -> Result<()> {
     let mut correct = 0usize;
     let mut failed = 0usize;
     let mut rerouted = 0usize;
+    // Residue escapes: outcomes the tier settled as Ok whose products
+    // are wrong anyway — corruption that slipped past the guard.
+    let mut escapes = 0usize;
+    // Outcomes that consumed more attempts than the configured budget
+    // (would mean a silent re-execution loop inside the router).
+    let mut over_budget = 0usize;
     for (job, out) in jobs.iter().zip(&sorted) {
         if out.attempts > 1 {
             rerouted += 1;
         }
+        if out.attempts > max_attempts {
+            over_budget += 1;
+        }
         match &out.result {
             Ok(products) if products == &job.expected() => correct += 1,
-            Ok(_) => {}
+            Ok(_) => escapes += 1,
             Err(_) => failed += 1,
         }
     }
+    let metrics = router.metrics();
     println!("{}", router.scrape());
     println!(
-        "correct {correct}/{} ({failed} failed, {rerouted} rerouted), \
-         {:.0} jobs/s (wall)",
+        "correct {correct}/{} ({failed} failed, {rerouted} rerouted, \
+         {escapes} residue escapes), {:.0} jobs/s (wall)",
         jobs.len(),
         jobs.len() as f64 / elapsed
     );
@@ -771,16 +900,46 @@ fn cmd_serve_router(args: &Args) -> Result<()> {
     // survivor to reroute to legitimately fails its jobs);
     // --expect-clean demands zero loss anyway — the CI smoke uses it
     // with >= 2 shards, where containment must reroute everything.
-    if args.has("expect-clean") {
+    // It also refuses silently re-executed jobs (attempts beyond the
+    // retry budget) and residue escapes (Ok-but-wrong products), not
+    // just lost jobs.
+    if args.has("expect-clean") || args.has("expect-detect") {
         anyhow::ensure!(
             failed == 0 && correct == jobs.len(),
             "--expect-clean: {correct}/{} correct, {failed} failed",
             jobs.len()
         );
+        anyhow::ensure!(
+            escapes == 0,
+            "--expect-clean: {escapes} corrupted products settled as Ok \
+             (residue guard escapes)"
+        );
+        anyhow::ensure!(
+            over_budget == 0,
+            "--expect-clean: {over_budget} jobs re-executed beyond the \
+             {max_attempts}-attempt retry budget"
+        );
     } else {
         anyhow::ensure!(
-            failed == 0 || chaos_kill,
+            failed == 0 || chaos_kill || chaos_bitflip,
             "{failed} jobs failed without chaos injection"
+        );
+    }
+    // --expect-detect: the bit-flip chaos leg's gate — the guard must
+    // actually have caught corruption and quarantined the shard.
+    if args.has("expect-detect") {
+        anyhow::ensure!(
+            metrics.residue_mismatches >= 1,
+            "--expect-detect: no residue mismatch was detected \
+             (expected the corrupting shard to be caught)"
+        );
+        anyhow::ensure!(
+            metrics.quarantines >= 1,
+            "--expect-detect: no shard was quarantined"
+        );
+        println!(
+            "detected {} corruptions, {} quarantines, zero escapes",
+            metrics.residue_mismatches, metrics.quarantines
         );
     }
     Ok(())
@@ -1740,6 +1899,117 @@ fn cmd_bench_gemm(args: &Args) -> Result<()> {
         println!(
             "check passed: weight-stationary >= 1.0x fewer fabric ops \
              than naive ({speedup_ops:.2}x)"
+        );
+    }
+    Ok(())
+}
+
+/// `bench-integrity`: the measured soft-error campaign. For every
+/// requested arch × width cell, inject `--trials` seeded single-bit
+/// faults (one net or register lane each, operand ports excluded) into
+/// the settled gate-level datapath, classify each as masked / detected
+/// / silent against the mod-15 residue guard, time the fresh-instance
+/// re-execution of every detection, and write BENCH_integrity.json.
+fn cmd_bench_integrity(args: &Args) -> Result<()> {
+    let archs: Vec<Arch> = match args.get("archs") {
+        None => Arch::ALL.to_vec(),
+        Some(s) if s == "all" => Arch::ALL.to_vec(),
+        Some(s) => s
+            .split(',')
+            .map(|t| {
+                Arch::parse(t.trim())
+                    .ok_or_else(|| anyhow!("unknown arch {t}"))
+            })
+            .collect::<Result<_>>()?,
+    };
+    let widths = args.get_usize_list("widths", &[2, 4])?;
+    let trials = args.get_u64("trials", 64)?;
+    let seed = args.get_u64("seed", 2026)?;
+    let out = args.get_or("out", "BENCH_integrity.json");
+    println!(
+        "bench-integrity: {} archs x {:?} widths, {trials} injected \
+         faults per cell (seed {seed})",
+        archs.len(),
+        widths
+    );
+
+    let mut rows = String::new();
+    let mut min_coverage = 1.0f64;
+    let mut silent_total = 0u64;
+    let mut detected_total = 0u64;
+    let mut corrupted_total = 0u64;
+    for (ai, &arch) in archs.iter().enumerate() {
+        for (wi, &n) in widths.iter().enumerate() {
+            // Per-cell seed derivation keeps cells independent and the
+            // whole campaign reproducible from one --seed.
+            let cell_seed =
+                seed ^ ((ai as u64 + 1) << 32) ^ ((wi as u64 + 1) << 16);
+            let r = nibblemul::integrity::soft_error_campaign(
+                arch, n, trials, cell_seed,
+            )?;
+            println!(
+                "  {arch} x{n}: {} corrupted of {trials} ({} masked), \
+                 {} detected ({:.1}% coverage), {} silent, reexec \
+                 overhead {:.3}x",
+                r.corrupted(),
+                r.masked,
+                r.detected,
+                r.coverage() * 100.0,
+                r.silent,
+                r.reexec_overhead()
+            );
+            min_coverage = min_coverage.min(r.coverage());
+            silent_total += r.silent;
+            detected_total += r.detected;
+            corrupted_total += r.corrupted();
+            if !rows.is_empty() {
+                rows.push_str(",\n");
+            }
+            rows.push_str(&format!(
+                "    {{\"arch\": \"{arch}\", \"width\": {n}, \
+                 \"trials\": {}, \"masked\": {}, \"detected\": {}, \
+                 \"silent\": {}, \"coverage\": {:.4}, \
+                 \"escape_rate\": {:.4}, \"reexec_ok\": {}, \
+                 \"reexec_overhead\": {:.4}}}",
+                r.trials,
+                r.masked,
+                r.detected,
+                r.silent,
+                r.coverage(),
+                r.escape_rate(),
+                r.reexec_ok,
+                r.reexec_overhead()
+            ));
+        }
+    }
+    println!(
+        "campaign: {detected_total}/{corrupted_total} corrupting faults \
+         detected (min cell coverage {:.1}%), {silent_total} silent \
+         escapes",
+        min_coverage * 100.0
+    );
+    let json = format!(
+        "{{\n  \"bench\": \"integrity\",\n  \"workload\": \"seeded \
+         single-bit soft errors vs the mod-15 residue guard, \
+         {trials} faults per arch x width cell\",\n  \
+         \"seed\": {seed},\n  \"rows\": [\n{rows}\n  ],\n  \
+         \"min_coverage\": {min_coverage:.4},\n  \
+         \"silent_escapes\": {silent_total}\n}}\n"
+    );
+    std::fs::write(&out, json)?;
+    println!("wrote {out}");
+    if args.has("check") {
+        anyhow::ensure!(
+            min_coverage >= 0.99,
+            "detection coverage {:.2}% is below the 99% acceptance \
+             floor",
+            min_coverage * 100.0
+        );
+        anyhow::ensure!(
+            silent_total == 0,
+            "{silent_total} injected faults corrupted a product yet \
+             passed the residue check — escapes are not \
+             output-equivalent"
         );
     }
     Ok(())

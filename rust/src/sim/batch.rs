@@ -72,6 +72,27 @@ pub fn lane_seeds_n(seed: u64, lanes: usize) -> Vec<u64> {
     (0..lanes).map(|_| sm.next_u64()).collect()
 }
 
+/// One injected soft-error site: a single bit of a single lane flipped
+/// at a single instant (see [`SimulatorWide::inject_random_fault`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultSite {
+    /// Bit flip on a wire (netlist net-index space).
+    Net { net: usize, lane: usize },
+    /// Register upset (index into the program's DFF list).
+    Reg { dff: usize, lane: usize },
+}
+
+impl FaultSite {
+    /// The lane the fault was injected into.
+    pub fn lane(&self) -> usize {
+        match *self {
+            FaultSite::Net { lane, .. } | FaultSite::Reg { lane, .. } => {
+                lane
+            }
+        }
+    }
+}
+
 /// `W::LANES`-lane cycle-accurate simulator over a shared compiled
 /// [`Program`].
 ///
@@ -297,6 +318,65 @@ impl<W: Word> SimulatorWide<W> {
     pub fn poke_net_mask(&mut self, net: crate::netlist::NetId, mask: W) {
         let idx = self.prog.slot(net.idx());
         self.write::<true>(idx, mask);
+    }
+
+    /// Nets addressable by [`SimulatorWide::flip_net_lane`] (netlist
+    /// net-index space).
+    pub fn n_injectable_nets(&self) -> usize {
+        self.prog.n_nets
+    }
+
+    /// Registers addressable by [`SimulatorWide::flip_reg_lane`].
+    pub fn n_dffs(&self) -> usize {
+        self.prog.dffs.len()
+    }
+
+    /// Inject a single-event upset on a wire: flip one lane of netlist
+    /// net `net_index` and mark its reader cone dirty. The flipped net
+    /// is not re-driven until its own driver re-evaluates, so a
+    /// following [`SimulatorWide::settle_dirty`] (or [`SimulatorWide::step`])
+    /// propagates the corruption downstream exactly once — the
+    /// transient-fault model of the soft-error campaign.
+    pub fn flip_net_lane(&mut self, net_index: usize, lane: usize) {
+        debug_assert!(net_index < self.prog.n_nets);
+        debug_assert!(lane < W::LANES);
+        let idx = self.prog.slot(net_index);
+        let mut v = self.values[idx];
+        v.set_lane(lane, !v.lane(lane));
+        self.write::<true>(idx, v);
+    }
+
+    /// Inject a register upset: flip one lane of DFF `dff`'s stored
+    /// state (its `q` net) and mark the reader cone dirty. The flip
+    /// holds until the next rising edge recomputes `q` from `d`.
+    pub fn flip_reg_lane(&mut self, dff: usize, lane: usize) {
+        debug_assert!(dff < self.prog.dffs.len());
+        debug_assert!(lane < W::LANES);
+        let idx = self.prog.dffs[dff].q as usize;
+        let mut v = self.values[idx];
+        v.set_lane(lane, !v.lane(lane));
+        self.write::<true>(idx, v);
+    }
+
+    /// Inject one uniformly chosen single-bit fault — a wire or a
+    /// register bit, on one lane — and return the site. Deterministic
+    /// in `rng`, so a campaign seed reproduces its fault list exactly.
+    pub fn inject_random_fault(
+        &mut self,
+        rng: &mut crate::util::Xoshiro256,
+    ) -> FaultSite {
+        let lane = rng.below(W::LANES as u64) as usize;
+        let n_nets = self.prog.n_nets;
+        let pick =
+            rng.below((n_nets + self.prog.dffs.len()) as u64) as usize;
+        if pick < n_nets {
+            self.flip_net_lane(pick, lane);
+            FaultSite::Net { net: pick, lane }
+        } else {
+            let dff = pick - n_nets;
+            self.flip_reg_lane(dff, lane);
+            FaultSite::Reg { dff, lane }
+        }
     }
 
     /// Evaluate op `i` on all lanes. With `MARK` set, any resulting
@@ -670,6 +750,40 @@ mod tests {
         assert_eq!(ev, 0);
         assert_eq!(sk as usize, sim.program().n_ops());
         assert_eq!(sim.total_toggles(), 0);
+    }
+
+    #[test]
+    fn injected_faults_are_lane_local_and_seed_reproducible() {
+        let nl = xor_adder();
+        let prog = Arc::new(Program::compile(&nl).unwrap());
+        let mut faulty = Simulator64::from_program(Arc::clone(&prog));
+        let mut clean = Simulator64::from_program(Arc::clone(&prog));
+        for sim in [&mut faulty, &mut clean] {
+            sim.set_input_broadcast("x", 77).unwrap();
+            sim.set_input_broadcast("y", 130).unwrap();
+            sim.step();
+        }
+        let mut rng = crate::util::Xoshiro256::new(0xFA);
+        let site = faulty.inject_random_fault(&mut rng);
+        faulty.step();
+        clean.step();
+        for l in 0..LANES {
+            if l != site.lane() {
+                assert_eq!(
+                    faulty.get_output_lane("q", l).unwrap(),
+                    clean.get_output_lane("q", l).unwrap(),
+                    "lane {l} must be untouched by a lane-{} fault",
+                    site.lane()
+                );
+            }
+        }
+        // Same seed, same state: the campaign replays its fault list.
+        let mut rng2 = crate::util::Xoshiro256::new(0xFA);
+        let mut again = Simulator64::from_program(Arc::clone(&prog));
+        again.set_input_broadcast("x", 77).unwrap();
+        again.set_input_broadcast("y", 130).unwrap();
+        again.step();
+        assert_eq!(again.inject_random_fault(&mut rng2), site);
     }
 
     #[test]

@@ -49,8 +49,8 @@ mod vcd;
 mod word;
 
 pub use batch::{
-    lane_seeds, lane_seeds_n, Simulator256, Simulator512, Simulator64,
-    SimulatorWide, LANES,
+    lane_seeds, lane_seeds_n, FaultSite, Simulator256, Simulator512,
+    Simulator64, SimulatorWide, LANES,
 };
 pub use engine::Simulator;
 pub use ops::{PortHandle, Program};
